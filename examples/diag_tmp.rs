@@ -1,0 +1,11 @@
+fn main() {
+    use hympi::coordinator::{ClusterSpec, Preset};
+    use hympi::kernels::{poisson::*, Backend, Variant};
+    let mut s = ClusterSpec::preset(Preset::VulcanSb, 2);
+    s.nodes = vec![8, 8];
+    let cfg = |variant| PoissonCfg { n: 32, tol: 0.0, max_iters: 50, variant, backend: Backend::Native, threads: 1 };
+    let pure = run(s.clone(), cfg(Variant::PureMpi));
+    let hy = run(s.clone(), cfg(Variant::HybridMpiMpi));
+    println!("pure: comp={:.1} comm={:.1} total={:.1}", pure.comp_us, pure.comm_us, pure.total_us);
+    println!("hy:   comp={:.1} comm={:.1} total={:.1}", hy.comp_us, hy.comm_us, hy.total_us);
+}

@@ -1,0 +1,83 @@
+//! L3 perf probe: decomposes the engine's real-time cost into thread
+//! spawn/teardown, barrier storms, p2p message throughput and collective
+//! throughput. Drives the §Perf iteration log in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example perf_probe`
+
+use hympi::coll;
+use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
+use std::time::Instant;
+
+fn timeit(label: &str, f: impl FnOnce() -> (u64, u64)) {
+    let t0 = Instant::now();
+    let (units, bytes) = f();
+    let dt = t0.elapsed().as_secs_f64();
+    let rate = units as f64 / dt;
+    println!(
+        "{label:<44} {dt:>7.3} s | {rate:>12.0} units/s | {:>8.1} MB/s",
+        bytes as f64 / dt / 1e6
+    );
+}
+
+fn main() {
+    let ranks = 192; // 8 hazelhen nodes
+    let spec = || ClusterSpec::preset(Preset::HazelHen, 8);
+
+    timeit("spawn+join only (192 threads)", || {
+        for _ in 0..10 {
+            SimCluster::new(spec()).run(|_| ());
+        }
+        (10 * ranks as u64, 0)
+    });
+
+    timeit("barrier x50 (192 ranks)", || {
+        SimCluster::new(spec()).run(|env| {
+            let w = env.world();
+            for _ in 0..50 {
+                env.barrier(&w);
+            }
+        });
+        (50 * ranks as u64, 0)
+    });
+
+    timeit("p2p pingpong x2000 (1 pair, 800 B)", || {
+        SimCluster::new(spec()).run(|env| {
+            let w = env.world();
+            let t = hympi::mpi::USER_TAG_BASE;
+            for _ in 0..2000 {
+                if env.world_rank() == 0 {
+                    env.send(&w, 100, t, &[1u8; 800]);
+                    let _ = env.recv(&w, Some(100), t + 1);
+                } else if env.world_rank() == 100 {
+                    let _ = env.recv(&w, Some(0), t);
+                    env.send(&w, 0, t + 1, &[1u8; 800]);
+                }
+            }
+        });
+        (4000, 4000 * 800)
+    });
+
+    timeit("bruck allgather x20 (192 ranks, 800 B)", || {
+        SimCluster::new(spec()).run(|env| {
+            let w = env.world();
+            let mine = vec![1u8; 800];
+            let mut out = vec![0u8; 800 * w.size()];
+            for _ in 0..20 {
+                coll::allgather(env, &w, &mine, &mut out, coll::AllgatherAlgo::Bruck);
+            }
+        });
+        // bruck: ~log2(192)=8 rounds/rank/iter
+        (20 * 8 * ranks as u64, 20 * 8 * 192 * 800)
+    });
+
+    timeit("binomial bcast x20 (192 ranks, 512 KB)", || {
+        SimCluster::new(spec()).run(|env| {
+            let w = env.world();
+            let mut buf = vec![1u8; 512 * 1024];
+            for _ in 0..20 {
+                coll::bcast(env, &w, 0, &mut buf, coll::BcastAlgo::Binomial);
+            }
+        });
+        (20 * ranks as u64, 20 * 191 * 512 * 1024)
+    });
+}

@@ -1,0 +1,60 @@
+//! Quickstart: stand up a simulated two-node cluster and compare one
+//! collective in both worlds — the standard `MPI_Allreduce` and the
+//! paper's `Wrapper_Hy_Allreduce`.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hympi::coll::{self, AllreduceAlgo};
+use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
+use hympi::hybrid::{allreduce::alloc_allreduce_win, hy_allreduce, AllreduceMethod, CommPackage, SyncScheme};
+use hympi::mpi::{Datatype, ReduceOp};
+use hympi::util::{cast_slice, to_bytes};
+
+fn main() {
+    // Two "Vulcan" nodes, 16 ranks each, InfiniBand between them.
+    let spec = ClusterSpec::preset(Preset::VulcanSb, 2);
+    println!("cluster: {} nodes x {} ranks", spec.nnodes(), spec.nodes[0]);
+
+    let report = SimCluster::new(spec).run(|env| {
+        let w = env.world();
+
+        // ---- pure MPI ------------------------------------------------
+        let mut buf = to_bytes(&[env.world_rank() as f64]).to_vec();
+        let t0 = env.vclock();
+        coll::allreduce(env, &w, Datatype::F64, ReduceOp::Sum, &mut buf, AllreduceAlgo::Auto);
+        let pure_us = env.vclock() - t0;
+        let pure_result = cast_slice::<f64>(&buf)[0];
+
+        // ---- hybrid MPI+MPI (the paper's §4.4 design) ------------------
+        let pkg = CommPackage::create(env, &w);
+        let mut win = alloc_allreduce_win(env, &pkg, 8);
+        env.harness_sync(&w);
+        let t1 = env.vclock();
+        let off = win.local_ptr(pkg.shmem.rank(), 8);
+        win.store(env, off, to_bytes(&[env.world_rank() as f64]));
+        let g = hy_allreduce(
+            env,
+            &pkg,
+            &mut win,
+            Datatype::F64,
+            ReduceOp::Sum,
+            8,
+            AllreduceMethod::Tuned,
+            SyncScheme::Spin,
+        );
+        let hy_us = env.vclock() - t1;
+        let hy_result = cast_slice::<f64>(&win.load(env, g, 8))[0];
+
+        env.barrier(&pkg.shmem);
+        win.free(env, &pkg);
+        assert_eq!(pure_result, hy_result, "both worlds must agree");
+        (pure_result, pure_us, hy_us)
+    });
+
+    let (result, pure_us, hy_us) = report.outputs[0];
+    println!("sum over 32 ranks = {result} (expected {})", (0..32).sum::<usize>());
+    println!("MPI_Allreduce:        {pure_us:.2} virtual us");
+    println!("Wrapper_Hy_Allreduce: {hy_us:.2} virtual us");
+    println!("messages moved: {} ({} bytes)", report.msgs, report.bytes);
+    println!("wall time: {:?}", report.wall);
+}

@@ -1,0 +1,104 @@
+"""L2 -> HLO-text AOT pipeline.
+
+Lowers each model function at each benchmark shape to HLO *text* (not a
+serialized HloModuleProto: jax >= 0.5 emits 64-bit instruction ids that the
+runtime's xla_extension 0.5.1 rejects; the text parser reassigns ids) and
+writes a manifest so the rust runtime can discover artifacts by name.
+
+Run: python -m compile.aot --out-dir ../artifacts     (from python/)
+     make artifacts                                   (from the repo root)
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F64 = jnp.float64
+
+
+def spec(shape, dtype=F64):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_set():
+    """name -> (fn, example args). Shapes cover every benchmark config:
+
+    - summa block 256: all three Fig. 17 configs decompose to 256x256 local
+      blocks (1024/4 = 2048/8 = 4096/16 = 256); summa64 serves tests.
+    - poisson strips: (grid/ranks + 2 halo rows) x grid for the Fig. 18
+      configs 256^2/16r, 512^2/64r, 1024^2/256r; plus a small test shape.
+    - bpmf posterior: batch x nnz x K gathered-factor batches.
+    """
+    sets = {}
+    for edge in (64, 256, 1024):
+        sets[f"summa{edge}"] = (
+            model.summa_block,
+            (spec((edge, edge)), spec((edge, edge)), spec((edge, edge))),
+        )
+    for rows, n in ((16, 256), (8, 512), (4, 1024), (8, 64)):
+        sets[f"poisson_r{rows}_n{n}"] = (
+            model.poisson_step,
+            (spec((rows + 2, n)),),
+        )
+    for batch, nnz, k in ((64, 32, 10), (32, 16, 10)):
+        sets[f"bpmf_b{batch}_n{nnz}_k{k}"] = (
+            model.bpmf_posterior,
+            (
+                spec((batch, nnz, k)),
+                spec((batch, nnz)),
+                spec(()),
+                spec((k,)),
+                spec((batch, k)),
+            ),
+        )
+    return sets
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    jax.config.update("jax_enable_x64", True)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    manifest = {}
+    only = set(args.only.split(",")) if args.only else None
+    if only and os.path.exists(mpath):
+        with open(mpath) as f:
+            manifest = json.load(f)  # merge partial regenerations
+    for name, (fn, specs) in artifact_set().items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath} ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

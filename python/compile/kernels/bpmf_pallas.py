@@ -1,0 +1,72 @@
+"""L1: batched Gram-accumulation Pallas kernel for BPMF (§5.3.3).
+
+BPMF's Gibbs sampler computes, per item i, the posterior precision
+
+    Lambda_i = Lambda_0 + alpha * sum_{j in obs(i)} v_j v_j^T
+
+over the currently-sampled factors v_j of the opposite entity, plus the
+matching linear term b_i = alpha * sum_j r_ij v_j. With a fixed
+observations-per-item budget (nnz), the hot spot is the batched masked
+outer-product accumulation — a (batch, nnz, K) x (batch, nnz, K) ->
+(batch, K, K) contraction. K = 10 is tiny, so the TPU-shaped layout is
+batch-parallel: one grid step per batch tile, factors resident in VMEM,
+K x K accumulators register-resident — the Pallas analogue of the
+per-thread-block accumulation a CUDA BPMF would use.
+
+`interpret=True`: see matmul_pallas.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Items per grid step; benchmark batch sizes are multiples of this.
+BATCH_TILE = 32
+
+
+def _gram_kernel(v_ref, w_ref, o_ref, b_ref):
+    """One batch tile.
+
+    v_ref: (bt, nnz, k) gathered factors (already masked to 0 for padding)
+    w_ref: (bt, nnz)    per-observation weights (rating * mask)
+    o_ref: (bt, k, k)   Gram accumulation  sum_n v v^T
+    b_ref: (bt, k)      weighted sum       sum_n w * v
+    """
+    v = v_ref[...]
+    w = w_ref[...]
+    o_ref[...] = jnp.einsum("bnk,bnl->bkl", v, v)
+    b_ref[...] = jnp.einsum("bn,bnk->bk", w, v)
+
+
+def gram_batch(v, w):
+    """(sum_n v v^T, sum_n w v) per batch row, Pallas-tiled over the batch.
+
+    v: (batch, nnz, k) — zero rows for padded observations.
+    w: (batch, nnz)
+    returns (gram (batch, k, k), lin (batch, k)).
+    """
+    batch, nnz, k = v.shape
+    assert w.shape == (batch, nnz)
+    bt = min(BATCH_TILE, batch)
+    assert batch % bt == 0, f"batch {batch} must tile by {bt}"
+    grid = (batch // bt,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, nnz, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bt, nnz), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, k, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, k, k), v.dtype),
+            jax.ShapeDtypeStruct((batch, k), v.dtype),
+        ],
+        interpret=True,
+    )(v, w)
+
+
+gram_batch_jit = jax.jit(gram_batch)

@@ -1,0 +1,70 @@
+"""L1: tiled matmul-accumulate Pallas kernel — the SUMMA block multiply.
+
+SUMMA's core phase (§5.3.1 of the paper) is `C += A_panel @ B_panel` on each
+rank's local block. On the paper's CPU testbed this is a BLAS dgemm; here it
+is re-thought for the TPU architecture per the hardware-adaptation rule:
+
+- the MXU wants (128, 128) tiles; we tile the M/N/K space with BlockSpec so
+  every grid step works on VMEM-resident tiles (3 * 128*128*8 B = 384 KiB
+  for f64, well inside a ~16 MiB VMEM budget, double-buffered by Pallas);
+- the K dimension is the innermost ("arbitrary") grid axis so the output
+  tile stays resident while panels stream through — the HBM<->VMEM schedule
+  that a GPU implementation would express with threadblock tiling.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; on a real TPU the same kernel lowers natively (DESIGN.md §5).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly tile edge. Benchmark shapes (256^2 blocks) are multiples.
+TILE = 128
+
+
+def _matmul_acc_kernel(a_ref, b_ref, c_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] (+)= a[i,k] @ b[k,j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] += a_ref[...] @ b_ref[...]
+
+
+def matmul_acc(a, b, c, *, tile=TILE):
+    """`c + a @ b` with an MXU-tiled Pallas kernel.
+
+    a: (m, kk), b: (kk, n), c: (m, n); all dims must divide by `tile`
+    (callers pad or pick benchmark shapes that already do).
+    """
+    m, kk = a.shape
+    kk2, n = b.shape
+    assert kk == kk2, f"contraction mismatch {kk} vs {kk2}"
+    assert c.shape == (m, n)
+    t = min(tile, m, n, kk)
+    assert m % t == 0 and n % t == 0 and kk % t == 0, (
+        f"shapes ({m},{kk})x({kk},{n}) must tile by {t}"
+    )
+    grid = (m // t, n // t, kk // t)
+    return pl.pallas_call(
+        _matmul_acc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, t), lambda i, j, k: (i, k)),
+            pl.BlockSpec((t, t), lambda i, j, k: (k, j)),
+            pl.BlockSpec((t, t), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((t, t), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        interpret=True,
+    )(a, b, c)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def matmul_acc_jit(a, b, c, tile=TILE):
+    return matmul_acc(a, b, c, tile=tile)

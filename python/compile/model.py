@@ -1,0 +1,97 @@
+"""L2: the JAX compute graphs behind the three case-study kernels.
+
+Each function here is the unit the coordinator executes through PJRT: it is
+jitted, calls the L1 Pallas kernels, and is lowered once by aot.py into an
+HLO-text artifact per benchmark shape. Python never runs on the request
+path — the rust workers execute the compiled artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.bpmf_pallas import gram_batch
+from .kernels.matmul_pallas import matmul_acc
+from .kernels.stencil_pallas import rb_sweep
+
+
+def _cholesky_unrolled(a):
+    """Batched Cholesky without LAPACK custom-calls.
+
+    `jnp.linalg.cholesky` lowers to a typed-FFI lapack custom-call that the
+    runtime's XLA 0.5.1 cannot execute; K is tiny and static, so the
+    outer-product algorithm unrolls into plain HLO ops instead.
+    a: (batch, k, k) SPD -> lower factor (batch, k, k).
+    """
+    k = a.shape[-1]
+    idx = jnp.arange(k)
+    chol = jnp.zeros_like(a)
+    for j in range(k):
+        d = jnp.sqrt(a[:, j, j])
+        col = a[:, :, j] / d[:, None]
+        col = jnp.where((idx >= j)[None, :], col, 0.0)
+        chol = chol.at[:, :, j].set(col)
+        a = a - col[:, :, None] * col[:, None, :]
+    return chol
+
+
+def _solve_lower(chol, b):
+    """L y = b, unrolled forward substitution. b: (batch, k)."""
+    k = b.shape[-1]
+    ys = []
+    for i in range(k):
+        s = b[:, i]
+        for j in range(i):
+            s = s - chol[:, i, j] * ys[j]
+        ys.append(s / chol[:, i, i])
+    return jnp.stack(ys, axis=-1)
+
+
+def _solve_upper_t(chol, b):
+    """L^T x = b, unrolled back substitution. b: (batch, k)."""
+    k = b.shape[-1]
+    xs = [None] * k
+    for i in reversed(range(k)):
+        s = b[:, i]
+        for j in range(i + 1, k):
+            s = s - chol[:, j, i] * xs[j]
+        xs[i] = s / chol[:, i, i]
+    return jnp.stack(xs, axis=-1)
+
+
+def summa_block(a, b, c):
+    """SUMMA core phase: C += A_panel @ B_panel (Pallas MXU tiles)."""
+    return (matmul_acc(a, b, c),)
+
+
+def poisson_step(strip):
+    """One red-black Gauss-Seidel sweep on a halo-padded strip.
+
+    Returns (new_strip, local_max_delta) — the delta feeds the paper's
+    8-byte allreduce convergence check (§5.3.2).
+    """
+    new, delta = rb_sweep(strip)
+    return new, delta
+
+
+def bpmf_posterior(v, w, alpha, lam0_diag, noise):
+    """BPMF Gibbs posterior for a batch of items (§5.3.3).
+
+    v:         (batch, nnz, K) gathered factors (zero-padded)
+    w:         (batch, nnz)    rating * mask
+    alpha:     ()              observation precision
+    lam0_diag: (K,)            prior precision diagonal
+    noise:     (batch, K)      standard normal draws
+
+    Returns (batch, K) samples:  Lambda^-1 b + chol(Lambda)^-T eps, with
+    Lambda = diag(lam0) + alpha * Gram, b = alpha * lin.
+    The Gram hot spot is the Pallas kernel; the small K x K solves stay in
+    the fused XLA graph.
+    """
+    gram, lin = gram_batch(v, w)
+    lam = jnp.diag(lam0_diag)[None, :, :] + alpha * gram
+    b = alpha * lin
+    chol = _cholesky_unrolled(lam)
+    # mu = Lambda^-1 b via two triangular solves; sample = mu + L^-T eps.
+    mu = _solve_upper_t(chol, _solve_lower(chol, b))
+    pert = _solve_upper_t(chol, noise)
+    return (mu + pert,)

@@ -1,0 +1,25 @@
+//! `cargo bench` target for Fig. 12 (allgather vs nodes).
+//!
+//! Two parts: (1) wall-clock of regenerating the figure's data (fast
+//! mode — full paper scale runs via `hympi figures fig12`), and
+//! (2) criterion-style micro timings of the hot collective(s) involved,
+//! measured in real time on the simulated cluster engine.
+
+use hympi::figures::{self, FigOpts};
+use hympi::util::BenchRunner;
+
+fn main() {
+    std::env::set_var("HYMPI_BENCH_FAST", "1");
+    let mut r = BenchRunner::new();
+    let opts = FigOpts { out_dir: "reports/bench".into(), scale: 0.25, fast: true };
+    r.run_once("fig12: regenerate (fast mode)", || {
+        figures::run("fig12", &opts).expect("figure generation");
+    });
+
+    use hympi::coordinator::{ClusterSpec, Preset};
+    use hympi::hybrid::SyncScheme;
+    r.bench("fig12: hybrid allgather 800B @2 nodes (wall)", || {
+        let spec = ClusterSpec::preset(Preset::HazelHen, 2);
+        hympi::figures::common::hy_allgather(spec, 800, SyncScheme::Spin, true);
+    });
+}

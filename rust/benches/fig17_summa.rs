@@ -1,0 +1,25 @@
+//! `cargo bench` target for Fig. 17 (SUMMA).
+//!
+//! Two parts: (1) wall-clock of regenerating the figure's data (fast
+//! mode — full paper scale runs via `hympi figures fig17`), and
+//! (2) criterion-style micro timings of the hot collective(s) involved,
+//! measured in real time on the simulated cluster engine.
+
+use hympi::figures::{self, FigOpts};
+use hympi::util::BenchRunner;
+
+fn main() {
+    std::env::set_var("HYMPI_BENCH_FAST", "1");
+    let mut r = BenchRunner::new();
+    let opts = FigOpts { out_dir: "reports/bench".into(), scale: 0.25, fast: true };
+    r.run_once("fig17: regenerate (fast mode)", || {
+        figures::run("fig17", &opts).expect("figure generation");
+    });
+
+    use hympi::coordinator::{ClusterSpec, Preset};
+    use hympi::kernels::{summa, Backend, Variant};
+    r.run_once("fig17: SUMMA 256^2 hybrid @1 node (wall)", || {
+        let spec = ClusterSpec::preset(Preset::VulcanSb, 1);
+        summa::run(spec, summa::SummaCfg { n: 256, variant: Variant::HybridMpiMpi, backend: Backend::auto(), threads: 16 });
+    });
+}

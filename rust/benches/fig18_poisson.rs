@@ -1,0 +1,26 @@
+//! `cargo bench` target for Fig. 18 (2D Poisson).
+//!
+//! Two parts: (1) wall-clock of regenerating the figure's data (fast
+//! mode — full paper scale runs via `hympi figures fig18`), and
+//! (2) criterion-style micro timings of the hot collective(s) involved,
+//! measured in real time on the simulated cluster engine.
+
+use hympi::figures::{self, FigOpts};
+use hympi::util::BenchRunner;
+
+fn main() {
+    std::env::set_var("HYMPI_BENCH_FAST", "1");
+    let mut r = BenchRunner::new();
+    let opts = FigOpts { out_dir: "reports/bench".into(), scale: 0.25, fast: true };
+    r.run_once("fig18: regenerate (fast mode)", || {
+        figures::run("fig18", &opts).expect("figure generation");
+    });
+
+    use hympi::coordinator::{ClusterSpec, Preset};
+    use hympi::kernels::{poisson, Backend, Variant};
+    r.run_once("fig18: Poisson 64^2 hybrid, 40 iters (wall)", || {
+        let spec = ClusterSpec::preset(Preset::VulcanSb, 1);
+        let cfg = poisson::PoissonCfg { n: 64, tol: 0.0, max_iters: 40, variant: Variant::HybridMpiMpi, backend: Backend::auto(), threads: 16 };
+        poisson::run(spec, cfg);
+    });
+}

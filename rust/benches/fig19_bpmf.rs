@@ -1,0 +1,26 @@
+//! `cargo bench` target for Fig. 19 (BPMF strong scaling).
+//!
+//! Two parts: (1) wall-clock of regenerating the figure's data (fast
+//! mode — full paper scale runs via `hympi figures fig19`), and
+//! (2) criterion-style micro timings of the hot collective(s) involved,
+//! measured in real time on the simulated cluster engine.
+
+use hympi::figures::{self, FigOpts};
+use hympi::util::BenchRunner;
+
+fn main() {
+    std::env::set_var("HYMPI_BENCH_FAST", "1");
+    let mut r = BenchRunner::new();
+    let opts = FigOpts { out_dir: "reports/bench".into(), scale: 0.25, fast: true };
+    r.run_once("fig19: regenerate (fast mode)", || {
+        figures::run("fig19", &opts).expect("figure generation");
+    });
+
+    use hympi::coordinator::{ClusterSpec, Preset};
+    use hympi::kernels::{bpmf, Backend, Variant};
+    r.run_once("fig19: BPMF tiny hybrid @2 nodes (wall)", || {
+        let spec = ClusterSpec::preset(Preset::HazelHen, 2);
+        let cfg = bpmf::BpmfCfg { compounds: 768, targets: 48, k: 10, nnz: 16, iters: 3, variant: Variant::HybridMpiMpi, backend: Backend::auto(), threads: 24 };
+        bpmf::run(spec, cfg);
+    });
+}

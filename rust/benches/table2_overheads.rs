@@ -1,0 +1,23 @@
+//! `cargo bench` target for Table 2 (one-off wrapper overheads).
+//!
+//! Two parts: (1) wall-clock of regenerating the figure's data (fast
+//! mode — full paper scale runs via `hympi figures table2`), and
+//! (2) criterion-style micro timings of the hot collective(s) involved,
+//! measured in real time on the simulated cluster engine.
+
+use hympi::figures::{self, FigOpts};
+use hympi::util::BenchRunner;
+
+fn main() {
+    std::env::set_var("HYMPI_BENCH_FAST", "1");
+    let mut r = BenchRunner::new();
+    let opts = FigOpts { out_dir: "reports/bench".into(), scale: 0.25, fast: true };
+    r.run_once("table2: regenerate (fast mode)", || {
+        figures::run("table2", &opts).expect("figure generation");
+    });
+
+    // Hot path: communicator creation mechanics at 64 ranks.
+    r.bench("table2: CommPackage::create @64 ranks (wall)", || {
+        hympi::figures::table2::measure(64);
+    });
+}

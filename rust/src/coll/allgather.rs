@@ -1,0 +1,263 @@
+//! Allgather algorithms (`MPI_Allgather` / `MPI_Allgatherv` baselines).
+//!
+//! - [`AllgatherAlgo::Bruck`] — ⌈log2 p⌉ rounds, any p, best for small
+//!   messages (the 800 B regime of Fig. 12);
+//! - [`AllgatherAlgo::RecursiveDoubling`] — power-of-two communicators;
+//! - [`AllgatherAlgo::Ring`] — p−1 neighbor steps, bandwidth-optimal for
+//!   large messages; also the basis of [`allgatherv`], the irregular
+//!   variant the hybrid layer runs over node leaders (whose per-node
+//!   counts differ on irregularly-populated clusters, §5.2.2 — and whose
+//!   latency is governed by the *maximum* per-node contribution, the
+//!   penalty the paper cites from Träff's analysis).
+
+use super::tuning::Tuning;
+use crate::mpi::env::{opcode, ProcEnv};
+use crate::mpi::Communicator;
+
+/// Allgather algorithm selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllgatherAlgo {
+    Bruck,
+    RecursiveDoubling,
+    Ring,
+    Auto,
+}
+
+/// Gather `mine` from every rank into `out` (rank-major order).
+/// `out.len()` must equal `mine.len() * comm.size()`.
+pub fn allgather(env: &mut ProcEnv, comm: &Communicator, mine: &[u8], out: &mut [u8], algo: AllgatherAlgo) {
+    let p = comm.size();
+    let m = mine.len();
+    assert_eq!(out.len(), m * p, "allgather output buffer size");
+    if p == 1 {
+        out.copy_from_slice(mine);
+        return;
+    }
+    let algo = match algo {
+        AllgatherAlgo::Auto => Tuning::default().allgather_algo(p, m),
+        a => a,
+    };
+    match algo {
+        AllgatherAlgo::Bruck => bruck(env, comm, mine, out),
+        AllgatherAlgo::RecursiveDoubling => {
+            assert!(p.is_power_of_two(), "recursive doubling requires power-of-two ranks");
+            recursive_doubling(env, comm, mine, out)
+        }
+        AllgatherAlgo::Ring => ring(env, comm, mine, out),
+        AllgatherAlgo::Auto => unreachable!(),
+    }
+}
+
+/// Bruck's algorithm: blocks accumulate in me-relative order, rotated back
+/// into rank order at the end.
+fn bruck(env: &mut ProcEnv, comm: &Communicator, mine: &[u8], out: &mut [u8]) {
+    let p = comm.size();
+    let m = mine.len();
+    let me = comm.rank();
+    let tag = env.next_coll_tag(comm, opcode::ALLGATHER);
+
+    // tmp holds blocks in me-relative order: block i = data of rank (me+i)%p.
+    let mut tmp = vec![0u8; m * p];
+    tmp[..m].copy_from_slice(mine);
+    // Round k: distance `have` = 2^k; send the first min(have, p−have)
+    // blocks to (me − have), receive the same count from (me + have).
+    let mut have = 1usize;
+    while have < p {
+        let nsend = have.min(p - have);
+        let dst = (me + p - have) % p;
+        let src = (me + have) % p;
+        env.send_vec(comm, dst, tag, tmp[..nsend * m].to_vec());
+        let (lo, hi) = (have * m, (have + nsend) * m);
+        env.recv_into(comm, Some(src), tag, &mut tmp[lo..hi]);
+        have += nsend;
+    }
+    debug_assert_eq!(have, p);
+    // Rotate into rank order: out[(me+i)%p] = tmp[i].
+    for i in 0..p {
+        let r = (me + i) % p;
+        out[r * m..(r + 1) * m].copy_from_slice(&tmp[i * m..(i + 1) * m]);
+    }
+}
+
+/// Recursive doubling (p = 2^k): round k exchanges the accumulated 2^k-block
+/// range with partner `me ^ 2^k`.
+fn recursive_doubling(env: &mut ProcEnv, comm: &Communicator, mine: &[u8], out: &mut [u8]) {
+    let p = comm.size();
+    let m = mine.len();
+    let me = comm.rank();
+    let tag = env.next_coll_tag(comm, opcode::ALLGATHER);
+    out[me * m..(me + 1) * m].copy_from_slice(mine);
+    let mut k = 1usize;
+    while k < p {
+        let partner = me ^ k;
+        let my_start = (me / k) * k; // my k-aligned accumulated range
+        let their_start = (partner / k) * k;
+        env.send_vec(comm, partner, tag, out[my_start * m..(my_start + k) * m].to_vec());
+        env.recv_into(comm, Some(partner), tag, &mut out[their_start * m..(their_start + k) * m]);
+        k <<= 1;
+    }
+}
+
+/// Ring: p−1 steps passing one block to the right neighbor.
+fn ring(env: &mut ProcEnv, comm: &Communicator, mine: &[u8], out: &mut [u8]) {
+    let p = comm.size();
+    let m = mine.len();
+    let me = comm.rank();
+    let tag = env.next_coll_tag(comm, opcode::ALLGATHER);
+    out[me * m..(me + 1) * m].copy_from_slice(mine);
+    let right = (me + 1) % p;
+    let left = (me + p - 1) % p;
+    for step in 0..p - 1 {
+        let send_block = (me + p - step) % p;
+        let recv_block = (me + p - step - 1) % p;
+        env.send_vec(comm, right, tag, out[send_block * m..(send_block + 1) * m].to_vec());
+        env.recv_into(comm, Some(left), tag, &mut out[recv_block * m..(recv_block + 1) * m]);
+    }
+}
+
+/// Irregular allgather (`MPI_Allgatherv`), ring algorithm: rank r
+/// contributes `counts[r]` bytes; `out` is the concatenation in rank order
+/// (displacements are the running sum of counts, as in the paper's Fig. 6).
+pub fn allgatherv(env: &mut ProcEnv, comm: &Communicator, mine: &[u8], counts: &[usize], out: &mut [u8]) {
+    let p = comm.size();
+    let me = comm.rank();
+    assert_eq!(counts.len(), p, "one count per rank");
+    assert_eq!(mine.len(), counts[me], "my contribution must match counts[me]");
+    let total: usize = counts.iter().sum();
+    assert_eq!(out.len(), total, "allgatherv output buffer size");
+    let displ: Vec<usize> = counts
+        .iter()
+        .scan(0usize, |acc, &c| {
+            let d = *acc;
+            *acc += c;
+            Some(d)
+        })
+        .collect();
+    out[displ[me]..displ[me] + counts[me]].copy_from_slice(mine);
+    if p == 1 {
+        return;
+    }
+    let tag = env.next_coll_tag(comm, opcode::ALLGATHERV);
+    let right = (me + 1) % p;
+    let left = (me + p - 1) % p;
+    for step in 0..p - 1 {
+        let send_block = (me + p - step) % p;
+        let recv_block = (me + p - step - 1) % p;
+        env.send_vec(comm, right, tag, out[displ[send_block]..displ[send_block] + counts[send_block]].to_vec());
+        env.recv_into(comm, Some(left), tag, &mut out[displ[recv_block]..displ[recv_block] + counts[recv_block]]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::testutil::{payload, run_nodes};
+
+    fn expected(p: usize, m: usize) -> Vec<u8> {
+        (0..p).flat_map(|r| payload(r, m)).collect()
+    }
+
+    fn check(nodes: &[usize], m: usize, algo: AllgatherAlgo) {
+        let p: usize = nodes.iter().sum();
+        let expect = expected(p, m);
+        let out = run_nodes(nodes, move |env| {
+            let w = env.world();
+            let mine = payload(w.rank(), m);
+            let mut out = vec![0u8; m * w.size()];
+            allgather(env, &w, &mine, &mut out, algo);
+            out
+        });
+        for (r, got) in out.iter().enumerate() {
+            assert_eq!(got, &expect, "algo {algo:?} nodes {nodes:?} m {m} rank {r}");
+        }
+    }
+
+    #[test]
+    fn bruck_any_p() {
+        for nodes in [&[5usize, 3][..], &[3, 3, 1][..], &[1][..], &[2][..], &[4, 4][..]] {
+            check(nodes, 16, AllgatherAlgo::Bruck);
+        }
+        check(&[5, 3], 1, AllgatherAlgo::Bruck);
+    }
+
+    #[test]
+    fn recursive_doubling_pow2() {
+        check(&[4, 4], 24, AllgatherAlgo::RecursiveDoubling);
+        check(&[2, 2], 7, AllgatherAlgo::RecursiveDoubling);
+        check(&[8, 8], 3, AllgatherAlgo::RecursiveDoubling);
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn recursive_doubling_rejects_odd_p() {
+        check(&[5, 3][..1], 8, AllgatherAlgo::RecursiveDoubling);
+    }
+
+    #[test]
+    fn ring_any_p() {
+        for nodes in [&[5usize, 3][..], &[3, 2, 2][..], &[2][..]] {
+            check(nodes, 33, AllgatherAlgo::Ring);
+        }
+    }
+
+    #[test]
+    fn auto_correct() {
+        check(&[5, 3], 800, AllgatherAlgo::Auto);
+        check(&[4, 4], 20_000, AllgatherAlgo::Auto);
+        check(&[5, 4], 20_000, AllgatherAlgo::Auto);
+    }
+
+    #[test]
+    fn allgatherv_irregular_counts() {
+        // Per-rank contribution r+1 bytes (rank 7 → 8 bytes).
+        let out = run_nodes(&[5, 3], |env| {
+            let w = env.world();
+            let counts: Vec<usize> = (0..w.size()).map(|r| r + 1).collect();
+            let mine = payload(w.rank(), w.rank() + 1);
+            let total: usize = counts.iter().sum();
+            let mut out = vec![0u8; total];
+            allgatherv(env, &w, &mine, &counts, &mut out);
+            out
+        });
+        let expect: Vec<u8> = (0..8).flat_map(|r| payload(r, r + 1)).collect();
+        for got in out {
+            assert_eq!(got, expect);
+        }
+    }
+
+    #[test]
+    fn allgatherv_zero_count_ranks() {
+        // Some ranks contribute nothing (bridge-comm edge case).
+        let out = run_nodes(&[4], |env| {
+            let w = env.world();
+            let counts = vec![4usize, 0, 4, 0];
+            let mine = if w.rank() % 2 == 0 { payload(w.rank(), 4) } else { vec![] };
+            let mut out = vec![0u8; 8];
+            allgatherv(env, &w, &mine, &counts, &mut out);
+            out
+        });
+        let expect: Vec<u8> = [payload(0, 4), payload(2, 4)].concat();
+        for got in out {
+            assert_eq!(got, expect);
+        }
+    }
+
+    #[test]
+    fn bruck_matches_ring_vtime_order() {
+        // Small message: log-round Bruck must beat linear ring in vtime.
+        let m = 64;
+        let vt = |algo: AllgatherAlgo| {
+            run_nodes(&[8, 8], move |env| {
+                let w = env.world();
+                let mine = payload(w.rank(), m);
+                let mut out = vec![0u8; m * w.size()];
+                let t0 = env.vclock();
+                allgather(env, &w, &mine, &mut out, algo);
+                env.vclock() - t0
+            })
+            .into_iter()
+            .fold(0.0f64, f64::max)
+        };
+        assert!(vt(AllgatherAlgo::Bruck) < vt(AllgatherAlgo::Ring));
+    }
+}

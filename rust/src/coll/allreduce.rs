@@ -1,0 +1,275 @@
+//! Allreduce algorithms (`MPI_Allreduce` baselines).
+//!
+//! - [`AllreduceAlgo::RecursiveDoubling`] — log2(p) full-buffer exchanges;
+//!   latency-optimal, the small-message choice (≤ ~9 KB in Open MPI
+//!   4.0.1, §5.2.4);
+//! - [`AllreduceAlgo::Rabenseifner`] — reduce-scatter (recursive halving)
+//!   followed by allgather (recursive doubling); bandwidth-optimal, the
+//!   large-message choice.
+//!
+//! Non-power-of-two communicators use the standard fold: the first
+//! `2·(p − 2^⌊log2 p⌋)` ranks pre-combine pairwise so a power-of-two core
+//! set runs the main algorithm, then the folded ranks receive the result.
+
+use super::pow2_le;
+use super::tuning::Tuning;
+use crate::mpi::env::{opcode, ProcEnv};
+use crate::mpi::{Communicator, Datatype, ReduceOp};
+
+/// Allreduce algorithm selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllreduceAlgo {
+    RecursiveDoubling,
+    Rabenseifner,
+    Auto,
+}
+
+/// In-place allreduce of `buf` across the communicator.
+pub fn allreduce(
+    env: &mut ProcEnv,
+    comm: &Communicator,
+    dtype: Datatype,
+    op: ReduceOp,
+    buf: &mut [u8],
+    algo: AllreduceAlgo,
+) {
+    let p = comm.size();
+    assert_eq!(buf.len() % dtype.size(), 0);
+    if p == 1 || buf.is_empty() {
+        return;
+    }
+    let algo = match algo {
+        AllreduceAlgo::Auto => Tuning::default().allreduce_algo(p, buf.len()),
+        a => a,
+    };
+    let tag = env.next_coll_tag(comm, opcode::ALLREDUCE);
+
+    // ---- non-power-of-two fold (shared by both algorithms) -------------
+    let me = comm.rank();
+    let pof2 = pow2_le(p);
+    let rem = p - pof2;
+    // Ranks < 2*rem pair up: evens send to odds and drop out; odds combine
+    // and take new_rank = me/2; ranks ≥ 2*rem take new_rank = me − rem.
+    let new_rank: Option<usize> = if me < 2 * rem {
+        if me % 2 == 0 {
+            env.send(comm, me + 1, tag, buf);
+            None
+        } else {
+            let mut other = vec![0u8; buf.len()];
+            env.recv_into(comm, Some(me - 1), tag, &mut other);
+            op.apply(dtype, buf, &other);
+            env.charge_reduce(buf.len());
+            Some(me / 2)
+        }
+    } else {
+        Some(me - rem)
+    };
+
+    if let Some(nr) = new_rank {
+        // Map new-rank space back to communicator ranks.
+        let to_comm = |r: usize| if r < rem { 2 * r + 1 } else { r + rem };
+        match algo {
+            AllreduceAlgo::RecursiveDoubling => {
+                recursive_doubling_core(env, comm, dtype, op, buf, tag, nr, pof2, &to_comm)
+            }
+            AllreduceAlgo::Rabenseifner => {
+                rabenseifner_core(env, comm, dtype, op, buf, tag, nr, pof2, &to_comm)
+            }
+            AllreduceAlgo::Auto => unreachable!(),
+        }
+    }
+
+    // Deliver results back to the folded-out even ranks.
+    if me < 2 * rem {
+        if me % 2 == 0 {
+            env.recv_into(comm, Some(me + 1), tag + (1 << 40), buf);
+        } else {
+            env.send(comm, me - 1, tag + (1 << 40), buf);
+        }
+    }
+}
+
+/// Core recursive doubling over a power-of-two new-rank set.
+#[allow(clippy::too_many_arguments)]
+fn recursive_doubling_core(
+    env: &mut ProcEnv,
+    comm: &Communicator,
+    dtype: Datatype,
+    op: ReduceOp,
+    buf: &mut [u8],
+    tag: i64,
+    nr: usize,
+    pof2: usize,
+    to_comm: &dyn Fn(usize) -> usize,
+) {
+    let mut mask = 1usize;
+    while mask < pof2 {
+        let partner = to_comm(nr ^ mask);
+        env.send(comm, partner, tag, buf);
+        let mut other = vec![0u8; buf.len()];
+        env.recv_into(comm, Some(partner), tag, &mut other);
+        op.apply(dtype, buf, &other);
+        env.charge_reduce(buf.len());
+        mask <<= 1;
+    }
+}
+
+/// Core Rabenseifner over a power-of-two new-rank set: recursive-halving
+/// reduce-scatter, then recursive-doubling allgather (element-aligned).
+#[allow(clippy::too_many_arguments)]
+fn rabenseifner_core(
+    env: &mut ProcEnv,
+    comm: &Communicator,
+    dtype: Datatype,
+    op: ReduceOp,
+    buf: &mut [u8],
+    tag: i64,
+    nr: usize,
+    pof2: usize,
+    to_comm: &dyn Fn(usize) -> usize,
+) {
+    let esz = dtype.size();
+    let n = buf.len() / esz;
+    if n < pof2 {
+        // Too few elements to scatter one per rank — fall back.
+        recursive_doubling_core(env, comm, dtype, op, buf, tag, nr, pof2, to_comm);
+        return;
+    }
+    // Element ranges per (new) rank block: split as evenly as possible.
+    let bounds = |blocks: usize, i: usize| -> usize {
+        // boundary before block i of `blocks` equal-ish element blocks
+        (n * i) / blocks
+    };
+
+    // --- reduce-scatter by recursive halving --------------------------
+    // Invariant: I own the element range [lo, hi) of the fully-reduced
+    // (so-far) vector; each round halves my range.
+    let mut lo = 0usize;
+    let mut hi = n;
+    let mut mask = pof2 / 2;
+    let mut group_base = 0usize; // first new-rank of my current group
+    while mask >= 1 {
+        let partner = nr ^ mask;
+        let mid_block = group_base + mask;
+        let mid = bounds(pof2, mid_block);
+        // The group [group_base, group_base+2*mask) owns [lo, hi); lower
+        // half keeps [lo, mid), upper half keeps [mid, hi).
+        let (keep_lo, keep_hi, send_lo, send_hi) = if nr < mid_block {
+            (lo, mid, mid, hi)
+        } else {
+            (mid, hi, lo, mid)
+        };
+        env.send_vec(comm, to_comm(partner), tag, buf[send_lo * esz..send_hi * esz].to_vec());
+        let mut other = vec![0u8; (keep_hi - keep_lo) * esz];
+        env.recv_into(comm, Some(to_comm(partner)), tag, &mut other);
+        op.apply(dtype, &mut buf[keep_lo * esz..keep_hi * esz], &other);
+        env.charge_reduce(other.len());
+        lo = keep_lo;
+        hi = keep_hi;
+        if nr >= mid_block {
+            group_base = mid_block;
+        }
+        mask >>= 1;
+    }
+    debug_assert_eq!(lo, bounds(pof2, nr));
+    debug_assert_eq!(hi, bounds(pof2, nr + 1));
+
+    // --- allgather by recursive doubling ------------------------------
+    let mut mask = 1usize;
+    while mask < pof2 {
+        let partner = nr ^ mask;
+        // My accumulated block range (in new-rank blocks).
+        let my_first = (nr / mask) * mask;
+        let their_first = (partner / mask) * mask;
+        let (slo, shi) = (bounds(pof2, my_first), bounds(pof2, my_first + mask));
+        let (rlo, rhi) = (bounds(pof2, their_first), bounds(pof2, their_first + mask));
+        env.send_vec(comm, to_comm(partner), tag, buf[slo * esz..shi * esz].to_vec());
+        env.recv_into(comm, Some(to_comm(partner)), tag, &mut buf[rlo * esz..rhi * esz]);
+        mask <<= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::testutil::run_nodes;
+    use crate::util::{cast_slice, to_bytes};
+
+    fn check(nodes: &[usize], n: usize, algo: AllreduceAlgo) {
+        let p: usize = nodes.iter().sum();
+        let out = run_nodes(nodes, move |env| {
+            let w = env.world();
+            let vals: Vec<f64> = (0..n).map(|i| ((w.rank() + 1) * (i + 1)) as f64).collect();
+            let mut buf = to_bytes(&vals).to_vec();
+            allreduce(env, &w, Datatype::F64, ReduceOp::Sum, &mut buf, algo);
+            buf
+        });
+        let ranks_sum: f64 = (1..=p).map(|r| r as f64).sum();
+        for (r, got) in out.into_iter().enumerate() {
+            let vals: Vec<f64> = cast_slice(&got);
+            for (i, &v) in vals.iter().enumerate() {
+                let expect = ranks_sum * (i + 1) as f64;
+                assert!((v - expect).abs() < 1e-9, "algo {algo:?} nodes {nodes:?} rank {r} elem {i}: {v} vs {expect}");
+            }
+        }
+    }
+
+    #[test]
+    fn recursive_doubling_pow2_and_not() {
+        check(&[4, 4], 10, AllreduceAlgo::RecursiveDoubling);
+        check(&[5, 3], 10, AllreduceAlgo::RecursiveDoubling);
+        check(&[3, 3, 1], 1, AllreduceAlgo::RecursiveDoubling);
+        check(&[2], 5, AllreduceAlgo::RecursiveDoubling);
+        check(&[1], 5, AllreduceAlgo::RecursiveDoubling);
+    }
+
+    #[test]
+    fn rabenseifner_pow2_and_not() {
+        check(&[4, 4], 64, AllreduceAlgo::Rabenseifner);
+        check(&[5, 3], 64, AllreduceAlgo::Rabenseifner);
+        check(&[3, 3, 2], 123, AllreduceAlgo::Rabenseifner);
+        check(&[4, 4], 7, AllreduceAlgo::Rabenseifner); // n < p fallback path? (7 < 8)
+        check(&[2, 2], 4, AllreduceAlgo::Rabenseifner);
+    }
+
+    #[test]
+    fn auto_switches_at_9kb() {
+        check(&[5, 3], 100, AllreduceAlgo::Auto); // 800 B -> recursive doubling
+        check(&[5, 3], 2000, AllreduceAlgo::Auto); // 16 KB -> Rabenseifner
+    }
+
+    #[test]
+    fn max_op_irregular() {
+        let out = run_nodes(&[5, 3], |env| {
+            let w = env.world();
+            let vals = [w.rank() as f64, -(w.rank() as f64)];
+            let mut buf = to_bytes(&vals).to_vec();
+            allreduce(env, &w, Datatype::F64, ReduceOp::Max, &mut buf, AllreduceAlgo::RecursiveDoubling);
+            buf
+        });
+        for got in out {
+            let v: Vec<f64> = cast_slice(&got);
+            assert_eq!(v, vec![7.0, 0.0]);
+        }
+    }
+
+    #[test]
+    fn rabenseifner_cheaper_than_recdoubling_for_large() {
+        let n = 64 * 1024; // 512 KB of f64
+        let vt = |algo: AllreduceAlgo| {
+            run_nodes(&[8, 8], move |env| {
+                let w = env.world();
+                let vals: Vec<f64> = vec![1.0; n];
+                let mut buf = to_bytes(&vals).to_vec();
+                let t0 = env.vclock();
+                allreduce(env, &w, Datatype::F64, ReduceOp::Sum, &mut buf, algo);
+                env.vclock() - t0
+            })
+            .into_iter()
+            .fold(0.0f64, f64::max)
+        };
+        let rd = vt(AllreduceAlgo::RecursiveDoubling);
+        let rab = vt(AllreduceAlgo::Rabenseifner);
+        assert!(rab < rd, "rabenseifner {rab} should beat recursive doubling {rd} at 512 KB");
+    }
+}

@@ -1,0 +1,359 @@
+//! Broadcast algorithms (`MPI_Bcast` baselines).
+//!
+//! Open MPI 4.0.1's tuned broadcast switches between algorithms on message
+//! size (§5.2.3 of the paper: thresholds 2 KB and ~362 KB). Implemented
+//! here:
+//!
+//! - [`BcastAlgo::Binomial`] — binomial tree, small messages;
+//! - [`BcastAlgo::SplitBinary`] — the split-binary tree (the message is
+//!   halved; each half flows segmented down one subtree of a binary tree;
+//!   subtree pairs then exchange halves), medium messages;
+//! - [`BcastAlgo::Pipeline`] — segmented chain, the classic large-message
+//!   algorithm;
+//! - [`BcastAlgo::ScatterAllgather`] — van de Geijn scatter + ring
+//!   allgather. Under block placement our α-β model makes a flat chain
+//!   strictly worse than trees (hardware store-and-forward pipelining is
+//!   not expressible in α-β), so the tuned decision uses this for the
+//!   >362 KB regime on multi-node runs to reproduce the published "large
+//!   message dip" of Fig. 13 (documented substitution, DESIGN.md §8).
+
+use super::tuning::Tuning;
+use crate::mpi::env::{opcode, ProcEnv};
+use crate::mpi::Communicator;
+
+/// Broadcast algorithm selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BcastAlgo {
+    Binomial,
+    /// Segment size in bytes.
+    SplitBinary { seg: usize },
+    /// Segment size in bytes.
+    Pipeline { seg: usize },
+    ScatterAllgather,
+    /// Tuned decision from message size (Open MPI 4.0.1 thresholds).
+    Auto,
+}
+
+/// Broadcast `buf` from communicator rank `root` to all members.
+pub fn bcast(env: &mut ProcEnv, comm: &Communicator, root: usize, buf: &mut [u8], algo: BcastAlgo) {
+    let p = comm.size();
+    if p <= 1 || buf.is_empty() {
+        return;
+    }
+    assert!(root < p, "root {root} out of range for comm of size {p}");
+    let algo = match algo {
+        BcastAlgo::Auto => Tuning::default().bcast_algo(p, buf.len()),
+        a => a,
+    };
+    match algo {
+        BcastAlgo::Binomial => binomial(env, comm, root, buf),
+        BcastAlgo::SplitBinary { seg } => split_binary(env, comm, root, buf, seg),
+        BcastAlgo::Pipeline { seg } => pipeline(env, comm, root, buf, seg),
+        BcastAlgo::ScatterAllgather => scatter_allgather(env, comm, root, buf),
+        BcastAlgo::Auto => unreachable!(),
+    }
+}
+
+/// Binomial tree: `⌈log2 p⌉` rounds; rank r (root-relative) receives from
+/// `r - lowbit(r)` and forwards to `r + 2^k` for descending `k`.
+fn binomial(env: &mut ProcEnv, comm: &Communicator, root: usize, buf: &mut [u8]) {
+    let p = comm.size();
+    let me = comm.rank();
+    let tag = env.next_coll_tag(comm, opcode::BCAST);
+    let vrank = (me + p - root) % p;
+    let mut mask = 1usize;
+    while mask < p {
+        if vrank & mask != 0 {
+            let src = (vrank - mask + root) % p;
+            env.recv_into(comm, Some(src), tag, buf);
+            break;
+        }
+        mask <<= 1;
+    }
+    mask >>= 1;
+    // One shared payload for all forwards (fan-out copies are Arc clones);
+    // leaves skip the materialization entirely.
+    let mut shared: Option<std::sync::Arc<Vec<u8>>> = None;
+    while mask > 0 {
+        if vrank + mask < p {
+            let dst = (vrank + mask + root) % p;
+            let payload = shared.get_or_insert_with(|| std::sync::Arc::new(buf.to_vec()));
+            env.send_shared(comm, dst, tag, payload);
+        }
+        mask >>= 1;
+    }
+}
+
+/// Segmented chain: vrank i receives each segment from i−1 and forwards to
+/// i+1. Pipelining emerges because sends are eager.
+fn pipeline(env: &mut ProcEnv, comm: &Communicator, root: usize, buf: &mut [u8], seg: usize) {
+    let p = comm.size();
+    let me = comm.rank();
+    let seg = seg.max(1);
+    let tag = env.next_coll_tag(comm, opcode::BCAST);
+    let vrank = (me + p - root) % p;
+    let prev = (me + p - 1) % p;
+    let next = (me + 1) % p;
+    let mut off = 0usize;
+    while off < buf.len() {
+        let end = (off + seg).min(buf.len());
+        if vrank > 0 {
+            env.recv_into(comm, Some(prev), tag, &mut buf[off..end]);
+        }
+        if vrank + 1 < p {
+            env.send(comm, next, tag, &buf[off..end]);
+        }
+        off = end;
+    }
+}
+
+/// Heap-layout binary tree over root-relative vranks: parent of v is
+/// `(v-1)/2`, children `2v+1`, `2v+2`.
+#[inline]
+fn heap_children(v: usize, p: usize) -> (Option<usize>, Option<usize>) {
+    let l = 2 * v + 1;
+    let r = 2 * v + 2;
+    (if l < p { Some(l) } else { None }, if r < p { Some(r) } else { None })
+}
+
+/// Which half of the message vrank `v` carries: the subtree of root-child 1
+/// carries half 0, the subtree of child 2 carries half 1.
+fn subtree_half(mut v: usize) -> usize {
+    debug_assert!(v > 0);
+    while v > 2 {
+        v = (v - 1) / 2;
+    }
+    v - 1
+}
+
+/// Split-binary tree broadcast (Open MPI's medium-message algorithm).
+fn split_binary(env: &mut ProcEnv, comm: &Communicator, root: usize, buf: &mut [u8], seg: usize) {
+    let p = comm.size();
+    let me = comm.rank();
+    if p == 2 {
+        // Degenerate: direct send.
+        let tag = env.next_coll_tag(comm, opcode::BCAST);
+        if me == root {
+            env.send(comm, 1 - root, tag, buf);
+        } else {
+            env.recv_into(comm, Some(root), tag, buf);
+        }
+        return;
+    }
+    let seg = seg.max(1);
+    let tag = env.next_coll_tag(comm, opcode::BCAST);
+    let xtag = tag + (1 << 32); // exchange phase
+    let vrank = (me + p - root) % p;
+    let to_comm = |v: usize| (v + root) % p;
+
+    let mid = buf.len() / 2;
+    let ranges = [(0usize, mid), (mid, buf.len())]; // half 0, half 1
+
+    if vrank == 0 {
+        // Root: send half h to child 1+h, segmented.
+        for h in 0..2usize {
+            let child = 1 + h;
+            if child >= p {
+                continue;
+            }
+            let (lo, hi) = ranges[h];
+            let mut off = lo;
+            while off < hi {
+                let end = (off + seg).min(hi);
+                env.send_vec(comm, to_comm(child), tag, buf[off..end].to_vec());
+                off = end;
+            }
+        }
+    } else {
+        // Internal/leaf: receive my half from parent, forward to children.
+        let h = subtree_half(vrank);
+        let (lo, hi) = ranges[h];
+        let parent = (vrank - 1) / 2;
+        let (cl, cr) = heap_children(vrank, p);
+        let mut off = lo;
+        while off < hi {
+            let end = (off + seg).min(hi);
+            env.recv_into(comm, Some(to_comm(parent)), tag, &mut buf[off..end]);
+            for c in [cl, cr].into_iter().flatten() {
+                env.send(comm, to_comm(c), tag, &buf[off..end]);
+            }
+            off = end;
+        }
+    }
+
+    // Exchange phase: pair left-subtree nodes with right-subtree nodes
+    // (BFS order); leftovers get their missing half from the root.
+    let mut left = Vec::new();
+    let mut right = Vec::new();
+    for v in 1..p {
+        if subtree_half(v) == 0 {
+            left.push(v);
+        } else {
+            right.push(v);
+        }
+    }
+    let paired = left.len().min(right.len());
+    if vrank == 0 {
+        // Root serves every unpaired node its missing half.
+        for &v in left.iter().skip(paired) {
+            let (lo, hi) = ranges[1];
+            env.send(comm, to_comm(v), xtag, &buf[lo..hi]);
+        }
+        for &v in right.iter().skip(paired) {
+            let (lo, hi) = ranges[0];
+            env.send(comm, to_comm(v), xtag, &buf[lo..hi]);
+        }
+    } else {
+        let h = subtree_half(vrank);
+        let (list, other) = if h == 0 { (&left, &right) } else { (&right, &left) };
+        let idx = list.iter().position(|&v| v == vrank).unwrap();
+        let (mlo, mhi) = ranges[1 - h]; // missing half
+        if idx < paired {
+            let partner = other[idx];
+            let (olo, ohi) = ranges[h]; // the half I own
+            let own = buf[olo..ohi].to_vec();
+            env.send(comm, to_comm(partner), xtag, &own);
+            env.recv_into(comm, Some(to_comm(partner)), xtag, &mut buf[mlo..mhi]);
+        } else {
+            env.recv_into(comm, Some(to_comm(0)), xtag, &mut buf[mlo..mhi]);
+        }
+    }
+}
+
+/// van de Geijn: binomial scatter of `p` chunks + ring allgather of chunks.
+fn scatter_allgather(env: &mut ProcEnv, comm: &Communicator, root: usize, buf: &mut [u8]) {
+    let p = comm.size();
+    let me = comm.rank();
+    let m = buf.len();
+    let tag = env.next_coll_tag(comm, opcode::BCAST);
+    let rtag = tag + (1 << 32);
+    let vrank = (me + p - root) % p;
+    let to_comm = |v: usize| (v + root) % p;
+    let s = m.div_ceil(p);
+    let chunk = |v: usize| -> (usize, usize) {
+        let lo = (v * s).min(m);
+        let hi = ((v + 1) * s).min(m);
+        (lo, hi)
+    };
+
+    // Binomial scatter in vrank space: at descending mask, owners of a
+    // range [v, v+2*mask) send the upper half [v+mask, v+2*mask) on.
+    let mut mask = super::pow2_ge(p) / 2;
+    // Receive once: my lowest set bit determines my parent.
+    if vrank != 0 {
+        let low = vrank & vrank.wrapping_neg();
+        let parent = vrank - low;
+        let (lo, _) = chunk(vrank);
+        let hi = chunk((vrank + low).min(p) - 1).1.max(lo);
+        if hi > lo {
+            env.recv_into(comm, Some(to_comm(parent)), tag, &mut buf[lo..hi]);
+        } else {
+            // Zero-length range still needs the matching message.
+            env.recv_into(comm, Some(to_comm(parent)), tag, &mut []);
+        }
+    }
+    while mask > 0 {
+        if vrank & (mask - 1) == 0 && vrank & mask == 0 {
+            let dst = vrank + mask;
+            if dst < p {
+                let (lo, _) = chunk(dst);
+                let hi = chunk((dst + mask).min(p) - 1).1.max(lo);
+                env.send_vec(comm, to_comm(dst), tag, buf[lo..hi].to_vec());
+            }
+        }
+        mask >>= 1;
+    }
+
+    // Ring allgather of chunks in vrank space.
+    let right = to_comm((vrank + 1) % p);
+    let left = to_comm((vrank + p - 1) % p);
+    for step in 0..p.saturating_sub(1) {
+        let send_v = (vrank + p - step) % p;
+        let recv_v = (vrank + p - step - 1) % p;
+        let (slo, shi) = chunk(send_v);
+        let (rlo, rhi) = chunk(recv_v);
+        env.send_vec(comm, right, rtag, buf[slo..shi].to_vec());
+        env.recv_into(comm, Some(left), rtag, &mut buf[rlo..rhi]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::testutil::{payload, run8, run_nodes};
+
+    fn check_all_algos(nodes: &[usize], m: usize, root: usize) {
+        for algo in [
+            BcastAlgo::Binomial,
+            BcastAlgo::SplitBinary { seg: 7 },
+            BcastAlgo::Pipeline { seg: 13 },
+            BcastAlgo::ScatterAllgather,
+            BcastAlgo::Auto,
+        ] {
+            let expect = payload(root, m);
+            let out = run_nodes(nodes, move |env| {
+                let w = env.world();
+                let mut buf = if w.rank() == root { payload(root, m) } else { vec![0u8; m] };
+                bcast(env, &w, root, &mut buf, algo);
+                buf
+            });
+            for (r, got) in out.iter().enumerate() {
+                assert_eq!(got, &expect, "algo {algo:?} nodes {nodes:?} m {m} root {root} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn correct_for_various_shapes_and_roots() {
+        check_all_algos(&[5, 3], 64, 0);
+        check_all_algos(&[5, 3], 64, 5);
+        check_all_algos(&[5, 3], 1, 7);
+        check_all_algos(&[4, 4], 100, 3);
+        check_all_algos(&[1], 33, 0);
+        check_all_algos(&[2], 33, 1);
+        check_all_algos(&[3, 3, 3], 97, 4);
+    }
+
+    #[test]
+    fn odd_sizes_and_segments() {
+        // Message smaller than one segment; message not divisible by p.
+        check_all_algos(&[5, 3], 5, 2);
+        check_all_algos(&[5, 3], 101, 6);
+    }
+
+    #[test]
+    fn auto_picks_by_size() {
+        let t = Tuning::default();
+        assert_eq!(t.bcast_algo(64, 512), BcastAlgo::Binomial);
+        assert!(matches!(t.bcast_algo(64, 64 * 1024), BcastAlgo::SplitBinary { .. }));
+        assert_eq!(t.bcast_algo(64, 512 * 1024), BcastAlgo::ScatterAllgather);
+        // Tiny communicators stay binomial regardless of size.
+        assert_eq!(t.bcast_algo(2, 512 * 1024), BcastAlgo::Binomial);
+    }
+
+    #[test]
+    fn vtime_binomial_scales_logarithmically() {
+        // 8 ranks: depth 3; 2 ranks: depth 1. Virtual time should reflect it.
+        let m = 1024;
+        let t8 = run8(move |env| {
+            let w = env.world();
+            let mut buf = vec![1u8; m];
+            let t0 = env.vclock();
+            bcast(env, &w, 0, &mut buf, BcastAlgo::Binomial);
+            env.vclock() - t0
+        })
+        .into_iter()
+        .fold(0.0f64, f64::max);
+        let t2 = run_nodes(&[2], move |env| {
+            let w = env.world();
+            let mut buf = vec![1u8; m];
+            let t0 = env.vclock();
+            bcast(env, &w, 0, &mut buf, BcastAlgo::Binomial);
+            env.vclock() - t0
+        })
+        .into_iter()
+        .fold(0.0f64, f64::max);
+        assert!(t8 > t2 * 1.5, "depth scaling missing: t8={t8} t2={t2}");
+        assert!(t8 < t2 * 16.0, "binomial should not be linear in p");
+    }
+}

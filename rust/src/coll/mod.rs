@@ -1,0 +1,75 @@
+//! Pure-MPI collective baselines — the algorithms an MPI library (Open MPI
+//! 4.0.1 / cray-mpich, §5.1) would run, implemented over the substrate's
+//! point-to-point layer so their cost structure (tree depths, pipelining,
+//! intra- vs inter-node hops) emerges from the same model as everything
+//! else.
+//!
+//! The tuned entry points ([`bcast`], [`allgather`], [`allreduce`]) switch
+//! algorithms at the message-size thresholds the paper reports for Open
+//! MPI 4.0.1 (§5.2.3: 2 KB and ~362 KB for broadcast; §5.2.4: ~9 KB for
+//! allreduce). [`hier`] adds SMP-aware hierarchical variants (gather →
+//! bridge → broadcast), the flavor cray-mpich applies — still *pure MPI*:
+//! every rank keeps its own replicated result buffer and on-node transfers
+//! pay the library's staging double copy.
+
+pub mod allgather;
+pub mod allreduce;
+pub mod bcast;
+pub mod hier;
+pub mod reduce;
+pub mod tuning;
+
+pub use allgather::{allgather, allgatherv, AllgatherAlgo};
+pub use allreduce::{allreduce, AllreduceAlgo};
+pub use bcast::{bcast, BcastAlgo};
+pub use reduce::reduce;
+pub use tuning::Tuning;
+
+/// Largest power of two ≤ `p` (`p ≥ 1`).
+pub(crate) fn pow2_le(p: usize) -> usize {
+    debug_assert!(p >= 1);
+    1 << (usize::BITS - 1 - p.leading_zeros())
+}
+
+/// Smallest power of two ≥ `p`.
+pub(crate) fn pow2_ge(p: usize) -> usize {
+    p.next_power_of_two()
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! Shared helpers for collective correctness tests.
+
+    use crate::coordinator::{ClusterSpec, Preset, SimCluster};
+    use crate::mpi::env::ProcEnv;
+
+    /// Run `f` on a small irregular two-node cluster (5+3 ranks — uniform
+    /// shapes hide rank-math bugs) and return per-rank outputs.
+    pub fn run8<T: Send + 'static>(f: impl Fn(&mut ProcEnv) -> T + Send + Sync + 'static) -> Vec<T> {
+        run_nodes(&[5, 3], f)
+    }
+
+    /// Run on nodes with the given per-node rank counts.
+    pub fn run_nodes<T: Send + 'static>(
+        nodes: &[usize],
+        f: impl Fn(&mut ProcEnv) -> T + Send + Sync + 'static,
+    ) -> Vec<T> {
+        let mut spec = ClusterSpec::preset(Preset::VulcanSb, nodes.len().max(1));
+        spec.nodes = nodes.to_vec();
+        SimCluster::new(spec).run(f).outputs
+    }
+
+    /// Payload for rank `r`, `m` bytes, deterministic and rank-unique.
+    pub fn payload(r: usize, m: usize) -> Vec<u8> {
+        (0..m).map(|i| (r.wrapping_mul(131) ^ i.wrapping_mul(29)) as u8).collect()
+    }
+
+    #[test]
+    fn pow2_helpers() {
+        assert_eq!(super::pow2_le(1), 1);
+        assert_eq!(super::pow2_le(7), 4);
+        assert_eq!(super::pow2_le(8), 8);
+        assert_eq!(super::pow2_ge(5), 8);
+        assert_eq!(super::pow2_ge(8), 8);
+    }
+}

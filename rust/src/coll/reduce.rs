@@ -1,0 +1,122 @@
+//! Rooted reduction (`MPI_Reduce`), binomial tree.
+//!
+//! Used directly by the hybrid allreduce's *method 1* (§4.4/§4.5: an
+//! `MPI_Reduce` over the node communicator brings the node's intermediate
+//! result to the leader — implying MPI-internal buffer copies, which is
+//! exactly the overhead method 2 avoids).
+
+use crate::mpi::env::{opcode, ProcEnv};
+use crate::mpi::{Communicator, Datatype, ReduceOp};
+
+/// Reduce `contrib` element-wise across the communicator into `out` at
+/// `root` (ignored elsewhere; pass `None`). Reduction order follows the
+/// binomial combine order — valid for the commutative+associative
+/// predefined ops (§4.4).
+pub fn reduce(
+    env: &mut ProcEnv,
+    comm: &Communicator,
+    root: usize,
+    dtype: Datatype,
+    op: ReduceOp,
+    contrib: &[u8],
+    out: Option<&mut [u8]>,
+) {
+    let p = comm.size();
+    let me = comm.rank();
+    assert!(root < p);
+    assert_eq!(contrib.len() % dtype.size(), 0);
+    if p == 1 {
+        out.expect("root must supply an output buffer").copy_from_slice(contrib);
+        return;
+    }
+    let tag = env.next_coll_tag(comm, opcode::REDUCE);
+    let vrank = (me + p - root) % p;
+    let mut acc = contrib.to_vec();
+    let mut mask = 1usize;
+    // Binomial gather-with-combine: at round k, vranks with bit k set send
+    // their accumulator to (vrank − 2^k) and leave; others absorb.
+    while mask < p {
+        if vrank & mask != 0 {
+            let dst = (vrank - mask + root) % p;
+            env.send(comm, dst, tag, &acc);
+            break;
+        } else if vrank + mask < p {
+            let src = (vrank + mask + root) % p;
+            let mut child = vec![0u8; acc.len()];
+            env.recv_into(comm, Some(src), tag, &mut child);
+            op.apply(dtype, &mut acc, &child);
+            env.charge_reduce(acc.len());
+        }
+        mask <<= 1;
+    }
+    if me == root {
+        out.expect("root must supply an output buffer").copy_from_slice(&acc);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::testutil::run_nodes;
+    use crate::util::{cast_slice, to_bytes};
+
+    fn check_sum(nodes: &[usize], n: usize, root: usize) {
+        let p: usize = nodes.iter().sum();
+        let out = run_nodes(nodes, move |env| {
+            let w = env.world();
+            let contrib: Vec<f64> = (0..n).map(|i| (w.rank() * n + i) as f64).collect();
+            let mut result = vec![0u8; n * 8];
+            let is_root = w.rank() == root;
+            reduce(
+                env,
+                &w,
+                root,
+                Datatype::F64,
+                ReduceOp::Sum,
+                to_bytes(&contrib),
+                if is_root { Some(&mut result) } else { None },
+            );
+            (is_root, result)
+        });
+        for (r, (is_root, result)) in out.into_iter().enumerate() {
+            if is_root {
+                let got: Vec<f64> = cast_slice(&result);
+                for (i, &g) in got.iter().enumerate() {
+                    let expect: f64 = (0..p).map(|rk| (rk * n + i) as f64).sum();
+                    assert!((g - expect).abs() < 1e-9, "rank {r} elem {i}: {g} vs {expect}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sum_to_various_roots() {
+        check_sum(&[5, 3], 10, 0);
+        check_sum(&[5, 3], 10, 6);
+        check_sum(&[4], 1, 3);
+        check_sum(&[1], 4, 0);
+        check_sum(&[3, 3, 2], 17, 5);
+    }
+
+    #[test]
+    fn max_reduces() {
+        let out = run_nodes(&[5, 3], |env| {
+            let w = env.world();
+            let contrib = [(w.rank() as i64) * 7 % 5, w.rank() as i64];
+            let mut result = vec![0u8; 16];
+            let is_root = w.rank() == 0;
+            reduce(
+                env,
+                &w,
+                0,
+                Datatype::I64,
+                ReduceOp::Max,
+                to_bytes(&contrib),
+                if is_root { Some(&mut result) } else { None },
+            );
+            result
+        });
+        let got: Vec<i64> = cast_slice(&out[0]);
+        assert_eq!(got, vec![4, 7]); // max(r*7 mod 5) = 4, max(r) = 7
+    }
+}

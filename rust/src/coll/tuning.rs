@@ -1,0 +1,111 @@
+//! Tuned decision rules — which algorithm a production MPI picks at a
+//! given (communicator size, message size), after Open MPI 4.0.1's fixed
+//! decision tables as observed by the paper (§5.2.3, §5.2.4).
+
+use super::allgather::AllgatherAlgo;
+use super::allreduce::AllreduceAlgo;
+use super::bcast::BcastAlgo;
+
+/// Message-size thresholds (bytes).
+#[derive(Clone, Copy, Debug)]
+pub struct Tuning {
+    /// Broadcast: ≤ this → binomial (paper: 2 KB).
+    pub bcast_small_max: usize,
+    /// Broadcast: ≤ this → split-binary tree (paper: ~362 KB).
+    pub bcast_medium_max: usize,
+    /// Split-binary segment size.
+    pub bcast_seg: usize,
+    /// Pipeline segment size.
+    pub pipeline_seg: usize,
+    /// Allreduce: ≤ this → recursive doubling (paper: ~9 KB).
+    pub allreduce_small_max: usize,
+    /// Allgather: ≤ this per-rank message size → Bruck (log-round,
+    /// latency-bound — Open MPI's small-message choice).
+    pub allgather_small_max: usize,
+}
+
+impl Default for Tuning {
+    fn default() -> Tuning {
+        Tuning {
+            bcast_small_max: 2 * 1024,
+            bcast_medium_max: 362 * 1024,
+            bcast_seg: 32 * 1024,
+            pipeline_seg: 128 * 1024,
+            allreduce_small_max: 9 * 1024,
+            allgather_small_max: 2 * 1024,
+        }
+    }
+}
+
+impl Tuning {
+    /// Broadcast decision.
+    ///
+    /// Above `bcast_medium_max` Open MPI switches to its pipeline; in our
+    /// α-β model a flat chain cannot express the hardware pipelining that
+    /// makes it win on real fabrics, so multi-rank large broadcasts use
+    /// van de Geijn scatter-allgather — same published switch point, same
+    /// qualitative effect (the Fig. 13 dip at 512 KB). See DESIGN.md §8.
+    pub fn bcast_algo(&self, p: usize, bytes: usize) -> BcastAlgo {
+        if p <= 2 || bytes <= self.bcast_small_max {
+            BcastAlgo::Binomial
+        } else if bytes <= self.bcast_medium_max {
+            BcastAlgo::SplitBinary { seg: self.bcast_seg }
+        } else if p <= 8 {
+            BcastAlgo::Pipeline { seg: self.pipeline_seg }
+        } else {
+            BcastAlgo::ScatterAllgather
+        }
+    }
+
+    /// Allgather decision (`bytes` = per-rank contribution).
+    pub fn allgather_algo(&self, p: usize, bytes: usize) -> AllgatherAlgo {
+        if p == 1 {
+            return AllgatherAlgo::Ring;
+        }
+        if bytes <= self.allgather_small_max {
+            AllgatherAlgo::Bruck
+        } else if p.is_power_of_two() {
+            AllgatherAlgo::RecursiveDoubling
+        } else {
+            AllgatherAlgo::Ring
+        }
+    }
+
+    /// Allreduce decision.
+    pub fn allreduce_algo(&self, _p: usize, bytes: usize) -> AllreduceAlgo {
+        if bytes <= self.allreduce_small_max {
+            AllreduceAlgo::RecursiveDoubling
+        } else {
+            AllreduceAlgo::Rabenseifner
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bcast_thresholds_match_paper() {
+        let t = Tuning::default();
+        assert_eq!(t.bcast_algo(256, 2048), BcastAlgo::Binomial);
+        assert!(matches!(t.bcast_algo(256, 2049), BcastAlgo::SplitBinary { .. }));
+        assert!(matches!(t.bcast_algo(256, 362 * 1024), BcastAlgo::SplitBinary { .. }));
+        assert_eq!(t.bcast_algo(256, 362 * 1024 + 1), BcastAlgo::ScatterAllgather);
+    }
+
+    #[test]
+    fn allreduce_threshold_matches_paper() {
+        let t = Tuning::default();
+        assert_eq!(t.allreduce_algo(64, 9 * 1024), AllreduceAlgo::RecursiveDoubling);
+        assert_eq!(t.allreduce_algo(64, 9 * 1024 + 1), AllreduceAlgo::Rabenseifner);
+    }
+
+    #[test]
+    fn allgather_decision_shapes() {
+        let t = Tuning::default();
+        assert_eq!(t.allgather_algo(768, 800), AllgatherAlgo::Bruck);
+        assert_eq!(t.allgather_algo(64, 64 * 1024), AllgatherAlgo::RecursiveDoubling);
+        assert_eq!(t.allgather_algo(24, 64 * 1024), AllgatherAlgo::Ring);
+    }
+}

@@ -1,0 +1,12 @@
+//! Cluster coordination: presets, the thread-per-rank engine, the
+//! OSU-style measurement harness, and report output.
+
+pub mod engine;
+pub mod harness;
+pub mod report;
+pub mod spec;
+
+pub use engine::{RunReport, SimCluster};
+pub use harness::{measure_collective, MeasureConfig};
+pub use report::Table;
+pub use spec::{ClusterSpec, Preset};

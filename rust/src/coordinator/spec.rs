@@ -1,0 +1,160 @@
+//! Cluster specifications and the paper's testbed presets (§5.1).
+
+use crate::mpi::net::NetModel;
+use crate::mpi::state::MgmtCosts;
+use crate::mpi::topo::Placement;
+
+/// The paper's experimental platforms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Preset {
+    /// NEC "Vulcan", SandyBridge partition: 16-core nodes, InfiniBand,
+    /// Open MPI 4.0.1 (used for SUMMA and the 2D Poisson solver).
+    VulcanSb,
+    /// NEC "Vulcan", Haswell partition: 24-core nodes, InfiniBand
+    /// (used for the micro-benchmarks of §5.2).
+    VulcanHsw,
+    /// Cray XC40 "Hazel Hen": 24-core Haswell nodes, Aries dragonfly,
+    /// cray-mpich (used for BPMF and the §5.2.2/§5.2.4 comparisons).
+    HazelHen,
+}
+
+impl Preset {
+    pub fn cores_per_node(&self) -> usize {
+        match self {
+            Preset::VulcanSb => 16,
+            Preset::VulcanHsw | Preset::HazelHen => 24,
+        }
+    }
+
+    pub fn net(&self) -> NetModel {
+        match self {
+            Preset::VulcanSb | Preset::VulcanHsw => NetModel::infiniband(),
+            Preset::HazelHen => NetModel::aries(),
+        }
+    }
+
+    pub fn mgmt(&self) -> MgmtCosts {
+        match self {
+            Preset::VulcanSb | Preset::VulcanHsw => MgmtCosts::vulcan(),
+            Preset::HazelHen => MgmtCosts::hazelhen(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Preset::VulcanSb => "vulcan-sb",
+            Preset::VulcanHsw => "vulcan-hsw",
+            Preset::HazelHen => "hazelhen",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Preset> {
+        match s {
+            "vulcan-sb" => Some(Preset::VulcanSb),
+            "vulcan-hsw" => Some(Preset::VulcanHsw),
+            "hazelhen" => Some(Preset::HazelHen),
+            _ => None,
+        }
+    }
+}
+
+/// A concrete simulated cluster: node shapes + cost model + placement.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    /// Ranks per node (node count = `nodes.len()`). Nodes may be
+    /// irregularly populated (§5.2.2).
+    pub nodes: Vec<usize>,
+    pub net: NetModel,
+    pub mgmt: MgmtCosts,
+    pub placement: Placement,
+    /// Host-CPU-time → virtual-compute-time multiplier.
+    pub compute_scale: f64,
+    pub preset_name: &'static str,
+}
+
+impl ClusterSpec {
+    /// `nnodes` fully-populated nodes of a preset platform.
+    pub fn preset(p: Preset, nnodes: usize) -> ClusterSpec {
+        assert!(nnodes > 0);
+        ClusterSpec {
+            nodes: vec![p.cores_per_node(); nnodes],
+            net: p.net(),
+            mgmt: p.mgmt(),
+            placement: Placement::Block,
+            compute_scale: 1.0,
+            preset_name: p.name(),
+        }
+    }
+
+    /// Request `total` ranks on a preset platform, filling whole nodes
+    /// block-style — the Hazel Hen situation of §5.2.2: 24-core nodes and a
+    /// power-of-two rank request leave the last node partially populated
+    /// (an *irregular* problem for allgather).
+    pub fn preset_total_ranks(p: Preset, total: usize) -> ClusterSpec {
+        assert!(total > 0);
+        let per = p.cores_per_node();
+        let full = total / per;
+        let rem = total % per;
+        let mut nodes = vec![per; full];
+        if rem > 0 {
+            nodes.push(rem);
+        }
+        ClusterSpec { nodes, ..ClusterSpec::preset(p, 1) }
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.nodes.iter().sum()
+    }
+
+    pub fn nnodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn with_placement(mut self, placement: Placement) -> ClusterSpec {
+        self.placement = placement;
+        self
+    }
+
+    pub fn with_compute_scale(mut self, s: f64) -> ClusterSpec {
+        self.compute_scale = s;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_shapes() {
+        let s = ClusterSpec::preset(Preset::VulcanSb, 4);
+        assert_eq!(s.world_size(), 64);
+        assert_eq!(s.nnodes(), 4);
+        let s = ClusterSpec::preset(Preset::HazelHen, 2);
+        assert_eq!(s.world_size(), 48);
+    }
+
+    #[test]
+    fn irregular_hazelhen_population() {
+        // 256 ranks on 24-core nodes: 10 full nodes + one with 16.
+        let s = ClusterSpec::preset_total_ranks(Preset::HazelHen, 256);
+        assert_eq!(s.nnodes(), 11);
+        assert_eq!(s.world_size(), 256);
+        assert_eq!(*s.nodes.last().unwrap(), 16);
+    }
+
+    #[test]
+    fn exact_fit_has_no_partial_node() {
+        let s = ClusterSpec::preset_total_ranks(Preset::VulcanSb, 64);
+        assert_eq!(s.nnodes(), 4);
+        assert!(s.nodes.iter().all(|&c| c == 16));
+    }
+
+    #[test]
+    fn preset_roundtrip_names() {
+        for p in [Preset::VulcanSb, Preset::VulcanHsw, Preset::HazelHen] {
+            assert_eq!(Preset::parse(p.name()), Some(p));
+        }
+        assert_eq!(Preset::parse("nonesuch"), None);
+    }
+}

@@ -1,0 +1,163 @@
+//! Shared measurement drivers for the micro-benchmark figures
+//! (Figs. 12–16): paired pure-MPI vs hybrid-MPI+MPI collective latency on
+//! a given cluster spec, OSU-style.
+
+use crate::coll;
+use crate::coordinator::{measure_collective, ClusterSpec, MeasureConfig};
+use crate::hybrid::{self, AllreduceMethod, CommPackage, HyWin, SyncScheme, TransTables};
+use crate::mpi::{Datatype, ReduceOp};
+
+fn cfg_for(spec: &ClusterSpec, fast: bool) -> MeasureConfig {
+    let mut c = MeasureConfig::auto(spec.world_size());
+    if fast {
+        c.iters = c.iters.min(5);
+    }
+    c
+}
+
+/// Pure `MPI_Bcast` latency (tuned algorithm), root 0, `bytes` payload.
+pub fn pure_bcast(spec: ClusterSpec, bytes: usize, fast: bool) -> f64 {
+    let cfg = cfg_for(&spec, fast);
+    measure_collective(
+        spec,
+        cfg,
+        move |_| vec![0u8; bytes],
+        move |env, buf, _| {
+            let w = env.world();
+            coll::bcast(env, &w, 0, buf, coll::BcastAlgo::Auto);
+        },
+    )
+    .mean
+}
+
+/// `Wrapper_Hy_Bcast` latency (excludes the one-off wrapper setup, as the
+/// paper's §5.2.2–§5.2.4 measurements do; Table 2 reports the one-offs).
+pub fn hy_bcast(spec: ClusterSpec, bytes: usize, scheme: SyncScheme, fast: bool) -> f64 {
+    let cfg = cfg_for(&spec, fast);
+    struct St {
+        pkg: CommPackage,
+        win: HyWin,
+        tables: TransTables,
+        data: Vec<u8>,
+    }
+    measure_collective(
+        spec,
+        cfg,
+        move |env| {
+            let w = env.world();
+            let pkg = CommPackage::create(env, &w);
+            let win = pkg.alloc_shared(env, bytes, 1, 1);
+            let tables = TransTables::create(env, &pkg);
+            St { pkg, win, tables, data: vec![7u8; bytes] }
+        },
+        move |env, st, _| {
+            let root = 0;
+            let arg = (env.world().rank() == root).then_some(&st.data[..]);
+            hybrid::hy_bcast(env, &st.pkg, &mut st.win, &st.tables, root, arg, bytes, scheme);
+        },
+    )
+    .mean
+}
+
+/// Pure `MPI_Allgather` latency, `bytes` per rank.
+pub fn pure_allgather(spec: ClusterSpec, bytes: usize, fast: bool) -> f64 {
+    let cfg = cfg_for(&spec, fast);
+    let world = spec.world_size();
+    measure_collective(
+        spec,
+        cfg,
+        move |_| (vec![1u8; bytes], vec![0u8; bytes * world]),
+        move |env, (mine, out), _| {
+            let w = env.world();
+            coll::allgather(env, &w, mine, out, coll::AllgatherAlgo::Auto);
+        },
+    )
+    .mean
+}
+
+/// `Wrapper_Hy_Allgather` latency (store + collective, per the paper's
+/// benchmark in Fig. 5).
+pub fn hy_allgather(spec: ClusterSpec, bytes: usize, scheme: SyncScheme, fast: bool) -> f64 {
+    let cfg = cfg_for(&spec, fast);
+    struct St {
+        pkg: CommPackage,
+        win: HyWin,
+        param: hybrid::AllgatherParam,
+        data: Vec<u8>,
+    }
+    measure_collective(
+        spec,
+        cfg,
+        move |env| {
+            let w = env.world();
+            let pkg = CommPackage::create(env, &w);
+            let win = pkg.alloc_shared(env, bytes, 1, w.size());
+            let sizeset = hybrid::sizeset_gather(env, &pkg);
+            let param = hybrid::AllgatherParam::create(env, &pkg, bytes, &sizeset);
+            St { pkg, win, param, data: vec![3u8; bytes] }
+        },
+        move |env, st, _| {
+            let off = st.win.local_ptr(env.world().rank(), bytes);
+            st.win.store(env, off, &st.data);
+            hybrid::hy_allgather(env, &st.pkg, &mut st.win, &st.param, bytes, scheme);
+        },
+    )
+    .mean
+}
+
+/// Pure `MPI_Allreduce` latency (tuned), `bytes` payload (f64 sum).
+pub fn pure_allreduce(spec: ClusterSpec, bytes: usize, fast: bool) -> f64 {
+    let cfg = cfg_for(&spec, fast);
+    measure_collective(
+        spec,
+        cfg,
+        move |_| vec![1u8; bytes - bytes % 8],
+        move |env, buf, _| {
+            let w = env.world();
+            coll::allreduce(env, &w, Datatype::F64, ReduceOp::Sum, buf, coll::AllreduceAlgo::Auto);
+        },
+    )
+    .mean
+}
+
+/// `Wrapper_Hy_Allreduce` latency with an explicit method/sync choice.
+pub fn hy_allreduce(
+    spec: ClusterSpec,
+    bytes: usize,
+    method: AllreduceMethod,
+    scheme: SyncScheme,
+    fast: bool,
+) -> f64 {
+    let cfg = cfg_for(&spec, fast);
+    let bytes = bytes - bytes % 8;
+    struct St {
+        pkg: CommPackage,
+        win: HyWin,
+        data: Vec<u8>,
+    }
+    measure_collective(
+        spec,
+        cfg,
+        move |env| {
+            let w = env.world();
+            let pkg = CommPackage::create(env, &w);
+            let win = hybrid::allreduce::alloc_allreduce_win(env, &pkg, bytes);
+            St { pkg, win, data: vec![1u8; bytes] }
+        },
+        move |env, st, _| {
+            let off = st.win.local_ptr(st.pkg.shmem.rank(), bytes);
+            st.win.store(env, off, &st.data);
+            hybrid::hy_allreduce(
+                env,
+                &st.pkg,
+                &mut st.win,
+                Datatype::F64,
+                ReduceOp::Sum,
+                bytes,
+                method,
+                scheme,
+            );
+        },
+    )
+    .mean
+}

@@ -1,0 +1,44 @@
+//! Fig. 12 — `Wrapper_Hy_Allgather` vs `MPI_Allgather` on Hazel Hen,
+//! 2–32 nodes × 24 ranks, 800 B gathered from every process.
+
+use super::common;
+use super::{us, FigOpts};
+use crate::coordinator::{ClusterSpec, Preset, Table};
+use crate::hybrid::SyncScheme;
+
+pub fn generate(opts: &FigOpts) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig. 12 — allgather latency, Hazel Hen, 24 ranks/node, 800 B/rank (us)",
+        &["nodes", "ranks", "MPI_Allgather", "Wrapper_Hy_Allgather", "hybrid wins"],
+    );
+    let node_counts: &[usize] = if opts.fast { &[2, 4] } else { &[2, 4, 8, 16, 32] };
+    for &nodes in node_counts {
+        let spec = || ClusterSpec::preset(Preset::HazelHen, nodes);
+        let pure = common::pure_allgather(spec(), 800, opts.fast);
+        let hy = common::hy_allgather(spec(), 800, SyncScheme::Spin, opts.fast);
+        t.row(vec![
+            nodes.to_string(),
+            (nodes * 24).to_string(),
+            us(pure),
+            us(hy),
+            (hy < pure).to_string(),
+        ]);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hybrid_wins_at_every_node_count() {
+        // The paper's Fig. 12 claim: constant lower latencies for the
+        // hybrid allgather. Checked at the two cheapest points.
+        let opts = FigOpts { fast: true, ..Default::default() };
+        let t = &generate(&opts)[0];
+        for row in &t.rows {
+            assert_eq!(row[4], "true", "hybrid must win at {} nodes", row[0]);
+        }
+    }
+}

@@ -1,0 +1,64 @@
+//! Fig. 13 — `Wrapper_Hy_Bcast` vs `MPI_Bcast` on Vulcan: 16/64/256/1024
+//! cores × {32 B, 4 KB, 128 KB, 512 KB} (2², 2⁹, 2¹⁴, 2¹⁶ doubles).
+//!
+//! The published shape: hybrid wins everywhere except small messages on
+//! few cores (sync overhead dominates the tiny transfer); the 512 KB
+//! column sits below the extrapolated trend because the tuned broadcast
+//! switches algorithm above ~362 KB (§5.2.3).
+
+use super::common;
+use super::{us, FigOpts};
+use crate::coordinator::{ClusterSpec, Preset, Table};
+use crate::hybrid::SyncScheme;
+
+pub const SIZES: [usize; 4] = [32, 4 * 1024, 128 * 1024, 512 * 1024];
+
+pub fn generate(opts: &FigOpts) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig. 13 — broadcast latency, Vulcan (us)",
+        &["cores", "bytes", "MPI_Bcast", "Wrapper_Hy_Bcast", "hybrid wins"],
+    );
+    let cores: &[usize] = if opts.fast { &[16, 64] } else { &[16, 64, 256, 1024] };
+    for &c in cores {
+        for &bytes in &SIZES {
+            let spec = || ClusterSpec::preset(Preset::VulcanSb, c / 16);
+            let pure = common::pure_bcast(spec(), bytes, opts.fast);
+            // The Fig. 13 variant uses the barrier sync (§5.2.3: "the
+            // current version of Wrapper_Hy_Bcast replaces the
+            // synchronization point with a barrier operation").
+            let hy = common::hy_bcast(spec(), bytes, SyncScheme::Barrier, opts.fast);
+            t.row(vec![c.to_string(), bytes.to_string(), us(pure), us(hy), (hy < pure).to_string()]);
+        }
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hybrid_wins_for_medium_and_large() {
+        let opts = FigOpts { fast: true, ..Default::default() };
+        let t = &generate(&opts)[0];
+        for row in &t.rows {
+            let bytes: usize = row[1].parse().unwrap();
+            let cores: usize = row[0].parse().unwrap();
+            if bytes >= 4 * 1024 && cores > 16 {
+                assert_eq!(row[4], "true", "hybrid must win at {cores} cores / {bytes} B");
+            }
+        }
+    }
+
+    #[test]
+    fn single_node_hybrid_bcast_is_flat_in_size() {
+        // §5.2.3: on 16 cores (one node) the hybrid broadcast is just a
+        // store + sync; latency nearly constant across message sizes.
+        let spec = || ClusterSpec::preset(Preset::VulcanSb, 1);
+        let small = common::hy_bcast(spec(), 32, SyncScheme::Barrier, true);
+        let large = common::hy_bcast(spec(), 512 * 1024, SyncScheme::Barrier, true);
+        // A 16384x size increase should cost well under 100x (the paper
+        // shows an almost flat line; ours grows only by the root's store).
+        assert!(large < small * 100.0, "small {small} large {large}");
+    }
+}

@@ -1,0 +1,65 @@
+//! Fig. 14 — `Wrapper_Hy_Allreduce` vs `MPI_Allreduce` on Vulcan:
+//! 16/64/256/1024 cores × {32 B, 4 KB, 256 KB, 1 MB}.
+//!
+//! This is the *initial* hybrid version of §5.2.4: step 1 = method 1
+//! (`MPI_Reduce`), step-2 sync = barrier. The published speedups range
+//! 27.2–82.5% except small messages on 16 cores.
+
+use super::common;
+use super::{pct, us, FigOpts};
+use crate::coordinator::{ClusterSpec, Preset, Table};
+use crate::hybrid::{AllreduceMethod, SyncScheme};
+
+pub const SIZES: [usize; 4] = [32, 4 * 1024, 256 * 1024, 1024 * 1024];
+
+pub fn generate(opts: &FigOpts) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig. 14 — allreduce latency, Vulcan, hybrid = method 1 + barrier (us)",
+        &["cores", "bytes", "MPI_Allreduce", "Wrapper_Hy_Allreduce", "speedup"],
+    );
+    let cores: &[usize] = if opts.fast { &[16, 64] } else { &[16, 64, 256, 1024] };
+    for &c in cores {
+        for &bytes in &SIZES {
+            let spec = || ClusterSpec::preset(Preset::VulcanSb, c / 16);
+            let pure = common::pure_allreduce(spec(), bytes, opts.fast);
+            let hy = common::hy_allreduce(
+                spec(),
+                bytes,
+                AllreduceMethod::Method1,
+                SyncScheme::Barrier,
+                opts.fast,
+            );
+            t.row(vec![
+                c.to_string(),
+                bytes.to_string(),
+                us(pure),
+                us(hy),
+                pct((pure - hy) / pure * 100.0),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hybrid_wins_beyond_small_single_node() {
+        let opts = FigOpts { fast: true, ..Default::default() };
+        let t = &generate(&opts)[0];
+        for row in &t.rows {
+            let cores: usize = row[0].parse().unwrap();
+            let bytes: usize = row[1].parse().unwrap();
+            let pure: f64 = row[2].parse().unwrap();
+            let hy: f64 = row[3].parse().unwrap();
+            // §5.2.4: "our allreduce fails to significantly outperform the
+            // standard one for small messages on 16 cores. Otherwise,
+            // speedups ... can be achieved anywhere."
+            if cores > 16 && bytes > 32 {
+                assert!(hy < pure, "{cores} cores {bytes} B: hy {hy} pure {pure}");
+            }
+        }
+    }
+}

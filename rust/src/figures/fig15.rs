@@ -1,0 +1,66 @@
+//! Fig. 15 — `Hy-allreduce1` vs `Hy-allreduce2` vs `MPI_Allreduce` for
+//! small messages (8 B – 8 KB) on one 16-core node, Vulcan and Hazel Hen.
+//! The published cutoff between the two step-1 methods is 2 KB.
+
+use super::common;
+use super::{us, FigOpts};
+use crate::coordinator::{ClusterSpec, Preset, Table};
+use crate::hybrid::{AllreduceMethod, SyncScheme};
+
+pub fn generate(opts: &FigOpts) -> Vec<Table> {
+    let mut out = Vec::new();
+    for preset in [Preset::VulcanSb, Preset::HazelHen] {
+        let mut t = Table::new(
+            format!("Fig. 15 — step-1 method cutoff, single node (16 cores), {} (us)", preset.name()),
+            &["bytes", "MPI_Allreduce", "Hy-allreduce1", "Hy-allreduce2", "method2 wins"],
+        );
+        let mut bytes = 8usize;
+        while bytes <= 8 * 1024 {
+            let spec = || {
+                let mut s = ClusterSpec::preset(preset, 1);
+                s.nodes = vec![16]; // 16 ranks on one node on both machines
+                s
+            };
+            let pure = common::pure_allreduce(spec(), bytes, opts.fast);
+            let m1 = common::hy_allreduce(spec(), bytes, AllreduceMethod::Method1, SyncScheme::Spin, opts.fast);
+            let m2 = common::hy_allreduce(spec(), bytes, AllreduceMethod::Method2, SyncScheme::Spin, opts.fast);
+            t.row(vec![bytes.to_string(), us(pure), us(m1), us(m2), (m2 < m1).to_string()]);
+            bytes *= 2;
+        }
+        out.push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method2_wins_small_method1_wins_large() {
+        let opts = FigOpts { fast: true, ..Default::default() };
+        for t in generate(&opts) {
+            let row8 = &t.rows[0]; // 8 B
+            let row8k = t.rows.last().unwrap(); // 8 KB
+            assert_eq!(row8[4], "true", "method 2 must win at 8 B ({})", t.title);
+            assert_eq!(row8k[4], "false", "method 1 must win at 8 KB ({})", t.title);
+        }
+    }
+
+    #[test]
+    fn cutoff_lies_between_512b_and_8kb() {
+        // The crossover (paper: 2 KB) must exist and sit in the plausible
+        // band — the model is calibrated, not hand-placed per point.
+        let opts = FigOpts { fast: true, ..Default::default() };
+        let t = &generate(&opts)[0];
+        let mut crossover = None;
+        for row in &t.rows {
+            if row[4] == "false" {
+                crossover = Some(row[0].parse::<usize>().unwrap());
+                break;
+            }
+        }
+        let c = crossover.expect("a crossover must exist");
+        assert!((512..=8192).contains(&c), "crossover at {c} B");
+    }
+}

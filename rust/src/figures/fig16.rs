@@ -1,0 +1,51 @@
+//! Fig. 16 — performance gap between `MPI_Allreduce` and the *optimized*
+//! `Wrapper_Hy_Allreduce` (tuned method + spinning sync) on Hazel Hen at
+//! 64/256/1024 cores. Positive gap = hybrid slower. The published shape:
+//! the standard allreduce still wins slightly at 8 B and 32 B; the gap
+//! turns negative from 128 B on.
+
+use super::common;
+use super::{pct, FigOpts};
+use crate::coordinator::{ClusterSpec, Preset, Table};
+use crate::hybrid::{AllreduceMethod, SyncScheme};
+
+pub const SIZES: [usize; 6] = [8, 32, 128, 512, 2 * 1024, 8 * 1024];
+
+pub fn generate(opts: &FigOpts) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig. 16 — gap = (hybrid − MPI)/MPI, optimized allreduce, Hazel Hen",
+        &["cores", "8B", "32B", "128B", "512B", "2KB", "8KB"],
+    );
+    let cores: &[usize] = if opts.fast { &[64] } else { &[64, 256, 1024] };
+    for &c in cores {
+        let mut cells = vec![c.to_string()];
+        for &bytes in &SIZES {
+            // Hazel Hen 24-core nodes at power-of-two core counts leave the
+            // last node partially populated (§5.2.2's irregular layout).
+            let spec = || ClusterSpec::preset_total_ranks(Preset::HazelHen, c);
+            let pure = common::pure_allreduce(spec(), bytes, opts.fast);
+            let hy = common::hy_allreduce(spec(), bytes, AllreduceMethod::Tuned, SyncScheme::Spin, opts.fast);
+            cells.push(pct((hy - pure) / pure * 100.0));
+        }
+        t.row(cells);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gap_turns_negative_for_larger_messages() {
+        let opts = FigOpts { fast: true, ..Default::default() };
+        let t = &generate(&opts)[0];
+        let row = &t.rows[0]; // 64 cores
+        let parse = |s: &str| s.trim_end_matches('%').parse::<f64>().unwrap();
+        // From 512 B on, the hybrid must win (paper: from 128 B on; we
+        // allow one octave of calibration slack at the boundary).
+        assert!(parse(&row[4]) < 0.0, "512 B gap {}", row[4]);
+        assert!(parse(&row[5]) < 0.0, "2 KB gap {}", row[5]);
+        assert!(parse(&row[6]) < 0.0, "8 KB gap {}", row[6]);
+    }
+}

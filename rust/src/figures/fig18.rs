@@ -1,0 +1,83 @@
+//! Fig. 18 — 2D Poisson solver, three implementations on Vulcan (SB):
+//! 256²/16 cores/1 node, 512²/64 cores/4 nodes, 1024²/256 cores/16 nodes.
+//! The allreduce operand is always 8 B (the global max delta); published
+//! hybrid-vs-pure improvements: 2%, 1%, 10%.
+
+use super::{pct, us, FigOpts};
+use crate::coordinator::{ClusterSpec, Preset, Table};
+use crate::kernels::poisson::{run, PoissonCfg};
+use crate::kernels::{Backend, Variant};
+
+pub fn generate(opts: &FigOpts) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig. 18 — Poisson solver time on Vulcan (us; total = comp + allreduce)",
+        &["grid", "cores", "variant", "comp", "allreduce", "total", "iters", "vs pure"],
+    );
+    let configs: &[(usize, usize)] = if opts.fast {
+        &[(64, 16), (128, 64)]
+    } else {
+        &[(256, 16), (512, 64), (1024, 256)]
+    };
+    for &(n, cores) in configs {
+        let nodes = cores / 16;
+        let max_iters = if opts.fast { 40 } else { 200 };
+        let mut pure_total = 0.0;
+        for variant in [Variant::PureMpi, Variant::HybridMpiMpi, Variant::MpiOpenMp] {
+            let spec = if variant == Variant::MpiOpenMp {
+                let mut s = ClusterSpec::preset(Preset::VulcanSb, nodes);
+                s.nodes = vec![1; nodes];
+                s
+            } else {
+                ClusterSpec::preset(Preset::VulcanSb, nodes)
+            };
+            if n % spec.world_size() != 0 {
+                continue;
+            }
+            // Deterministic modeled compute — see fig17.rs.
+            let backend = Backend::Modeled;
+            let cfg = PoissonCfg { n, tol: 1e-4, max_iters, variant, backend, threads: 16 };
+            let rep = run(spec, cfg);
+            if variant == Variant::PureMpi {
+                pure_total = rep.total_us;
+            }
+            let improv = (pure_total - rep.total_us) / pure_total * 100.0;
+            t.row(vec![
+                format!("{n}x{n}"),
+                cores.to_string(),
+                variant.name().to_string(),
+                us(rep.comp_us),
+                us(rep.comm_us),
+                us(rep.total_us),
+                rep.iters.to_string(),
+                if variant == Variant::PureMpi { "-".into() } else { pct(improv) },
+            ]);
+        }
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hybrid_allreduce_bar_is_smaller() {
+        let opts = FigOpts { fast: true, ..Default::default() };
+        let t = &generate(&opts)[0];
+        let mut pure_comm = std::collections::HashMap::new();
+        for row in &t.rows {
+            let key = (row[0].clone(), row[1].clone());
+            let comm: f64 = row[4].parse().unwrap();
+            match row[2].as_str() {
+                "pure-mpi" => {
+                    pure_comm.insert(key, comm);
+                }
+                "mpi+mpi" => {
+                    let p = pure_comm[&key];
+                    assert!(comm < p, "hybrid allreduce {comm} must beat pure {p} at {key:?}");
+                }
+                _ => {}
+            }
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Fig. 19 — BPMF strong scaling on Hazel Hen, 1–32 nodes × 24 ranks,
+//! 20 sampling iterations. Published shape: hybrid MPI+MPI constantly
+//! best; MPI+OpenMP worst (gap shrinking with scale); pure MPI and hybrid
+//! degrade from 16 → 32 nodes as allgather cost overrides compute; the
+//! hybrid's edge over pure grows to 10.3% at 32 nodes.
+
+use super::{pct, us, FigOpts};
+use crate::coordinator::{ClusterSpec, Preset, Table};
+use crate::kernels::bpmf::{run, BpmfCfg};
+use crate::kernels::{Backend, Variant};
+
+pub fn generate(opts: &FigOpts) -> Vec<Table> {
+    let mut t = Table::new(
+        format!(
+            "Fig. 19 — BPMF 20-iteration time on Hazel Hen (us), workload scale {}",
+            opts.scale
+        ),
+        &["nodes", "cores", "variant", "comp", "allgather", "total", "vs pure"],
+    );
+    let node_counts: &[usize] = if opts.fast { &[1, 2] } else { &[1, 2, 4, 8, 16, 32] };
+    for &nodes in node_counts {
+        let mut pure_total = 0.0;
+        for variant in [Variant::PureMpi, Variant::HybridMpiMpi, Variant::MpiOpenMp] {
+            let spec = if variant == Variant::MpiOpenMp {
+                let mut s = ClusterSpec::preset(Preset::HazelHen, nodes);
+                s.nodes = vec![1; nodes];
+                s
+            } else {
+                ClusterSpec::preset(Preset::HazelHen, nodes)
+            };
+            // Deterministic modeled compute — see fig17.rs.
+            let mut cfg = BpmfCfg::paper(opts.scale, variant, Backend::Modeled, 24);
+            if opts.fast {
+                cfg = BpmfCfg { compounds: 384, targets: 48, k: 6, nnz: 8, iters: 3, ..cfg };
+            }
+            let rep = run(spec, cfg);
+            if variant == Variant::PureMpi {
+                pure_total = rep.total_us;
+            }
+            let improv = (pure_total - rep.total_us) / pure_total * 100.0;
+            t.row(vec![
+                nodes.to_string(),
+                (nodes * 24).to_string(),
+                variant.name().to_string(),
+                us(rep.comp_us),
+                us(rep.comm_us),
+                us(rep.total_us),
+                if variant == Variant::PureMpi { "-".into() } else { pct(improv) },
+            ]);
+        }
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hybrid_best_and_openmp_worst() {
+        let opts = FigOpts { fast: true, ..Default::default() };
+        let t = &generate(&opts)[0];
+        let mut cell: std::collections::HashMap<(String, String), (f64, f64)> = Default::default();
+        for row in &t.rows {
+            cell.insert(
+                (row[0].clone(), row[2].clone()),
+                (row[4].parse().unwrap(), row[5].parse().unwrap()), // (comm, total)
+            );
+        }
+        for nodes in ["1", "2"] {
+            let pure = cell[&(nodes.to_string(), "pure-mpi".into())];
+            let hy = cell[&(nodes.to_string(), "mpi+mpi".into())];
+            let omp = cell[&(nodes.to_string(), "mpi+openmp".into())];
+            // The robust claims: the hybrid allgather bar is much smaller
+            // (deterministic virtual time), and MPI+OpenMP's total is
+            // clearly worst (its compute penalty is far above the noise).
+            assert!(hy.0 < pure.0 * 0.7, "{nodes} nodes: hybrid comm {} vs pure {}", hy.0, pure.0);
+            assert!(omp.1 > hy.1, "{nodes} nodes: openmp {} vs hybrid {}", omp.1, hy.1);
+        }
+        // The paper's total-time win is asserted at 2 nodes, where the
+        // margin (24% here) is far beyond host-compute noise; at 1 node it
+        // is ~1% ("insignificant on a smaller number of nodes", §6).
+        let pure2 = cell[&("2".to_string(), "pure-mpi".into())].1;
+        let hy2 = cell[&("2".to_string(), "mpi+mpi".into())].1;
+        assert!(hy2 < pure2, "2 nodes: hybrid {hy2} vs pure {pure2}");
+    }
+}

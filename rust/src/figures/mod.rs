@@ -1,0 +1,88 @@
+//! Reproduction generators — one per table/figure of the paper's
+//! evaluation section (§5). Each generator runs the relevant benchmark on
+//! the simulated cluster and emits a [`Table`] whose rows mirror the
+//! series the paper plots; `hympi figures all` regenerates everything into
+//! `reports/` (see EXPERIMENTS.md for paper-vs-measured commentary).
+
+pub mod common;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod fig15;
+pub mod fig16;
+pub mod fig17;
+pub mod fig18;
+pub mod fig19;
+pub mod table1;
+pub mod table2;
+
+use crate::coordinator::Table;
+
+/// Generator options.
+#[derive(Clone, Debug)]
+pub struct FigOpts {
+    /// Output directory for `.md`/`.csv` (also printed to stdout).
+    pub out_dir: String,
+    /// Workload scale factor for the kernel figures (1.0 = paper size).
+    pub scale: f64,
+    /// Fast mode: fewer repetitions, smaller largest configs (for CI and
+    /// `cargo bench` smoke runs).
+    pub fast: bool,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        FigOpts { out_dir: "reports".into(), scale: 1.0, fast: false }
+    }
+}
+
+/// All generators by name.
+pub fn registry() -> Vec<(&'static str, fn(&FigOpts) -> Vec<Table>)> {
+    vec![
+        ("table1", table1::generate as fn(&FigOpts) -> Vec<Table>),
+        ("table2", table2::generate),
+        ("fig12", fig12::generate),
+        ("fig13", fig13::generate),
+        ("fig14", fig14::generate),
+        ("fig15", fig15::generate),
+        ("fig16", fig16::generate),
+        ("fig17", fig17::generate),
+        ("fig18", fig18::generate),
+        ("fig19", fig19::generate),
+    ]
+}
+
+/// Run one generator by name, saving and printing its tables.
+pub fn run(name: &str, opts: &FigOpts) -> crate::Result<Vec<Table>> {
+    let gen = registry()
+        .into_iter()
+        .find(|(n, _)| *n == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown figure '{name}'"))?
+        .1;
+    let tables = gen(opts);
+    for (i, t) in tables.iter().enumerate() {
+        let stem = if tables.len() == 1 { name.to_string() } else { format!("{name}_{i}") };
+        t.save(&opts.out_dir, &stem)?;
+        println!("{t}");
+    }
+    Ok(tables)
+}
+
+/// Run every generator.
+pub fn run_all(opts: &FigOpts) -> crate::Result<()> {
+    for (name, _) in registry() {
+        println!("==== {name} ====");
+        run(name, opts)?;
+    }
+    Ok(())
+}
+
+/// Helper: format µs with 2 decimals.
+pub(crate) fn us(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+/// Helper: format a percentage.
+pub(crate) fn pct(v: f64) -> String {
+    format!("{v:+.1}%")
+}

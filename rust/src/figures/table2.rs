@@ -1,0 +1,99 @@
+//! Table 2 — one-off implementation overheads of the wrapper primitives
+//! (Communicator creation, shared-memory Allocate, Bcast_transtable,
+//! Allgather_param) at 16/64/256/1024 cores on Vulcan.
+
+use super::{us, FigOpts};
+use crate::coordinator::{ClusterSpec, Preset, SimCluster, Table};
+use crate::hybrid::{AllgatherParam, CommPackage, TransTables};
+
+/// Paper values for the Mean (µs) rows (Vulcan).
+pub const PAPER: [(usize, [f64; 4]); 4] = [
+    (16, [64.8, 188.3, 0.7, 0.3]),
+    (64, [170.9, 262.5, 9.2, 2.9]),
+    (256, [413.7, 307.1, 95.9, 7.1]),
+    (1024, [1098.7, 311.8, 1462.8, 19.9]),
+];
+
+/// Measure the four one-off overheads at one core count.
+pub fn measure(cores: usize) -> [f64; 4] {
+    let spec = ClusterSpec::preset(Preset::VulcanSb, cores / 16);
+    let report = SimCluster::new(spec).run(|env| {
+        let w = env.world();
+        let t0 = env.vclock();
+        let pkg = CommPackage::create(env, &w);
+        let t1 = env.vclock();
+        let win = pkg.alloc_shared(env, 800, 1, w.size());
+        let t2 = env.vclock();
+        let tables = TransTables::create(env, &pkg);
+        let t3 = env.vclock();
+        let sizeset = crate::hybrid::sizeset_gather(env, &pkg);
+        let param = AllgatherParam::create(env, &pkg, 800, &sizeset);
+        let t4 = env.vclock();
+        std::hint::black_box((&tables, &param));
+        env.barrier(&pkg.shmem);
+        win.free(env, &pkg);
+        [t1 - t0, t2 - t1, t3 - t2, t4 - t3]
+    });
+    let mut out = [0.0f64; 4];
+    for o in &report.outputs {
+        for i in 0..4 {
+            out[i] = out[i].max(o[i]);
+        }
+    }
+    out
+}
+
+pub fn generate(opts: &FigOpts) -> Vec<Table> {
+    let mut t = Table::new(
+        "Table 2 — one-off overheads of the hybrid wrapper primitives (Vulcan model), mean us",
+        &["cores", "Communicator", "(paper)", "Allocate", "(paper)", "Bcast_transtable", "(paper)", "Allgather_param", "(paper)"],
+    );
+    let counts: &[usize] = if opts.fast { &[16, 64] } else { &[16, 64, 256, 1024] };
+    for &cores in counts {
+        let m = measure(cores);
+        let paper = PAPER.iter().find(|(c, _)| *c == cores).map(|(_, v)| *v).unwrap_or([0.0; 4]);
+        t.row(vec![
+            cores.to_string(),
+            us(m[0]),
+            us(paper[0]),
+            us(m[1]),
+            us(paper[1]),
+            us(m[2]),
+            us(paper[2]),
+            us(m[3]),
+            us(paper[3]),
+        ]);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overheads_land_within_2x_of_paper() {
+        // 16 and 64 cores are cheap enough for a unit test.
+        for &(cores, paper) in PAPER.iter().take(2) {
+            let m = measure(cores);
+            // Communicator, Allocate: tight bands.
+            for i in [0usize, 1] {
+                assert!(
+                    m[i] / paper[i] > 0.4 && m[i] / paper[i] < 2.5,
+                    "cores {cores} col {i}: {} vs paper {}",
+                    m[i],
+                    paper[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scaling_directions_match_paper() {
+        let m16 = measure(16);
+        let m64 = measure(64);
+        assert!(m64[0] > m16[0], "Communicator grows with cores");
+        assert!(m64[1] > m16[1], "Allocate grows (saturating)");
+        assert!(m64[2] > m16[2], "transtable grows quadratically");
+    }
+}

@@ -1,0 +1,226 @@
+//! `Wrapper_Hy_Allgather` (§4.2) and its parameter wrappers.
+//!
+//! Design: each rank writes its contribution into the slot of the node's
+//! shared window with affinity to it (one shared copy per node, *zero*
+//! on-node messages); after a red sync, the node **leaders** exchange whole
+//! node blocks with `MPI_Allgatherv` over the bridge (block counts differ
+//! on irregularly-populated nodes — the §5.2.2 irregular problem); a
+//! yellow sync then releases the children to read the full result in
+//! place.
+//!
+//! Requires block-style rank placement (§4: consecutive ranks fill each
+//! node), so a node's contributions are contiguous in the result.
+
+use super::package::CommPackage;
+use super::shmem::HyWin;
+use super::sync::{await_release, red_sync, release, SyncScheme};
+use crate::coll::allgather::allgatherv;
+use crate::mpi::env::ProcEnv;
+use crate::mpi::topo::Placement;
+
+/// `struct allgather_param`: per-node receive counts and displacements for
+/// the bridge `MPI_Allgatherv` (bytes).
+#[derive(Clone, Debug)]
+pub struct AllgatherParam {
+    pub recvcounts: Vec<usize>,
+    pub displs: Vec<usize>,
+}
+
+/// `Wrapper_ShmemcommSizeset_gather`: collect every node's shared-memory
+/// communicator size. Leaders allgather over the bridge; children compute
+/// the same set from the parent group (they hold the same information —
+/// the wrapper hides where it comes from).
+pub fn sizeset_gather(env: &mut ProcEnv, pkg: &CommPackage) -> Vec<usize> {
+    if let Some(bridge) = &pkg.bridge {
+        let mine = (pkg.shmem_size as u64).to_le_bytes();
+        let mut out = vec![0u8; 8 * bridge.size()];
+        crate::coll::allgather(env, bridge, &mine, &mut out, crate::coll::AllgatherAlgo::Bruck);
+        out.chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect()
+    } else {
+        // Children: derive from topology (same values, no traffic).
+        let topo = env.topo();
+        let mut nodes: Vec<usize> = pkg.parent.members().iter().map(|&w| topo.node_of(w)).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        nodes
+            .iter()
+            .map(|&n| pkg.parent.members().iter().filter(|&&w| topo.node_of(w) == n).count())
+            .collect()
+    }
+}
+
+impl AllgatherParam {
+    /// `Wrapper_Create_Allgather_param`: build `recvcounts`/`displs` from
+    /// the per-node sizes for a per-rank message of `msg` bytes. One-off
+    /// cost: the Table-2 "Allgather_param" law.
+    pub fn create(env: &mut ProcEnv, pkg: &CommPackage, msg: usize, sizeset: &[usize]) -> AllgatherParam {
+        let recvcounts: Vec<usize> = sizeset.iter().map(|&s| s * msg).collect();
+        let displs: Vec<usize> = recvcounts
+            .iter()
+            .scan(0usize, |acc, &c| {
+                let d = *acc;
+                *acc += c;
+                Some(d)
+            })
+            .collect();
+        let mgmt = env.state().mgmt.clone();
+        env.advance(mgmt.allgather_param_us(pkg.bridge_size));
+        AllgatherParam { recvcounts, displs }
+    }
+}
+
+/// `Wrapper_Hy_Allgather`: complete the allgather across the cluster. Every
+/// rank must already have stored its `msg`-byte contribution at its
+/// affinity slot (`win.local_ptr(parent_rank, msg)`); afterwards the full
+/// gathered result (parent-rank order) is readable by every rank at offset
+/// 0 of the node's shared window.
+pub fn hy_allgather(
+    env: &mut ProcEnv,
+    pkg: &CommPackage,
+    win: &mut HyWin,
+    param: &AllgatherParam,
+    msg: usize,
+    scheme: SyncScheme,
+) {
+    assert_eq!(
+        env.topo().placement(),
+        Placement::Block,
+        "Wrapper_Hy_Allgather assumes block-style rank placement (§4); \
+         see [20] for the measures other placements require"
+    );
+    // Red sync: all on-node contributions must be in the window.
+    red_sync(env, pkg);
+    if let Some(bridge) = &pkg.bridge {
+        // My node's block: contiguous because placement is block-style.
+        let bidx = bridge.rank();
+        let (lo, count) = (param.displs[bidx], param.recvcounts[bidx]);
+        // Exchange node blocks in place over the bridge. The leader works
+        // directly on the shared window (no extra node-level copy) —
+        // protocol-exclusive during this phase.
+        let mine = win.win.read_vec(lo, count);
+        let full_len: usize = param.recvcounts.iter().sum();
+        let out = unsafe { win.win.slice_mut(0, full_len) };
+        allgatherv(env, bridge, &mine, &param.recvcounts, out);
+        let _ = msg;
+        release(env, pkg, win, scheme);
+    } else {
+        await_release(env, pkg, win, scheme);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::testutil::run_nodes;
+    use crate::util::{cast_slice, to_bytes};
+
+    fn run_allgather(nodes: &'static [usize], n_elems: usize, scheme: SyncScheme) -> Vec<Vec<f64>> {
+        run_nodes(nodes, move |env| {
+            let w = env.world();
+            let pkg = CommPackage::create(env, &w);
+            let msg = n_elems * 8;
+            let mut win = pkg.alloc_shared(env, msg, 1, w.size());
+            let sizeset = sizeset_gather(env, &pkg);
+            let param = AllgatherParam::create(env, &pkg, msg, &sizeset);
+            let mine: Vec<f64> = (0..n_elems).map(|i| (w.rank() * n_elems + i) as f64).collect();
+            let off = win.local_ptr(w.rank(), msg);
+            win.store(env, off, to_bytes(&mine));
+            hy_allgather(env, &pkg, &mut win, &param, msg, scheme);
+            let all = win.load(env, 0, msg * w.size());
+            env.barrier(&pkg.shmem);
+            win.free(env, &pkg);
+            cast_slice::<f64>(&all)
+        })
+    }
+
+    #[test]
+    fn gathers_in_rank_order_regular() {
+        for scheme in [SyncScheme::Barrier, SyncScheme::Spin] {
+            let out = run_allgather(&[4, 4], 5, scheme);
+            let expect: Vec<f64> = (0..40).map(|x| x as f64).collect();
+            for (r, got) in out.into_iter().enumerate() {
+                assert_eq!(got, expect, "scheme {scheme:?} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn gathers_irregular_nodes() {
+        // The §5.2.2 irregular problem: different ranks per node.
+        let out = run_allgather(&[5, 3], 3, SyncScheme::Spin);
+        let expect: Vec<f64> = (0..24).map(|x| x as f64).collect();
+        for got in out {
+            assert_eq!(got, expect);
+        }
+    }
+
+    #[test]
+    fn three_nodes_spin() {
+        let out = run_allgather(&[3, 4, 2], 2, SyncScheme::Spin);
+        let expect: Vec<f64> = (0..18).map(|x| x as f64).collect();
+        for got in out {
+            assert_eq!(got, expect);
+        }
+    }
+
+    #[test]
+    fn single_node_needs_no_bridge() {
+        let out = run_allgather(&[6], 4, SyncScheme::Spin);
+        let expect: Vec<f64> = (0..24).map(|x| x as f64).collect();
+        for got in out {
+            assert_eq!(got, expect);
+        }
+    }
+
+    #[test]
+    fn sizeset_agrees_between_leaders_and_children() {
+        let out = run_nodes(&[5, 3], |env| {
+            let w = env.world();
+            let pkg = CommPackage::create(env, &w);
+            sizeset_gather(env, &pkg)
+        });
+        for got in out {
+            assert_eq!(got, vec![5, 3]);
+        }
+    }
+
+    #[test]
+    fn hybrid_beats_pure_mpi_allgather_vtime() {
+        // Fig. 12's claim at micro scale: hybrid < pure for the same layout.
+        let nodes: &'static [usize] = &[8, 8];
+        let n = 100; // 800 B per rank, the Fig. 12 message size
+        let hybrid = run_nodes(nodes, move |env| {
+            let w = env.world();
+            let pkg = CommPackage::create(env, &w);
+            let msg = n * 8;
+            let mut win = pkg.alloc_shared(env, msg, 1, w.size());
+            let sizeset = sizeset_gather(env, &pkg);
+            let param = AllgatherParam::create(env, &pkg, msg, &sizeset);
+            let data = vec![1u8; msg];
+            env.harness_sync(&w);
+            let t0 = env.vclock();
+            win.store(env, win.local_ptr(w.rank(), msg), &data);
+            hy_allgather(env, &pkg, &mut win, &param, msg, SyncScheme::Spin);
+            let dt = env.vclock() - t0;
+            env.barrier(&pkg.shmem);
+            win.free(env, &pkg);
+            dt
+        })
+        .into_iter()
+        .fold(0.0f64, f64::max);
+        let pure = run_nodes(nodes, move |env| {
+            let w = env.world();
+            let mine = vec![1u8; n * 8];
+            let mut out = vec![0u8; n * 8 * w.size()];
+            env.harness_sync(&w);
+            let t0 = env.vclock();
+            crate::coll::allgather(env, &w, &mine, &mut out, crate::coll::AllgatherAlgo::Auto);
+            env.vclock() - t0
+        })
+        .into_iter()
+        .fold(0.0f64, f64::max);
+        assert!(hybrid < pure, "hybrid {hybrid} must beat pure {pure} at 800 B");
+    }
+}

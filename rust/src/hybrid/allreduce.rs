@@ -1,0 +1,239 @@
+//! `Wrapper_Hy_Allreduce` (§4.4) with both step-1 methods and the
+//! message-size cutoff tuning of §5.2.4.
+//!
+//! Window layout (leader allocates `(shmem_size + 2) · msize` bytes):
+//! input slot per local rank at `local_rank · msize`, then the two-element
+//! output vector of Fig. 8 — slot `L` (node-local reduction) at
+//! `shmem_size · msize` and slot `G` (global result) after it.
+//!
+//! - **Step 1** (node-level reduction into `L`):
+//!   - *method 1* — `MPI_Reduce` over the node communicator: simple and
+//!     synchronizing by itself, but pays the library's internal staging
+//!     copies;
+//!   - *method 2* — a red sync, then the leader serially reduces the input
+//!     slots straight out of the shared window (no message copies, but the
+//!     children idle and an extra sync is needed).
+//! - **Step 2**: standard allreduce over the bridge (leaders), result into
+//!   `G`, then a yellow sync; children read `G` in place — the result is
+//!   *not* broadcast (visible-change sharing, §1).
+//!
+//! The optimized wrapper ([`AllreduceMethod::Tuned`]) uses method 2 below
+//! the 2 KB cutoff (Fig. 15) and method 1 above it, with the spinning
+//! yellow sync (§5.2.4's final configuration).
+
+use super::package::CommPackage;
+use super::shmem::HyWin;
+use super::sync::{await_release, red_sync, release, SyncScheme};
+use crate::coll::allreduce::{allreduce, AllreduceAlgo};
+use crate::coll::reduce::reduce;
+use crate::mpi::env::ProcEnv;
+use crate::mpi::{Datatype, ReduceOp};
+
+/// Step-1 implementation choice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllreduceMethod {
+    /// `MPI_Reduce` on the node communicator.
+    Method1,
+    /// Red sync + leader-serial reduction from the shared window.
+    Method2,
+    /// §5.2.4 optimized: method 2 iff `msize ≤` the 2 KB cutoff.
+    Tuned,
+}
+
+/// The Fig. 15 cutoff (bytes): below → method 2, above → method 1.
+pub const METHOD_CUTOFF_BYTES: usize = 2 * 1024;
+
+/// Allocate the allreduce window for `msize`-byte operands
+/// (`(shmem_size + 2) · msize` on the leader).
+pub fn alloc_allreduce_win(env: &mut ProcEnv, pkg: &CommPackage, msize: usize) -> HyWin {
+    pkg.alloc_shared(env, msize, 1, pkg.shmem_size + 2)
+}
+
+/// Offsets of the L and G slots.
+fn slots(pkg: &CommPackage, msize: usize) -> (usize, usize) {
+    (pkg.shmem_size * msize, (pkg.shmem_size + 1) * msize)
+}
+
+/// `Wrapper_Hy_Allreduce`: reduce the per-rank operands (already stored at
+/// `win.local_ptr(shmem_rank, msize)`) across the parent communicator.
+/// Afterwards every rank can read the global result at the returned window
+/// offset (slot `G`) — one shared copy per node.
+pub fn hy_allreduce(
+    env: &mut ProcEnv,
+    pkg: &CommPackage,
+    win: &mut HyWin,
+    dtype: Datatype,
+    op: ReduceOp,
+    msize: usize,
+    method: AllreduceMethod,
+    scheme: SyncScheme,
+) -> usize {
+    assert_eq!(msize % dtype.size(), 0);
+    let (l_off, g_off) = slots(pkg, msize);
+    let method = match method {
+        AllreduceMethod::Tuned => {
+            if msize <= METHOD_CUTOFF_BYTES {
+                AllreduceMethod::Method2
+            } else {
+                AllreduceMethod::Method1
+            }
+        }
+        m => m,
+    };
+
+    // ---- step 1: node-level reduction into L -------------------------
+    match method {
+        AllreduceMethod::Method1 => {
+            // MPI_Reduce over the node communicator; operands read from
+            // each rank's own window slot (its private data — no sync
+            // needed before a rank reads what it wrote).
+            let my_off = win.local_ptr(pkg.shmem.rank(), msize);
+            let contrib = win.win.read_vec(my_off, msize);
+            if pkg.is_leader() {
+                let mut out = vec![0u8; msize];
+                reduce(env, &pkg.shmem, 0, dtype, op, &contrib, Some(&mut out));
+                win.store(env, l_off, &out);
+            } else {
+                reduce(env, &pkg.shmem, 0, dtype, op, &contrib, None);
+            }
+        }
+        AllreduceMethod::Method2 => {
+            // Red sync so every input slot is visible, then the leader
+            // reduces serially straight out of the shared window.
+            red_sync(env, pkg);
+            if pkg.is_leader() {
+                let mut acc = win.win.read_vec(0, msize);
+                for r in 1..pkg.shmem_size {
+                    let operand = unsafe { win.win.slice(r * msize, msize) };
+                    op.apply(dtype, &mut acc, operand);
+                }
+                env.charge_reduce(msize * pkg.shmem_size);
+                win.win.write(l_off, &acc);
+                env.charge_memcpy(msize);
+            }
+        }
+        AllreduceMethod::Tuned => unreachable!(),
+    }
+
+    // ---- step 2: bridge allreduce into G + yellow sync ----------------
+    if let Some(bridge) = &pkg.bridge {
+        // G := L, then allreduce G in place across the leaders.
+        let l = win.win.read_vec(l_off, msize);
+        win.win.write(g_off, &l);
+        env.charge_memcpy(msize);
+        if bridge.size() > 1 {
+            let g = unsafe { win.win.slice_mut(g_off, msize) };
+            allreduce(env, bridge, dtype, op, g, AllreduceAlgo::Auto);
+        }
+        release(env, pkg, win, scheme);
+    } else {
+        await_release(env, pkg, win, scheme);
+    }
+    g_off
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::testutil::run_nodes;
+    use crate::util::{cast_slice, to_bytes};
+
+    fn check(nodes: &'static [usize], n: usize, method: AllreduceMethod, scheme: SyncScheme) {
+        let p: usize = nodes.iter().sum();
+        let out = run_nodes(nodes, move |env| {
+            let w = env.world();
+            let pkg = CommPackage::create(env, &w);
+            let msize = n * 8;
+            let mut win = alloc_allreduce_win(env, &pkg, msize);
+            let vals: Vec<f64> = (0..n).map(|i| ((w.rank() + 1) * (i + 2)) as f64).collect();
+            let off = win.local_ptr(pkg.shmem.rank(), msize);
+            win.store(env, off, to_bytes(&vals));
+            let g = hy_allreduce(env, &pkg, &mut win, Datatype::F64, ReduceOp::Sum, msize, method, scheme);
+            let result = win.load(env, g, msize);
+            env.barrier(&pkg.shmem);
+            win.free(env, &pkg);
+            cast_slice::<f64>(&result)
+        });
+        let rank_sum: f64 = (1..=p).map(|r| r as f64).sum();
+        for (r, got) in out.into_iter().enumerate() {
+            for (i, &v) in got.iter().enumerate() {
+                let expect = rank_sum * (i + 2) as f64;
+                assert!((v - expect).abs() < 1e-9, "method {method:?} rank {r} elem {i}: {v} vs {expect}");
+            }
+        }
+    }
+
+    #[test]
+    fn both_methods_all_schemes() {
+        for method in [AllreduceMethod::Method1, AllreduceMethod::Method2] {
+            for scheme in [SyncScheme::Barrier, SyncScheme::Spin] {
+                check(&[5, 3], 4, method, scheme);
+            }
+        }
+    }
+
+    #[test]
+    fn tuned_picks_correctly_and_stays_correct() {
+        check(&[5, 3], 1, AllreduceMethod::Tuned, SyncScheme::Spin); // 8 B -> method 2
+        check(&[5, 3], 512, AllreduceMethod::Tuned, SyncScheme::Spin); // 4 KB -> method 1
+    }
+
+    #[test]
+    fn irregular_three_nodes_and_single_node() {
+        check(&[3, 4, 2], 8, AllreduceMethod::Method2, SyncScheme::Spin);
+        check(&[6], 8, AllreduceMethod::Method1, SyncScheme::Spin);
+        check(&[6], 8, AllreduceMethod::Method2, SyncScheme::Barrier);
+    }
+
+    #[test]
+    fn max_op() {
+        let out = run_nodes(&[5, 3], |env| {
+            let w = env.world();
+            let pkg = CommPackage::create(env, &w);
+            let mut win = alloc_allreduce_win(env, &pkg, 8);
+            let v = [(w.rank() as f64) * if w.rank() % 2 == 0 { 1.0 } else { -1.0 }];
+            let off = win.local_ptr(pkg.shmem.rank(), 8);
+            win.store(env, off, to_bytes(&v));
+            let g = hy_allreduce(
+                env, &pkg, &mut win, Datatype::F64, ReduceOp::Max, 8,
+                AllreduceMethod::Method2, SyncScheme::Spin,
+            );
+            let result = win.load(env, g, 8);
+            env.barrier(&pkg.shmem);
+            win.free(env, &pkg);
+            cast_slice::<f64>(&result)[0]
+        });
+        for got in out {
+            assert_eq!(got, 6.0);
+        }
+    }
+
+    #[test]
+    fn method2_beats_method1_below_cutoff_and_loses_above() {
+        // The Fig. 15 crossover, asserted in virtual time.
+        let vt = |n_elems: usize, method: AllreduceMethod| {
+            run_nodes(&[16], move |env| {
+                let w = env.world();
+                let pkg = CommPackage::create(env, &w);
+                let msize = n_elems * 8;
+                let mut win = alloc_allreduce_win(env, &pkg, msize);
+                let vals = vec![1.0f64; n_elems];
+                let off = win.local_ptr(pkg.shmem.rank(), msize);
+                env.harness_sync(&w);
+                let t0 = env.vclock();
+                win.store(env, off, to_bytes(&vals));
+                hy_allreduce(env, &pkg, &mut win, Datatype::F64, ReduceOp::Sum, msize, method, SyncScheme::Spin);
+                let dt = env.vclock() - t0;
+                env.barrier(&pkg.shmem);
+                win.free(env, &pkg);
+                dt
+            })
+            .into_iter()
+            .fold(0.0f64, f64::max)
+        };
+        // 8 B: method 2 wins (no staging copies).
+        assert!(vt(1, AllreduceMethod::Method2) < vt(1, AllreduceMethod::Method1));
+        // 8 KB: method 1 wins (parallel tree beats the serial leader).
+        assert!(vt(1024, AllreduceMethod::Method1) < vt(1024, AllreduceMethod::Method2));
+    }
+}

@@ -1,0 +1,194 @@
+//! `Wrapper_Hy_Bcast` (§4.3) and the rank-translation tables.
+//!
+//! One shared region per node stores the broadcast payload; only the root
+//! may alter it (MPI broadcast semantics). The across-node broadcast runs
+//! over the *leaders* (message size unchanged vs pure MPI), then one
+//! yellow sync releases each node's children to read the shared copy —
+//! replacing the pure-MPI fan-out to every rank and its per-rank buffer
+//! replication.
+//!
+//! Because broadcast is *rooted* and any rank can be the root, the wrapper
+//! needs the root's rank translated into both sub-communicators — the two
+//! absolute-to-relative translation tables of `Wrapper_Get_transtable`
+//! (their one-off build cost is the quadratic Table-2 "Bcast_transtable"
+//! law).
+
+use super::package::CommPackage;
+use super::shmem::HyWin;
+use super::sync::{await_release, red_sync, release, SyncScheme};
+use crate::coll::bcast::{bcast, BcastAlgo};
+use crate::mpi::env::ProcEnv;
+
+/// The two translation tables, indexed by parent-communicator rank:
+/// `shmem[r]` = r's rank within *its own* node communicator;
+/// `bridge[r]` = the bridge rank of r's node (same value for the whole
+/// node — what the leaders' broadcast needs as its root).
+#[derive(Clone, Debug)]
+pub struct TransTables {
+    pub shmem: Vec<usize>,
+    pub bridge: Vec<usize>,
+}
+
+impl TransTables {
+    /// `Wrapper_Get_transtable`. One-off cost: quadratic in the parent
+    /// size (naive per-rank group scans — the measured Table-2 behaviour).
+    pub fn create(env: &mut ProcEnv, pkg: &CommPackage) -> TransTables {
+        let topo = env.topo();
+        let members = pkg.parent.members();
+        let mut nodes: Vec<usize> = members.iter().map(|&w| topo.node_of(w)).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        let mut shmem = Vec::with_capacity(members.len());
+        let mut bridge = Vec::with_capacity(members.len());
+        for &w in members {
+            let n = topo.node_of(w);
+            // Naive scans (the quadratic behaviour the paper measured).
+            let node_rank = members.iter().filter(|&&v| topo.node_of(v) == n && v < w).count();
+            let bridge_idx = nodes.iter().position(|&x| x == n).unwrap();
+            shmem.push(node_rank);
+            bridge.push(bridge_idx);
+        }
+        let mgmt = env.state().mgmt.clone();
+        env.advance(mgmt.transtable_us(pkg.parent.size()));
+        TransTables { shmem, bridge }
+    }
+}
+
+/// `Wrapper_Hy_Bcast`: broadcast `data` (present only at `root`, a parent
+/// rank) to all ranks. After the call every rank can read the payload at
+/// offset 0 of the node's shared window (the returned `bcast_addr` of the
+/// paper's interface); `len` is the payload size in bytes.
+pub fn hy_bcast(
+    env: &mut ProcEnv,
+    pkg: &CommPackage,
+    win: &mut HyWin,
+    tables: &TransTables,
+    root: usize,
+    data: Option<&[u8]>,
+    len: usize,
+    scheme: SyncScheme,
+) {
+    let me = pkg.parent.rank();
+    let root_node = tables.bridge[root];
+    let root_is_leader = tables.shmem[root] == 0;
+
+    // The root stores the payload into its node's shared region (only the
+    // root is eligible to alter the broadcast data, §4.3).
+    if me == root {
+        let d = data.expect("root must supply the broadcast payload");
+        assert_eq!(d.len(), len);
+        win.store(env, 0, d);
+    }
+    // If the root is a child, its leader must observe the payload before
+    // forwarding across the bridge: red sync on the root's node.
+    if !root_is_leader && tables.bridge[me] == root_node {
+        red_sync(env, pkg);
+    }
+    // Leaders broadcast across the bridge, rooted at the root's node.
+    if let Some(bridge) = &pkg.bridge {
+        if bridge.size() > 1 {
+            let buf = unsafe { win.win.slice_mut(0, len) };
+            bcast(env, bridge, root_node, buf, BcastAlgo::Auto);
+        }
+        release(env, pkg, win, scheme);
+    } else {
+        await_release(env, pkg, win, scheme);
+    }
+    // All ranks may now read the single shared copy (children perform no
+    // explicit copy here — they read in place via the local pointer).
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::testutil::{payload, run_nodes};
+
+    fn check_bcast(nodes: &'static [usize], len: usize, root: usize, scheme: SyncScheme) {
+        let out = run_nodes(nodes, move |env| {
+            let w = env.world();
+            let pkg = CommPackage::create(env, &w);
+            let mut win = pkg.alloc_shared(env, len, 1, 1);
+            let tables = TransTables::create(env, &pkg);
+            let data = payload(root, len);
+            let arg = if w.rank() == root { Some(&data[..]) } else { None };
+            hy_bcast(env, &pkg, &mut win, &tables, root, arg, len, scheme);
+            let got = win.load(env, 0, len);
+            env.barrier(&pkg.shmem);
+            win.free(env, &pkg);
+            got
+        });
+        let expect = payload(root, len);
+        for (r, got) in out.into_iter().enumerate() {
+            assert_eq!(got, expect, "nodes {nodes:?} root {root} rank {r}");
+        }
+    }
+
+    #[test]
+    fn roots_leader_and_child() {
+        check_bcast(&[5, 3], 64, 0, SyncScheme::Spin); // root = leader of node 0
+        check_bcast(&[5, 3], 64, 5, SyncScheme::Spin); // root = leader of node 1
+        check_bcast(&[5, 3], 64, 2, SyncScheme::Spin); // root = child on node 0
+        check_bcast(&[5, 3], 64, 7, SyncScheme::Spin); // root = child on node 1
+        check_bcast(&[5, 3], 64, 7, SyncScheme::Barrier);
+    }
+
+    #[test]
+    fn three_nodes_and_large_payload() {
+        check_bcast(&[3, 3, 2], 300 * 1024, 4, SyncScheme::Spin);
+    }
+
+    #[test]
+    fn single_node() {
+        check_bcast(&[4], 128, 2, SyncScheme::Spin);
+        check_bcast(&[4], 128, 0, SyncScheme::Barrier);
+    }
+
+    #[test]
+    fn transtables_shape() {
+        let out = run_nodes(&[5, 3], |env| {
+            let w = env.world();
+            let pkg = CommPackage::create(env, &w);
+            let t = TransTables::create(env, &pkg);
+            (t.shmem, t.bridge)
+        });
+        for (shmem, bridge) in out {
+            assert_eq!(shmem, vec![0, 1, 2, 3, 4, 0, 1, 2]);
+            assert_eq!(bridge, vec![0, 0, 0, 0, 0, 1, 1, 1]);
+        }
+    }
+
+    #[test]
+    fn hybrid_beats_pure_bcast_at_512kb() {
+        // Fig. 13/17's regime: 512 KB broadcast, hybrid must win.
+        let nodes: &'static [usize] = &[8, 8];
+        let len = 512 * 1024;
+        let hybrid = run_nodes(nodes, move |env| {
+            let w = env.world();
+            let pkg = CommPackage::create(env, &w);
+            let mut win = pkg.alloc_shared(env, len, 1, 1);
+            let tables = TransTables::create(env, &pkg);
+            let data = vec![7u8; len];
+            env.harness_sync(&w);
+            let t0 = env.vclock();
+            let arg = if w.rank() == 0 { Some(&data[..]) } else { None };
+            hy_bcast(env, &pkg, &mut win, &tables, 0, arg, len, SyncScheme::Spin);
+            let dt = env.vclock() - t0;
+            env.barrier(&pkg.shmem);
+            win.free(env, &pkg);
+            dt
+        })
+        .into_iter()
+        .fold(0.0f64, f64::max);
+        let pure = run_nodes(nodes, move |env| {
+            let w = env.world();
+            let mut buf = vec![7u8; len];
+            env.harness_sync(&w);
+            let t0 = env.vclock();
+            bcast(env, &w, 0, &mut buf, BcastAlgo::Auto);
+            env.vclock() - t0
+        })
+        .into_iter()
+        .fold(0.0f64, f64::max);
+        assert!(hybrid < pure, "hybrid {hybrid} must beat pure {pure} at 512 KB");
+    }
+}

@@ -1,0 +1,40 @@
+//! The paper's contribution: hybrid MPI+MPI context-based collectives.
+//!
+//! In the hybrid MPI+MPI model (§3.2), one *leader* rank per node (the
+//! lowest rank on the node under block placement) joins the *bridge*
+//! communicator that carries all inter-node traffic; its on-node *children*
+//! share one copy of every collective result inside an MPI-3 shared-memory
+//! window and access it with plain load/store — eliminating both the
+//! per-rank result replication and the library's on-node staging copies
+//! that the pure-MPI collectives pay.
+//!
+//! Module map (paper primitive → here):
+//!
+//! | paper (§4) | here |
+//! |---|---|
+//! | `struct comm_package` | [`package::CommPackage`] |
+//! | `Wrapper_MPI_ShmemBridgeComm_create` | [`package::CommPackage::create`] |
+//! | `Wrapper_MPI_Sharedmemory_alloc` | [`shmem::CommPackage_alloc` → `package::CommPackage::alloc_shared`] |
+//! | `Wrapper_Get_localpointer` | [`shmem::HyWin::local_ptr`] |
+//! | `Wrapper_Comm_free` | [`package::CommPackage::free`] |
+//! | `Wrapper_ShmemcommSizeset_gather` | [`allgather::sizeset_gather`] |
+//! | `Wrapper_Create_Allgather_param` | [`allgather::AllgatherParam::create`] |
+//! | `Wrapper_Hy_Allgather` | [`allgather::hy_allgather`] |
+//! | `Wrapper_Get_transtable` | [`bcast::TransTables::create`] |
+//! | `Wrapper_Hy_Bcast` | [`bcast::hy_bcast`] |
+//! | `Wrapper_Hy_Allreduce` | [`allreduce::hy_allreduce`] |
+//! | §4.5 sync schemes | [`sync::SyncScheme`] |
+
+pub mod allgather;
+pub mod allreduce;
+pub mod bcast;
+pub mod package;
+pub mod shmem;
+pub mod sync;
+
+pub use allgather::{hy_allgather, sizeset_gather, AllgatherParam};
+pub use allreduce::{hy_allreduce, AllreduceMethod};
+pub use bcast::{hy_bcast, TransTables};
+pub use package::CommPackage;
+pub use shmem::HyWin;
+pub use sync::SyncScheme;

@@ -1,0 +1,132 @@
+//! The `comm_package` wrapper (§4.1): two-level communicator splitting.
+
+use crate::mpi::comm::UNDEFINED;
+use crate::mpi::env::ProcEnv;
+use crate::mpi::Communicator;
+
+/// The paper's `struct comm_package`: the shared-memory (node) and bridge
+/// (leaders-only) communicators plus their sizes.
+pub struct CommPackage {
+    /// The parent this package was derived from.
+    pub parent: Communicator,
+    /// Node-level communicator (`MPI_Comm_split_type(…SHARED…)`).
+    pub shmem: Communicator,
+    /// Bridge communicator — `Some` only on node leaders.
+    pub bridge: Option<Communicator>,
+    /// `shmemcomm_size`.
+    pub shmem_size: usize,
+    /// `bridgecomm_size` (number of nodes hosting members of `parent`;
+    /// known on children too, unlike in raw MPI where only leaders see it).
+    pub bridge_size: usize,
+}
+
+impl CommPackage {
+    /// `Wrapper_MPI_ShmemBridgeComm_create`: split `parent` into the
+    /// node-level communicator and the bridge over node leaders (lowest
+    /// rank per node leads). Communicators other than `MPI_COMM_WORLD` are
+    /// supported (§4.1 "complex use cases").
+    ///
+    /// One-off cost: two `MPI_Comm_split`s — the Table-2 "Communicator"
+    /// row — charged by the split mechanics themselves.
+    pub fn create(env: &mut ProcEnv, parent: &Communicator) -> CommPackage {
+        let shmem = env.split_type_shared(parent);
+        let is_leader = shmem.rank() == 0;
+        let bridge = env.split(parent, if is_leader { 0 } else { UNDEFINED }, parent.rank() as i64);
+        // Node count of the parent group (= bridge size), computable from
+        // the topology on every rank.
+        let topo = env.topo();
+        let mut nodes: Vec<usize> = parent.members().iter().map(|&w| topo.node_of(w)).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        CommPackage {
+            parent: parent.clone(),
+            shmem_size: shmem.size(),
+            bridge_size: nodes.len(),
+            shmem,
+            bridge,
+        }
+    }
+
+    /// Am I my node's leader?
+    pub fn is_leader(&self) -> bool {
+        self.shmem.rank() == 0
+    }
+
+    /// My bridge rank = the index of my node among the parent's nodes
+    /// (valid on children too; equals `bridge.rank()` on leaders).
+    pub fn bridge_index(&self, env: &ProcEnv) -> usize {
+        let topo = env.topo();
+        let my_node = topo.node_of(env.world_rank());
+        let mut nodes: Vec<usize> = self.parent.members().iter().map(|&w| topo.node_of(w)).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        nodes.iter().position(|&n| n == my_node).expect("my node hosts me")
+    }
+
+    /// `Wrapper_Comm_free`: release both sub-communicators. (Handles are
+    /// reference-counted here, so this is semantic bookkeeping — the
+    /// paper's point is that the *user* never touches the raw handles.)
+    pub fn free(self, _env: &mut ProcEnv) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::testutil::run_nodes;
+
+    #[test]
+    fn leaders_get_bridge_children_do_not() {
+        let out = run_nodes(&[5, 3], |env| {
+            let w = env.world();
+            let pkg = CommPackage::create(env, &w);
+            (
+                env.world_rank(),
+                pkg.is_leader(),
+                pkg.bridge.as_ref().map(|b| (b.size(), b.rank())),
+                pkg.shmem_size,
+                pkg.bridge_size,
+                pkg.bridge_index(env),
+            )
+        });
+        for (wr, leader, bridge, shm_size, bridge_size, bidx) in out {
+            assert_eq!(bridge_size, 2);
+            if wr == 0 || wr == 5 {
+                assert!(leader);
+                let (bsz, brank) = bridge.unwrap();
+                assert_eq!(bsz, 2);
+                assert_eq!(brank, if wr == 0 { 0 } else { 1 });
+            } else {
+                assert!(!leader);
+                assert!(bridge.is_none());
+            }
+            assert_eq!(shm_size, if wr < 5 { 5 } else { 3 });
+            assert_eq!(bidx, if wr < 5 { 0 } else { 1 });
+        }
+    }
+
+    #[test]
+    fn derived_communicator_supported() {
+        // Package over a sub-communicator (even world ranks only).
+        let out = run_nodes(&[4, 4], |env| {
+            let w = env.world();
+            let even = env.split(&w, (w.rank() % 2) as i64, w.rank() as i64).unwrap();
+            if w.rank() % 2 == 0 {
+                let pkg = CommPackage::create(env, &even);
+                Some((pkg.shmem_size, pkg.bridge_size, pkg.is_leader()))
+            } else {
+                // Odd ranks also got a comm (color 1) — build a package on
+                // it to keep the collective call pattern aligned.
+                let pkg = CommPackage::create(env, &even);
+                Some((pkg.shmem_size, pkg.bridge_size, pkg.is_leader()))
+            }
+        });
+        for (r, v) in out.into_iter().enumerate() {
+            let (shm, bridge, leader) = v.unwrap();
+            assert_eq!(shm, 2, "rank {r}: 2 same-parity ranks per node");
+            assert_eq!(bridge, 2);
+            // Leaders = lowest world rank of each parity on each node:
+            // ranks 0, 1 (node 0) and 4, 5 (node 1).
+            assert_eq!(leader, r % 4 < 2, "rank {r}");
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! Node-level synchronization schemes (§4.5).
+//!
+//! Two patterns appear in the hybrid collectives:
+//!
+//! - **red sync** — a full collective synchronization among the node's
+//!   ranks (everyone waits for everyone): `MPI_Barrier` on the node
+//!   communicator. Required before a leader may consume its children's
+//!   window writes.
+//! - **yellow sync** — a *release*: children wait only for their leader
+//!   (leader → children). A barrier here would make children handshake
+//!   each other pointlessly (§4.5); the paper's optimization is the
+//!   **spinning** method — a shared status counter the leader increments
+//!   (`status++` + `MPI_Win_sync`), children polling with the
+//!   equality-only exit condition MPI's one-byte-change rule permits.
+
+use super::package::CommPackage;
+use super::shmem::HyWin;
+use crate::mpi::env::ProcEnv;
+
+/// How the yellow (leader→children) sync point is implemented.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncScheme {
+    /// `MPI_Barrier(shmem_comm)` — the unoptimized variant of §5.2.3/4.
+    Barrier,
+    /// The §4.5 spinning status flag — the optimized variant.
+    Spin,
+}
+
+/// Red sync: full node barrier (all ranks of the node communicator).
+pub fn red_sync(env: &mut ProcEnv, pkg: &CommPackage) {
+    env.barrier(&pkg.shmem);
+}
+
+/// Yellow sync, leader side: release the children.
+pub fn release(env: &mut ProcEnv, pkg: &CommPackage, win: &mut HyWin, scheme: SyncScheme) {
+    match scheme {
+        SyncScheme::Barrier => env.barrier(&pkg.shmem),
+        SyncScheme::Spin => {
+            win.epoch += 1;
+            env.spin_post(&win.win, 0);
+        }
+    }
+}
+
+/// Yellow sync, child side: wait for the leader's release.
+pub fn await_release(env: &mut ProcEnv, pkg: &CommPackage, win: &mut HyWin, scheme: SyncScheme) {
+    match scheme {
+        SyncScheme::Barrier => env.barrier(&pkg.shmem),
+        SyncScheme::Spin => {
+            win.epoch += 1;
+            let target = win.epoch;
+            env.spin_wait(&win.win, 0, target);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::testutil::run_nodes;
+
+    #[test]
+    fn spin_release_orders_leader_writes() {
+        let out = run_nodes(&[6], |env| {
+            let w = env.world();
+            let pkg = CommPackage::create(env, &w);
+            let mut win = pkg.alloc_shared(env, 8, 1, 1);
+            for round in 1..=3u8 {
+                if pkg.is_leader() {
+                    win.store(env, 0, &[round; 8]);
+                    release(env, &pkg, &mut win, SyncScheme::Spin);
+                } else {
+                    await_release(env, &pkg, &mut win, SyncScheme::Spin);
+                }
+                let seen = win.load(env, 0, 8);
+                assert_eq!(seen, vec![round; 8], "round {round}");
+                red_sync(env, &pkg); // don't let the leader race ahead
+            }
+            let v = env.vclock();
+            win.free(env, &pkg);
+            v
+        });
+        assert!(out.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn spin_is_cheaper_than_barrier_for_children() {
+        // §4.5's claim: substituting the yellow sync with a barrier causes
+        // unnecessary child↔child handshaking. Compare charged times.
+        let cost = |scheme: SyncScheme| {
+            run_nodes(&[16], move |env| {
+                let w = env.world();
+                let pkg = CommPackage::create(env, &w);
+                let mut win = pkg.alloc_shared(env, 8, 1, 1);
+                env.harness_sync(&w);
+                let t0 = env.vclock();
+                for _ in 0..10 {
+                    if pkg.is_leader() {
+                        release(env, &pkg, &mut win, scheme);
+                    } else {
+                        await_release(env, &pkg, &mut win, scheme);
+                    }
+                }
+                let dt = env.vclock() - t0;
+                env.barrier(&pkg.shmem);
+                win.free(env, &pkg);
+                dt
+            })
+            .into_iter()
+            .fold(0.0f64, f64::max)
+        };
+        let spin = cost(SyncScheme::Spin);
+        let barrier = cost(SyncScheme::Barrier);
+        assert!(spin < barrier, "spin {spin} must undercut barrier {barrier}");
+    }
+}

@@ -1,0 +1,377 @@
+//! BPMF — Bayesian Probabilistic Matrix Factorization (§5.3.3, Fig. 19).
+//!
+//! Gibbs sampling over compound factors U and target factors V. Each
+//! iteration has two sampling regions (compounds, then targets); a region
+//! samples this rank's shard of items from the gathered factors of the
+//! *other* side, then ends with three regular allgathers — factor rows,
+//! hyperparameter statistics and a residual scalar (the paper's 80 000 B /
+//! 800 B / 8 B messages at the 1-node, 24-rank configuration).
+//!
+//! Synthetic data replaces chembl_20 (unavailable): per-item observation
+//! lists with a fixed per-item budget, deterministic per item — so *every
+//! variant computes bit-identical factors* and the checksum cross-validates
+//! pure vs hybrid vs OpenMP (allgather layout differences included).
+//!
+//! The pure-MPI baseline uses the SMP-aware hierarchical allgather (the
+//! cray-mpich behaviour on Hazel Hen, where the paper ran BPMF); it still
+//! replicates the full factor matrices in every rank and pays on-node
+//! staging copies — the two costs `Wrapper_Hy_Allgather` removes.
+
+use super::compute::{bpmf_batch, Backend};
+use super::ompsim::OmpModel;
+use super::{KernelReport, RankStats, Variant};
+use crate::coll::hier::{hier_allgather, HierCtx};
+use crate::coordinator::{ClusterSpec, SimCluster};
+use crate::hybrid::{hy_allgather, sizeset_gather, AllgatherParam, CommPackage, HyWin, SyncScheme};
+use crate::mpi::env::ProcEnv;
+use crate::util::{from_bytes, to_bytes, Rng};
+
+/// BPMF configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BpmfCfg {
+    /// Total compounds (the paper's 1-node config ⇒ 1000/rank ⇒ 80 000 B
+    /// factor messages at 24 ranks with K = 10).
+    pub compounds: usize,
+    /// Total targets (small side; 800 B-class messages).
+    pub targets: usize,
+    /// Latent dimension.
+    pub k: usize,
+    /// Observations per item (padded; matches the AOT artifact shape).
+    pub nnz: usize,
+    /// Sampling iterations (paper: 20).
+    pub iters: usize,
+    pub variant: Variant,
+    pub backend: Backend,
+    pub threads: usize,
+}
+
+impl BpmfCfg {
+    /// Paper-shaped config scaled by `scale` (1.0 = the full 24 000×240).
+    pub fn paper(scale: f64, variant: Variant, backend: Backend, threads: usize) -> BpmfCfg {
+        BpmfCfg {
+            compounds: ((24_000.0 * scale) as usize).max(96),
+            targets: 240,
+            k: 10,
+            nnz: 32,
+            iters: 20,
+            variant,
+            backend,
+            threads,
+        }
+    }
+}
+
+/// Preferred compute batch (matches the `bpmf_b64_n32_k10` artifact);
+/// shrinks for small shards so padding never inflates compute.
+const BATCH: usize = 64;
+
+fn batch_for(per: usize) -> usize {
+    BATCH.min(per.next_power_of_two().max(8))
+}
+
+/// Stats message: 100 doubles (the paper's 800 B allgather).
+const STATS_DOUBLES: usize = 100;
+
+/// Deterministic observation (index into the other side, rating).
+fn obs(side: usize, item: usize, slot: usize, other_count: usize) -> (usize, f64) {
+    let mut rng = Rng::new(((side as u64) << 40) ^ ((item as u64) << 8) ^ slot as u64 ^ 0xB9F);
+    (rng.below(other_count), rng.range_f64(-2.0, 2.0))
+}
+
+/// Deterministic per-(side, item, iter, dim) Gibbs noise — identical in
+/// every variant regardless of sharding.
+fn noise(side: usize, item: usize, iter: usize, dim: usize) -> f64 {
+    let mut rng = Rng::new(
+        0x517E ^ ((side as u64) << 50) ^ ((item as u64) << 20) ^ ((iter as u64) << 6) ^ dim as u64,
+    );
+    rng.normal()
+}
+
+/// Initial factor value.
+fn init_factor(side: usize, item: usize, dim: usize) -> f64 {
+    let mut rng = Rng::new(0xFAC ^ ((side as u64) << 40) ^ ((item as u64) << 8) ^ dim as u64);
+    rng.normal() * 0.1
+}
+
+#[derive(Clone, Copy)]
+struct Shard {
+    lo: usize,
+    /// Padded items per rank (uniform ⇒ regular allgather applies).
+    per: usize,
+    /// Real (unpadded) item count on this side.
+    total: usize,
+}
+
+impl Shard {
+    fn new(total: usize, p: usize, me: usize) -> Shard {
+        let per = total.div_ceil(p);
+        Shard { lo: me * per, per, total }
+    }
+}
+
+pub fn run(spec: ClusterSpec, cfg: BpmfCfg) -> KernelReport {
+    let nnodes = spec.nnodes();
+    let report = SimCluster::new(spec).run(move |env| rank_program(env, cfg));
+    KernelReport::reduce(cfg.variant, nnodes, report)
+}
+
+fn rank_program(env: &mut ProcEnv, cfg: BpmfCfg) -> RankStats {
+    let w = env.world();
+    let p = w.size();
+    let me = w.rank();
+    let k = cfg.k;
+
+    let shards = [Shard::new(cfg.compounds, p, me), Shard::new(cfg.targets, p, me)];
+    // Full factor-table element counts per side (padded rows included).
+    let table_elems = [shards[0].per * p * k, shards[1].per * p * k];
+
+    // ---- per-variant state -------------------------------------------
+    let pkg = (cfg.variant == Variant::HybridMpiMpi).then(|| CommPackage::create(env, &w));
+    // Hybrid: per side, the node's shared factor table + allgather params.
+    let mut windows: Vec<HyWin> = Vec::new();
+    let mut params: Vec<AllgatherParam> = Vec::new();
+    // Pure/OpenMP: per side, the rank's replicated factor table.
+    let mut locals: Vec<Vec<f64>> = Vec::new();
+
+    let full_init = |side: usize| -> Vec<f64> {
+        (0..table_elems[side]).map(|t| init_factor(side, t / k, t % k)).collect()
+    };
+    // Hybrid: two extra shared windows back the small (stats / residual)
+    // allgathers — in the paper's BPMF all three allgathers per region go
+    // through Wrapper_Hy_Allgather.
+    let mut small_wins: Vec<(HyWin, AllgatherParam)> = Vec::new();
+    if let Some(pkg) = &pkg {
+        let sizeset = sizeset_gather(env, pkg);
+        for side in 0..2 {
+            let msg = shards[side].per * k * 8;
+            let win = pkg.alloc_shared(env, msg, 1, p);
+            if pkg.is_leader() {
+                win.win.write(0, to_bytes(&full_init(side)));
+            }
+            params.push(AllgatherParam::create(env, pkg, msg, &sizeset));
+            windows.push(win);
+        }
+        for msg in [STATS_DOUBLES * 8, 8] {
+            let win = pkg.alloc_shared(env, msg, 1, p);
+            let param = AllgatherParam::create(env, pkg, msg, &sizeset);
+            small_wins.push((win, param));
+        }
+        env.barrier(&pkg.shmem); // initial tables visible node-wide
+    } else {
+        for side in 0..2 {
+            locals.push(full_init(side));
+        }
+    }
+    let hier = (cfg.variant != Variant::HybridMpiMpi).then(|| HierCtx::create(env, &w));
+    // BPMF's sampling loop is control-heavy; the paper's fine-grained
+    // MPI+OpenMP port parallelizes it poorly (Fig. 19 shows it clearly
+    // worst) — a larger serial fraction than the dense-loop kernels.
+    let omp = OmpModel { threads: cfg.threads, serial_frac: 0.15, ..OmpModel::new(cfg.threads) };
+
+    let alpha = 2.0;
+    let lam0 = vec![1.0f64; k];
+    let mut stats = RankStats::default();
+    env.harness_sync(&w);
+    let t_start = env.vclock();
+
+    for iter in 0..cfg.iters {
+        for side in 0..2 {
+            let other = 1 - side;
+            let shard = shards[side];
+            let other_total = shards[other].total;
+
+            // ---- sample my shard from the other side's factors --------
+            let t0 = env.vclock();
+            let batch = batch_for(shard.per);
+            let nb = shard.per.div_ceil(batch);
+            let mut new_vals = vec![0.0f64; nb * batch * k];
+            {
+                // Hybrid reads the single shared copy in place; pure reads
+                // its private replica.
+                let other_view: &[f64] = if windows.is_empty() {
+                    &locals[other]
+                } else {
+                    from_bytes(unsafe { windows[other].view(0, table_elems[other] * 8) })
+                };
+                let mut v = vec![0.0f64; batch * cfg.nnz * k];
+                let mut wgt = vec![0.0f64; batch * cfg.nnz];
+                let mut eps = vec![0.0f64; batch * k];
+                for b in 0..nb {
+                    env.compute_timed(|| {
+                        for bi in 0..batch {
+                            let item = shard.lo + b * batch + bi;
+                            let active = item < shard.total && item < shard.lo + shard.per;
+                            for s in 0..cfg.nnz {
+                                let dst = &mut v[(bi * cfg.nnz + s) * k..(bi * cfg.nnz + s + 1) * k];
+                                if active {
+                                    let (idx, val) = obs(side, item, s, other_total);
+                                    dst.copy_from_slice(&other_view[idx * k..(idx + 1) * k]);
+                                    wgt[bi * cfg.nnz + s] = val;
+                                } else {
+                                    dst.fill(0.0);
+                                    wgt[bi * cfg.nnz + s] = 0.0;
+                                }
+                            }
+                            for d in 0..k {
+                                eps[bi * k + d] = if active { noise(side, item, iter, d) } else { 0.0 };
+                            }
+                        }
+                    });
+                    let out = &mut new_vals[b * batch * k..(b + 1) * batch * k];
+                    if cfg.variant == Variant::MpiOpenMp {
+                        if cfg.backend == Backend::Modeled {
+                            omp.charge_modeled(
+                                env,
+                                1,
+                                super::compute::modeled_bpmf_us(batch, cfg.nnz, k),
+                                || {
+                                    crate::kernels::native::bpmf_posterior(
+                                        &v, &wgt, alpha, &lam0, &eps, batch, cfg.nnz, k, out,
+                                    )
+                                },
+                            );
+                        } else {
+                            omp.charge(env, 1, || {
+                                crate::kernels::native::bpmf_posterior(
+                                    &v, &wgt, alpha, &lam0, &eps, batch, cfg.nnz, k, out,
+                                )
+                            });
+                        }
+                    } else {
+                        bpmf_batch(env, cfg.backend, &v, &wgt, alpha, &lam0, &eps, batch, cfg.nnz, k, out);
+                    }
+                }
+            }
+            stats.comp_us += env.vclock() - t0;
+
+            // ---- the three allgathers ---------------------------------
+            env.harness_sync(&w); // skew-free comm measurement (see poisson.rs)
+            let t1 = env.vclock();
+            let mine = &new_vals[..shard.per * k];
+            let stats_msg = vec![me as f64; STATS_DOUBLES];
+            let norm_msg = [mine.iter().map(|x| x * x).sum::<f64>()];
+            if let Some(pkg) = &pkg {
+                let msg = shard.per * k * 8;
+                let win = &mut windows[side];
+                let off = win.local_ptr(me, msg);
+                win.store(env, off, to_bytes(mine));
+                hy_allgather(env, pkg, win, &params[side], msg, SyncScheme::Spin);
+                // The two small allgathers (stats + residual) also run
+                // through Wrapper_Hy_Allgather (all three are converted in
+                // the paper's hybrid BPMF).
+                for (i, payload) in [to_bytes(&stats_msg), to_bytes(&norm_msg)].into_iter().enumerate() {
+                    let (win, param) = &mut small_wins[i];
+                    let param = param.clone();
+                    let off = win.local_ptr(me, payload.len());
+                    win.store(env, off, payload);
+                    hy_allgather(env, pkg, win, &param, payload.len(), SyncScheme::Spin);
+                }
+            } else {
+                let hier = hier.as_ref().unwrap();
+                let msg = shard.per * k * 8;
+                let mut out = vec![0u8; msg * p];
+                hier_allgather(env, hier, to_bytes(mine), &mut out);
+                locals[side].copy_from_slice(from_bytes(&out));
+                let mut sink = vec![0u8; STATS_DOUBLES * 8 * p];
+                hier_allgather(env, hier, to_bytes(&stats_msg), &mut sink);
+                let mut sink2 = vec![0u8; 8 * p];
+                hier_allgather(env, hier, to_bytes(&norm_msg), &mut sink2);
+            }
+            stats.comm_us += env.vclock() - t1;
+        }
+        stats.iters += 1;
+    }
+    stats.total_us = env.vclock() - t_start;
+
+    // Checksum: my shard's real (unpadded) factor values on both sides.
+    let mut sum = 0.0;
+    for side in 0..2 {
+        let shard = shards[side];
+        let view: &[f64] = if windows.is_empty() {
+            &locals[side]
+        } else {
+            from_bytes(unsafe { windows[side].view(0, table_elems[side] * 8) })
+        };
+        let hi = shard.total.min(shard.lo + shard.per);
+        for item in shard.lo..hi.max(shard.lo) {
+            sum += view[item * k..(item + 1) * k].iter().sum::<f64>();
+        }
+    }
+    stats.checksum = sum;
+
+    if let Some(pkg) = &pkg {
+        env.barrier(&pkg.shmem);
+        for win in windows {
+            win.free(env, pkg);
+        }
+        for (win, _) in small_wins {
+            win.free(env, pkg);
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Preset;
+
+    fn spec(nodes: usize, per: usize) -> ClusterSpec {
+        let mut s = ClusterSpec::preset(Preset::VulcanSb, nodes.max(1));
+        s.nodes = vec![per; nodes];
+        s
+    }
+
+    fn tiny(variant: Variant) -> BpmfCfg {
+        BpmfCfg {
+            compounds: 256,
+            targets: 64,
+            k: 6,
+            nnz: 8,
+            iters: 2,
+            variant,
+            backend: Backend::Native,
+            threads: 4,
+        }
+    }
+
+    #[test]
+    fn variants_compute_identical_factors() {
+        let pure = run(spec(2, 4), tiny(Variant::PureMpi));
+        let hy = run(spec(2, 4), tiny(Variant::HybridMpiMpi));
+        let omp = run(spec(8, 1), tiny(Variant::MpiOpenMp));
+        assert!(pure.checksum.is_finite() && pure.checksum != 0.0);
+        assert!(
+            (pure.checksum - hy.checksum).abs() < 1e-9,
+            "pure {} vs hybrid {}",
+            pure.checksum,
+            hy.checksum
+        );
+        assert!(
+            (pure.checksum - omp.checksum).abs() < 1e-9,
+            "pure {} vs openmp {}",
+            pure.checksum,
+            omp.checksum
+        );
+    }
+
+    #[test]
+    fn hybrid_allgather_cheaper() {
+        let pure = run(spec(2, 8), tiny(Variant::PureMpi));
+        let hy = run(spec(2, 8), tiny(Variant::HybridMpiMpi));
+        assert!(
+            hy.comm_us < pure.comm_us,
+            "hybrid allgather {} must beat pure {}",
+            hy.comm_us,
+            pure.comm_us
+        );
+    }
+
+    #[test]
+    fn message_sizes_match_paper_at_one_node() {
+        // 24 ranks, 24 000 compounds, K = 10 ⇒ 1000·10·8 = 80 000 B.
+        let cfg = BpmfCfg::paper(1.0, Variant::PureMpi, Backend::Native, 1);
+        let shard = Shard::new(cfg.compounds, 24, 0);
+        assert_eq!(shard.per * cfg.k * 8, 80_000);
+    }
+}

@@ -1,0 +1,220 @@
+//! Compute backend dispatch: PJRT (AOT JAX/Pallas artifacts) or native.
+//!
+//! Every call runs the real computation and charges the measured thread
+//! CPU time (× the preset scale) to the caller's virtual clock. The PJRT
+//! and native paths produce numerically identical results (asserted by the
+//! runtime tests), so variant comparisons are backend-independent.
+
+use crate::mpi::env::ProcEnv;
+use crate::runtime::{F64Input, SharedRuntime};
+
+/// Which engine executes the kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT artifacts via the PJRT CPU client; falls back to native per
+    /// call when the needed shape has no artifact.
+    Pjrt,
+    /// Pure rust compute paths.
+    Native,
+    /// Real native computation, but the *charged* virtual time is the
+    /// deterministic flop model below — used by the figure generators so
+    /// every variant is charged identical compute (the paper's premise:
+    /// "unequal parallelism will not be the reason for the performance
+    /// benefits", §3.2.3) and host scheduling noise cannot leak into the
+    /// comparison.
+    Modeled,
+}
+
+/// Modeled per-core throughput (flops/µs): a 2.5 GHz Haswell core doing
+/// ~0.6 flops/cycle on these unblocked f64 loops.
+pub const MODELED_FLOPS_PER_US: f64 = 1500.0;
+
+/// Modeled time of the SUMMA block accumulate (2·e³ flops).
+pub fn modeled_matmul_us(edge: usize) -> f64 {
+    2.0 * (edge as f64).powi(3) / MODELED_FLOPS_PER_US
+}
+
+/// Modeled time of one red-black sweep (≈7 flops/point incl. the delta).
+pub fn modeled_sweep_us(rows: usize, n: usize) -> f64 {
+    7.0 * (rows * n) as f64 / MODELED_FLOPS_PER_US
+}
+
+/// Modeled time of one BPMF posterior batch
+/// (per item: 2·nnz·k² Gram + 2·nnz·k linear + k³ factor/solves).
+pub fn modeled_bpmf_us(batch: usize, nnz: usize, k: usize) -> f64 {
+    let per_item = 2.0 * (nnz * k * k) as f64 + 2.0 * (nnz * k) as f64 + (k * k * k) as f64;
+    batch as f64 * per_item / MODELED_FLOPS_PER_US
+}
+
+impl Backend {
+    /// PJRT when artifacts are discoverable, native otherwise.
+    pub fn auto() -> Backend {
+        if SharedRuntime::global().is_some() {
+            Backend::Pjrt
+        } else {
+            Backend::Native
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "pjrt" => Some(Backend::Pjrt),
+            "native" => Some(Backend::Native),
+            "modeled" => Some(Backend::Modeled),
+            "auto" => Some(Backend::auto()),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Pjrt => "pjrt",
+            Backend::Native => "native",
+            Backend::Modeled => "modeled",
+        }
+    }
+}
+
+/// `c += a @ b` on square `edge×edge` blocks (the SUMMA core phase).
+pub fn summa_block(env: &mut ProcEnv, backend: Backend, a: &[f64], b: &[f64], c: &mut [f64], edge: usize) {
+    let artifact = format!("summa{edge}");
+    match backend {
+        Backend::Pjrt if SharedRuntime::global().is_some_and(|rt| rt.available(&artifact)) => {
+            let rt = SharedRuntime::global().unwrap();
+            let dims = [edge as i64, edge as i64];
+            let out = env.compute_timed(|| {
+                rt.exec_f64(
+                    &artifact,
+                    &[F64Input::new(a, &dims), F64Input::new(b, &dims), F64Input::new(c, &dims)],
+                )
+                .expect("summa artifact execution")
+            });
+            c.copy_from_slice(&out[0]);
+        }
+        Backend::Modeled => {
+            crate::kernels::native::matmul_acc(a, b, c, edge, edge, edge);
+            env.compute(modeled_matmul_us(edge));
+        }
+        _ => {
+            env.compute_timed(|| crate::kernels::native::matmul_acc(a, b, c, edge, edge, edge));
+        }
+    }
+}
+
+/// One red-black sweep on a halo-padded strip; returns the local max delta.
+pub fn poisson_sweep(env: &mut ProcEnv, backend: Backend, strip: &mut [f64], rp2: usize, n: usize) -> f64 {
+    let artifact = format!("poisson_r{}_n{}", rp2 - 2, n);
+    match backend {
+        Backend::Pjrt if SharedRuntime::global().is_some_and(|rt| rt.available(&artifact)) => {
+            let rt = SharedRuntime::global().unwrap();
+            let dims = [rp2 as i64, n as i64];
+            let out = env.compute_timed(|| {
+                rt.exec_f64(&artifact, &[F64Input::new(strip, &dims)]).expect("poisson artifact")
+            });
+            strip.copy_from_slice(&out[0]);
+            out[1][0]
+        }
+        Backend::Modeled => {
+            let d = crate::kernels::native::rb_sweep(strip, rp2, n);
+            env.compute(modeled_sweep_us(rp2 - 2, n));
+            d
+        }
+        _ => env.compute_timed(|| crate::kernels::native::rb_sweep(strip, rp2, n)),
+    }
+}
+
+/// BPMF posterior batch sample.
+#[allow(clippy::too_many_arguments)]
+pub fn bpmf_batch(
+    env: &mut ProcEnv,
+    backend: Backend,
+    v: &[f64],
+    w: &[f64],
+    alpha: f64,
+    lam0: &[f64],
+    noise: &[f64],
+    batch: usize,
+    nnz: usize,
+    k: usize,
+    out: &mut [f64],
+) {
+    let artifact = format!("bpmf_b{batch}_n{nnz}_k{k}");
+    match backend {
+        Backend::Pjrt if SharedRuntime::global().is_some_and(|rt| rt.available(&artifact)) => {
+            let rt = SharedRuntime::global().unwrap();
+            let result = env.compute_timed(|| {
+                rt.exec_f64(
+                    &artifact,
+                    &[
+                        F64Input::new(v, &[batch as i64, nnz as i64, k as i64]),
+                        F64Input::new(w, &[batch as i64, nnz as i64]),
+                        F64Input::new(&[alpha], &[]),
+                        F64Input::new(lam0, &[k as i64]),
+                        F64Input::new(noise, &[batch as i64, k as i64]),
+                    ],
+                )
+                .expect("bpmf artifact")
+            });
+            out.copy_from_slice(&result[0]);
+        }
+        Backend::Modeled => {
+            crate::kernels::native::bpmf_posterior(v, w, alpha, lam0, noise, batch, nnz, k, out);
+            env.compute(modeled_bpmf_us(batch, nnz, k));
+        }
+        _ => {
+            env.compute_timed(|| {
+                crate::kernels::native::bpmf_posterior(v, w, alpha, lam0, noise, batch, nnz, k, out)
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{ClusterSpec, Preset, SimCluster};
+
+    #[test]
+    fn backends_agree_on_summa_block() {
+        if SharedRuntime::global().is_none() {
+            eprintln!("skipping backend-parity test: no artifacts");
+            return;
+        }
+        let spec = ClusterSpec::preset(Preset::VulcanSb, 1);
+        let out = SimCluster::new(spec).run(|env| {
+            if env.world_rank() != 0 {
+                return vec![];
+            }
+            let n = 64usize;
+            let a: Vec<f64> = (0..n * n).map(|i| ((i % 17) as f64) * 0.1).collect();
+            let b: Vec<f64> = (0..n * n).map(|i| ((i % 11) as f64) - 5.0).collect();
+            let mut c1: Vec<f64> = (0..n * n).map(|i| (i % 3) as f64).collect();
+            let mut c2 = c1.clone();
+            summa_block(env, Backend::Pjrt, &a, &b, &mut c1, n);
+            summa_block(env, Backend::Native, &a, &b, &mut c2, n);
+            c1.iter().zip(&c2).map(|(x, y)| (x - y).abs()).collect()
+        });
+        let diffs = &out.outputs[0];
+        assert!(!diffs.is_empty());
+        assert!(diffs.iter().all(|&d| d < 1e-9), "max diff {:?}", diffs.iter().cloned().fold(0.0, f64::max));
+    }
+
+    #[test]
+    fn compute_charges_vtime() {
+        let spec = ClusterSpec::preset(Preset::VulcanSb, 1);
+        let out = SimCluster::new(spec).run(|env| {
+            if env.world_rank() != 0 {
+                return 0.0;
+            }
+            let n = 32usize;
+            let a = vec![1.0f64; n * n];
+            let b = vec![1.0f64; n * n];
+            let mut c = vec![0.0f64; n * n];
+            let t0 = env.vclock();
+            summa_block(env, Backend::Native, &a, &b, &mut c, n);
+            assert_eq!(c[0], n as f64);
+            env.vclock() - t0
+        });
+        assert!(out.outputs[0] > 0.0);
+    }
+}

@@ -1,0 +1,102 @@
+//! The paper's three case-study kernels (§5.3) — SUMMA, 2D Poisson, BPMF —
+//! each in the three implementations the paper compares: pure MPI, hybrid
+//! MPI+MPI (our wrappers), and hybrid MPI+OpenMP (fine-grained loop
+//! parallelism, modelled by [`ompsim`]).
+//!
+//! Compute is real: either the AOT-compiled JAX/Pallas artifacts through
+//! PJRT ([`compute::Backend::Pjrt`]) or the bit-equivalent native rust
+//! paths ([`native`]); virtual time charges the measured thread CPU time.
+
+pub mod bpmf;
+pub mod compute;
+pub mod native;
+pub mod ompsim;
+pub mod poisson;
+pub mod summa;
+
+pub use compute::Backend;
+pub use ompsim::OmpModel;
+
+/// Which of the paper's three implementations to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// Standard MPI collectives, one rank per core.
+    PureMpi,
+    /// The paper's hybrid MPI+MPI wrappers, one rank per core.
+    HybridMpiMpi,
+    /// One rank per node + OpenMP fine-grained loop parallelism.
+    MpiOpenMp,
+}
+
+impl Variant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::PureMpi => "pure-mpi",
+            Variant::HybridMpiMpi => "mpi+mpi",
+            Variant::MpiOpenMp => "mpi+openmp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s {
+            "pure-mpi" | "mpi" => Some(Variant::PureMpi),
+            "mpi+mpi" | "hybrid" => Some(Variant::HybridMpiMpi),
+            "mpi+openmp" | "openmp" => Some(Variant::MpiOpenMp),
+            _ => None,
+        }
+    }
+}
+
+/// Per-rank timing decomposition of a kernel run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RankStats {
+    /// Virtual µs spent in computation.
+    pub comp_us: f64,
+    /// Virtual µs spent in the collective(s) under study.
+    pub comm_us: f64,
+    /// Total virtual µs of the timed region.
+    pub total_us: f64,
+    /// Iterations/phases executed.
+    pub iters: usize,
+    /// Workload-defined checksum for cross-variant validation.
+    pub checksum: f64,
+}
+
+/// Cluster-level kernel report (reduced over ranks).
+#[derive(Clone, Debug)]
+pub struct KernelReport {
+    pub variant: Variant,
+    pub world: usize,
+    pub nnodes: usize,
+    /// Max over ranks of the timed-region total (the kernel's makespan).
+    pub total_us: f64,
+    /// Max over ranks of compute time.
+    pub comp_us: f64,
+    /// Max over ranks of collective time.
+    pub comm_us: f64,
+    pub iters: usize,
+    pub checksum: f64,
+    pub wall: std::time::Duration,
+}
+
+impl KernelReport {
+    pub fn reduce(
+        variant: Variant,
+        nnodes: usize,
+        report: crate::coordinator::RunReport<RankStats>,
+    ) -> KernelReport {
+        let world = report.outputs.len();
+        let max = |f: fn(&RankStats) -> f64| report.outputs.iter().map(f).fold(0.0, f64::max);
+        KernelReport {
+            variant,
+            world,
+            nnodes,
+            total_us: max(|s| s.total_us),
+            comp_us: max(|s| s.comp_us),
+            comm_us: max(|s| s.comm_us),
+            iters: report.outputs[0].iters,
+            checksum: report.outputs.iter().map(|s| s.checksum).sum(),
+            wall: report.wall,
+        }
+    }
+}

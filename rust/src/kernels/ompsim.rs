@@ -1,0 +1,107 @@
+//! The MPI+OpenMP compute model (§3.1, §5.3).
+//!
+//! The paper's MPI+OpenMP baselines use *fine-grained* loop parallelism:
+//! one MPI process per node spawns `m` threads inside the computational
+//! loops. Its performance is governed by Amdahl's law plus per-region
+//! fork/join overhead — the "extra overheads from shared memory threading"
+//! the paper cites ([6–8]) for why this hybrid often fails to beat pure
+//! MPI even though it communicates less.
+//!
+//! We execute the node's whole computation for real on the host (one rank
+//! per node) and charge:
+//!
+//! `T_charged = T_cpu·(s + (1−s)/m) + r·fork_join`
+//!
+//! where `s` is the serial fraction outside the parallel loops, `m` the
+//! thread count, and `r` the number of parallel regions entered.
+
+use crate::mpi::env::{thread_cpu_us, ProcEnv};
+
+/// Fine-grained OpenMP cost model for one node's rank.
+#[derive(Clone, Copy, Debug)]
+pub struct OmpModel {
+    /// Threads per node (= cores per node in all paper configs).
+    pub threads: usize,
+    /// Serial fraction of the computational region (loop setup, scalar
+    /// sections the fine-grained approach does not parallelize).
+    pub serial_frac: f64,
+    /// Fork/join cost per parallel region (µs).
+    pub fork_join_us: f64,
+}
+
+impl OmpModel {
+    /// Defaults matched to the paper's observations (the MPI+OpenMP
+    /// compute bars in Figs. 17–19 exceed the pure-MPI ones).
+    pub fn new(threads: usize) -> OmpModel {
+        OmpModel { threads, serial_frac: 0.06, fork_join_us: 1.5 }
+    }
+
+    /// Parallel-efficiency multiplier applied to measured CPU time.
+    pub fn scale(&self) -> f64 {
+        self.serial_frac + (1.0 - self.serial_frac) / self.threads as f64
+    }
+
+    /// Run `f` (the node's whole compute for `regions` parallel regions),
+    /// charging the modelled parallel time to the virtual clock.
+    pub fn charge<R>(&self, env: &mut ProcEnv, regions: usize, f: impl FnOnce() -> R) -> R {
+        let t0 = thread_cpu_us();
+        let r = f();
+        let dt = (thread_cpu_us() - t0).max(0.0);
+        let charged = dt * env.state().compute_scale * self.scale() + regions as f64 * self.fork_join_us;
+        env.advance(charged);
+        r
+    }
+
+    /// Like [`OmpModel::charge`] but with a deterministic serial-time model
+    /// (`serial_us`) instead of measured CPU time — pairs with
+    /// [`Backend::Modeled`](super::compute::Backend::Modeled).
+    pub fn charge_modeled<R>(&self, env: &mut ProcEnv, regions: usize, serial_us: f64, f: impl FnOnce() -> R) -> R {
+        let r = f();
+        env.advance(serial_us * self.scale() + regions as f64 * self.fork_join_us);
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{ClusterSpec, Preset, SimCluster};
+
+    #[test]
+    fn scale_behaves_like_amdahl() {
+        let m16 = OmpModel::new(16);
+        let m1 = OmpModel::new(1);
+        assert!(m16.scale() < 1.0 / 8.0 + 0.07);
+        assert!((m1.scale() - 1.0).abs() < 1e-12);
+        // More threads never slower (in the scale factor).
+        assert!(OmpModel::new(24).scale() < m16.scale());
+    }
+
+    #[test]
+    fn charge_scales_measured_cpu() {
+        let spec = ClusterSpec::preset(Preset::VulcanSb, 1);
+        let out = SimCluster::new(spec).run(|env| {
+            if env.world_rank() != 0 {
+                return (0.0, 0.0);
+            }
+            let work = || {
+                let mut acc = 0u64;
+                for i in 0..2_000_000u64 {
+                    acc = acc.wrapping_add(i * i);
+                }
+                std::hint::black_box(acc)
+            };
+            let t0 = env.vclock();
+            env.compute_timed(work);
+            let serial = env.vclock() - t0;
+            let t1 = env.vclock();
+            OmpModel::new(16).charge(env, 1, work);
+            let parallel = env.vclock() - t1;
+            (serial, parallel)
+        });
+        let (serial, parallel) = out.outputs[0];
+        assert!(parallel < serial, "16 threads must be charged less: {parallel} vs {serial}");
+        // But not better than perfectly linear + overhead floor.
+        assert!(parallel > serial / 16.0);
+    }
+}

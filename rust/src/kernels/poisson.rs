@@ -1,0 +1,253 @@
+//! 2D Poisson solver (§5.3.2, Fig. 18).
+//!
+//! A square Laplace problem (boundary value 1, interior 0) decomposed by
+//! rows: each iteration runs a red-black Gauss-Seidel sweep on the local
+//! strip (the Pallas/native stencil kernel), exchanges halo rows with the
+//! adjacent ranks (plain `MPI_Send`/`MPI_Recv` in *all* variants — the
+//! paper's hybrid only replaces the collective), and allreduces the global
+//! maximum update delta (8 B — the small-message allreduce regime of
+//! Figs. 14–16) until convergence.
+
+use super::compute::{poisson_sweep, Backend};
+use super::ompsim::OmpModel;
+use super::{KernelReport, RankStats, Variant};
+use crate::coll::allreduce::{allreduce, AllreduceAlgo};
+use crate::coordinator::{ClusterSpec, SimCluster};
+use crate::hybrid::allreduce::{alloc_allreduce_win, hy_allreduce, AllreduceMethod};
+use crate::hybrid::{CommPackage, SyncScheme};
+use crate::mpi::env::{opcode, ProcEnv};
+use crate::mpi::{Datatype, ReduceOp};
+use crate::util::{cast_slice, to_bytes};
+
+/// Poisson configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PoissonCfg {
+    /// Grid edge (n × n interior points, f64).
+    pub n: usize,
+    /// Convergence threshold on the global max delta.
+    pub tol: f64,
+    /// Iteration cap (the paper iterates to convergence; we cap so every
+    /// config/variant runs the same bounded work — documented deviation).
+    pub max_iters: usize,
+    pub variant: Variant,
+    pub backend: Backend,
+    pub threads: usize,
+}
+
+impl PoissonCfg {
+    pub fn paper(n: usize, variant: Variant, backend: Backend, threads: usize) -> PoissonCfg {
+        PoissonCfg { n, tol: 1e-4, max_iters: 200, variant, backend, threads }
+    }
+}
+
+/// Run the solver; spec must give `p | n` rows-per-rank.
+pub fn run(spec: ClusterSpec, cfg: PoissonCfg) -> KernelReport {
+    let nnodes = spec.nnodes();
+    let report = SimCluster::new(spec).run(move |env| rank_program(env, cfg));
+    KernelReport::reduce(cfg.variant, nnodes, report)
+}
+
+fn rank_program(env: &mut ProcEnv, cfg: PoissonCfg) -> RankStats {
+    let w = env.world();
+    let p = w.size();
+    let me = w.rank();
+    let n = cfg.n;
+    assert_eq!(n % p, 0, "grid rows {n} must divide by ranks {p}");
+    let rows = n / p;
+    let rp2 = rows + 2;
+
+    // Strip with halo rows; boundary value 1 at the outer frame.
+    let mut strip = vec![0.0f64; rp2 * n];
+    for j in 0..n {
+        if me == 0 {
+            strip[j] = 1.0; // global top boundary lives in rank 0's halo
+        }
+        if me == p - 1 {
+            strip[(rp2 - 1) * n + j] = 1.0; // global bottom boundary
+        }
+    }
+    for i in 0..rp2 {
+        strip[i * n] = 1.0;
+        strip[i * n + n - 1] = 1.0;
+    }
+
+    // Hybrid allreduce state (8 B operands).
+    let pkg = if cfg.variant == Variant::HybridMpiMpi {
+        Some(CommPackage::create(env, &w))
+    } else {
+        None
+    };
+    let mut hywin = pkg.as_ref().map(|pkg| alloc_allreduce_win(env, pkg, 8));
+    let omp = OmpModel { threads: cfg.threads, ..OmpModel::new(cfg.threads) };
+    let halo_tag = env.next_coll_tag(&w, opcode::HALO);
+
+    let mut stats = RankStats::default();
+    env.harness_sync(&w);
+    let t_start = env.vclock();
+
+    for _ in 0..cfg.max_iters {
+        // ---- halo exchange + sweep (the "Gauss-Seidel module") --------
+        let t0 = env.vclock();
+        if p > 1 {
+            // Exchange with up (me-1) and down (me+1); boundary ranks keep
+            // their fixed halo rows.
+            let top_row = strip[n..2 * n].to_vec();
+            let bottom_row = strip[rows * n..(rows + 1) * n].to_vec();
+            if me > 0 {
+                env.send(&w, me - 1, halo_tag, to_bytes(&top_row));
+            }
+            if me + 1 < p {
+                env.send(&w, me + 1, halo_tag, to_bytes(&bottom_row));
+            }
+            if me + 1 < p {
+                let mut buf = vec![0u8; n * 8];
+                env.recv_into(&w, Some(me + 1), halo_tag, &mut buf);
+                strip[(rp2 - 1) * n..rp2 * n].copy_from_slice(&cast_slice::<f64>(&buf));
+            }
+            if me > 0 {
+                let mut buf = vec![0u8; n * 8];
+                env.recv_into(&w, Some(me - 1), halo_tag, &mut buf);
+                strip[..n].copy_from_slice(&cast_slice::<f64>(&buf));
+            }
+        }
+        let local_delta = if cfg.variant == Variant::MpiOpenMp {
+            if cfg.backend == Backend::Modeled {
+                omp.charge_modeled(env, 2, super::compute::modeled_sweep_us(rows, n), || {
+                    crate::kernels::native::rb_sweep(&mut strip, rp2, n)
+                })
+            } else {
+                omp.charge(env, 2, || crate::kernels::native::rb_sweep(&mut strip, rp2, n))
+            }
+        } else {
+            poisson_sweep(env, cfg.backend, &mut strip, rp2, n)
+        };
+        stats.comp_us += env.vclock() - t0;
+
+        // ---- the 8-byte max-allreduce (the measured collective) -------
+        // Align clocks (uncharged) so comm_us measures the collective
+        // itself, not the compute skew of the slowest rank — the skew
+        // still shows up in total_us, attributed to neither bucket.
+        env.harness_sync(&w);
+        let t1 = env.vclock();
+        let global_delta = match (&pkg, &mut hywin) {
+            (Some(pkg), Some(win)) => {
+                let off = win.local_ptr(pkg.shmem.rank(), 8);
+                win.store(env, off, to_bytes(&[local_delta]));
+                let g = hy_allreduce(
+                    env,
+                    pkg,
+                    win,
+                    Datatype::F64,
+                    ReduceOp::Max,
+                    8,
+                    AllreduceMethod::Tuned,
+                    SyncScheme::Spin,
+                );
+                let v = win.load(env, g, 8);
+                cast_slice::<f64>(&v)[0]
+            }
+            _ => {
+                let mut buf = to_bytes(&[local_delta]).to_vec();
+                allreduce(env, &w, Datatype::F64, ReduceOp::Max, &mut buf, AllreduceAlgo::Auto);
+                cast_slice::<f64>(&buf)[0]
+            }
+        };
+        stats.comm_us += env.vclock() - t1;
+        stats.iters += 1;
+
+        if global_delta < cfg.tol {
+            break;
+        }
+        // Hybrid: ranks must not overwrite their input slots while a slow
+        // sibling still reads G — the next store targets a different slot
+        // region than G, but the red sync inside the next hy_allreduce
+        // (method 2) or the reduce (method 1) orders it. For method-2 the
+        // barrier precedes leader reads, so per-slot writes are safe.
+    }
+    stats.total_us = env.vclock() - t_start;
+    stats.checksum = strip[n..(rows + 1) * n].iter().sum();
+
+    if let (Some(pkg), Some(win)) = (pkg, hywin.take()) {
+        env.barrier(&pkg.shmem);
+        win.free(env, &pkg);
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Preset;
+
+    fn spec(nodes: usize, per: usize) -> ClusterSpec {
+        let mut s = ClusterSpec::preset(Preset::VulcanSb, nodes.max(1));
+        s.nodes = vec![per; nodes];
+        s
+    }
+
+    #[test]
+    fn variants_agree_and_converge() {
+        let n = 32;
+        let mut checksums = Vec::new();
+        for (variant, nodes, per) in [
+            (Variant::PureMpi, 2, 4),
+            (Variant::HybridMpiMpi, 2, 4),
+            (Variant::MpiOpenMp, 8, 1),
+        ] {
+            let cfg = PoissonCfg {
+                n,
+                tol: 1e-3,
+                max_iters: 500,
+                variant,
+                backend: Backend::Native,
+                threads: 4,
+            };
+            let rep = run(spec(nodes, per), cfg);
+            assert!(rep.iters < 500, "{variant:?} should converge, ran {}", rep.iters);
+            checksums.push((variant, rep.iters, rep.checksum));
+        }
+        // Same math in every variant: identical iteration counts and sums.
+        let (_, i0, c0) = checksums[0];
+        for &(v, i, c) in &checksums {
+            assert_eq!(i, i0, "{v:?} iterations");
+            assert!((c - c0).abs() < 1e-9, "{v:?} checksum {c} vs {c0}");
+        }
+    }
+
+    #[test]
+    fn hybrid_allreduce_cheaper_for_small_messages() {
+        let n = 32;
+        let cfg = |variant| PoissonCfg {
+            n,
+            tol: 0.0, // never converge -> fixed 50 iterations
+            max_iters: 50,
+            variant,
+            backend: Backend::Native,
+            threads: 1,
+        };
+        let pure = run(spec(2, 8), cfg(Variant::PureMpi));
+        let hy = run(spec(2, 8), cfg(Variant::HybridMpiMpi));
+        assert_eq!(pure.iters, 50);
+        assert!(
+            hy.comm_us < pure.comm_us,
+            "hybrid 8B allreduce {} must beat pure {}",
+            hy.comm_us,
+            pure.comm_us
+        );
+    }
+
+    #[test]
+    fn solution_approaches_boundary_value() {
+        let cfg = PoissonCfg {
+            n: 16,
+            tol: 1e-6,
+            max_iters: 2000,
+            variant: Variant::PureMpi,
+            backend: Backend::Native,
+            threads: 1,
+        };
+        let rep = run(spec(1, 4), cfg);
+        // Interior sum -> n*n (all ones) as the Laplace solution is u = 1.
+        assert!((rep.checksum - 256.0).abs() < 1.0, "checksum {}", rep.checksum);
+    }
+}

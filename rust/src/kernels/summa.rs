@@ -1,0 +1,252 @@
+//! SUMMA — Scalable Universal Matrix Multiplication (§5.3.1, Fig. 17).
+//!
+//! `C = A·B` on a √p × √p process grid: in phase k every grid row
+//! broadcasts its block of A's k-th block-column along the row
+//! communicator and every grid column broadcasts B's k-th block-row along
+//! the column communicator, then each rank accumulates the local product.
+//! Two broadcasts per phase — "a typical example of supporting multiple
+//! communicators in our design".
+//!
+//! Variants: pure MPI (`MPI_Bcast` on the sub-communicators), hybrid
+//! MPI+MPI (`Wrapper_Hy_Bcast` with per-sub-communicator `comm_package`s,
+//! windows and translation tables), and MPI+OpenMP (one rank per node,
+//! fine-grained loop parallelism via [`OmpModel`]).
+
+use super::compute::{summa_block, Backend};
+use super::ompsim::OmpModel;
+use super::{KernelReport, RankStats, Variant};
+use crate::coll::bcast::{bcast, BcastAlgo};
+use crate::coordinator::{ClusterSpec, SimCluster};
+use crate::hybrid::{hy_bcast, CommPackage, SyncScheme, TransTables};
+use crate::mpi::env::ProcEnv;
+use crate::util::from_bytes;
+
+/// SUMMA configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SummaCfg {
+    /// Global matrix edge (n × n, f64).
+    pub n: usize,
+    pub variant: Variant,
+    pub backend: Backend,
+    /// Threads per node for the OpenMP variant.
+    pub threads: usize,
+}
+
+/// Deterministic global matrix entries.
+fn a_entry(i: usize, j: usize) -> f64 {
+    ((i * 31 + j * 17) % 23) as f64 * 0.5 - 5.0
+}
+
+fn b_entry(i: usize, j: usize) -> f64 {
+    ((i * 13 + j * 7) % 19) as f64 * 0.25 - 2.0
+}
+
+fn isqrt(p: usize) -> usize {
+    let q = (p as f64).sqrt().round() as usize;
+    assert_eq!(q * q, p, "SUMMA needs a square process count, got {p}");
+    q
+}
+
+/// Run SUMMA on a cluster. For [`Variant::MpiOpenMp`] pass a spec with one
+/// rank per node (the launcher does this).
+pub fn run(spec: ClusterSpec, cfg: SummaCfg) -> KernelReport {
+    let nnodes = spec.nnodes();
+    let report = SimCluster::new(spec).run(move |env| rank_program(env, cfg));
+    KernelReport::reduce(cfg.variant, nnodes, report)
+}
+
+fn rank_program(env: &mut ProcEnv, cfg: SummaCfg) -> RankStats {
+    let w = env.world();
+    let p = w.size();
+    let me = w.rank();
+    let q = isqrt(p);
+    assert_eq!(cfg.n % q, 0, "matrix edge {} must divide by grid edge {q}", cfg.n);
+    let nb = cfg.n / q;
+    let (row, col) = (me / q, me % q);
+    let row_comm = env.split(&w, row as i64, col as i64).unwrap();
+    let col_comm = env.split(&w, col as i64, row as i64).unwrap();
+
+    // Local blocks.
+    let my_a: Vec<f64> = (0..nb * nb)
+        .map(|t| a_entry(row * nb + t / nb, col * nb + t % nb))
+        .collect();
+    let my_b: Vec<f64> = (0..nb * nb)
+        .map(|t| b_entry(row * nb + t / nb, col * nb + t % nb))
+        .collect();
+    let mut c = vec![0.0f64; nb * nb];
+    let blk = nb * nb * 8;
+
+    // Hybrid state: packages/windows/tables per sub-communicator.
+    let mut hybrid = if cfg.variant == Variant::HybridMpiMpi {
+        let rp = CommPackage::create(env, &row_comm);
+        let rw = rp.alloc_shared(env, blk, 1, 1);
+        let rt = TransTables::create(env, &rp);
+        let cp = CommPackage::create(env, &col_comm);
+        let cw = cp.alloc_shared(env, blk, 1, 1);
+        let ct = TransTables::create(env, &cp);
+        Some(((rp, rw, rt), (cp, cw, ct)))
+    } else {
+        None
+    };
+    let omp = OmpModel { threads: cfg.threads, ..OmpModel::new(cfg.threads) };
+
+    let mut stats = RankStats::default();
+    env.harness_sync(&w);
+    let t_start = env.vclock();
+
+    let mut abuf = vec![0.0f64; nb * nb];
+    let mut bbuf = vec![0.0f64; nb * nb];
+    for k in 0..q {
+        // ---- the two broadcasts (the measured collective) -------------
+        env.harness_sync(&w); // skew-free comm measurement (see poisson.rs)
+        let t0 = env.vclock();
+        match (&mut hybrid, cfg.variant) {
+            (Some(((rp, rw, rt), (cp, cw, ct))), Variant::HybridMpiMpi) => {
+                let a_root = k; // row_comm rank k owns block-column k
+                let adata = if row_comm.rank() == a_root {
+                    Some(crate::util::to_bytes(&my_a))
+                } else {
+                    None
+                };
+                hy_bcast(env, rp, rw, rt, a_root, adata, blk, SyncScheme::Spin);
+                let b_root = k;
+                let bdata = if col_comm.rank() == b_root {
+                    Some(crate::util::to_bytes(&my_b))
+                } else {
+                    None
+                };
+                hy_bcast(env, cp, cw, ct, b_root, bdata, blk, SyncScheme::Spin);
+            }
+            _ => {
+                if row_comm.rank() == k {
+                    abuf.copy_from_slice(&my_a);
+                }
+                bcast(env, &row_comm, k, crate::util::cast_slice_mut(&mut abuf), BcastAlgo::Auto);
+                if col_comm.rank() == k {
+                    bbuf.copy_from_slice(&my_b);
+                }
+                bcast(env, &col_comm, k, crate::util::cast_slice_mut(&mut bbuf), BcastAlgo::Auto);
+            }
+        }
+        stats.comm_us += env.vclock() - t0;
+
+        // ---- local accumulate -----------------------------------------
+        let t1 = env.vclock();
+        match (&hybrid, cfg.variant) {
+            (Some(((_, rw, _), (_, cw, _))), Variant::HybridMpiMpi) => {
+                // Children read the shared copies in place (no extra
+                // on-node copies — the design's point).
+                let a: &[f64] = from_bytes(unsafe { rw.view(0, blk) });
+                let b: &[f64] = from_bytes(unsafe { cw.view(0, blk) });
+                summa_block(env, cfg.backend, a, b, &mut c, nb);
+            }
+            (_, Variant::MpiOpenMp) => {
+                if cfg.backend == Backend::Modeled {
+                    omp.charge_modeled(env, 1, super::compute::modeled_matmul_us(nb), || {
+                        crate::kernels::native::matmul_acc(&abuf, &bbuf, &mut c, nb, nb, nb)
+                    });
+                } else {
+                    omp.charge(env, 1, || {
+                        crate::kernels::native::matmul_acc(&abuf, &bbuf, &mut c, nb, nb, nb)
+                    });
+                }
+            }
+            _ => {
+                summa_block(env, cfg.backend, &abuf, &bbuf, &mut c, nb);
+            }
+        }
+        stats.comp_us += env.vclock() - t1;
+        stats.iters += 1;
+
+        // Hybrid: the next phase's roots will overwrite both shared
+        // windows; all readers must be done first (red sync across the
+        // grid — covers both the row and column windows).
+        if hybrid.is_some() && k + 1 < q {
+            env.barrier(&w);
+        }
+    }
+    stats.total_us = env.vclock() - t_start;
+    stats.checksum = c.iter().sum();
+
+    if let Some(((rp, rw, _), (cp, cw, _))) = hybrid.take() {
+        rw.free(env, &rp);
+        cw.free(env, &cp);
+    }
+    stats
+}
+
+/// The verification oracle: checksum of the full `C = A·B` for edge `n`.
+pub fn expected_checksum(n: usize) -> f64 {
+    // sum(C) = Σ_k (Σ_i a_entry(i,k)) · … no — sum(C) = Σ_{i,j,k} a(i,k)b(k,j)
+    //        = Σ_k (Σ_i a(i,k)) (Σ_j b(k,j)).
+    let mut total = 0.0;
+    for k in 0..n {
+        let sa: f64 = (0..n).map(|i| a_entry(i, k)).sum();
+        let sb: f64 = (0..n).map(|j| b_entry(k, j)).sum();
+        total += sa * sb;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Preset;
+
+    fn spec(nodes: usize, per: usize) -> ClusterSpec {
+        let mut s = ClusterSpec::preset(Preset::VulcanSb, nodes.max(1));
+        s.nodes = vec![per; nodes];
+        s
+    }
+
+    #[test]
+    fn all_variants_compute_the_same_product() {
+        let n = 64;
+        let want = expected_checksum(n);
+        for (variant, nodes, per) in [
+            (Variant::PureMpi, 2, 2),    // 4 ranks, 2x2 grid
+            (Variant::HybridMpiMpi, 2, 2),
+            (Variant::MpiOpenMp, 4, 1),  // 4 nodes x 1 rank
+        ] {
+            let cfg = SummaCfg { n, variant, backend: Backend::Native, threads: 4 };
+            let rep = run(spec(nodes, per), cfg);
+            assert!(
+                (rep.checksum - want).abs() < 1e-6 * want.abs().max(1.0),
+                "{variant:?}: {} vs {want}",
+                rep.checksum
+            );
+            assert_eq!(rep.iters, 2);
+            assert!(rep.total_us > 0.0);
+            assert!(rep.comp_us > 0.0);
+        }
+    }
+
+    #[test]
+    fn hybrid_bcast_cheaper_than_pure() {
+        let n = 128; // 512 KB-class broadcasts at 2x2? 64x64 blocks = 32 KB
+        let pure = run(
+            spec(2, 8),
+            SummaCfg { n, variant: Variant::PureMpi, backend: Backend::Native, threads: 1 },
+        );
+        let hy = run(
+            spec(2, 8),
+            SummaCfg { n, variant: Variant::HybridMpiMpi, backend: Backend::Native, threads: 1 },
+        );
+        assert!((pure.checksum - hy.checksum).abs() < 1e-6);
+        assert!(
+            hy.comm_us < pure.comm_us,
+            "hybrid bcast {} must beat pure {}",
+            hy.comm_us,
+            pure.comm_us
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "square process count")]
+    fn non_square_grid_rejected() {
+        run(
+            spec(1, 3),
+            SummaCfg { n: 6, variant: Variant::PureMpi, backend: Backend::Native, threads: 1 },
+        );
+    }
+}

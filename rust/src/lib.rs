@@ -1,0 +1,51 @@
+//! # hympi — Collectives in hybrid MPI+MPI code
+//!
+//! A full reproduction of *"Collectives in hybrid MPI+MPI code: design,
+//! practice and performance"* (Zhou, Gracia, Zhou, Schneider — HLRS, 2020).
+//!
+//! The paper proposes collective communication operations (allgather,
+//! broadcast, allreduce) designed for the **hybrid MPI+MPI** programming
+//! model: within a shared-memory node, all ranks share *one* copy of the
+//! collective's result inside an MPI-3 shared-memory window; only one
+//! *leader* rank per node takes part in the across-node collective over a
+//! *bridge* communicator, and the remaining *children* access the result
+//! via direct load/store under explicit node-level synchronization.
+//!
+//! Because the paper's testbeds (a Cray XC40 and a NEC InfiniBand cluster)
+//! are not available, the library ships its own substrate: [`mpi`] is a
+//! **simulated multi-node MPI cluster** in which every rank is a real OS
+//! thread with a virtual clock; payloads really move (results are
+//! bit-checked) while latency is charged by a calibrated LogGP/α-β network
+//! model ([`mpi::net`]). On top of it:
+//!
+//! - [`coll`] — the *pure MPI* tuned collective baselines (binomial /
+//!   split-binary-tree / pipeline broadcast, ring / recursive-doubling /
+//!   Bruck allgather, recursive-doubling / Rabenseifner allreduce) with
+//!   Open-MPI-style message-size switch points,
+//! - [`hybrid`] — the paper's contribution: the wrapper primitives of §4.1
+//!   and the hybrid collectives of §4.2–§4.4 with the synchronization
+//!   schemes of §4.5 (barrier vs. status-flag spinning),
+//! - [`coordinator`] — cluster presets, rank placement, the thread-per-rank
+//!   engine, the OSU-style measurement harness and report writers,
+//! - [`runtime`] — a PJRT client (via the `xla` crate) that loads the
+//!   AOT-compiled JAX/Pallas compute kernels from `artifacts/*.hlo.txt`,
+//! - [`kernels`] — the paper's three case studies (SUMMA, 2D Poisson
+//!   solver, BPMF) in all three variants (pure MPI, hybrid MPI+MPI,
+//!   hybrid MPI+OpenMP),
+//! - [`figures`] — one generator per table/figure of the paper's
+//!   evaluation section (Table 1–2, Fig. 12–19),
+//! - [`util`] — self-contained RNG, statistics, a criterion-style bench
+//!   harness and a property-testing helper (the build is fully offline, so
+//!   these substrates are implemented here rather than pulled in).
+
+pub mod coll;
+pub mod coordinator;
+pub mod figures;
+pub mod hybrid;
+pub mod kernels;
+pub mod mpi;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,151 @@
+//! `hympi` — the launcher.
+//!
+//! ```text
+//! hympi figures <name|all> [--out DIR] [--scale X] [--fast]
+//! hympi microbench <allgather|bcast|allreduce> [--preset P] [--nodes N]
+//!                  [--bytes B] [--fast]
+//! hympi kernel <summa|poisson|bpmf> [--variant V] [--nodes N] [--n N]
+//!              [--backend B] [--scale X]
+//! hympi info
+//! ```
+//!
+//! (Argument parsing is hand-rolled: the build is fully offline and the
+//! surface is small.)
+
+use hympi::coordinator::{ClusterSpec, Preset};
+use hympi::figures::{self, FigOpts};
+use hympi::hybrid::SyncScheme;
+use hympi::kernels::{self, Backend, Variant};
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn opt<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage:\n  hympi figures <table1|table2|fig12..fig19|all> [--out DIR] [--scale X] [--fast]\n  \
+         hympi microbench <allgather|bcast|allreduce> [--preset vulcan-sb|vulcan-hsw|hazelhen] [--nodes N] [--bytes B] [--fast]\n  \
+         hympi kernel <summa|poisson|bpmf> [--variant pure-mpi|mpi+mpi|mpi+openmp] [--nodes N] [--n N] [--backend auto|pjrt|native] [--scale X]\n  \
+         hympi info"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> hympi::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("figures") => {
+            let name = args.get(1).map(|s| s.as_str()).unwrap_or("all");
+            let opts = FigOpts {
+                out_dir: opt(&args, "--out").unwrap_or("reports").to_string(),
+                scale: opt(&args, "--scale").and_then(|v| v.parse().ok()).unwrap_or(1.0),
+                fast: flag(&args, "--fast"),
+            };
+            if name == "all" {
+                figures::run_all(&opts)?;
+            } else {
+                figures::run(name, &opts)?;
+            }
+        }
+        Some("microbench") => {
+            let op = args.get(1).map(|s| s.as_str()).unwrap_or_else(|| usage());
+            let preset = Preset::parse(opt(&args, "--preset").unwrap_or("vulcan-sb"))
+                .unwrap_or_else(|| usage());
+            let nodes: usize = opt(&args, "--nodes").and_then(|v| v.parse().ok()).unwrap_or(2);
+            let bytes: usize = opt(&args, "--bytes").and_then(|v| v.parse().ok()).unwrap_or(800);
+            let fast = flag(&args, "--fast");
+            let spec = || ClusterSpec::preset(preset, nodes);
+            use hympi::figures::common as mb;
+            let (pure, hy) = match op {
+                "allgather" => (
+                    mb::pure_allgather(spec(), bytes, fast),
+                    mb::hy_allgather(spec(), bytes, SyncScheme::Spin, fast),
+                ),
+                "bcast" => (
+                    mb::pure_bcast(spec(), bytes, fast),
+                    mb::hy_bcast(spec(), bytes, SyncScheme::Spin, fast),
+                ),
+                "allreduce" => (
+                    mb::pure_allreduce(spec(), bytes, fast),
+                    mb::hy_allreduce(
+                        spec(),
+                        bytes,
+                        hympi::hybrid::AllreduceMethod::Tuned,
+                        SyncScheme::Spin,
+                        fast,
+                    ),
+                ),
+                _ => usage(),
+            };
+            println!(
+                "{op} on {} x {} ({} B): MPI {pure:.2} us | hybrid {hy:.2} us | speedup {:+.1}%",
+                nodes,
+                preset.cores_per_node(),
+                bytes,
+                (pure - hy) / pure * 100.0
+            );
+        }
+        Some("kernel") => {
+            let which = args.get(1).map(|s| s.as_str()).unwrap_or_else(|| usage());
+            let variant = Variant::parse(opt(&args, "--variant").unwrap_or("mpi+mpi"))
+                .unwrap_or_else(|| usage());
+            let nodes: usize = opt(&args, "--nodes").and_then(|v| v.parse().ok()).unwrap_or(2);
+            let backend =
+                Backend::parse(opt(&args, "--backend").unwrap_or("auto")).unwrap_or_else(|| usage());
+            let scale: f64 = opt(&args, "--scale").and_then(|v| v.parse().ok()).unwrap_or(1.0);
+            let preset = Preset::parse(opt(&args, "--preset").unwrap_or("vulcan-sb"))
+                .unwrap_or_else(|| usage());
+            let spec = if variant == Variant::MpiOpenMp {
+                let mut s = ClusterSpec::preset(preset, nodes);
+                s.nodes = vec![1; nodes];
+                s
+            } else {
+                ClusterSpec::preset(preset, nodes)
+            };
+            let threads = preset.cores_per_node();
+            let rep = match which {
+                "summa" => {
+                    let n: usize = opt(&args, "--n").and_then(|v| v.parse().ok()).unwrap_or(512);
+                    kernels::summa::run(spec, kernels::summa::SummaCfg { n, variant, backend, threads })
+                }
+                "poisson" => {
+                    let n: usize = opt(&args, "--n").and_then(|v| v.parse().ok()).unwrap_or(256);
+                    kernels::poisson::run(
+                        spec,
+                        kernels::poisson::PoissonCfg::paper(n, variant, backend, threads),
+                    )
+                }
+                "bpmf" => kernels::bpmf::run(
+                    spec,
+                    kernels::bpmf::BpmfCfg::paper(scale, variant, backend, threads),
+                ),
+                _ => usage(),
+            };
+            println!(
+                "{which} [{}] on {} nodes: comp {:.1} us | comm {:.1} us | total {:.1} us | iters {} | checksum {:.6e} | wall {:?}",
+                rep.variant.name(),
+                rep.nnodes,
+                rep.comp_us,
+                rep.comm_us,
+                rep.total_us,
+                rep.iters,
+                rep.checksum,
+                rep.wall,
+            );
+        }
+        Some("info") => {
+            println!("hympi — hybrid MPI+MPI collectives reproduction");
+            println!("presets: vulcan-sb (16c/IB), vulcan-hsw (24c/IB), hazelhen (24c/Aries)");
+            match hympi::runtime::SharedRuntime::global() {
+                Some(_) => println!("artifacts: found (PJRT backend available)"),
+                None => println!("artifacts: NOT found — run `make artifacts` (native fallback active)"),
+            }
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

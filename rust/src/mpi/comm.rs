@@ -1,0 +1,108 @@
+//! Communicators: ordered process groups with a private message context.
+//!
+//! A [`Communicator`] is a cheap handle (id + shared member table). Rank
+//! order inside a split communicator follows MPI semantics: sorted by the
+//! `(key, world_rank)` pair supplied to `split`.
+
+use std::sync::Arc;
+
+/// Color value meaning "give me no communicator" (`MPI_UNDEFINED`).
+pub const UNDEFINED: i64 = -1;
+
+/// An ordered group of world ranks with a unique message context id.
+#[derive(Clone, Debug)]
+pub struct Communicator {
+    id: u64,
+    /// World rank per communicator rank, in communicator-rank order.
+    members: Arc<Vec<usize>>,
+    /// This process's rank within the communicator.
+    my_rank: usize,
+    /// Whether the group spans more than one shared-memory node
+    /// (precomputed — selects the barrier cost tier).
+    spans_nodes: bool,
+}
+
+impl Communicator {
+    pub(crate) fn new(id: u64, members: Arc<Vec<usize>>, my_rank: usize, spans_nodes: bool) -> Communicator {
+        debug_assert_eq!(members[my_rank], members[my_rank]); // bounds check
+        Communicator { id, members, my_rank, spans_nodes }
+    }
+
+    /// The world communicator over `world` ranks, for rank `me` (id 0).
+    pub(crate) fn world(world: usize, me: usize, spans_nodes: bool) -> Communicator {
+        Communicator {
+            id: 0,
+            members: Arc::new((0..world).collect()),
+            my_rank: me,
+            spans_nodes,
+        }
+    }
+
+    /// Context id (unique per communicator across the cluster).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// My rank within this communicator (`MPI_Comm_rank`).
+    pub fn rank(&self) -> usize {
+        self.my_rank
+    }
+
+    /// Number of members (`MPI_Comm_size`).
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+
+    /// World rank of communicator rank `r`.
+    pub fn world_of(&self, r: usize) -> usize {
+        self.members[r]
+    }
+
+    /// Communicator rank of world rank `w`, if a member.
+    pub fn rank_of_world(&self, w: usize) -> Option<usize> {
+        // Member tables are small and this is not on the data path;
+        // linear scan keeps the handle allocation-free.
+        self.members.iter().position(|&m| m == w)
+    }
+
+    /// Member table in communicator-rank order.
+    pub fn members(&self) -> &[usize] {
+        &self.members
+    }
+
+    pub(crate) fn members_arc(&self) -> Arc<Vec<usize>> {
+        self.members.clone()
+    }
+
+    /// Does the group span multiple shared-memory nodes?
+    pub fn spans_nodes(&self) -> bool {
+        self.spans_nodes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_comm_identity_mapping() {
+        let c = Communicator::world(8, 3, true);
+        assert_eq!(c.id(), 0);
+        assert_eq!(c.size(), 8);
+        assert_eq!(c.rank(), 3);
+        assert_eq!(c.world_of(5), 5);
+        assert_eq!(c.rank_of_world(6), Some(6));
+    }
+
+    #[test]
+    fn split_comm_mapping() {
+        let members = Arc::new(vec![4usize, 9, 17]);
+        let c = Communicator::new(3, members, 1, false);
+        assert_eq!(c.size(), 3);
+        assert_eq!(c.world_of(0), 4);
+        assert_eq!(c.world_of(2), 17);
+        assert_eq!(c.rank_of_world(9), Some(1));
+        assert_eq!(c.rank_of_world(5), None);
+        assert!(!c.spans_nodes());
+    }
+}

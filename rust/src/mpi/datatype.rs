@@ -1,0 +1,71 @@
+//! Element datatypes for collective payloads (`MPI_Datatype` analogue).
+
+/// Supported element types. The paper's benchmarks use doubles throughout;
+/// the reduction machinery supports the full set for generality.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Datatype {
+    U8,
+    I32,
+    I64,
+    F32,
+    F64,
+}
+
+impl Datatype {
+    /// Size of one element in bytes (`MPI_Type_size`).
+    pub const fn size(&self) -> usize {
+        match self {
+            Datatype::U8 => 1,
+            Datatype::I32 | Datatype::F32 => 4,
+            Datatype::I64 | Datatype::F64 => 8,
+        }
+    }
+
+    /// Number of elements in `bytes` bytes; panics on remainder.
+    pub fn count(&self, bytes: usize) -> usize {
+        let sz = self.size();
+        assert_eq!(bytes % sz, 0, "{bytes} bytes is not a whole number of {self:?}");
+        bytes / sz
+    }
+
+    pub const fn name(&self) -> &'static str {
+        match self {
+            Datatype::U8 => "u8",
+            Datatype::I32 => "i32",
+            Datatype::I64 => "i64",
+            Datatype::F32 => "f32",
+            Datatype::F64 => "f64",
+        }
+    }
+}
+
+impl std::fmt::Display for Datatype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(Datatype::U8.size(), 1);
+        assert_eq!(Datatype::I32.size(), 4);
+        assert_eq!(Datatype::F32.size(), 4);
+        assert_eq!(Datatype::I64.size(), 8);
+        assert_eq!(Datatype::F64.size(), 8);
+    }
+
+    #[test]
+    fn count_divides() {
+        assert_eq!(Datatype::F64.count(800), 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a whole number")]
+    fn count_rejects_remainder() {
+        Datatype::F64.count(12);
+    }
+}

@@ -1,0 +1,46 @@
+//! The simulated-cluster MPI substrate.
+//!
+//! This module is the stand-in for the MPI library + physical cluster of
+//! the paper's testbeds. Every rank is a real OS thread; every payload
+//! really moves (so collective results are bit-checkable); *latency* is
+//! virtual, charged by the α-β/LogGP-style model in [`net`].
+//!
+//! Correspondence with MPI entities:
+//!
+//! | MPI | here |
+//! |---|---|
+//! | `MPI_Comm` | [`comm::Communicator`] |
+//! | `MPI_Comm_split` / `_split_type` | [`env::ProcEnv::split`] / [`env::ProcEnv::split_type_shared`] |
+//! | `MPI_Send` / `MPI_Recv` / `MPI_Sendrecv` | [`env::ProcEnv::send`] / [`env::ProcEnv::recv`] / [`env::ProcEnv::sendrecv`] |
+//! | `MPI_Barrier` | [`env::ProcEnv::barrier`] |
+//! | `MPI_Win_allocate_shared` | [`env::ProcEnv::win_allocate_shared`] |
+//! | `MPI_Win_shared_query` | [`win::SharedWindow::segment`] |
+//! | `MPI_Win_sync` | [`env::ProcEnv::win_sync`] |
+//! | `MPI_Datatype` | [`datatype::Datatype`] |
+//! | `MPI_Op` | [`op::ReduceOp`] |
+
+pub mod comm;
+pub mod datatype;
+pub mod env;
+pub mod msg;
+pub mod net;
+pub mod op;
+pub mod state;
+pub mod sync;
+pub mod topo;
+pub mod win;
+
+pub use comm::Communicator;
+pub use datatype::Datatype;
+pub use env::ProcEnv;
+pub use net::NetModel;
+pub use op::ReduceOp;
+pub use topo::{Placement, Topology};
+pub use win::SharedWindow;
+
+/// Reserved tag space: collective ops use `(seq << 16) | op_code`; user
+/// point-to-point tags are offset by this bit so the spaces never collide.
+pub const USER_TAG_BASE: i64 = 1 << 62;
+
+/// Wildcard source for [`env::ProcEnv::recv`] (`MPI_ANY_SOURCE`).
+pub const ANY_SOURCE: Option<usize> = None;

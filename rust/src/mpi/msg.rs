@@ -1,0 +1,144 @@
+//! Message envelopes and per-rank mailboxes.
+//!
+//! Every rank owns one mailbox; senders push envelopes, the owner matches
+//! on `(source, tag, communicator)` in FIFO order per matching triple —
+//! the non-overtaking rule of MPI point-to-point semantics. Blocking is
+//! condvar-based: the host has a single CPU, so spinning would steal the
+//! producer's timeslice (see DESIGN.md).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A message in flight. `sent_at` is the sender's virtual clock at
+/// injection time; the receiver combines it with the transfer model to
+/// compute arrival time.
+#[derive(Debug)]
+pub struct Msg {
+    pub src: usize,
+    pub tag: i64,
+    pub comm: u64,
+    pub sent_at: f64,
+    /// Shared payload: fan-out senders (tree broadcasts) clone the Arc
+    /// instead of the bytes — §Perf optimization 1 in EXPERIMENTS.md.
+    pub data: Arc<Vec<u8>>,
+}
+
+/// Matching criteria for a receive.
+#[derive(Clone, Copy, Debug)]
+pub struct Matcher {
+    /// `None` = `MPI_ANY_SOURCE`.
+    pub src: Option<usize>,
+    pub tag: i64,
+    pub comm: u64,
+}
+
+impl Matcher {
+    #[inline]
+    fn matches(&self, m: &Msg) -> bool {
+        m.comm == self.comm && m.tag == self.tag && self.src.map_or(true, |s| s == m.src)
+    }
+}
+
+/// One rank's incoming queue.
+#[derive(Default)]
+pub struct Mailbox {
+    q: Mutex<VecDeque<Msg>>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    pub fn new() -> Mailbox {
+        Mailbox { q: Mutex::new(VecDeque::new()), cv: Condvar::new() }
+    }
+
+    /// Deliver a message (called by the sender's thread).
+    pub fn post(&self, msg: Msg) {
+        let mut q = self.q.lock().unwrap();
+        q.push_back(msg);
+        // One owner thread per mailbox — notify_one is sufficient.
+        self.cv.notify_one();
+    }
+
+    /// Block until a matching message exists, remove and return it.
+    /// First match in queue order = FIFO per (src, tag, comm).
+    pub fn recv(&self, m: Matcher) -> Msg {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if let Some(pos) = q.iter().position(|msg| m.matches(msg)) {
+                return q.remove(pos).unwrap();
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+
+    /// Non-blocking probe: does a matching message exist?
+    pub fn probe(&self, m: Matcher) -> bool {
+        self.q.lock().unwrap().iter().any(|msg| m.matches(msg))
+    }
+
+    /// Current queue depth (diagnostics).
+    pub fn depth(&self) -> usize {
+        self.q.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn msg(src: usize, tag: i64, comm: u64, byte: u8) -> Msg {
+        Msg { src, tag, comm, sent_at: 0.0, data: Arc::new(vec![byte]) }
+    }
+
+    #[test]
+    fn fifo_per_matching_triple() {
+        let mb = Mailbox::new();
+        mb.post(msg(1, 7, 0, 0xAA));
+        mb.post(msg(1, 7, 0, 0xBB));
+        let m = Matcher { src: Some(1), tag: 7, comm: 0 };
+        assert_eq!(mb.recv(m).data[0], 0xAA);
+        assert_eq!(mb.recv(m).data[0], 0xBB);
+    }
+
+    #[test]
+    fn tag_and_comm_are_selective() {
+        let mb = Mailbox::new();
+        mb.post(msg(1, 1, 0, 1));
+        mb.post(msg(1, 2, 0, 2));
+        mb.post(msg(1, 1, 9, 3));
+        assert_eq!(mb.recv(Matcher { src: Some(1), tag: 2, comm: 0 }).data[0], 2);
+        assert_eq!(mb.recv(Matcher { src: Some(1), tag: 1, comm: 9 }).data[0], 3);
+        assert_eq!(mb.recv(Matcher { src: Some(1), tag: 1, comm: 0 }).data[0], 1);
+        assert_eq!(mb.depth(), 0);
+    }
+
+    #[test]
+    fn any_source_matches_first_arrival() {
+        let mb = Mailbox::new();
+        mb.post(msg(5, 3, 0, 50));
+        mb.post(msg(2, 3, 0, 20));
+        let got = mb.recv(Matcher { src: None, tag: 3, comm: 0 });
+        assert_eq!(got.src, 5);
+    }
+
+    #[test]
+    fn blocking_recv_wakes_on_post() {
+        let mb = Arc::new(Mailbox::new());
+        let mb2 = mb.clone();
+        let h = std::thread::spawn(move || mb2.recv(Matcher { src: Some(0), tag: 1, comm: 0 }).data[0]);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        mb.post(msg(0, 1, 0, 42));
+        assert_eq!(h.join().unwrap(), 42);
+    }
+
+    #[test]
+    fn probe_does_not_consume() {
+        let mb = Mailbox::new();
+        let m = Matcher { src: Some(1), tag: 1, comm: 0 };
+        assert!(!mb.probe(m));
+        mb.post(msg(1, 1, 0, 9));
+        assert!(mb.probe(m));
+        assert_eq!(mb.depth(), 1);
+    }
+}

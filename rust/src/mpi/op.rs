@@ -1,0 +1,153 @@
+//! Reduction operations (`MPI_Op` analogue), applied element-wise over raw
+//! byte buffers according to a [`Datatype`].
+//!
+//! All predefined ops are commutative **and** associative, which §4.4 of
+//! the paper relies on: the hybrid allreduce reduces operands in node-local
+//! order rather than ascending rank order, which is only valid for
+//! commutative+associative ops (floating-point rounding differences are
+//! tolerated the same way MPI implementations tolerate them).
+
+use super::datatype::Datatype;
+
+/// Predefined reduction operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ReduceOp {
+    Sum,
+    Prod,
+    Min,
+    Max,
+}
+
+macro_rules! apply_typed {
+    ($t:ty, $op:expr, $acc:expr, $src:expr) => {{
+        let acc: &mut [$t] = crate::util::bytes_mut_view::<$t>($acc);
+        let src: &[$t] = crate::util::bytes_view::<$t>($src);
+        debug_assert_eq!(acc.len(), src.len());
+        match $op {
+            ReduceOp::Sum => {
+                for (a, s) in acc.iter_mut().zip(src) {
+                    *a = *a + *s;
+                }
+            }
+            ReduceOp::Prod => {
+                for (a, s) in acc.iter_mut().zip(src) {
+                    *a = *a * *s;
+                }
+            }
+            ReduceOp::Min => {
+                for (a, s) in acc.iter_mut().zip(src) {
+                    if *s < *a {
+                        *a = *s;
+                    }
+                }
+            }
+            ReduceOp::Max => {
+                for (a, s) in acc.iter_mut().zip(src) {
+                    if *s > *a {
+                        *a = *s;
+                    }
+                }
+            }
+        }
+    }};
+}
+
+impl ReduceOp {
+    /// `acc[i] = acc[i] ⊕ operand[i]` element-wise under `dtype`.
+    ///
+    /// Panics if the buffers differ in length or are not whole elements.
+    pub fn apply(&self, dtype: Datatype, acc: &mut [u8], operand: &[u8]) {
+        assert_eq!(acc.len(), operand.len(), "reduce buffers must match");
+        assert_eq!(acc.len() % dtype.size(), 0, "partial element in reduce buffer");
+        match dtype {
+            Datatype::U8 => apply_typed!(u8, self, acc, operand),
+            Datatype::I32 => apply_typed!(i32, self, acc, operand),
+            Datatype::I64 => apply_typed!(i64, self, acc, operand),
+            Datatype::F32 => apply_typed!(f32, self, acc, operand),
+            Datatype::F64 => apply_typed!(f64, self, acc, operand),
+        }
+    }
+
+    /// Identity element for the op under `dtype`, as bytes of one element.
+    pub fn identity(&self, dtype: Datatype) -> Vec<u8> {
+        macro_rules! ident {
+            ($t:ty, $zero:expr, $one:expr, $max:expr, $min:expr) => {
+                match self {
+                    ReduceOp::Sum => ($zero as $t).to_le_bytes().to_vec(),
+                    ReduceOp::Prod => ($one as $t).to_le_bytes().to_vec(),
+                    ReduceOp::Min => ($max).to_le_bytes().to_vec(),
+                    ReduceOp::Max => ($min).to_le_bytes().to_vec(),
+                }
+            };
+        }
+        match dtype {
+            Datatype::U8 => ident!(u8, 0, 1, u8::MAX, u8::MIN),
+            Datatype::I32 => ident!(i32, 0, 1, i32::MAX, i32::MIN),
+            Datatype::I64 => ident!(i64, 0, 1, i64::MAX, i64::MIN),
+            Datatype::F32 => ident!(f32, 0.0, 1.0, f32::INFINITY, f32::NEG_INFINITY),
+            Datatype::F64 => ident!(f64, 0.0, 1.0, f64::INFINITY, f64::NEG_INFINITY),
+        }
+    }
+
+    pub const fn name(&self) -> &'static str {
+        match self {
+            ReduceOp::Sum => "sum",
+            ReduceOp::Prod => "prod",
+            ReduceOp::Min => "min",
+            ReduceOp::Max => "max",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{cast_slice, to_bytes};
+
+    #[test]
+    fn sum_f64() {
+        let mut acc = to_bytes(&[1.0f64, 2.0, 3.0]).to_vec();
+        let operand = to_bytes(&[10.0f64, 20.0, 30.0]).to_vec();
+        ReduceOp::Sum.apply(Datatype::F64, &mut acc, &operand);
+        assert_eq!(cast_slice::<f64>(&acc), vec![11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn max_i32() {
+        let mut acc = to_bytes(&[5i32, -2, 7]).to_vec();
+        let operand = to_bytes(&[3i32, 9, 7]).to_vec();
+        ReduceOp::Max.apply(Datatype::I32, &mut acc, &operand);
+        assert_eq!(cast_slice::<i32>(&acc), vec![5, 9, 7]);
+    }
+
+    #[test]
+    fn min_u8() {
+        let mut acc = vec![200u8, 3, 50];
+        ReduceOp::Min.apply(Datatype::U8, &mut acc, &[100, 4, 60]);
+        assert_eq!(acc, vec![100, 3, 50]);
+    }
+
+    #[test]
+    fn prod_f32() {
+        let mut acc = to_bytes(&[2.0f32, 3.0]).to_vec();
+        ReduceOp::Prod.apply(Datatype::F32, &mut acc, &to_bytes(&[4.0f32, 0.5]).to_vec());
+        assert_eq!(cast_slice::<f32>(&acc), vec![8.0, 1.5]);
+    }
+
+    #[test]
+    fn identities_absorb() {
+        for op in [ReduceOp::Sum, ReduceOp::Prod, ReduceOp::Min, ReduceOp::Max] {
+            let mut acc = op.identity(Datatype::F64);
+            let x = to_bytes(&[42.5f64]).to_vec();
+            op.apply(Datatype::F64, &mut acc, &x);
+            assert_eq!(cast_slice::<f64>(&acc), vec![42.5], "op {op:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must match")]
+    fn mismatched_lengths_panic() {
+        let mut acc = vec![0u8; 8];
+        ReduceOp::Sum.apply(Datatype::F64, &mut acc, &[0u8; 16]);
+    }
+}

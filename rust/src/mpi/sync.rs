@@ -1,0 +1,221 @@
+//! Thread-level synchronization primitives with virtual-time semantics.
+//!
+//! [`SyncGroup`] is a sense-counting barrier that *also* agrees on the
+//! maximum virtual clock of the participants — the engine's mechanism for
+//! realising a modelled `MPI_Barrier` (or harness-level clock alignment)
+//! without O(p log p) real message traffic on a 1-core host.
+//!
+//! [`SpinFlag`] is the paper's §4.5 spinning construct: a shared status
+//! counter in a shared-memory window, incremented by the *leader* and
+//! polled by the *children* with an equality exit condition (the MPI
+//! one-byte-polling restriction the paper discusses). Virtual release time
+//! rides along in an atomic f64.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+
+/// Atomic max for non-negative f64 values stored as bits (non-negative IEEE
+/// doubles order identically to their bit patterns).
+#[inline]
+pub fn atomic_f64_max(cell: &AtomicU64, value: f64) {
+    debug_assert!(value >= 0.0);
+    let bits = value.to_bits();
+    let mut cur = cell.load(Ordering::Relaxed);
+    while bits > cur {
+        match cell.compare_exchange_weak(cur, bits, Ordering::AcqRel, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+/// Barrier over a fixed group that returns the max virtual clock of all
+/// participants at arrival.
+pub struct SyncGroup {
+    size: usize,
+    count: AtomicUsize,
+    generation: AtomicUsize,
+    vmax_acc: AtomicU64,
+    released: [AtomicU64; 2],
+}
+
+impl SyncGroup {
+    pub fn new(size: usize) -> SyncGroup {
+        assert!(size > 0);
+        SyncGroup {
+            size,
+            count: AtomicUsize::new(0),
+            generation: AtomicUsize::new(0),
+            vmax_acc: AtomicU64::new(0),
+            released: [AtomicU64::new(0), AtomicU64::new(0)],
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Arrive with my virtual clock; block until all `size` members arrive;
+    /// return the group's max clock.
+    ///
+    /// Why this is safe across generations: `released[gen & 1]` is only
+    /// overwritten when barrier `gen + 2` completes, which requires every
+    /// member — including any straggler still reading `released[gen & 1]` —
+    /// to have arrived at barrier `gen + 1`, i.e. to have returned from
+    /// `gen` first.
+    pub fn arrive_and_wait(&self, my_vtime: f64) -> f64 {
+        if self.size == 1 {
+            return my_vtime;
+        }
+        let gen = self.generation.load(Ordering::Acquire);
+        atomic_f64_max(&self.vmax_acc, my_vtime);
+        if self.count.fetch_add(1, Ordering::AcqRel) == self.size - 1 {
+            // Last arriver releases the group.
+            let v = self.vmax_acc.swap(0, Ordering::AcqRel);
+            self.released[gen & 1].store(v, Ordering::Release);
+            self.count.store(0, Ordering::Release);
+            self.generation.store(gen.wrapping_add(1), Ordering::Release);
+            f64::from_bits(v)
+        } else {
+            let mut spins = 0u32;
+            while self.generation.load(Ordering::Acquire) == gen {
+                spins += 1;
+                if spins < 32 {
+                    std::hint::spin_loop();
+                } else {
+                    // Single-core host: yield, do not burn the timeslice.
+                    std::thread::yield_now();
+                }
+            }
+            f64::from_bits(self.released[gen & 1].load(Ordering::Acquire))
+        }
+    }
+}
+
+/// The paper's spinning status flag (§4.5): leader increments, children
+/// poll for equality. Lives inside a shared window in the hybrid layer.
+pub struct SpinFlag {
+    status: AtomicU32,
+    release_vtime: AtomicU64,
+}
+
+impl Default for SpinFlag {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SpinFlag {
+    pub fn new() -> SpinFlag {
+        SpinFlag { status: AtomicU32::new(0), release_vtime: AtomicU64::new(0) }
+    }
+
+    /// Leader: publish `status++` with its virtual release time.
+    /// (`MPI_Win_sync` on the leader side is the Release ordering here.)
+    pub fn post(&self, vtime: f64) {
+        atomic_f64_max(&self.release_vtime, vtime);
+        self.status.fetch_add(1, Ordering::Release);
+    }
+
+    /// Child: wait until `status` reaches `target` and return the leader's
+    /// virtual release time.
+    ///
+    /// The paper's protocol polls for *equality* (MPI's one-byte-change
+    /// restriction, §4.5), which is valid under its usage pattern where a
+    /// red sync alternates with every release. Mechanically we compare
+    /// monotonically (≥) so a leader that posts its next epoch before a
+    /// descheduled child observes the previous one cannot strand the child
+    /// — the *cost model* still charges the paper's polling scheme.
+    pub fn wait_eq(&self, target: u32) -> f64 {
+        let mut spins = 0u32;
+        while self.status.load(Ordering::Acquire) < target {
+            spins += 1;
+            if spins < 32 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        f64::from_bits(self.release_vtime.load(Ordering::Acquire))
+    }
+
+    /// Current status value (diagnostics / tests).
+    pub fn status(&self) -> u32 {
+        self.status.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn atomic_max_keeps_largest() {
+        let cell = AtomicU64::new(0);
+        atomic_f64_max(&cell, 3.5);
+        atomic_f64_max(&cell, 1.25);
+        atomic_f64_max(&cell, 7.0);
+        atomic_f64_max(&cell, 6.9);
+        assert_eq!(f64::from_bits(cell.load(Ordering::Relaxed)), 7.0);
+    }
+
+    #[test]
+    fn single_member_barrier_is_identity() {
+        let g = SyncGroup::new(1);
+        assert_eq!(g.arrive_and_wait(5.5), 5.5);
+    }
+
+    #[test]
+    fn barrier_returns_group_max() {
+        let g = Arc::new(SyncGroup::new(4));
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let g = g.clone();
+                std::thread::spawn(move || g.arrive_and_wait(i as f64 * 10.0))
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 30.0);
+        }
+    }
+
+    #[test]
+    fn barrier_reusable_across_generations() {
+        let g = Arc::new(SyncGroup::new(3));
+        for round in 0..50 {
+            let handles: Vec<_> = (0..3)
+                .map(|i| {
+                    let g = g.clone();
+                    std::thread::spawn(move || g.arrive_and_wait((round * 3 + i) as f64))
+                })
+                .collect();
+            let expected = (round * 3 + 2) as f64;
+            for h in handles {
+                assert_eq!(h.join().unwrap(), expected, "round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn spin_flag_release_order() {
+        let f = Arc::new(SpinFlag::new());
+        let f2 = f.clone();
+        let child = std::thread::spawn(move || f2.wait_eq(1));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        f.post(123.0);
+        assert_eq!(child.join().unwrap(), 123.0);
+        assert_eq!(f.status(), 1);
+    }
+
+    #[test]
+    fn spin_flag_multiple_epochs() {
+        let f = Arc::new(SpinFlag::new());
+        for epoch in 1..=5u32 {
+            let f2 = f.clone();
+            let child = std::thread::spawn(move || f2.wait_eq(epoch));
+            f.post(epoch as f64);
+            let v = child.join().unwrap();
+            assert!(v >= epoch as f64);
+        }
+    }
+}

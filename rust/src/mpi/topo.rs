@@ -1,0 +1,185 @@
+//! Cluster topology: which world rank lives on which shared-memory node.
+//!
+//! The paper's experiments depend on the *rank placement scheme*: the
+//! default **block-style** placement (consecutive ranks fill a node before
+//! moving on — §4, §5) and the alternative round-robin placement (§4.4's
+//! commutativity discussion). Irregular populations (Hazel Hen's 24-core
+//! nodes under power-of-two rank requests — §5.2.2) are first-class.
+
+/// Rank placement scheme (`--map-by` in Open MPI terms).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Consecutive ranks fill each node before moving to the next
+    /// (the paper's default; `--map-by core`).
+    Block,
+    /// Ranks are dealt across nodes like cards (`--map-by node`).
+    RoundRobin,
+}
+
+/// Immutable map rank ⇄ (node, slot).
+#[derive(Clone, Debug)]
+pub struct Topology {
+    /// Ranks hosted per node, in world-rank terms: `nodes[n]` lists the
+    /// world ranks on node `n` in local-rank order.
+    nodes: Vec<Vec<usize>>,
+    /// Node index per world rank.
+    node_of: Vec<usize>,
+    /// Local slot (index into `nodes[node_of[r]]`) per world rank.
+    slot_of: Vec<usize>,
+    placement: Placement,
+}
+
+impl Topology {
+    /// Build a topology for `counts[n]` ranks on node `n` under `placement`.
+    ///
+    /// Panics if any node count is zero (an empty node would make the
+    /// leader election in the hybrid layer meaningless).
+    pub fn new(counts: &[usize], placement: Placement) -> Topology {
+        assert!(!counts.is_empty(), "cluster must have at least one node");
+        assert!(counts.iter().all(|&c| c > 0), "every node must host at least one rank");
+        let world = counts.iter().sum::<usize>();
+        let mut nodes: Vec<Vec<usize>> = counts.iter().map(|&c| Vec::with_capacity(c)).collect();
+        match placement {
+            Placement::Block => {
+                let mut r = 0usize;
+                for (n, &c) in counts.iter().enumerate() {
+                    for _ in 0..c {
+                        nodes[n].push(r);
+                        r += 1;
+                    }
+                }
+            }
+            Placement::RoundRobin => {
+                // Deal rank r to the next node that still has a free slot.
+                let mut remaining: Vec<usize> = counts.to_vec();
+                let mut n = 0usize;
+                for r in 0..world {
+                    while remaining[n % counts.len()] == 0 {
+                        n += 1;
+                    }
+                    let node = n % counts.len();
+                    nodes[node].push(r);
+                    remaining[node] -= 1;
+                    n += 1;
+                }
+            }
+        }
+        let mut node_of = vec![0usize; world];
+        let mut slot_of = vec![0usize; world];
+        for (n, ranks) in nodes.iter().enumerate() {
+            for (s, &r) in ranks.iter().enumerate() {
+                node_of[r] = n;
+                slot_of[r] = s;
+            }
+        }
+        Topology { nodes, node_of, slot_of, placement }
+    }
+
+    /// Uniform cluster: `nnodes` nodes × `per_node` ranks, block placement.
+    pub fn uniform(nnodes: usize, per_node: usize) -> Topology {
+        Topology::new(&vec![per_node; nnodes], Placement::Block)
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.node_of.len()
+    }
+
+    pub fn nnodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn node_of(&self, rank: usize) -> usize {
+        self.node_of[rank]
+    }
+
+    /// Local slot of `rank` on its node (0 = the node leader under the
+    /// paper's lowest-rank-leads convention *for block placement*; in
+    /// general the leader is the lowest world rank on the node).
+    pub fn slot_of(&self, rank: usize) -> usize {
+        self.slot_of[rank]
+    }
+
+    /// World ranks on node `n`, in slot order.
+    pub fn ranks_on(&self, n: usize) -> &[usize] {
+        &self.nodes[n]
+    }
+
+    /// The node leader = lowest world rank hosted on node `n`.
+    pub fn leader_of_node(&self, n: usize) -> usize {
+        *self.nodes[n].iter().min().expect("nodes are non-empty")
+    }
+
+    /// Whether two ranks share a node (load/store domain).
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of[a] == self.node_of[b]
+    }
+
+    pub fn placement(&self) -> Placement {
+        self.placement
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_placement_fills_nodes_in_order() {
+        let t = Topology::new(&[3, 2], Placement::Block);
+        assert_eq!(t.ranks_on(0), &[0, 1, 2]);
+        assert_eq!(t.ranks_on(1), &[3, 4]);
+        assert_eq!(t.node_of(2), 0);
+        assert_eq!(t.node_of(3), 1);
+        assert_eq!(t.slot_of(4), 1);
+        assert_eq!(t.leader_of_node(1), 3);
+    }
+
+    #[test]
+    fn round_robin_deals_ranks() {
+        let t = Topology::new(&[2, 2], Placement::RoundRobin);
+        assert_eq!(t.ranks_on(0), &[0, 2]);
+        assert_eq!(t.ranks_on(1), &[1, 3]);
+        assert_eq!(t.leader_of_node(0), 0);
+        assert_eq!(t.leader_of_node(1), 1);
+    }
+
+    #[test]
+    fn round_robin_irregular_counts() {
+        // 3 + 1 ranks: node 1 fills up after one deal, remainder to node 0.
+        let t = Topology::new(&[3, 1], Placement::RoundRobin);
+        assert_eq!(t.world_size(), 4);
+        assert_eq!(t.ranks_on(1).len(), 1);
+        assert_eq!(t.ranks_on(0).len(), 3);
+        // Every rank appears exactly once.
+        let mut all: Vec<usize> = (0..2).flat_map(|n| t.ranks_on(n).to_vec()).collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn uniform_helper() {
+        let t = Topology::uniform(4, 24);
+        assert_eq!(t.world_size(), 96);
+        assert_eq!(t.nnodes(), 4);
+        assert!(t.same_node(0, 23));
+        assert!(!t.same_node(23, 24));
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one rank")]
+    fn zero_count_node_rejected() {
+        Topology::new(&[4, 0], Placement::Block);
+    }
+
+    #[test]
+    fn slots_are_consistent_inverse() {
+        for placement in [Placement::Block, Placement::RoundRobin] {
+            let t = Topology::new(&[5, 3, 7], placement);
+            for r in 0..t.world_size() {
+                let n = t.node_of(r);
+                let s = t.slot_of(r);
+                assert_eq!(t.ranks_on(n)[s], r);
+            }
+        }
+    }
+}

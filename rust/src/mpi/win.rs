@@ -1,0 +1,188 @@
+//! MPI-3 shared-memory windows (`MPI_Win_allocate_shared` analogue).
+//!
+//! A [`SharedWindow`] is one contiguous region allocated by the node
+//! *leader* and mapped by all on-node ranks — the storage substrate of the
+//! paper's hybrid collectives. Each on-node rank contributes a segment
+//! size; `segment(local_rank)` plays the role of `MPI_Win_shared_query`
+//! (base pointer + size of another rank's contribution).
+//!
+//! ## Safety discipline
+//!
+//! Rank threads read/write the window concurrently through raw pointers,
+//! exactly like real MPI SHM programs do through `mmap`ed memory. Safety is
+//! protocol-level, not type-level: the hybrid collectives guarantee
+//! (a) writers touch only their affinity segment between two sync points,
+//! (b) readers only read after an Acquire sync (barrier or spin flag) that
+//! happens-after the writers' Release. This mirrors the paper's §4.5
+//! discussion of `MPI_Win_sync` and data integrity.
+
+use super::sync::SpinFlag;
+use std::cell::UnsafeCell;
+
+/// Number of spin flags carried by every window: the hybrid protocols use
+/// flag 0 for the leader→children release and flag 1 for auxiliary phases.
+pub const WIN_FLAGS: usize = 4;
+
+/// A node-shared memory region with per-rank affinity segments.
+pub struct SharedWindow {
+    buf: UnsafeCell<Box<[u8]>>,
+    total: usize,
+    /// Byte offset of each local rank's segment.
+    offsets: Vec<usize>,
+    /// Byte size of each local rank's segment.
+    sizes: Vec<usize>,
+    /// Status flags for the §4.5 spinning synchronization.
+    flags: [SpinFlag; WIN_FLAGS],
+}
+
+// Safety: see module docs — concurrent access is governed by the
+// collective protocols' Release/Acquire sync points.
+unsafe impl Send for SharedWindow {}
+unsafe impl Sync for SharedWindow {}
+
+impl SharedWindow {
+    /// Allocate a window from per-local-rank contribution sizes (bytes).
+    /// Contiguous layout (the MPI default: `alloc_shared_noncontig` false).
+    pub fn allocate(sizes: &[usize]) -> SharedWindow {
+        let total: usize = sizes.iter().sum();
+        let mut offsets = Vec::with_capacity(sizes.len());
+        let mut acc = 0usize;
+        for &s in sizes {
+            offsets.push(acc);
+            acc += s;
+        }
+        SharedWindow {
+            buf: UnsafeCell::new(vec![0u8; total].into_boxed_slice()),
+            total,
+            offsets,
+            sizes: sizes.to_vec(),
+            flags: Default::default(),
+        }
+    }
+
+    /// Total window size in bytes.
+    pub fn len(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of contributing local ranks.
+    pub fn nsegments(&self) -> usize {
+        self.offsets.len()
+    }
+
+    /// `MPI_Win_shared_query`: (offset, size) of local rank `r`'s segment.
+    pub fn segment(&self, r: usize) -> (usize, usize) {
+        (self.offsets[r], self.sizes[r])
+    }
+
+    /// Raw read view. Caller must hold an Acquire sync ordering after the
+    /// writers' Release (see module docs).
+    ///
+    /// # Safety
+    /// No concurrent writer may overlap `[offset, offset+len)`.
+    pub unsafe fn slice(&self, offset: usize, len: usize) -> &[u8] {
+        let buf = &*self.buf.get();
+        &buf[offset..offset + len]
+    }
+
+    /// Raw write view.
+    ///
+    /// # Safety
+    /// The protocol must guarantee exclusive access to
+    /// `[offset, offset+len)` until the next sync point.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, offset: usize, len: usize) -> &mut [u8] {
+        let buf = &mut *self.buf.get();
+        &mut buf[offset..offset + len]
+    }
+
+    /// Copy `data` into the window at `offset` (real copy; the caller
+    /// charges `net.memcpy` to its virtual clock).
+    ///
+    /// Panics on out-of-bounds.
+    pub fn write(&self, offset: usize, data: &[u8]) {
+        assert!(offset + data.len() <= self.len(), "window write out of bounds");
+        unsafe {
+            self.slice_mut(offset, data.len()).copy_from_slice(data);
+        }
+    }
+
+    /// Copy `out.len()` bytes from the window at `offset` into `out`.
+    pub fn read_into(&self, offset: usize, out: &mut [u8]) {
+        assert!(offset + out.len() <= self.len(), "window read out of bounds");
+        unsafe {
+            out.copy_from_slice(self.slice(offset, out.len()));
+        }
+    }
+
+    /// Copy out a fresh vector (convenience for tests/examples).
+    pub fn read_vec(&self, offset: usize, len: usize) -> Vec<u8> {
+        let mut v = vec![0u8; len];
+        self.read_into(offset, &mut v);
+        v
+    }
+
+    /// Status flag `i` (the §4.5 spinning protocol).
+    pub fn flag(&self, i: usize) -> &SpinFlag {
+        &self.flags[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn layout_is_contiguous_in_rank_order() {
+        let w = SharedWindow::allocate(&[16, 8, 0, 24]);
+        assert_eq!(w.len(), 48);
+        assert_eq!(w.nsegments(), 4);
+        assert_eq!(w.segment(0), (0, 16));
+        assert_eq!(w.segment(1), (16, 8));
+        assert_eq!(w.segment(2), (24, 0));
+        assert_eq!(w.segment(3), (24, 24));
+    }
+
+    #[test]
+    fn write_then_read_roundtrip() {
+        let w = SharedWindow::allocate(&[8, 8]);
+        w.write(8, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(w.read_vec(8, 8), vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        // Untouched segment stays zeroed.
+        assert_eq!(w.read_vec(0, 8), vec![0; 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn oob_write_panics() {
+        let w = SharedWindow::allocate(&[4]);
+        w.write(2, &[0; 4]);
+    }
+
+    #[test]
+    fn leader_allocates_all_children_zero() {
+        // The paper's allocation pattern: msize*nprocs on the leader,
+        // zero bytes contributed by children.
+        let w = SharedWindow::allocate(&[100, 0, 0, 0]);
+        assert_eq!(w.len(), 100);
+        assert_eq!(w.segment(3), (100, 0));
+    }
+
+    #[test]
+    fn cross_thread_visibility_via_flag() {
+        let w = Arc::new(SharedWindow::allocate(&[8]));
+        let w2 = w.clone();
+        let child = std::thread::spawn(move || {
+            w2.flag(0).wait_eq(1);
+            w2.read_vec(0, 8)
+        });
+        w.write(0, &[9; 8]);
+        w.flag(0).post(1.0); // Release: write happens-before child's read
+        assert_eq!(child.join().unwrap(), vec![9; 8]);
+    }
+}

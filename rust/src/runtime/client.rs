@@ -1,0 +1,256 @@
+//! The PJRT client wrapper: artifact discovery, lazy compilation cache,
+//! and typed f64 execution.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! serializes protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see aot.py and DESIGN.md).
+//!
+//! The `xla` crate's handles hold `Rc`s, so [`Runtime`] is single-threaded
+//! by construction; rank threads share it through [`SharedRuntime`], which
+//! serializes *every* operation behind one mutex — sound because no `Rc`
+//! is ever touched outside the lock, and free on this host because the
+//! PJRT CPU client would serialize on the single core anyway.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, OnceLock};
+
+/// One typed input: data + dims (row-major). Empty dims = scalar.
+pub struct F64Input<'a> {
+    pub data: &'a [f64],
+    pub dims: &'a [i64],
+}
+
+impl<'a> F64Input<'a> {
+    pub fn new(data: &'a [f64], dims: &'a [i64]) -> F64Input<'a> {
+        let n: i64 = dims.iter().product();
+        assert_eq!(data.len() as i64, if dims.is_empty() { 1 } else { n });
+        F64Input { data, dims }
+    }
+}
+
+/// The artifact runtime: one PJRT CPU client + compiled-executable cache.
+/// Not `Send`/`Sync` — see [`SharedRuntime`].
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open a runtime over an artifacts directory.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let dir = dir.into();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client, dir, cache: HashMap::new() })
+    }
+
+    /// Discover the artifacts directory: `$HYMPI_ARTIFACTS`, then
+    /// `./artifacts`, then `../artifacts`.
+    pub fn discover() -> Result<Runtime> {
+        if let Ok(d) = std::env::var("HYMPI_ARTIFACTS") {
+            return Runtime::new(d);
+        }
+        for cand in ["artifacts", "../artifacts"] {
+            if Path::new(cand).join("manifest.json").exists() {
+                return Runtime::new(cand);
+            }
+        }
+        Err(anyhow!(
+            "no artifacts directory found (run `make artifacts` or set HYMPI_ARTIFACTS)"
+        ))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Does artifact `name` exist on disk?
+    pub fn available(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    fn exe(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute artifact `name` on f64 inputs; returns each tuple output
+    /// flattened row-major. (All artifacts lower with `return_tuple=True`.)
+    pub fn exec_f64(&mut self, name: &str, inputs: &[F64Input]) -> Result<Vec<Vec<f64>>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|i| -> Result<xla::Literal> {
+                if i.dims.is_empty() {
+                    Ok(xla::Literal::scalar(i.data[0]))
+                } else {
+                    xla::Literal::vec1(i.data)
+                        .reshape(i.dims)
+                        .map_err(|e| anyhow!("reshape to {:?}: {e}", i.dims))
+                }
+            })
+            .collect::<Result<_>>()?;
+        let exe = self.exe(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {name}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {name}: {e}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e}"))?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f64>().map_err(|e| anyhow!("read f64 output of {name}: {e}")))
+            .collect()
+    }
+}
+
+/// Thread-shared runtime: one global mutex around the whole [`Runtime`].
+///
+/// # Safety
+/// `Runtime`'s non-`Send` parts (`Rc` handles inside the `xla` crate) are
+/// only ever created, cloned and dropped while the mutex is held, and no
+/// reference to them escapes `with`. Moving the *locked container* across
+/// threads is therefore sound.
+pub struct SharedRuntime {
+    inner: Mutex<Runtime>,
+}
+
+unsafe impl Send for SharedRuntime {}
+unsafe impl Sync for SharedRuntime {}
+
+impl SharedRuntime {
+    /// Process-wide shared runtime (`None` if artifacts are absent — the
+    /// kernels then fall back to their native compute paths).
+    pub fn global() -> Option<&'static SharedRuntime> {
+        static RT: OnceLock<Option<SharedRuntime>> = OnceLock::new();
+        RT.get_or_init(|| Runtime::discover().ok().map(|rt| SharedRuntime { inner: Mutex::new(rt) }))
+            .as_ref()
+    }
+
+    pub fn available(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().available(name)
+    }
+
+    pub fn exec_f64(&self, name: &str, inputs: &[F64Input]) -> Result<Vec<Vec<f64>>> {
+        self.inner.lock().unwrap().exec_f64(name, inputs)
+    }
+
+    /// Run an arbitrary closure against the locked runtime.
+    pub fn with<R>(&self, f: impl FnOnce(&mut Runtime) -> R) -> R {
+        f(&mut self.inner.lock().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt() -> Option<&'static SharedRuntime> {
+        let rt = SharedRuntime::global();
+        if rt.is_none() {
+            eprintln!("skipping PJRT test: no artifacts (run `make artifacts`)");
+        }
+        rt
+    }
+
+    #[test]
+    fn summa64_matches_native_matmul() {
+        let Some(rt) = rt() else { return };
+        let n = 64usize;
+        let a: Vec<f64> = (0..n * n).map(|i| (i % 13) as f64 * 0.25).collect();
+        let b: Vec<f64> = (0..n * n).map(|i| (i % 7) as f64 - 3.0).collect();
+        let c: Vec<f64> = (0..n * n).map(|i| (i % 5) as f64).collect();
+        let dims = [n as i64, n as i64];
+        let out = rt
+            .exec_f64(
+                "summa64",
+                &[F64Input::new(&a, &dims), F64Input::new(&b, &dims), F64Input::new(&c, &dims)],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let mut want = c.clone();
+        crate::kernels::native::matmul_acc(&a, &b, &mut want, n, n, n);
+        for (g, w) in out[0].iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn poisson_artifact_matches_native_sweep() {
+        let Some(rt) = rt() else { return };
+        let (rows, n) = (8usize, 64usize);
+        let strip: Vec<f64> = (0..(rows + 2) * n).map(|i| ((i * 37) % 11) as f64 * 0.1).collect();
+        let out = rt
+            .exec_f64("poisson_r8_n64", &[F64Input::new(&strip, &[(rows + 2) as i64, n as i64])])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let mut want = strip.clone();
+        let want_delta = crate::kernels::native::rb_sweep(&mut want, rows + 2, n);
+        for (g, w) in out[0].iter().zip(&want) {
+            assert!((g - w).abs() < 1e-12, "{g} vs {w}");
+        }
+        assert!((out[1][0] - want_delta).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bpmf_artifact_matches_native_posterior() {
+        let Some(rt) = rt() else { return };
+        let (batch, nnz, k) = (32usize, 16usize, 10usize);
+        let v: Vec<f64> = (0..batch * nnz * k).map(|i| ((i * 29 + 7) % 13) as f64 * 0.1 - 0.6).collect();
+        let w: Vec<f64> = (0..batch * nnz).map(|i| ((i * 17 + 3) % 7) as f64 * 0.5 - 1.0).collect();
+        let lam0 = vec![1.5f64; k];
+        let noise: Vec<f64> = (0..batch * k).map(|i| ((i % 5) as f64 - 2.0) * 0.3).collect();
+        let out = rt
+            .exec_f64(
+                "bpmf_b32_n16_k10",
+                &[
+                    F64Input::new(&v, &[batch as i64, nnz as i64, k as i64]),
+                    F64Input::new(&w, &[batch as i64, nnz as i64]),
+                    F64Input::new(&[2.0], &[]),
+                    F64Input::new(&lam0, &[k as i64]),
+                    F64Input::new(&noise, &[batch as i64, k as i64]),
+                ],
+            )
+            .unwrap();
+        let mut want = vec![0.0; batch * k];
+        crate::kernels::native::bpmf_posterior(&v, &w, 2.0, &lam0, &noise, batch, nnz, k, &mut want);
+        for (g, wv) in out[0].iter().zip(&want) {
+            assert!((g - wv).abs() < 1e-8, "{g} vs {wv}");
+        }
+    }
+
+    #[test]
+    fn missing_artifact_reports_cleanly() {
+        let Some(rt) = rt() else { return };
+        assert!(!rt.available("nonesuch"));
+        assert!(rt.exec_f64("nonesuch", &[]).is_err());
+    }
+
+    #[test]
+    fn executables_are_cached() {
+        let Some(rt) = rt() else { return };
+        let n = 64usize;
+        let a = vec![0.0f64; n * n];
+        let dims = [n as i64, n as i64];
+        let t0 = std::time::Instant::now();
+        rt.exec_f64("summa64", &[F64Input::new(&a, &dims), F64Input::new(&a, &dims), F64Input::new(&a, &dims)])
+            .unwrap();
+        let first = t0.elapsed();
+        let t1 = std::time::Instant::now();
+        rt.exec_f64("summa64", &[F64Input::new(&a, &dims), F64Input::new(&a, &dims), F64Input::new(&a, &dims)])
+            .unwrap();
+        let second = t1.elapsed();
+        assert!(second < first, "second call {second:?} should reuse the cache (first {first:?})");
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust hot path.
+//!
+//! Python never runs at request time: `make artifacts` is the only step
+//! that touches jax, and the resulting `artifacts/*.hlo.txt` are compiled
+//! here once per process via the PJRT CPU client (`xla` crate).
+
+pub mod client;
+
+pub use client::{F64Input, Runtime, SharedRuntime};

@@ -1,0 +1,169 @@
+//! A small criterion-style benchmark runner.
+//!
+//! `cargo bench` targets in this crate use `harness = false` and drive this
+//! runner: warmup, repeated timed batches, outlier-robust statistics, and a
+//! one-line-per-benchmark report. It exists because the build is offline
+//! (criterion is unavailable) — the interface mirrors the subset of
+//! criterion we need.
+
+use super::stats::Summary;
+use std::time::Instant;
+
+/// Result of one benchmark: wall-clock statistics per iteration (ns).
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub per_iter_ns: Summary,
+    pub iters: u64,
+}
+
+impl BenchStats {
+    fn human(ns: f64) -> String {
+        if ns < 1e3 {
+            format!("{ns:.1} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} us", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.3} s", ns / 1e9)
+        }
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<48} time: [{} {} {}]  (sd {:.1}%, n={})",
+            self.name,
+            Self::human(self.per_iter_ns.min),
+            Self::human(self.per_iter_ns.mean),
+            Self::human(self.per_iter_ns.max),
+            self.per_iter_ns.rsd_pct(),
+            self.per_iter_ns.n,
+        )
+    }
+}
+
+/// Benchmark runner: collects samples of `batch` iterations each.
+pub struct BenchRunner {
+    /// Target wall-clock per benchmark (seconds). Default 2.0.
+    pub target_secs: f64,
+    /// Number of statistical samples. Default 20.
+    pub samples: usize,
+    /// Warmup time (seconds). Default 0.5.
+    pub warmup_secs: f64,
+    results: Vec<BenchStats>,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        // Honor HYMPI_BENCH_FAST=1 for CI-speed runs.
+        let fast = std::env::var("HYMPI_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+        BenchRunner {
+            target_secs: if fast { 0.2 } else { 2.0 },
+            samples: if fast { 5 } else { 20 },
+            warmup_secs: if fast { 0.05 } else { 0.5 },
+            results: Vec::new(),
+        }
+    }
+}
+
+impl BenchRunner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Benchmark `f`, timing batches sized so each sample lasts about
+    /// `target_secs / samples`.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchStats {
+        // Warmup + estimate per-iteration cost.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed().as_secs_f64() < self.warmup_secs || warm_iters == 0 {
+            f();
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let est_ns = warm_start.elapsed().as_nanos() as f64 / warm_iters as f64;
+        let per_sample_ns = self.target_secs * 1e9 / self.samples as f64;
+        let batch = ((per_sample_ns / est_ns).ceil() as u64).max(1);
+
+        let mut per_iter = Vec::with_capacity(self.samples);
+        let mut total_iters = 0u64;
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let dt = t0.elapsed().as_nanos() as f64;
+            per_iter.push(dt / batch as f64);
+            total_iters += batch;
+        }
+        let stats = BenchStats {
+            name: name.to_string(),
+            per_iter_ns: Summary::of(&per_iter),
+            iters: total_iters,
+        };
+        println!("{stats}");
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Run a "figure" generator once and report its wall time; used by the
+    /// bench binaries that regenerate full paper tables (their interesting
+    /// output is the table itself, not the latency of producing it).
+    pub fn run_once<F: FnOnce()>(&mut self, name: &str, f: F) {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_nanos() as f64;
+        let stats = BenchStats {
+            name: name.to_string(),
+            per_iter_ns: Summary::of(&[dt]),
+            iters: 1,
+        };
+        println!("{stats}");
+        self.results.push(stats);
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let mut r = BenchRunner { target_secs: 0.05, samples: 4, warmup_secs: 0.005, results: vec![] };
+        let mut x = 0u64;
+        let s = r.bench("noop-ish", || {
+            x = x.wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert!(s.per_iter_ns.mean > 0.0);
+        assert!(s.per_iter_ns.mean < 1e7, "a nop add should not take 10 ms");
+        assert_eq!(s.name, "noop-ish");
+    }
+
+    #[test]
+    fn run_once_records_single_sample() {
+        let mut r = BenchRunner { target_secs: 0.01, samples: 2, warmup_secs: 0.001, results: vec![] };
+        r.run_once("one-shot", || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert_eq!(r.results().len(), 1);
+        assert!(r.results()[0].per_iter_ns.mean >= 2e6 * 0.5);
+    }
+
+    #[test]
+    fn human_formatting() {
+        assert_eq!(BenchStats::human(500.0), "500.0 ns");
+        assert_eq!(BenchStats::human(2_500.0), "2.50 us");
+        assert_eq!(BenchStats::human(3_000_000.0), "3.00 ms");
+        assert!(BenchStats::human(2e9).ends_with(" s"));
+    }
+}

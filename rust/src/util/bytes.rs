@@ -1,0 +1,102 @@
+//! Byte/typed-slice conversions for collective payloads.
+//!
+//! The substrate moves raw bytes (like MPI does); apps work in typed
+//! elements. These helpers are the only place the reinterpretation happens,
+//! restricted to plain-old-data element types via the sealed [`Pod`] trait.
+
+/// Marker for plain-old-data element types that may be viewed as bytes.
+///
+/// Safety: implementors must be `#[repr(C)]`-compatible primitives with no
+/// padding and no invalid bit patterns.
+pub unsafe trait Pod: Copy + Default + 'static {}
+
+unsafe impl Pod for u8 {}
+unsafe impl Pod for i32 {}
+unsafe impl Pod for u32 {}
+unsafe impl Pod for i64 {}
+unsafe impl Pod for u64 {}
+unsafe impl Pod for f32 {}
+unsafe impl Pod for f64 {}
+
+/// View a typed slice as bytes.
+pub fn to_bytes<T: Pod>(v: &[T]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+/// View a byte slice as a typed slice. Panics if the length is not a
+/// multiple of `size_of::<T>()` or the pointer is misaligned for `T`.
+pub fn from_bytes<T: Pod>(b: &[u8]) -> &[T] {
+    let sz = std::mem::size_of::<T>();
+    assert_eq!(b.len() % sz, 0, "byte length {} not a multiple of {}", b.len(), sz);
+    assert_eq!(b.as_ptr() as usize % std::mem::align_of::<T>(), 0, "misaligned cast");
+    unsafe { std::slice::from_raw_parts(b.as_ptr() as *const T, b.len() / sz) }
+}
+
+/// View a mutable byte slice as a typed mutable slice. Panics on length
+/// remainder or misalignment.
+pub fn from_bytes_mut<T: Pod>(b: &mut [u8]) -> &mut [T] {
+    let sz = std::mem::size_of::<T>();
+    assert_eq!(b.len() % sz, 0, "byte length {} not a multiple of {}", b.len(), sz);
+    assert_eq!(b.as_ptr() as usize % std::mem::align_of::<T>(), 0, "misaligned cast");
+    unsafe { std::slice::from_raw_parts_mut(b.as_mut_ptr() as *mut T, b.len() / sz) }
+}
+
+/// Copy a byte slice into a typed vector (alignment-safe).
+pub fn cast_slice<T: Pod>(b: &[u8]) -> Vec<T> {
+    let sz = std::mem::size_of::<T>();
+    assert_eq!(b.len() % sz, 0, "byte length {} not a multiple of {}", b.len(), sz);
+    let n = b.len() / sz;
+    let mut out = vec![T::default(); n];
+    unsafe {
+        std::ptr::copy_nonoverlapping(b.as_ptr(), out.as_mut_ptr() as *mut u8, b.len());
+    }
+    out
+}
+
+/// View a typed mutable slice as mutable bytes.
+pub fn cast_slice_mut<T: Pod>(v: &mut [T]) -> &mut [u8] {
+    unsafe { std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, std::mem::size_of_val(v)) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f64() {
+        let v = vec![1.5f64, -2.25, 1e300];
+        let b = to_bytes(&v);
+        assert_eq!(b.len(), 24);
+        let back: Vec<f64> = cast_slice(b);
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn from_bytes_aligned_view() {
+        let v = vec![7i64, -9];
+        let b = to_bytes(&v);
+        let view: &[i64] = from_bytes(b);
+        assert_eq!(view, &[7, -9]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple")]
+    fn bad_length_panics() {
+        let b = [0u8; 7];
+        let _: Vec<f64> = cast_slice(&b);
+    }
+
+    #[test]
+    fn cast_slice_handles_unaligned() {
+        // cast_slice copies, so an unaligned source must work.
+        let raw = [0u8; 17];
+        let _: Vec<f64> = cast_slice(&raw[1..]); // 16 bytes, arbitrary alignment
+    }
+
+    #[test]
+    fn mut_roundtrip() {
+        let mut v = vec![0u32; 4];
+        cast_slice_mut(&mut v).copy_from_slice(&[1, 0, 0, 0, 2, 0, 0, 0, 3, 0, 0, 0, 4, 0, 0, 0]);
+        assert_eq!(v, vec![1, 2, 3, 4]);
+    }
+}

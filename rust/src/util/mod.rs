@@ -1,0 +1,27 @@
+//! Self-contained utility substrates.
+//!
+//! The build is fully offline (only `xla` + `anyhow` are vendored), so the
+//! pieces a normal project would pull from crates.io — RNG, statistics,
+//! a criterion-style benchmark runner, a property-testing harness — are
+//! implemented here.
+
+pub mod bench;
+pub mod bytes;
+pub mod quickprop;
+pub mod rng;
+pub mod stats;
+
+pub use bench::{BenchRunner, BenchStats};
+pub use bytes::{cast_slice, cast_slice_mut, from_bytes, from_bytes_mut, to_bytes};
+pub use rng::Rng;
+pub use stats::Summary;
+
+/// Alias used by the reduction macros: view bytes as `&[T]`.
+pub fn bytes_view<T: bytes::Pod>(b: &[u8]) -> &[T] {
+    from_bytes(b)
+}
+
+/// Alias used by the reduction macros: view bytes as `&mut [T]`.
+pub fn bytes_mut_view<T: bytes::Pod>(b: &mut [u8]) -> &mut [T] {
+    from_bytes_mut(b)
+}

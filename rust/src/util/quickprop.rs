@@ -1,0 +1,75 @@
+//! A miniature property-testing harness (proptest is unavailable offline).
+//!
+//! `props::run` draws `cases` random inputs from a generator closure and
+//! checks a property; on failure it reports the seed and the case index so
+//! the exact failing input can be reproduced deterministically with
+//! [`reproduce`]. No shrinking — failing inputs in this crate are small by
+//! construction (ranks, node shapes, message sizes).
+
+use super::rng::Rng;
+
+/// Default number of cases per property (override with HYMPI_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("HYMPI_PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(64)
+}
+
+/// Run a property over `cases` random inputs.
+///
+/// `gen` draws an input from the RNG; `prop` returns `Err(reason)` on
+/// violation. Panics with seed/case diagnostics on the first failure.
+pub fn run<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let seed = std::env::var("HYMPI_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        // Independent stream per case => any single case is reproducible.
+        let mut rng = Rng::new(seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let input = gen(&mut rng);
+        if let Err(reason) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed}):\n  input: {input:?}\n  reason: {reason}\n  reproduce with HYMPI_PROP_SEED={seed} and case index {case}"
+            );
+        }
+    }
+}
+
+/// Re-draw the input of a specific failing case (for debugging).
+pub fn reproduce<T>(seed: u64, case: usize, mut gen: impl FnMut(&mut Rng) -> T) -> T {
+    let mut rng = Rng::new(seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    gen(&mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run("sum-commutes", 32, |r| (r.below(100), r.below(100)), |&(a, b)| {
+            count += 1;
+            if a + b == b + a { Ok(()) } else { Err("math broke".into()) }
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_diagnostics() {
+        run("always-fails", 8, |r| r.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn reproduce_matches_run_stream() {
+        let seed = 0xC0FFEE_u64;
+        let drawn = reproduce(seed, 3, |r| r.next_u64());
+        let again = reproduce(seed, 3, |r| r.next_u64());
+        assert_eq!(drawn, again);
+    }
+}

@@ -1,0 +1,198 @@
+//! Cross-module integration tests: whole hybrid programs on irregular
+//! clusters, backend parity through the PJRT runtime, and kernel apps
+//! composing collectives + compute.
+
+use hympi::coll;
+use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
+use hympi::hybrid::{self, AllreduceMethod, CommPackage, SyncScheme, TransTables};
+use hympi::kernels::{self, Backend, Variant};
+use hympi::mpi::{Datatype, ReduceOp};
+use hympi::util::{cast_slice, to_bytes};
+
+fn spec(nodes: &[usize]) -> ClusterSpec {
+    let mut s = ClusterSpec::preset(Preset::VulcanSb, nodes.len());
+    s.nodes = nodes.to_vec();
+    s
+}
+
+/// A full hybrid program exercising all three collectives back-to-back on
+/// one comm package — the composition pattern of a real application.
+#[test]
+fn hybrid_program_composes_all_three_collectives() {
+    let report = SimCluster::new(spec(&[5, 3, 4])).run(|env| {
+        let w = env.world();
+        let p = w.size();
+        let me = w.rank();
+        let pkg = CommPackage::create(env, &w);
+
+        // allgather: every rank contributes 3 doubles.
+        let msg = 24usize;
+        let mut ag_win = pkg.alloc_shared(env, msg, 1, p);
+        let sizeset = hybrid::sizeset_gather(env, &pkg);
+        let param = hybrid::AllgatherParam::create(env, &pkg, msg, &sizeset);
+        let mine = [me as f64, 2.0 * me as f64, -1.0];
+        ag_win.store(env, ag_win.local_ptr(me, msg), to_bytes(&mine));
+        hybrid::hy_allgather(env, &pkg, &mut ag_win, &param, msg, SyncScheme::Spin);
+        let gathered: Vec<f64> = cast_slice(&ag_win.load(env, 0, msg * p));
+
+        // bcast: rank 7 (a child) broadcasts a derived value.
+        let mut bc_win = pkg.alloc_shared(env, 8, 1, 1);
+        let tables = TransTables::create(env, &pkg);
+        let root = 7usize;
+        let payload = [gathered.iter().sum::<f64>()];
+        let arg = (me == root).then(|| to_bytes(&payload));
+        hybrid::hy_bcast(env, &pkg, &mut bc_win, &tables, root, arg.as_deref(), 8, SyncScheme::Spin);
+        let broadcasted = cast_slice::<f64>(&bc_win.load(env, 0, 8))[0];
+
+        // allreduce: max of (rank * broadcasted-sign).
+        let mut ar_win = hybrid::allreduce::alloc_allreduce_win(env, &pkg, 8);
+        ar_win.store(env, ar_win.local_ptr(pkg.shmem.rank(), 8), to_bytes(&[me as f64]));
+        let g = hybrid::hy_allreduce(
+            env, &pkg, &mut ar_win, Datatype::F64, ReduceOp::Max, 8,
+            AllreduceMethod::Tuned, SyncScheme::Spin,
+        );
+        let reduced = cast_slice::<f64>(&ar_win.load(env, g, 8))[0];
+
+        env.barrier(&pkg.shmem);
+        ag_win.free(env, &pkg);
+        bc_win.free(env, &pkg);
+        ar_win.free(env, &pkg);
+        (gathered, broadcasted, reduced)
+    });
+
+    let p = 12;
+    let expect_gather: Vec<f64> = (0..p).flat_map(|r| [r as f64, 2.0 * r as f64, -1.0]).collect();
+    let expect_bcast: f64 = expect_gather.iter().sum();
+    for (gathered, broadcasted, reduced) in report.outputs {
+        assert_eq!(gathered, expect_gather);
+        assert_eq!(broadcasted, expect_bcast);
+        assert_eq!(reduced, (p - 1) as f64);
+    }
+}
+
+/// Pure and hybrid collectives agree bit-for-bit on the same inputs across
+/// placements and irregular node shapes.
+#[test]
+fn pure_and_hybrid_allreduce_agree_numerically() {
+    for nodes in [&[4, 4][..], &[5, 3][..], &[2, 3, 3][..]] {
+        let report = SimCluster::new(spec(nodes)).run(|env| {
+            let w = env.world();
+            let vals = [env.world_rank() as f64 * 1.5, -(env.world_rank() as f64)];
+            let mut pure = to_bytes(&vals).to_vec();
+            coll::allreduce(env, &w, Datatype::F64, ReduceOp::Sum, &mut pure, coll::AllreduceAlgo::Auto);
+
+            let pkg = CommPackage::create(env, &w);
+            let mut win = hybrid::allreduce::alloc_allreduce_win(env, &pkg, 16);
+            win.store(env, win.local_ptr(pkg.shmem.rank(), 16), to_bytes(&vals));
+            let g = hybrid::hy_allreduce(
+                env, &pkg, &mut win, Datatype::F64, ReduceOp::Sum, 16,
+                AllreduceMethod::Method2, SyncScheme::Barrier,
+            );
+            let hy = win.load(env, g, 16);
+            env.barrier(&pkg.shmem);
+            win.free(env, &pkg);
+            (cast_slice::<f64>(&pure), cast_slice::<f64>(&hy))
+        });
+        for (pure, hy) in report.outputs {
+            for (a, b) in pure.iter().zip(&hy) {
+                assert!((a - b).abs() < 1e-9, "{a} vs {b} on nodes {nodes:?}");
+            }
+        }
+    }
+}
+
+/// The end-to-end PJRT path: SUMMA through the AOT artifacts equals the
+/// native path (skipped when artifacts are absent).
+#[test]
+fn summa_pjrt_equals_native() {
+    if hympi::runtime::SharedRuntime::global().is_none() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let n = 256;
+    let cfg = |backend| kernels::summa::SummaCfg {
+        n,
+        variant: Variant::PureMpi,
+        backend,
+        threads: 1,
+    };
+    let pjrt = kernels::summa::run(spec(&[2, 2]), cfg(Backend::Pjrt));
+    let native = kernels::summa::run(spec(&[2, 2]), cfg(Backend::Native));
+    assert!(
+        (pjrt.checksum - native.checksum).abs() < 1e-6 * native.checksum.abs(),
+        "pjrt {} vs native {}",
+        pjrt.checksum,
+        native.checksum
+    );
+    let want = kernels::summa::expected_checksum(n);
+    assert!((pjrt.checksum - want).abs() < 1e-6 * want.abs());
+}
+
+/// Poisson PJRT/native parity (the artifact shape poisson_r8_n64 covers
+/// an 8-rank 64-grid decomposition).
+#[test]
+fn poisson_pjrt_equals_native() {
+    if hympi::runtime::SharedRuntime::global().is_none() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let cfg = |backend| kernels::poisson::PoissonCfg {
+        n: 64,
+        tol: 1e-4,
+        max_iters: 100,
+        variant: Variant::PureMpi,
+        backend,
+        threads: 1,
+    };
+    let pjrt = kernels::poisson::run(spec(&[4, 4]), cfg(Backend::Pjrt));
+    let native = kernels::poisson::run(spec(&[4, 4]), cfg(Backend::Native));
+    assert_eq!(pjrt.iters, native.iters, "identical convergence trajectory");
+    assert!((pjrt.checksum - native.checksum).abs() < 1e-9);
+}
+
+/// Round-robin placement still yields correct collectives (the §4.4
+/// commutativity discussion) — results must match block placement.
+#[test]
+fn round_robin_placement_correctness() {
+    use hympi::mpi::topo::Placement;
+    let mut s = spec(&[4, 4]);
+    s.placement = Placement::RoundRobin;
+    let report = SimCluster::new(s).run(|env| {
+        let w = env.world();
+        let mut buf = to_bytes(&[env.world_rank() as f64]).to_vec();
+        coll::allreduce(env, &w, Datatype::F64, ReduceOp::Sum, &mut buf, coll::AllreduceAlgo::Auto);
+        let mut bc = vec![0u8; 64];
+        if w.rank() == 3 {
+            bc = (0..64u8).collect();
+        }
+        coll::bcast(env, &w, 3, &mut bc, coll::BcastAlgo::Auto);
+        (cast_slice::<f64>(&buf)[0], bc)
+    });
+    for (sum, bc) in report.outputs {
+        assert_eq!(sum, 28.0);
+        assert_eq!(bc, (0..64u8).collect::<Vec<_>>());
+    }
+}
+
+/// Virtual clocks never run backwards through any collective sequence.
+#[test]
+fn vclock_monotonicity_through_collectives() {
+    let report = SimCluster::new(spec(&[3, 5])).run(|env| {
+        let w = env.world();
+        let mut checkpoints = vec![env.vclock()];
+        let mut buf = vec![1u8; 512];
+        coll::bcast(env, &w, 0, &mut buf, coll::BcastAlgo::Auto);
+        checkpoints.push(env.vclock());
+        let mut out = vec![0u8; 512 * 8];
+        coll::allgather(env, &w, &buf[..512], &mut out, coll::AllgatherAlgo::Auto);
+        checkpoints.push(env.vclock());
+        env.barrier(&w);
+        checkpoints.push(env.vclock());
+        checkpoints
+    });
+    for cps in report.outputs {
+        for pair in cps.windows(2) {
+            assert!(pair[1] >= pair[0], "vclock went backwards: {pair:?}");
+        }
+    }
+}

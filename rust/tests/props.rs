@@ -1,0 +1,250 @@
+//! Property-based tests over the coordinator invariants (routing/
+//! translation tables, placement partitioning, collective payload
+//! permutations, state management), using the in-repo quickprop harness
+//! (see `util::quickprop` — proptest is unavailable offline).
+
+use hympi::coll;
+use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
+use hympi::hybrid::{CommPackage, TransTables};
+use hympi::mpi::topo::{Placement, Topology};
+use hympi::util::quickprop::{default_cases, run};
+use hympi::util::Rng;
+
+/// Random small cluster shape: 1–4 nodes × 1–6 ranks.
+fn arb_nodes(rng: &mut Rng) -> Vec<usize> {
+    let n = 1 + rng.below(4);
+    (0..n).map(|_| 1 + rng.below(6)).collect()
+}
+
+fn spec_for(nodes: &[usize]) -> ClusterSpec {
+    let mut s = ClusterSpec::preset(Preset::VulcanSb, nodes.len());
+    s.nodes = nodes.to_vec();
+    s
+}
+
+#[test]
+fn prop_placement_is_a_partition() {
+    run(
+        "placement-is-a-partition",
+        default_cases(),
+        |rng| (arb_nodes(rng), if rng.below(2) == 0 { Placement::Block } else { Placement::RoundRobin }),
+        |(nodes, placement)| {
+            let t = Topology::new(nodes, *placement);
+            let world = t.world_size();
+            // Every rank appears on exactly one node, at its claimed slot.
+            let mut seen = vec![0usize; world];
+            for n in 0..t.nnodes() {
+                for (slot, &r) in t.ranks_on(n).iter().enumerate() {
+                    seen[r] += 1;
+                    if t.node_of(r) != n || t.slot_of(r) != slot {
+                        return Err(format!("rank {r}: node/slot mismatch"));
+                    }
+                }
+            }
+            if seen.iter().any(|&c| c != 1) {
+                return Err(format!("not a partition: {seen:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_leader_is_lowest_rank_on_node() {
+    run(
+        "leader-is-lowest-rank",
+        default_cases(),
+        |rng| (arb_nodes(rng), if rng.below(2) == 0 { Placement::Block } else { Placement::RoundRobin }),
+        |(nodes, placement)| {
+            let t = Topology::new(nodes, *placement);
+            for n in 0..t.nnodes() {
+                let leader = t.leader_of_node(n);
+                if t.ranks_on(n).iter().any(|&r| r < leader) {
+                    return Err(format!("node {n}: leader {leader} is not minimal"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_transtables_are_consistent_bijections() {
+    run(
+        "transtable-bijection",
+        16, // cluster spin-up per case — keep the count moderate
+        |rng| arb_nodes(rng),
+        |nodes| {
+            let report = SimCluster::new(spec_for(nodes)).run(|env| {
+                let w = env.world();
+                let pkg = CommPackage::create(env, &w);
+                let t = TransTables::create(env, &pkg);
+                (t.shmem, t.bridge, pkg.shmem_size, pkg.bridge_size)
+            });
+            let world: usize = nodes.iter().sum();
+            for (shmem, bridge, _, bridge_size) in &report.outputs {
+                if shmem.len() != world || bridge.len() != world {
+                    return Err("table length".into());
+                }
+                // Within a node (same bridge idx), shmem ranks are 0..k distinct.
+                for b in 0..*bridge_size {
+                    let mut ranks: Vec<usize> = (0..world)
+                        .filter(|&r| bridge[r] == b)
+                        .map(|r| shmem[r])
+                        .collect();
+                    ranks.sort_unstable();
+                    let expect: Vec<usize> = (0..ranks.len()).collect();
+                    if ranks != expect {
+                        return Err(format!("node {b}: shmem ranks {ranks:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bcast_any_root_any_algo_delivers_exact_payload() {
+    run(
+        "bcast-correctness",
+        12,
+        |rng| {
+            let nodes = arb_nodes(rng);
+            let world: usize = nodes.iter().sum();
+            let root = rng.below(world);
+            let len = 1 + rng.below(3000);
+            let algo = match rng.below(4) {
+                0 => coll::BcastAlgo::Binomial,
+                1 => coll::BcastAlgo::SplitBinary { seg: 1 + rng.below(512) },
+                2 => coll::BcastAlgo::Pipeline { seg: 1 + rng.below(512) },
+                _ => coll::BcastAlgo::ScatterAllgather,
+            };
+            let mut payload = vec![0u8; len];
+            rng.fill_bytes(&mut payload);
+            (nodes, root, algo, payload)
+        },
+        |(nodes, root, algo, payload)| {
+            let (root, algo) = (*root, *algo);
+            let payload2 = payload.clone();
+            let len = payload.len();
+            let report = SimCluster::new(spec_for(nodes)).run(move |env| {
+                let w = env.world();
+                let mut buf = if w.rank() == root { payload2.clone() } else { vec![0u8; len] };
+                coll::bcast(env, &w, root, &mut buf, algo);
+                buf
+            });
+            for (r, got) in report.outputs.iter().enumerate() {
+                if got != payload {
+                    return Err(format!("rank {r} corrupted payload (algo {algo:?})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_allgather_is_exact_concatenation() {
+    run(
+        "allgather-concatenation",
+        12,
+        |rng| {
+            let nodes = arb_nodes(rng);
+            let m = 1 + rng.below(700);
+            let algo = match rng.below(3) {
+                0 => coll::AllgatherAlgo::Bruck,
+                1 => coll::AllgatherAlgo::Ring,
+                _ => coll::AllgatherAlgo::Auto,
+            };
+            (nodes, m, algo)
+        },
+        |(nodes, m, algo)| {
+            let (m, algo) = (*m, *algo);
+            let report = SimCluster::new(spec_for(nodes)).run(move |env| {
+                let w = env.world();
+                let mine: Vec<u8> = (0..m).map(|i| (w.rank() * 37 + i) as u8).collect();
+                let mut out = vec![0u8; m * w.size()];
+                coll::allgather(env, &w, &mine, &mut out, algo);
+                out
+            });
+            let world: usize = nodes.iter().sum();
+            let expect: Vec<u8> =
+                (0..world).flat_map(|r| (0..m).map(move |i| (r * 37 + i) as u8)).collect();
+            for got in &report.outputs {
+                if got != &expect {
+                    return Err(format!("mismatch (algo {algo:?}, m {m})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_allreduce_matches_oracle_within_fp_reordering() {
+    run(
+        "allreduce-oracle",
+        12,
+        |rng| {
+            let nodes = arb_nodes(rng);
+            let n_elems = 1 + rng.below(600);
+            let algo = if rng.below(2) == 0 {
+                coll::AllreduceAlgo::RecursiveDoubling
+            } else {
+                coll::AllreduceAlgo::Rabenseifner
+            };
+            (nodes, n_elems, algo)
+        },
+        |(nodes, n_elems, algo)| {
+            let (n_elems, algo) = (*n_elems, *algo);
+            let report = SimCluster::new(spec_for(nodes)).run(move |env| {
+                let w = env.world();
+                let vals: Vec<f64> = (0..n_elems).map(|i| ((w.rank() + 1) * (i + 1)) as f64 * 0.25).collect();
+                let mut buf = hympi::util::to_bytes(&vals).to_vec();
+                coll::allreduce(
+                    env,
+                    &w,
+                    hympi::mpi::Datatype::F64,
+                    hympi::mpi::ReduceOp::Sum,
+                    &mut buf,
+                    algo,
+                );
+                hympi::util::cast_slice::<f64>(&buf)
+            });
+            let world: usize = nodes.iter().sum();
+            let rank_sum: f64 = (1..=world).map(|r| r as f64).sum();
+            for got in &report.outputs {
+                for (i, &v) in got.iter().enumerate() {
+                    let expect = rank_sum * (i + 1) as f64 * 0.25;
+                    if (v - expect).abs() > 1e-9 * expect.abs().max(1.0) {
+                        return Err(format!("elem {i}: {v} vs {expect} (algo {algo:?})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_engine_vclocks_nonnegative_and_finite() {
+    run(
+        "vclock-sanity",
+        16,
+        |rng| arb_nodes(rng),
+        |nodes| {
+            let report = SimCluster::new(spec_for(nodes)).run(|env| {
+                let w = env.world();
+                env.barrier(&w);
+                env.vclock()
+            });
+            for v in &report.vtimes {
+                if !v.is_finite() || *v < 0.0 {
+                    return Err(format!("bad vclock {v}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
