@@ -1,0 +1,200 @@
+//! Rooted gather (`MPI_Gather` / `MPI_Gatherv` baselines).
+//!
+//! [`gather`] is a binomial tree (⌈log2 p⌉ rounds): vrank `v` accumulates
+//! the contiguous vrank-block range of its subtree and forwards it upward
+//! in one message — the standard tree gather of production MPI libraries.
+//! [`gatherv`] is the irregular linear variant used over small bridge
+//! communicators (one message per non-root member), where the root's
+//! ingest — not tree depth — bounds latency.
+
+use crate::mpi::env::{opcode, ProcEnv};
+use crate::mpi::Communicator;
+
+/// Gather `mine` from every rank into `out` at `root` (rank-major order;
+/// `out.len() = mine.len() * comm.size()`, significant only at the root —
+/// pass `None` elsewhere).
+pub fn gather(
+    env: &mut ProcEnv,
+    comm: &Communicator,
+    root: usize,
+    mine: &[u8],
+    out: Option<&mut [u8]>,
+) {
+    let p = comm.size();
+    let me = comm.rank();
+    let m = mine.len();
+    assert!(root < p);
+    if p == 1 {
+        out.expect("root must supply an output buffer").copy_from_slice(mine);
+        return;
+    }
+    let tag = env.next_coll_tag(comm, opcode::GATHER);
+    let vrank = (me + p - root) % p;
+    let to_comm = |v: usize| (v + root) % p;
+
+    // acc holds the blocks of vranks [vrank, vrank + width) in vrank
+    // order; width doubles as children report in.
+    let mut acc = mine.to_vec();
+    let mut mask = 1usize;
+    while mask < p {
+        if vrank & mask != 0 {
+            // My subtree is complete: ship it to the parent and leave.
+            let parent = vrank - mask;
+            env.send_vec(comm, to_comm(parent), tag, acc);
+            acc = Vec::new();
+            break;
+        }
+        let child = vrank + mask;
+        if child < p {
+            let nblocks = mask.min(p - child);
+            let mut sub = vec![0u8; nblocks * m];
+            env.recv_into(comm, Some(to_comm(child)), tag, &mut sub);
+            acc.extend_from_slice(&sub);
+        }
+        mask <<= 1;
+    }
+
+    if me == root {
+        let out = out.expect("root must supply an output buffer");
+        assert_eq!(out.len(), m * p, "gather output buffer size");
+        debug_assert_eq!(acc.len(), m * p);
+        // acc is in vrank order; rotate back to communicator-rank order.
+        for v in 0..p {
+            let r = to_comm(v);
+            out[r * m..(r + 1) * m].copy_from_slice(&acc[v * m..(v + 1) * m]);
+        }
+    }
+}
+
+/// Irregular linear gather: rank `r` contributes `counts[r]` bytes; the
+/// root receives the concatenation in rank order. Used over leader/bridge
+/// communicators whose per-node block sizes differ (§5.2.2 irregularity).
+pub fn gatherv(
+    env: &mut ProcEnv,
+    comm: &Communicator,
+    root: usize,
+    counts: &[usize],
+    mine: &[u8],
+    out: Option<&mut [u8]>,
+) {
+    let p = comm.size();
+    let me = comm.rank();
+    assert_eq!(counts.len(), p, "one count per rank");
+    assert_eq!(mine.len(), counts[me], "my contribution must match counts[me]");
+    let displ = super::displs_of(counts);
+    if me == root {
+        let out = out.expect("root must supply an output buffer");
+        let total: usize = counts.iter().sum();
+        assert_eq!(out.len(), total, "gatherv output buffer size");
+        out[displ[me]..displ[me] + counts[me]].copy_from_slice(mine);
+        if p == 1 {
+            return;
+        }
+        let tag = env.next_coll_tag(comm, opcode::GATHER);
+        for _ in 0..p - 1 {
+            // Any-source: arrivals identify their slot by sender rank.
+            let (src, data) = env.recv(comm, None, tag);
+            assert_eq!(data.len(), counts[src]);
+            out[displ[src]..displ[src] + counts[src]].copy_from_slice(&data);
+        }
+    } else {
+        let tag = env.next_coll_tag(comm, opcode::GATHER);
+        env.send(comm, root, tag, mine);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::testutil::{payload, run_nodes};
+
+    fn check(nodes: &[usize], m: usize, root: usize) {
+        let p: usize = nodes.iter().sum();
+        let expect: Vec<u8> = (0..p).flat_map(|r| payload(r, m)).collect();
+        let out = run_nodes(nodes, move |env| {
+            let w = env.world();
+            let mine = payload(w.rank(), m);
+            let mut buf = vec![0u8; m * w.size()];
+            let is_root = w.rank() == root;
+            gather(env, &w, root, &mine, if is_root { Some(&mut buf) } else { None });
+            (is_root, buf)
+        });
+        for (r, (is_root, buf)) in out.into_iter().enumerate() {
+            if is_root {
+                assert_eq!(buf, expect, "nodes {nodes:?} m {m} root {root} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn binomial_various_shapes_and_roots() {
+        check(&[5, 3], 16, 0);
+        check(&[5, 3], 16, 6);
+        check(&[5, 3, 4], 9, 11);
+        check(&[4, 4], 1, 3);
+        check(&[2], 33, 1);
+        check(&[1], 8, 0);
+        check(&[3, 3, 1], 5, 2);
+    }
+
+    #[test]
+    fn gatherv_irregular() {
+        let out = run_nodes(&[5, 3], |env| {
+            let w = env.world();
+            let counts: Vec<usize> = (0..w.size()).map(|r| 2 * r + 1).collect();
+            let mine = payload(w.rank(), counts[w.rank()]);
+            let total: usize = counts.iter().sum();
+            let mut buf = vec![0u8; total];
+            let is_root = w.rank() == 3;
+            gatherv(env, &w, 3, &counts, &mine, if is_root { Some(&mut buf) } else { None });
+            (is_root, buf)
+        });
+        let expect: Vec<u8> = (0..8).flat_map(|r| payload(r, 2 * r + 1)).collect();
+        assert_eq!(out[3].1, expect);
+    }
+
+    #[test]
+    fn gatherv_zero_counts() {
+        let out = run_nodes(&[4], |env| {
+            let w = env.world();
+            let counts = vec![4usize, 0, 4, 0];
+            let mine = if w.rank() % 2 == 0 { payload(w.rank(), 4) } else { vec![] };
+            let mut buf = vec![0u8; 8];
+            let is_root = w.rank() == 0;
+            gatherv(env, &w, 0, &counts, &mine, if is_root { Some(&mut buf) } else { None });
+            buf
+        });
+        assert_eq!(out[0], [payload(0, 4), payload(2, 4)].concat());
+    }
+
+    #[test]
+    fn binomial_beats_linear_vtime_at_scale() {
+        // Tree depth log p must beat the root's linear ingest of p−1
+        // messages for small blocks.
+        let m = 64;
+        let tree = run_nodes(&[8, 8], move |env| {
+            let w = env.world();
+            let mine = payload(w.rank(), m);
+            let mut buf = vec![0u8; m * w.size()];
+            let is_root = w.rank() == 0;
+            let t0 = env.vclock();
+            gather(env, &w, 0, &mine, if is_root { Some(&mut buf) } else { None });
+            env.vclock() - t0
+        })
+        .into_iter()
+        .fold(0.0f64, f64::max);
+        let linear = run_nodes(&[8, 8], move |env| {
+            let w = env.world();
+            let counts = vec![m; w.size()];
+            let mine = payload(w.rank(), m);
+            let mut buf = vec![0u8; m * w.size()];
+            let is_root = w.rank() == 0;
+            let t0 = env.vclock();
+            gatherv(env, &w, 0, &counts, &mine, if is_root { Some(&mut buf) } else { None });
+            env.vclock() - t0
+        })
+        .into_iter()
+        .fold(0.0f64, f64::max);
+        assert!(tree < linear, "binomial {tree} must beat linear {linear} at 16 ranks");
+    }
+}

@@ -15,20 +15,40 @@
 pub mod allgather;
 pub mod allreduce;
 pub mod bcast;
+pub mod gather;
 pub mod hier;
+pub mod plan;
 pub mod reduce;
+pub mod reduce_scatter;
+pub mod scatter;
 pub mod tuning;
 
 pub use allgather::{allgather, allgatherv, AllgatherAlgo};
 pub use allreduce::{allreduce, AllreduceAlgo};
 pub use bcast::{bcast, BcastAlgo};
+pub use gather::{gather, gatherv};
+pub use plan::{CollIo, CollOp, CollPlan, Flavor, PlanCache, PlanKey};
 pub use reduce::reduce;
+pub use reduce_scatter::{reduce_scatter, reduce_scatterv};
+pub use scatter::{scatter, scatterv};
 pub use tuning::Tuning;
 
 /// Largest power of two ≤ `p` (`p ≥ 1`).
 pub(crate) fn pow2_le(p: usize) -> usize {
     debug_assert!(p >= 1);
     1 << (usize::BITS - 1 - p.leading_zeros())
+}
+
+/// Byte displacements of per-rank counts (exclusive prefix sums) — the
+/// `displs` of every irregular collective (the paper's Fig. 6 pattern).
+pub(crate) fn displs_of(counts: &[usize]) -> Vec<usize> {
+    let mut out = Vec::with_capacity(counts.len());
+    let mut acc = 0usize;
+    for &c in counts {
+        out.push(acc);
+        acc += c;
+    }
+    out
 }
 
 /// Smallest power of two ≥ `p`.

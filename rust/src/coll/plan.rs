@@ -1,0 +1,1006 @@
+//! The persistent-collective engine: plan once, execute many.
+//!
+//! The paper's §4.1 wrapper primitives are already "init once, invoke
+//! many" objects (`AllgatherParam::create`, `TransTables::create`, the
+//! shared windows); the pure-MPI baselines resolve their tuned algorithm
+//! from `(p, bytes)` on every call. This module unifies both behind one
+//! abstraction:
+//!
+//! - [`CollPlan`] — a planned collective: all one-off state (resolved
+//!   algorithm, communicator splits, shared windows, translation tables,
+//!   recvcounts/displs) is bound at plan time; [`CollPlan::execute`] runs
+//!   one invocation against caller buffers ([`CollIo`]).
+//! - [`PlanCache`] — a per-rank cache keyed by
+//!   [`PlanKey`]`(comm, op, count, dtype, algo-flavor)`. Repeated
+//!   invocations — the inner loops of SUMMA/Poisson/BPMF — hit the cache
+//!   and skip re-planning, re-deriving translation tables and
+//!   re-allocating shared windows entirely. Per-communicator one-off
+//!   wrapper state (`comm_package`, size sets, translation tables, the
+//!   library-internal [`HierCtx`]) is shared across all plans on that
+//!   communicator.
+//!
+//! Three flavors implement every operation (where meaningful):
+//! [`Flavor::Pure`] (tuned Open-MPI-style baselines), [`Flavor::Hier`]
+//! (SMP-aware hierarchical pure MPI, the cray-mpich shape) and
+//! [`Flavor::Hybrid`] (the paper's MPI+MPI wrappers, parameterized by the
+//! §4.5 sync scheme and the §5.2.4 step-1 method).
+//!
+//! Planning is collective: like every MPI collective, all members of a
+//! communicator must create and execute plans in the same order. Window
+//! teardown is collective too — call [`PlanCache::free`] symmetrically.
+
+use super::allgather::{allgather, AllgatherAlgo};
+use super::allreduce::{allreduce, AllreduceAlgo};
+use super::bcast::{bcast, BcastAlgo};
+use super::gather::gather;
+use super::hier::{hier_allgather, hier_allreduce, hier_bcast, HierCtx};
+use super::reduce::reduce;
+use super::reduce_scatter::reduce_scatter;
+use super::scatter::scatter;
+use super::tuning::Tuning;
+use crate::hybrid::allgather::{hy_allgather, sizeset_gather, AllgatherParam};
+use crate::hybrid::allreduce::{alloc_allreduce_win, hy_allreduce, AllreduceMethod};
+use crate::hybrid::bcast::{hy_bcast, TransTables};
+use crate::hybrid::gather::hy_gather;
+use crate::hybrid::package::CommPackage;
+use crate::hybrid::reduce_scatter::{alloc_reduce_scatter_win, hy_reduce_scatter};
+use crate::hybrid::scatter::hy_scatter;
+use crate::hybrid::shmem::HyWin;
+use crate::hybrid::sync::SyncScheme;
+use crate::mpi::env::ProcEnv;
+use crate::mpi::{Communicator, Datatype, ReduceOp};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Which collective operation a plan executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CollOp {
+    Allgather,
+    Bcast,
+    Allreduce,
+    Reduce,
+    ReduceScatter,
+    Gather,
+    Scatter,
+}
+
+/// Which engine executes a plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Flavor {
+    /// Tuned flat pure-MPI algorithm (Open MPI 4.0.1-style switch
+    /// points), resolved once at plan time.
+    Pure,
+    /// SMP-aware hierarchical pure MPI (node gather → bridge → node
+    /// fan-out; the cray-mpich shape). Allgather/Bcast/Allreduce only.
+    Hier,
+    /// The paper's hybrid MPI+MPI wrappers.
+    Hybrid {
+        /// §4.5 yellow-sync implementation.
+        scheme: SyncScheme,
+        /// §5.2.4 step-1 method (allreduce / reduce-scatter family).
+        method: AllreduceMethod,
+    },
+}
+
+impl Flavor {
+    /// Hybrid with the paper's final configuration (tuned method cutoff).
+    pub fn hybrid(scheme: SyncScheme) -> Flavor {
+        Flavor::Hybrid { scheme, method: AllreduceMethod::Tuned }
+    }
+}
+
+/// Cache key: one plan per `(communicator, op, payload size, dtype,
+/// reduce-op, flavor, tag)`. `count` is the op's natural per-rank unit in
+/// bytes (allgather/gather/scatter block, bcast payload, allreduce
+/// operand, reduce-scatter result block). `tag` disambiguates plans that
+/// would otherwise collide but must not share a window (e.g. BPMF's two
+/// factor tables of equal size).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub comm: u64,
+    pub op: CollOp,
+    pub count: usize,
+    pub dtype: Datatype,
+    pub rop: Option<ReduceOp>,
+    pub flavor: Flavor,
+    pub tag: u32,
+}
+
+impl PlanKey {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        comm: &Communicator,
+        op: CollOp,
+        count: usize,
+        dtype: Datatype,
+        rop: Option<ReduceOp>,
+        flavor: Flavor,
+        tag: u32,
+    ) -> PlanKey {
+        PlanKey { comm: comm.id(), op, count, dtype, rop, flavor, tag }
+    }
+}
+
+/// Buffer roles of one plan invocation. Ops not listed for a plan's
+/// [`CollOp`] panic — the plan/io pairing is a programming error, not a
+/// runtime condition.
+pub enum CollIo<'a> {
+    /// `send`: my `count`-byte block; `recv`: the rank-ordered
+    /// concatenation (`count·p` bytes). `recv: None` is allowed for
+    /// window-backed plans — the result stays in the shared window
+    /// (read it with [`CollPlan::result_view`], the paper's in-place
+    /// sharing).
+    Allgather { send: &'a [u8], recv: Option<&'a mut [u8]> },
+    /// `buf` holds the payload at `root` on entry, and on return the
+    /// broadcast payload on every rank that passed `Some`. Non-root ranks
+    /// of window-backed plans may pass `None` and read in place.
+    Bcast { root: usize, buf: Option<&'a mut [u8]> },
+    /// In-place reduction of `buf` (`count` bytes). `fetch: false` lets
+    /// window-backed plans leave the result in slot `G` (read it with
+    /// [`CollPlan::result_view`] — the §4.4 visible-change sharing, and
+    /// what the paper's micro-benchmark times); pure plans always
+    /// deliver into `buf`.
+    Allreduce { buf: &'a mut [u8], fetch: bool },
+    /// Rooted reduction: `send` everywhere, `recv` significant (and
+    /// required) at `root`.
+    Reduce { root: usize, send: &'a [u8], recv: Option<&'a mut [u8]> },
+    /// `send`: my full `count·p`-byte vector; `recv`: my reduced
+    /// `count`-byte block.
+    ReduceScatter { send: &'a [u8], recv: &'a mut [u8] },
+    /// `send`: my `count`-byte block; `recv` significant at `root`
+    /// (`count·p` bytes; `None` lets a window-backed root read in place).
+    Gather { root: usize, send: &'a [u8], recv: Option<&'a mut [u8]> },
+    /// `send` significant at `root` (`count·p` bytes); `recv`: my block.
+    Scatter { root: usize, send: Option<&'a [u8]>, recv: &'a mut [u8] },
+}
+
+/// A planned collective: init-once state bound, invoke-many execution.
+pub trait CollPlan {
+    /// The key this plan was built under.
+    fn key(&self) -> &PlanKey;
+
+    /// Run one invocation. All communicator members must call `execute`
+    /// on their matching plan in the same order (MPI collective rule).
+    fn execute(&mut self, env: &mut ProcEnv, io: CollIo<'_>);
+
+    /// Zero-copy view of the result region for window-backed (hybrid)
+    /// plans: allgather/bcast/gather read at window offset 0, allreduce
+    /// reads slot `G`, reduce-scatter and scatter read the caller's own
+    /// block. `None` for pure plans — their result lives in caller
+    /// buffers. Valid after `execute` returns and until the next
+    /// `execute` on this plan.
+    fn result_view(&self, len: usize) -> Option<&[u8]> {
+        let _ = len;
+        None
+    }
+
+    /// Window-backed plans: the backing shared window (the paper's
+    /// `Wrapper_Get_localpointer` surface, e.g. for in-place
+    /// initialization of a gathered table).
+    fn window(&self) -> Option<&HyWin> {
+        None
+    }
+
+    /// Collective teardown (frees shared windows). Called by
+    /// [`PlanCache::free`] in plan-creation order on every rank.
+    fn teardown(&mut self, env: &mut ProcEnv) {
+        let _ = env;
+    }
+
+    /// One-line description for reports and debugging.
+    fn describe(&self) -> String;
+}
+
+// ---------------------------------------------------------------------
+// Pure plans: the tuned algorithm is resolved once, at plan time.
+// ---------------------------------------------------------------------
+
+struct PurePlan {
+    key: PlanKey,
+    comm: Communicator,
+    ag_algo: AllgatherAlgo,
+    bc_algo: BcastAlgo,
+    ar_algo: AllreduceAlgo,
+}
+
+impl PurePlan {
+    fn new(key: PlanKey, comm: &Communicator) -> PurePlan {
+        let t = Tuning::default();
+        let p = comm.size();
+        PurePlan {
+            ag_algo: t.allgather_algo(p, key.count),
+            bc_algo: t.bcast_algo(p, key.count),
+            ar_algo: t.allreduce_algo(p, key.count),
+            key,
+            comm: comm.clone(),
+        }
+    }
+}
+
+impl CollPlan for PurePlan {
+    fn key(&self) -> &PlanKey {
+        &self.key
+    }
+
+    fn execute(&mut self, env: &mut ProcEnv, io: CollIo<'_>) {
+        match (self.key.op, io) {
+            (CollOp::Allgather, CollIo::Allgather { send, recv }) => {
+                let recv = recv.expect("pure allgather requires a recv buffer");
+                allgather(env, &self.comm, send, recv, self.ag_algo);
+            }
+            (CollOp::Bcast, CollIo::Bcast { root, buf }) => {
+                let buf = buf.expect("pure bcast requires a buffer on every rank");
+                bcast(env, &self.comm, root, buf, self.bc_algo);
+            }
+            (CollOp::Allreduce, CollIo::Allreduce { buf, .. }) => {
+                let (dtype, rop) = (self.key.dtype, self.key.rop.expect("allreduce plan binds an op"));
+                allreduce(env, &self.comm, dtype, rop, buf, self.ar_algo);
+            }
+            (CollOp::Reduce, CollIo::Reduce { root, send, recv }) => {
+                let (dtype, rop) = (self.key.dtype, self.key.rop.expect("reduce plan binds an op"));
+                reduce(env, &self.comm, root, dtype, rop, send, recv);
+            }
+            (CollOp::ReduceScatter, CollIo::ReduceScatter { send, recv }) => {
+                let (dtype, rop) =
+                    (self.key.dtype, self.key.rop.expect("reduce_scatter plan binds an op"));
+                reduce_scatter(env, &self.comm, dtype, rop, send, recv);
+            }
+            (CollOp::Gather, CollIo::Gather { root, send, recv }) => {
+                gather(env, &self.comm, root, send, recv);
+            }
+            (CollOp::Scatter, CollIo::Scatter { root, send, recv }) => {
+                scatter(env, &self.comm, root, send, recv);
+            }
+            _ => panic!("{}: incompatible CollIo", self.describe()),
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("pure {:?} on comm {} ({} B)", self.key.op, self.key.comm, self.key.count)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Hierarchical pure-MPI plans (library-internal SMP awareness).
+// ---------------------------------------------------------------------
+
+struct HierPlan {
+    key: PlanKey,
+    ctx: Rc<HierCtx>,
+}
+
+impl CollPlan for HierPlan {
+    fn key(&self) -> &PlanKey {
+        &self.key
+    }
+
+    fn execute(&mut self, env: &mut ProcEnv, io: CollIo<'_>) {
+        match (self.key.op, io) {
+            (CollOp::Allgather, CollIo::Allgather { send, recv }) => {
+                let recv = recv.expect("hier allgather requires a recv buffer");
+                hier_allgather(env, &self.ctx, send, recv);
+            }
+            (CollOp::Bcast, CollIo::Bcast { root, buf }) => {
+                let buf = buf.expect("hier bcast requires a buffer on every rank");
+                hier_bcast(env, &self.ctx, root, buf);
+            }
+            (CollOp::Allreduce, CollIo::Allreduce { buf, .. }) => {
+                let (dtype, rop) = (self.key.dtype, self.key.rop.expect("allreduce plan binds an op"));
+                hier_allreduce(env, &self.ctx, dtype, rop, buf);
+            }
+            _ => panic!("{}: incompatible CollIo", self.describe()),
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("hier {:?} on comm {} ({} B)", self.key.op, self.key.comm, self.key.count)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Hybrid plans: window + one-off wrapper state owned by the plan.
+// ---------------------------------------------------------------------
+
+struct HybridPlan {
+    key: PlanKey,
+    pkg: Rc<CommPackage>,
+    win: Option<HyWin>,
+    /// Bridge recvcounts/displs (allgather/gather/scatter family).
+    param: Option<AllgatherParam>,
+    /// Rank translation tables (rooted ops).
+    tables: Option<Rc<TransTables>>,
+    /// Per-node shmem sizes (reduce-scatter bridge counts).
+    sizeset: Vec<usize>,
+    scheme: SyncScheme,
+    method: AllreduceMethod,
+}
+
+impl HybridPlan {
+    fn win_ref(&self) -> &HyWin {
+        self.win.as_ref().expect("plan already freed")
+    }
+}
+
+impl CollPlan for HybridPlan {
+    fn key(&self) -> &PlanKey {
+        &self.key
+    }
+
+    fn execute(&mut self, env: &mut ProcEnv, io: CollIo<'_>) {
+        // Split borrows once: the window is mutably borrowed for the
+        // wrapper call while the shared one-off state (package, params,
+        // tables, sizeset) is read in place — no per-invocation clones.
+        let HybridPlan { key, pkg, win, param, tables, sizeset, scheme, method } = self;
+        let (scheme, method) = (*scheme, *method);
+        let count = key.count;
+        let me = pkg.parent.rank();
+        let p = pkg.parent.size();
+        let win = win.as_mut().expect("plan already freed");
+        match (key.op, io) {
+            (CollOp::Allgather, CollIo::Allgather { send, recv }) => {
+                assert_eq!(send.len(), count);
+                let param = param.as_ref().expect("allgather plan has params");
+                let off = win.local_ptr(me, count);
+                win.store(env, off, send);
+                hy_allgather(env, pkg, win, param, count, scheme);
+                if let Some(recv) = recv {
+                    assert_eq!(recv.len(), count * p);
+                    win.win.read_into(0, recv);
+                    env.charge_memcpy(recv.len());
+                }
+            }
+            (CollOp::Bcast, CollIo::Bcast { root, buf }) => {
+                let tables = tables.as_ref().expect("bcast plan has tables");
+                let is_root = me == root;
+                {
+                    let payload: Option<&[u8]> = if is_root {
+                        let b = buf.as_deref().expect("root must supply the payload");
+                        assert_eq!(b.len(), count);
+                        Some(b)
+                    } else {
+                        None
+                    };
+                    hy_bcast(env, pkg, win, tables, root, payload, count, scheme);
+                }
+                if !is_root {
+                    if let Some(out) = buf {
+                        assert_eq!(out.len(), count);
+                        win.win.read_into(0, out);
+                        env.charge_memcpy(count);
+                    }
+                }
+            }
+            (CollOp::Allreduce, CollIo::Allreduce { buf, fetch }) => {
+                assert_eq!(buf.len(), count);
+                let (dtype, rop) = (key.dtype, key.rop.expect("allreduce plan binds an op"));
+                let off = win.local_ptr(pkg.shmem.rank(), count);
+                win.store(env, off, buf);
+                let g = hy_allreduce(env, pkg, win, dtype, rop, count, method, scheme);
+                if fetch {
+                    win.win.read_into(g, buf);
+                    env.charge_memcpy(count);
+                }
+            }
+            (CollOp::ReduceScatter, CollIo::ReduceScatter { send, recv }) => {
+                assert_eq!(send.len(), count * p);
+                assert_eq!(recv.len(), count);
+                let (dtype, rop) = (key.dtype, key.rop.expect("reduce_scatter plan binds an op"));
+                let slot = win.local_ptr(pkg.shmem.rank(), count * p);
+                win.store(env, slot, send);
+                let off =
+                    hy_reduce_scatter(env, pkg, win, sizeset, dtype, rop, count, method, scheme);
+                win.win.read_into(off, recv);
+                env.charge_memcpy(count);
+            }
+            (CollOp::Gather, CollIo::Gather { root, send, recv }) => {
+                assert_eq!(send.len(), count);
+                let param = param.as_ref().expect("gather plan has params");
+                let tables = tables.as_ref().expect("gather plan has tables");
+                let off = win.local_ptr(me, count);
+                win.store(env, off, send);
+                hy_gather(env, pkg, win, param, tables, root, count, scheme);
+                if me == root {
+                    if let Some(recv) = recv {
+                        assert_eq!(recv.len(), count * p);
+                        win.win.read_into(0, recv);
+                        env.charge_memcpy(recv.len());
+                    }
+                }
+            }
+            (CollOp::Scatter, CollIo::Scatter { root, send, recv }) => {
+                assert_eq!(recv.len(), count);
+                let param = param.as_ref().expect("scatter plan has params");
+                let tables = tables.as_ref().expect("scatter plan has tables");
+                let payload = if me == root {
+                    let s = send.expect("root must supply the send buffer");
+                    assert_eq!(s.len(), count * p);
+                    Some(s)
+                } else {
+                    None
+                };
+                hy_scatter(env, pkg, win, param, tables, root, payload, count, scheme);
+                let off = win.local_ptr(me, count);
+                win.win.read_into(off, recv);
+                env.charge_memcpy(count);
+            }
+            _ => panic!("hybrid plan: incompatible CollIo"),
+        }
+    }
+
+    fn result_view(&self, len: usize) -> Option<&[u8]> {
+        let win = self.win_ref();
+        let off = match self.key.op {
+            CollOp::Allgather | CollOp::Bcast | CollOp::Gather => 0,
+            // A scatter result is the caller's own block, not the full
+            // vector — rank r's block lives at its affinity slot.
+            CollOp::Scatter => self.pkg.parent.rank() * self.key.count,
+            CollOp::Allreduce => (self.pkg.shmem_size + 1) * self.key.count,
+            CollOp::ReduceScatter => {
+                let total = self.key.count * self.pkg.parent.size();
+                (self.pkg.shmem_size + 1) * total + self.pkg.parent.rank() * self.key.count
+            }
+            CollOp::Reduce => return None,
+        };
+        // Safety: protocol-level — callers read between the plan's yellow
+        // sync and the next execute, per the window discipline.
+        Some(unsafe { win.win.slice(off, len) })
+    }
+
+    fn window(&self) -> Option<&HyWin> {
+        self.win.as_ref()
+    }
+
+    fn teardown(&mut self, env: &mut ProcEnv) {
+        if let Some(win) = self.win.take() {
+            win.free(env, &self.pkg);
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "hybrid {:?} on comm {} ({} B, {:?}/{:?})",
+            self.key.op, self.key.comm, self.key.count, self.scheme, self.method
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-communicator one-off wrapper state, shared across plans.
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct CommCtx {
+    pkg: Option<Rc<CommPackage>>,
+    sizeset: Option<Rc<Vec<usize>>>,
+    tables: Option<Rc<TransTables>>,
+    hier: Option<Rc<HierCtx>>,
+}
+
+/// The per-rank plan cache. See the module docs for the contract; in
+/// short: identical call sequences on every member rank, like any MPI
+/// collective, and a symmetric [`PlanCache::free`] at the end if hybrid
+/// plans were created.
+#[derive(Default)]
+pub struct PlanCache {
+    entries: Vec<(PlanKey, Box<dyn CollPlan>)>,
+    index: HashMap<PlanKey, usize>,
+    comms: HashMap<u64, CommCtx>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Cache hits so far (executions that reused an existing plan).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Cache misses so far (= number of plans built).
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Number of live plans.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The shared `comm_package` for `comm`, if any hybrid plan (or an
+    /// explicit [`PlanCache::package`] call) created one.
+    pub fn package(&self, comm: &Communicator) -> Option<Rc<CommPackage>> {
+        self.comms.get(&comm.id()).and_then(|c| c.pkg.clone())
+    }
+
+    fn pkg(&mut self, env: &mut ProcEnv, comm: &Communicator) -> Rc<CommPackage> {
+        let ctx = self.comms.entry(comm.id()).or_default();
+        if ctx.pkg.is_none() {
+            ctx.pkg = Some(Rc::new(CommPackage::create(env, comm)));
+        }
+        ctx.pkg.clone().unwrap()
+    }
+
+    fn sizeset(&mut self, env: &mut ProcEnv, comm: &Communicator) -> Rc<Vec<usize>> {
+        let pkg = self.pkg(env, comm);
+        let ctx = self.comms.get_mut(&comm.id()).unwrap();
+        if ctx.sizeset.is_none() {
+            ctx.sizeset = Some(Rc::new(sizeset_gather(env, &pkg)));
+        }
+        ctx.sizeset.clone().unwrap()
+    }
+
+    fn tables(&mut self, env: &mut ProcEnv, comm: &Communicator) -> Rc<TransTables> {
+        let pkg = self.pkg(env, comm);
+        let ctx = self.comms.get_mut(&comm.id()).unwrap();
+        if ctx.tables.is_none() {
+            ctx.tables = Some(Rc::new(TransTables::create(env, &pkg)));
+        }
+        ctx.tables.clone().unwrap()
+    }
+
+    fn hier(&mut self, env: &mut ProcEnv, comm: &Communicator) -> Rc<HierCtx> {
+        let ctx = self.comms.entry(comm.id()).or_default();
+        if ctx.hier.is_none() {
+            ctx.hier = Some(Rc::new(HierCtx::create(env, comm)));
+        }
+        ctx.hier.clone().unwrap()
+    }
+
+    /// Get-or-build the plan for a key; returns its index. Building a
+    /// hybrid plan is collective (splits/windows/params) — all member
+    /// ranks must plan in the same order.
+    #[allow(clippy::too_many_arguments)]
+    pub fn plan(
+        &mut self,
+        env: &mut ProcEnv,
+        comm: &Communicator,
+        op: CollOp,
+        count: usize,
+        dtype: Datatype,
+        rop: Option<ReduceOp>,
+        flavor: Flavor,
+    ) -> usize {
+        self.plan_tagged(env, comm, op, count, dtype, rop, flavor, 0)
+    }
+
+    /// [`PlanCache::plan`] with an explicit disambiguation tag.
+    #[allow(clippy::too_many_arguments)]
+    pub fn plan_tagged(
+        &mut self,
+        env: &mut ProcEnv,
+        comm: &Communicator,
+        op: CollOp,
+        count: usize,
+        dtype: Datatype,
+        rop: Option<ReduceOp>,
+        flavor: Flavor,
+        tag: u32,
+    ) -> usize {
+        let key = PlanKey::new(comm, op, count, dtype, rop, flavor, tag);
+        if let Some(&i) = self.index.get(&key) {
+            self.hits += 1;
+            return i;
+        }
+        self.misses += 1;
+        let plan: Box<dyn CollPlan> = match flavor {
+            Flavor::Pure => Box::new(PurePlan::new(key.clone(), comm)),
+            Flavor::Hier => {
+                assert!(
+                    matches!(op, CollOp::Allgather | CollOp::Bcast | CollOp::Allreduce),
+                    "no hierarchical plan for {op:?}"
+                );
+                Box::new(HierPlan { key: key.clone(), ctx: self.hier(env, comm) })
+            }
+            Flavor::Hybrid { scheme, method } => {
+                let pkg = self.pkg(env, comm);
+                let p = comm.size();
+                let (win, param, tables, sizeset) = match op {
+                    CollOp::Allgather => {
+                        let sizeset = self.sizeset(env, comm);
+                        let param = AllgatherParam::create(env, &pkg, count, &sizeset);
+                        let win = pkg.alloc_shared(env, count, 1, p);
+                        (win, Some(param), None, sizeset.to_vec())
+                    }
+                    CollOp::Bcast => {
+                        let tables = self.tables(env, comm);
+                        let win = pkg.alloc_shared(env, count, 1, 1);
+                        (win, None, Some(tables), Vec::new())
+                    }
+                    CollOp::Allreduce => {
+                        let win = alloc_allreduce_win(env, &pkg, count);
+                        (win, None, None, Vec::new())
+                    }
+                    CollOp::ReduceScatter => {
+                        let sizeset = self.sizeset(env, comm);
+                        let win = alloc_reduce_scatter_win(env, &pkg, count);
+                        (win, None, None, sizeset.to_vec())
+                    }
+                    CollOp::Gather | CollOp::Scatter => {
+                        let sizeset = self.sizeset(env, comm);
+                        let param = AllgatherParam::create(env, &pkg, count, &sizeset);
+                        let tables = self.tables(env, comm);
+                        let win = pkg.alloc_shared(env, count, 1, p);
+                        (win, Some(param), Some(tables), sizeset.to_vec())
+                    }
+                    CollOp::Reduce => panic!("no hybrid plan for Reduce (use Allreduce or Gather)"),
+                };
+                Box::new(HybridPlan {
+                    key: key.clone(),
+                    pkg,
+                    win: Some(win),
+                    param,
+                    tables,
+                    sizeset,
+                    scheme,
+                    method,
+                })
+            }
+        };
+        self.entries.push((key.clone(), plan));
+        let i = self.entries.len() - 1;
+        self.index.insert(key, i);
+        i
+    }
+
+    /// Look up a live plan by key.
+    pub fn get(&self, key: &PlanKey) -> Option<&dyn CollPlan> {
+        self.index.get(key).map(|&i| self.entries[i].1.as_ref())
+    }
+
+    // ---- typed execute helpers (plan-or-hit, then run) ---------------
+
+    pub fn allgather(
+        &mut self,
+        env: &mut ProcEnv,
+        comm: &Communicator,
+        flavor: Flavor,
+        send: &[u8],
+        recv: Option<&mut [u8]>,
+    ) {
+        self.allgather_tagged(env, comm, flavor, 0, send, recv);
+    }
+
+    pub fn allgather_tagged(
+        &mut self,
+        env: &mut ProcEnv,
+        comm: &Communicator,
+        flavor: Flavor,
+        tag: u32,
+        send: &[u8],
+        recv: Option<&mut [u8]>,
+    ) {
+        let i = self.plan_tagged(
+            env, comm, CollOp::Allgather, send.len(), Datatype::U8, None, flavor, tag,
+        );
+        self.entries[i].1.execute(env, CollIo::Allgather { send, recv });
+    }
+
+    /// `len` is the payload size (needed because non-root hybrid ranks
+    /// may pass `buf: None` and read the window in place).
+    pub fn bcast(
+        &mut self,
+        env: &mut ProcEnv,
+        comm: &Communicator,
+        flavor: Flavor,
+        root: usize,
+        len: usize,
+        buf: Option<&mut [u8]>,
+    ) {
+        let i = self.plan(env, comm, CollOp::Bcast, len, Datatype::U8, None, flavor);
+        self.entries[i].1.execute(env, CollIo::Bcast { root, buf });
+    }
+
+    pub fn allreduce(
+        &mut self,
+        env: &mut ProcEnv,
+        comm: &Communicator,
+        flavor: Flavor,
+        dtype: Datatype,
+        rop: ReduceOp,
+        buf: &mut [u8],
+    ) {
+        let i = self.plan(env, comm, CollOp::Allreduce, buf.len(), dtype, Some(rop), flavor);
+        self.entries[i].1.execute(env, CollIo::Allreduce { buf, fetch: true });
+    }
+
+    /// Allreduce whose result stays in the shared window for
+    /// window-backed plans (`buf` is the operand only; read the result
+    /// with [`CollPlan::result_view`]) — the §4.4 visible-change sharing
+    /// the paper's micro-benchmark times. Pure plans still deliver into
+    /// `buf`.
+    pub fn allreduce_windowed(
+        &mut self,
+        env: &mut ProcEnv,
+        comm: &Communicator,
+        flavor: Flavor,
+        dtype: Datatype,
+        rop: ReduceOp,
+        buf: &mut [u8],
+    ) {
+        let i = self.plan(env, comm, CollOp::Allreduce, buf.len(), dtype, Some(rop), flavor);
+        self.entries[i].1.execute(env, CollIo::Allreduce { buf, fetch: false });
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn reduce(
+        &mut self,
+        env: &mut ProcEnv,
+        comm: &Communicator,
+        flavor: Flavor,
+        dtype: Datatype,
+        rop: ReduceOp,
+        root: usize,
+        send: &[u8],
+        recv: Option<&mut [u8]>,
+    ) {
+        let i = self.plan(env, comm, CollOp::Reduce, send.len(), dtype, Some(rop), flavor);
+        self.entries[i].1.execute(env, CollIo::Reduce { root, send, recv });
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn reduce_scatter(
+        &mut self,
+        env: &mut ProcEnv,
+        comm: &Communicator,
+        flavor: Flavor,
+        dtype: Datatype,
+        rop: ReduceOp,
+        send: &[u8],
+        recv: &mut [u8],
+    ) {
+        let i = self.plan(env, comm, CollOp::ReduceScatter, recv.len(), dtype, Some(rop), flavor);
+        self.entries[i].1.execute(env, CollIo::ReduceScatter { send, recv });
+    }
+
+    pub fn gather(
+        &mut self,
+        env: &mut ProcEnv,
+        comm: &Communicator,
+        flavor: Flavor,
+        root: usize,
+        send: &[u8],
+        recv: Option<&mut [u8]>,
+    ) {
+        let i = self.plan(env, comm, CollOp::Gather, send.len(), Datatype::U8, None, flavor);
+        self.entries[i].1.execute(env, CollIo::Gather { root, send, recv });
+    }
+
+    pub fn scatter(
+        &mut self,
+        env: &mut ProcEnv,
+        comm: &Communicator,
+        flavor: Flavor,
+        root: usize,
+        send: Option<&[u8]>,
+        recv: &mut [u8],
+    ) {
+        let i = self.plan(env, comm, CollOp::Scatter, recv.len(), Datatype::U8, None, flavor);
+        self.entries[i].1.execute(env, CollIo::Scatter { root, send, recv });
+    }
+
+    // ---- zero-copy result access (window-backed plans) ---------------
+
+    /// In-place view of the last allgather result (`len ≤ count·p`).
+    pub fn allgather_view(
+        &self,
+        comm: &Communicator,
+        flavor: Flavor,
+        count: usize,
+        len: usize,
+    ) -> Option<&[u8]> {
+        self.allgather_view_tagged(comm, flavor, 0, count, len)
+    }
+
+    pub fn allgather_view_tagged(
+        &self,
+        comm: &Communicator,
+        flavor: Flavor,
+        tag: u32,
+        count: usize,
+        len: usize,
+    ) -> Option<&[u8]> {
+        let key = PlanKey::new(comm, CollOp::Allgather, count, Datatype::U8, None, flavor, tag);
+        self.get(&key)?.result_view(len)
+    }
+
+    /// In-place view of the last bcast payload.
+    pub fn bcast_view(&self, comm: &Communicator, flavor: Flavor, len: usize) -> Option<&[u8]> {
+        let key = PlanKey::new(comm, CollOp::Bcast, len, Datatype::U8, None, flavor, 0);
+        self.get(&key)?.result_view(len)
+    }
+
+    /// Backing window of a plan (e.g. for in-place table initialization).
+    pub fn window_of(&self, key: &PlanKey) -> Option<&HyWin> {
+        self.get(key)?.window()
+    }
+
+    /// Collective teardown: frees every window-backed plan in creation
+    /// order (identical on all ranks), then drops the cache.
+    pub fn free(mut self, env: &mut ProcEnv) {
+        for (_, plan) in self.entries.iter_mut() {
+            plan.teardown(env);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::testutil::{payload, run_nodes};
+    use crate::util::{cast_slice, to_bytes};
+
+    #[test]
+    fn pure_plans_resolve_algorithms_once() {
+        let out = run_nodes(&[5, 3], |env| {
+            let w = env.world();
+            let mut cache = PlanCache::new();
+            let mine = payload(w.rank(), 64);
+            let mut out = vec![0u8; 64 * w.size()];
+            for _ in 0..4 {
+                cache.allgather(env, &w, Flavor::Pure, &mine, Some(&mut out));
+            }
+            (cache.hits(), cache.misses(), out)
+        });
+        let expect: Vec<u8> = (0..8).flat_map(|r| payload(r, 64)).collect();
+        for (hits, misses, got) in out {
+            assert_eq!(misses, 1, "one plan built");
+            assert_eq!(hits, 3, "three reuses");
+            assert_eq!(got, expect);
+        }
+    }
+
+    #[test]
+    fn hybrid_plans_share_comm_state_and_reuse_windows() {
+        let out = run_nodes(&[5, 3], |env| {
+            let w = env.world();
+            let mut cache = PlanCache::new();
+            let fl = Flavor::hybrid(SyncScheme::Spin);
+
+            // Two different ops on one comm: one comm_package, two windows.
+            let mine = payload(w.rank(), 32);
+            let mut ag = vec![0u8; 32 * w.size()];
+            cache.allgather(env, &w, fl, &mine, Some(&mut ag));
+            let mut vals = to_bytes(&[(w.rank() + 1) as f64]).to_vec();
+            cache.allreduce(env, &w, fl, Datatype::F64, ReduceOp::Sum, &mut vals);
+
+            // Window identity must be stable across repeated executions.
+            let w0 = cache
+                .allgather_view(&w, fl, 32, 1)
+                .map(|s| s.as_ptr() as usize)
+                .unwrap();
+            for _ in 0..3 {
+                cache.allgather(env, &w, fl, &mine, None);
+            }
+            let w1 = cache
+                .allgather_view(&w, fl, 32, 1)
+                .map(|s| s.as_ptr() as usize)
+                .unwrap();
+
+            let stats = (cache.hits(), cache.misses(), cache.len(), w0 == w1);
+            let sum = cast_slice::<f64>(&vals)[0];
+            env.barrier(&cache.package(&w).unwrap().shmem.clone());
+            cache.free(env);
+            (stats, ag, sum)
+        });
+        let expect: Vec<u8> = (0..8).flat_map(|r| payload(r, 32)).collect();
+        for ((hits, misses, len, stable), ag, sum) in out {
+            assert_eq!(misses, 2, "two plans built");
+            assert_eq!(hits, 3, "three window-reusing executions");
+            assert_eq!(len, 2);
+            assert!(stable, "window must not be reallocated between executions");
+            assert_eq!(ag, expect);
+            assert_eq!(sum, 36.0);
+        }
+    }
+
+    #[test]
+    fn all_ops_route_through_plans_pure_vs_hybrid() {
+        // One program runs every op in both flavors and cross-checks.
+        let out = run_nodes(&[3, 2, 4], |env| {
+            let w = env.world();
+            let p = w.size();
+            let me = w.rank();
+            let mut cache = PlanCache::new();
+            let fl = Flavor::hybrid(SyncScheme::Spin);
+            let n = 3usize; // doubles per rank
+
+            // allgather
+            let mine: Vec<f64> = (0..n).map(|i| (me * n + i) as f64).collect();
+            let mut pure_ag = vec![0u8; n * 8 * p];
+            cache.allgather(env, &w, Flavor::Pure, to_bytes(&mine), Some(&mut pure_ag));
+            let mut hy_ag = vec![0u8; n * 8 * p];
+            cache.allgather(env, &w, fl, to_bytes(&mine), Some(&mut hy_ag));
+            assert_eq!(pure_ag, hy_ag);
+
+            // bcast (root = child rank 7)
+            let msg = payload(7, 40);
+            let mut pure_bc = if me == 7 { msg.clone() } else { vec![0u8; 40] };
+            cache.bcast(env, &w, Flavor::Pure, 7, 40, Some(&mut pure_bc));
+            let mut hy_bc = if me == 7 { msg.clone() } else { vec![0u8; 40] };
+            cache.bcast(env, &w, fl, 7, 40, Some(&mut hy_bc));
+            assert_eq!(pure_bc, hy_bc);
+
+            // allreduce
+            let vals = [(me + 1) as f64, (me * me) as f64];
+            let mut pure_ar = to_bytes(&vals).to_vec();
+            cache.allreduce(env, &w, Flavor::Pure, Datatype::F64, ReduceOp::Sum, &mut pure_ar);
+            let mut hy_ar = to_bytes(&vals).to_vec();
+            cache.allreduce(env, &w, fl, Datatype::F64, ReduceOp::Sum, &mut hy_ar);
+            assert_eq!(pure_ar, hy_ar);
+
+            // reduce_scatter
+            let full: Vec<f64> = (0..n * p).map(|e| ((me + 1) * (e + 1)) as f64).collect();
+            let mut pure_rs = vec![0u8; n * 8];
+            cache.reduce_scatter(
+                env, &w, Flavor::Pure, Datatype::F64, ReduceOp::Sum, to_bytes(&full), &mut pure_rs,
+            );
+            let mut hy_rs = vec![0u8; n * 8];
+            cache.reduce_scatter(
+                env, &w, fl, Datatype::F64, ReduceOp::Sum, to_bytes(&full), &mut hy_rs,
+            );
+            assert_eq!(pure_rs, hy_rs);
+
+            // gather to 4, scatter from 4
+            let blk = payload(me, 16);
+            let mut pure_g = vec![0u8; 16 * p];
+            let root_buf = (me == 4).then_some(&mut pure_g[..]);
+            cache.gather(env, &w, Flavor::Pure, 4, &blk, root_buf);
+            let mut hy_g = vec![0u8; 16 * p];
+            let root_buf = (me == 4).then_some(&mut hy_g[..]);
+            cache.gather(env, &w, fl, 4, &blk, root_buf);
+            if me == 4 {
+                assert_eq!(pure_g, hy_g);
+            }
+
+            let full_sc: Vec<u8> = (0..p).flat_map(|r| payload(r ^ 1, 16)).collect();
+            let mut pure_sc = vec![0u8; 16];
+            cache.scatter(env, &w, Flavor::Pure, 4, (me == 4).then_some(&full_sc[..]), &mut pure_sc);
+            let mut hy_sc = vec![0u8; 16];
+            cache.scatter(env, &w, fl, 4, (me == 4).then_some(&full_sc[..]), &mut hy_sc);
+            assert_eq!(pure_sc, hy_sc);
+
+            env.barrier(&w);
+            cache.free(env);
+            (pure_ag, pure_ar, pure_rs)
+        });
+        assert_eq!(out.len(), 9);
+    }
+
+    #[test]
+    #[should_panic(expected = "incompatible CollIo")]
+    fn mismatched_io_panics() {
+        run_nodes(&[2], |env| {
+            let w = env.world();
+            let mut cache = PlanCache::new();
+            let i = cache.plan(env, &w, CollOp::Allgather, 8, Datatype::U8, None, Flavor::Pure);
+            // Wrong io for an allgather plan.
+            let mut buf = vec![0u8; 8];
+            cache.entries[i].1.execute(env, CollIo::Allreduce { buf: &mut buf, fetch: true });
+        });
+    }
+
+    #[test]
+    fn hier_flavor_matches_pure() {
+        let out = run_nodes(&[5, 3], |env| {
+            let w = env.world();
+            let mut cache = PlanCache::new();
+            let mine = payload(w.rank(), 24);
+            let mut pure = vec![0u8; 24 * w.size()];
+            cache.allgather(env, &w, Flavor::Pure, &mine, Some(&mut pure));
+            let mut hier = vec![0u8; 24 * w.size()];
+            cache.allgather(env, &w, Flavor::Hier, &mine, Some(&mut hier));
+            assert_eq!(cache.misses(), 2);
+            (pure, hier)
+        });
+        for (pure, hier) in out {
+            assert_eq!(pure, hier);
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Reduce-scatter (`MPI_Reduce_scatter` / `_block` baselines), ring
+//! algorithm.
+//!
+//! Every rank contributes a full vector; rank `r` ends with the fully
+//! reduced block `r`. The ring formulation (the reduce-scatter phase of
+//! ring allreduce) works for **any** communicator size and any per-rank
+//! block counts — p−1 neighbor steps, each passing one partial block to
+//! the right while folding the incoming partial into the local copy.
+//! Bandwidth-optimal: every byte of the result crosses each link once.
+//!
+//! This is one of the two collectives the follow-up work on multi-core
+//! clusters (arXiv:2007.06892) adds to the §4 wrapper set; the hybrid
+//! counterpart lives in [`crate::hybrid::reduce_scatter`].
+
+use crate::mpi::env::{opcode, ProcEnv};
+use crate::mpi::{Communicator, Datatype, ReduceOp};
+
+/// Irregular reduce-scatter: `counts[r]` bytes land on rank `r`.
+///
+/// `sendbuf` is the rank's full contribution (`Σ counts` bytes, blocks in
+/// rank order at the running-sum displacements); `recvbuf` receives the
+/// reduced block of the calling rank (`counts[rank]` bytes).
+pub fn reduce_scatterv(
+    env: &mut ProcEnv,
+    comm: &Communicator,
+    dtype: Datatype,
+    op: ReduceOp,
+    counts: &[usize],
+    sendbuf: &[u8],
+    recvbuf: &mut [u8],
+) {
+    let p = comm.size();
+    let me = comm.rank();
+    assert_eq!(counts.len(), p, "one count per rank");
+    for &c in counts {
+        assert_eq!(c % dtype.size(), 0, "partial element in a reduce_scatter block");
+    }
+    let displ = super::displs_of(counts);
+    let total: usize = counts.iter().sum();
+    assert_eq!(sendbuf.len(), total, "reduce_scatter input size");
+    assert_eq!(recvbuf.len(), counts[me], "reduce_scatter output size");
+    if p == 1 {
+        recvbuf.copy_from_slice(sendbuf);
+        return;
+    }
+    let tag = env.next_coll_tag(comm, opcode::REDSCAT);
+    let right = (me + 1) % p;
+    let left = (me + p - 1) % p;
+
+    // Block b enters the ring at rank b+1 and travels rightward, folding
+    // each host's contribution, until it completes at rank b after p−1
+    // hops. At step s, rank `me` forwards the partial for block
+    // (me−1−s) mod p and folds the incoming partial for block (me−2−s).
+    let mut work = sendbuf.to_vec();
+    for s in 0..p - 1 {
+        let sb = (me + 2 * p - 1 - s) % p;
+        let rb = (me + 2 * p - 2 - s) % p;
+        env.send_vec(comm, right, tag, work[displ[sb]..displ[sb] + counts[sb]].to_vec());
+        let mut incoming = vec![0u8; counts[rb]];
+        env.recv_into(comm, Some(left), tag, &mut incoming);
+        op.apply(dtype, &mut work[displ[rb]..displ[rb] + counts[rb]], &incoming);
+        env.charge_reduce(counts[rb]);
+    }
+    recvbuf.copy_from_slice(&work[displ[me]..displ[me] + counts[me]]);
+}
+
+/// Regular reduce-scatter (`MPI_Reduce_scatter_block`): every rank
+/// receives `recvbuf.len()` bytes; `sendbuf.len()` must equal
+/// `recvbuf.len() * comm.size()`.
+pub fn reduce_scatter(
+    env: &mut ProcEnv,
+    comm: &Communicator,
+    dtype: Datatype,
+    op: ReduceOp,
+    sendbuf: &[u8],
+    recvbuf: &mut [u8],
+) {
+    let counts = vec![recvbuf.len(); comm.size()];
+    reduce_scatterv(env, comm, dtype, op, &counts, sendbuf, recvbuf);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::testutil::run_nodes;
+    use crate::util::{cast_slice, to_bytes};
+
+    fn check_block(nodes: &[usize], n_per_rank: usize) {
+        let p: usize = nodes.iter().sum();
+        let out = run_nodes(nodes, move |env| {
+            let w = env.world();
+            let me = w.rank();
+            // Element e of the full vector = (rank+1)*(e+1); all integers,
+            // so every reduction order is exact.
+            let vals: Vec<f64> =
+                (0..n_per_rank * w.size()).map(|e| ((me + 1) * (e + 1)) as f64).collect();
+            let mut recv = vec![0u8; n_per_rank * 8];
+            reduce_scatter(env, &w, Datatype::F64, ReduceOp::Sum, to_bytes(&vals), &mut recv);
+            cast_slice::<f64>(&recv)
+        });
+        let rank_sum: f64 = (1..=p).map(|r| r as f64).sum();
+        for (r, got) in out.into_iter().enumerate() {
+            for (i, &v) in got.iter().enumerate() {
+                let e = r * n_per_rank + i;
+                let expect = rank_sum * (e + 1) as f64;
+                assert_eq!(v, expect, "nodes {nodes:?} rank {r} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_various_shapes() {
+        check_block(&[5, 3], 4);
+        check_block(&[4, 4], 7);
+        check_block(&[3, 3, 1], 1);
+        check_block(&[2], 5);
+        check_block(&[1], 3);
+        check_block(&[5, 3, 4], 2);
+    }
+
+    #[test]
+    fn irregular_counts() {
+        // Rank r receives r+1 doubles.
+        let out = run_nodes(&[5, 3], |env| {
+            let w = env.world();
+            let me = w.rank();
+            let counts_e: Vec<usize> = (0..w.size()).map(|r| r + 1).collect();
+            let total_e: usize = counts_e.iter().sum();
+            let vals: Vec<f64> = (0..total_e).map(|e| ((me + 1) * (e + 1)) as f64).collect();
+            let counts: Vec<usize> = counts_e.iter().map(|&c| c * 8).collect();
+            let mut recv = vec![0u8; counts[me]];
+            reduce_scatterv(env, &w, Datatype::F64, ReduceOp::Sum, &counts, to_bytes(&vals), &mut recv);
+            cast_slice::<f64>(&recv)
+        });
+        let rank_sum: f64 = (1..=8).map(|r| r as f64).sum();
+        for (r, got) in out.into_iter().enumerate() {
+            assert_eq!(got.len(), r + 1);
+            let displ_e: usize = (0..r).map(|x| x + 1).sum();
+            for (i, &v) in got.iter().enumerate() {
+                let e = displ_e + i;
+                assert_eq!(v, rank_sum * (e + 1) as f64, "rank {r} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_count_ranks() {
+        let out = run_nodes(&[4], |env| {
+            let w = env.world();
+            let counts = vec![8usize, 0, 8, 0];
+            let vals = [1.0f64, 2.0];
+            let mut recv = vec![0u8; counts[w.rank()]];
+            reduce_scatterv(env, &w, Datatype::F64, ReduceOp::Sum, &counts, to_bytes(&vals), &mut recv);
+            cast_slice::<f64>(&recv)
+        });
+        assert_eq!(out[0], vec![4.0]);
+        assert_eq!(out[1], Vec::<f64>::new());
+        assert_eq!(out[2], vec![8.0]);
+    }
+
+    #[test]
+    fn max_op() {
+        let out = run_nodes(&[3, 2], |env| {
+            let w = env.world();
+            let me = w.rank() as f64;
+            let vals = [me, -me, me * 2.0, 1.0, me, me, me, 10.0 - me, me, me];
+            let mut recv = vec![0u8; 2 * 8];
+            reduce_scatter(env, &w, Datatype::F64, ReduceOp::Max, to_bytes(&vals), &mut recv);
+            cast_slice::<f64>(&recv)
+        });
+        assert_eq!(out[0], vec![4.0, 0.0]);
+        assert_eq!(out[1], vec![8.0, 1.0]);
+        assert_eq!(out[3], vec![4.0, 10.0]);
+    }
+
+    #[test]
+    fn cheaper_than_allreduce_for_large_vectors() {
+        // Bandwidth claim: scattering the result must beat replicating it.
+        let n = 32 * 1024; // 256 KB of f64
+        let rs = run_nodes(&[8, 8], move |env| {
+            let w = env.world();
+            let vals = vec![1.0f64; n];
+            let mut recv = vec![0u8; n * 8 / w.size()];
+            let t0 = env.vclock();
+            reduce_scatter(env, &w, Datatype::F64, ReduceOp::Sum, to_bytes(&vals), &mut recv);
+            env.vclock() - t0
+        })
+        .into_iter()
+        .fold(0.0f64, f64::max);
+        let ar = run_nodes(&[8, 8], move |env| {
+            let w = env.world();
+            let mut buf = to_bytes(&vec![1.0f64; n]).to_vec();
+            let t0 = env.vclock();
+            crate::coll::allreduce(
+                env,
+                &w,
+                Datatype::F64,
+                ReduceOp::Sum,
+                &mut buf,
+                crate::coll::AllreduceAlgo::Auto,
+            );
+            env.vclock() - t0
+        })
+        .into_iter()
+        .fold(0.0f64, f64::max);
+        assert!(rs < ar, "reduce_scatter {rs} must undercut allreduce {ar}");
+    }
+}

@@ -1,0 +1,175 @@
+//! Rooted scatter (`MPI_Scatter` / `MPI_Scatterv` baselines).
+//!
+//! [`scatter`] is the binomial tree: the root ships each child the whole
+//! contiguous vrank-block range of that child's subtree, halving the
+//! carried range every round — the mirror image of the tree gather and
+//! the scatter half of van de Geijn broadcast
+//! ([`crate::coll::bcast::BcastAlgo::ScatterAllgather`]).
+//! [`scatterv`] is the irregular linear variant used over small bridge
+//! communicators.
+
+use super::pow2_ge;
+use crate::mpi::env::{opcode, ProcEnv};
+use crate::mpi::Communicator;
+
+/// Scatter `send` (rank-major, `recv.len() * comm.size()` bytes,
+/// significant only at `root` — pass `None` elsewhere) so rank `r`
+/// receives block `r` into `recv`.
+pub fn scatter(
+    env: &mut ProcEnv,
+    comm: &Communicator,
+    root: usize,
+    send: Option<&[u8]>,
+    recv: &mut [u8],
+) {
+    let p = comm.size();
+    let me = comm.rank();
+    let m = recv.len();
+    assert!(root < p);
+    if p == 1 {
+        recv.copy_from_slice(send.expect("root must supply the send buffer"));
+        return;
+    }
+    let tag = env.next_coll_tag(comm, opcode::SCATTER);
+    let vrank = (me + p - root) % p;
+    let to_comm = |v: usize| (v + root) % p;
+
+    // stage holds the blocks of vranks [vrank, vrank + width) in vrank
+    // order; the root starts with everything, everyone else receives its
+    // subtree range from the parent in one message.
+    let stage: Vec<u8>;
+    let mut mask: usize;
+    if vrank == 0 {
+        let s = send.expect("root must supply the send buffer");
+        assert_eq!(s.len(), m * p, "scatter send buffer size");
+        let mut rot = vec![0u8; m * p];
+        for v in 0..p {
+            let r = to_comm(v);
+            rot[v * m..(v + 1) * m].copy_from_slice(&s[r * m..(r + 1) * m]);
+        }
+        stage = rot;
+        mask = pow2_ge(p) / 2;
+    } else {
+        let low = vrank & vrank.wrapping_neg();
+        let parent = vrank - low;
+        let width = low.min(p - vrank);
+        let mut sub = vec![0u8; width * m];
+        env.recv_into(comm, Some(to_comm(parent)), tag, &mut sub);
+        stage = sub;
+        mask = low / 2;
+    }
+    while mask >= 1 {
+        let child = vrank + mask;
+        if child < p {
+            let w = mask.min(p - child);
+            let off = (child - vrank) * m;
+            env.send_vec(comm, to_comm(child), tag, stage[off..off + w * m].to_vec());
+        }
+        mask >>= 1;
+    }
+    recv.copy_from_slice(&stage[..m]);
+}
+
+/// Irregular linear scatter: rank `r` receives `counts[r]` bytes of the
+/// root's concatenated buffer (rank-order displacements).
+pub fn scatterv(
+    env: &mut ProcEnv,
+    comm: &Communicator,
+    root: usize,
+    counts: &[usize],
+    send: Option<&[u8]>,
+    recv: &mut [u8],
+) {
+    let p = comm.size();
+    let me = comm.rank();
+    assert_eq!(counts.len(), p, "one count per rank");
+    assert_eq!(recv.len(), counts[me], "my block must match counts[me]");
+    let displ = super::displs_of(counts);
+    if me == root {
+        let s = send.expect("root must supply the send buffer");
+        let total: usize = counts.iter().sum();
+        assert_eq!(s.len(), total, "scatterv send buffer size");
+        if p > 1 {
+            let tag = env.next_coll_tag(comm, opcode::SCATTER);
+            for r in 0..p {
+                if r != root {
+                    env.send(comm, r, tag, &s[displ[r]..displ[r] + counts[r]]);
+                }
+            }
+        }
+        recv.copy_from_slice(&s[displ[me]..displ[me] + counts[me]]);
+    } else {
+        let tag = env.next_coll_tag(comm, opcode::SCATTER);
+        env.recv_into(comm, Some(root), tag, recv);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::testutil::{payload, run_nodes};
+
+    fn check(nodes: &[usize], m: usize, root: usize) {
+        let p: usize = nodes.iter().sum();
+        let full: Vec<u8> = (0..p).flat_map(|r| payload(r, m)).collect();
+        let out = run_nodes(nodes, move |env| {
+            let w = env.world();
+            let full: Vec<u8> = (0..w.size()).flat_map(|r| payload(r, m)).collect();
+            let mut recv = vec![0u8; m];
+            let arg = (w.rank() == root).then_some(&full[..]);
+            scatter(env, &w, root, arg, &mut recv);
+            recv
+        });
+        for (r, got) in out.into_iter().enumerate() {
+            assert_eq!(got, full[r * m..(r + 1) * m], "nodes {nodes:?} m {m} root {root} rank {r}");
+        }
+    }
+
+    #[test]
+    fn binomial_various_shapes_and_roots() {
+        check(&[5, 3], 16, 0);
+        check(&[5, 3], 16, 6);
+        check(&[5, 3, 4], 9, 11);
+        check(&[4, 4], 1, 3);
+        check(&[2], 33, 1);
+        check(&[1], 8, 0);
+        check(&[3, 3, 1], 5, 2);
+    }
+
+    #[test]
+    fn scatterv_irregular() {
+        let out = run_nodes(&[5, 3], |env| {
+            let w = env.world();
+            let counts: Vec<usize> = (0..w.size()).map(|r| 3 * r + 2).collect();
+            let full: Vec<u8> = (0..w.size()).flat_map(|r| payload(r, counts[r])).collect();
+            let mut recv = vec![0u8; counts[w.rank()]];
+            let arg = (w.rank() == 5).then_some(&full[..]);
+            scatterv(env, &w, 5, &counts, arg, &mut recv);
+            recv
+        });
+        for (r, got) in out.into_iter().enumerate() {
+            assert_eq!(got, payload(r, 3 * r + 2), "rank {r}");
+        }
+    }
+
+    #[test]
+    fn scatter_then_gather_roundtrips() {
+        let out = run_nodes(&[5, 3, 4], |env| {
+            let w = env.world();
+            let m = 24;
+            let full: Vec<u8> = (0..w.size()).flat_map(|r| payload(r, m)).collect();
+            let mut block = vec![0u8; m];
+            let arg = (w.rank() == 2).then_some(&full[..]);
+            scatter(env, &w, 2, arg, &mut block);
+            let mut back = vec![0u8; m * w.size()];
+            let is_root = w.rank() == 9;
+            crate::coll::gather(env, &w, 9, &block, if is_root { Some(&mut back) } else { None });
+            (is_root, back, full)
+        });
+        for (is_root, back, full) in out {
+            if is_root {
+                assert_eq!(back, full);
+            }
+        }
+    }
+}

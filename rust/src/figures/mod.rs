@@ -57,7 +57,7 @@ pub fn run(name: &str, opts: &FigOpts) -> crate::Result<Vec<Table>> {
     let gen = registry()
         .into_iter()
         .find(|(n, _)| *n == name)
-        .ok_or_else(|| anyhow::anyhow!("unknown figure '{name}'"))?
+        .ok_or_else(|| crate::err!("unknown figure '{name}'"))?
         .1;
     let tables = gen(opts);
     for (i, t) in tables.iter().enumerate() {

@@ -57,14 +57,7 @@ impl AllgatherParam {
     /// cost: the Table-2 "Allgather_param" law.
     pub fn create(env: &mut ProcEnv, pkg: &CommPackage, msg: usize, sizeset: &[usize]) -> AllgatherParam {
         let recvcounts: Vec<usize> = sizeset.iter().map(|&s| s * msg).collect();
-        let displs: Vec<usize> = recvcounts
-            .iter()
-            .scan(0usize, |acc, &c| {
-                let d = *acc;
-                *acc += c;
-                Some(d)
-            })
-            .collect();
+        let displs = crate::coll::displs_of(&recvcounts);
         let mgmt = env.state().mgmt.clone();
         env.advance(mgmt.allgather_param_us(pkg.bridge_size));
         AllgatherParam { recvcounts, displs }

@@ -30,7 +30,7 @@ use crate::mpi::env::ProcEnv;
 use crate::mpi::{Datatype, ReduceOp};
 
 /// Step-1 implementation choice.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum AllreduceMethod {
     /// `MPI_Reduce` on the node communicator.
     Method1,

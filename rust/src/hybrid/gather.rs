@@ -1,0 +1,116 @@
+//! `Wrapper_Hy_Gather` — hybrid MPI+MPI rooted gather.
+//!
+//! The §4.2 allgather design minus the full replication: every rank
+//! stores its block at its affinity slot of the node's shared window
+//! (zero on-node messages), a red sync publishes the node's
+//! contributions, and the **leaders** run an irregular gatherv over the
+//! bridge rooted at the root's node — so the complete rank-ordered result
+//! materializes only in the root node's shared window, where the root
+//! (leader or child) reads it after the yellow sync. Non-root nodes move
+//! exactly one bridge message; their windows keep only their own blocks.
+
+use super::allgather::AllgatherParam;
+use super::bcast::TransTables;
+use super::package::CommPackage;
+use super::shmem::HyWin;
+use super::sync::{await_release, red_sync, release, SyncScheme};
+use crate::coll::gather::gatherv;
+use crate::mpi::env::ProcEnv;
+use crate::mpi::topo::Placement;
+
+/// `Wrapper_Hy_Gather`: complete the gather across the cluster. Every
+/// rank must already have stored its `msg`-byte block at its affinity
+/// slot (`win.local_ptr(parent_rank, msg)`); afterwards the root can read
+/// the full rank-ordered result at offset 0 of its node's window.
+pub fn hy_gather(
+    env: &mut ProcEnv,
+    pkg: &CommPackage,
+    win: &mut HyWin,
+    param: &AllgatherParam,
+    tables: &TransTables,
+    root: usize,
+    msg: usize,
+    scheme: SyncScheme,
+) {
+    assert_eq!(
+        env.topo().placement(),
+        Placement::Block,
+        "Wrapper_Hy_Gather assumes block-style rank placement (§4)"
+    );
+    assert_eq!(
+        param.recvcounts.iter().sum::<usize>(),
+        msg * pkg.parent.size(),
+        "allgather params must match the gather block size"
+    );
+    let root_node = tables.bridge[root];
+    // Red sync: all on-node contributions must be in the window.
+    red_sync(env, pkg);
+    if let Some(bridge) = &pkg.bridge {
+        let bidx = bridge.rank();
+        let (lo, count) = (param.displs[bidx], param.recvcounts[bidx]);
+        if bridge.size() > 1 {
+            if bidx == root_node {
+                // Root's leader ingests every other node's block straight
+                // into the shared window at its global displacement (the
+                // node's own block is already in place).
+                let mine = win.win.read_vec(lo, count);
+                let full_len: usize = param.recvcounts.iter().sum();
+                let out = unsafe { win.win.slice_mut(0, full_len) };
+                gatherv(env, bridge, root_node, &param.recvcounts, &mine, Some(out));
+            } else {
+                let mine = win.win.read_vec(lo, count);
+                gatherv(env, bridge, root_node, &param.recvcounts, &mine, None);
+            }
+        }
+        release(env, pkg, win, scheme);
+    } else {
+        await_release(env, pkg, win, scheme);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::testutil::{payload, run_nodes};
+    use crate::hybrid::allgather::sizeset_gather;
+
+    fn check(nodes: &'static [usize], m: usize, root: usize, scheme: SyncScheme) {
+        let p: usize = nodes.iter().sum();
+        let expect: Vec<u8> = (0..p).flat_map(|r| payload(r, m)).collect();
+        let out = run_nodes(nodes, move |env| {
+            let w = env.world();
+            let pkg = CommPackage::create(env, &w);
+            let mut win = pkg.alloc_shared(env, m, 1, w.size());
+            let sizeset = sizeset_gather(env, &pkg);
+            let param = AllgatherParam::create(env, &pkg, m, &sizeset);
+            let tables = TransTables::create(env, &pkg);
+            let mine = payload(w.rank(), m);
+            win.store(env, win.local_ptr(w.rank(), m), &mine);
+            hy_gather(env, &pkg, &mut win, &param, &tables, root, m, scheme);
+            let got = if w.rank() == root { win.load(env, 0, m * w.size()) } else { Vec::new() };
+            env.barrier(&pkg.shmem);
+            win.free(env, &pkg);
+            (w.rank() == root, got)
+        });
+        for (r, (is_root, got)) in out.into_iter().enumerate() {
+            if is_root {
+                assert_eq!(got, expect, "nodes {nodes:?} m {m} root {root} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn roots_on_every_kind_of_rank() {
+        check(&[5, 3], 16, 0, SyncScheme::Spin); // leader of node 0
+        check(&[5, 3], 16, 5, SyncScheme::Spin); // leader of node 1
+        check(&[5, 3], 16, 2, SyncScheme::Spin); // child on node 0
+        check(&[5, 3], 16, 7, SyncScheme::Barrier); // child on node 1
+    }
+
+    #[test]
+    fn irregular_three_nodes_and_single_node() {
+        check(&[5, 3, 4], 24, 9, SyncScheme::Spin);
+        check(&[6], 8, 3, SyncScheme::Spin);
+        check(&[1], 8, 0, SyncScheme::Barrier);
+    }
+}

@@ -24,17 +24,30 @@
 //! | `Wrapper_Hy_Bcast` | [`bcast::hy_bcast`] |
 //! | `Wrapper_Hy_Allreduce` | [`allreduce::hy_allreduce`] |
 //! | §4.5 sync schemes | [`sync::SyncScheme`] |
+//!
+//! Beyond the paper's three collectives, the wrapper set carries the
+//! extra operations the follow-up work on multi-core clusters
+//! (arXiv:2007.06892) shows matter for hybrid codes:
+//! [`reduce_scatter::hy_reduce_scatter`], [`gather::hy_gather`] and
+//! [`scatter::hy_scatter`] — same window/red-sync/bridge/yellow-sync
+//! skeleton, rooted or scattered result placement.
 
 pub mod allgather;
 pub mod allreduce;
 pub mod bcast;
+pub mod gather;
 pub mod package;
+pub mod reduce_scatter;
+pub mod scatter;
 pub mod shmem;
 pub mod sync;
 
 pub use allgather::{hy_allgather, sizeset_gather, AllgatherParam};
 pub use allreduce::{hy_allreduce, AllreduceMethod};
 pub use bcast::{hy_bcast, TransTables};
+pub use gather::hy_gather;
 pub use package::CommPackage;
+pub use reduce_scatter::{alloc_reduce_scatter_win, hy_reduce_scatter};
+pub use scatter::hy_scatter;
 pub use shmem::HyWin;
 pub use sync::SyncScheme;

@@ -18,7 +18,7 @@ use super::shmem::HyWin;
 use crate::mpi::env::ProcEnv;
 
 /// How the yellow (leader→children) sync point is implemented.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SyncScheme {
     /// `MPI_Barrier(shmem_comm)` — the unoptimized variant of §5.2.3/4.
     Barrier,

@@ -20,10 +20,11 @@
 use super::compute::{bpmf_batch, Backend};
 use super::ompsim::OmpModel;
 use super::{KernelReport, RankStats, Variant};
-use crate::coll::hier::{hier_allgather, HierCtx};
+use crate::coll::{CollOp, Flavor, PlanCache, PlanKey};
 use crate::coordinator::{ClusterSpec, SimCluster};
-use crate::hybrid::{hy_allgather, sizeset_gather, AllgatherParam, CommPackage, HyWin, SyncScheme};
+use crate::hybrid::SyncScheme;
 use crate::mpi::env::ProcEnv;
+use crate::mpi::Datatype;
 use crate::util::{from_bytes, to_bytes, Rng};
 
 /// BPMF configuration.
@@ -126,35 +127,43 @@ fn rank_program(env: &mut ProcEnv, cfg: BpmfCfg) -> RankStats {
     let table_elems = [shards[0].per * p * k, shards[1].per * p * k];
 
     // ---- per-variant state -------------------------------------------
-    let pkg = (cfg.variant == Variant::HybridMpiMpi).then(|| CommPackage::create(env, &w));
-    // Hybrid: per side, the node's shared factor table + allgather params.
-    let mut windows: Vec<HyWin> = Vec::new();
-    let mut params: Vec<AllgatherParam> = Vec::new();
+    // One plan cache carries every allgather of the sampler. Plans are
+    // built (and their windows allocated / hierarchy split) once, here;
+    // the 2·iters sampling regions then execute against cached plans.
+    // The two factor tables are tagged by side — they may have equal
+    // sizes and must not share a window.
+    let hybrid = cfg.variant == Variant::HybridMpiMpi;
+    let flavor = if hybrid { Flavor::hybrid(SyncScheme::Spin) } else { Flavor::Hier };
+    let mut plans = PlanCache::new();
+    let side_msg = [shards[0].per * k * 8, shards[1].per * k * 8];
+    for side in 0..2 {
+        plans.plan_tagged(
+            env, &w, CollOp::Allgather, side_msg[side], Datatype::U8, None, flavor, side as u32,
+        );
+    }
+    // The two small allgathers (stats + residual): in the paper's hybrid
+    // BPMF all three allgathers per region go through
+    // Wrapper_Hy_Allgather.
+    plans.plan_tagged(env, &w, CollOp::Allgather, STATS_DOUBLES * 8, Datatype::U8, None, flavor, 2);
+    plans.plan_tagged(env, &w, CollOp::Allgather, 8, Datatype::U8, None, flavor, 3);
+
     // Pure/OpenMP: per side, the rank's replicated factor table.
     let mut locals: Vec<Vec<f64>> = Vec::new();
 
     let full_init = |side: usize| -> Vec<f64> {
         (0..table_elems[side]).map(|t| init_factor(side, t / k, t % k)).collect()
     };
-    // Hybrid: two extra shared windows back the small (stats / residual)
-    // allgathers — in the paper's BPMF all three allgathers per region go
-    // through Wrapper_Hy_Allgather.
-    let mut small_wins: Vec<(HyWin, AllgatherParam)> = Vec::new();
-    if let Some(pkg) = &pkg {
-        let sizeset = sizeset_gather(env, pkg);
+    if hybrid {
+        // Seed the shared factor tables in place (the node's single copy,
+        // via the plan's window — `Wrapper_Get_localpointer` surface).
+        let pkg = plans.package(&w).expect("hybrid plans build a comm package");
         for side in 0..2 {
-            let msg = shards[side].per * k * 8;
-            let win = pkg.alloc_shared(env, msg, 1, p);
+            let key =
+                PlanKey::new(&w, CollOp::Allgather, side_msg[side], Datatype::U8, None, flavor, side as u32);
+            let win = plans.window_of(&key).expect("hybrid allgather plan is window-backed");
             if pkg.is_leader() {
                 win.win.write(0, to_bytes(&full_init(side)));
             }
-            params.push(AllgatherParam::create(env, pkg, msg, &sizeset));
-            windows.push(win);
-        }
-        for msg in [STATS_DOUBLES * 8, 8] {
-            let win = pkg.alloc_shared(env, msg, 1, p);
-            let param = AllgatherParam::create(env, pkg, msg, &sizeset);
-            small_wins.push((win, param));
         }
         env.barrier(&pkg.shmem); // initial tables visible node-wide
     } else {
@@ -162,7 +171,6 @@ fn rank_program(env: &mut ProcEnv, cfg: BpmfCfg) -> RankStats {
             locals.push(full_init(side));
         }
     }
-    let hier = (cfg.variant != Variant::HybridMpiMpi).then(|| HierCtx::create(env, &w));
     // BPMF's sampling loop is control-heavy; the paper's fine-grained
     // MPI+OpenMP port parallelizes it poorly (Fig. 19 shows it clearly
     // worst) — a larger serial fraction than the dense-loop kernels.
@@ -188,10 +196,14 @@ fn rank_program(env: &mut ProcEnv, cfg: BpmfCfg) -> RankStats {
             {
                 // Hybrid reads the single shared copy in place; pure reads
                 // its private replica.
-                let other_view: &[f64] = if windows.is_empty() {
-                    &locals[other]
+                let other_view: &[f64] = if hybrid {
+                    from_bytes(
+                        plans
+                            .allgather_view_tagged(&w, flavor, other as u32, side_msg[other], table_elems[other] * 8)
+                            .expect("factor-table plan is window-backed"),
+                    )
                 } else {
-                    from_bytes(unsafe { windows[other].view(0, table_elems[other] * 8) })
+                    &locals[other]
                 };
                 let mut v = vec![0.0f64; batch * cfg.nnz * k];
                 let mut wgt = vec![0.0f64; batch * cfg.nnz];
@@ -250,32 +262,20 @@ fn rank_program(env: &mut ProcEnv, cfg: BpmfCfg) -> RankStats {
             let mine = &new_vals[..shard.per * k];
             let stats_msg = vec![me as f64; STATS_DOUBLES];
             let norm_msg = [mine.iter().map(|x| x * x).sum::<f64>()];
-            if let Some(pkg) = &pkg {
-                let msg = shard.per * k * 8;
-                let win = &mut windows[side];
-                let off = win.local_ptr(me, msg);
-                win.store(env, off, to_bytes(mine));
-                hy_allgather(env, pkg, win, &params[side], msg, SyncScheme::Spin);
-                // The two small allgathers (stats + residual) also run
-                // through Wrapper_Hy_Allgather (all three are converted in
-                // the paper's hybrid BPMF).
-                for (i, payload) in [to_bytes(&stats_msg), to_bytes(&norm_msg)].into_iter().enumerate() {
-                    let (win, param) = &mut small_wins[i];
-                    let param = param.clone();
-                    let off = win.local_ptr(me, payload.len());
-                    win.store(env, off, payload);
-                    hy_allgather(env, pkg, win, &param, payload.len(), SyncScheme::Spin);
-                }
+            if hybrid {
+                // Result stays in the plan's shared window (recv: None) —
+                // the next sampling region reads it in place.
+                plans.allgather_tagged(env, &w, flavor, side as u32, to_bytes(mine), None);
+                plans.allgather_tagged(env, &w, flavor, 2, to_bytes(&stats_msg), None);
+                plans.allgather_tagged(env, &w, flavor, 3, to_bytes(&norm_msg), None);
             } else {
-                let hier = hier.as_ref().unwrap();
-                let msg = shard.per * k * 8;
-                let mut out = vec![0u8; msg * p];
-                hier_allgather(env, hier, to_bytes(mine), &mut out);
+                let mut out = vec![0u8; side_msg[side] * p];
+                plans.allgather_tagged(env, &w, flavor, side as u32, to_bytes(mine), Some(&mut out));
                 locals[side].copy_from_slice(from_bytes(&out));
                 let mut sink = vec![0u8; STATS_DOUBLES * 8 * p];
-                hier_allgather(env, hier, to_bytes(&stats_msg), &mut sink);
+                plans.allgather_tagged(env, &w, flavor, 2, to_bytes(&stats_msg), Some(&mut sink));
                 let mut sink2 = vec![0u8; 8 * p];
-                hier_allgather(env, hier, to_bytes(&norm_msg), &mut sink2);
+                plans.allgather_tagged(env, &w, flavor, 3, to_bytes(&norm_msg), Some(&mut sink2));
             }
             stats.comm_us += env.vclock() - t1;
         }
@@ -287,10 +287,14 @@ fn rank_program(env: &mut ProcEnv, cfg: BpmfCfg) -> RankStats {
     let mut sum = 0.0;
     for side in 0..2 {
         let shard = shards[side];
-        let view: &[f64] = if windows.is_empty() {
-            &locals[side]
+        let view: &[f64] = if hybrid {
+            from_bytes(
+                plans
+                    .allgather_view_tagged(&w, flavor, side as u32, side_msg[side], table_elems[side] * 8)
+                    .expect("factor-table plan is window-backed"),
+            )
         } else {
-            from_bytes(unsafe { windows[side].view(0, table_elems[side] * 8) })
+            &locals[side]
         };
         let hi = shard.total.min(shard.lo + shard.per);
         for item in shard.lo..hi.max(shard.lo) {
@@ -299,15 +303,7 @@ fn rank_program(env: &mut ProcEnv, cfg: BpmfCfg) -> RankStats {
     }
     stats.checksum = sum;
 
-    if let Some(pkg) = &pkg {
-        env.barrier(&pkg.shmem);
-        for win in windows {
-            win.free(env, pkg);
-        }
-        for (win, _) in small_wins {
-            win.free(env, pkg);
-        }
-    }
+    plans.free(env);
     stats
 }
 

@@ -15,10 +15,11 @@
 use super::compute::{summa_block, Backend};
 use super::ompsim::OmpModel;
 use super::{KernelReport, RankStats, Variant};
-use crate::coll::bcast::{bcast, BcastAlgo};
+use crate::coll::{CollOp, Flavor, PlanCache};
 use crate::coordinator::{ClusterSpec, SimCluster};
-use crate::hybrid::{hy_bcast, CommPackage, SyncScheme, TransTables};
+use crate::hybrid::SyncScheme;
 use crate::mpi::env::ProcEnv;
+use crate::mpi::Datatype;
 use crate::util::from_bytes;
 
 /// SUMMA configuration.
@@ -76,18 +77,19 @@ fn rank_program(env: &mut ProcEnv, cfg: SummaCfg) -> RankStats {
     let mut c = vec![0.0f64; nb * nb];
     let blk = nb * nb * 8;
 
-    // Hybrid state: packages/windows/tables per sub-communicator.
-    let mut hybrid = if cfg.variant == Variant::HybridMpiMpi {
-        let rp = CommPackage::create(env, &row_comm);
-        let rw = rp.alloc_shared(env, blk, 1, 1);
-        let rt = TransTables::create(env, &rp);
-        let cp = CommPackage::create(env, &col_comm);
-        let cw = cp.alloc_shared(env, blk, 1, 1);
-        let ct = TransTables::create(env, &cp);
-        Some(((rp, rw, rt), (cp, cw, ct)))
-    } else {
-        None
+    // Collective plans, built once before the phase loop — "a typical
+    // example of supporting multiple communicators in our design": one
+    // bcast plan per sub-communicator, each owning its comm package,
+    // shared window and translation tables (hybrid) or its resolved
+    // tuned algorithm (pure). The q phases then execute against the
+    // cached plans: no per-phase window allocation or table rebuild.
+    let flavor = match cfg.variant {
+        Variant::HybridMpiMpi => Flavor::hybrid(SyncScheme::Spin),
+        _ => Flavor::Pure,
     };
+    let mut plans = PlanCache::new();
+    plans.plan(env, &row_comm, CollOp::Bcast, blk, Datatype::U8, None, flavor);
+    plans.plan(env, &col_comm, CollOp::Bcast, blk, Datatype::U8, None, flavor);
     let omp = OmpModel { threads: cfg.threads, ..OmpModel::new(cfg.threads) };
 
     let mut stats = RankStats::default();
@@ -100,47 +102,51 @@ fn rank_program(env: &mut ProcEnv, cfg: SummaCfg) -> RankStats {
         // ---- the two broadcasts (the measured collective) -------------
         env.harness_sync(&w); // skew-free comm measurement (see poisson.rs)
         let t0 = env.vclock();
-        match (&mut hybrid, cfg.variant) {
-            (Some(((rp, rw, rt), (cp, cw, ct))), Variant::HybridMpiMpi) => {
+        match cfg.variant {
+            Variant::HybridMpiMpi => {
+                // Roots pass their payload; the other ranks pass no
+                // buffer and read the node's shared copy in place below.
                 let a_root = k; // row_comm rank k owns block-column k
-                let adata = if row_comm.rank() == a_root {
-                    Some(crate::util::to_bytes(&my_a))
+                if row_comm.rank() == a_root {
+                    abuf.copy_from_slice(&my_a);
+                    let ab = crate::util::cast_slice_mut(&mut abuf);
+                    plans.bcast(env, &row_comm, flavor, a_root, blk, Some(ab));
                 } else {
-                    None
-                };
-                hy_bcast(env, rp, rw, rt, a_root, adata, blk, SyncScheme::Spin);
+                    plans.bcast(env, &row_comm, flavor, a_root, blk, None);
+                }
                 let b_root = k;
-                let bdata = if col_comm.rank() == b_root {
-                    Some(crate::util::to_bytes(&my_b))
+                if col_comm.rank() == b_root {
+                    bbuf.copy_from_slice(&my_b);
+                    let bb = crate::util::cast_slice_mut(&mut bbuf);
+                    plans.bcast(env, &col_comm, flavor, b_root, blk, Some(bb));
                 } else {
-                    None
-                };
-                hy_bcast(env, cp, cw, ct, b_root, bdata, blk, SyncScheme::Spin);
+                    plans.bcast(env, &col_comm, flavor, b_root, blk, None);
+                }
             }
             _ => {
                 if row_comm.rank() == k {
                     abuf.copy_from_slice(&my_a);
                 }
-                bcast(env, &row_comm, k, crate::util::cast_slice_mut(&mut abuf), BcastAlgo::Auto);
+                plans.bcast(env, &row_comm, flavor, k, blk, Some(crate::util::cast_slice_mut(&mut abuf)));
                 if col_comm.rank() == k {
                     bbuf.copy_from_slice(&my_b);
                 }
-                bcast(env, &col_comm, k, crate::util::cast_slice_mut(&mut bbuf), BcastAlgo::Auto);
+                plans.bcast(env, &col_comm, flavor, k, blk, Some(crate::util::cast_slice_mut(&mut bbuf)));
             }
         }
         stats.comm_us += env.vclock() - t0;
 
         // ---- local accumulate -----------------------------------------
         let t1 = env.vclock();
-        match (&hybrid, cfg.variant) {
-            (Some(((_, rw, _), (_, cw, _))), Variant::HybridMpiMpi) => {
+        match cfg.variant {
+            Variant::HybridMpiMpi => {
                 // Children read the shared copies in place (no extra
                 // on-node copies — the design's point).
-                let a: &[f64] = from_bytes(unsafe { rw.view(0, blk) });
-                let b: &[f64] = from_bytes(unsafe { cw.view(0, blk) });
+                let a: &[f64] = from_bytes(plans.bcast_view(&row_comm, flavor, blk).unwrap());
+                let b: &[f64] = from_bytes(plans.bcast_view(&col_comm, flavor, blk).unwrap());
                 summa_block(env, cfg.backend, a, b, &mut c, nb);
             }
-            (_, Variant::MpiOpenMp) => {
+            Variant::MpiOpenMp => {
                 if cfg.backend == Backend::Modeled {
                     omp.charge_modeled(env, 1, super::compute::modeled_matmul_us(nb), || {
                         crate::kernels::native::matmul_acc(&abuf, &bbuf, &mut c, nb, nb, nb)
@@ -161,17 +167,14 @@ fn rank_program(env: &mut ProcEnv, cfg: SummaCfg) -> RankStats {
         // Hybrid: the next phase's roots will overwrite both shared
         // windows; all readers must be done first (red sync across the
         // grid — covers both the row and column windows).
-        if hybrid.is_some() && k + 1 < q {
+        if cfg.variant == Variant::HybridMpiMpi && k + 1 < q {
             env.barrier(&w);
         }
     }
     stats.total_us = env.vclock() - t_start;
     stats.checksum = c.iter().sum();
 
-    if let Some(((rp, rw, _), (cp, cw, _))) = hybrid.take() {
-        rw.free(env, &rp);
-        cw.free(env, &cp);
-    }
+    plans.free(env);
     stats
 }
 

@@ -47,5 +47,6 @@ pub mod mpi;
 pub mod runtime;
 pub mod util;
 
-/// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+/// Crate-wide result alias (backed by [`util::Error`]; the default build
+/// carries no external crates).
+pub type Result<T> = std::result::Result<T, util::Error>;

@@ -2,8 +2,8 @@
 //!
 //! ```text
 //! hympi figures <name|all> [--out DIR] [--scale X] [--fast]
-//! hympi microbench <allgather|bcast|allreduce> [--preset P] [--nodes N]
-//!                  [--bytes B] [--fast]
+//! hympi microbench <allgather|bcast|allreduce|reduce-scatter|gather|scatter>
+//!                  [--preset P] [--nodes N] [--bytes B] [--fast]
 //! hympi kernel <summa|poisson|bpmf> [--variant V] [--nodes N] [--n N]
 //!              [--backend B] [--scale X]
 //! hympi info
@@ -28,7 +28,7 @@ fn opt<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
 fn usage() -> ! {
     eprintln!(
         "usage:\n  hympi figures <table1|table2|fig12..fig19|all> [--out DIR] [--scale X] [--fast]\n  \
-         hympi microbench <allgather|bcast|allreduce> [--preset vulcan-sb|vulcan-hsw|hazelhen] [--nodes N] [--bytes B] [--fast]\n  \
+         hympi microbench <allgather|bcast|allreduce|reduce-scatter|gather|scatter> [--preset vulcan-sb|vulcan-hsw|hazelhen] [--nodes N] [--bytes B] [--fast]\n  \
          hympi kernel <summa|poisson|bpmf> [--variant pure-mpi|mpi+mpi|mpi+openmp] [--nodes N] [--n N] [--backend auto|pjrt|native] [--scale X]\n  \
          hympi info"
     );
@@ -78,6 +78,18 @@ fn main() -> hympi::Result<()> {
                         SyncScheme::Spin,
                         fast,
                     ),
+                ),
+                "reduce-scatter" => (
+                    mb::pure_reduce_scatter(spec(), bytes, fast),
+                    mb::hy_reduce_scatter(spec(), bytes, SyncScheme::Spin, fast),
+                ),
+                "gather" => (
+                    mb::pure_gather(spec(), bytes, fast),
+                    mb::hy_gather(spec(), bytes, SyncScheme::Spin, fast),
+                ),
+                "scatter" => (
+                    mb::pure_scatter(spec(), bytes, fast),
+                    mb::hy_scatter(spec(), bytes, SyncScheme::Spin, fast),
                 ),
                 _ => usage(),
             };

@@ -445,11 +445,35 @@ impl ProcEnv {
 }
 
 /// Current thread CPU time in microseconds.
+///
+/// Bound directly against the C library symbol so the default build needs
+/// no external crates (the `libc` crate would only re-export this).
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
 pub fn thread_cpu_us() -> f64 {
-    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
-    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: i64,
+        tv_nsec: i64,
+    }
+    extern "C" {
+        fn clock_gettime(clockid: i32, tp: *mut Timespec) -> i32;
+    }
+    const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+    let mut ts = Timespec { tv_sec: 0, tv_nsec: 0 };
+    let rc = unsafe { clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts) };
     debug_assert_eq!(rc, 0);
     ts.tv_sec as f64 * 1e6 + ts.tv_nsec as f64 / 1e3
+}
+
+/// Fallback for platforms without a known thread-CPU clock binding:
+/// monotonic wall time. Less honest under heavy thread oversubscription
+/// (documented deviation; Linux builds use the real per-thread clock).
+#[cfg(not(all(target_os = "linux", target_pointer_width = "64")))]
+pub fn thread_cpu_us() -> f64 {
+    use std::sync::OnceLock;
+    use std::time::Instant;
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_secs_f64() * 1e6
 }
 
 #[cfg(test)]

@@ -24,8 +24,12 @@ use std::cell::UnsafeCell;
 pub const WIN_FLAGS: usize = 4;
 
 /// A node-shared memory region with per-rank affinity segments.
+///
+/// Storage is `u64`-backed so the base address is always 8-byte aligned:
+/// kernels view gathered f64 payloads in place (`from_bytes::<f64>`), and
+/// a `Vec<u8>` allocation would only be aligned by allocator accident.
 pub struct SharedWindow {
-    buf: UnsafeCell<Box<[u8]>>,
+    buf: UnsafeCell<Box<[u64]>>,
     total: usize,
     /// Byte offset of each local rank's segment.
     offsets: Vec<usize>,
@@ -52,7 +56,7 @@ impl SharedWindow {
             acc += s;
         }
         SharedWindow {
-            buf: UnsafeCell::new(vec![0u8; total].into_boxed_slice()),
+            buf: UnsafeCell::new(vec![0u64; total.div_ceil(8)].into_boxed_slice()),
             total,
             offsets,
             sizes: sizes.to_vec(),
@@ -85,8 +89,9 @@ impl SharedWindow {
     /// # Safety
     /// No concurrent writer may overlap `[offset, offset+len)`.
     pub unsafe fn slice(&self, offset: usize, len: usize) -> &[u8] {
+        assert!(offset + len <= self.total, "window view out of bounds");
         let buf = &*self.buf.get();
-        &buf[offset..offset + len]
+        std::slice::from_raw_parts((buf.as_ptr() as *const u8).add(offset), len)
     }
 
     /// Raw write view.
@@ -96,8 +101,9 @@ impl SharedWindow {
     /// `[offset, offset+len)` until the next sync point.
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn slice_mut(&self, offset: usize, len: usize) -> &mut [u8] {
+        assert!(offset + len <= self.total, "window view out of bounds");
         let buf = &mut *self.buf.get();
-        &mut buf[offset..offset + len]
+        std::slice::from_raw_parts_mut((buf.as_mut_ptr() as *mut u8).add(offset), len)
     }
 
     /// Copy `data` into the window at `offset` (real copy; the caller

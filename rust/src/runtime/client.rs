@@ -1,5 +1,7 @@
 //! The PJRT client wrapper: artifact discovery, lazy compilation cache,
-//! and typed f64 execution.
+//! and typed f64 execution. Compiled only under the `pjrt` cargo feature
+//! (needs the vendored `xla` + `anyhow` crates); default builds use
+//! [`stub`](super::stub) instead.
 //!
 //! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
 //! serializes protos with 64-bit instruction ids that xla_extension 0.5.1

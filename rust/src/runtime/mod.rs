@@ -4,7 +4,21 @@
 //! Python never runs at request time: `make artifacts` is the only step
 //! that touches jax, and the resulting `artifacts/*.hlo.txt` are compiled
 //! here once per process via the PJRT CPU client (`xla` crate).
+//!
+//! The real client is gated behind the off-by-default **`pjrt`** cargo
+//! feature (it needs the vendored `xla` + `anyhow` crates). The default
+//! build compiles [`stub`] instead: the same API surface, with
+//! [`SharedRuntime::global`] reporting "no artifacts" so every kernel
+//! falls through to the bit-equivalent native backend
+//! ([`crate::kernels::native`]). This keeps the default dependency graph
+//! empty — `cargo build` works with no registry access at all.
 
+#[cfg(feature = "pjrt")]
 pub mod client;
-
+#[cfg(feature = "pjrt")]
 pub use client::{F64Input, Runtime, SharedRuntime};
+
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{F64Input, Runtime, SharedRuntime};

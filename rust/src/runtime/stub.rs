@@ -1,0 +1,80 @@
+//! Stub runtime for builds without the `pjrt` feature.
+//!
+//! Mirrors the API surface of [`client`](super::client) so call sites
+//! compile unchanged: [`SharedRuntime::global`] always returns `None`
+//! ("no artifacts discovered"), which routes every
+//! [`Backend::Pjrt`](crate::kernels::Backend::Pjrt) dispatch to the
+//! native fallback and makes [`Backend::auto`](crate::kernels::Backend::auto)
+//! resolve to [`Backend::Native`](crate::kernels::Backend::Native).
+
+use crate::util::Error;
+
+/// One typed input: data + dims (row-major). Empty dims = scalar.
+pub struct F64Input<'a> {
+    pub data: &'a [f64],
+    pub dims: &'a [i64],
+}
+
+impl<'a> F64Input<'a> {
+    pub fn new(data: &'a [f64], dims: &'a [i64]) -> F64Input<'a> {
+        let n: i64 = dims.iter().product();
+        assert_eq!(data.len() as i64, if dims.is_empty() { 1 } else { n });
+        F64Input { data, dims }
+    }
+}
+
+/// Placeholder for the artifact runtime; never constructible without the
+/// `pjrt` feature.
+pub struct Runtime {
+    _priv: (),
+}
+
+impl Runtime {
+    /// Discovery always fails in the stub: there is no PJRT client.
+    pub fn discover() -> crate::Result<Runtime> {
+        Err(Error::msg("built without the `pjrt` feature: no PJRT runtime available"))
+    }
+}
+
+/// Thread-shared runtime stub: reports artifact absence everywhere.
+pub struct SharedRuntime {
+    _priv: (),
+}
+
+impl SharedRuntime {
+    /// Always `None` — artifacts cannot be executed without `pjrt`.
+    pub fn global() -> Option<&'static SharedRuntime> {
+        None
+    }
+
+    pub fn available(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn exec_f64(&self, name: &str, _inputs: &[F64Input<'_>]) -> crate::Result<Vec<Vec<f64>>> {
+        Err(Error::msg(format!(
+            "cannot execute artifact '{name}': built without the `pjrt` feature"
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_is_absent() {
+        assert!(SharedRuntime::global().is_none());
+    }
+
+    #[test]
+    fn discover_reports_feature_gate() {
+        let e = Runtime::discover().err().unwrap();
+        assert!(e.to_string().contains("pjrt"));
+    }
+
+    #[test]
+    fn backend_auto_falls_back_to_native() {
+        assert_eq!(crate::kernels::Backend::auto(), crate::kernels::Backend::Native);
+    }
+}

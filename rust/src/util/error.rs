@@ -1,0 +1,88 @@
+//! Minimal error type backing the crate-wide [`crate::Result`] alias.
+//!
+//! The default build has **zero external crates** (no registry access at
+//! build time), so the role `anyhow` plays in dependency-rich projects is
+//! filled by this string-carrying error: cheap construction from message
+//! formatting, `From` conversions for the std error types the crate
+//! actually produces, and `std::error::Error` so callers can box it.
+
+use std::fmt;
+
+/// A message-carrying error.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error(e.to_string())
+    }
+}
+
+impl From<std::fmt::Error> for Error {
+    fn from(e: std::fmt::Error) -> Error {
+        Error(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error(s.to_string())
+    }
+}
+
+/// Format an [`Error`] in place, like `anyhow::anyhow!`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_message() {
+        let e = Error::msg("boom");
+        assert_eq!(e.to_string(), "boom");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn fails() -> crate::Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))?;
+            Ok(())
+        }
+        let e = fails().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn err_macro_formats() {
+        let name = "fig99";
+        let e = err!("unknown figure '{name}'");
+        assert_eq!(e.to_string(), "unknown figure 'fig99'");
+    }
+}

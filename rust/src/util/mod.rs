@@ -1,18 +1,21 @@
 //! Self-contained utility substrates.
 //!
-//! The build is fully offline (only `xla` + `anyhow` are vendored), so the
+//! The default build is fully offline with **zero external crates** (the
+//! optional `xla`/`anyhow` pair lives behind the `pjrt` feature), so the
 //! pieces a normal project would pull from crates.io — RNG, statistics,
-//! a criterion-style benchmark runner, a property-testing harness — are
-//! implemented here.
+//! a criterion-style benchmark runner, a property-testing harness, the
+//! error type — are implemented here.
 
 pub mod bench;
 pub mod bytes;
+pub mod error;
 pub mod quickprop;
 pub mod rng;
 pub mod stats;
 
 pub use bench::{BenchRunner, BenchStats};
 pub use bytes::{cast_slice, cast_slice_mut, from_bytes, from_bytes_mut, to_bytes};
+pub use error::Error;
 pub use rng::Rng;
 pub use stats::Summary;
 
