@@ -1,0 +1,251 @@
+//! `bench_all` — the tracked data-plane performance baseline.
+//!
+//! Runs reduced sweeps of the fig12 (allgather), fig13 (bcast), fig14
+//! (allreduce) and fig17 (SUMMA) drivers twice in one process — once on
+//! the pooled zero-copy data plane and once on the emulated legacy
+//! allocating plane (`ClusterSpec::legacy_dataplane`) — and writes the
+//! wall-clock + modeled numbers to `BENCH_PR2.json` at the repo root, so
+//! subsequent PRs have a measured trajectory to beat. Modeled virtual
+//! time must be identical between the two planes (asserted per case);
+//! only wall-clock may differ.
+//!
+//! ```text
+//! cargo run --release --bin bench_all              # full sweep, writes BENCH_PR2.json
+//! cargo run --release --bin bench_all -- --smoke   # CI-sized sweep (same pipeline)
+//! cargo run --release --bin bench_all -- --strict  # exit non-zero below the 1.5x target
+//! cargo run --release --bin bench_all -- --out P   # alternate output path
+//! ```
+
+use hympi::coll::{CollOp, Flavor};
+use hympi::coordinator::{ClusterSpec, Preset};
+use hympi::figures::common::drive_report;
+use hympi::hybrid::SyncScheme;
+use hympi::kernels::summa::{run as summa_run, SummaCfg};
+use hympi::kernels::{Backend, Variant};
+use std::time::Instant;
+
+struct Case {
+    name: String,
+    modeled_us: f64,
+    wall_new_ms: f64,
+    wall_legacy_ms: f64,
+}
+
+impl Case {
+    fn speedup(&self) -> f64 {
+        if self.wall_new_ms > 0.0 {
+            self.wall_legacy_ms / self.wall_new_ms
+        } else {
+            0.0
+        }
+    }
+}
+
+fn report_case(case: &Case) {
+    println!(
+        "{:<34} modeled {:>12.2} us | wall new {:>9.1} ms | legacy {:>9.1} ms | {:>5.2}x",
+        case.name,
+        case.modeled_us,
+        case.wall_new_ms,
+        case.wall_legacy_ms,
+        case.speedup()
+    );
+}
+
+/// One paired (new vs legacy data plane) collective measurement.
+fn coll_case(
+    name: &str,
+    preset: Preset,
+    nodes: usize,
+    op: CollOp,
+    bytes: usize,
+    flavor: Flavor,
+    fast: bool,
+) -> Case {
+    let t0 = Instant::now();
+    let new = drive_report(ClusterSpec::preset(preset, nodes), fast, op, bytes, flavor);
+    let wall_new_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = Instant::now();
+    let legacy = drive_report(
+        ClusterSpec::preset(preset, nodes).with_legacy_dataplane(true),
+        fast,
+        op,
+        bytes,
+        flavor,
+    );
+    let wall_legacy_ms = t1.elapsed().as_secs_f64() * 1e3;
+    assert!(
+        (new.mean_us - legacy.mean_us).abs() < 1e-6,
+        "{name}: modeled latency must not depend on the data plane ({} vs {})",
+        new.mean_us,
+        legacy.mean_us
+    );
+    let case =
+        Case { name: name.to_string(), modeled_us: new.mean_us, wall_new_ms, wall_legacy_ms };
+    report_case(&case);
+    case
+}
+
+/// The fig17 SUMMA kernel (hybrid variant, modeled compute) on both planes.
+fn summa_case(smoke: bool) -> Case {
+    let (n, nodes) = if smoke { (128, 1) } else { (512, 4) };
+    let cfg = || SummaCfg { n, variant: Variant::HybridMpiMpi, backend: Backend::Modeled, threads: 16 };
+    let t0 = Instant::now();
+    let new = summa_run(ClusterSpec::preset(Preset::VulcanSb, nodes), cfg());
+    let wall_new_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = Instant::now();
+    let legacy =
+        summa_run(ClusterSpec::preset(Preset::VulcanSb, nodes).with_legacy_dataplane(true), cfg());
+    let wall_legacy_ms = t1.elapsed().as_secs_f64() * 1e3;
+    assert!(
+        (new.total_us - legacy.total_us).abs() < 1e-6,
+        "summa: modeled time must not depend on the data plane"
+    );
+    assert!(
+        (new.checksum - legacy.checksum).abs() < 1e-12,
+        "summa: results must not depend on the data plane"
+    );
+    let case = Case {
+        name: format!("fig17_summa_n{n}_hybrid"),
+        modeled_us: new.total_us,
+        wall_new_ms,
+        wall_legacy_ms,
+    };
+    report_case(&case);
+    case
+}
+
+fn write_json(path: &str, mode: &str, cases: &[Case]) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"pr\": 2,\n");
+    s.push_str(&format!("  \"mode\": \"{mode}\",\n"));
+    s.push_str("  \"generated_by\": \"cargo run --release --bin bench_all\",\n");
+    s.push_str(
+        "  \"note\": \"wall_ms_legacy re-runs the same workload on the emulated pre-PR2 \
+         allocating data plane (ClusterSpec::legacy_dataplane) in the same process on the same \
+         machine; modeled_us is asserted identical on both planes.\",\n",
+    );
+    s.push_str("  \"cases\": [\n");
+    for (i, c) in cases.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"modeled_us\": {:.3}, \"wall_ms_new\": {:.3}, \
+             \"wall_ms_legacy\": {:.3}, \"wall_speedup\": {:.3}}}{}\n",
+            c.name,
+            c.modeled_us,
+            c.wall_new_ms,
+            c.wall_legacy_ms,
+            c.speedup(),
+            if i + 1 < cases.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s).unwrap_or_else(|e| panic!("write {path}: {e}"));
+    println!("wrote {path}");
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let strict = args.iter().any(|a| a == "--strict");
+    let out = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_PR2.json".to_string());
+    let hy = Flavor::hybrid(SyncScheme::Spin);
+    let mut cases = Vec::new();
+    if smoke {
+        // CI-sized: exercises the full pipeline (both planes, parity
+        // asserts, JSON writer) in seconds.
+        cases.push(coll_case(
+            "fig12_allgather_64KiB_hybrid",
+            Preset::VulcanSb,
+            2,
+            CollOp::Allgather,
+            64 * 1024,
+            hy,
+            true,
+        ));
+        cases.push(coll_case(
+            "fig14_allreduce_64KiB_hybrid",
+            Preset::VulcanSb,
+            2,
+            CollOp::Allreduce,
+            64 * 1024,
+            hy,
+            true,
+        ));
+        cases.push(summa_case(true));
+    } else {
+        let hh = Preset::HazelHen;
+        cases.push(coll_case("fig12_allgather_800B_hybrid", hh, 2, CollOp::Allgather, 800, hy, false));
+        cases.push(coll_case(
+            "fig12_allgather_256KiB_hybrid",
+            hh,
+            2,
+            CollOp::Allgather,
+            256 * 1024,
+            hy,
+            false,
+        ));
+        cases.push(coll_case(
+            "fig12_allgather_256KiB_pure",
+            hh,
+            2,
+            CollOp::Allgather,
+            256 * 1024,
+            Flavor::Pure,
+            false,
+        ));
+        cases.push(coll_case(
+            "fig13_bcast_512KiB_hybrid",
+            hh,
+            2,
+            CollOp::Bcast,
+            512 * 1024,
+            hy,
+            false,
+        ));
+        cases.push(coll_case("fig14_allreduce_800B_hybrid", hh, 2, CollOp::Allreduce, 800, hy, false));
+        cases.push(coll_case(
+            "fig14_allreduce_256KiB_hybrid",
+            hh,
+            2,
+            CollOp::Allreduce,
+            256 * 1024,
+            hy,
+            false,
+        ));
+        cases.push(coll_case(
+            "fig14_allreduce_256KiB_pure",
+            hh,
+            2,
+            CollOp::Allreduce,
+            256 * 1024,
+            Flavor::Pure,
+            false,
+        ));
+        cases.push(summa_case(false));
+    }
+    write_json(&out, if smoke { "smoke" } else { "full" }, &cases);
+    if !smoke {
+        // The PR-2 acceptance headline: the pooled plane must beat the
+        // allocating plane by ≥ 1.5× wall-clock on the large-message
+        // hybrid paths. Numbers land in the JSON either way; `--strict`
+        // turns a miss into a failing exit for regression gating.
+        let mut below_target = false;
+        for name in ["fig12_allgather_256KiB_hybrid", "fig14_allreduce_256KiB_hybrid"] {
+            let c = cases.iter().find(|c| c.name == name).expect("case ran");
+            let pass = c.speedup() >= 1.5;
+            below_target |= !pass;
+            let verdict = if pass { "PASS" } else { "BELOW TARGET" };
+            println!("headline {name}: {:.2}x wall-clock vs legacy [{verdict}]", c.speedup());
+        }
+        if strict && below_target {
+            eprintln!("--strict: headline speedup below the 1.5x target");
+            std::process::exit(1);
+        }
+    }
+}

@@ -57,7 +57,7 @@ fn bruck(env: &mut ProcEnv, comm: &Communicator, mine: &[u8], out: &mut [u8]) {
     let tag = env.next_coll_tag(comm, opcode::ALLGATHER);
 
     // tmp holds blocks in me-relative order: block i = data of rank (me+i)%p.
-    let mut tmp = vec![0u8; m * p];
+    let mut tmp = env.take_buf(m * p);
     tmp[..m].copy_from_slice(mine);
     // Round k: distance `have` = 2^k; send the first min(have, p−have)
     // blocks to (me − have), receive the same count from (me + have).
@@ -66,7 +66,7 @@ fn bruck(env: &mut ProcEnv, comm: &Communicator, mine: &[u8], out: &mut [u8]) {
         let nsend = have.min(p - have);
         let dst = (me + p - have) % p;
         let src = (me + have) % p;
-        env.send_vec(comm, dst, tag, tmp[..nsend * m].to_vec());
+        env.send(comm, dst, tag, &tmp[..nsend * m]);
         let (lo, hi) = (have * m, (have + nsend) * m);
         env.recv_into(comm, Some(src), tag, &mut tmp[lo..hi]);
         have += nsend;
@@ -92,7 +92,7 @@ fn recursive_doubling(env: &mut ProcEnv, comm: &Communicator, mine: &[u8], out: 
         let partner = me ^ k;
         let my_start = (me / k) * k; // my k-aligned accumulated range
         let their_start = (partner / k) * k;
-        env.send_vec(comm, partner, tag, out[my_start * m..(my_start + k) * m].to_vec());
+        env.send(comm, partner, tag, &out[my_start * m..(my_start + k) * m]);
         env.recv_into(comm, Some(partner), tag, &mut out[their_start * m..(their_start + k) * m]);
         k <<= 1;
     }
@@ -110,7 +110,7 @@ fn ring(env: &mut ProcEnv, comm: &Communicator, mine: &[u8], out: &mut [u8]) {
     for step in 0..p - 1 {
         let send_block = (me + p - step) % p;
         let recv_block = (me + p - step - 1) % p;
-        env.send_vec(comm, right, tag, out[send_block * m..(send_block + 1) * m].to_vec());
+        env.send(comm, right, tag, &out[send_block * m..(send_block + 1) * m]);
         env.recv_into(comm, Some(left), tag, &mut out[recv_block * m..(recv_block + 1) * m]);
     }
 }
@@ -119,31 +119,35 @@ fn ring(env: &mut ProcEnv, comm: &Communicator, mine: &[u8], out: &mut [u8]) {
 /// contributes `counts[r]` bytes; `out` is the concatenation in rank order
 /// (displacements are the running sum of counts, as in the paper's Fig. 6).
 pub fn allgatherv(env: &mut ProcEnv, comm: &Communicator, mine: &[u8], counts: &[usize], out: &mut [u8]) {
+    let me = comm.rank();
+    assert_eq!(counts.len(), comm.size(), "one count per rank");
+    assert_eq!(mine.len(), counts[me], "my contribution must match counts[me]");
+    let displ = super::displs_of(counts);
+    out[displ[me]..displ[me] + counts[me]].copy_from_slice(mine);
+    allgatherv_inplace(env, comm, counts, out);
+}
+
+/// [`allgatherv`] without the self-copy: `out` already holds the calling
+/// rank's contribution at its displacement. The hybrid leaders run this
+/// directly on the shared window — every ring step borrows its outgoing
+/// block from `out`, so no per-step temporaries are built.
+pub fn allgatherv_inplace(env: &mut ProcEnv, comm: &Communicator, counts: &[usize], out: &mut [u8]) {
     let p = comm.size();
     let me = comm.rank();
     assert_eq!(counts.len(), p, "one count per rank");
-    assert_eq!(mine.len(), counts[me], "my contribution must match counts[me]");
     let total: usize = counts.iter().sum();
     assert_eq!(out.len(), total, "allgatherv output buffer size");
-    let displ: Vec<usize> = counts
-        .iter()
-        .scan(0usize, |acc, &c| {
-            let d = *acc;
-            *acc += c;
-            Some(d)
-        })
-        .collect();
-    out[displ[me]..displ[me] + counts[me]].copy_from_slice(mine);
     if p == 1 {
         return;
     }
+    let displ = super::displs_of(counts);
     let tag = env.next_coll_tag(comm, opcode::ALLGATHERV);
     let right = (me + 1) % p;
     let left = (me + p - 1) % p;
     for step in 0..p - 1 {
         let send_block = (me + p - step) % p;
         let recv_block = (me + p - step - 1) % p;
-        env.send_vec(comm, right, tag, out[displ[send_block]..displ[send_block] + counts[send_block]].to_vec());
+        env.send(comm, right, tag, &out[displ[send_block]..displ[send_block] + counts[send_block]]);
         env.recv_into(comm, Some(left), tag, &mut out[displ[recv_block]..displ[recv_block] + counts[recv_block]]);
     }
 }

@@ -55,7 +55,7 @@ pub fn allreduce(
             env.send(comm, me + 1, tag, buf);
             None
         } else {
-            let mut other = vec![0u8; buf.len()];
+            let mut other = env.take_buf(buf.len());
             env.recv_into(comm, Some(me - 1), tag, &mut other);
             op.apply(dtype, buf, &other);
             env.charge_reduce(buf.len());
@@ -102,11 +102,12 @@ fn recursive_doubling_core(
     pof2: usize,
     to_comm: &dyn Fn(usize) -> usize,
 ) {
+    // One pooled round buffer reused across all log2(p) exchanges.
+    let mut other = env.take_buf(buf.len());
     let mut mask = 1usize;
     while mask < pof2 {
         let partner = to_comm(nr ^ mask);
         env.send(comm, partner, tag, buf);
-        let mut other = vec![0u8; buf.len()];
         env.recv_into(comm, Some(partner), tag, &mut other);
         op.apply(dtype, buf, &other);
         env.charge_reduce(buf.len());
@@ -143,7 +144,9 @@ fn rabenseifner_core(
 
     // --- reduce-scatter by recursive halving --------------------------
     // Invariant: I own the element range [lo, hi) of the fully-reduced
-    // (so-far) vector; each round halves my range.
+    // (so-far) vector; each round halves my range. One pooled scratch
+    // buffer (sized for the first, largest round) serves every round.
+    let mut scratch = env.take_buf(n.div_ceil(2) * esz);
     let mut lo = 0usize;
     let mut hi = n;
     let mut mask = pof2 / 2;
@@ -159,10 +162,10 @@ fn rabenseifner_core(
         } else {
             (mid, hi, lo, mid)
         };
-        env.send_vec(comm, to_comm(partner), tag, buf[send_lo * esz..send_hi * esz].to_vec());
-        let mut other = vec![0u8; (keep_hi - keep_lo) * esz];
-        env.recv_into(comm, Some(to_comm(partner)), tag, &mut other);
-        op.apply(dtype, &mut buf[keep_lo * esz..keep_hi * esz], &other);
+        env.send(comm, to_comm(partner), tag, &buf[send_lo * esz..send_hi * esz]);
+        let other = &mut scratch[..(keep_hi - keep_lo) * esz];
+        env.recv_into(comm, Some(to_comm(partner)), tag, other);
+        op.apply(dtype, &mut buf[keep_lo * esz..keep_hi * esz], other);
         env.charge_reduce(other.len());
         lo = keep_lo;
         hi = keep_hi;
@@ -183,7 +186,7 @@ fn rabenseifner_core(
         let their_first = (partner / mask) * mask;
         let (slo, shi) = (bounds(pof2, my_first), bounds(pof2, my_first + mask));
         let (rlo, rhi) = (bounds(pof2, their_first), bounds(pof2, their_first + mask));
-        env.send_vec(comm, to_comm(partner), tag, buf[slo * esz..shi * esz].to_vec());
+        env.send(comm, to_comm(partner), tag, &buf[slo * esz..shi * esz]);
         env.recv_into(comm, Some(to_comm(partner)), tag, &mut buf[rlo * esz..rhi * esz]);
         mask <<= 1;
     }

@@ -71,14 +71,16 @@ fn binomial(env: &mut ProcEnv, comm: &Communicator, root: usize, buf: &mut [u8])
         mask <<= 1;
     }
     mask >>= 1;
-    // One shared payload for all forwards (fan-out copies are Arc clones);
-    // leaves skip the materialization entirely.
-    let mut shared: Option<std::sync::Arc<Vec<u8>>> = None;
+    // One pooled shared payload for all forwards (fan-out copies are
+    // refcount bumps); leaves skip the staging entirely.
+    let mut shared: Option<crate::mpi::Payload> = None;
     while mask > 0 {
         if vrank + mask < p {
             let dst = (vrank + mask + root) % p;
-            let payload = shared.get_or_insert_with(|| std::sync::Arc::new(buf.to_vec()));
-            env.send_shared(comm, dst, tag, payload);
+            if shared.is_none() {
+                shared = Some(env.payload_from(buf));
+            }
+            env.send_shared(comm, dst, tag, shared.as_ref().expect("staged above"));
         }
         mask >>= 1;
     }
@@ -160,7 +162,7 @@ fn split_binary(env: &mut ProcEnv, comm: &Communicator, root: usize, buf: &mut [
             let mut off = lo;
             while off < hi {
                 let end = (off + seg).min(hi);
-                env.send_vec(comm, to_comm(child), tag, buf[off..end].to_vec());
+                env.send(comm, to_comm(child), tag, &buf[off..end]);
                 off = end;
             }
         }
@@ -211,8 +213,7 @@ fn split_binary(env: &mut ProcEnv, comm: &Communicator, root: usize, buf: &mut [
         if idx < paired {
             let partner = other[idx];
             let (olo, ohi) = ranges[h]; // the half I own
-            let own = buf[olo..ohi].to_vec();
-            env.send(comm, to_comm(partner), xtag, &own);
+            env.send(comm, to_comm(partner), xtag, &buf[olo..ohi]);
             env.recv_into(comm, Some(to_comm(partner)), xtag, &mut buf[mlo..mhi]);
         } else {
             env.recv_into(comm, Some(to_comm(0)), xtag, &mut buf[mlo..mhi]);
@@ -258,7 +259,7 @@ fn scatter_allgather(env: &mut ProcEnv, comm: &Communicator, root: usize, buf: &
             if dst < p {
                 let (lo, _) = chunk(dst);
                 let hi = chunk((dst + mask).min(p) - 1).1.max(lo);
-                env.send_vec(comm, to_comm(dst), tag, buf[lo..hi].to_vec());
+                env.send(comm, to_comm(dst), tag, &buf[lo..hi]);
             }
         }
         mask >>= 1;
@@ -272,7 +273,7 @@ fn scatter_allgather(env: &mut ProcEnv, comm: &Communicator, root: usize, buf: &
         let recv_v = (vrank + p - step - 1) % p;
         let (slo, shi) = chunk(send_v);
         let (rlo, rhi) = chunk(recv_v);
-        env.send_vec(comm, right, rtag, buf[slo..shi].to_vec());
+        env.send(comm, right, rtag, &buf[slo..shi]);
         env.recv_into(comm, Some(left), rtag, &mut buf[rlo..rhi]);
     }
 }

@@ -33,23 +33,25 @@ pub fn gather(
     let to_comm = |v: usize| (v + root) % p;
 
     // acc holds the blocks of vranks [vrank, vrank + width) in vrank
-    // order; width doubles as children report in.
-    let mut acc = mine.to_vec();
+    // order. The subtree width is known up front (the lowest set bit of
+    // vrank bounds how many rounds absorb children), so one pooled buffer
+    // of the final size replaces the old grow-by-extend vector.
+    let low = if vrank == 0 { super::pow2_ge(p) } else { vrank & vrank.wrapping_neg() };
+    let width = low.min(p - vrank);
+    let mut acc = env.take_buf(width * m);
+    acc[..m].copy_from_slice(mine);
     let mut mask = 1usize;
     while mask < p {
         if vrank & mask != 0 {
             // My subtree is complete: ship it to the parent and leave.
             let parent = vrank - mask;
-            env.send_vec(comm, to_comm(parent), tag, acc);
-            acc = Vec::new();
+            env.send(comm, to_comm(parent), tag, &acc);
             break;
         }
         let child = vrank + mask;
         if child < p {
             let nblocks = mask.min(p - child);
-            let mut sub = vec![0u8; nblocks * m];
-            env.recv_into(comm, Some(to_comm(child)), tag, &mut sub);
-            acc.extend_from_slice(&sub);
+            env.recv_into(comm, Some(to_comm(child)), tag, &mut acc[mask * m..(mask + nblocks) * m]);
         }
         mask <<= 1;
     }
@@ -69,35 +71,46 @@ pub fn gather(
 /// Irregular linear gather: rank `r` contributes `counts[r]` bytes; the
 /// root receives the concatenation in rank order. Used over leader/bridge
 /// communicators whose per-node block sizes differ (§5.2.2 irregularity).
+///
+/// `mine: None` is the explicit **in-place root mode**: the root's block
+/// already sits in `out` at its displacement (the hybrid gather ingests
+/// straight into the shared window this way). Non-root ranks must pass
+/// `Some` — their contribution length is still hard-asserted.
 pub fn gatherv(
     env: &mut ProcEnv,
     comm: &Communicator,
     root: usize,
     counts: &[usize],
-    mine: &[u8],
+    mine: Option<&[u8]>,
     out: Option<&mut [u8]>,
 ) {
     let p = comm.size();
     let me = comm.rank();
     assert_eq!(counts.len(), p, "one count per rank");
-    assert_eq!(mine.len(), counts[me], "my contribution must match counts[me]");
     let displ = super::displs_of(counts);
     if me == root {
         let out = out.expect("root must supply an output buffer");
         let total: usize = counts.iter().sum();
         assert_eq!(out.len(), total, "gatherv output buffer size");
-        out[displ[me]..displ[me] + counts[me]].copy_from_slice(mine);
+        if let Some(mine) = mine {
+            assert_eq!(mine.len(), counts[me], "my contribution must match counts[me]");
+            out[displ[me]..displ[me] + counts[me]].copy_from_slice(mine);
+        }
+        // (None: in-place mode — the root's block is already in `out`.)
         if p == 1 {
             return;
         }
         let tag = env.next_coll_tag(comm, opcode::GATHER);
         for _ in 0..p - 1 {
             // Any-source: arrivals identify their slot by sender rank.
-            let (src, data) = env.recv(comm, None, tag);
+            let (src, data) = env.recv_payload(comm, None, tag);
             assert_eq!(data.len(), counts[src]);
             out[displ[src]..displ[src] + counts[src]].copy_from_slice(&data);
+            env.count_copy(counts[src]);
         }
     } else {
+        let mine = mine.expect("non-root ranks must supply their contribution");
+        assert_eq!(mine.len(), counts[me], "my contribution must match counts[me]");
         let tag = env.next_coll_tag(comm, opcode::GATHER);
         env.send(comm, root, tag, mine);
     }
@@ -146,7 +159,7 @@ mod tests {
             let total: usize = counts.iter().sum();
             let mut buf = vec![0u8; total];
             let is_root = w.rank() == 3;
-            gatherv(env, &w, 3, &counts, &mine, if is_root { Some(&mut buf) } else { None });
+            gatherv(env, &w, 3, &counts, Some(&mine), if is_root { Some(&mut buf) } else { None });
             (is_root, buf)
         });
         let expect: Vec<u8> = (0..8).flat_map(|r| payload(r, 2 * r + 1)).collect();
@@ -161,7 +174,7 @@ mod tests {
             let mine = if w.rank() % 2 == 0 { payload(w.rank(), 4) } else { vec![] };
             let mut buf = vec![0u8; 8];
             let is_root = w.rank() == 0;
-            gatherv(env, &w, 0, &counts, &mine, if is_root { Some(&mut buf) } else { None });
+            gatherv(env, &w, 0, &counts, Some(&mine), if is_root { Some(&mut buf) } else { None });
             buf
         });
         assert_eq!(out[0], [payload(0, 4), payload(2, 4)].concat());
@@ -190,7 +203,7 @@ mod tests {
             let mut buf = vec![0u8; m * w.size()];
             let is_root = w.rank() == 0;
             let t0 = env.vclock();
-            gatherv(env, &w, 0, &counts, &mine, if is_root { Some(&mut buf) } else { None });
+            gatherv(env, &w, 0, &counts, Some(&mine), if is_root { Some(&mut buf) } else { None });
             env.vclock() - t0
         })
         .into_iter()

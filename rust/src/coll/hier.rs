@@ -13,7 +13,7 @@
 //! builds once at `MPI_Init`/communicator creation — they are constructed
 //! over the uncharged control plane (see [`HierCtx::create`]).
 
-use super::allgather::allgatherv;
+use super::allgather::allgatherv_inplace;
 use super::allreduce::{allreduce, AllreduceAlgo};
 use super::bcast::{bcast, BcastAlgo};
 use super::reduce::reduce;
@@ -141,11 +141,11 @@ pub fn hier_allgather(env: &mut ProcEnv, ctx: &HierCtx, mine: &[u8], out: &mut [
         for r in 1..node_p {
             env.recv_into(&ctx.node, Some(r), tag, &mut out[base + r * m..base + (r + 1) * m]);
         }
-        // Exchange node blocks across the bridge.
+        // Exchange node blocks across the bridge, in place: my node's
+        // block already sits at its displacement in `out`.
         if let Some(bridge) = &ctx.bridge {
             let counts: Vec<usize> = ctx.node_sizes.iter().map(|&c| c * m).collect();
-            let myblock = out[base..base + node_p * m].to_vec();
-            allgatherv(env, bridge, &myblock, &counts, out);
+            allgatherv_inplace(env, bridge, &counts, out);
         }
         // Fan the full result back out on the node.
         bcast(env, &ctx.node, 0, out, BcastAlgo::Auto);
@@ -159,7 +159,8 @@ pub fn hier_allgather(env: &mut ProcEnv, ctx: &HierCtx, mine: &[u8], out: &mut [
 pub fn hier_allreduce(env: &mut ProcEnv, ctx: &HierCtx, dtype: Datatype, op: ReduceOp, buf: &mut [u8]) {
     let node_p = ctx.node.size();
     if node_p > 1 {
-        let contrib = buf.to_vec();
+        let mut contrib = env.take_buf(buf.len());
+        contrib.copy_from_slice(buf);
         let out = if ctx.is_leader() { Some(&mut *buf) } else { None };
         reduce(env, &ctx.node, 0, dtype, op, &contrib, out);
     }

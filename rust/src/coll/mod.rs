@@ -23,7 +23,7 @@ pub mod reduce_scatter;
 pub mod scatter;
 pub mod tuning;
 
-pub use allgather::{allgather, allgatherv, AllgatherAlgo};
+pub use allgather::{allgather, allgatherv, allgatherv_inplace, AllgatherAlgo};
 pub use allreduce::{allreduce, AllreduceAlgo};
 pub use bcast::{bcast, BcastAlgo};
 pub use gather::{gather, gatherv};

@@ -28,6 +28,13 @@
 //! Planning is collective: like every MPI collective, all members of a
 //! communicator must create and execute plans in the same order. Window
 //! teardown is collective too — call [`PlanCache::free`] symmetrically.
+//!
+//! Steady-state executions are **allocation-free in the payload path**:
+//! message staging and per-round scratch come from the rank's recycled
+//! slab pool ([`crate::mpi::pool`]), and window-backed plans reduce,
+//! gather and scatter in place on the shared window (DESIGN.md §5b).
+//! The `zerocopy` integration test pins post-warm-up pool misses to
+//! zero.
 
 use super::allgather::{allgather, AllgatherAlgo};
 use super::allreduce::{allreduce, AllreduceAlgo};

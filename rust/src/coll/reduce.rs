@@ -31,7 +31,10 @@ pub fn reduce(
     }
     let tag = env.next_coll_tag(comm, opcode::REDUCE);
     let vrank = (me + p - root) % p;
-    let mut acc = contrib.to_vec();
+    // Pooled accumulator + one pooled child buffer reused every round.
+    let mut acc = env.take_buf(contrib.len());
+    acc.copy_from_slice(contrib);
+    let mut child = env.take_buf(contrib.len());
     let mut mask = 1usize;
     // Binomial gather-with-combine: at round k, vranks with bit k set send
     // their accumulator to (vrank − 2^k) and leave; others absorb.
@@ -42,7 +45,6 @@ pub fn reduce(
             break;
         } else if vrank + mask < p {
             let src = (vrank + mask + root) % p;
-            let mut child = vec![0u8; acc.len()];
             env.recv_into(comm, Some(src), tag, &mut child);
             op.apply(dtype, &mut acc, &child);
             env.charge_reduce(acc.len());

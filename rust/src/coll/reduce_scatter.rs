@@ -51,14 +51,19 @@ pub fn reduce_scatterv(
     // each host's contribution, until it completes at rank b after p−1
     // hops. At step s, rank `me` forwards the partial for block
     // (me−1−s) mod p and folds the incoming partial for block (me−2−s).
-    let mut work = sendbuf.to_vec();
+    // The working vector and the per-step staging buffer are pooled;
+    // outgoing partials are borrowed straight from the working vector.
+    let mut work = env.take_buf(sendbuf.len());
+    work.copy_from_slice(sendbuf);
+    let max_count = counts.iter().copied().max().unwrap_or(0);
+    let mut incoming = env.take_buf(max_count);
     for s in 0..p - 1 {
         let sb = (me + 2 * p - 1 - s) % p;
         let rb = (me + 2 * p - 2 - s) % p;
-        env.send_vec(comm, right, tag, work[displ[sb]..displ[sb] + counts[sb]].to_vec());
-        let mut incoming = vec![0u8; counts[rb]];
-        env.recv_into(comm, Some(left), tag, &mut incoming);
-        op.apply(dtype, &mut work[displ[rb]..displ[rb] + counts[rb]], &incoming);
+        env.send(comm, right, tag, &work[displ[sb]..displ[sb] + counts[sb]]);
+        let stage = &mut incoming[..counts[rb]];
+        env.recv_into(comm, Some(left), tag, stage);
+        op.apply(dtype, &mut work[displ[rb]..displ[rb] + counts[rb]], stage);
         env.charge_reduce(counts[rb]);
     }
     recvbuf.copy_from_slice(&work[displ[me]..displ[me] + counts[me]]);

@@ -10,7 +10,7 @@
 
 use super::pow2_ge;
 use crate::mpi::env::{opcode, ProcEnv};
-use crate::mpi::Communicator;
+use crate::mpi::{Communicator, PoolBuf};
 
 /// Scatter `send` (rank-major, `recv.len() * comm.size()` bytes,
 /// significant only at `root` — pass `None` elsewhere) so rank `r`
@@ -36,13 +36,14 @@ pub fn scatter(
 
     // stage holds the blocks of vranks [vrank, vrank + width) in vrank
     // order; the root starts with everything, everyone else receives its
-    // subtree range from the parent in one message.
-    let stage: Vec<u8>;
+    // subtree range from the parent in one message. Pooled, reused across
+    // invocations; forwards borrow subranges of it.
+    let stage: PoolBuf;
     let mut mask: usize;
     if vrank == 0 {
         let s = send.expect("root must supply the send buffer");
         assert_eq!(s.len(), m * p, "scatter send buffer size");
-        let mut rot = vec![0u8; m * p];
+        let mut rot = env.take_buf(m * p);
         for v in 0..p {
             let r = to_comm(v);
             rot[v * m..(v + 1) * m].copy_from_slice(&s[r * m..(r + 1) * m]);
@@ -53,7 +54,7 @@ pub fn scatter(
         let low = vrank & vrank.wrapping_neg();
         let parent = vrank - low;
         let width = low.min(p - vrank);
-        let mut sub = vec![0u8; width * m];
+        let mut sub = env.take_buf(width * m);
         env.recv_into(comm, Some(to_comm(parent)), tag, &mut sub);
         stage = sub;
         mask = low / 2;
@@ -63,7 +64,7 @@ pub fn scatter(
         if child < p {
             let w = mask.min(p - child);
             let off = (child - vrank) * m;
-            env.send_vec(comm, to_comm(child), tag, stage[off..off + w * m].to_vec());
+            env.send(comm, to_comm(child), tag, &stage[off..off + w * m]);
         }
         mask >>= 1;
     }

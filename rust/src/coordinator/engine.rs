@@ -58,7 +58,13 @@ impl SimCluster {
     {
         let topo = Topology::new(&self.spec.nodes, self.spec.placement);
         let world = topo.world_size();
-        let state = ClusterState::new(topo, self.spec.net.clone(), self.spec.mgmt.clone(), self.spec.compute_scale);
+        let state = ClusterState::with_options(
+            topo,
+            self.spec.net.clone(),
+            self.spec.mgmt.clone(),
+            self.spec.compute_scale,
+            self.spec.legacy_dataplane,
+        );
         let f = Arc::new(f);
         let t0 = Instant::now();
         let mut handles = Vec::with_capacity(world);

@@ -70,6 +70,10 @@ pub struct ClusterSpec {
     /// Host-CPU-time → virtual-compute-time multiplier.
     pub compute_scale: f64,
     pub preset_name: &'static str,
+    /// Emulate the pre-refactor allocating data plane (no slab recycling,
+    /// window materialization through copies). Identical virtual time;
+    /// `bench_all` uses it to measure the wall-clock gap.
+    pub legacy_dataplane: bool,
 }
 
 impl ClusterSpec {
@@ -83,6 +87,7 @@ impl ClusterSpec {
             placement: Placement::Block,
             compute_scale: 1.0,
             preset_name: p.name(),
+            legacy_dataplane: false,
         }
     }
 
@@ -117,6 +122,11 @@ impl ClusterSpec {
 
     pub fn with_compute_scale(mut self, s: f64) -> ClusterSpec {
         self.compute_scale = s;
+        self
+    }
+
+    pub fn with_legacy_dataplane(mut self, legacy: bool) -> ClusterSpec {
+        self.legacy_dataplane = legacy;
         self
     }
 }

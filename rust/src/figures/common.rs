@@ -13,6 +13,8 @@ use crate::coll::{CollOp, Flavor, PlanCache};
 use crate::coordinator::{measure_collective, ClusterSpec, MeasureConfig};
 use crate::hybrid::{AllreduceMethod, SyncScheme};
 use crate::mpi::{Datatype, ReduceOp};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 fn cfg_for(spec: &ClusterSpec, fast: bool) -> MeasureConfig {
     let mut c = MeasureConfig::auto(spec.world_size());
@@ -29,18 +31,38 @@ struct St {
     out: Vec<u8>,
 }
 
+/// One microbench measurement plus engine statistics (plan-cache counters
+/// read from rank 0's cache after the last iteration — cache
+/// effectiveness is part of every reported run).
+pub struct DriveReport {
+    /// Mean modeled latency (µs; per-iteration max across ranks).
+    pub mean_us: f64,
+    /// Rank 0's plan-cache hits (executions that reused a plan).
+    pub plan_hits: u64,
+    /// Rank 0's plan-cache misses (plans built — 1 in steady state).
+    pub plan_misses: u64,
+}
+
 /// Generic driver: build the plan for `(op, flavor)` in setup, execute it
 /// per iteration.
-fn drive(
+fn drive(spec: ClusterSpec, fast: bool, op: CollOp, bytes: usize, flavor: Flavor) -> f64 {
+    drive_report(spec, fast, op, bytes, flavor).mean_us
+}
+
+/// [`drive`] with the plan-cache statistics included.
+pub fn drive_report(
     spec: ClusterSpec,
     fast: bool,
     op: CollOp,
     bytes: usize,
     flavor: Flavor,
-) -> f64 {
+) -> DriveReport {
     let cfg = cfg_for(&spec, fast);
     let world = spec.world_size();
-    measure_collective(
+    let hits = Arc::new(AtomicU64::new(0));
+    let misses = Arc::new(AtomicU64::new(0));
+    let (hits2, misses2) = (hits.clone(), misses.clone());
+    let summary = measure_collective(
         spec,
         cfg,
         move |env| {
@@ -120,9 +142,17 @@ fn drive(
                     );
                 }
             }
+            if env.world_rank() == 0 {
+                hits2.store(st.cache.hits(), Ordering::Relaxed);
+                misses2.store(st.cache.misses(), Ordering::Relaxed);
+            }
         },
-    )
-    .mean
+    );
+    DriveReport {
+        mean_us: summary.mean,
+        plan_hits: hits.load(Ordering::Relaxed),
+        plan_misses: misses.load(Ordering::Relaxed),
+    }
 }
 
 /// Pure `MPI_Bcast` latency (tuned algorithm), root 0, `bytes` payload.
@@ -208,6 +238,15 @@ mod tests {
         let pure = pure_bcast(spec(), 512 * 1024, true);
         let hy = hy_bcast(spec(), 512 * 1024, SyncScheme::Spin, true);
         assert!(hy < pure, "bcast: hybrid {hy} vs pure {pure}");
+    }
+
+    #[test]
+    fn drive_report_surfaces_cache_stats() {
+        let spec = ClusterSpec::preset(Preset::VulcanSb, 2);
+        let r = drive_report(spec, true, CollOp::Allgather, 256, Flavor::Pure);
+        assert_eq!(r.plan_misses, 1, "one plan built");
+        assert!(r.plan_hits >= 5, "every later iteration reused it (got {})", r.plan_hits);
+        assert!(r.mean_us > 0.0);
     }
 
     #[test]

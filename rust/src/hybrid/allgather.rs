@@ -14,7 +14,7 @@
 use super::package::CommPackage;
 use super::shmem::HyWin;
 use super::sync::{await_release, red_sync, release, SyncScheme};
-use crate::coll::allgather::allgatherv;
+use crate::coll::allgather::{allgatherv, allgatherv_inplace};
 use crate::mpi::env::ProcEnv;
 use crate::mpi::topo::Placement;
 
@@ -86,16 +86,24 @@ pub fn hy_allgather(
     // Red sync: all on-node contributions must be in the window.
     red_sync(env, pkg);
     if let Some(bridge) = &pkg.bridge {
-        // My node's block: contiguous because placement is block-style.
-        let bidx = bridge.rank();
-        let (lo, count) = (param.displs[bidx], param.recvcounts[bidx]);
         // Exchange node blocks in place over the bridge. The leader works
-        // directly on the shared window (no extra node-level copy) —
+        // directly on the shared window (its node's block is already
+        // contiguous at its displacement under block placement, so every
+        // ring step borrows straight out of the window) —
         // protocol-exclusive during this phase.
-        let mine = win.win.read_vec(lo, count);
         let full_len: usize = param.recvcounts.iter().sum();
-        let out = unsafe { win.win.slice_mut(0, full_len) };
-        allgatherv(env, bridge, &mine, &param.recvcounts, out);
+        if env.legacy_dataplane() {
+            // Pre-refactor path: materialize the node block first.
+            let bidx = bridge.rank();
+            let (lo, count) = (param.displs[bidx], param.recvcounts[bidx]);
+            let mine = win.win.read_vec(lo, count);
+            env.count_copy(count);
+            let out = unsafe { win.win.slice_mut(0, full_len) };
+            allgatherv(env, bridge, &mine, &param.recvcounts, out);
+        } else {
+            let out = unsafe { win.win.slice_mut(0, full_len) };
+            allgatherv_inplace(env, bridge, &param.recvcounts, out);
+        }
         let _ = msg;
         release(env, pkg, win, scheme);
     } else {

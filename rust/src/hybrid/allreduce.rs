@@ -86,30 +86,60 @@ pub fn hy_allreduce(
         AllreduceMethod::Method1 => {
             // MPI_Reduce over the node communicator; operands read from
             // each rank's own window slot (its private data — no sync
-            // needed before a rank reads what it wrote).
+            // needed before a rank reads what it wrote). The operand is
+            // borrowed straight out of the window, and the leader's
+            // result lands in slot L in place (the `charge_memcpy` keeps
+            // the modeled store cost identical to the legacy round-trip).
             let my_off = win.local_ptr(pkg.shmem.rank(), msize);
-            let contrib = win.win.read_vec(my_off, msize);
-            if pkg.is_leader() {
-                let mut out = vec![0u8; msize];
-                reduce(env, &pkg.shmem, 0, dtype, op, &contrib, Some(&mut out));
-                win.store(env, l_off, &out);
+            if env.legacy_dataplane() {
+                let contrib = win.win.read_vec(my_off, msize);
+                env.count_copy(msize);
+                if pkg.is_leader() {
+                    let mut out = vec![0u8; msize];
+                    reduce(env, &pkg.shmem, 0, dtype, op, &contrib, Some(&mut out));
+                    win.store(env, l_off, &out);
+                } else {
+                    reduce(env, &pkg.shmem, 0, dtype, op, &contrib, None);
+                }
             } else {
-                reduce(env, &pkg.shmem, 0, dtype, op, &contrib, None);
+                let contrib = unsafe { win.win.slice(my_off, msize) };
+                if pkg.is_leader() {
+                    let out = unsafe { win.win.slice_mut(l_off, msize) };
+                    reduce(env, &pkg.shmem, 0, dtype, op, contrib, Some(out));
+                    env.charge_memcpy(msize);
+                } else {
+                    reduce(env, &pkg.shmem, 0, dtype, op, contrib, None);
+                }
             }
         }
         AllreduceMethod::Method2 => {
             // Red sync so every input slot is visible, then the leader
-            // reduces serially straight out of the shared window.
+            // reduces serially straight out of the shared window into
+            // slot L (slot 0 seeds L; slots 1.. fold into it — the same
+            // combine order as the legacy accumulator, so results are
+            // bit-identical).
             red_sync(env, pkg);
             if pkg.is_leader() {
-                let mut acc = win.win.read_vec(0, msize);
-                for r in 1..pkg.shmem_size {
-                    let operand = unsafe { win.win.slice(r * msize, msize) };
-                    op.apply(dtype, &mut acc, operand);
+                if env.legacy_dataplane() {
+                    let mut acc = win.win.read_vec(0, msize);
+                    env.count_copy(msize);
+                    for r in 1..pkg.shmem_size {
+                        let operand = unsafe { win.win.slice(r * msize, msize) };
+                        op.apply(dtype, &mut acc, operand);
+                    }
+                    env.charge_reduce(msize * pkg.shmem_size);
+                    win.win.write(l_off, &acc);
+                    env.charge_memcpy(msize);
+                } else {
+                    win.win.copy_within(0, l_off, msize);
+                    let l = unsafe { win.win.slice_mut(l_off, msize) };
+                    for r in 1..pkg.shmem_size {
+                        let operand = unsafe { win.win.slice(r * msize, msize) };
+                        op.apply(dtype, l, operand);
+                    }
+                    env.charge_reduce(msize * pkg.shmem_size);
+                    env.charge_memcpy(msize);
                 }
-                env.charge_reduce(msize * pkg.shmem_size);
-                win.win.write(l_off, &acc);
-                env.charge_memcpy(msize);
             }
         }
         AllreduceMethod::Tuned => unreachable!(),
@@ -117,9 +147,15 @@ pub fn hy_allreduce(
 
     // ---- step 2: bridge allreduce into G + yellow sync ----------------
     if let Some(bridge) = &pkg.bridge {
-        // G := L, then allreduce G in place across the leaders.
-        let l = win.win.read_vec(l_off, msize);
-        win.win.write(g_off, &l);
+        // G := L (slot-to-slot move inside the window), then allreduce G
+        // in place across the leaders.
+        if env.legacy_dataplane() {
+            let l = win.win.read_vec(l_off, msize);
+            env.count_copy(msize);
+            win.win.write(g_off, &l);
+        } else {
+            win.win.copy_within(l_off, g_off, msize);
+        }
         env.charge_memcpy(msize);
         if bridge.size() > 1 {
             let g = unsafe { win.win.slice_mut(g_off, msize) };

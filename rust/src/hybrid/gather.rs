@@ -52,14 +52,27 @@ pub fn hy_gather(
             if bidx == root_node {
                 // Root's leader ingests every other node's block straight
                 // into the shared window at its global displacement (the
-                // node's own block is already in place).
-                let mine = win.win.read_vec(lo, count);
+                // node's own block is already in place — gatherv's
+                // explicit in-place root mode, `mine: None`).
                 let full_len: usize = param.recvcounts.iter().sum();
-                let out = unsafe { win.win.slice_mut(0, full_len) };
-                gatherv(env, bridge, root_node, &param.recvcounts, &mine, Some(out));
-            } else {
+                if env.legacy_dataplane() {
+                    let mine = win.win.read_vec(lo, count);
+                    env.count_copy(count);
+                    let out = unsafe { win.win.slice_mut(0, full_len) };
+                    gatherv(env, bridge, root_node, &param.recvcounts, Some(&mine), Some(out));
+                } else {
+                    let out = unsafe { win.win.slice_mut(0, full_len) };
+                    gatherv(env, bridge, root_node, &param.recvcounts, None, Some(out));
+                }
+            } else if env.legacy_dataplane() {
                 let mine = win.win.read_vec(lo, count);
-                gatherv(env, bridge, root_node, &param.recvcounts, &mine, None);
+                env.count_copy(count);
+                gatherv(env, bridge, root_node, &param.recvcounts, Some(&mine), None);
+            } else {
+                // Non-root leaders send their node block borrowed
+                // straight from the window.
+                let mine = unsafe { win.win.slice(lo, count) };
+                gatherv(env, bridge, root_node, &param.recvcounts, Some(mine), None);
             }
         }
         release(env, pkg, win, scheme);

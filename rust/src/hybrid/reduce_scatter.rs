@@ -77,27 +77,56 @@ pub fn hy_reduce_scatter(
     // ---- step 1: node-level reduction of the full vectors into L ------
     match method {
         AllreduceMethod::Method1 => {
+            // Operands are borrowed straight out of the window; the
+            // leader's result lands in slot L in place (same modeled
+            // store cost as the legacy round-trip).
             let my_off = win.local_ptr(pkg.shmem.rank(), total);
-            let contrib = win.win.read_vec(my_off, total);
-            if pkg.is_leader() {
-                let mut out = vec![0u8; total];
-                reduce(env, &pkg.shmem, 0, dtype, op, &contrib, Some(&mut out));
-                win.store(env, l_off, &out);
+            if env.legacy_dataplane() {
+                let contrib = win.win.read_vec(my_off, total);
+                env.count_copy(total);
+                if pkg.is_leader() {
+                    let mut out = vec![0u8; total];
+                    reduce(env, &pkg.shmem, 0, dtype, op, &contrib, Some(&mut out));
+                    win.store(env, l_off, &out);
+                } else {
+                    reduce(env, &pkg.shmem, 0, dtype, op, &contrib, None);
+                }
             } else {
-                reduce(env, &pkg.shmem, 0, dtype, op, &contrib, None);
+                let contrib = unsafe { win.win.slice(my_off, total) };
+                if pkg.is_leader() {
+                    let out = unsafe { win.win.slice_mut(l_off, total) };
+                    reduce(env, &pkg.shmem, 0, dtype, op, contrib, Some(out));
+                    env.charge_memcpy(total);
+                } else {
+                    reduce(env, &pkg.shmem, 0, dtype, op, contrib, None);
+                }
             }
         }
         AllreduceMethod::Method2 => {
             red_sync(env, pkg);
             if pkg.is_leader() {
-                let mut acc = win.win.read_vec(0, total);
-                for r in 1..pkg.shmem_size {
-                    let operand = unsafe { win.win.slice(r * total, total) };
-                    op.apply(dtype, &mut acc, operand);
+                if env.legacy_dataplane() {
+                    let mut acc = win.win.read_vec(0, total);
+                    env.count_copy(total);
+                    for r in 1..pkg.shmem_size {
+                        let operand = unsafe { win.win.slice(r * total, total) };
+                        op.apply(dtype, &mut acc, operand);
+                    }
+                    env.charge_reduce(total * pkg.shmem_size);
+                    win.win.write(l_off, &acc);
+                    env.charge_memcpy(total);
+                } else {
+                    // Slot 0 seeds L in place; slots 1.. fold into it
+                    // (legacy combine order, bit-identical results).
+                    win.win.copy_within(0, l_off, total);
+                    let l = unsafe { win.win.slice_mut(l_off, total) };
+                    for r in 1..pkg.shmem_size {
+                        let operand = unsafe { win.win.slice(r * total, total) };
+                        op.apply(dtype, l, operand);
+                    }
+                    env.charge_reduce(total * pkg.shmem_size);
+                    env.charge_memcpy(total);
                 }
-                env.charge_reduce(total * pkg.shmem_size);
-                win.win.write(l_off, &acc);
-                env.charge_memcpy(total);
             }
         }
         AllreduceMethod::Tuned => unreachable!(),
@@ -112,16 +141,30 @@ pub fn hy_reduce_scatter(
         if bridge.size() > 1 {
             let node_counts: Vec<usize> = sizeset.iter().map(|&s| s * count).collect();
             let my_node_displ: usize = node_counts[..bidx].iter().sum();
-            let l = win.win.read_vec(l_off, total);
-            let mut mine = vec![0u8; node_counts[bidx]];
-            reduce_scatterv(env, bridge, dtype, op, &node_counts, &l, &mut mine);
-            win.win.write(g_off + my_node_displ, &mine);
-            env.charge_memcpy(mine.len());
+            if env.legacy_dataplane() {
+                let l = win.win.read_vec(l_off, total);
+                env.count_copy(total);
+                let mut mine = vec![0u8; node_counts[bidx]];
+                reduce_scatterv(env, bridge, dtype, op, &node_counts, &l, &mut mine);
+                win.win.write(g_off + my_node_displ, &mine);
+            } else {
+                // L is consumed in place; the reduced node range lands
+                // directly in G (disjoint window regions).
+                let l = unsafe { win.win.slice(l_off, total) };
+                let mine = unsafe { win.win.slice_mut(g_off + my_node_displ, node_counts[bidx]) };
+                reduce_scatterv(env, bridge, dtype, op, &node_counts, l, mine);
+            }
+            env.charge_memcpy(node_counts[bidx]);
         } else {
             // Single node: L is already the full result; land the node's
             // (= whole) range in G.
-            let l = win.win.read_vec(l_off, total);
-            win.win.write(g_off, &l);
+            if env.legacy_dataplane() {
+                let l = win.win.read_vec(l_off, total);
+                env.count_copy(total);
+                win.win.write(g_off, &l);
+            } else {
+                win.win.copy_within(l_off, g_off, total);
+            }
             env.charge_memcpy(total);
         }
         release(env, pkg, win, scheme);

@@ -60,9 +60,19 @@ pub fn hy_scatter(
             let (lo, count) = (param.displs[bidx], param.recvcounts[bidx]);
             if bidx == root_node {
                 let full_len: usize = param.recvcounts.iter().sum();
-                let full = win.win.read_vec(0, full_len);
-                let mut keep = vec![0u8; count];
-                scatterv(env, bridge, root_node, &param.recvcounts, Some(&full), &mut keep);
+                if env.legacy_dataplane() {
+                    let full = win.win.read_vec(0, full_len);
+                    env.count_copy(full_len);
+                    let mut keep = vec![0u8; count];
+                    scatterv(env, bridge, root_node, &param.recvcounts, Some(&full), &mut keep);
+                } else {
+                    // Outgoing node ranges are borrowed straight from the
+                    // window; `keep` only absorbs the root's own (already
+                    // in-place) range, via a pooled scratch.
+                    let full = unsafe { win.win.slice(0, full_len) };
+                    let mut keep = env.take_buf(count);
+                    scatterv(env, bridge, root_node, &param.recvcounts, Some(full), &mut keep);
+                }
                 // The root node's own range is already in place.
             } else {
                 let out = unsafe { win.win.slice_mut(lo, count) };

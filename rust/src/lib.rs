@@ -38,6 +38,13 @@
 //!   harness and a property-testing helper (the build is fully offline, so
 //!   these substrates are implemented here rather than pulled in).
 
+// Style decisions the CI clippy gate should not fight: indexed loops are
+// the idiom of block/displacement collective math throughout this crate,
+// and the MPI-shaped call surfaces legitimately carry many parameters.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
+
 pub mod coll;
 pub mod coordinator;
 pub mod figures;

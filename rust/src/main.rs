@@ -59,46 +59,37 @@ fn main() -> hympi::Result<()> {
             let bytes: usize = opt(&args, "--bytes").and_then(|v| v.parse().ok()).unwrap_or(800);
             let fast = flag(&args, "--fast");
             let spec = || ClusterSpec::preset(preset, nodes);
+            use hympi::coll::{CollOp, Flavor};
             use hympi::figures::common as mb;
-            let (pure, hy) = match op {
-                "allgather" => (
-                    mb::pure_allgather(spec(), bytes, fast),
-                    mb::hy_allgather(spec(), bytes, SyncScheme::Spin, fast),
-                ),
-                "bcast" => (
-                    mb::pure_bcast(spec(), bytes, fast),
-                    mb::hy_bcast(spec(), bytes, SyncScheme::Spin, fast),
-                ),
-                "allreduce" => (
-                    mb::pure_allreduce(spec(), bytes, fast),
-                    mb::hy_allreduce(
-                        spec(),
-                        bytes,
-                        hympi::hybrid::AllreduceMethod::Tuned,
-                        SyncScheme::Spin,
-                        fast,
-                    ),
-                ),
-                "reduce-scatter" => (
-                    mb::pure_reduce_scatter(spec(), bytes, fast),
-                    mb::hy_reduce_scatter(spec(), bytes, SyncScheme::Spin, fast),
-                ),
-                "gather" => (
-                    mb::pure_gather(spec(), bytes, fast),
-                    mb::hy_gather(spec(), bytes, SyncScheme::Spin, fast),
-                ),
-                "scatter" => (
-                    mb::pure_scatter(spec(), bytes, fast),
-                    mb::hy_scatter(spec(), bytes, SyncScheme::Spin, fast),
-                ),
+            let coll_op = match op {
+                "allgather" => CollOp::Allgather,
+                "bcast" => CollOp::Bcast,
+                "allreduce" => CollOp::Allreduce,
+                "reduce-scatter" => CollOp::ReduceScatter,
+                "gather" => CollOp::Gather,
+                "scatter" => CollOp::Scatter,
                 _ => usage(),
             };
+            let pure = mb::drive_report(spec(), fast, coll_op, bytes, Flavor::Pure);
+            let hy = mb::drive_report(
+                spec(),
+                fast,
+                coll_op,
+                bytes,
+                Flavor::hybrid(SyncScheme::Spin),
+            );
             println!(
-                "{op} on {} x {} ({} B): MPI {pure:.2} us | hybrid {hy:.2} us | speedup {:+.1}%",
+                "{op} on {} x {} ({} B): MPI {:.2} us | hybrid {:.2} us | speedup {:+.1}%",
                 nodes,
                 preset.cores_per_node(),
                 bytes,
-                (pure - hy) / pure * 100.0
+                pure.mean_us,
+                hy.mean_us,
+                (pure.mean_us - hy.mean_us) / pure.mean_us * 100.0
+            );
+            println!(
+                "  plan cache: pure {} hits / {} misses | hybrid {} hits / {} misses",
+                pure.plan_hits, pure.plan_misses, hy.plan_hits, hy.plan_misses
             );
         }
         Some("kernel") => {

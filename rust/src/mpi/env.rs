@@ -18,6 +18,7 @@
 use super::comm::{Communicator, UNDEFINED};
 use super::msg::{Matcher, Msg};
 use super::net::NetModel;
+use super::pool::{BufPool, Payload, PoolBuf};
 use super::state::ClusterState;
 use super::topo::Topology;
 use super::win::SharedWindow;
@@ -70,12 +71,24 @@ pub struct ProcEnv {
     coll_seq: HashMap<u64, u64>,
     /// Per-communicator window sequence numbers.
     win_seq: HashMap<u64, u64>,
+    /// Bytes physically copied by this rank (send staging, receive
+    /// delivery, window store/load) — debug instrumentation for the
+    /// zero-copy tests; independent of virtual-time charging.
+    copied: u64,
 }
 
 impl ProcEnv {
     pub fn new(state: Arc<ClusterState>, rank: usize) -> ProcEnv {
         let world = Communicator::world(state.topo.world_size(), rank, state.topo.nnodes() > 1);
-        ProcEnv { rank, state, vclock: 0.0, world, coll_seq: HashMap::new(), win_seq: HashMap::new() }
+        ProcEnv {
+            rank,
+            state,
+            vclock: 0.0,
+            world,
+            coll_seq: HashMap::new(),
+            win_seq: HashMap::new(),
+            copied: 0,
+        }
     }
 
     // ---- identity & clocks ------------------------------------------------
@@ -118,8 +131,10 @@ impl ProcEnv {
     }
 
     /// Charge one on-node memory copy of `bytes` (the hybrid load/store
-    /// path) without moving data (callers that already moved it).
+    /// path). The copy itself is performed by the caller; this charges
+    /// its virtual time and records it in the copy counter.
     pub fn charge_memcpy(&mut self, bytes: usize) {
+        self.copied += bytes as u64;
         self.vclock += self.state.net.memcpy(bytes);
     }
 
@@ -150,6 +165,61 @@ impl ProcEnv {
         Rng::new((self.rank as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ salt)
     }
 
+    // ---- payload pool & copy instrumentation -------------------------------
+
+    /// This rank's payload slab pool.
+    pub fn pool(&self) -> &Arc<BufPool> {
+        &self.state.pools[self.rank]
+    }
+
+    /// Borrow a pooled scratch buffer of `len` bytes. Contents are
+    /// undefined — write before reading. Returns to the pool on drop.
+    pub fn take_buf(&self, len: usize) -> PoolBuf {
+        PoolBuf::take(self.pool(), len)
+    }
+
+    /// Copy `data` into a pooled payload (in legacy data-plane mode: a
+    /// fresh allocation, reproducing the pre-pool behaviour).
+    pub fn payload_from(&mut self, data: &[u8]) -> Payload {
+        self.copied += data.len() as u64;
+        if self.state.legacy_dataplane {
+            Payload::from_vec(data.to_vec())
+        } else {
+            Payload::copy_from(&self.state.pools[self.rank], data)
+        }
+    }
+
+    /// Is the pre-refactor allocating data plane emulated?
+    pub fn legacy_dataplane(&self) -> bool {
+        self.state.legacy_dataplane
+    }
+
+    /// Record `bytes` physically copied (for copies performed outside the
+    /// counted send/recv/memcpy paths, e.g. legacy window round-trips).
+    pub fn count_copy(&mut self, bytes: usize) {
+        self.copied += bytes as u64;
+    }
+
+    /// Bytes physically copied by this rank so far.
+    pub fn copied_bytes(&self) -> u64 {
+        self.copied
+    }
+
+    pub fn reset_copied_bytes(&mut self) {
+        self.copied = 0;
+    }
+
+    /// Pool takes served from recycled slabs.
+    pub fn pool_hits(&self) -> u64 {
+        self.pool().hits()
+    }
+
+    /// Pool takes that allocated (zero in steady state — the invariant
+    /// the `zerocopy` integration test asserts).
+    pub fn pool_misses(&self) -> u64 {
+        self.pool().misses()
+    }
+
     // ---- tags -------------------------------------------------------------
 
     /// Allocate the tag for the next collective call on `comm`. All members
@@ -165,19 +235,29 @@ impl ProcEnv {
 
     /// Send `data` to communicator rank `dst` (`MPI_Send`; eager/buffered —
     /// never blocks, matching our rendezvous approximation in DESIGN.md §8).
+    /// The payload is staged into a recycled pool slab: one copy, no heap
+    /// allocation in steady state.
     pub fn send(&mut self, comm: &Communicator, dst: usize, tag: i64, data: &[u8]) {
-        self.send_shared(comm, dst, tag, &Arc::new(data.to_vec()));
+        let payload = self.payload_from(data);
+        self.send_payload(comm, dst, tag, payload);
     }
 
     /// Send an owned buffer without copying it (`MPI_Send` with a moved
-    /// payload) — collective internals that build per-round temporaries
-    /// use this to avoid the second copy.
+    /// payload). The vector is adopted as-is — callers that can borrow a
+    /// slice should prefer [`ProcEnv::send`] (pooled staging beats a fresh
+    /// allocation); callers holding a [`PoolBuf`] should convert it with
+    /// `into_payload` and use [`ProcEnv::send_payload`].
     pub fn send_vec(&mut self, comm: &Communicator, dst: usize, tag: i64, data: Vec<u8>) {
-        self.send_shared(comm, dst, tag, &Arc::new(data));
+        self.send_payload(comm, dst, tag, Payload::from_vec(data));
     }
 
-    /// Send a shared payload (fan-out senders clone the Arc, not bytes).
-    pub fn send_shared(&mut self, comm: &Communicator, dst: usize, tag: i64, data: &Arc<Vec<u8>>) {
+    /// Send a shared payload (fan-out senders clone the handle, not bytes).
+    pub fn send_shared(&mut self, comm: &Communicator, dst: usize, tag: i64, data: &Payload) {
+        self.send_payload(comm, dst, tag, data.clone());
+    }
+
+    /// Send taking ownership of an already-staged payload (zero-copy).
+    pub fn send_payload(&mut self, comm: &Communicator, dst: usize, tag: i64, data: Payload) {
         self.vclock += self.state.net.send_overhead_us;
         let world_dst = comm.world_of(dst);
         // Inter-node messages serialize on the sending node's NIC;
@@ -194,7 +274,7 @@ impl ProcEnv {
             tag,
             comm: comm.id(),
             sent_at,
-            data: data.clone(),
+            data,
         });
     }
 
@@ -210,16 +290,23 @@ impl ProcEnv {
         );
         self.charge_arrival(comm, &msg);
         out.copy_from_slice(&msg.data);
+        self.copied += out.len() as u64;
         msg.src
+    }
+
+    /// Receive the payload itself (zero-copy; the slab returns to its
+    /// sender's pool when the returned handle drops).
+    pub fn recv_payload(&mut self, comm: &Communicator, src: Option<usize>, tag: i64) -> (usize, Payload) {
+        let msg = self.state.mailboxes[self.rank].recv(Matcher { src, tag, comm: comm.id() });
+        self.charge_arrival(comm, &msg);
+        (msg.src, msg.data)
     }
 
     /// Receive returning a fresh vector (`MPI_Recv` with allocation).
     pub fn recv(&mut self, comm: &Communicator, src: Option<usize>, tag: i64) -> (usize, Vec<u8>) {
-        let msg = self.state.mailboxes[self.rank].recv(Matcher { src, tag, comm: comm.id() });
-        self.charge_arrival(comm, &msg);
-        let src = msg.src;
-        let data = Arc::try_unwrap(msg.data).unwrap_or_else(|a| (*a).clone());
-        (src, data)
+        let (src, data) = self.recv_payload(comm, src, tag);
+        self.copied += data.len() as u64;
+        (src, data.to_vec())
     }
 
     fn charge_arrival(&mut self, comm: &Communicator, msg: &Msg) {
@@ -262,15 +349,14 @@ impl ProcEnv {
             tag,
             comm: comm.id(),
             sent_at: 0.0,
-            data: Arc::new(data.to_vec()),
+            data: Payload::from_vec(data.to_vec()),
         });
     }
 
     /// Out-of-band receive (no virtual-time charge).
     pub fn oob_recv(&self, comm: &Communicator, src: Option<usize>, tag: i64) -> (usize, Vec<u8>) {
         let msg = self.state.mailboxes[self.rank].recv(Matcher { src, tag, comm: comm.id() });
-        let data = Arc::try_unwrap(msg.data).unwrap_or_else(|a| (*a).clone());
-        (msg.src, data)
+        (msg.src, msg.data.to_vec())
     }
 
     // ---- barrier ------------------------------------------------------------

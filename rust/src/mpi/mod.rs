@@ -25,6 +25,7 @@ pub mod env;
 pub mod msg;
 pub mod net;
 pub mod op;
+pub mod pool;
 pub mod state;
 pub mod sync;
 pub mod topo;
@@ -35,6 +36,7 @@ pub use datatype::Datatype;
 pub use env::ProcEnv;
 pub use net::NetModel;
 pub use op::ReduceOp;
+pub use pool::{BufPool, Payload, PoolBuf};
 pub use topo::{Placement, Topology};
 pub use win::SharedWindow;
 

@@ -6,8 +6,9 @@
 //! condvar-based: the host has a single CPU, so spinning would steal the
 //! producer's timeslice (see DESIGN.md).
 
+use super::pool::Payload;
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Condvar, Mutex};
 
 /// A message in flight. `sent_at` is the sender's virtual clock at
 /// injection time; the receiver combines it with the transfer model to
@@ -18,9 +19,11 @@ pub struct Msg {
     pub tag: i64,
     pub comm: u64,
     pub sent_at: f64,
-    /// Shared payload: fan-out senders (tree broadcasts) clone the Arc
-    /// instead of the bytes — §Perf optimization 1 in EXPERIMENTS.md.
-    pub data: Arc<Vec<u8>>,
+    /// Pooled shared payload: fan-out senders (tree broadcasts) clone the
+    /// handle instead of the bytes, and the slab recycles into the
+    /// sender's [`BufPool`](super::pool::BufPool) when the last reference
+    /// drops.
+    pub data: Payload,
 }
 
 /// Matching criteria for a receive.
@@ -61,12 +64,19 @@ impl Mailbox {
 
     /// Block until a matching message exists, remove and return it.
     /// First match in queue order = FIFO per (src, tag, comm).
+    ///
+    /// Each wait resumes scanning where the previous pass stopped: only
+    /// the owner thread removes messages and posts only append, so a
+    /// scanned prefix can never start matching later — without this,
+    /// deep queues make a blocked receive quadratic in queue depth.
     pub fn recv(&self, m: Matcher) -> Msg {
         let mut q = self.q.lock().unwrap();
+        let mut scanned = 0usize;
         loop {
-            if let Some(pos) = q.iter().position(|msg| m.matches(msg)) {
-                return q.remove(pos).unwrap();
+            if let Some(pos) = q.iter().skip(scanned).position(|msg| m.matches(msg)) {
+                return q.remove(scanned + pos).unwrap();
             }
+            scanned = q.len();
             q = self.cv.wait(q).unwrap();
         }
     }
@@ -88,7 +98,7 @@ mod tests {
     use std::sync::Arc;
 
     fn msg(src: usize, tag: i64, comm: u64, byte: u8) -> Msg {
-        Msg { src, tag, comm, sent_at: 0.0, data: Arc::new(vec![byte]) }
+        Msg { src, tag, comm, sent_at: 0.0, data: Payload::from_vec(vec![byte]) }
     }
 
     #[test]
@@ -130,6 +140,23 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(20));
         mb.post(msg(0, 1, 0, 42));
         assert_eq!(h.join().unwrap(), 42);
+    }
+
+    #[test]
+    fn waiting_recv_skips_scanned_prefix_and_still_matches() {
+        let mb = Arc::new(Mailbox::new());
+        let mb2 = mb.clone();
+        let h =
+            std::thread::spawn(move || mb2.recv(Matcher { src: Some(0), tag: 9, comm: 0 }).data[0]);
+        // Bury the eventual match under non-matching traffic posted while
+        // the receiver waits (each post re-wakes it mid-scan).
+        for i in 0..100u8 {
+            mb.post(msg(1, 1, 0, i));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        mb.post(msg(0, 9, 0, 77));
+        assert_eq!(h.join().unwrap(), 77);
+        assert_eq!(mb.depth(), 100, "non-matching messages stay queued");
     }
 
     #[test]

@@ -1,0 +1,298 @@
+//! Pooled payload slabs — the zero-copy data plane.
+//!
+//! Every rank owns a [`BufPool`]: a set of power-of-two size-class shelves
+//! of recycled byte slabs. The two handle types built on it are
+//!
+//! - [`Payload`] — a ref-counted immutable slab carried by a
+//!   [`Msg`](super::msg::Msg). Fan-out senders clone the handle, not the
+//!   bytes; when the last reference drops, the slab returns to the pool of
+//!   the rank that allocated it (its *home*), so a steady-state
+//!   communication pattern reaches a fixed working set and performs no
+//!   further heap allocation.
+//! - [`PoolBuf`] — a uniquely-owned mutable scratch buffer for collective
+//!   internals (receive staging, reduction accumulators, rotation
+//!   buffers). Returned to its home pool on drop. Contents start
+//!   *undefined* (stale bytes from the previous user): callers must write
+//!   before reading, which every call site in `coll/` does by
+//!   construction.
+//!
+//! The pool never zeroes or shrinks; its working set is bounded by the
+//! peak number of simultaneously-live slabs per size class, which for the
+//! collective algorithms is a small multiple of the round count.
+//!
+//! **Legacy mode** ([`BufPool::new`] with `disabled = true`, selected by
+//! `ClusterSpec::legacy_dataplane`): every take is a fresh allocation and
+//! every put is a free — the pre-refactor allocation behaviour, kept so
+//! `bench_all` can measure both data planes in one run. Virtual-time
+//! charging is identical in both modes; only wall-clock differs.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Smallest slab handed out (bytes). Must be a power of two.
+const MIN_CLASS: usize = 64;
+/// Number of size classes: `MIN_CLASS << (NUM_CLASSES - 1)` caps slab
+/// size at 128 GiB — far beyond any simulated payload.
+const NUM_CLASSES: usize = 32;
+
+/// Index of the smallest class that fits `len` bytes.
+fn class_of(len: usize) -> usize {
+    let c = len.max(MIN_CLASS).next_power_of_two();
+    let idx = (c.trailing_zeros() - MIN_CLASS.trailing_zeros()) as usize;
+    assert!(idx < NUM_CLASSES, "payload of {len} bytes exceeds the pool's class range");
+    idx
+}
+
+/// Capacity of class `idx` in bytes.
+fn class_bytes(idx: usize) -> usize {
+    MIN_CLASS << idx
+}
+
+/// A per-rank recycling allocator for payload and scratch slabs.
+pub struct BufPool {
+    shelves: [Mutex<Vec<Box<[u8]>>>; NUM_CLASSES],
+    hits: AtomicU64,
+    misses: AtomicU64,
+    disabled: bool,
+}
+
+impl BufPool {
+    /// `disabled = true` bypasses recycling entirely (legacy data plane).
+    pub fn new(disabled: bool) -> BufPool {
+        BufPool {
+            shelves: std::array::from_fn(|_| Mutex::new(Vec::new())),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            disabled,
+        }
+    }
+
+    /// Takes (recycled or freshly allocated) a slab whose capacity is the
+    /// size class of `len`. Contents are undefined on a recycled hit.
+    fn take_slab(&self, len: usize) -> Box<[u8]> {
+        let idx = class_of(len);
+        if !self.disabled {
+            if let Some(slab) = self.shelves[idx].lock().unwrap().pop() {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return slab;
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        vec![0u8; class_bytes(idx)].into_boxed_slice()
+    }
+
+    /// Returns a slab to its shelf (drops it in disabled mode). Called
+    /// from whichever thread drops the last handle — receivers return
+    /// senders' slabs across threads.
+    fn put_slab(&self, slab: Box<[u8]>) {
+        if self.disabled || slab.is_empty() {
+            return;
+        }
+        debug_assert!(slab.len().is_power_of_two() && slab.len() >= MIN_CLASS);
+        let idx = class_of(slab.len());
+        self.shelves[idx].lock().unwrap().push(slab);
+    }
+
+    /// Takes that found a recycled slab.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Takes that had to allocate (pool-miss allocations — the number the
+    /// zero-copy steady-state test pins to zero after warm-up).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+/// A uniquely-owned pooled scratch buffer (`Deref`s to `[u8]` of the
+/// requested length). Returns to its home pool on drop.
+pub struct PoolBuf {
+    slab: Option<Box<[u8]>>,
+    len: usize,
+    home: Arc<BufPool>,
+}
+
+impl PoolBuf {
+    pub(crate) fn take(pool: &Arc<BufPool>, len: usize) -> PoolBuf {
+        PoolBuf { slab: Some(pool.take_slab(len)), len, home: pool.clone() }
+    }
+
+    /// Converts into an immutable [`Payload`] without copying (the slab
+    /// keeps its home pool).
+    pub fn into_payload(mut self) -> Payload {
+        let slab = self.slab.take().expect("slab present until drop");
+        Payload(Arc::new(PayloadBuf { slab, len: self.len, home: Some(self.home.clone()) }))
+    }
+}
+
+impl Deref for PoolBuf {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        &self.slab.as_ref().expect("slab present until drop")[..self.len]
+    }
+}
+
+impl DerefMut for PoolBuf {
+    fn deref_mut(&mut self) -> &mut [u8] {
+        let len = self.len;
+        &mut self.slab.as_mut().expect("slab present until drop")[..len]
+    }
+}
+
+impl Drop for PoolBuf {
+    fn drop(&mut self) {
+        if let Some(slab) = self.slab.take() {
+            self.home.put_slab(slab);
+        }
+    }
+}
+
+struct PayloadBuf {
+    slab: Box<[u8]>,
+    len: usize,
+    /// `None` for payloads adopted from caller-owned `Vec`s — those are
+    /// freed normally instead of entering the pool.
+    home: Option<Arc<BufPool>>,
+}
+
+impl Drop for PayloadBuf {
+    fn drop(&mut self) {
+        if let Some(home) = self.home.take() {
+            home.put_slab(std::mem::take(&mut self.slab));
+        }
+    }
+}
+
+/// A ref-counted immutable message payload (`Deref`s to `[u8]`). Cloning
+/// is a reference-count bump — tree broadcasts fan out one slab.
+#[derive(Clone)]
+pub struct Payload(Arc<PayloadBuf>);
+
+impl Payload {
+    /// Copies `data` into a pooled slab of `pool`.
+    pub fn copy_from(pool: &Arc<BufPool>, data: &[u8]) -> Payload {
+        let mut slab = pool.take_slab(data.len());
+        slab[..data.len()].copy_from_slice(data);
+        Payload(Arc::new(PayloadBuf { slab, len: data.len(), home: Some(pool.clone()) }))
+    }
+
+    /// Adopts a caller-owned vector without copying (not pooled).
+    pub fn from_vec(v: Vec<u8>) -> Payload {
+        let len = v.len();
+        Payload(Arc::new(PayloadBuf { slab: v.into_boxed_slice(), len, home: None }))
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.len == 0
+    }
+
+    pub fn to_vec(&self) -> Vec<u8> {
+        self[..].to_vec()
+    }
+}
+
+impl Deref for Payload {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        &self.0.slab[..self.0.len]
+    }
+}
+
+impl std::fmt::Debug for Payload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Payload").field("len", &self.0.len).field("pooled", &self.0.home.is_some()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_classes_round_up() {
+        assert_eq!(class_bytes(class_of(0)), 64);
+        assert_eq!(class_bytes(class_of(64)), 64);
+        assert_eq!(class_bytes(class_of(65)), 128);
+        assert_eq!(class_bytes(class_of(100_000)), 128 * 1024);
+    }
+
+    #[test]
+    fn slabs_recycle_and_count() {
+        let pool = Arc::new(BufPool::new(false));
+        {
+            let mut b = PoolBuf::take(&pool, 100);
+            b[0] = 7;
+            assert_eq!(b.len(), 100);
+        }
+        assert_eq!(pool.misses(), 1);
+        assert_eq!(pool.hits(), 0);
+        {
+            let b = PoolBuf::take(&pool, 120); // same 128 B class — recycled
+            assert_eq!(b.len(), 120);
+        }
+        assert_eq!(pool.misses(), 1);
+        assert_eq!(pool.hits(), 1);
+        let _c = PoolBuf::take(&pool, 4096); // different class — fresh
+        assert_eq!(pool.misses(), 2);
+    }
+
+    #[test]
+    fn disabled_pool_never_recycles() {
+        let pool = Arc::new(BufPool::new(true));
+        drop(PoolBuf::take(&pool, 64));
+        drop(PoolBuf::take(&pool, 64));
+        assert_eq!(pool.misses(), 2);
+        assert_eq!(pool.hits(), 0);
+    }
+
+    #[test]
+    fn payload_fanout_shares_one_slab() {
+        let pool = Arc::new(BufPool::new(false));
+        let p = Payload::copy_from(&pool, &[1, 2, 3]);
+        let q = p.clone();
+        assert_eq!(&p[..], &[1, 2, 3]);
+        assert_eq!(&q[..], &[1, 2, 3]);
+        assert_eq!(pool.misses(), 1);
+        drop(p);
+        assert_eq!(pool.hits(), 0); // q still holds the slab
+        drop(q);
+        let _r = Payload::copy_from(&pool, &[9; 3]); // recycled
+        assert_eq!(pool.hits(), 1);
+    }
+
+    #[test]
+    fn payload_returns_home_from_another_thread() {
+        let pool = Arc::new(BufPool::new(false));
+        let p = Payload::copy_from(&pool, &[5; 200]);
+        std::thread::spawn(move || drop(p)).join().unwrap();
+        let _q = PoolBuf::take(&pool, 200);
+        assert_eq!(pool.hits(), 1);
+    }
+
+    #[test]
+    fn into_payload_keeps_the_slab() {
+        let pool = Arc::new(BufPool::new(false));
+        let mut b = PoolBuf::take(&pool, 32);
+        b.copy_from_slice(&[3u8; 32]);
+        let p = b.into_payload();
+        assert_eq!(&p[..], &[3u8; 32]);
+        drop(p);
+        assert_eq!(pool.misses(), 1);
+        let _again = PoolBuf::take(&pool, 32);
+        assert_eq!(pool.hits(), 1);
+    }
+
+    #[test]
+    fn from_vec_is_not_pooled() {
+        let p = Payload::from_vec(vec![1, 2]);
+        assert_eq!(p.len(), 2);
+        assert!(!p.is_empty());
+        assert_eq!(p.to_vec(), vec![1, 2]);
+    }
+}

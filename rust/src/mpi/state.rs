@@ -2,6 +2,7 @@
 
 use super::msg::Mailbox;
 use super::net::NetModel;
+use super::pool::BufPool;
 use super::sync::SyncGroup;
 use super::topo::Topology;
 use super::win::SharedWindow;
@@ -105,6 +106,16 @@ pub struct ClusterState {
     /// time (maps this host's core to the paper's testbed core).
     pub compute_scale: f64,
     pub mailboxes: Vec<Mailbox>,
+    /// Per-rank payload slab pools (indexed by world rank); see
+    /// [`BufPool`]. Slabs return to their home pool on drop, from
+    /// whichever thread drops them.
+    pub pools: Vec<Arc<BufPool>>,
+    /// When true, the pre-refactor allocating data plane is emulated:
+    /// pools never recycle and the hybrid collectives materialize window
+    /// regions through copies instead of operating in place. Virtual time
+    /// is identical in both modes; only wall-clock differs (`bench_all`
+    /// measures the gap).
+    pub legacy_dataplane: bool,
     pub traffic: TrafficCounters,
     next_comm_id: AtomicU64,
     /// Per-node NIC busy-until (f64 bits): inter-node sends of a node
@@ -117,6 +128,17 @@ pub struct ClusterState {
 
 impl ClusterState {
     pub fn new(topo: Topology, net: NetModel, mgmt: MgmtCosts, compute_scale: f64) -> Arc<ClusterState> {
+        Self::with_options(topo, net, mgmt, compute_scale, false)
+    }
+
+    /// [`ClusterState::new`] with the data-plane mode made explicit.
+    pub fn with_options(
+        topo: Topology,
+        net: NetModel,
+        mgmt: MgmtCosts,
+        compute_scale: f64,
+        legacy_dataplane: bool,
+    ) -> Arc<ClusterState> {
         let world = topo.world_size();
         let nnodes = topo.nnodes();
         Arc::new(ClusterState {
@@ -125,6 +147,8 @@ impl ClusterState {
             mgmt,
             compute_scale,
             mailboxes: (0..world).map(|_| Mailbox::new()).collect(),
+            pools: (0..world).map(|_| Arc::new(BufPool::new(legacy_dataplane))).collect(),
+            legacy_dataplane,
             traffic: TrafficCounters::default(),
             next_comm_id: AtomicU64::new(1), // 0 = world
             nic_busy: (0..nnodes).map(|_| AtomicU64::new(0)).collect(),

@@ -28,8 +28,15 @@ pub const WIN_FLAGS: usize = 4;
 /// Storage is `u64`-backed so the base address is always 8-byte aligned:
 /// kernels view gathered f64 payloads in place (`from_bytes::<f64>`), and
 /// a `Vec<u8>` allocation would only be aligned by allocator accident.
+///
+/// The cells are per-*word* `UnsafeCell`s and every view is derived from
+/// the raw base pointer ([`SharedWindow::base`]) rather than a
+/// whole-buffer `&`/`&mut` temporary, so simultaneous live views of
+/// disjoint ranges (e.g. a reduction reading input slots while writing
+/// slot `L` in place) are sound under Rust's aliasing model, not merely
+/// correct in practice.
 pub struct SharedWindow {
-    buf: UnsafeCell<Box<[u64]>>,
+    buf: Box<[UnsafeCell<u64>]>,
     total: usize,
     /// Byte offset of each local rank's segment.
     offsets: Vec<usize>,
@@ -56,12 +63,19 @@ impl SharedWindow {
             acc += s;
         }
         SharedWindow {
-            buf: UnsafeCell::new(vec![0u64; total.div_ceil(8)].into_boxed_slice()),
+            buf: (0..total.div_ceil(8)).map(|_| UnsafeCell::new(0u64)).collect(),
             total,
             offsets,
             sizes: sizes.to_vec(),
             flags: Default::default(),
         }
+    }
+
+    /// Raw base pointer of the region. Derived from the shared slice
+    /// reference (legal to write through thanks to the `UnsafeCell`
+    /// elements); never materializes a whole-buffer `&mut`.
+    fn base(&self) -> *mut u8 {
+        self.buf.as_ptr() as *mut u8
     }
 
     /// Total window size in bytes.
@@ -90,20 +104,19 @@ impl SharedWindow {
     /// No concurrent writer may overlap `[offset, offset+len)`.
     pub unsafe fn slice(&self, offset: usize, len: usize) -> &[u8] {
         assert!(offset + len <= self.total, "window view out of bounds");
-        let buf = &*self.buf.get();
-        std::slice::from_raw_parts((buf.as_ptr() as *const u8).add(offset), len)
+        std::slice::from_raw_parts(self.base().add(offset) as *const u8, len)
     }
 
     /// Raw write view.
     ///
     /// # Safety
     /// The protocol must guarantee exclusive access to
-    /// `[offset, offset+len)` until the next sync point.
+    /// `[offset, offset+len)` until the next sync point; other live views
+    /// (from [`SharedWindow::slice`]/`slice_mut`) must not overlap it.
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn slice_mut(&self, offset: usize, len: usize) -> &mut [u8] {
         assert!(offset + len <= self.total, "window view out of bounds");
-        let buf = &mut *self.buf.get();
-        std::slice::from_raw_parts_mut((buf.as_mut_ptr() as *mut u8).add(offset), len)
+        std::slice::from_raw_parts_mut(self.base().add(offset), len)
     }
 
     /// Copy `data` into the window at `offset` (real copy; the caller
@@ -130,6 +143,19 @@ impl SharedWindow {
         let mut v = vec![0u8; len];
         self.read_into(offset, &mut v);
         v
+    }
+
+    /// Copy `len` bytes from `src` to `dst` inside the window (may
+    /// overlap) — the in-place slot-to-slot move of the hybrid
+    /// reductions, replacing a `read_vec` + `write` round-trip. The
+    /// caller charges `net.memcpy` and must hold protocol-exclusive
+    /// access to both ranges.
+    pub fn copy_within(&self, src: usize, dst: usize, len: usize) {
+        assert!(src + len <= self.total && dst + len <= self.total, "window copy out of bounds");
+        unsafe {
+            let base = self.base();
+            std::ptr::copy(base.add(src), base.add(dst), len);
+        }
     }
 
     /// Status flag `i` (the §4.5 spinning protocol).
@@ -161,6 +187,22 @@ mod tests {
         assert_eq!(w.read_vec(8, 8), vec![1, 2, 3, 4, 5, 6, 7, 8]);
         // Untouched segment stays zeroed.
         assert_eq!(w.read_vec(0, 8), vec![0; 8]);
+    }
+
+    #[test]
+    fn copy_within_moves_slots() {
+        let w = SharedWindow::allocate(&[8, 8, 8]);
+        w.write(0, &[5; 8]);
+        w.copy_within(0, 16, 8);
+        assert_eq!(w.read_vec(16, 8), vec![5; 8]);
+        assert_eq!(w.read_vec(8, 8), vec![0; 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn copy_within_bounds_checked() {
+        let w = SharedWindow::allocate(&[8]);
+        w.copy_within(4, 0, 8);
     }
 
     #[test]
