@@ -35,6 +35,13 @@
 //! gather and scatter in place on the shared window (DESIGN.md §5b).
 //! The `zerocopy` integration test pins post-warm-up pool misses to
 //! zero.
+//!
+//! Steady-state executions are also **registry-lock-free** (DESIGN.md
+//! §5c): planning resolves each communicator's synchronization slot
+//! ([`crate::mpi::state::CommCore`]) into the rank-private `ProcEnv`
+//! memo, so the barriers, spin syncs and window operations inside
+//! `execute` perform zero `HashMap` lookups under a lock, and messages
+//! ride the sharded lock-free mailbox fabric ([`crate::mpi::msg`]).
 
 use super::allgather::{allgather, AllgatherAlgo};
 use super::allreduce::{allreduce, AllreduceAlgo};

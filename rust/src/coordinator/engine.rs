@@ -64,6 +64,7 @@ impl SimCluster {
             self.spec.mgmt.clone(),
             self.spec.compute_scale,
             self.spec.legacy_dataplane,
+            self.spec.legacy_fabric,
         );
         let f = Arc::new(f);
         let t0 = Instant::now();

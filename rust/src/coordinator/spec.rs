@@ -74,6 +74,15 @@ pub struct ClusterSpec {
     /// window materialization through copies). Identical virtual time;
     /// `bench_all` uses it to measure the wall-clock gap.
     pub legacy_dataplane: bool,
+    /// Emulate the pre-PR3 message fabric (one mutex+condvar queue per
+    /// mailbox, per-operation global-registry lookups) instead of the
+    /// sharded lock-free fabric. A conservative stand-in — barrier
+    /// parking and per-communicator window condvars remain, so measured
+    /// speedups understate the true gap (see
+    /// [`ClusterState::legacy_fabric`](crate::mpi::state::ClusterState)).
+    /// Identical messages, results and virtual time; `bench_all` uses it
+    /// to measure the wall-clock gap.
+    pub legacy_fabric: bool,
 }
 
 impl ClusterSpec {
@@ -88,6 +97,7 @@ impl ClusterSpec {
             compute_scale: 1.0,
             preset_name: p.name(),
             legacy_dataplane: false,
+            legacy_fabric: false,
         }
     }
 
@@ -127,6 +137,11 @@ impl ClusterSpec {
 
     pub fn with_legacy_dataplane(mut self, legacy: bool) -> ClusterSpec {
         self.legacy_dataplane = legacy;
+        self
+    }
+
+    pub fn with_legacy_fabric(mut self, legacy: bool) -> ClusterSpec {
+        self.legacy_fabric = legacy;
         self
     }
 }

@@ -19,7 +19,8 @@ use super::comm::{Communicator, UNDEFINED};
 use super::msg::{Matcher, Msg};
 use super::net::NetModel;
 use super::pool::{BufPool, Payload, PoolBuf};
-use super::state::ClusterState;
+use super::state::{ClusterState, CommCore};
+use super::sync::SyncGroup;
 use super::topo::Topology;
 use super::win::SharedWindow;
 use crate::util::Rng;
@@ -71,6 +72,12 @@ pub struct ProcEnv {
     coll_seq: HashMap<u64, u64>,
     /// Per-communicator window sequence numbers.
     win_seq: HashMap<u64, u64>,
+    /// Rank-private memo of per-communicator slots: resolved from the
+    /// global registry once (at plan/communicator creation), after which
+    /// barriers, window lookups and spin syncs on the hot path do zero
+    /// hashmap lookups under a lock. Bypassed in `legacy_fabric` mode to
+    /// reproduce the old per-operation registry contention.
+    cores: HashMap<u64, Arc<CommCore>>,
     /// Bytes physically copied by this rank (send staging, receive
     /// delivery, window store/load) — debug instrumentation for the
     /// zero-copy tests; independent of virtual-time charging.
@@ -87,8 +94,32 @@ impl ProcEnv {
             world,
             coll_seq: HashMap::new(),
             win_seq: HashMap::new(),
+            cores: HashMap::new(),
             copied: 0,
         }
+    }
+
+    /// The per-communicator slot, resolved through the rank-private memo
+    /// (one global-registry trip per communicator per rank). In
+    /// `legacy_fabric` mode every call pays the registry lock + hash, as
+    /// the pre-PR3 code did on every operation.
+    fn comm_core(&mut self, comm: &Communicator) -> Arc<CommCore> {
+        if self.state.legacy_fabric {
+            return self.state.comm_core(comm.id());
+        }
+        if let Some(c) = self.cores.get(&comm.id()) {
+            return c.clone();
+        }
+        let c = self.state.comm_core(comm.id());
+        self.cores.insert(comm.id(), c.clone());
+        c
+    }
+
+    /// The communicator's barrier group, via the memoized slot (one
+    /// `OnceLock` load past the memo — no registry lock, no hash under a
+    /// lock; the `legacy_fabric` bypass lives in [`ProcEnv::comm_core`]).
+    fn sync_group(&mut self, comm: &Communicator) -> Arc<SyncGroup> {
+        self.comm_core(comm).sync_group(comm.size())
     }
 
     // ---- identity & clocks ------------------------------------------------
@@ -365,7 +396,7 @@ impl ProcEnv {
     /// [`SyncGroup`](super::sync::SyncGroup); virtual cost = dissemination
     /// barrier over the group (`⌈log2 p⌉` rounds at the group's tier).
     pub fn barrier(&mut self, comm: &Communicator) {
-        let g = self.state.sync_group(comm.id(), comm.size());
+        let g = self.sync_group(comm);
         let vmax = g.arrive_and_wait(self.vclock);
         self.vclock = vmax + self.state.net.barrier_cost(comm.size(), comm.spans_nodes());
     }
@@ -373,7 +404,7 @@ impl ProcEnv {
     /// Align virtual clocks across a communicator *without* charging any
     /// cost (harness-internal; not an MPI operation).
     pub fn harness_sync(&mut self, comm: &Communicator) {
-        let g = self.state.sync_group(comm.id(), comm.size());
+        let g = self.sync_group(comm);
         self.vclock = g.arrive_and_wait(self.vclock);
     }
 
@@ -444,7 +475,7 @@ impl ProcEnv {
         }
 
         // Synchronize and charge the calibrated split cost.
-        let g = self.state.sync_group(comm.id(), p);
+        let g = self.sync_group(comm);
         let vmax = g.arrive_and_wait(self.vclock);
         self.vclock = vmax + self.state.mgmt.comm_split_us(p);
 
@@ -485,6 +516,7 @@ impl ProcEnv {
         };
         let tag = self.next_coll_tag(comm, opcode::CTRL_WIN);
         let p = comm.size();
+        let core = self.comm_core(comm);
         if comm.rank() == 0 {
             let mut sizes = vec![0usize; p];
             sizes[0] = my_bytes;
@@ -493,13 +525,13 @@ impl ProcEnv {
                 sizes[src] = u64::from_le_bytes(data[0..8].try_into().unwrap()) as usize;
             }
             let win = Arc::new(SharedWindow::allocate(&sizes));
-            self.state.publish_window(comm.id(), seq, win);
+            core.publish_window(seq, win);
         } else {
             self.oob_send(comm, 0, tag, &(my_bytes as u64).to_le_bytes());
         }
-        let win = self.state.lookup_window(comm.id(), seq);
+        let win = core.lookup_window(seq);
 
-        let g = self.state.sync_group(comm.id(), p);
+        let g = self.sync_group(comm);
         let vmax = g.arrive_and_wait(self.vclock);
         self.vclock = vmax + self.state.mgmt.alloc_us(1);
         Win { win, comm_id: comm.id(), seq }

@@ -52,6 +52,12 @@ fn class_bytes(idx: usize) -> usize {
 /// A per-rank recycling allocator for payload and scratch slabs.
 pub struct BufPool {
     shelves: [Mutex<Vec<Box<[u8]>>>; NUM_CLASSES],
+    /// Shelf occupancy, maintained beside each shelf: a take on an empty
+    /// shelf (every first-touch of a size class, and every take while the
+    /// class's working set is fully in flight) skips the shelf lock
+    /// entirely — at engine scale that is thousands of rank threads not
+    /// serializing on locks that have nothing to hand out.
+    occupancy: [AtomicU64; NUM_CLASSES],
     hits: AtomicU64,
     misses: AtomicU64,
     disabled: bool,
@@ -62,6 +68,7 @@ impl BufPool {
     pub fn new(disabled: bool) -> BufPool {
         BufPool {
             shelves: std::array::from_fn(|_| Mutex::new(Vec::new())),
+            occupancy: std::array::from_fn(|_| AtomicU64::new(0)),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             disabled,
@@ -72,8 +79,9 @@ impl BufPool {
     /// size class of `len`. Contents are undefined on a recycled hit.
     fn take_slab(&self, len: usize) -> Box<[u8]> {
         let idx = class_of(len);
-        if !self.disabled {
+        if !self.disabled && self.occupancy[idx].load(Ordering::Acquire) > 0 {
             if let Some(slab) = self.shelves[idx].lock().unwrap().pop() {
+                self.occupancy[idx].fetch_sub(1, Ordering::Release);
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return slab;
             }
@@ -92,6 +100,11 @@ impl BufPool {
         debug_assert!(slab.len().is_power_of_two() && slab.len() >= MIN_CLASS);
         let idx = class_of(slab.len());
         self.shelves[idx].lock().unwrap().push(slab);
+        // After the push (lock released ⇒ the slab is takeable), so a
+        // racing take that sees the bump always finds the shelf stocked
+        // or concurrently being restocked — worst case it re-allocates,
+        // which is the pre-optimization behaviour, never a lost slab.
+        self.occupancy[idx].fetch_add(1, Ordering::Release);
     }
 
     /// Takes that found a recycled slab.

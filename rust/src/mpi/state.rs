@@ -8,7 +8,7 @@ use super::topo::Topology;
 use super::win::SharedWindow;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 
 /// Calibrated one-off management costs (Table 2 of the paper). These are
@@ -97,6 +97,66 @@ impl TrafficCounters {
     }
 }
 
+/// Per-communicator synchronization slot (DESIGN.md §5c): the barrier
+/// group and the shared-window registry of one communicator, sharded out
+/// of the old global `Mutex<HashMap>` registries so that
+///
+/// - rank threads resolve the slot **once** (at plan/communicator
+///   creation; `ProcEnv` memoizes the `Arc`) and every subsequent
+///   barrier, spin sync or window operation on the hot path touches no
+///   global lock and does zero hash lookups under a lock;
+/// - window publish/lookup wakeups stay within the communicator — a
+///   leader publishing on one node communicator no longer wakes blocked
+///   children of every other node (the old single `Condvar` herd).
+pub struct CommCore {
+    /// Lazily sized at the first barrier on the communicator.
+    sync: OnceLock<Arc<SyncGroup>>,
+    /// Live shared windows of this communicator, by allocation sequence.
+    windows: Mutex<HashMap<u64, Arc<SharedWindow>>>,
+    windows_cv: Condvar,
+}
+
+impl CommCore {
+    fn new() -> CommCore {
+        CommCore {
+            sync: OnceLock::new(),
+            windows: Mutex::new(HashMap::new()),
+            windows_cv: Condvar::new(),
+        }
+    }
+
+    /// The communicator's barrier/clock-agreement group.
+    pub fn sync_group(&self, size: usize) -> Arc<SyncGroup> {
+        let g = self.sync.get_or_init(|| Arc::new(SyncGroup::new(size)));
+        assert_eq!(g.size(), size, "sync group size mismatch (registered {}, asked {size})", g.size());
+        g.clone()
+    }
+
+    /// Leader publishes a freshly-allocated shared window.
+    pub fn publish_window(&self, seq: u64, win: Arc<SharedWindow>) {
+        let mut map = self.windows.lock().unwrap();
+        let prev = map.insert(seq, win);
+        assert!(prev.is_none(), "window seq {seq} double-published");
+        self.windows_cv.notify_all();
+    }
+
+    /// Children block until the leader publishes window `seq`.
+    pub fn lookup_window(&self, seq: u64) -> Arc<SharedWindow> {
+        let mut map = self.windows.lock().unwrap();
+        loop {
+            if let Some(w) = map.get(&seq) {
+                return w.clone();
+            }
+            map = self.windows_cv.wait(map).unwrap();
+        }
+    }
+
+    /// Collective window free (leader side): drop the registry entry.
+    pub fn retire_window(&self, seq: u64) {
+        self.windows.lock().unwrap().remove(&seq);
+    }
+}
+
 /// Everything the rank threads share.
 pub struct ClusterState {
     pub topo: Topology,
@@ -116,28 +176,43 @@ pub struct ClusterState {
     /// is identical in both modes; only wall-clock differs (`bench_all`
     /// measures the gap).
     pub legacy_dataplane: bool,
+    /// When true, the pre-PR3 message fabric is emulated: mailboxes run
+    /// the mutex+condvar transport and `ProcEnv` re-resolves the
+    /// communicator slot through the global registry on every
+    /// synchronization operation (one lock + hash per op). This is a
+    /// *conservative* baseline, not a bit-exact revival of the old code:
+    /// window condvars stay per-communicator and barrier waiters still
+    /// park instead of yielding forever, so the emulated old fabric is
+    /// somewhat faster than the real pre-PR3 code and measured speedups
+    /// are a lower bound. Messages, results and virtual time are
+    /// identical in both modes; only wall-clock differs (`bench_all`
+    /// measures the gap).
+    pub legacy_fabric: bool,
     pub traffic: TrafficCounters,
     next_comm_id: AtomicU64,
     /// Per-node NIC busy-until (f64 bits): inter-node sends of a node
     /// serialize on it (single NIC per node).
     nic_busy: Vec<AtomicU64>,
-    sync_groups: Mutex<HashMap<u64, Arc<SyncGroup>>>,
-    windows: Mutex<HashMap<(u64, u64), Arc<SharedWindow>>>,
-    windows_cv: Condvar,
+    /// Registry of record for per-communicator slots. Cold path only:
+    /// rank threads resolve a communicator's [`CommCore`] here once and
+    /// hold the `Arc` (rank-privately memoized in `ProcEnv`).
+    cores: Mutex<HashMap<u64, Arc<CommCore>>>,
 }
 
 impl ClusterState {
     pub fn new(topo: Topology, net: NetModel, mgmt: MgmtCosts, compute_scale: f64) -> Arc<ClusterState> {
-        Self::with_options(topo, net, mgmt, compute_scale, false)
+        Self::with_options(topo, net, mgmt, compute_scale, false, false)
     }
 
-    /// [`ClusterState::new`] with the data-plane mode made explicit.
+    /// [`ClusterState::new`] with the data-plane and fabric modes made
+    /// explicit.
     pub fn with_options(
         topo: Topology,
         net: NetModel,
         mgmt: MgmtCosts,
         compute_scale: f64,
         legacy_dataplane: bool,
+        legacy_fabric: bool,
     ) -> Arc<ClusterState> {
         let world = topo.world_size();
         let nnodes = topo.nnodes();
@@ -146,15 +221,14 @@ impl ClusterState {
             net,
             mgmt,
             compute_scale,
-            mailboxes: (0..world).map(|_| Mailbox::new()).collect(),
+            mailboxes: (0..world).map(|_| Mailbox::with_mode(legacy_fabric)).collect(),
             pools: (0..world).map(|_| Arc::new(BufPool::new(legacy_dataplane))).collect(),
             legacy_dataplane,
+            legacy_fabric,
             traffic: TrafficCounters::default(),
             next_comm_id: AtomicU64::new(1), // 0 = world
             nic_busy: (0..nnodes).map(|_| AtomicU64::new(0)).collect(),
-            sync_groups: Mutex::new(HashMap::new()),
-            windows: Mutex::new(HashMap::new()),
-            windows_cv: Condvar::new(),
+            cores: Mutex::new(HashMap::new()),
         })
     }
 
@@ -189,36 +263,24 @@ impl ClusterState {
         }
     }
 
-    /// Shared barrier/clock-agreement group for a communicator.
+    /// Resolve (or create) the per-communicator slot. Cold path: callers
+    /// are expected to hold on to the returned `Arc` (`ProcEnv` memoizes
+    /// per rank) so the hot path never comes back here.
+    pub fn comm_core(&self, comm_id: u64) -> Arc<CommCore> {
+        let mut map = self.cores.lock().unwrap();
+        map.entry(comm_id).or_insert_with(|| Arc::new(CommCore::new())).clone()
+    }
+
+    /// Shared barrier/clock-agreement group for a communicator
+    /// (convenience for cold-path callers; hot paths go through a held
+    /// [`CommCore`]).
     pub fn sync_group(&self, comm_id: u64, size: usize) -> Arc<SyncGroup> {
-        let mut map = self.sync_groups.lock().unwrap();
-        let g = map.entry(comm_id).or_insert_with(|| Arc::new(SyncGroup::new(size)));
-        assert_eq!(g.size(), size, "sync group size mismatch for comm {comm_id}");
-        g.clone()
-    }
-
-    /// Leader publishes a freshly-allocated shared window.
-    pub fn publish_window(&self, comm_id: u64, seq: u64, win: Arc<SharedWindow>) {
-        let mut map = self.windows.lock().unwrap();
-        let prev = map.insert((comm_id, seq), win);
-        assert!(prev.is_none(), "window ({comm_id},{seq}) double-published");
-        self.windows_cv.notify_all();
-    }
-
-    /// Children block until the leader publishes window `(comm_id, seq)`.
-    pub fn lookup_window(&self, comm_id: u64, seq: u64) -> Arc<SharedWindow> {
-        let mut map = self.windows.lock().unwrap();
-        loop {
-            if let Some(w) = map.get(&(comm_id, seq)) {
-                return w.clone();
-            }
-            map = self.windows_cv.wait(map).unwrap();
-        }
+        self.comm_core(comm_id).sync_group(size)
     }
 
     /// Collective window free (leader side): drop the registry entry.
     pub fn retire_window(&self, comm_id: u64, seq: u64) {
-        self.windows.lock().unwrap().remove(&(comm_id, seq));
+        self.comm_core(comm_id).retire_window(seq);
     }
 }
 

@@ -5,13 +5,36 @@
 //! realising a modelled `MPI_Barrier` (or harness-level clock alignment)
 //! without O(p log p) real message traffic on a 1-core host.
 //!
+//! [`Doorbell`] is the message fabric's wakeup primitive (DESIGN.md §5c):
+//! an event counter rung by producers plus an adaptive spin-then-park
+//! waiter. Blocked receivers spin briefly (cheap when the producer is one
+//! timeslice away), then *yield* (a spinning thread on this 1-core host
+//! would steal the very timeslice the producer needs to make progress),
+//! then park the thread entirely so hundreds of idle rank threads cost
+//! the scheduler nothing. All waits are bounded (`park_timeout`), so a
+//! missed wakeup degrades to a few-millisecond stall, never a hang.
+//!
 //! [`SpinFlag`] is the paper's §4.5 spinning construct: a shared status
 //! counter in a shared-memory window, incremented by the *leader* and
 //! polled by the *children* with an equality exit condition (the MPI
 //! one-byte-polling restriction the paper discusses). Virtual release time
 //! rides along in an atomic f64.
 
-use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Iterations of `spin_loop` before a waiter starts yielding.
+const SPIN_BUDGET: u32 = 32;
+/// Yields before a waiter escalates to parking (SyncGroup/Doorbell) or
+/// micro-sleeps (SpinFlag). Long enough that the escalation never fires
+/// in a healthy small-scale run; short enough that 1024 blocked rank
+/// threads stop burning the host core almost immediately.
+const YIELD_BUDGET: u32 = 256;
+/// Bound on every park: turns any lost-wakeup bug into a bounded stall
+/// instead of a hang, and caps the latency cost of a benign race between
+/// "producer rings" and "consumer parks".
+const PARK_BOUND: Duration = Duration::from_millis(2);
 
 /// Atomic max for non-negative f64 values stored as bits (non-negative IEEE
 /// doubles order identically to their bit patterns).
@@ -28,6 +51,85 @@ pub fn atomic_f64_max(cell: &AtomicU64, value: f64) {
     }
 }
 
+/// The message fabric's wakeup doorbell: an event counter rung on every
+/// post, plus an adaptive spin→yield→park waiter for the (single) mailbox
+/// owner. Replaces the condvar of the legacy mailbox: ringing an idle
+/// doorbell is one uncontended `fetch_add` plus one relaxed flag load —
+/// no lock, no syscall — and only the rare "receiver actually parked"
+/// path touches the waiter mutex.
+pub struct Doorbell {
+    /// Total rings so far. A waiter snapshots this *before* its final
+    /// queue scan; any ring between scan and park changes the count and
+    /// aborts the park, so no post can be missed.
+    events: AtomicU64,
+    /// True while the owner is parked (or about to park). Producers skip
+    /// the waiter mutex entirely while this is false — the common case.
+    waiting: AtomicBool,
+    /// Parked owner's thread handle (slow path only).
+    waiter: Mutex<Option<std::thread::Thread>>,
+}
+
+impl Default for Doorbell {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Doorbell {
+    pub fn new() -> Doorbell {
+        Doorbell {
+            events: AtomicU64::new(0),
+            waiting: AtomicBool::new(false),
+            waiter: Mutex::new(None),
+        }
+    }
+
+    /// Current event count. Snapshot this *before* scanning the queues it
+    /// guards, then pass it to [`Doorbell::wait_change`].
+    pub fn epoch(&self) -> u64 {
+        self.events.load(Ordering::SeqCst)
+    }
+
+    /// Producer side: record an event and wake the owner if parked.
+    pub fn ring(&self) {
+        self.events.fetch_add(1, Ordering::SeqCst);
+        if self.waiting.load(Ordering::SeqCst) {
+            if let Some(t) = self.waiter.lock().unwrap().as_ref() {
+                t.unpark();
+            }
+        }
+    }
+
+    /// Owner side: block until the event count moves past `epoch` (may
+    /// also return spuriously — callers re-scan and loop). Spin → yield →
+    /// park, each phase bounded; see the module docs for the 1-core-host
+    /// fairness argument.
+    pub fn wait_change(&self, epoch: u64) {
+        let mut tries = 0u32;
+        while tries < SPIN_BUDGET + YIELD_BUDGET {
+            if self.events.load(Ordering::SeqCst) != epoch {
+                return;
+            }
+            if tries < SPIN_BUDGET {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+            tries += 1;
+        }
+        *self.waiter.lock().unwrap() = Some(std::thread::current());
+        self.waiting.store(true, Ordering::SeqCst);
+        // Re-check between publishing the waiting flag and parking: a ring
+        // in that window either sees the flag (and unparks — the token
+        // makes the park return immediately) or happened before the flag
+        // store, in which case this load observes the new count.
+        if self.events.load(Ordering::SeqCst) == epoch {
+            std::thread::park_timeout(PARK_BOUND);
+        }
+        self.waiting.store(false, Ordering::SeqCst);
+    }
+}
+
 /// Barrier over a fixed group that returns the max virtual clock of all
 /// participants at arrival.
 pub struct SyncGroup {
@@ -36,6 +138,10 @@ pub struct SyncGroup {
     generation: AtomicUsize,
     vmax_acc: AtomicU64,
     released: [AtomicU64; 2],
+    /// Threads that escalated past spinning/yielding and parked; the
+    /// releasing arriver drains and unparks them. Only the slow path
+    /// touches this lock — small groups never reach it.
+    sleepers: Mutex<Vec<std::thread::Thread>>,
 }
 
 impl SyncGroup {
@@ -47,6 +153,7 @@ impl SyncGroup {
             generation: AtomicUsize::new(0),
             vmax_acc: AtomicU64::new(0),
             released: [AtomicU64::new(0), AtomicU64::new(0)],
+            sleepers: Mutex::new(Vec::new()),
         }
     }
 
@@ -74,16 +181,41 @@ impl SyncGroup {
             self.released[gen & 1].store(v, Ordering::Release);
             self.count.store(0, Ordering::Release);
             self.generation.store(gen.wrapping_add(1), Ordering::Release);
+            // Wake everyone who parked. Draining after the generation
+            // store means a waiter that registers later re-checks the
+            // generation (the mutex orders its read after our store) and
+            // returns without parking.
+            for t in self.sleepers.lock().unwrap().drain(..) {
+                t.unpark();
+            }
             f64::from_bits(v)
         } else {
-            let mut spins = 0u32;
+            let mut tries = 0u32;
+            let mut registered = false;
             while self.generation.load(Ordering::Acquire) == gen {
-                spins += 1;
-                if spins < 32 {
+                tries += 1;
+                if tries < SPIN_BUDGET {
                     std::hint::spin_loop();
-                } else {
+                } else if tries < SPIN_BUDGET + YIELD_BUDGET {
                     // Single-core host: yield, do not burn the timeslice.
                     std::thread::yield_now();
+                } else {
+                    // Hundreds of waiters (the 512/1024-rank configs)
+                    // must get out of the scheduler entirely: register
+                    // once, re-check, park. (In the rare race where the
+                    // *previous* generation's releaser is still draining
+                    // and swallows this fresh registration, the waiter
+                    // degrades to PARK_BOUND-interval polling instead of
+                    // re-registering every round — bounded latency beats
+                    // an unbounded duplicate pile-up in `sleepers`.)
+                    if !registered {
+                        self.sleepers.lock().unwrap().push(std::thread::current());
+                        registered = true;
+                        if self.generation.load(Ordering::Acquire) != gen {
+                            break;
+                        }
+                    }
+                    std::thread::park_timeout(PARK_BOUND);
                 }
             }
             f64::from_bits(self.released[gen & 1].load(Ordering::Acquire))
@@ -126,13 +258,19 @@ impl SpinFlag {
     /// descheduled child observes the previous one cannot strand the child
     /// — the *cost model* still charges the paper's polling scheme.
     pub fn wait_eq(&self, target: u32) -> f64 {
-        let mut spins = 0u32;
+        let mut tries = 0u32;
         while self.status.load(Ordering::Acquire) < target {
-            spins += 1;
-            if spins < 32 {
+            tries += 1;
+            if tries < SPIN_BUDGET {
                 std::hint::spin_loop();
-            } else {
+            } else if tries < SPIN_BUDGET + YIELD_BUDGET {
                 std::thread::yield_now();
+            } else {
+                // No doorbell here (the flag models a raw shared-memory
+                // word, there is nothing for the poster to ring), so a
+                // long wait degrades to a bounded micro-sleep instead of
+                // a yield storm across hundreds of polling children.
+                std::thread::sleep(Duration::from_micros(50));
             }
         }
         f64::from_bits(self.release_vtime.load(Ordering::Acquire))
@@ -194,6 +332,63 @@ mod tests {
                 assert_eq!(h.join().unwrap(), expected, "round {round}");
             }
         }
+    }
+
+    #[test]
+    fn doorbell_wakes_parked_waiter() {
+        let bell = Arc::new(Doorbell::new());
+        let b2 = bell.clone();
+        let epoch = bell.epoch();
+        let h = std::thread::spawn(move || {
+            // Loop like a real consumer: wait_change may return spuriously.
+            while b2.epoch() == epoch {
+                b2.wait_change(epoch);
+            }
+            b2.epoch()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        bell.ring();
+        assert_eq!(h.join().unwrap(), epoch + 1);
+    }
+
+    #[test]
+    fn doorbell_ring_before_wait_returns_immediately() {
+        let bell = Doorbell::new();
+        let epoch = bell.epoch();
+        bell.ring();
+        // Already-changed epoch: must not block at all.
+        bell.wait_change(epoch);
+        assert_eq!(bell.epoch(), epoch + 1);
+    }
+
+    #[test]
+    fn doorbell_counts_every_ring() {
+        let bell = Arc::new(Doorbell::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let b = bell.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        b.ring();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(bell.epoch(), 400);
+    }
+
+    #[test]
+    fn barrier_wakes_parked_stragglers() {
+        // Force the park path: one waiter arrives long before the rest.
+        let g = Arc::new(SyncGroup::new(2));
+        let g2 = g.clone();
+        let h = std::thread::spawn(move || g2.arrive_and_wait(1.0));
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(g.arrive_and_wait(2.0), 2.0);
+        assert_eq!(h.join().unwrap(), 2.0);
     }
 
     #[test]
