@@ -1,5 +1,6 @@
 //! The paper's Fig. 5 "wrapper program": a complete hybrid MPI+MPI
-//! allgather micro-benchmark written with the wrapper primitives.
+//! allgather micro-benchmark written with the session API — one
+//! [`HybridCtx`] plus a persistent [`HyColl`] handle.
 //!
 //! Compare with `allgather_verbose.rs` (the paper's Fig. 6) — Table 1 of
 //! the reproduction (`hympi figures table1`) counts the section lines of
@@ -8,7 +9,7 @@
 //! Run: `cargo run --release --example allgather_wrapper`
 
 use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
-use hympi::hybrid::{self, CommPackage, SyncScheme};
+use hympi::hybrid::{HybridCtx, LeaderPolicy, SyncScheme};
 use hympi::util::{cast_slice, to_bytes};
 
 fn main() {
@@ -17,23 +18,21 @@ fn main() {
     let report = SimCluster::new(spec).run(move |env| {
         let w = env.world();
         // [section: Communicator splitting]
-        let pkg = CommPackage::create(env, &w);
+        let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
         // [section: Shared memory allocation]
-        let mut win = pkg.alloc_shared(env, msg * 8, 1, w.size());
+        let mut ag = ctx.allgather_init(env, msg * 8, SyncScheme::Spin);
         // [section: Fill recvcounts and displs]
-        let sizeset = hybrid::sizeset_gather(env, &pkg);
-        let param = hybrid::AllgatherParam::create(env, &pkg, msg * 8, &sizeset);
+        assert_eq!(ctx.sizeset(env).iter().sum::<usize>(), w.size());
         // [section: Get local pointer]
         let s_buf: Vec<f64> = (0..msg).map(|i| i as f64).collect();
-        let off = win.local_ptr(w.rank(), msg * 8);
         // [section: Allgather]
-        win.store(env, off, to_bytes(&s_buf));
-        hybrid::hy_allgather(env, &pkg, &mut win, &param, msg * 8, SyncScheme::Spin);
-        let gathered: Vec<f64> = cast_slice(&win.load(env, 0, msg * 8 * w.size()));
+        ag.start_allgather(env, to_bytes(&s_buf));
+        ag.wait(env);
+        let gathered: Vec<f64> =
+            cast_slice(&ag.window().unwrap().load(env, 0, msg * 8 * w.size()));
         // [section: Deallocation]
-        env.barrier(&pkg.shmem);
-        win.free(env, &pkg);
-        pkg.free(env);
+        env.barrier(ctx.shmem());
+        ag.free(env);
         // [section: end]
         gathered.len()
     });

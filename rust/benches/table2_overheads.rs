@@ -16,8 +16,8 @@ fn main() {
         figures::run("table2", &opts).expect("figure generation");
     });
 
-    // Hot path: communicator creation mechanics at 64 ranks.
-    r.bench("table2: CommPackage::create @64 ranks (wall)", || {
+    // Hot path: session creation mechanics at 64 ranks.
+    r.bench("table2: HybridCtx::create @64 ranks (wall)", || {
         hympi::figures::table2::measure(64);
     });
 }

@@ -1,21 +1,25 @@
-//! `bench_all` — the tracked data-plane/fabric performance baseline.
+//! `bench_all` — the tracked data-plane/fabric/session performance
+//! baseline.
 //!
-//! PR 3 edition: every case runs the same workload twice in one process —
-//! once on the sharded lock-free message fabric (the default) and once on
-//! the emulated pre-PR3 fabric (`ClusterSpec::legacy_fabric`: one
-//! mutex+condvar queue per mailbox, per-operation global-registry
-//! lookups) — and writes wall-clock + modeled numbers to `BENCH_PR3.json`
-//! at the repo root. The sweep includes the engine-scale fig15/fig16-style
-//! configurations (512 and 1024 ranks, pure and hybrid) where the old
-//! fabric's lock contention dominates the simulator's wall clock.
+//! PR 4 edition: the PR-3 fabric comparison (every case runs twice in one
+//! process — lock-free fabric vs the emulated pre-PR3
+//! `ClusterSpec::legacy_fabric`) is kept, and a **leader sweep** is
+//! added: fig15/fig16-style engine-scale cases (512 and 1024 ranks) run
+//! the hybrid collectives at k ∈ {1, 2, 4} leaders per node through the
+//! `HybridCtx` session API, recording modeled virtual time (the
+//! multi-lane NIC model makes k > 1 genuinely cheaper on large bridge
+//! blocks) and wall clock. Everything lands in `BENCH_PR4.json` at the
+//! repo root.
 //!
 //! Modeled virtual time must not depend on the fabric (asserted per
-//! case), and the dedicated parity runs additionally assert that result
-//! bytes are bit-identical and per-rank virtual clocks agree on both
-//! fabrics; only wall-clock may differ.
+//! case); the parity runs assert bit-identical result bytes and per-rank
+//! virtual clocks across fabrics (now including a k = 2 multi-leader
+//! collective); and the leader sweep asserts the PR-4 acceptance bound —
+//! k = 2 modeled vtime strictly below k = 1 on a ≥256 KiB-node-block
+//! allgather.
 //!
 //! ```text
-//! cargo run --release --bin bench_all              # full sweep, writes BENCH_PR3.json
+//! cargo run --release --bin bench_all              # full sweep, writes BENCH_PR4.json
 //! cargo run --release --bin bench_all -- --smoke   # CI-sized sweep (same pipeline)
 //! cargo run --release --bin bench_all -- --strict  # exit non-zero below the speedup targets
 //! cargo run --release --bin bench_all -- --out P   # alternate output path
@@ -107,14 +111,16 @@ fn summa_case(smoke: bool) -> Case {
     case
 }
 
-/// Result-level parity workload: pure + hybrid collectives through cached
-/// plans; returns a digest of every result plus the final virtual clock.
+/// Result-level parity workload: pure + hybrid (single- and multi-leader)
+/// collectives through cached plans; returns a digest of every result
+/// plus the final virtual clock.
 fn parity_workload(env: &mut ProcEnv) -> (Vec<u8>, f64) {
     let w = env.world();
     let p = w.size();
     let me = w.rank();
     let mut cache = PlanCache::new();
     let fl = Flavor::hybrid(SyncScheme::Spin);
+    let fl2 = Flavor::hybrid_k(SyncScheme::Spin, 2);
     let mut digest = Vec::new();
     for it in 0..3usize {
         let mine = vec![(me + it) as u8; 1024];
@@ -124,6 +130,9 @@ fn parity_workload(env: &mut ProcEnv) -> (Vec<u8>, f64) {
         let mut hy = vec![0u8; 1024 * p];
         cache.allgather(env, &w, fl, &mine, Some(&mut hy));
         assert_eq!(ag, hy, "pure and hybrid allgather must agree");
+        let mut hy2 = vec![0u8; 1024 * p];
+        cache.allgather(env, &w, fl2, &mine, Some(&mut hy2));
+        assert_eq!(ag, hy2, "pure and 2-leader hybrid allgather must agree");
 
         let vals: Vec<f64> = (0..128).map(|i| ((me + 1) * (i + it + 1)) as f64).collect();
         let mut ar = to_bytes(&vals).to_vec();
@@ -156,18 +165,85 @@ fn fabric_parity(name: &str, spec: ClusterSpec) {
     println!("parity {name}: result bytes + modeled vtimes identical on both fabrics");
 }
 
-fn write_json(path: &str, mode: &str, cases: &[Case]) {
+/// One point of the leaders-per-node sweep (session API, new fabric).
+struct LeaderCase {
+    name: String,
+    ranks: usize,
+    leaders: usize,
+    modeled_us: f64,
+    wall_ms: f64,
+}
+
+/// Measure one hybrid collective at `leaders` leaders per node.
+fn leader_case(
+    base: &str,
+    spec: ClusterSpec,
+    op: CollOp,
+    bytes: usize,
+    leaders: usize,
+    fast: bool,
+) -> LeaderCase {
+    let ranks = spec.world_size();
+    let fl = Flavor::hybrid_k(SyncScheme::Spin, leaders);
+    let t0 = Instant::now();
+    let rep = drive_report(spec, fast, op, bytes, fl);
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let case = LeaderCase {
+        name: format!("{base}_{ranks}r_k{leaders}"),
+        ranks,
+        leaders,
+        modeled_us: rep.mean_us,
+        wall_ms,
+    };
+    println!(
+        "{:<36} modeled {:>12.2} us | wall {:>9.1} ms | k={}",
+        case.name, case.modeled_us, case.wall_ms, case.leaders
+    );
+    case
+}
+
+/// Sweep k ∈ {1, 2, 4} for one (spec, op, bytes) configuration and
+/// assert the PR-4 acceptance bound where it applies (`expect_gain`:
+/// large bridge blocks → k = 2 strictly below k = 1).
+fn leader_sweep(
+    out: &mut Vec<LeaderCase>,
+    base: &str,
+    spec: &ClusterSpec,
+    op: CollOp,
+    bytes: usize,
+    expect_gain: bool,
+    fast: bool,
+) {
+    let ks = [1usize, 2, 4];
+    let start = out.len();
+    for &k in &ks {
+        out.push(leader_case(base, spec.clone(), op, bytes, k, fast));
+    }
+    let k1 = out[start].modeled_us;
+    let k2 = out[start + 1].modeled_us;
+    if expect_gain {
+        assert!(
+            k2 < k1,
+            "{base}: k=2 modeled vtime ({k2}) must be strictly below k=1 ({k1})"
+        );
+        println!("{base}: k=2 is {:.1}% below k=1 (modeled) [PASS]", (1.0 - k2 / k1) * 100.0);
+    }
+}
+
+fn write_json(path: &str, mode: &str, cases: &[Case], sweep: &[LeaderCase]) {
     let mut s = String::new();
     s.push_str("{\n");
-    s.push_str("  \"pr\": 3,\n");
+    s.push_str("  \"pr\": 4,\n");
     s.push_str(&format!("  \"mode\": \"{mode}\",\n"));
     s.push_str("  \"generated_by\": \"cargo run --release --bin bench_all\",\n");
     s.push_str(
-        "  \"note\": \"wall_ms_old re-runs the same workload on the emulated pre-PR3 message \
-         fabric (ClusterSpec::legacy_fabric: mutex+condvar mailboxes, per-op registry lookups; a \
-         conservative baseline — see DESIGN.md §5c, so wall_speedup is a lower bound) in \
-         the same process on the same machine; modeled_us is asserted identical on both fabrics \
-         and the parity runs assert bit-identical result bytes.\",\n",
+        "  \"note\": \"cases: wall_ms_old re-runs the same workload on the emulated pre-PR3 \
+         message fabric (ClusterSpec::legacy_fabric; a conservative baseline — see DESIGN.md §5c, \
+         so wall_speedup is a lower bound) in the same process on the same machine; modeled_us is \
+         asserted identical on both fabrics and the parity runs assert bit-identical result bytes. \
+         leader_sweep: the same hybrid collective at k leaders per node through the HybridCtx \
+         session API (multi-lane NIC model, DESIGN.md §5d) — modeled_us is the number that moves \
+         with k; k=2 is asserted strictly below k=1 on the large-block allgather.\",\n",
     );
     s.push_str("  \"cases\": [\n");
     for (i, c) in cases.iter().enumerate() {
@@ -180,6 +256,20 @@ fn write_json(path: &str, mode: &str, cases: &[Case]) {
             c.wall_old_ms,
             c.speedup(),
             if i + 1 < cases.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"leader_sweep\": [\n");
+    for (i, c) in sweep.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"ranks\": {}, \"leaders\": {}, \"modeled_us\": {:.3}, \
+             \"wall_ms\": {:.3}}}{}\n",
+            c.name,
+            c.ranks,
+            c.leaders,
+            c.modeled_us,
+            c.wall_ms,
+            if i + 1 < sweep.len() { "," } else { "" }
         ));
     }
     s.push_str("  ]\n}\n");
@@ -196,11 +286,12 @@ fn main() {
         .position(|a| a == "--out")
         .and_then(|i| args.get(i + 1))
         .cloned()
-        .unwrap_or_else(|| "BENCH_PR3.json".to_string());
+        .unwrap_or_else(|| "BENCH_PR4.json".to_string());
     let hy = Flavor::hybrid(SyncScheme::Spin);
     let sb = Preset::VulcanSb;
     let hh = Preset::HazelHen;
     let mut cases = Vec::new();
+    let mut sweep = Vec::new();
 
     // Result-level parity first: cheap, and a parity bug must fail the
     // run before any timing is reported.
@@ -239,6 +330,16 @@ fn main() {
             true,
         ));
         cases.push(summa_case(true));
+        // Leader sweep, CI-sized: 2 nodes, 256 KiB node blocks.
+        leader_sweep(
+            &mut sweep,
+            "fig16_allgather_16KiBpr",
+            &ClusterSpec::preset(sb, 2),
+            CollOp::Allgather,
+            16 * 1024,
+            true,
+            true,
+        );
     } else {
         // The PR-2 acceptance pair (256 KiB hybrid, 2 nodes), now timed
         // across fabrics: the ≥1.2x satellite targets.
@@ -303,8 +404,40 @@ fn main() {
             true,
         ));
         cases.push(summa_case(false));
+        // Leader sweep at engine scale (the ISSUE-4 satellite): 512 and
+        // 1024 ranks, k ∈ {1, 2, 4}. The 16 KiB/rank allgather makes
+        // 256 KiB node blocks — the regime where the multi-lane NIC
+        // model pays; the fig15-style 8 KiB allreduce shows the
+        // small-message end (latency-bound, little k gain expected).
+        leader_sweep(
+            &mut sweep,
+            "fig16_allgather_16KiBpr",
+            &ClusterSpec::preset(sb, 32),
+            CollOp::Allgather,
+            16 * 1024,
+            true,
+            true,
+        );
+        leader_sweep(
+            &mut sweep,
+            "fig16_allgather_4KiBpr",
+            &ClusterSpec::preset(sb, 64),
+            CollOp::Allgather,
+            4 * 1024,
+            false, // 64 KiB node blocks: partially latency-bound, no strict bound
+            true,
+        );
+        leader_sweep(
+            &mut sweep,
+            "fig15_allreduce_8KiB",
+            &ClusterSpec::preset(sb, 32),
+            CollOp::Allreduce,
+            8 * 1024,
+            false,
+            true,
+        );
     }
-    write_json(&out, if smoke { "smoke" } else { "full" }, &cases);
+    write_json(&out, if smoke { "smoke" } else { "full" }, &cases, &sweep);
     if !smoke {
         // The PR-3 acceptance headline: the lock-free fabric must beat
         // the old fabric ≥ 2x wall-clock on at least one 1024-rank case

@@ -132,23 +132,64 @@ pub fn allgatherv(env: &mut ProcEnv, comm: &Communicator, mine: &[u8], counts: &
 /// directly on the shared window — every ring step borrows its outgoing
 /// block from `out`, so no per-step temporaries are built.
 pub fn allgatherv_inplace(env: &mut ProcEnv, comm: &Communicator, counts: &[usize], out: &mut [u8]) {
+    let total: usize = counts.iter().sum();
+    assert_eq!(out.len(), total, "allgatherv output buffer size");
+    let displ = super::displs_of(counts);
+    allgatherv_offsets(env, comm, counts, &displ, out);
+}
+
+/// [`allgatherv_inplace`] generalized to explicit per-rank block offsets
+/// into `region`: rank `r`'s block lives at
+/// `region[offsets[r]..offsets[r] + counts[r]]` and blocks must be
+/// disjoint. With running-sum offsets over a tight region this *is*
+/// `allgatherv_inplace` (same ring schedule, same messages). The striped
+/// multi-leader hybrid bridge needs the general form: leader `j`
+/// exchanges stripe `j` of every node block, and those stripes are not
+/// contiguous in the shared window.
+pub fn allgatherv_offsets(
+    env: &mut ProcEnv,
+    comm: &Communicator,
+    counts: &[usize],
+    offsets: &[usize],
+    region: &mut [u8],
+) {
     let p = comm.size();
     let me = comm.rank();
     assert_eq!(counts.len(), p, "one count per rank");
-    let total: usize = counts.iter().sum();
-    assert_eq!(out.len(), total, "allgatherv output buffer size");
+    assert_eq!(offsets.len(), p, "one offset per rank");
+    for r in 0..p {
+        assert!(offsets[r] + counts[r] <= region.len(), "allgatherv block {r} out of region");
+    }
+    // Debug builds also enforce the disjointness the ring depends on
+    // (an overlapping stripe table would corrupt blocks mid-exchange).
+    #[cfg(debug_assertions)]
+    {
+        let mut ranges: Vec<(usize, usize)> =
+            offsets.iter().zip(counts.iter()).map(|(&o, &c)| (o, c)).collect();
+        ranges.sort_unstable();
+        for pair in ranges.windows(2) {
+            debug_assert!(
+                pair[0].0 + pair[0].1 <= pair[1].0,
+                "allgatherv blocks overlap: {pair:?}"
+            );
+        }
+    }
     if p == 1 {
         return;
     }
-    let displ = super::displs_of(counts);
     let tag = env.next_coll_tag(comm, opcode::ALLGATHERV);
     let right = (me + 1) % p;
     let left = (me + p - 1) % p;
     for step in 0..p - 1 {
         let send_block = (me + p - step) % p;
         let recv_block = (me + p - step - 1) % p;
-        env.send(comm, right, tag, &out[displ[send_block]..displ[send_block] + counts[send_block]]);
-        env.recv_into(comm, Some(left), tag, &mut out[displ[recv_block]..displ[recv_block] + counts[recv_block]]);
+        env.send(comm, right, tag, &region[offsets[send_block]..offsets[send_block] + counts[send_block]]);
+        env.recv_into(
+            comm,
+            Some(left),
+            tag,
+            &mut region[offsets[recv_block]..offsets[recv_block] + counts[recv_block]],
+        );
     }
 }
 
@@ -226,6 +267,30 @@ mod tests {
         let expect: Vec<u8> = (0..8).flat_map(|r| payload(r, r + 1)).collect();
         for got in out {
             assert_eq!(got, expect);
+        }
+    }
+
+    #[test]
+    fn allgatherv_offsets_noncontiguous_region() {
+        // Blocks scattered across a larger region with gaps (the striped
+        // multi-leader bridge layout): every rank ends with every block
+        // in place and the gaps untouched.
+        let out = run_nodes(&[4], |env| {
+            let w = env.world();
+            let p = w.size();
+            let counts = vec![4usize; p];
+            let offsets: Vec<usize> = (0..p).map(|r| r * 10 + 3).collect();
+            let mut region = vec![0u8; 40];
+            let me = w.rank();
+            region[offsets[me]..offsets[me] + 4].copy_from_slice(&payload(me, 4));
+            allgatherv_offsets(env, &w, &counts, &offsets, &mut region);
+            region
+        });
+        for got in out {
+            for r in 0..4 {
+                assert_eq!(&got[r * 10 + 3..r * 10 + 7], &payload(r, 4)[..], "block {r}");
+                assert_eq!(got[r * 10], 0, "gap before block {r} untouched");
+            }
         }
     }
 

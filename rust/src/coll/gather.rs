@@ -84,19 +84,48 @@ pub fn gatherv(
     mine: Option<&[u8]>,
     out: Option<&mut [u8]>,
 ) {
-    let p = comm.size();
-    let me = comm.rank();
-    assert_eq!(counts.len(), p, "one count per rank");
-    let displ = super::displs_of(counts);
-    if me == root {
+    if comm.rank() == root {
         let out = out.expect("root must supply an output buffer");
         let total: usize = counts.iter().sum();
         assert_eq!(out.len(), total, "gatherv output buffer size");
+        let displ = super::displs_of(counts);
+        gatherv_offsets(env, comm, root, counts, &displ, mine, Some(out));
+    } else {
+        let displ = super::displs_of(counts);
+        gatherv_offsets(env, comm, root, counts, &displ, mine, None);
+    }
+}
+
+/// [`gatherv`] generalized to explicit per-rank landing offsets into the
+/// root's `region`: the block of rank `r` lands at
+/// `region[offsets[r]..offsets[r] + counts[r]]`. Same message pattern and
+/// charging as `gatherv` (one any-source ingest loop at the root); the
+/// striped multi-leader hybrid gather needs the general form because
+/// stripe `j` of every node block is not contiguous in the root node's
+/// shared window.
+pub fn gatherv_offsets(
+    env: &mut ProcEnv,
+    comm: &Communicator,
+    root: usize,
+    counts: &[usize],
+    offsets: &[usize],
+    mine: Option<&[u8]>,
+    region: Option<&mut [u8]>,
+) {
+    let p = comm.size();
+    let me = comm.rank();
+    assert_eq!(counts.len(), p, "one count per rank");
+    assert_eq!(offsets.len(), p, "one offset per rank");
+    if me == root {
+        let region = region.expect("root must supply an output region");
+        for r in 0..p {
+            assert!(offsets[r] + counts[r] <= region.len(), "gatherv block {r} out of region");
+        }
         if let Some(mine) = mine {
             assert_eq!(mine.len(), counts[me], "my contribution must match counts[me]");
-            out[displ[me]..displ[me] + counts[me]].copy_from_slice(mine);
+            region[offsets[me]..offsets[me] + counts[me]].copy_from_slice(mine);
         }
-        // (None: in-place mode — the root's block is already in `out`.)
+        // (None: in-place mode — the root's block is already in place.)
         if p == 1 {
             return;
         }
@@ -105,7 +134,7 @@ pub fn gatherv(
             // Any-source: arrivals identify their slot by sender rank.
             let (src, data) = env.recv_payload(comm, None, tag);
             assert_eq!(data.len(), counts[src]);
-            out[displ[src]..displ[src] + counts[src]].copy_from_slice(&data);
+            region[offsets[src]..offsets[src] + counts[src]].copy_from_slice(&data);
             env.count_copy(counts[src]);
         }
     } else {

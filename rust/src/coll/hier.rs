@@ -105,8 +105,7 @@ pub fn hier_bcast(env: &mut ProcEnv, ctx: &HierCtx, root: usize, buf: &mut [u8])
     }
     // Bridge broadcast among leaders, rooted at the root's node.
     if let Some(bridge) = &ctx.bridge {
-        let mut b = bridge.clone();
-        bcast(env, &mut b, root_node, buf, BcastAlgo::Auto);
+        bcast(env, bridge, root_node, buf, BcastAlgo::Auto);
     }
     // Node broadcast from each leader.
     bcast(env, &ctx.node, 0, buf, BcastAlgo::Auto);

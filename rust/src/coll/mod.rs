@@ -23,14 +23,14 @@ pub mod reduce_scatter;
 pub mod scatter;
 pub mod tuning;
 
-pub use allgather::{allgather, allgatherv, allgatherv_inplace, AllgatherAlgo};
+pub use allgather::{allgather, allgatherv, allgatherv_inplace, allgatherv_offsets, AllgatherAlgo};
 pub use allreduce::{allreduce, AllreduceAlgo};
 pub use bcast::{bcast, BcastAlgo};
-pub use gather::{gather, gatherv};
+pub use gather::{gather, gatherv, gatherv_offsets};
 pub use plan::{CollIo, CollOp, CollPlan, Flavor, PlanCache, PlanKey};
 pub use reduce::reduce;
-pub use reduce_scatter::{reduce_scatter, reduce_scatterv};
-pub use scatter::{scatter, scatterv};
+pub use reduce_scatter::{reduce_scatter, reduce_scatterv, reduce_scatterv_offsets};
+pub use scatter::{scatter, scatterv, scatterv_offsets};
 pub use tuning::Tuning;
 
 /// Largest power of two ≤ `p` (`p ≥ 1`).

@@ -15,9 +15,11 @@
 //!   invocations — the inner loops of SUMMA/Poisson/BPMF — hit the cache
 //!   and skip re-planning, re-deriving translation tables and
 //!   re-allocating shared windows entirely. Per-communicator one-off
-//!   wrapper state (`comm_package`, size sets, translation tables, the
-//!   library-internal [`HierCtx`]) is shared across all plans on that
-//!   communicator.
+//!   state (the [`HybridCtx`](crate::hybrid::HybridCtx) session with its
+//!   cached size sets and translation tables, and the library-internal
+//!   [`HierCtx`]) is shared across all plans on that communicator; a
+//!   hybrid plan is a thin adapter over a persistent
+//!   [`HyColl`](crate::hybrid::HyColl) handle.
 //!
 //! Three flavors implement every operation (where meaningful):
 //! [`Flavor::Pure`] (tuned Open-MPI-style baselines), [`Flavor::Hier`]
@@ -52,13 +54,8 @@ use super::reduce::reduce;
 use super::reduce_scatter::reduce_scatter;
 use super::scatter::scatter;
 use super::tuning::Tuning;
-use crate::hybrid::allgather::{hy_allgather, sizeset_gather, AllgatherParam};
-use crate::hybrid::allreduce::{alloc_allreduce_win, hy_allreduce, AllreduceMethod};
-use crate::hybrid::bcast::{hy_bcast, TransTables};
-use crate::hybrid::gather::hy_gather;
-use crate::hybrid::package::CommPackage;
-use crate::hybrid::reduce_scatter::{alloc_reduce_scatter_win, hy_reduce_scatter};
-use crate::hybrid::scatter::hy_scatter;
+use crate::hybrid::allreduce::AllreduceMethod;
+use crate::hybrid::ctx::{HyColl, HybridCtx, LeaderPolicy};
 use crate::hybrid::shmem::HyWin;
 use crate::hybrid::sync::SyncScheme;
 use crate::mpi::env::ProcEnv;
@@ -87,19 +84,30 @@ pub enum Flavor {
     /// SMP-aware hierarchical pure MPI (node gather → bridge → node
     /// fan-out; the cray-mpich shape). Allgather/Bcast/Allreduce only.
     Hier,
-    /// The paper's hybrid MPI+MPI wrappers.
+    /// The paper's hybrid MPI+MPI collectives, on the
+    /// [`HybridCtx`](crate::hybrid::HybridCtx) session API.
     Hybrid {
         /// §4.5 yellow-sync implementation.
         scheme: SyncScheme,
         /// §5.2.4 step-1 method (allreduce / reduce-scatter family).
         method: AllreduceMethod,
+        /// Leaders per node (arXiv 2007.06892 multi-leader bridges;
+        /// clamped to the smallest node population at session creation).
+        leaders: usize,
     },
 }
 
 impl Flavor {
-    /// Hybrid with the paper's final configuration (tuned method cutoff).
+    /// Hybrid with the paper's final configuration (tuned method cutoff,
+    /// single leader per node).
     pub fn hybrid(scheme: SyncScheme) -> Flavor {
-        Flavor::Hybrid { scheme, method: AllreduceMethod::Tuned }
+        Flavor::Hybrid { scheme, method: AllreduceMethod::Tuned, leaders: 1 }
+    }
+
+    /// [`Flavor::hybrid`] with `leaders` leaders per node striping the
+    /// bridge step across NIC lanes.
+    pub fn hybrid_k(scheme: SyncScheme, leaders: usize) -> Flavor {
+        Flavor::Hybrid { scheme, method: AllreduceMethod::Tuned, leaders: leaders.max(1) }
     }
 }
 
@@ -312,27 +320,15 @@ impl CollPlan for HierPlan {
 }
 
 // ---------------------------------------------------------------------
-// Hybrid plans: window + one-off wrapper state owned by the plan.
+// Hybrid plans: a persistent session handle (HyColl) owned by the plan.
 // ---------------------------------------------------------------------
 
 struct HybridPlan {
     key: PlanKey,
-    pkg: Rc<CommPackage>,
-    win: Option<HyWin>,
-    /// Bridge recvcounts/displs (allgather/gather/scatter family).
-    param: Option<AllgatherParam>,
-    /// Rank translation tables (rooted ops).
-    tables: Option<Rc<TransTables>>,
-    /// Per-node shmem sizes (reduce-scatter bridge counts).
-    sizeset: Vec<usize>,
-    scheme: SyncScheme,
-    method: AllreduceMethod,
-}
-
-impl HybridPlan {
-    fn win_ref(&self) -> &HyWin {
-        self.win.as_ref().expect("plan already freed")
-    }
+    /// The persistent handle: window, bridge params, stripe tables,
+    /// translation tables, resolved method and scheme — all bound at
+    /// plan time by `HybridCtx::*_init`.
+    coll: HyColl,
 }
 
 impl CollPlan for HybridPlan {
@@ -341,81 +337,58 @@ impl CollPlan for HybridPlan {
     }
 
     fn execute(&mut self, env: &mut ProcEnv, io: CollIo<'_>) {
-        // Split borrows once: the window is mutably borrowed for the
-        // wrapper call while the shared one-off state (package, params,
-        // tables, sizeset) is read in place — no per-invocation clones.
-        let HybridPlan { key, pkg, win, param, tables, sizeset, scheme, method } = self;
-        let (scheme, method) = (*scheme, *method);
-        let count = key.count;
-        let me = pkg.parent.rank();
-        let p = pkg.parent.size();
-        let win = win.as_mut().expect("plan already freed");
-        match (key.op, io) {
+        let count = self.key.count;
+        let coll = &mut self.coll;
+        let me = coll.ctx().parent().rank();
+        let p = coll.ctx().parent().size();
+        match (self.key.op, io) {
             (CollOp::Allgather, CollIo::Allgather { send, recv }) => {
-                assert_eq!(send.len(), count);
-                let param = param.as_ref().expect("allgather plan has params");
-                let off = win.local_ptr(me, count);
-                win.store(env, off, send);
-                hy_allgather(env, pkg, win, param, count, scheme);
+                coll.start_allgather(env, send);
+                coll.wait(env);
                 if let Some(recv) = recv {
                     assert_eq!(recv.len(), count * p);
+                    let win = coll.window().expect("plan already freed");
                     win.win.read_into(0, recv);
                     env.charge_memcpy(recv.len());
                 }
             }
             (CollOp::Bcast, CollIo::Bcast { root, buf }) => {
-                let tables = tables.as_ref().expect("bcast plan has tables");
                 let is_root = me == root;
-                {
-                    let payload: Option<&[u8]> = if is_root {
-                        let b = buf.as_deref().expect("root must supply the payload");
-                        assert_eq!(b.len(), count);
-                        Some(b)
-                    } else {
-                        None
-                    };
-                    hy_bcast(env, pkg, win, tables, root, payload, count, scheme);
-                }
+                coll.start_bcast(env, root, if is_root { buf.as_deref() } else { None });
+                coll.wait(env);
                 if !is_root {
                     if let Some(out) = buf {
                         assert_eq!(out.len(), count);
+                        let win = coll.window().expect("plan already freed");
                         win.win.read_into(0, out);
                         env.charge_memcpy(count);
                     }
                 }
             }
             (CollOp::Allreduce, CollIo::Allreduce { buf, fetch }) => {
-                assert_eq!(buf.len(), count);
-                let (dtype, rop) = (key.dtype, key.rop.expect("allreduce plan binds an op"));
-                let off = win.local_ptr(pkg.shmem.rank(), count);
-                win.store(env, off, buf);
-                let g = hy_allreduce(env, pkg, win, dtype, rop, count, method, scheme);
+                coll.start_allreduce(env, buf);
+                let g = coll.wait(env);
                 if fetch {
+                    let win = coll.window().expect("plan already freed");
                     win.win.read_into(g, buf);
                     env.charge_memcpy(count);
                 }
             }
             (CollOp::ReduceScatter, CollIo::ReduceScatter { send, recv }) => {
-                assert_eq!(send.len(), count * p);
                 assert_eq!(recv.len(), count);
-                let (dtype, rop) = (key.dtype, key.rop.expect("reduce_scatter plan binds an op"));
-                let slot = win.local_ptr(pkg.shmem.rank(), count * p);
-                win.store(env, slot, send);
-                let off =
-                    hy_reduce_scatter(env, pkg, win, sizeset, dtype, rop, count, method, scheme);
+                coll.start_reduce_scatter(env, send);
+                let off = coll.wait(env);
+                let win = coll.window().expect("plan already freed");
                 win.win.read_into(off, recv);
                 env.charge_memcpy(count);
             }
             (CollOp::Gather, CollIo::Gather { root, send, recv }) => {
-                assert_eq!(send.len(), count);
-                let param = param.as_ref().expect("gather plan has params");
-                let tables = tables.as_ref().expect("gather plan has tables");
-                let off = win.local_ptr(me, count);
-                win.store(env, off, send);
-                hy_gather(env, pkg, win, param, tables, root, count, scheme);
+                coll.start_gather(env, root, send);
+                coll.wait(env);
                 if me == root {
                     if let Some(recv) = recv {
                         assert_eq!(recv.len(), count * p);
+                        let win = coll.window().expect("plan already freed");
                         win.win.read_into(0, recv);
                         env.charge_memcpy(recv.len());
                     }
@@ -423,17 +396,9 @@ impl CollPlan for HybridPlan {
             }
             (CollOp::Scatter, CollIo::Scatter { root, send, recv }) => {
                 assert_eq!(recv.len(), count);
-                let param = param.as_ref().expect("scatter plan has params");
-                let tables = tables.as_ref().expect("scatter plan has tables");
-                let payload = if me == root {
-                    let s = send.expect("root must supply the send buffer");
-                    assert_eq!(s.len(), count * p);
-                    Some(s)
-                } else {
-                    None
-                };
-                hy_scatter(env, pkg, win, param, tables, root, payload, count, scheme);
-                let off = win.local_ptr(me, count);
+                coll.start_scatter(env, root, send);
+                let off = coll.wait(env);
+                let win = coll.window().expect("plan already freed");
                 win.win.read_into(off, recv);
                 env.charge_memcpy(count);
             }
@@ -442,38 +407,21 @@ impl CollPlan for HybridPlan {
     }
 
     fn result_view(&self, len: usize) -> Option<&[u8]> {
-        let win = self.win_ref();
-        let off = match self.key.op {
-            CollOp::Allgather | CollOp::Bcast | CollOp::Gather => 0,
-            // A scatter result is the caller's own block, not the full
-            // vector — rank r's block lives at its affinity slot.
-            CollOp::Scatter => self.pkg.parent.rank() * self.key.count,
-            CollOp::Allreduce => (self.pkg.shmem_size + 1) * self.key.count,
-            CollOp::ReduceScatter => {
-                let total = self.key.count * self.pkg.parent.size();
-                (self.pkg.shmem_size + 1) * total + self.pkg.parent.rank() * self.key.count
-            }
-            CollOp::Reduce => return None,
-        };
-        // Safety: protocol-level — callers read between the plan's yellow
-        // sync and the next execute, per the window discipline.
-        Some(unsafe { win.win.slice(off, len) })
+        self.coll.result_view(len)
     }
 
     fn window(&self) -> Option<&HyWin> {
-        self.win.as_ref()
+        self.coll.window()
     }
 
     fn teardown(&mut self, env: &mut ProcEnv) {
-        if let Some(win) = self.win.take() {
-            win.free(env, &self.pkg);
-        }
+        self.coll.free(env);
     }
 
     fn describe(&self) -> String {
         format!(
-            "hybrid {:?} on comm {} ({} B, {:?}/{:?})",
-            self.key.op, self.key.comm, self.key.count, self.scheme, self.method
+            "hybrid {:?} on comm {} ({} B, {:?})",
+            self.key.op, self.key.comm, self.key.count, self.key.flavor
         )
     }
 }
@@ -484,9 +432,9 @@ impl CollPlan for HybridPlan {
 
 #[derive(Default)]
 struct CommCtx {
-    pkg: Option<Rc<CommPackage>>,
-    sizeset: Option<Rc<Vec<usize>>>,
-    tables: Option<Rc<TransTables>>,
+    /// Hybrid session per leader count (the session itself caches size
+    /// sets and translation tables across all plans on the communicator).
+    hybrid: HashMap<usize, Rc<HybridCtx>>,
     hier: Option<Rc<HierCtx>>,
 }
 
@@ -527,36 +475,36 @@ impl PlanCache {
         self.entries.is_empty()
     }
 
-    /// The shared `comm_package` for `comm`, if any hybrid plan (or an
-    /// explicit [`PlanCache::package`] call) created one.
-    pub fn package(&self, comm: &Communicator) -> Option<Rc<CommPackage>> {
-        self.comms.get(&comm.id()).and_then(|c| c.pkg.clone())
+    /// The shared hybrid session for `comm` at `leaders` leaders per
+    /// node, if any hybrid plan created one. `leaders` is clamped the
+    /// same way planning clamps it, so the count that was passed to
+    /// [`Flavor::hybrid_k`] always finds its session.
+    pub fn hybrid_ctx(
+        &self,
+        env: &ProcEnv,
+        comm: &Communicator,
+        leaders: usize,
+    ) -> Option<Rc<HybridCtx>> {
+        let eff = HybridCtx::effective_leaders(env, comm, leaders);
+        self.comms.get(&comm.id())?.hybrid.get(&eff).cloned()
     }
 
-    fn pkg(&mut self, env: &mut ProcEnv, comm: &Communicator) -> Rc<CommPackage> {
-        let ctx = self.comms.entry(comm.id()).or_default();
-        if ctx.pkg.is_none() {
-            ctx.pkg = Some(Rc::new(CommPackage::create(env, comm)));
+    fn hybrid(&mut self, env: &mut ProcEnv, comm: &Communicator, leaders: usize) -> Rc<HybridCtx> {
+        // Key sessions by the *effective* (clamped) leader count — the
+        // same rule `HybridCtx::create` applies — so requested counts
+        // that clamp to the same k (e.g. k = 2 and k = 4 on 2-rank
+        // nodes) share one session: one set of collective splits, one
+        // cached sizeset/translation-table pair. (Plans themselves still
+        // key by the requested flavor; only the expensive session state
+        // is deduplicated.)
+        let eff = HybridCtx::effective_leaders(env, comm, leaders);
+        if let Some(h) = self.comms.entry(comm.id()).or_default().hybrid.get(&eff) {
+            return h.clone();
         }
-        ctx.pkg.clone().unwrap()
-    }
-
-    fn sizeset(&mut self, env: &mut ProcEnv, comm: &Communicator) -> Rc<Vec<usize>> {
-        let pkg = self.pkg(env, comm);
-        let ctx = self.comms.get_mut(&comm.id()).unwrap();
-        if ctx.sizeset.is_none() {
-            ctx.sizeset = Some(Rc::new(sizeset_gather(env, &pkg)));
-        }
-        ctx.sizeset.clone().unwrap()
-    }
-
-    fn tables(&mut self, env: &mut ProcEnv, comm: &Communicator) -> Rc<TransTables> {
-        let pkg = self.pkg(env, comm);
-        let ctx = self.comms.get_mut(&comm.id()).unwrap();
-        if ctx.tables.is_none() {
-            ctx.tables = Some(Rc::new(TransTables::create(env, &pkg)));
-        }
-        ctx.tables.clone().unwrap()
+        let policy = if eff == 1 { LeaderPolicy::Single } else { LeaderPolicy::Leaders(eff) };
+        let h = HybridCtx::create(env, comm, policy);
+        self.comms.entry(comm.id()).or_default().hybrid.insert(eff, h.clone());
+        h
     }
 
     fn hier(&mut self, env: &mut ProcEnv, comm: &Communicator) -> Rc<HierCtx> {
@@ -612,49 +560,32 @@ impl PlanCache {
                 );
                 Box::new(HierPlan { key: key.clone(), ctx: self.hier(env, comm) })
             }
-            Flavor::Hybrid { scheme, method } => {
-                let pkg = self.pkg(env, comm);
-                let p = comm.size();
-                let (win, param, tables, sizeset) = match op {
-                    CollOp::Allgather => {
-                        let sizeset = self.sizeset(env, comm);
-                        let param = AllgatherParam::create(env, &pkg, count, &sizeset);
-                        let win = pkg.alloc_shared(env, count, 1, p);
-                        (win, Some(param), None, sizeset.to_vec())
-                    }
-                    CollOp::Bcast => {
-                        let tables = self.tables(env, comm);
-                        let win = pkg.alloc_shared(env, count, 1, 1);
-                        (win, None, Some(tables), Vec::new())
-                    }
-                    CollOp::Allreduce => {
-                        let win = alloc_allreduce_win(env, &pkg, count);
-                        (win, None, None, Vec::new())
-                    }
-                    CollOp::ReduceScatter => {
-                        let sizeset = self.sizeset(env, comm);
-                        let win = alloc_reduce_scatter_win(env, &pkg, count);
-                        (win, None, None, sizeset.to_vec())
-                    }
-                    CollOp::Gather | CollOp::Scatter => {
-                        let sizeset = self.sizeset(env, comm);
-                        let param = AllgatherParam::create(env, &pkg, count, &sizeset);
-                        let tables = self.tables(env, comm);
-                        let win = pkg.alloc_shared(env, count, 1, p);
-                        (win, Some(param), Some(tables), sizeset.to_vec())
-                    }
+            Flavor::Hybrid { scheme, method, leaders } => {
+                let ctx = self.hybrid(env, comm, leaders);
+                let coll = match op {
+                    CollOp::Allgather => ctx.allgather_init(env, count, scheme),
+                    CollOp::Bcast => ctx.bcast_init(env, count, scheme),
+                    CollOp::Allreduce => ctx.allreduce_init(
+                        env,
+                        dtype,
+                        rop.expect("allreduce plan binds an op"),
+                        count,
+                        method,
+                        scheme,
+                    ),
+                    CollOp::ReduceScatter => ctx.reduce_scatter_init(
+                        env,
+                        dtype,
+                        rop.expect("reduce_scatter plan binds an op"),
+                        count,
+                        method,
+                        scheme,
+                    ),
+                    CollOp::Gather => ctx.gather_init(env, count, scheme),
+                    CollOp::Scatter => ctx.scatter_init(env, count, scheme),
                     CollOp::Reduce => panic!("no hybrid plan for Reduce (use Allreduce or Gather)"),
                 };
-                Box::new(HybridPlan {
-                    key: key.clone(),
-                    pkg,
-                    win: Some(win),
-                    param,
-                    tables,
-                    sizeset,
-                    scheme,
-                    method,
-                })
+                Box::new(HybridPlan { key: key.clone(), coll })
             }
         };
         self.entries.push((key.clone(), plan));
@@ -899,7 +830,8 @@ mod tests {
 
             let stats = (cache.hits(), cache.misses(), cache.len(), w0 == w1);
             let sum = cast_slice::<f64>(&vals)[0];
-            env.barrier(&cache.package(&w).unwrap().shmem.clone());
+            let shmem = cache.hybrid_ctx(env, &w, 1).unwrap().shmem().clone();
+            env.barrier(&shmem);
             cache.free(env);
             (stats, ag, sum)
         });

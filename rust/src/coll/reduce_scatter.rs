@@ -29,18 +29,46 @@ pub fn reduce_scatterv(
     sendbuf: &[u8],
     recvbuf: &mut [u8],
 ) {
+    let total: usize = counts.iter().sum();
+    assert_eq!(sendbuf.len(), total, "reduce_scatter input size");
+    let displ = super::displs_of(counts);
+    reduce_scatterv_offsets(env, comm, dtype, op, counts, &displ, sendbuf, recvbuf);
+}
+
+/// [`reduce_scatterv`] generalized to explicit per-rank block offsets
+/// into `region` (the calling rank's contribution for block `r` lives at
+/// `region[offsets[r]..offsets[r] + counts[r]]`). The blocks are staged
+/// into one contiguous pooled working vector — exactly what the
+/// contiguous variant does with its input copy — and then run the same
+/// ring schedule, so costs and results are identical when the offsets
+/// are the running sums. The striped multi-leader hybrid reduce-scatter
+/// needs the general form: leader `j` reduces stripe `j` of every node
+/// block of the shared window's `L` vector, which is not contiguous.
+#[allow(clippy::too_many_arguments)]
+pub fn reduce_scatterv_offsets(
+    env: &mut ProcEnv,
+    comm: &Communicator,
+    dtype: Datatype,
+    op: ReduceOp,
+    counts: &[usize],
+    offsets: &[usize],
+    region: &[u8],
+    recvbuf: &mut [u8],
+) {
     let p = comm.size();
     let me = comm.rank();
     assert_eq!(counts.len(), p, "one count per rank");
+    assert_eq!(offsets.len(), p, "one offset per rank");
     for &c in counts {
         assert_eq!(c % dtype.size(), 0, "partial element in a reduce_scatter block");
     }
+    for r in 0..p {
+        assert!(offsets[r] + counts[r] <= region.len(), "reduce_scatter block {r} out of region");
+    }
     let displ = super::displs_of(counts);
-    let total: usize = counts.iter().sum();
-    assert_eq!(sendbuf.len(), total, "reduce_scatter input size");
     assert_eq!(recvbuf.len(), counts[me], "reduce_scatter output size");
     if p == 1 {
-        recvbuf.copy_from_slice(sendbuf);
+        recvbuf.copy_from_slice(&region[offsets[0]..offsets[0] + counts[0]]);
         return;
     }
     let tag = env.next_coll_tag(comm, opcode::REDSCAT);
@@ -53,8 +81,11 @@ pub fn reduce_scatterv(
     // (me−1−s) mod p and folds the incoming partial for block (me−2−s).
     // The working vector and the per-step staging buffer are pooled;
     // outgoing partials are borrowed straight from the working vector.
-    let mut work = env.take_buf(sendbuf.len());
-    work.copy_from_slice(sendbuf);
+    let total: usize = counts.iter().sum();
+    let mut work = env.take_buf(total);
+    for r in 0..p {
+        work[displ[r]..displ[r] + counts[r]].copy_from_slice(&region[offsets[r]..offsets[r] + counts[r]]);
+    }
     let max_count = counts.iter().copied().max().unwrap_or(0);
     let mut incoming = env.take_buf(max_count);
     for s in 0..p - 1 {

@@ -81,25 +81,57 @@ pub fn scatterv(
     send: Option<&[u8]>,
     recv: &mut [u8],
 ) {
-    let p = comm.size();
-    let me = comm.rank();
-    assert_eq!(counts.len(), p, "one count per rank");
-    assert_eq!(recv.len(), counts[me], "my block must match counts[me]");
-    let displ = super::displs_of(counts);
-    if me == root {
+    if comm.rank() == root {
         let s = send.expect("root must supply the send buffer");
         let total: usize = counts.iter().sum();
         assert_eq!(s.len(), total, "scatterv send buffer size");
+    }
+    let displ = super::displs_of(counts);
+    scatterv_offsets(env, comm, root, counts, &displ, send, Some(recv));
+}
+
+/// [`scatterv`] generalized to explicit per-rank source offsets into the
+/// root's `send` region, with an explicit **in-place mode** on both ends:
+/// the root may pass `recv: None` when its own block is already in place
+/// (the hybrid scatter's shared-window root), and the root's outgoing
+/// blocks are borrowed straight from `send[offsets[r]..]`. Same message
+/// pattern as `scatterv`; the striped multi-leader hybrid scatter needs
+/// the general form because stripe `j` of every node block is not
+/// contiguous in the root node's shared window.
+pub fn scatterv_offsets(
+    env: &mut ProcEnv,
+    comm: &Communicator,
+    root: usize,
+    counts: &[usize],
+    offsets: &[usize],
+    send: Option<&[u8]>,
+    recv: Option<&mut [u8]>,
+) {
+    let p = comm.size();
+    let me = comm.rank();
+    assert_eq!(counts.len(), p, "one count per rank");
+    assert_eq!(offsets.len(), p, "one offset per rank");
+    if me == root {
+        let s = send.expect("root must supply the send region");
+        for r in 0..p {
+            assert!(offsets[r] + counts[r] <= s.len(), "scatterv block {r} out of region");
+        }
         if p > 1 {
             let tag = env.next_coll_tag(comm, opcode::SCATTER);
             for r in 0..p {
                 if r != root {
-                    env.send(comm, r, tag, &s[displ[r]..displ[r] + counts[r]]);
+                    env.send(comm, r, tag, &s[offsets[r]..offsets[r] + counts[r]]);
                 }
             }
         }
-        recv.copy_from_slice(&s[displ[me]..displ[me] + counts[me]]);
+        if let Some(recv) = recv {
+            assert_eq!(recv.len(), counts[me], "my block must match counts[me]");
+            recv.copy_from_slice(&s[offsets[me]..offsets[me] + counts[me]]);
+        }
+        // (None: in-place mode — the root's block is already in place.)
     } else {
+        let recv = recv.expect("non-root ranks must supply a receive buffer");
+        assert_eq!(recv.len(), counts[me], "my block must match counts[me]");
         let tag = env.next_coll_tag(comm, opcode::SCATTER);
         env.recv_into(comm, Some(root), tag, recv);
     }

@@ -190,7 +190,31 @@ pub fn hy_allreduce(
     scheme: SyncScheme,
     fast: bool,
 ) -> f64 {
-    drive(spec, fast, CollOp::Allreduce, bytes, Flavor::Hybrid { scheme, method })
+    drive(spec, fast, CollOp::Allreduce, bytes, Flavor::Hybrid { scheme, method, leaders: 1 })
+}
+
+/// Hybrid allgather latency at `leaders` leaders per node (the
+/// arXiv 2007.06892 multi-leader bridge; `leaders = 1` reproduces
+/// [`hy_allgather`] exactly).
+pub fn hy_allgather_k(
+    spec: ClusterSpec,
+    bytes: usize,
+    scheme: SyncScheme,
+    leaders: usize,
+    fast: bool,
+) -> f64 {
+    drive(spec, fast, CollOp::Allgather, bytes, Flavor::hybrid_k(scheme, leaders))
+}
+
+/// Hybrid allreduce latency at `leaders` leaders per node.
+pub fn hy_allreduce_k(
+    spec: ClusterSpec,
+    bytes: usize,
+    scheme: SyncScheme,
+    leaders: usize,
+    fast: bool,
+) -> f64 {
+    drive(spec, fast, CollOp::Allreduce, bytes, Flavor::hybrid_k(scheme, leaders))
 }
 
 /// Pure ring reduce-scatter latency; `bytes` = full input vector.
@@ -247,6 +271,26 @@ mod tests {
         assert_eq!(r.plan_misses, 1, "one plan built");
         assert!(r.plan_hits >= 5, "every later iteration reused it (got {})", r.plan_hits);
         assert!(r.mean_us > 0.0);
+    }
+
+    #[test]
+    fn two_leaders_beat_one_at_256kib_node_blocks() {
+        // The PR-4 acceptance bound through the figure driver: 16 KiB per
+        // rank on 16-rank nodes = 256 KiB bridge blocks; k = 2 must be
+        // strictly faster in modeled vtime, and k = 1 must be identical
+        // to the plain hybrid driver.
+        let spec = || ClusterSpec::preset(Preset::VulcanSb, 2);
+        let one = hy_allgather_k(spec(), 16 * 1024, SyncScheme::Spin, 1, true);
+        let two = hy_allgather_k(spec(), 16 * 1024, SyncScheme::Spin, 2, true);
+        assert!(two < one, "k=2 ({two}) must beat k=1 ({one})");
+        let parity = hy_allgather(spec(), 16 * 1024, SyncScheme::Spin, true);
+        assert!((one - parity).abs() < 1e-9, "k=1 ({one}) must equal the 1-leader driver ({parity})");
+        // Same bound for the allreduce family: a 256 KiB operand is deep
+        // in the method-1 regime, where the bridge exchange (and the
+        // L→G move) stripes across the leader set.
+        let ar1 = hy_allreduce_k(spec(), 256 * 1024, SyncScheme::Spin, 1, true);
+        let ar2 = hy_allreduce_k(spec(), 256 * 1024, SyncScheme::Spin, 2, true);
+        assert!(ar2 < ar1, "allreduce k=2 ({ar2}) must beat k=1 ({ar1}) at 256 KiB");
     }
 
     #[test]

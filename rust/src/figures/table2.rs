@@ -4,7 +4,7 @@
 
 use super::{us, FigOpts};
 use crate::coordinator::{ClusterSpec, Preset, SimCluster, Table};
-use crate::hybrid::{AllgatherParam, CommPackage, TransTables};
+use crate::hybrid::{AllgatherParam, HybridCtx, LeaderPolicy};
 
 /// Paper values for the Mean (µs) rows (Vulcan).
 pub const PAPER: [(usize, [f64; 4]); 4] = [
@@ -20,18 +20,18 @@ pub fn measure(cores: usize) -> [f64; 4] {
     let report = SimCluster::new(spec).run(|env| {
         let w = env.world();
         let t0 = env.vclock();
-        let pkg = CommPackage::create(env, &w);
+        let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
         let t1 = env.vclock();
-        let win = pkg.alloc_shared(env, 800, 1, w.size());
+        let win = ctx.alloc_shared(env, 800, 1, w.size());
         let t2 = env.vclock();
-        let tables = TransTables::create(env, &pkg);
+        let tables = ctx.tables(env);
         let t3 = env.vclock();
-        let sizeset = crate::hybrid::sizeset_gather(env, &pkg);
-        let param = AllgatherParam::create(env, &pkg, 800, &sizeset);
+        let sizeset = ctx.sizeset(env);
+        let param = AllgatherParam::create(env, &ctx, 800, &sizeset);
         let t4 = env.vclock();
         std::hint::black_box((&tables, &param));
-        env.barrier(&pkg.shmem);
-        win.free(env, &pkg);
+        env.barrier(ctx.shmem());
+        win.free(env, &ctx);
         [t1 - t0, t2 - t1, t3 - t2, t4 - t3]
     });
     let mut out = [0.0f64; 4];

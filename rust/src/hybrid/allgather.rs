@@ -1,137 +1,118 @@
-//! `Wrapper_Hy_Allgather` (§4.2) and its parameter wrappers.
+//! The hybrid allgather (§4.2) behind
+//! [`HybridCtx::allgather_init`](super::ctx::HybridCtx::allgather_init),
+//! and the bridge parameter wrapper.
 //!
 //! Design: each rank writes its contribution into the slot of the node's
 //! shared window with affinity to it (one shared copy per node, *zero*
-//! on-node messages); after a red sync, the node **leaders** exchange whole
-//! node blocks with `MPI_Allgatherv` over the bridge (block counts differ
-//! on irregularly-populated nodes — the §5.2.2 irregular problem); a
-//! yellow sync then releases the children to read the full result in
-//! place.
+//! on-node messages); after a red sync, the node **leaders** exchange
+//! node blocks over the bridge — with `k > 1` leaders each leader `j`
+//! moves stripe `j` of every node block over its own same-index bridge,
+//! bound to NIC lane `j`, so the stripes overlap on the wire (block
+//! counts differ on irregularly-populated nodes — the §5.2.2 irregular
+//! problem; stripes inherit the irregularity); a yellow sync then
+//! releases the children to read the full result in place.
 //!
 //! Requires block-style rank placement (§4: consecutive ranks fill each
 //! node), so a node's contributions are contiguous in the result.
 
-use super::package::CommPackage;
+use super::ctx::{HybridCtx, StripeTable};
 use super::shmem::HyWin;
-use super::sync::{await_release, red_sync, release, SyncScheme};
-use crate::coll::allgather::{allgatherv, allgatherv_inplace};
+use super::sync::{complete, red_sync, SyncScheme};
+use crate::coll::allgather::{allgatherv, allgatherv_inplace, allgatherv_offsets};
 use crate::mpi::env::ProcEnv;
-use crate::mpi::topo::Placement;
 
 /// `struct allgather_param`: per-node receive counts and displacements for
-/// the bridge `MPI_Allgatherv` (bytes).
+/// the bridge exchange (bytes).
 #[derive(Clone, Debug)]
 pub struct AllgatherParam {
     pub recvcounts: Vec<usize>,
     pub displs: Vec<usize>,
 }
 
-/// `Wrapper_ShmemcommSizeset_gather`: collect every node's shared-memory
-/// communicator size. Leaders allgather over the bridge; children compute
-/// the same set from the parent group (they hold the same information —
-/// the wrapper hides where it comes from).
-pub fn sizeset_gather(env: &mut ProcEnv, pkg: &CommPackage) -> Vec<usize> {
-    if let Some(bridge) = &pkg.bridge {
-        let mine = (pkg.shmem_size as u64).to_le_bytes();
-        let mut out = vec![0u8; 8 * bridge.size()];
-        crate::coll::allgather(env, bridge, &mine, &mut out, crate::coll::AllgatherAlgo::Bruck);
-        out.chunks_exact(8)
-            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
-            .collect()
-    } else {
-        // Children: derive from topology (same values, no traffic).
-        let topo = env.topo();
-        let mut nodes: Vec<usize> = pkg.parent.members().iter().map(|&w| topo.node_of(w)).collect();
-        nodes.sort_unstable();
-        nodes.dedup();
-        nodes
-            .iter()
-            .map(|&n| pkg.parent.members().iter().filter(|&&w| topo.node_of(w) == n).count())
-            .collect()
-    }
-}
-
 impl AllgatherParam {
     /// `Wrapper_Create_Allgather_param`: build `recvcounts`/`displs` from
     /// the per-node sizes for a per-rank message of `msg` bytes. One-off
     /// cost: the Table-2 "Allgather_param" law.
-    pub fn create(env: &mut ProcEnv, pkg: &CommPackage, msg: usize, sizeset: &[usize]) -> AllgatherParam {
+    pub fn create(env: &mut ProcEnv, ctx: &HybridCtx, msg: usize, sizeset: &[usize]) -> AllgatherParam {
         let recvcounts: Vec<usize> = sizeset.iter().map(|&s| s * msg).collect();
         let displs = crate::coll::displs_of(&recvcounts);
         let mgmt = env.state().mgmt.clone();
-        env.advance(mgmt.allgather_param_us(pkg.bridge_size));
+        env.advance(mgmt.allgather_param_us(ctx.nnodes()));
         AllgatherParam { recvcounts, displs }
     }
 }
 
-/// `Wrapper_Hy_Allgather`: complete the allgather across the cluster. Every
-/// rank must already have stored its `msg`-byte contribution at its
-/// affinity slot (`win.local_ptr(parent_rank, msg)`); afterwards the full
-/// gathered result (parent-rank order) is readable by every rank at offset
-/// 0 of the node's shared window.
-pub fn hy_allgather(
+/// Complete a started allgather: red sync, (striped) bridge exchange in
+/// place on the shared window, yellow sync. With `k = 1` (empty
+/// `stripes`) this is byte- and vtime-identical to the pre-session
+/// `Wrapper_Hy_Allgather`.
+pub(crate) fn run(
     env: &mut ProcEnv,
-    pkg: &CommPackage,
+    ctx: &HybridCtx,
     win: &mut HyWin,
     param: &AllgatherParam,
-    msg: usize,
+    stripes: &[StripeTable],
     scheme: SyncScheme,
 ) {
-    assert_eq!(
-        env.topo().placement(),
-        Placement::Block,
-        "Wrapper_Hy_Allgather assumes block-style rank placement (§4); \
-         see [20] for the measures other placements require"
-    );
     // Red sync: all on-node contributions must be in the window.
-    red_sync(env, pkg);
-    if let Some(bridge) = &pkg.bridge {
-        // Exchange node blocks in place over the bridge. The leader works
-        // directly on the shared window (its node's block is already
-        // contiguous at its displacement under block placement, so every
-        // ring step borrows straight out of the window) —
-        // protocol-exclusive during this phase.
+    red_sync(env, ctx);
+    if let Some(j) = ctx.leader_index() {
+        let bridge = ctx.bridge().expect("leaders hold a bridge").clone();
         let full_len: usize = param.recvcounts.iter().sum();
-        if env.legacy_dataplane() {
-            // Pre-refactor path: materialize the node block first.
-            let bidx = bridge.rank();
-            let (lo, count) = (param.displs[bidx], param.recvcounts[bidx]);
-            let mine = win.win.read_vec(lo, count);
-            env.count_copy(count);
-            let out = unsafe { win.win.slice_mut(0, full_len) };
-            allgatherv(env, bridge, &mine, &param.recvcounts, out);
+        if stripes.is_empty() {
+            // Single leader: exchange whole node blocks in place over the
+            // bridge (the leader works directly on the shared window —
+            // its node's block is already contiguous at its displacement
+            // under block placement) — protocol-exclusive in this phase.
+            if env.legacy_dataplane() {
+                // Pre-refactor path: materialize the node block first.
+                let bidx = bridge.rank();
+                let (lo, count) = (param.displs[bidx], param.recvcounts[bidx]);
+                let mine = win.win.read_vec(lo, count);
+                env.count_copy(count);
+                let out = unsafe { win.win.slice_mut(0, full_len) };
+                allgatherv(env, &bridge, &mine, &param.recvcounts, out);
+            } else {
+                let out = unsafe { win.win.slice_mut(0, full_len) };
+                allgatherv_inplace(env, &bridge, &param.recvcounts, out);
+            }
         } else {
+            // Leader j moves stripe j of every node block over bridge j,
+            // injecting on its own NIC lane so same-node leaders overlap.
+            let st = &stripes[j];
             let out = unsafe { win.win.slice_mut(0, full_len) };
-            allgatherv_inplace(env, bridge, &param.recvcounts, out);
+            env.with_nic_lane(j, |env| {
+                allgatherv_offsets(env, &bridge, &st.counts, &st.offsets, out);
+            });
         }
-        let _ = msg;
-        release(env, pkg, win, scheme);
-    } else {
-        await_release(env, pkg, win, scheme);
     }
+    complete(env, ctx, win, scheme);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coll::testutil::run_nodes;
+    use crate::hybrid::LeaderPolicy;
     use crate::util::{cast_slice, to_bytes};
 
-    fn run_allgather(nodes: &'static [usize], n_elems: usize, scheme: SyncScheme) -> Vec<Vec<f64>> {
+    fn run_allgather(
+        nodes: &'static [usize],
+        n_elems: usize,
+        k: usize,
+        scheme: SyncScheme,
+    ) -> Vec<Vec<f64>> {
         run_nodes(nodes, move |env| {
             let w = env.world();
-            let pkg = CommPackage::create(env, &w);
+            let ctx = HybridCtx::create(env, &w, LeaderPolicy::Leaders(k));
             let msg = n_elems * 8;
-            let mut win = pkg.alloc_shared(env, msg, 1, w.size());
-            let sizeset = sizeset_gather(env, &pkg);
-            let param = AllgatherParam::create(env, &pkg, msg, &sizeset);
+            let mut ag = ctx.allgather_init(env, msg, scheme);
             let mine: Vec<f64> = (0..n_elems).map(|i| (w.rank() * n_elems + i) as f64).collect();
-            let off = win.local_ptr(w.rank(), msg);
-            win.store(env, off, to_bytes(&mine));
-            hy_allgather(env, &pkg, &mut win, &param, msg, scheme);
-            let all = win.load(env, 0, msg * w.size());
-            env.barrier(&pkg.shmem);
-            win.free(env, &pkg);
+            ag.start_allgather(env, to_bytes(&mine));
+            ag.wait(env);
+            let all = ag.window().unwrap().load(env, 0, msg * w.size());
+            env.barrier(ctx.shmem());
+            ag.free(env);
             cast_slice::<f64>(&all)
         })
     }
@@ -139,10 +120,12 @@ mod tests {
     #[test]
     fn gathers_in_rank_order_regular() {
         for scheme in [SyncScheme::Barrier, SyncScheme::Spin] {
-            let out = run_allgather(&[4, 4], 5, scheme);
-            let expect: Vec<f64> = (0..40).map(|x| x as f64).collect();
-            for (r, got) in out.into_iter().enumerate() {
-                assert_eq!(got, expect, "scheme {scheme:?} rank {r}");
+            for k in [1, 2, 4] {
+                let out = run_allgather(&[4, 4], 5, k, scheme);
+                let expect: Vec<f64> = (0..40).map(|x| x as f64).collect();
+                for (r, got) in out.into_iter().enumerate() {
+                    assert_eq!(got, expect, "scheme {scheme:?} k {k} rank {r}");
+                }
             }
         }
     }
@@ -150,40 +133,32 @@ mod tests {
     #[test]
     fn gathers_irregular_nodes() {
         // The §5.2.2 irregular problem: different ranks per node.
-        let out = run_allgather(&[5, 3], 3, SyncScheme::Spin);
-        let expect: Vec<f64> = (0..24).map(|x| x as f64).collect();
-        for got in out {
-            assert_eq!(got, expect);
+        for k in [1, 2, 3] {
+            let out = run_allgather(&[5, 3], 3, k, SyncScheme::Spin);
+            let expect: Vec<f64> = (0..24).map(|x| x as f64).collect();
+            for got in out {
+                assert_eq!(got, expect, "k {k}");
+            }
         }
     }
 
     #[test]
     fn three_nodes_spin() {
-        let out = run_allgather(&[3, 4, 2], 2, SyncScheme::Spin);
-        let expect: Vec<f64> = (0..18).map(|x| x as f64).collect();
-        for got in out {
-            assert_eq!(got, expect);
+        for k in [1, 2] {
+            let out = run_allgather(&[3, 4, 2], 2, k, SyncScheme::Spin);
+            let expect: Vec<f64> = (0..18).map(|x| x as f64).collect();
+            for got in out {
+                assert_eq!(got, expect, "k {k}");
+            }
         }
     }
 
     #[test]
     fn single_node_needs_no_bridge() {
-        let out = run_allgather(&[6], 4, SyncScheme::Spin);
+        let out = run_allgather(&[6], 4, 2, SyncScheme::Spin);
         let expect: Vec<f64> = (0..24).map(|x| x as f64).collect();
         for got in out {
             assert_eq!(got, expect);
-        }
-    }
-
-    #[test]
-    fn sizeset_agrees_between_leaders_and_children() {
-        let out = run_nodes(&[5, 3], |env| {
-            let w = env.world();
-            let pkg = CommPackage::create(env, &w);
-            sizeset_gather(env, &pkg)
-        });
-        for got in out {
-            assert_eq!(got, vec![5, 3]);
         }
     }
 
@@ -194,19 +169,17 @@ mod tests {
         let n = 100; // 800 B per rank, the Fig. 12 message size
         let hybrid = run_nodes(nodes, move |env| {
             let w = env.world();
-            let pkg = CommPackage::create(env, &w);
+            let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
             let msg = n * 8;
-            let mut win = pkg.alloc_shared(env, msg, 1, w.size());
-            let sizeset = sizeset_gather(env, &pkg);
-            let param = AllgatherParam::create(env, &pkg, msg, &sizeset);
+            let mut ag = ctx.allgather_init(env, msg, SyncScheme::Spin);
             let data = vec![1u8; msg];
             env.harness_sync(&w);
             let t0 = env.vclock();
-            win.store(env, win.local_ptr(w.rank(), msg), &data);
-            hy_allgather(env, &pkg, &mut win, &param, msg, SyncScheme::Spin);
+            ag.start_allgather(env, &data);
+            ag.wait(env);
             let dt = env.vclock() - t0;
-            env.barrier(&pkg.shmem);
-            win.free(env, &pkg);
+            env.barrier(ctx.shmem());
+            ag.free(env);
             dt
         })
         .into_iter()
@@ -223,5 +196,34 @@ mod tests {
         .into_iter()
         .fold(0.0f64, f64::max);
         assert!(hybrid < pure, "hybrid {hybrid} must beat pure {pure} at 800 B");
+    }
+
+    #[test]
+    fn two_leaders_beat_one_on_large_bridge_blocks() {
+        // The multi-lane acceptance bound: at a ≥256 KiB node block the
+        // striped k = 2 bridge must be strictly faster in modeled vtime
+        // than the single-leader exchange.
+        let nodes: &'static [usize] = &[16, 16];
+        let msg = 16 * 1024; // 16 KiB/rank → 256 KiB node blocks
+        let vt = |k: usize| {
+            run_nodes(nodes, move |env| {
+                let w = env.world();
+                let ctx = HybridCtx::create(env, &w, LeaderPolicy::Leaders(k));
+                let mut ag = ctx.allgather_init(env, msg, SyncScheme::Spin);
+                let data = vec![3u8; msg];
+                env.harness_sync(&w);
+                let t0 = env.vclock();
+                ag.start_allgather(env, &data);
+                ag.wait(env);
+                let dt = env.vclock() - t0;
+                env.barrier(ctx.shmem());
+                ag.free(env);
+                dt
+            })
+            .into_iter()
+            .fold(0.0f64, f64::max)
+        };
+        let (one, two) = (vt(1), vt(2));
+        assert!(two < one, "k=2 ({two}) must be strictly below k=1 ({one})");
     }
 }

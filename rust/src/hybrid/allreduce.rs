@@ -1,29 +1,34 @@
-//! `Wrapper_Hy_Allreduce` (§4.4) with both step-1 methods and the
-//! message-size cutoff tuning of §5.2.4.
+//! The hybrid allreduce (§4.4) behind
+//! [`HybridCtx::allreduce_init`](super::ctx::HybridCtx::allreduce_init),
+//! with both step-1 methods and the message-size cutoff tuning of §5.2.4.
 //!
-//! Window layout (leader allocates `(shmem_size + 2) · msize` bytes):
-//! input slot per local rank at `local_rank · msize`, then the two-element
-//! output vector of Fig. 8 — slot `L` (node-local reduction) at
-//! `shmem_size · msize` and slot `G` (global result) after it.
+//! Window layout (primary leader allocates `(shmem_size + 2) · msize`
+//! bytes): input slot per local rank at `local_rank · msize`, then the
+//! two-element output vector of Fig. 8 — slot `L` (node-local reduction)
+//! at `shmem_size · msize` and slot `G` (global result) after it.
 //!
 //! - **Step 1** (node-level reduction into `L`):
 //!   - *method 1* — `MPI_Reduce` over the node communicator: simple and
 //!     synchronizing by itself, but pays the library's internal staging
 //!     copies;
-//!   - *method 2* — a red sync, then the leader serially reduces the input
-//!     slots straight out of the shared window (no message copies, but the
-//!     children idle and an extra sync is needed).
-//! - **Step 2**: standard allreduce over the bridge (leaders), result into
-//!   `G`, then a yellow sync; children read `G` in place — the result is
-//!   *not* broadcast (visible-change sharing, §1).
+//!   - *method 2* — a red sync, then the leaders reduce the input slots
+//!     straight out of the shared window (no message copies, but the
+//!     children idle and an extra sync is needed). With `k > 1` leaders
+//!     each leader serially folds its own element-aligned stripe — the
+//!     serial step-1 bottleneck parallelizes along with the bridge.
+//! - **Step 2**: allreduce over the bridge(s), result into `G` — leader
+//!   `j` reduces stripe `j` over bridge `j` on NIC lane `j` — then a
+//!   yellow sync; children read `G` in place (visible-change sharing,
+//!   §1).
 //!
-//! The optimized wrapper ([`AllreduceMethod::Tuned`]) uses method 2 below
-//! the 2 KB cutoff (Fig. 15) and method 1 above it, with the spinning
-//! yellow sync (§5.2.4's final configuration).
+//! The optimized configuration uses method 2 below the 2 KB cutoff
+//! (Fig. 15) and method 1 above it, with the spinning yellow sync
+//! (§5.2.4's final configuration); [`AllreduceMethod::Tuned`] resolves
+//! the cutoff once, at `*_init` time.
 
-use super::package::CommPackage;
+use super::ctx::HybridCtx;
 use super::shmem::HyWin;
-use super::sync::{await_release, red_sync, release, SyncScheme};
+use super::sync::{complete, red_sync, SyncScheme};
 use crate::coll::allreduce::{allreduce, AllreduceAlgo};
 use crate::coll::reduce::reduce;
 use crate::mpi::env::ProcEnv;
@@ -36,50 +41,38 @@ pub enum AllreduceMethod {
     Method1,
     /// Red sync + leader-serial reduction from the shared window.
     Method2,
-    /// §5.2.4 optimized: method 2 iff `msize ≤` the 2 KB cutoff.
+    /// §5.2.4 optimized: method 2 iff the operand is at most the 2 KB
+    /// cutoff (resolved once at `*_init`).
     Tuned,
 }
 
 /// The Fig. 15 cutoff (bytes): below → method 2, above → method 1.
 pub const METHOD_CUTOFF_BYTES: usize = 2 * 1024;
 
-/// Allocate the allreduce window for `msize`-byte operands
-/// (`(shmem_size + 2) · msize` on the leader).
-pub fn alloc_allreduce_win(env: &mut ProcEnv, pkg: &CommPackage, msize: usize) -> HyWin {
-    pkg.alloc_shared(env, msize, 1, pkg.shmem_size + 2)
-}
-
 /// Offsets of the L and G slots.
-fn slots(pkg: &CommPackage, msize: usize) -> (usize, usize) {
-    (pkg.shmem_size * msize, (pkg.shmem_size + 1) * msize)
+fn slots(ctx: &HybridCtx, msize: usize) -> (usize, usize) {
+    (ctx.shmem_size() * msize, (ctx.shmem_size() + 1) * msize)
 }
 
-/// `Wrapper_Hy_Allreduce`: reduce the per-rank operands (already stored at
-/// `win.local_ptr(shmem_rank, msize)`) across the parent communicator.
-/// Afterwards every rank can read the global result at the returned window
-/// offset (slot `G`) — one shared copy per node.
-pub fn hy_allreduce(
+/// Complete a started allreduce (operands already stored at the per-rank
+/// slots); returns the window offset of slot `G`. With `k = 1` (empty
+/// `vec_stripes`) every branch is byte- and vtime-identical to the
+/// pre-session `Wrapper_Hy_Allreduce`; `method` arrives resolved (never
+/// [`AllreduceMethod::Tuned`]).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run(
     env: &mut ProcEnv,
-    pkg: &CommPackage,
+    ctx: &HybridCtx,
     win: &mut HyWin,
     dtype: Datatype,
     op: ReduceOp,
     msize: usize,
     method: AllreduceMethod,
+    vec_stripes: &[(usize, usize)],
     scheme: SyncScheme,
 ) -> usize {
-    assert_eq!(msize % dtype.size(), 0);
-    let (l_off, g_off) = slots(pkg, msize);
-    let method = match method {
-        AllreduceMethod::Tuned => {
-            if msize <= METHOD_CUTOFF_BYTES {
-                AllreduceMethod::Method2
-            } else {
-                AllreduceMethod::Method1
-            }
-        }
-        m => m,
-    };
+    let (l_off, g_off) = slots(ctx, msize);
+    let shmem_size = ctx.shmem_size();
 
     // ---- step 1: node-level reduction into L -------------------------
     match method {
@@ -87,84 +80,108 @@ pub fn hy_allreduce(
             // MPI_Reduce over the node communicator; operands read from
             // each rank's own window slot (its private data — no sync
             // needed before a rank reads what it wrote). The operand is
-            // borrowed straight out of the window, and the leader's
-            // result lands in slot L in place (the `charge_memcpy` keeps
-            // the modeled store cost identical to the legacy round-trip).
-            let my_off = win.local_ptr(pkg.shmem.rank(), msize);
+            // borrowed straight out of the window, and the primary
+            // leader's result lands in slot L in place (the
+            // `charge_memcpy` keeps the modeled store cost identical to
+            // the legacy round-trip).
+            let my_off = win.local_ptr(ctx.shmem().rank(), msize);
             if env.legacy_dataplane() {
                 let contrib = win.win.read_vec(my_off, msize);
                 env.count_copy(msize);
-                if pkg.is_leader() {
+                if ctx.is_leader() {
                     let mut out = vec![0u8; msize];
-                    reduce(env, &pkg.shmem, 0, dtype, op, &contrib, Some(&mut out));
+                    reduce(env, ctx.shmem(), 0, dtype, op, &contrib, Some(&mut out));
                     win.store(env, l_off, &out);
                 } else {
-                    reduce(env, &pkg.shmem, 0, dtype, op, &contrib, None);
+                    reduce(env, ctx.shmem(), 0, dtype, op, &contrib, None);
                 }
             } else {
                 let contrib = unsafe { win.win.slice(my_off, msize) };
-                if pkg.is_leader() {
+                if ctx.is_leader() {
                     let out = unsafe { win.win.slice_mut(l_off, msize) };
-                    reduce(env, &pkg.shmem, 0, dtype, op, contrib, Some(out));
+                    reduce(env, ctx.shmem(), 0, dtype, op, contrib, Some(out));
                     env.charge_memcpy(msize);
                 } else {
-                    reduce(env, &pkg.shmem, 0, dtype, op, contrib, None);
+                    reduce(env, ctx.shmem(), 0, dtype, op, contrib, None);
                 }
+            }
+            // Leaders 1..k read L, which only leader 0 holds so far: the
+            // leader group must synchronize before the striped step 2
+            // (`leaders()` is `Some` only on leaders when k > 1).
+            if let Some(leaders) = ctx.leaders() {
+                env.barrier(leaders);
             }
         }
         AllreduceMethod::Method2 => {
-            // Red sync so every input slot is visible, then the leader
-            // reduces serially straight out of the shared window into
+            // Red sync so every input slot is visible, then the leaders
+            // reduce serially straight out of the shared window into
             // slot L (slot 0 seeds L; slots 1.. fold into it — the same
             // combine order as the legacy accumulator, so results are
-            // bit-identical).
-            red_sync(env, pkg);
-            if pkg.is_leader() {
-                if env.legacy_dataplane() {
-                    let mut acc = win.win.read_vec(0, msize);
-                    env.count_copy(msize);
-                    for r in 1..pkg.shmem_size {
-                        let operand = unsafe { win.win.slice(r * msize, msize) };
-                        op.apply(dtype, &mut acc, operand);
-                    }
-                    env.charge_reduce(msize * pkg.shmem_size);
-                    win.win.write(l_off, &acc);
-                    env.charge_memcpy(msize);
+            // bit-identical). With k > 1 each leader folds only its own
+            // stripe — disjoint L ranges, no leader sync needed here.
+            red_sync(env, ctx);
+            if let Some(j) = ctx.leader_index() {
+                let (off, len) = if vec_stripes.is_empty() {
+                    (0, msize)
                 } else {
-                    win.win.copy_within(0, l_off, msize);
-                    let l = unsafe { win.win.slice_mut(l_off, msize) };
-                    for r in 1..pkg.shmem_size {
-                        let operand = unsafe { win.win.slice(r * msize, msize) };
-                        op.apply(dtype, l, operand);
+                    vec_stripes[j]
+                };
+                if len > 0 {
+                    if env.legacy_dataplane() && vec_stripes.is_empty() {
+                        let mut acc = win.win.read_vec(0, msize);
+                        env.count_copy(msize);
+                        for r in 1..shmem_size {
+                            let operand = unsafe { win.win.slice(r * msize, msize) };
+                            op.apply(dtype, &mut acc, operand);
+                        }
+                        env.charge_reduce(msize * shmem_size);
+                        win.win.write(l_off, &acc);
+                        env.charge_memcpy(msize);
+                    } else {
+                        win.win.copy_within(off, l_off + off, len);
+                        let l = unsafe { win.win.slice_mut(l_off + off, len) };
+                        for r in 1..shmem_size {
+                            let operand = unsafe { win.win.slice(r * msize + off, len) };
+                            op.apply(dtype, l, operand);
+                        }
+                        env.charge_reduce(len * shmem_size);
+                        env.charge_memcpy(len);
                     }
-                    env.charge_reduce(msize * pkg.shmem_size);
-                    env.charge_memcpy(msize);
                 }
             }
         }
-        AllreduceMethod::Tuned => unreachable!(),
+        AllreduceMethod::Tuned => unreachable!("Tuned resolves at *_init"),
     }
 
     // ---- step 2: bridge allreduce into G + yellow sync ----------------
-    if let Some(bridge) = &pkg.bridge {
-        // G := L (slot-to-slot move inside the window), then allreduce G
-        // in place across the leaders.
-        if env.legacy_dataplane() {
-            let l = win.win.read_vec(l_off, msize);
-            env.count_copy(msize);
-            win.win.write(g_off, &l);
-        } else {
-            win.win.copy_within(l_off, g_off, msize);
+    if let Some(j) = ctx.leader_index() {
+        let bridge = ctx.bridge().expect("leaders hold a bridge").clone();
+        let (off, len) = if vec_stripes.is_empty() { (0, msize) } else { vec_stripes[j] };
+        if len > 0 {
+            // G := L (slot-to-slot move inside the window), then
+            // allreduce G in place across the same-index leaders.
+            if env.legacy_dataplane() && vec_stripes.is_empty() {
+                let l = win.win.read_vec(l_off, msize);
+                env.count_copy(msize);
+                win.win.write(g_off, &l);
+            } else {
+                win.win.copy_within(l_off + off, g_off + off, len);
+            }
+            env.charge_memcpy(len);
+            if bridge.size() > 1 {
+                if vec_stripes.is_empty() {
+                    let g = unsafe { win.win.slice_mut(g_off, msize) };
+                    allreduce(env, &bridge, dtype, op, g, AllreduceAlgo::Auto);
+                } else {
+                    let g = unsafe { win.win.slice_mut(g_off + off, len) };
+                    env.with_nic_lane(j, |env| {
+                        allreduce(env, &bridge, dtype, op, g, AllreduceAlgo::Auto);
+                    });
+                }
+            }
         }
-        env.charge_memcpy(msize);
-        if bridge.size() > 1 {
-            let g = unsafe { win.win.slice_mut(g_off, msize) };
-            allreduce(env, bridge, dtype, op, g, AllreduceAlgo::Auto);
-        }
-        release(env, pkg, win, scheme);
-    } else {
-        await_release(env, pkg, win, scheme);
     }
+    complete(env, ctx, win, scheme);
     g_off
 }
 
@@ -172,29 +189,32 @@ pub fn hy_allreduce(
 mod tests {
     use super::*;
     use crate::coll::testutil::run_nodes;
+    use crate::hybrid::LeaderPolicy;
     use crate::util::{cast_slice, to_bytes};
 
-    fn check(nodes: &'static [usize], n: usize, method: AllreduceMethod, scheme: SyncScheme) {
+    fn check(nodes: &'static [usize], n: usize, k: usize, method: AllreduceMethod, scheme: SyncScheme) {
         let p: usize = nodes.iter().sum();
         let out = run_nodes(nodes, move |env| {
             let w = env.world();
-            let pkg = CommPackage::create(env, &w);
+            let ctx = HybridCtx::create(env, &w, LeaderPolicy::Leaders(k));
             let msize = n * 8;
-            let mut win = alloc_allreduce_win(env, &pkg, msize);
+            let mut ar = ctx.allreduce_init(env, Datatype::F64, ReduceOp::Sum, msize, method, scheme);
             let vals: Vec<f64> = (0..n).map(|i| ((w.rank() + 1) * (i + 2)) as f64).collect();
-            let off = win.local_ptr(pkg.shmem.rank(), msize);
-            win.store(env, off, to_bytes(&vals));
-            let g = hy_allreduce(env, &pkg, &mut win, Datatype::F64, ReduceOp::Sum, msize, method, scheme);
-            let result = win.load(env, g, msize);
-            env.barrier(&pkg.shmem);
-            win.free(env, &pkg);
+            ar.start_allreduce(env, to_bytes(&vals));
+            let g = ar.wait(env);
+            let result = ar.window().unwrap().load(env, g, msize);
+            env.barrier(ctx.shmem());
+            ar.free(env);
             cast_slice::<f64>(&result)
         });
         let rank_sum: f64 = (1..=p).map(|r| r as f64).sum();
         for (r, got) in out.into_iter().enumerate() {
             for (i, &v) in got.iter().enumerate() {
                 let expect = rank_sum * (i + 2) as f64;
-                assert!((v - expect).abs() < 1e-9, "method {method:?} rank {r} elem {i}: {v} vs {expect}");
+                assert!(
+                    (v - expect).abs() < 1e-9,
+                    "method {method:?} k {k} rank {r} elem {i}: {v} vs {expect}"
+                );
             }
         }
     }
@@ -203,44 +223,48 @@ mod tests {
     fn both_methods_all_schemes() {
         for method in [AllreduceMethod::Method1, AllreduceMethod::Method2] {
             for scheme in [SyncScheme::Barrier, SyncScheme::Spin] {
-                check(&[5, 3], 4, method, scheme);
+                for k in [1, 2, 3] {
+                    check(&[5, 3], 4, k, method, scheme);
+                }
             }
         }
     }
 
     #[test]
     fn tuned_picks_correctly_and_stays_correct() {
-        check(&[5, 3], 1, AllreduceMethod::Tuned, SyncScheme::Spin); // 8 B -> method 2
-        check(&[5, 3], 512, AllreduceMethod::Tuned, SyncScheme::Spin); // 4 KB -> method 1
+        check(&[5, 3], 1, 1, AllreduceMethod::Tuned, SyncScheme::Spin); // 8 B -> method 2
+        check(&[5, 3], 512, 1, AllreduceMethod::Tuned, SyncScheme::Spin); // 4 KB -> method 1
+        check(&[5, 3], 512, 2, AllreduceMethod::Tuned, SyncScheme::Spin);
     }
 
     #[test]
     fn irregular_three_nodes_and_single_node() {
-        check(&[3, 4, 2], 8, AllreduceMethod::Method2, SyncScheme::Spin);
-        check(&[6], 8, AllreduceMethod::Method1, SyncScheme::Spin);
-        check(&[6], 8, AllreduceMethod::Method2, SyncScheme::Barrier);
+        check(&[3, 4, 2], 8, 1, AllreduceMethod::Method2, SyncScheme::Spin);
+        check(&[3, 4, 2], 8, 2, AllreduceMethod::Method2, SyncScheme::Spin);
+        check(&[6], 8, 1, AllreduceMethod::Method1, SyncScheme::Spin);
+        check(&[6], 8, 2, AllreduceMethod::Method2, SyncScheme::Barrier);
     }
 
     #[test]
     fn max_op() {
-        let out = run_nodes(&[5, 3], |env| {
-            let w = env.world();
-            let pkg = CommPackage::create(env, &w);
-            let mut win = alloc_allreduce_win(env, &pkg, 8);
-            let v = [(w.rank() as f64) * if w.rank() % 2 == 0 { 1.0 } else { -1.0 }];
-            let off = win.local_ptr(pkg.shmem.rank(), 8);
-            win.store(env, off, to_bytes(&v));
-            let g = hy_allreduce(
-                env, &pkg, &mut win, Datatype::F64, ReduceOp::Max, 8,
-                AllreduceMethod::Method2, SyncScheme::Spin,
-            );
-            let result = win.load(env, g, 8);
-            env.barrier(&pkg.shmem);
-            win.free(env, &pkg);
-            cast_slice::<f64>(&result)[0]
-        });
-        for got in out {
-            assert_eq!(got, 6.0);
+        for k in [1, 2] {
+            let out = run_nodes(&[5, 3], move |env| {
+                let w = env.world();
+                let ctx = HybridCtx::create(env, &w, LeaderPolicy::Leaders(k));
+                let mut ar = ctx.allreduce_init(
+                    env, Datatype::F64, ReduceOp::Max, 8, AllreduceMethod::Method2, SyncScheme::Spin,
+                );
+                let v = [(w.rank() as f64) * if w.rank() % 2 == 0 { 1.0 } else { -1.0 }];
+                ar.start_allreduce(env, to_bytes(&v));
+                let g = ar.wait(env);
+                let result = ar.window().unwrap().load(env, g, 8);
+                env.barrier(ctx.shmem());
+                ar.free(env);
+                cast_slice::<f64>(&result)[0]
+            });
+            for got in out {
+                assert_eq!(got, 6.0, "k {k}");
+            }
         }
     }
 
@@ -250,18 +274,18 @@ mod tests {
         let vt = |n_elems: usize, method: AllreduceMethod| {
             run_nodes(&[16], move |env| {
                 let w = env.world();
-                let pkg = CommPackage::create(env, &w);
+                let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
                 let msize = n_elems * 8;
-                let mut win = alloc_allreduce_win(env, &pkg, msize);
+                let mut ar =
+                    ctx.allreduce_init(env, Datatype::F64, ReduceOp::Sum, msize, method, SyncScheme::Spin);
                 let vals = vec![1.0f64; n_elems];
-                let off = win.local_ptr(pkg.shmem.rank(), msize);
                 env.harness_sync(&w);
                 let t0 = env.vclock();
-                win.store(env, off, to_bytes(&vals));
-                hy_allreduce(env, &pkg, &mut win, Datatype::F64, ReduceOp::Sum, msize, method, SyncScheme::Spin);
+                ar.start_allreduce(env, to_bytes(&vals));
+                ar.wait(env);
                 let dt = env.vclock() - t0;
-                env.barrier(&pkg.shmem);
-                win.free(env, &pkg);
+                env.barrier(ctx.shmem());
+                ar.free(env);
                 dt
             })
             .into_iter()

@@ -1,21 +1,24 @@
-//! `Wrapper_Hy_Bcast` (§4.3) and the rank-translation tables.
+//! The hybrid broadcast (§4.3) behind
+//! [`HybridCtx::bcast_init`](super::ctx::HybridCtx::bcast_init), and the
+//! rank-translation tables.
 //!
 //! One shared region per node stores the broadcast payload; only the root
 //! may alter it (MPI broadcast semantics). The across-node broadcast runs
-//! over the *leaders* (message size unchanged vs pure MPI), then one
-//! yellow sync releases each node's children to read the shared copy —
-//! replacing the pure-MPI fan-out to every rank and its per-rank buffer
-//! replication.
+//! over the *leaders* — with `k > 1` each leader `j` broadcasts stripe
+//! `j` of the payload over its same-index bridge on its own NIC lane —
+//! then one yellow sync releases each node's children to read the shared
+//! copy, replacing the pure-MPI fan-out to every rank and its per-rank
+//! buffer replication.
 //!
-//! Because broadcast is *rooted* and any rank can be the root, the wrapper
-//! needs the root's rank translated into both sub-communicators — the two
-//! absolute-to-relative translation tables of `Wrapper_Get_transtable`
-//! (their one-off build cost is the quadratic Table-2 "Bcast_transtable"
-//! law).
+//! Because broadcast is *rooted* and any rank can be the root, the
+//! session needs the root's rank translated into both sub-communicators —
+//! the two absolute-to-relative translation tables of
+//! `Wrapper_Get_transtable` (their one-off build cost is the quadratic
+//! Table-2 "Bcast_transtable" law), cached on the [`HybridCtx`].
 
-use super::package::CommPackage;
+use super::ctx::HybridCtx;
 use super::shmem::HyWin;
-use super::sync::{await_release, red_sync, release, SyncScheme};
+use super::sync::{complete, red_sync, SyncScheme};
 use crate::coll::bcast::{bcast, BcastAlgo};
 use crate::mpi::env::ProcEnv;
 
@@ -32,9 +35,10 @@ pub struct TransTables {
 impl TransTables {
     /// `Wrapper_Get_transtable`. One-off cost: quadratic in the parent
     /// size (naive per-rank group scans — the measured Table-2 behaviour).
-    pub fn create(env: &mut ProcEnv, pkg: &CommPackage) -> TransTables {
+    /// Prefer the cached [`HybridCtx::tables`].
+    pub fn create(env: &mut ProcEnv, ctx: &HybridCtx) -> TransTables {
         let topo = env.topo();
-        let members = pkg.parent.members();
+        let members = ctx.parent().members();
         let mut nodes: Vec<usize> = members.iter().map(|&w| topo.node_of(w)).collect();
         nodes.sort_unstable();
         nodes.dedup();
@@ -49,51 +53,57 @@ impl TransTables {
             bridge.push(bridge_idx);
         }
         let mgmt = env.state().mgmt.clone();
-        env.advance(mgmt.transtable_us(pkg.parent.size()));
+        env.advance(mgmt.transtable_us(ctx.parent().size()));
         TransTables { shmem, bridge }
     }
 }
 
-/// `Wrapper_Hy_Bcast`: broadcast `data` (present only at `root`, a parent
-/// rank) to all ranks. After the call every rank can read the payload at
-/// offset 0 of the node's shared window (the returned `bcast_addr` of the
-/// paper's interface); `len` is the payload size in bytes.
-pub fn hy_bcast(
+/// Complete a started broadcast (payload already stored at offset 0 of
+/// the root's node window); afterwards every rank can read the payload at
+/// offset 0 of its node's shared window. With `k = 1` (empty
+/// `vec_stripes`) this is byte- and vtime-identical to the pre-session
+/// `Wrapper_Hy_Bcast`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run(
     env: &mut ProcEnv,
-    pkg: &CommPackage,
+    ctx: &HybridCtx,
     win: &mut HyWin,
     tables: &TransTables,
+    vec_stripes: &[(usize, usize)],
     root: usize,
-    data: Option<&[u8]>,
     len: usize,
     scheme: SyncScheme,
 ) {
-    let me = pkg.parent.rank();
     let root_node = tables.bridge[root];
-    let root_is_leader = tables.shmem[root] == 0;
+    let root_is_primary = tables.shmem[root] == 0;
+    let k = ctx.leaders_per_node();
 
-    // The root stores the payload into its node's shared region (only the
-    // root is eligible to alter the broadcast data, §4.3).
-    if me == root {
-        let d = data.expect("root must supply the broadcast payload");
-        assert_eq!(d.len(), len);
-        win.store(env, 0, d);
-    }
-    // If the root is a child, its leader must observe the payload before
-    // forwarding across the bridge: red sync on the root's node.
-    if !root_is_leader && tables.bridge[me] == root_node {
-        red_sync(env, pkg);
+    // The root's node leaders must observe the payload before forwarding
+    // across the bridge: red sync on the root's node whenever the root is
+    // a child — or whenever k > 1 (leaders 1..k read what the root, even
+    // root = leader 0, stored).
+    if (!root_is_primary || k > 1) && ctx.node_index() == root_node {
+        red_sync(env, ctx);
     }
     // Leaders broadcast across the bridge, rooted at the root's node.
-    if let Some(bridge) = &pkg.bridge {
+    if let Some(j) = ctx.leader_index() {
+        let bridge = ctx.bridge().expect("leaders hold a bridge").clone();
         if bridge.size() > 1 {
-            let buf = unsafe { win.win.slice_mut(0, len) };
-            bcast(env, bridge, root_node, buf, BcastAlgo::Auto);
+            if vec_stripes.is_empty() {
+                let buf = unsafe { win.win.slice_mut(0, len) };
+                bcast(env, &bridge, root_node, buf, BcastAlgo::Auto);
+            } else {
+                let (off, slen) = vec_stripes[j];
+                if slen > 0 {
+                    let buf = unsafe { win.win.slice_mut(off, slen) };
+                    env.with_nic_lane(j, |env| {
+                        bcast(env, &bridge, root_node, buf, BcastAlgo::Auto);
+                    });
+                }
+            }
         }
-        release(env, pkg, win, scheme);
-    } else {
-        await_release(env, pkg, win, scheme);
     }
+    complete(env, ctx, win, scheme);
     // All ranks may now read the single shared copy (children perform no
     // explicit copy here — they read in place via the local pointer).
 }
@@ -102,54 +112,64 @@ pub fn hy_bcast(
 mod tests {
     use super::*;
     use crate::coll::testutil::{payload, run_nodes};
+    use crate::hybrid::LeaderPolicy;
 
-    fn check_bcast(nodes: &'static [usize], len: usize, root: usize, scheme: SyncScheme) {
+    fn check_bcast(nodes: &'static [usize], len: usize, root: usize, k: usize, scheme: SyncScheme) {
         let out = run_nodes(nodes, move |env| {
             let w = env.world();
-            let pkg = CommPackage::create(env, &w);
-            let mut win = pkg.alloc_shared(env, len, 1, 1);
-            let tables = TransTables::create(env, &pkg);
+            let ctx = HybridCtx::create(env, &w, LeaderPolicy::Leaders(k));
+            let mut bc = ctx.bcast_init(env, len, scheme);
             let data = payload(root, len);
-            let arg = if w.rank() == root { Some(&data[..]) } else { None };
-            hy_bcast(env, &pkg, &mut win, &tables, root, arg, len, scheme);
-            let got = win.load(env, 0, len);
-            env.barrier(&pkg.shmem);
-            win.free(env, &pkg);
+            let arg = (w.rank() == root).then_some(&data[..]);
+            bc.start_bcast(env, root, arg);
+            bc.wait(env);
+            let got = bc.window().unwrap().load(env, 0, len);
+            env.barrier(ctx.shmem());
+            bc.free(env);
             got
         });
         let expect = payload(root, len);
         for (r, got) in out.into_iter().enumerate() {
-            assert_eq!(got, expect, "nodes {nodes:?} root {root} rank {r}");
+            assert_eq!(got, expect, "nodes {nodes:?} root {root} k {k} rank {r}");
         }
     }
 
     #[test]
     fn roots_leader_and_child() {
-        check_bcast(&[5, 3], 64, 0, SyncScheme::Spin); // root = leader of node 0
-        check_bcast(&[5, 3], 64, 5, SyncScheme::Spin); // root = leader of node 1
-        check_bcast(&[5, 3], 64, 2, SyncScheme::Spin); // root = child on node 0
-        check_bcast(&[5, 3], 64, 7, SyncScheme::Spin); // root = child on node 1
-        check_bcast(&[5, 3], 64, 7, SyncScheme::Barrier);
+        check_bcast(&[5, 3], 64, 0, 1, SyncScheme::Spin); // root = leader of node 0
+        check_bcast(&[5, 3], 64, 5, 1, SyncScheme::Spin); // root = leader of node 1
+        check_bcast(&[5, 3], 64, 2, 1, SyncScheme::Spin); // root = child on node 0
+        check_bcast(&[5, 3], 64, 7, 1, SyncScheme::Spin); // root = child on node 1
+        check_bcast(&[5, 3], 64, 7, 1, SyncScheme::Barrier);
+    }
+
+    #[test]
+    fn multi_leader_roots_everywhere() {
+        for root in [0usize, 1, 4, 7] {
+            check_bcast(&[5, 3], 64, root, 2, SyncScheme::Spin);
+            check_bcast(&[5, 3], 64, root, 3, SyncScheme::Barrier);
+        }
     }
 
     #[test]
     fn three_nodes_and_large_payload() {
-        check_bcast(&[3, 3, 2], 300 * 1024, 4, SyncScheme::Spin);
+        check_bcast(&[3, 3, 2], 300 * 1024, 4, 1, SyncScheme::Spin);
+        check_bcast(&[3, 3, 2], 300 * 1024, 4, 2, SyncScheme::Spin);
     }
 
     #[test]
     fn single_node() {
-        check_bcast(&[4], 128, 2, SyncScheme::Spin);
-        check_bcast(&[4], 128, 0, SyncScheme::Barrier);
+        check_bcast(&[4], 128, 2, 1, SyncScheme::Spin);
+        check_bcast(&[4], 128, 0, 2, SyncScheme::Barrier);
     }
 
     #[test]
     fn transtables_shape() {
         let out = run_nodes(&[5, 3], |env| {
             let w = env.world();
-            let pkg = CommPackage::create(env, &w);
-            let t = TransTables::create(env, &pkg);
-            (t.shmem, t.bridge)
+            let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+            let t = ctx.tables(env);
+            (t.shmem.clone(), t.bridge.clone())
         });
         for (shmem, bridge) in out {
             assert_eq!(shmem, vec![0, 1, 2, 3, 4, 0, 1, 2]);
@@ -164,17 +184,17 @@ mod tests {
         let len = 512 * 1024;
         let hybrid = run_nodes(nodes, move |env| {
             let w = env.world();
-            let pkg = CommPackage::create(env, &w);
-            let mut win = pkg.alloc_shared(env, len, 1, 1);
-            let tables = TransTables::create(env, &pkg);
+            let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+            let mut bc = ctx.bcast_init(env, len, SyncScheme::Spin);
             let data = vec![7u8; len];
             env.harness_sync(&w);
             let t0 = env.vclock();
-            let arg = if w.rank() == 0 { Some(&data[..]) } else { None };
-            hy_bcast(env, &pkg, &mut win, &tables, 0, arg, len, SyncScheme::Spin);
+            let arg = (w.rank() == 0).then_some(&data[..]);
+            bc.start_bcast(env, 0, arg);
+            bc.wait(env);
             let dt = env.vclock() - t0;
-            env.barrier(&pkg.shmem);
-            win.free(env, &pkg);
+            env.barrier(ctx.shmem());
+            bc.free(env);
             dt
         })
         .into_iter()

@@ -1,0 +1,958 @@
+//! The hybrid-collective **session** API: one context object, persistent
+//! per-collective handles.
+//!
+//! The paper's §4 wrappers grew here as a pile of free functions, each
+//! with its own setup object (`CommPackage`, `AllgatherParam`,
+//! `TransTables`, `alloc_*_win`) — exactly the leaked design detail §4
+//! warns the user-facing API against. [`HybridCtx`] folds all of it
+//! behind two calls:
+//!
+//! ```text
+//! let ctx = HybridCtx::create(env, &comm, LeaderPolicy::Leaders(2));
+//! let mut ag = ctx.allgather_init(env, msg, SyncScheme::Spin);   // one-off
+//! loop {
+//!     ag.start_allgather(env, my_block);   // stage operand (local)
+//!     ag.wait(env);                        // sync + bridge + release
+//!     // read the gathered result in place: ag.result_view(..)
+//! }
+//! ag.free(env);
+//! ```
+//!
+//! `*_init` is collective and binds *everything* one-off: communicator
+//! splits (done once per context), the shared window, size sets,
+//! translation tables, bridge recvcounts/displs, sync-scheme and step-1
+//! method selection — the `MPI_Allreduce_init` persistent-collective
+//! shape. `start/wait` is the steady-state pair the paper measures.
+//!
+//! ## Multi-leader bridges (arXiv 2007.06892)
+//!
+//! A context owns a generalized **leader set**: `k ≥ 1` leaders per node
+//! (the `k` lowest node-local ranks; `k` is clamped to the smallest node
+//! population so every bridge has exactly one member per node). Leader
+//! `j` joins bridge communicator `j` — over the `j`-th leaders of every
+//! node — and every hybrid collective's bridge step stripes its per-node
+//! payload across the leader set: leader `j` moves stripe `j` of each
+//! node block, bound to NIC lane `j % nic_lanes` so the stripes genuinely
+//! overlap on the wire ([`NetModel::nic_lanes`]). With `k = 1` every code
+//! path, message and virtual-time charge is bit-identical to the
+//! pre-session single-leader implementation (the deprecated
+//! [`CommPackage`](super::package::CommPackage) shim is a thin wrapper
+//! over this case).
+//!
+//! [`NetModel::nic_lanes`]: crate::mpi::net::NetModel::nic_lanes
+
+use super::allgather::AllgatherParam;
+use super::allreduce::{AllreduceMethod, METHOD_CUTOFF_BYTES};
+use super::bcast::TransTables;
+use super::shmem::HyWin;
+use super::sync::SyncScheme;
+use crate::mpi::comm::UNDEFINED;
+use crate::mpi::env::ProcEnv;
+use crate::mpi::topo::Placement;
+use crate::mpi::{Communicator, Datatype, ReduceOp};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// How many leaders each node contributes to the bridge step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LeaderPolicy {
+    /// One leader per node — the paper's §4 configuration.
+    Single,
+    /// `k` leaders per node (clamped to the smallest node population of
+    /// the parent communicator, so every same-index bridge has exactly
+    /// one member per node even on §5.2.2 irregular shapes).
+    Leaders(usize),
+}
+
+impl LeaderPolicy {
+    /// The requested leader count (≥ 1, before clamping).
+    pub fn requested(self) -> usize {
+        match self {
+            LeaderPolicy::Single => 1,
+            LeaderPolicy::Leaders(k) => k.max(1),
+        }
+    }
+}
+
+/// One leader's view of the striped bridge layout: for each node `i`,
+/// `counts[i]` bytes of that node's block starting at window offset
+/// `offsets[i]`. Built once at `*_init` time, indexed by bridge rank.
+pub(crate) struct StripeTable {
+    pub(crate) counts: Vec<usize>,
+    pub(crate) offsets: Vec<usize>,
+}
+
+/// Stripe `j` of `k` over `len` bytes in `align`-byte units:
+/// `(offset, len)` with balanced integer division (the last stripe
+/// absorbs the remainder; `len` must be a multiple of `align`).
+pub(crate) fn stripe_bounds(len: usize, k: usize, j: usize, align: usize) -> (usize, usize) {
+    debug_assert_eq!(len % align, 0);
+    let units = len / align;
+    let lo = units * j / k * align;
+    let hi = units * (j + 1) / k * align;
+    (lo, hi - lo)
+}
+
+/// The hybrid session context: the two-level (node + `k` bridges)
+/// communicator split of one parent communicator, plus the cached one-off
+/// wrapper state every persistent collective on it shares.
+pub struct HybridCtx {
+    parent: Communicator,
+    shmem: Communicator,
+    /// Effective leaders per node (requested, clamped ≥1 and ≤ smallest
+    /// node population).
+    k: usize,
+    /// My leader index `j` (= my node-local rank) if I am one of the
+    /// node's `k` leaders.
+    my_leader: Option<usize>,
+    /// My same-index bridge communicator (`Some` on leaders only; its
+    /// rank is my node's index among the parent's nodes).
+    bridge: Option<Communicator>,
+    /// Node-local leader group (`Some` on leaders only, and only when
+    /// `k > 1` — the `k = 1` session charges exactly the pre-session
+    /// two splits).
+    leaders: Option<Communicator>,
+    shmem_size: usize,
+    /// Number of nodes hosting members of `parent` (= every bridge's
+    /// size; known on children too, unlike raw MPI).
+    bridge_size: usize,
+    /// My node's index among the parent's nodes (= my bridge rank on
+    /// leaders; valid on children too).
+    my_node_index: usize,
+    /// Per-node parent populations in node-index order, derived from the
+    /// topology (uncharged — the library knows the layout natively).
+    populations: Vec<usize>,
+    /// Cached `Wrapper_ShmemcommSizeset_gather` result (charged once).
+    sizeset: RefCell<Option<Rc<Vec<usize>>>>,
+    /// Cached `Wrapper_Get_transtable` result (charged once).
+    tables: RefCell<Option<Rc<TransTables>>>,
+}
+
+impl HybridCtx {
+    /// Create the session: split `parent` into the node-level
+    /// communicator and `k` same-index bridge communicators (plus, for
+    /// `k > 1`, the node-local leader group). Collective over `parent`.
+    ///
+    /// One-off cost: `1 + k` `MPI_Comm_split`s (the Table-2
+    /// "Communicator" law per split; `k = 1` charges exactly the two
+    /// splits of the paper's `Wrapper_MPI_ShmemBridgeComm_create`), plus
+    /// one more split for the leader group when `k > 1`.
+    pub fn create(env: &mut ProcEnv, parent: &Communicator, policy: LeaderPolicy) -> Rc<HybridCtx> {
+        let shmem = env.split_type_shared(parent);
+        let (populations, my_node_index) = {
+            let topo = env.topo();
+            let my_node = topo.node_of(env.world_rank());
+            let mut nodes: Vec<usize> =
+                parent.members().iter().map(|&w| topo.node_of(w)).collect();
+            nodes.sort_unstable();
+            nodes.dedup();
+            let pops: Vec<usize> = nodes
+                .iter()
+                .map(|&n| parent.members().iter().filter(|&&w| topo.node_of(w) == n).count())
+                .collect();
+            let idx = nodes.iter().position(|&n| n == my_node).expect("my node hosts me");
+            (pops, idx)
+        };
+        // Same rule as `effective_leaders`, reusing the populations
+        // already derived above instead of a second member scan.
+        let k = clamp_leaders(
+            policy.requested(),
+            *populations.iter().min().expect("nodes are non-empty"),
+        );
+        let my_leader = (shmem.rank() < k).then_some(shmem.rank());
+        let mut bridge = None;
+        for j in 0..k {
+            let color = if shmem.rank() == j { 0 } else { UNDEFINED };
+            let c = env.split(parent, color, parent.rank() as i64);
+            if shmem.rank() == j {
+                bridge = c;
+            }
+        }
+        let leaders = if k > 1 {
+            let color = if shmem.rank() < k { my_node_index as i64 } else { UNDEFINED };
+            env.split(parent, color, parent.rank() as i64)
+        } else {
+            None
+        };
+        Rc::new(HybridCtx {
+            parent: parent.clone(),
+            shmem_size: shmem.size(),
+            bridge_size: populations.len(),
+            shmem,
+            k,
+            my_leader,
+            bridge,
+            leaders,
+            my_node_index,
+            populations,
+            sizeset: RefCell::new(None),
+            tables: RefCell::new(None),
+        })
+    }
+
+    /// The effective (clamped) leader count a session over `comm` uses
+    /// for `requested` leaders per node: at least 1, at most the
+    /// smallest per-node population of `comm`'s members. What
+    /// [`HybridCtx::create`] applies and what the plan cache keys its
+    /// sessions by.
+    pub fn effective_leaders(env: &ProcEnv, comm: &Communicator, requested: usize) -> usize {
+        let topo = env.topo();
+        let mut pops: HashMap<usize, usize> = HashMap::new();
+        for &w in comm.members() {
+            *pops.entry(topo.node_of(w)).or_insert(0) += 1;
+        }
+        clamp_leaders(requested, pops.values().copied().min().unwrap_or(1))
+    }
+
+    // ---- identity ---------------------------------------------------------
+
+    /// The parent communicator this session was derived from.
+    pub fn parent(&self) -> &Communicator {
+        &self.parent
+    }
+
+    /// Node-level communicator (`MPI_Comm_split_type(…SHARED…)`).
+    pub fn shmem(&self) -> &Communicator {
+        &self.shmem
+    }
+
+    /// My same-index bridge communicator (`Some` on leaders only).
+    pub fn bridge(&self) -> Option<&Communicator> {
+        self.bridge.as_ref()
+    }
+
+    /// The node-local leader group (`Some` on leaders when `k > 1`).
+    pub(crate) fn leaders(&self) -> Option<&Communicator> {
+        self.leaders.as_ref()
+    }
+
+    /// Effective leaders per node (requested, clamped to the smallest
+    /// node population).
+    pub fn leaders_per_node(&self) -> usize {
+        self.k
+    }
+
+    /// My leader index `j ∈ 0..k`, or `None` on children.
+    pub fn leader_index(&self) -> Option<usize> {
+        self.my_leader
+    }
+
+    /// Am I the node's *primary* leader (leader 0 — the rank that
+    /// allocates windows and posts the yellow-sync release)?
+    pub fn is_leader(&self) -> bool {
+        self.my_leader == Some(0)
+    }
+
+    /// `shmemcomm_size`.
+    pub fn shmem_size(&self) -> usize {
+        self.shmem_size
+    }
+
+    /// Number of nodes hosting members of the parent (= bridge size).
+    pub fn nnodes(&self) -> usize {
+        self.bridge_size
+    }
+
+    /// My node's index among the parent's nodes (= my bridge rank on
+    /// leaders; valid on children too).
+    pub fn node_index(&self) -> usize {
+        self.my_node_index
+    }
+
+    // ---- cached one-off wrapper state -------------------------------------
+
+    /// `Wrapper_ShmemcommSizeset_gather`, cached: every node's
+    /// shared-memory communicator size. The primary leaders pay one real
+    /// bridge allgather the first time (the wrapper's traffic); everyone
+    /// else derives the identical values from the topology.
+    pub fn sizeset(&self, env: &mut ProcEnv) -> Rc<Vec<usize>> {
+        if let Some(s) = self.sizeset.borrow().as_ref() {
+            return s.clone();
+        }
+        let s = Rc::new(if self.my_leader == Some(0) {
+            let bridge = self.bridge.as_ref().expect("leaders hold a bridge");
+            let mine = (self.shmem_size as u64).to_le_bytes();
+            let mut out = vec![0u8; 8 * bridge.size()];
+            crate::coll::allgather(env, bridge, &mine, &mut out, crate::coll::AllgatherAlgo::Bruck);
+            out.chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+                .collect()
+        } else {
+            self.populations.clone()
+        });
+        *self.sizeset.borrow_mut() = Some(s.clone());
+        s
+    }
+
+    /// `Wrapper_Get_transtable`, cached: the absolute→relative rank
+    /// translation tables of the rooted collectives (one-off cost: the
+    /// quadratic Table-2 law, charged on first use).
+    pub fn tables(&self, env: &mut ProcEnv) -> Rc<TransTables> {
+        if let Some(t) = self.tables.borrow().as_ref() {
+            return t.clone();
+        }
+        let t = Rc::new(TransTables::create(env, self));
+        *self.tables.borrow_mut() = Some(t.clone());
+        t
+    }
+
+    /// `Wrapper_MPI_Sharedmemory_alloc(msize, bsize, flag, …)`: the
+    /// primary leader allocates `msize·bsize·flag` bytes shared by the
+    /// node; everyone else attaches. One-off cost: the Table-2 "Allocate"
+    /// law (base charge from the window allocation itself; the
+    /// multi-node saturation term charged here).
+    pub fn alloc_shared(&self, env: &mut ProcEnv, msize: usize, bsize: usize, flag: usize) -> HyWin {
+        let total = msize * bsize * flag;
+        let my_contrib = if self.is_leader() { total } else { 0 };
+        let raw = env.win_allocate_shared(&self.shmem, my_contrib);
+        let mgmt = env.state().mgmt.clone();
+        let extra = mgmt.alloc_us(self.bridge_size) - mgmt.alloc_us(1);
+        env.advance(extra.max(0.0));
+        HyWin::new(raw, total)
+    }
+
+    // ---- stripe planning --------------------------------------------------
+
+    /// Per-leader stripe tables over the per-node blocks described by
+    /// `param` (empty for `k = 1`, which runs the unstriped legacy
+    /// bridge). `align` keeps reduction stripes element-aligned.
+    fn node_stripes(&self, param: &AllgatherParam, align: usize) -> Vec<StripeTable> {
+        if self.k == 1 {
+            return Vec::new();
+        }
+        (0..self.k)
+            .map(|j| {
+                let mut counts = Vec::with_capacity(self.bridge_size);
+                let mut offsets = Vec::with_capacity(self.bridge_size);
+                for i in 0..self.bridge_size {
+                    let (lo, len) = stripe_bounds(param.recvcounts[i], self.k, j, align);
+                    counts.push(len);
+                    offsets.push(param.displs[i] + lo);
+                }
+                StripeTable { counts, offsets }
+            })
+            .collect()
+    }
+
+    /// Per-leader `(offset, len)` stripes over one `len`-byte vector
+    /// (empty for `k = 1`).
+    fn vec_stripes(&self, len: usize, align: usize) -> Vec<(usize, usize)> {
+        if self.k == 1 {
+            return Vec::new();
+        }
+        (0..self.k).map(|j| stripe_bounds(len, self.k, j, align)).collect()
+    }
+
+    /// Extra one-off bookkeeping for the additional `k − 1` stripe
+    /// tables, charged per the same Table-2 parameter law as the first.
+    fn charge_stripe_tables(&self, env: &mut ProcEnv) {
+        if self.k > 1 {
+            let mgmt = env.state().mgmt.clone();
+            env.advance(mgmt.allgather_param_us(self.bridge_size) * (self.k - 1) as f64);
+        }
+    }
+
+    // ---- persistent-collective inits --------------------------------------
+
+    /// Persistent hybrid allgather: every `start` stages the caller's
+    /// `count`-byte block at its parent-rank slot; `wait` completes the
+    /// collective and leaves the rank-ordered result at window offset 0.
+    pub fn allgather_init(self: &Rc<Self>, env: &mut ProcEnv, count: usize, scheme: SyncScheme) -> HyColl {
+        assert_block_placement(env, "allgather");
+        let sizeset = self.sizeset(env);
+        let param = AllgatherParam::create(env, self, count, &sizeset);
+        let win = self.alloc_shared(env, count, 1, self.parent.size());
+        let stripes = self.node_stripes(&param, 1);
+        self.charge_stripe_tables(env);
+        HyColl {
+            ctx: self.clone(),
+            op: HyOp::Allgather,
+            count,
+            dtype: Datatype::U8,
+            rop: None,
+            scheme,
+            method: AllreduceMethod::Method1,
+            win: Some(win),
+            param: Some(param),
+            tables: None,
+            sizeset: Vec::new(),
+            stripes,
+            vec_stripes: Vec::new(),
+            started: false,
+            pending_root: 0,
+        }
+    }
+
+    /// Persistent hybrid broadcast of `len`-byte payloads. The root is
+    /// bound per `start` (the window and translation tables are
+    /// root-independent — a documented deviation from
+    /// `MPI_Bcast_init`, which SUMMA's rotating-root phases rely on).
+    pub fn bcast_init(self: &Rc<Self>, env: &mut ProcEnv, len: usize, scheme: SyncScheme) -> HyColl {
+        let tables = self.tables(env);
+        let win = self.alloc_shared(env, len, 1, 1);
+        let vec_stripes = self.vec_stripes(len, 1);
+        HyColl {
+            ctx: self.clone(),
+            op: HyOp::Bcast,
+            count: len,
+            dtype: Datatype::U8,
+            rop: None,
+            scheme,
+            method: AllreduceMethod::Method1,
+            win: Some(win),
+            param: None,
+            tables: Some(tables),
+            sizeset: Vec::new(),
+            stripes: Vec::new(),
+            vec_stripes,
+            started: false,
+            pending_root: 0,
+        }
+    }
+
+    /// Persistent hybrid allreduce of `msize`-byte operands. `method`
+    /// selects the §5.2.4 step-1 implementation; [`AllreduceMethod::Tuned`]
+    /// resolves the 2 KB cutoff here, once.
+    pub fn allreduce_init(
+        self: &Rc<Self>,
+        env: &mut ProcEnv,
+        dtype: Datatype,
+        rop: ReduceOp,
+        msize: usize,
+        method: AllreduceMethod,
+        scheme: SyncScheme,
+    ) -> HyColl {
+        assert_eq!(msize % dtype.size(), 0);
+        let method = resolve_method(method, msize);
+        let win = self.alloc_shared(env, msize, 1, self.shmem_size + 2);
+        let vec_stripes = self.vec_stripes(msize, dtype.size());
+        HyColl {
+            ctx: self.clone(),
+            op: HyOp::Allreduce,
+            count: msize,
+            dtype,
+            rop: Some(rop),
+            scheme,
+            method,
+            win: Some(win),
+            param: None,
+            tables: None,
+            sizeset: Vec::new(),
+            stripes: Vec::new(),
+            vec_stripes,
+            started: false,
+            pending_root: 0,
+        }
+    }
+
+    /// Persistent hybrid reduce-scatter with `count`-byte result blocks.
+    pub fn reduce_scatter_init(
+        self: &Rc<Self>,
+        env: &mut ProcEnv,
+        dtype: Datatype,
+        rop: ReduceOp,
+        count: usize,
+        method: AllreduceMethod,
+        scheme: SyncScheme,
+    ) -> HyColl {
+        assert_block_placement(env, "reduce_scatter");
+        assert_eq!(count % dtype.size(), 0);
+        let total = count * self.parent.size();
+        let method = resolve_method(method, total);
+        let sizeset = self.sizeset(env);
+        let win = self.alloc_shared(env, total, 1, self.shmem_size + 2);
+        // Per-node bridge blocks: node i contributes sizeset[i]·count.
+        let node_counts: Vec<usize> = sizeset.iter().map(|&s| s * count).collect();
+        let param = AllgatherParam {
+            displs: crate::coll::displs_of(&node_counts),
+            recvcounts: node_counts,
+        };
+        let stripes = self.node_stripes(&param, dtype.size());
+        let vec_stripes = self.vec_stripes(total, dtype.size());
+        self.charge_stripe_tables(env);
+        HyColl {
+            ctx: self.clone(),
+            op: HyOp::ReduceScatter,
+            count,
+            dtype,
+            rop: Some(rop),
+            scheme,
+            method,
+            win: Some(win),
+            param: Some(param),
+            tables: None,
+            sizeset: sizeset.to_vec(),
+            stripes,
+            vec_stripes,
+            started: false,
+            pending_root: 0,
+        }
+    }
+
+    /// Persistent hybrid gather of `count`-byte blocks (root bound per
+    /// `start`, like [`HybridCtx::bcast_init`]).
+    pub fn gather_init(self: &Rc<Self>, env: &mut ProcEnv, count: usize, scheme: SyncScheme) -> HyColl {
+        assert_block_placement(env, "gather");
+        let sizeset = self.sizeset(env);
+        let param = AllgatherParam::create(env, self, count, &sizeset);
+        let tables = self.tables(env);
+        let win = self.alloc_shared(env, count, 1, self.parent.size());
+        let stripes = self.node_stripes(&param, 1);
+        self.charge_stripe_tables(env);
+        HyColl {
+            ctx: self.clone(),
+            op: HyOp::Gather,
+            count,
+            dtype: Datatype::U8,
+            rop: None,
+            scheme,
+            method: AllreduceMethod::Method1,
+            win: Some(win),
+            param: Some(param),
+            tables: Some(tables),
+            sizeset: Vec::new(),
+            stripes,
+            vec_stripes: Vec::new(),
+            started: false,
+            pending_root: 0,
+        }
+    }
+
+    /// Persistent hybrid scatter of `count`-byte blocks (root bound per
+    /// `start`).
+    pub fn scatter_init(self: &Rc<Self>, env: &mut ProcEnv, count: usize, scheme: SyncScheme) -> HyColl {
+        assert_block_placement(env, "scatter");
+        let sizeset = self.sizeset(env);
+        let param = AllgatherParam::create(env, self, count, &sizeset);
+        let tables = self.tables(env);
+        let win = self.alloc_shared(env, count, 1, self.parent.size());
+        let stripes = self.node_stripes(&param, 1);
+        self.charge_stripe_tables(env);
+        HyColl {
+            ctx: self.clone(),
+            op: HyOp::Scatter,
+            count,
+            dtype: Datatype::U8,
+            rop: None,
+            scheme,
+            method: AllreduceMethod::Method1,
+            win: Some(win),
+            param: Some(param),
+            tables: Some(tables),
+            sizeset: Vec::new(),
+            stripes,
+            vec_stripes: Vec::new(),
+            started: false,
+            pending_root: 0,
+        }
+    }
+}
+
+/// The one clamp rule: ≥ 1, ≤ the smallest node population.
+fn clamp_leaders(requested: usize, min_population: usize) -> usize {
+    requested.max(1).min(min_population.max(1))
+}
+
+fn assert_block_placement(env: &ProcEnv, op: &str) {
+    assert_eq!(
+        env.topo().placement(),
+        Placement::Block,
+        "hybrid {op} assumes block-style rank placement (§4); \
+         see [20] for the measures other placements require"
+    );
+}
+
+fn resolve_method(method: AllreduceMethod, bytes: usize) -> AllreduceMethod {
+    match method {
+        AllreduceMethod::Tuned => {
+            if bytes <= METHOD_CUTOFF_BYTES {
+                AllreduceMethod::Method2
+            } else {
+                AllreduceMethod::Method1
+            }
+        }
+        m => m,
+    }
+}
+
+/// Which collective a [`HyColl`] executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HyOp {
+    Allgather,
+    Bcast,
+    Allreduce,
+    ReduceScatter,
+    Gather,
+    Scatter,
+}
+
+/// A persistent hybrid collective handle (the `MPI_Allreduce_init`
+/// shape): all one-off state — shared window, bridge parameters, stripe
+/// tables, translation tables, resolved step-1 method, sync scheme — is
+/// bound at `*_init`; each invocation is a [`start_*`](HyColl::start_allgather)
+/// (stage operands into the window) followed by [`HyColl::wait`]
+/// (node sync + striped bridge + release). Teardown with
+/// [`HyColl::free`] — collective, like `MPI_Request_free` on a
+/// persistent collective.
+pub struct HyColl {
+    ctx: Rc<HybridCtx>,
+    op: HyOp,
+    /// The op's natural per-rank unit in bytes (block size, payload
+    /// size, operand size, or result-block size).
+    count: usize,
+    dtype: Datatype,
+    rop: Option<ReduceOp>,
+    scheme: SyncScheme,
+    /// Resolved step-1 method (reduce family; never `Tuned` here).
+    method: AllreduceMethod,
+    win: Option<HyWin>,
+    /// Bridge recvcounts/displs: per-rank blocks (allgather/gather/
+    /// scatter) or per-node blocks (reduce_scatter).
+    param: Option<AllgatherParam>,
+    tables: Option<Rc<TransTables>>,
+    sizeset: Vec<usize>,
+    /// Per-leader per-node bridge stripes (empty for `k = 1`).
+    stripes: Vec<StripeTable>,
+    /// Per-leader stripes over the operand vector / payload (empty for
+    /// `k = 1`).
+    vec_stripes: Vec<(usize, usize)>,
+    started: bool,
+    pending_root: usize,
+}
+
+impl HyColl {
+    /// The session this handle belongs to.
+    pub fn ctx(&self) -> &Rc<HybridCtx> {
+        &self.ctx
+    }
+
+    /// The op's per-rank unit size in bytes.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// The backing shared window (the paper's `Wrapper_Get_localpointer`
+    /// surface, e.g. for in-place initialization of a gathered table).
+    pub fn window(&self) -> Option<&HyWin> {
+        self.win.as_ref()
+    }
+
+    fn win_mut(&mut self) -> &mut HyWin {
+        self.win.as_mut().expect("HyColl already freed")
+    }
+
+    fn begin(&mut self, op: HyOp) {
+        assert_eq!(self.op, op, "HyColl start/op mismatch");
+        assert!(!self.started, "HyColl started twice without wait");
+        self.started = true;
+    }
+
+    // ---- start: stage operands (local stores only) ------------------------
+
+    /// Stage my `count`-byte allgather block at my parent-rank slot.
+    pub fn start_allgather(&mut self, env: &mut ProcEnv, send: &[u8]) {
+        self.begin(HyOp::Allgather);
+        assert_eq!(send.len(), self.count);
+        let me = self.ctx.parent().rank();
+        let count = self.count;
+        let win = self.win_mut();
+        let off = win.local_ptr(me, count);
+        win.store(env, off, send);
+    }
+
+    /// Stage the broadcast payload (`Some` at `root`, `None` elsewhere).
+    pub fn start_bcast(&mut self, env: &mut ProcEnv, root: usize, data: Option<&[u8]>) {
+        self.begin(HyOp::Bcast);
+        self.pending_root = root;
+        if self.ctx.parent().rank() == root {
+            let d = data.expect("root must supply the broadcast payload");
+            assert_eq!(d.len(), self.count);
+            self.win_mut().store(env, 0, d);
+        }
+    }
+
+    /// Stage my allreduce operand at my node-local slot.
+    pub fn start_allreduce(&mut self, env: &mut ProcEnv, operand: &[u8]) {
+        self.begin(HyOp::Allreduce);
+        assert_eq!(operand.len(), self.count);
+        let slot = self.ctx.shmem().rank();
+        let count = self.count;
+        let win = self.win_mut();
+        let off = win.local_ptr(slot, count);
+        win.store(env, off, operand);
+    }
+
+    /// Stage my full reduce-scatter vector (`count·p` bytes) at my
+    /// node-local slot.
+    pub fn start_reduce_scatter(&mut self, env: &mut ProcEnv, send: &[u8]) {
+        self.begin(HyOp::ReduceScatter);
+        let total = self.count * self.ctx.parent().size();
+        assert_eq!(send.len(), total);
+        let slot = self.ctx.shmem().rank();
+        let win = self.win_mut();
+        let off = win.local_ptr(slot, total);
+        win.store(env, off, send);
+    }
+
+    /// Stage my `count`-byte gather block at my parent-rank slot.
+    pub fn start_gather(&mut self, env: &mut ProcEnv, root: usize, send: &[u8]) {
+        self.begin(HyOp::Gather);
+        self.pending_root = root;
+        assert_eq!(send.len(), self.count);
+        let me = self.ctx.parent().rank();
+        let count = self.count;
+        let win = self.win_mut();
+        let off = win.local_ptr(me, count);
+        win.store(env, off, send);
+    }
+
+    /// Stage the scatter send buffer (`Some`, `count·p` bytes, at `root`;
+    /// `None` elsewhere).
+    pub fn start_scatter(&mut self, env: &mut ProcEnv, root: usize, send: Option<&[u8]>) {
+        self.begin(HyOp::Scatter);
+        self.pending_root = root;
+        if self.ctx.parent().rank() == root {
+            let d = send.expect("root must supply the scatter payload");
+            assert_eq!(d.len(), self.count * self.ctx.parent().size());
+            self.win_mut().store(env, 0, d);
+        }
+    }
+
+    // ---- wait: node sync + striped bridge + release -----------------------
+
+    /// Complete the started collective; returns the window byte offset of
+    /// this rank's result (offset 0 for allgather/bcast/gather, slot `G`
+    /// for allreduce, my reduced block for reduce-scatter, my block for
+    /// scatter).
+    pub fn wait(&mut self, env: &mut ProcEnv) -> usize {
+        assert!(self.started, "HyColl wait without start");
+        self.started = false;
+        let HyColl {
+            ctx,
+            op,
+            count,
+            dtype,
+            rop,
+            scheme,
+            method,
+            win,
+            param,
+            tables,
+            sizeset,
+            stripes,
+            vec_stripes,
+            pending_root,
+            ..
+        } = self;
+        let ctx = &**ctx;
+        let win = win.as_mut().expect("HyColl already freed");
+        let count = *count;
+        let root = *pending_root;
+        match op {
+            HyOp::Allgather => {
+                let param = param.as_ref().expect("allgather binds params");
+                super::allgather::run(env, ctx, win, param, stripes, *scheme);
+                0
+            }
+            HyOp::Bcast => {
+                let tables = tables.as_ref().expect("bcast binds tables");
+                super::bcast::run(env, ctx, win, tables, vec_stripes, root, count, *scheme);
+                0
+            }
+            HyOp::Allreduce => super::allreduce::run(
+                env,
+                ctx,
+                win,
+                *dtype,
+                rop.expect("allreduce binds an op"),
+                count,
+                *method,
+                vec_stripes,
+                *scheme,
+            ),
+            HyOp::ReduceScatter => super::reduce_scatter::run(
+                env,
+                ctx,
+                win,
+                sizeset,
+                *dtype,
+                rop.expect("reduce_scatter binds an op"),
+                count,
+                *method,
+                vec_stripes,
+                stripes,
+                *scheme,
+            ),
+            HyOp::Gather => {
+                let param = param.as_ref().expect("gather binds params");
+                let tables = tables.as_ref().expect("gather binds tables");
+                super::gather::run(env, ctx, win, param, tables, stripes, root, count, *scheme);
+                0
+            }
+            HyOp::Scatter => {
+                let param = param.as_ref().expect("scatter binds params");
+                let tables = tables.as_ref().expect("scatter binds tables");
+                super::scatter::run(env, ctx, win, param, tables, stripes, root, *scheme);
+                ctx.parent().rank() * count
+            }
+        }
+    }
+
+    /// Zero-copy view of the result region (valid after [`HyColl::wait`]
+    /// returns and until the next `start` on this handle):
+    /// allgather/bcast/gather read at window offset 0, allreduce reads
+    /// slot `G`, reduce-scatter and scatter read the caller's own block.
+    pub fn result_view(&self, len: usize) -> Option<&[u8]> {
+        let win = self.win.as_ref()?;
+        let off = match self.op {
+            HyOp::Allgather | HyOp::Bcast | HyOp::Gather => 0,
+            HyOp::Scatter => self.ctx.parent().rank() * self.count,
+            HyOp::Allreduce => (self.ctx.shmem_size() + 1) * self.count,
+            HyOp::ReduceScatter => {
+                let total = self.count * self.ctx.parent().size();
+                (self.ctx.shmem_size() + 1) * total + self.ctx.parent().rank() * self.count
+            }
+        };
+        // Safety: protocol-level — callers read between the handle's
+        // yellow sync and the next start, per the window discipline.
+        Some(unsafe { win.win.slice(off, len) })
+    }
+
+    /// Collective teardown: frees the shared window (call symmetrically
+    /// on every member of the parent communicator).
+    pub fn free(&mut self, env: &mut ProcEnv) {
+        if let Some(win) = self.win.take() {
+            let ctx = self.ctx.clone();
+            win.free(env, &ctx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::testutil::run_nodes;
+
+    #[test]
+    fn leader_set_shapes_and_clamping() {
+        let out = run_nodes(&[5, 3], |env| {
+            let w = env.world();
+            let ctx = HybridCtx::create(env, &w, LeaderPolicy::Leaders(4));
+            (
+                env.world_rank(),
+                ctx.leaders_per_node(),
+                ctx.leader_index(),
+                ctx.bridge().map(|b| (b.size(), b.rank())),
+                ctx.node_index(),
+                ctx.shmem_size(),
+            )
+        });
+        for (wr, k, j, bridge, node_idx, shm) in out {
+            assert_eq!(k, 3, "clamped to the smallest node population");
+            let local = if wr < 5 { wr } else { wr - 5 };
+            if local < 3 {
+                assert_eq!(j, Some(local));
+                let (bsz, brank) = bridge.expect("leaders hold a bridge");
+                assert_eq!(bsz, 2);
+                assert_eq!(brank, if wr < 5 { 0 } else { 1 });
+            } else {
+                assert_eq!(j, None);
+                assert!(bridge.is_none());
+            }
+            assert_eq!(node_idx, if wr < 5 { 0 } else { 1 });
+            assert_eq!(shm, if wr < 5 { 5 } else { 3 });
+        }
+    }
+
+    #[test]
+    fn single_policy_matches_paper_shape() {
+        let out = run_nodes(&[4, 4], |env| {
+            let w = env.world();
+            let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+            (ctx.leaders_per_node(), ctx.is_leader(), ctx.leaders().is_none())
+        });
+        for (r, (k, leader, no_group)) in out.into_iter().enumerate() {
+            assert_eq!(k, 1);
+            assert_eq!(leader, r % 4 == 0);
+            assert!(no_group, "k = 1 builds no leader group (vtime parity)");
+        }
+    }
+
+    #[test]
+    fn stripe_bounds_cover_and_align() {
+        for (len, k, align) in [(100usize, 3usize, 1usize), (128, 4, 8), (24, 5, 8), (7, 2, 1)] {
+            let mut covered = 0usize;
+            for j in 0..k {
+                let (lo, n) = stripe_bounds(len / align * align, k, j, align);
+                assert_eq!(lo % align, 0);
+                assert_eq!(n % align, 0);
+                assert_eq!(lo, covered);
+                covered += n;
+            }
+            assert_eq!(covered, len / align * align);
+        }
+    }
+
+    #[test]
+    fn sizeset_agrees_between_leaders_and_children() {
+        for policy in [LeaderPolicy::Single, LeaderPolicy::Leaders(2)] {
+            let out = run_nodes(&[5, 3], move |env| {
+                let w = env.world();
+                let ctx = HybridCtx::create(env, &w, policy);
+                ctx.sizeset(env).to_vec()
+            });
+            for got in out {
+                assert_eq!(got, vec![5, 3]);
+            }
+        }
+    }
+
+    #[test]
+    fn derived_communicator_supported() {
+        // Session over a sub-communicator (even world ranks only) — the
+        // §4.1 "complex use cases".
+        let out = run_nodes(&[4, 4], |env| {
+            let w = env.world();
+            let even = env.split(&w, (w.rank() % 2) as i64, w.rank() as i64).unwrap();
+            let ctx = HybridCtx::create(env, &even, LeaderPolicy::Leaders(2));
+            (ctx.shmem_size(), ctx.nnodes(), ctx.leader_index())
+        });
+        for (r, (shm, nn, j)) in out.into_iter().enumerate() {
+            assert_eq!(shm, 2, "rank {r}: 2 same-parity ranks per node");
+            assert_eq!(nn, 2);
+            // Both same-parity ranks on each node lead (k = 2 over
+            // 2-rank node groups).
+            assert_eq!(j, Some(if r < 4 { r / 2 } else { (r - 4) / 2 }), "rank {r}");
+        }
+    }
+
+    #[test]
+    fn persistent_handle_reuse_has_zero_resetup() {
+        let out = run_nodes(&[5, 3], |env| {
+            let w = env.world();
+            let ctx = HybridCtx::create(env, &w, LeaderPolicy::Leaders(2));
+            let mut ag = ctx.allgather_init(env, 64, SyncScheme::Spin);
+            let w0 = ag.window().map(|h| h.win.as_ref() as *const _ as usize).unwrap();
+            let mine = vec![w.rank() as u8; 64];
+            let mut dts = Vec::new();
+            for _ in 0..3 {
+                env.harness_sync(&w);
+                let t0 = env.vclock();
+                ag.start_allgather(env, &mine);
+                ag.wait(env);
+                dts.push(env.vclock() - t0);
+            }
+            let w1 = ag.window().map(|h| h.win.as_ref() as *const _ as usize).unwrap();
+            env.barrier(ctx.shmem());
+            ag.free(env);
+            (w0 == w1, dts)
+        });
+        for (stable, dts) in out {
+            assert!(stable, "window must survive across start/wait cycles");
+            // Steady state: iterations 2 and 3 charge identical virtual
+            // time — nothing is re-set-up per invocation.
+            assert!((dts[1] - dts[2]).abs() < 1e-9, "re-setup cost detected: {dts:?}");
+        }
+    }
+}

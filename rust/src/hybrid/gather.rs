@@ -1,129 +1,157 @@
-//! `Wrapper_Hy_Gather` — hybrid MPI+MPI rooted gather.
+//! The hybrid rooted gather behind
+//! [`HybridCtx::gather_init`](super::ctx::HybridCtx::gather_init).
 //!
 //! The §4.2 allgather design minus the full replication: every rank
 //! stores its block at its affinity slot of the node's shared window
 //! (zero on-node messages), a red sync publishes the node's
 //! contributions, and the **leaders** run an irregular gatherv over the
-//! bridge rooted at the root's node — so the complete rank-ordered result
-//! materializes only in the root node's shared window, where the root
-//! (leader or child) reads it after the yellow sync. Non-root nodes move
-//! exactly one bridge message; their windows keep only their own blocks.
+//! bridge(s) rooted at the root's node — leader `j` ships stripe `j` of
+//! its node block over bridge `j` on NIC lane `j` — so the complete
+//! rank-ordered result materializes only in the root node's shared
+//! window, where the root (leader or child) reads it after the yellow
+//! sync. Non-root nodes move exactly `k` bridge messages; their windows
+//! keep only their own blocks.
 
 use super::allgather::AllgatherParam;
 use super::bcast::TransTables;
-use super::package::CommPackage;
+use super::ctx::{HybridCtx, StripeTable};
 use super::shmem::HyWin;
-use super::sync::{await_release, red_sync, release, SyncScheme};
-use crate::coll::gather::gatherv;
+use super::sync::{complete, red_sync, SyncScheme};
+use crate::coll::gather::{gatherv, gatherv_offsets};
 use crate::mpi::env::ProcEnv;
-use crate::mpi::topo::Placement;
 
-/// `Wrapper_Hy_Gather`: complete the gather across the cluster. Every
-/// rank must already have stored its `msg`-byte block at its affinity
-/// slot (`win.local_ptr(parent_rank, msg)`); afterwards the root can read
-/// the full rank-ordered result at offset 0 of its node's window.
-pub fn hy_gather(
+/// Complete a started gather (blocks already stored at the per-rank
+/// slots); afterwards the root can read the full rank-ordered result at
+/// offset 0 of its node's window. With `k = 1` (empty `stripes`) this is
+/// byte- and vtime-identical to the pre-session `Wrapper_Hy_Gather`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run(
     env: &mut ProcEnv,
-    pkg: &CommPackage,
+    ctx: &HybridCtx,
     win: &mut HyWin,
     param: &AllgatherParam,
     tables: &TransTables,
+    stripes: &[StripeTable],
     root: usize,
     msg: usize,
     scheme: SyncScheme,
 ) {
     assert_eq!(
-        env.topo().placement(),
-        Placement::Block,
-        "Wrapper_Hy_Gather assumes block-style rank placement (§4)"
-    );
-    assert_eq!(
         param.recvcounts.iter().sum::<usize>(),
-        msg * pkg.parent.size(),
+        msg * ctx.parent().size(),
         "allgather params must match the gather block size"
     );
     let root_node = tables.bridge[root];
     // Red sync: all on-node contributions must be in the window.
-    red_sync(env, pkg);
-    if let Some(bridge) = &pkg.bridge {
+    red_sync(env, ctx);
+    if let Some(j) = ctx.leader_index() {
+        let bridge = ctx.bridge().expect("leaders hold a bridge").clone();
         let bidx = bridge.rank();
-        let (lo, count) = (param.displs[bidx], param.recvcounts[bidx]);
         if bridge.size() > 1 {
-            if bidx == root_node {
-                // Root's leader ingests every other node's block straight
-                // into the shared window at its global displacement (the
-                // node's own block is already in place — gatherv's
-                // explicit in-place root mode, `mine: None`).
-                let full_len: usize = param.recvcounts.iter().sum();
-                if env.legacy_dataplane() {
+            if stripes.is_empty() {
+                let (lo, count) = (param.displs[bidx], param.recvcounts[bidx]);
+                if bidx == root_node {
+                    // Root's leader ingests every other node's block
+                    // straight into the shared window at its global
+                    // displacement (the node's own block is already in
+                    // place — gatherv's explicit in-place root mode,
+                    // `mine: None`).
+                    let full_len: usize = param.recvcounts.iter().sum();
+                    if env.legacy_dataplane() {
+                        let mine = win.win.read_vec(lo, count);
+                        env.count_copy(count);
+                        let out = unsafe { win.win.slice_mut(0, full_len) };
+                        gatherv(env, &bridge, root_node, &param.recvcounts, Some(&mine), Some(out));
+                    } else {
+                        let out = unsafe { win.win.slice_mut(0, full_len) };
+                        gatherv(env, &bridge, root_node, &param.recvcounts, None, Some(out));
+                    }
+                } else if env.legacy_dataplane() {
                     let mine = win.win.read_vec(lo, count);
                     env.count_copy(count);
-                    let out = unsafe { win.win.slice_mut(0, full_len) };
-                    gatherv(env, bridge, root_node, &param.recvcounts, Some(&mine), Some(out));
+                    gatherv(env, &bridge, root_node, &param.recvcounts, Some(&mine), None);
                 } else {
-                    let out = unsafe { win.win.slice_mut(0, full_len) };
-                    gatherv(env, bridge, root_node, &param.recvcounts, None, Some(out));
+                    // Non-root leaders send their node block borrowed
+                    // straight from the window.
+                    let mine = unsafe { win.win.slice(lo, count) };
+                    gatherv(env, &bridge, root_node, &param.recvcounts, Some(mine), None);
                 }
-            } else if env.legacy_dataplane() {
-                let mine = win.win.read_vec(lo, count);
-                env.count_copy(count);
-                gatherv(env, bridge, root_node, &param.recvcounts, Some(&mine), None);
             } else {
-                // Non-root leaders send their node block borrowed
-                // straight from the window.
-                let mine = unsafe { win.win.slice(lo, count) };
-                gatherv(env, bridge, root_node, &param.recvcounts, Some(mine), None);
+                // Leader j ships/ingests stripe j of every node block.
+                let st = &stripes[j];
+                env.with_nic_lane(j, |env| {
+                    if bidx == root_node {
+                        let full_len: usize = param.recvcounts.iter().sum();
+                        let out = unsafe { win.win.slice_mut(0, full_len) };
+                        gatherv_offsets(
+                            env, &bridge, root_node, &st.counts, &st.offsets, None, Some(out),
+                        );
+                    } else {
+                        let mine = unsafe { win.win.slice(st.offsets[bidx], st.counts[bidx]) };
+                        gatherv_offsets(
+                            env, &bridge, root_node, &st.counts, &st.offsets, Some(mine), None,
+                        );
+                    }
+                });
             }
         }
-        release(env, pkg, win, scheme);
-    } else {
-        await_release(env, pkg, win, scheme);
     }
+    complete(env, ctx, win, scheme);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coll::testutil::{payload, run_nodes};
-    use crate::hybrid::allgather::sizeset_gather;
+    use crate::hybrid::LeaderPolicy;
 
-    fn check(nodes: &'static [usize], m: usize, root: usize, scheme: SyncScheme) {
+    fn check(nodes: &'static [usize], m: usize, root: usize, k: usize, scheme: SyncScheme) {
         let p: usize = nodes.iter().sum();
         let expect: Vec<u8> = (0..p).flat_map(|r| payload(r, m)).collect();
         let out = run_nodes(nodes, move |env| {
             let w = env.world();
-            let pkg = CommPackage::create(env, &w);
-            let mut win = pkg.alloc_shared(env, m, 1, w.size());
-            let sizeset = sizeset_gather(env, &pkg);
-            let param = AllgatherParam::create(env, &pkg, m, &sizeset);
-            let tables = TransTables::create(env, &pkg);
+            let ctx = HybridCtx::create(env, &w, LeaderPolicy::Leaders(k));
+            let mut g = ctx.gather_init(env, m, scheme);
             let mine = payload(w.rank(), m);
-            win.store(env, win.local_ptr(w.rank(), m), &mine);
-            hy_gather(env, &pkg, &mut win, &param, &tables, root, m, scheme);
-            let got = if w.rank() == root { win.load(env, 0, m * w.size()) } else { Vec::new() };
-            env.barrier(&pkg.shmem);
-            win.free(env, &pkg);
+            g.start_gather(env, root, &mine);
+            g.wait(env);
+            let got = if w.rank() == root {
+                g.window().unwrap().load(env, 0, m * w.size())
+            } else {
+                Vec::new()
+            };
+            env.barrier(ctx.shmem());
+            g.free(env);
             (w.rank() == root, got)
         });
         for (r, (is_root, got)) in out.into_iter().enumerate() {
             if is_root {
-                assert_eq!(got, expect, "nodes {nodes:?} m {m} root {root} rank {r}");
+                assert_eq!(got, expect, "nodes {nodes:?} m {m} root {root} k {k} rank {r}");
             }
         }
     }
 
     #[test]
     fn roots_on_every_kind_of_rank() {
-        check(&[5, 3], 16, 0, SyncScheme::Spin); // leader of node 0
-        check(&[5, 3], 16, 5, SyncScheme::Spin); // leader of node 1
-        check(&[5, 3], 16, 2, SyncScheme::Spin); // child on node 0
-        check(&[5, 3], 16, 7, SyncScheme::Barrier); // child on node 1
+        check(&[5, 3], 16, 0, 1, SyncScheme::Spin); // leader of node 0
+        check(&[5, 3], 16, 5, 1, SyncScheme::Spin); // leader of node 1
+        check(&[5, 3], 16, 2, 1, SyncScheme::Spin); // child on node 0
+        check(&[5, 3], 16, 7, 1, SyncScheme::Barrier); // child on node 1
+    }
+
+    #[test]
+    fn multi_leader_roots_everywhere() {
+        for root in [0usize, 1, 6, 7] {
+            check(&[5, 3], 16, root, 2, SyncScheme::Spin);
+            check(&[5, 3], 16, root, 3, SyncScheme::Barrier);
+        }
     }
 
     #[test]
     fn irregular_three_nodes_and_single_node() {
-        check(&[5, 3, 4], 24, 9, SyncScheme::Spin);
-        check(&[6], 8, 3, SyncScheme::Spin);
-        check(&[1], 8, 0, SyncScheme::Barrier);
+        check(&[5, 3, 4], 24, 9, 1, SyncScheme::Spin);
+        check(&[5, 3, 4], 24, 9, 2, SyncScheme::Spin);
+        check(&[6], 8, 3, 2, SyncScheme::Spin);
+        check(&[1], 8, 0, 1, SyncScheme::Barrier);
     }
 }

@@ -1,40 +1,55 @@
-//! The paper's contribution: hybrid MPI+MPI context-based collectives.
+//! The paper's contribution: hybrid MPI+MPI context-based collectives,
+//! as a **session API** with persistent per-collective handles.
 //!
-//! In the hybrid MPI+MPI model (§3.2), one *leader* rank per node (the
-//! lowest rank on the node under block placement) joins the *bridge*
-//! communicator that carries all inter-node traffic; its on-node *children*
-//! share one copy of every collective result inside an MPI-3 shared-memory
-//! window and access it with plain load/store — eliminating both the
-//! per-rank result replication and the library's on-node staging copies
-//! that the pure-MPI collectives pay.
+//! In the hybrid MPI+MPI model (§3.2), *leader* ranks per node join
+//! *bridge* communicators that carry all inter-node traffic; their
+//! on-node *children* share one copy of every collective result inside an
+//! MPI-3 shared-memory window and access it with plain load/store —
+//! eliminating both the per-rank result replication and the library's
+//! on-node staging copies that the pure-MPI collectives pay.
 //!
-//! Module map (paper primitive → here):
+//! Everything the user touches is two types:
+//!
+//! - [`HybridCtx`] — the session: created once per parent communicator
+//!   with a [`LeaderPolicy`] (`k ≥ 1` leaders per node, each on its own
+//!   same-index bridge communicator and NIC lane — the multi-leader
+//!   design of arXiv 2007.06892). Owns and caches every one-off wrapper
+//!   object the paper's §4 describes (communicator splits, size sets,
+//!   translation tables).
+//! - [`HyColl`] — a persistent collective handle in the
+//!   `MPI_Allreduce_init` style: `ctx.allgather_init(…)` binds window,
+//!   parameters, stripe tables, sync scheme and step-1 method once;
+//!   `start_*`/`wait` is the steady-state invocation pair.
+//!
+//! Correspondence with the paper's §4 primitives (all folded behind the
+//! session now — the old free functions are gone):
 //!
 //! | paper (§4) | here |
 //! |---|---|
-//! | `struct comm_package` | [`package::CommPackage`] |
-//! | `Wrapper_MPI_ShmemBridgeComm_create` | [`package::CommPackage::create`] |
-//! | `Wrapper_MPI_Sharedmemory_alloc` | [`shmem::CommPackage_alloc` → `package::CommPackage::alloc_shared`] |
-//! | `Wrapper_Get_localpointer` | [`shmem::HyWin::local_ptr`] |
-//! | `Wrapper_Comm_free` | [`package::CommPackage::free`] |
-//! | `Wrapper_ShmemcommSizeset_gather` | [`allgather::sizeset_gather`] |
-//! | `Wrapper_Create_Allgather_param` | [`allgather::AllgatherParam::create`] |
-//! | `Wrapper_Hy_Allgather` | [`allgather::hy_allgather`] |
-//! | `Wrapper_Get_transtable` | [`bcast::TransTables::create`] |
-//! | `Wrapper_Hy_Bcast` | [`bcast::hy_bcast`] |
-//! | `Wrapper_Hy_Allreduce` | [`allreduce::hy_allreduce`] |
+//! | `struct comm_package` | [`HybridCtx`] (deprecated shim: [`package::CommPackage`]) |
+//! | `Wrapper_MPI_ShmemBridgeComm_create` | [`HybridCtx::create`] |
+//! | `Wrapper_MPI_Sharedmemory_alloc` | [`HybridCtx::alloc_shared`] (inside every `*_init`) |
+//! | `Wrapper_Get_localpointer` | [`shmem::HyWin::local_ptr`] / [`HyColl::result_view`] |
+//! | `Wrapper_Comm_free` | drop the session / [`HyColl::free`] |
+//! | `Wrapper_ShmemcommSizeset_gather` | [`HybridCtx::sizeset`] |
+//! | `Wrapper_Create_Allgather_param` | [`allgather::AllgatherParam::create`] (inside `*_init`) |
+//! | `Wrapper_Hy_Allgather` | [`HybridCtx::allgather_init`] → [`HyColl`] |
+//! | `Wrapper_Get_transtable` | [`HybridCtx::tables`] |
+//! | `Wrapper_Hy_Bcast` | [`HybridCtx::bcast_init`] → [`HyColl`] |
+//! | `Wrapper_Hy_Allreduce` | [`HybridCtx::allreduce_init`] → [`HyColl`] |
 //! | §4.5 sync schemes | [`sync::SyncScheme`] |
 //!
-//! Beyond the paper's three collectives, the wrapper set carries the
-//! extra operations the follow-up work on multi-core clusters
-//! (arXiv:2007.06892) shows matter for hybrid codes:
-//! [`reduce_scatter::hy_reduce_scatter`], [`gather::hy_gather`] and
-//! [`scatter::hy_scatter`] — same window/red-sync/bridge/yellow-sync
-//! skeleton, rooted or scattered result placement.
+//! Beyond the paper's three collectives, the session carries the extra
+//! operations the multi-core-cluster follow-up (arXiv:2007.06892) shows
+//! matter for hybrid codes: [`HybridCtx::reduce_scatter_init`],
+//! [`HybridCtx::gather_init`] and [`HybridCtx::scatter_init`] — same
+//! window/red-sync/bridge/yellow-sync skeleton, rooted or scattered
+//! result placement, all striped across the leader set.
 
 pub mod allgather;
 pub mod allreduce;
 pub mod bcast;
+pub mod ctx;
 pub mod gather;
 pub mod package;
 pub mod reduce_scatter;
@@ -42,12 +57,10 @@ pub mod scatter;
 pub mod shmem;
 pub mod sync;
 
-pub use allgather::{hy_allgather, sizeset_gather, AllgatherParam};
-pub use allreduce::{hy_allreduce, AllreduceMethod};
-pub use bcast::{hy_bcast, TransTables};
-pub use gather::hy_gather;
+pub use allgather::AllgatherParam;
+pub use allreduce::{AllreduceMethod, METHOD_CUTOFF_BYTES};
+pub use bcast::TransTables;
+pub use ctx::{HyColl, HyOp, HybridCtx, LeaderPolicy};
 pub use package::CommPackage;
-pub use reduce_scatter::{alloc_reduce_scatter_win, hy_reduce_scatter};
-pub use scatter::hy_scatter;
 pub use shmem::HyWin;
 pub use sync::SyncScheme;

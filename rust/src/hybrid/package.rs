@@ -1,11 +1,24 @@
-//! The `comm_package` wrapper (§4.1): two-level communicator splitting.
+//! **Deprecated shim**: the paper's `struct comm_package` (§4.1) as a thin
+//! wrapper over the `k = 1` session context.
+//!
+//! The free-function wrapper API this type anchored (PRs 0–3) is gone —
+//! every hybrid collective now lives on [`HybridCtx`] as a persistent
+//! handle pair (`*_init` → `start`/`wait`). `CommPackage` remains only
+//! for source compatibility with the paper's §4.1 naming: it *is* a
+//! `HybridCtx` with [`LeaderPolicy::Single`] (same two communicator
+//! splits, same charges — creation virtual time is identical), and
+//! exposes the underlying session via [`CommPackage::ctx`]. New code
+//! should call [`HybridCtx::create`] directly.
 
-use crate::mpi::comm::UNDEFINED;
+use super::ctx::{HybridCtx, LeaderPolicy};
+use super::shmem::HyWin;
 use crate::mpi::env::ProcEnv;
 use crate::mpi::Communicator;
+use std::rc::Rc;
 
 /// The paper's `struct comm_package`: the shared-memory (node) and bridge
-/// (leaders-only) communicators plus their sizes.
+/// (leaders-only) communicators plus their sizes. Deprecated — a frozen
+/// `k = 1` view of [`HybridCtx`].
 pub struct CommPackage {
     /// The parent this package was derived from.
     pub parent: Communicator,
@@ -18,49 +31,46 @@ pub struct CommPackage {
     /// `bridgecomm_size` (number of nodes hosting members of `parent`;
     /// known on children too, unlike in raw MPI where only leaders see it).
     pub bridge_size: usize,
+    ctx: Rc<HybridCtx>,
 }
 
 impl CommPackage {
     /// `Wrapper_MPI_ShmemBridgeComm_create`: split `parent` into the
     /// node-level communicator and the bridge over node leaders (lowest
-    /// rank per node leads). Communicators other than `MPI_COMM_WORLD` are
-    /// supported (§4.1 "complex use cases").
-    ///
-    /// One-off cost: two `MPI_Comm_split`s — the Table-2 "Communicator"
-    /// row — charged by the split mechanics themselves.
+    /// rank per node leads). Identical mechanics and virtual-time charge
+    /// to `HybridCtx::create(env, parent, LeaderPolicy::Single)` — which
+    /// is what it runs.
     pub fn create(env: &mut ProcEnv, parent: &Communicator) -> CommPackage {
-        let shmem = env.split_type_shared(parent);
-        let is_leader = shmem.rank() == 0;
-        let bridge = env.split(parent, if is_leader { 0 } else { UNDEFINED }, parent.rank() as i64);
-        // Node count of the parent group (= bridge size), computable from
-        // the topology on every rank.
-        let topo = env.topo();
-        let mut nodes: Vec<usize> = parent.members().iter().map(|&w| topo.node_of(w)).collect();
-        nodes.sort_unstable();
-        nodes.dedup();
+        let ctx = HybridCtx::create(env, parent, LeaderPolicy::Single);
         CommPackage {
-            parent: parent.clone(),
-            shmem_size: shmem.size(),
-            bridge_size: nodes.len(),
-            shmem,
-            bridge,
+            parent: ctx.parent().clone(),
+            shmem: ctx.shmem().clone(),
+            bridge: ctx.bridge().cloned(),
+            shmem_size: ctx.shmem_size(),
+            bridge_size: ctx.nnodes(),
+            ctx,
         }
+    }
+
+    /// The session context backing this shim.
+    pub fn ctx(&self) -> &Rc<HybridCtx> {
+        &self.ctx
     }
 
     /// Am I my node's leader?
     pub fn is_leader(&self) -> bool {
-        self.shmem.rank() == 0
+        self.ctx.is_leader()
     }
 
     /// My bridge rank = the index of my node among the parent's nodes
     /// (valid on children too; equals `bridge.rank()` on leaders).
-    pub fn bridge_index(&self, env: &ProcEnv) -> usize {
-        let topo = env.topo();
-        let my_node = topo.node_of(env.world_rank());
-        let mut nodes: Vec<usize> = self.parent.members().iter().map(|&w| topo.node_of(w)).collect();
-        nodes.sort_unstable();
-        nodes.dedup();
-        nodes.iter().position(|&n| n == my_node).expect("my node hosts me")
+    pub fn bridge_index(&self, _env: &ProcEnv) -> usize {
+        self.ctx.node_index()
+    }
+
+    /// `Wrapper_MPI_Sharedmemory_alloc` pass-through.
+    pub fn alloc_shared(&self, env: &mut ProcEnv, msize: usize, bsize: usize, flag: usize) -> HyWin {
+        self.ctx.alloc_shared(env, msize, bsize, flag)
     }
 
     /// `Wrapper_Comm_free`: release both sub-communicators. (Handles are
@@ -105,28 +115,33 @@ mod tests {
     }
 
     #[test]
-    fn derived_communicator_supported() {
-        // Package over a sub-communicator (even world ranks only).
-        let out = run_nodes(&[4, 4], |env| {
+    fn shim_mirrors_its_session_exactly() {
+        // The acceptance invariant: the shim *is* HybridCtx k = 1 — same
+        // communicators, same creation vtime as a directly-created
+        // single-leader session.
+        let out = run_nodes(&[5, 3], |env| {
             let w = env.world();
-            let even = env.split(&w, (w.rank() % 2) as i64, w.rank() as i64).unwrap();
-            if w.rank() % 2 == 0 {
-                let pkg = CommPackage::create(env, &even);
-                Some((pkg.shmem_size, pkg.bridge_size, pkg.is_leader()))
-            } else {
-                // Odd ranks also got a comm (color 1) — build a package on
-                // it to keep the collective call pattern aligned.
-                let pkg = CommPackage::create(env, &even);
-                Some((pkg.shmem_size, pkg.bridge_size, pkg.is_leader()))
-            }
+            env.harness_sync(&w);
+            let t0 = env.vclock();
+            let pkg = CommPackage::create(env, &w);
+            let shim_dt = env.vclock() - t0;
+            env.harness_sync(&w);
+            let t1 = env.vclock();
+            let ctx = crate::hybrid::HybridCtx::create(env, &w, crate::hybrid::LeaderPolicy::Single);
+            let ctx_dt = env.vclock() - t1;
+            let same_shape = pkg.shmem_size == ctx.shmem_size()
+                && pkg.bridge_size == ctx.nnodes()
+                && pkg.is_leader() == ctx.is_leader()
+                && pkg.bridge.is_some() == ctx.bridge().is_some()
+                && pkg.ctx().leaders_per_node() == 1;
+            (shim_dt, ctx_dt, same_shape)
         });
-        for (r, v) in out.into_iter().enumerate() {
-            let (shm, bridge, leader) = v.unwrap();
-            assert_eq!(shm, 2, "rank {r}: 2 same-parity ranks per node");
-            assert_eq!(bridge, 2);
-            // Leaders = lowest world rank of each parity on each node:
-            // ranks 0, 1 (node 0) and 4, 5 (node 1).
-            assert_eq!(leader, r % 4 < 2, "rank {r}");
+        for (shim_dt, ctx_dt, same_shape) in out {
+            assert!(same_shape);
+            assert!(
+                (shim_dt - ctx_dt).abs() < 1e-9,
+                "shim creation must charge exactly the k=1 session: {shim_dt} vs {ctx_dt}"
+            );
         }
     }
 }

@@ -1,6 +1,7 @@
-//! `Wrapper_Hy_Reduce_scatter` — hybrid MPI+MPI reduce-scatter, following
-//! the §4.4 allreduce design (the op the follow-up work on multi-core
-//! clusters, arXiv:2007.06892, adds to the wrapper set).
+//! The hybrid reduce-scatter behind
+//! [`HybridCtx::reduce_scatter_init`](super::ctx::HybridCtx::reduce_scatter_init),
+//! following the §4.4 allreduce design (the op the follow-up work on
+//! multi-core clusters, arXiv:2007.06892, adds to the wrapper set).
 //!
 //! Window layout for `count`-byte result blocks over a parent of `p`
 //! ranks (`T = count·p`): one `T`-byte input slot per local rank, then
@@ -9,231 +10,222 @@
 //! block range of it is written).
 //!
 //! - **Step 1** reuses the §5.2.4 method cutoff
-//!   ([`METHOD_CUTOFF_BYTES`]): below it the leader serially folds the
-//!   input slots straight out of the shared window after a red sync
-//!   (method 2); above it an `MPI_Reduce` over the node communicator
-//!   brings the partial to the leader (method 1).
+//!   ([`METHOD_CUTOFF_BYTES`](super::allreduce::METHOD_CUTOFF_BYTES)):
+//!   below it the leaders serially fold the input slots straight out of
+//!   the shared window after a red sync (method 2, striped per leader for
+//!   `k > 1`); above it an `MPI_Reduce` over the node communicator brings
+//!   the partial to the primary leader (method 1).
 //! - **Step 2**: the leaders run an *irregular* reduce-scatter over the
-//!   bridge — node `i`'s block is the concatenation of its ranks' blocks
-//!   (contiguous under block placement), so the per-node counts differ on
-//!   irregularly-populated clusters. The leader lands its node's reduced
-//!   range in `G`; a yellow sync releases the children to read their own
-//!   `count`-byte block in place.
+//!   bridge(s) — node `i`'s block is the concatenation of its ranks'
+//!   blocks (contiguous under block placement), so the per-node counts
+//!   differ on irregularly-populated clusters; leader `j` reduces stripe
+//!   `j` of every node block over bridge `j` on NIC lane `j`. Each leader
+//!   lands its stripe of the node's reduced range in `G`; a yellow sync
+//!   releases the children to read their own `count`-byte block in place.
 
-use super::allreduce::{AllreduceMethod, METHOD_CUTOFF_BYTES};
-use super::package::CommPackage;
+use super::allreduce::AllreduceMethod;
+use super::ctx::{HybridCtx, StripeTable};
 use super::shmem::HyWin;
-use super::sync::{await_release, red_sync, release, SyncScheme};
+use super::sync::{complete, red_sync, SyncScheme};
 use crate::coll::reduce::reduce;
-use crate::coll::reduce_scatter::reduce_scatterv;
+use crate::coll::reduce_scatter::{reduce_scatterv, reduce_scatterv_offsets};
 use crate::mpi::env::ProcEnv;
-use crate::mpi::topo::Placement;
-use crate::mpi::{Communicator, Datatype, ReduceOp};
+use crate::mpi::{Datatype, ReduceOp};
 
-/// Allocate the reduce-scatter window for `count`-byte result blocks
-/// (`(shmem_size + 2) · count · p` bytes on the leader).
-pub fn alloc_reduce_scatter_win(env: &mut ProcEnv, pkg: &CommPackage, count: usize) -> HyWin {
-    let total = count * pkg.parent.size();
-    pkg.alloc_shared(env, total, 1, pkg.shmem_size + 2)
-}
-
-/// `Wrapper_Hy_Reduce_scatter`: reduce the per-rank full vectors (already
-/// stored at `win.local_ptr(shmem_rank, count·p)`) across the parent
-/// communicator and scatter the result blocks; afterwards every rank can
-/// read its own reduced `count`-byte block at the returned window offset.
+/// Complete a started reduce-scatter (full vectors already stored at the
+/// per-rank slots); returns the window offset of the calling rank's
+/// reduced `count`-byte block. With `k = 1` (empty stripe tables) every
+/// branch is byte- and vtime-identical to the pre-session
+/// `Wrapper_Hy_Reduce_scatter`; `method` arrives resolved.
 #[allow(clippy::too_many_arguments)]
-pub fn hy_reduce_scatter(
+pub(crate) fn run(
     env: &mut ProcEnv,
-    pkg: &CommPackage,
+    ctx: &HybridCtx,
     win: &mut HyWin,
     sizeset: &[usize],
     dtype: Datatype,
     op: ReduceOp,
     count: usize,
     method: AllreduceMethod,
+    vec_stripes: &[(usize, usize)],
+    node_stripes: &[StripeTable],
     scheme: SyncScheme,
 ) -> usize {
-    assert_eq!(
-        env.topo().placement(),
-        Placement::Block,
-        "Wrapper_Hy_Reduce_scatter assumes block-style rank placement (§4)"
-    );
-    assert_eq!(count % dtype.size(), 0);
-    let p = pkg.parent.size();
+    let p = ctx.parent().size();
+    let shmem_size = ctx.shmem_size();
     let total = count * p;
-    let l_off = pkg.shmem_size * total;
-    let g_off = (pkg.shmem_size + 1) * total;
-    let method = match method {
-        AllreduceMethod::Tuned => {
-            if total <= METHOD_CUTOFF_BYTES {
-                AllreduceMethod::Method2
-            } else {
-                AllreduceMethod::Method1
-            }
-        }
-        m => m,
-    };
+    let l_off = shmem_size * total;
+    let g_off = (shmem_size + 1) * total;
 
     // ---- step 1: node-level reduction of the full vectors into L ------
     match method {
         AllreduceMethod::Method1 => {
             // Operands are borrowed straight out of the window; the
-            // leader's result lands in slot L in place (same modeled
-            // store cost as the legacy round-trip).
-            let my_off = win.local_ptr(pkg.shmem.rank(), total);
+            // primary leader's result lands in slot L in place (same
+            // modeled store cost as the legacy round-trip).
+            let my_off = win.local_ptr(ctx.shmem().rank(), total);
             if env.legacy_dataplane() {
                 let contrib = win.win.read_vec(my_off, total);
                 env.count_copy(total);
-                if pkg.is_leader() {
+                if ctx.is_leader() {
                     let mut out = vec![0u8; total];
-                    reduce(env, &pkg.shmem, 0, dtype, op, &contrib, Some(&mut out));
+                    reduce(env, ctx.shmem(), 0, dtype, op, &contrib, Some(&mut out));
                     win.store(env, l_off, &out);
                 } else {
-                    reduce(env, &pkg.shmem, 0, dtype, op, &contrib, None);
+                    reduce(env, ctx.shmem(), 0, dtype, op, &contrib, None);
                 }
             } else {
                 let contrib = unsafe { win.win.slice(my_off, total) };
-                if pkg.is_leader() {
+                if ctx.is_leader() {
                     let out = unsafe { win.win.slice_mut(l_off, total) };
-                    reduce(env, &pkg.shmem, 0, dtype, op, contrib, Some(out));
+                    reduce(env, ctx.shmem(), 0, dtype, op, contrib, Some(out));
                     env.charge_memcpy(total);
                 } else {
-                    reduce(env, &pkg.shmem, 0, dtype, op, contrib, None);
+                    reduce(env, ctx.shmem(), 0, dtype, op, contrib, None);
                 }
             }
         }
         AllreduceMethod::Method2 => {
-            red_sync(env, pkg);
-            if pkg.is_leader() {
-                if env.legacy_dataplane() {
-                    let mut acc = win.win.read_vec(0, total);
-                    env.count_copy(total);
-                    for r in 1..pkg.shmem_size {
-                        let operand = unsafe { win.win.slice(r * total, total) };
-                        op.apply(dtype, &mut acc, operand);
+            red_sync(env, ctx);
+            if let Some(j) = ctx.leader_index() {
+                let (off, len) =
+                    if vec_stripes.is_empty() { (0, total) } else { vec_stripes[j] };
+                if len > 0 {
+                    if env.legacy_dataplane() && vec_stripes.is_empty() {
+                        let mut acc = win.win.read_vec(0, total);
+                        env.count_copy(total);
+                        for r in 1..shmem_size {
+                            let operand = unsafe { win.win.slice(r * total, total) };
+                            op.apply(dtype, &mut acc, operand);
+                        }
+                        env.charge_reduce(total * shmem_size);
+                        win.win.write(l_off, &acc);
+                        env.charge_memcpy(total);
+                    } else {
+                        // Slot 0 seeds L in place; slots 1.. fold into it
+                        // (legacy combine order, bit-identical results).
+                        win.win.copy_within(off, l_off + off, len);
+                        let l = unsafe { win.win.slice_mut(l_off + off, len) };
+                        for r in 1..shmem_size {
+                            let operand = unsafe { win.win.slice(r * total + off, len) };
+                            op.apply(dtype, l, operand);
+                        }
+                        env.charge_reduce(len * shmem_size);
+                        env.charge_memcpy(len);
                     }
-                    env.charge_reduce(total * pkg.shmem_size);
-                    win.win.write(l_off, &acc);
-                    env.charge_memcpy(total);
-                } else {
-                    // Slot 0 seeds L in place; slots 1.. fold into it
-                    // (legacy combine order, bit-identical results).
-                    win.win.copy_within(0, l_off, total);
-                    let l = unsafe { win.win.slice_mut(l_off, total) };
-                    for r in 1..pkg.shmem_size {
-                        let operand = unsafe { win.win.slice(r * total, total) };
-                        op.apply(dtype, l, operand);
-                    }
-                    env.charge_reduce(total * pkg.shmem_size);
-                    env.charge_memcpy(total);
                 }
             }
         }
-        AllreduceMethod::Tuned => unreachable!(),
+        AllreduceMethod::Tuned => unreachable!("Tuned resolves at *_init"),
+    }
+    // Step-1 stripes (over the whole T vector) and step-2 stripes (per
+    // node block) partition L differently: with k > 1 every leader must
+    // see the complete L before reading step-2 ranges that cross step-1
+    // stripe boundaries. (`leaders()` is `Some` only on leaders, k > 1.)
+    if let Some(leaders) = ctx.leaders() {
+        env.barrier(leaders);
     }
 
     // ---- step 2: bridge reduce-scatter of node blocks into G ----------
     // Node i's block range is its ranks' blocks, contiguous in parent
     // order under block placement. (Children skip this entirely — their
     // block offset needs only the parent rank.)
-    if let Some(bridge) = &pkg.bridge {
+    if let Some(j) = ctx.leader_index() {
+        let bridge = ctx.bridge().expect("leaders hold a bridge").clone();
         let bidx = bridge.rank();
         if bridge.size() > 1 {
             let node_counts: Vec<usize> = sizeset.iter().map(|&s| s * count).collect();
             let my_node_displ: usize = node_counts[..bidx].iter().sum();
-            if env.legacy_dataplane() {
-                let l = win.win.read_vec(l_off, total);
-                env.count_copy(total);
-                let mut mine = vec![0u8; node_counts[bidx]];
-                reduce_scatterv(env, bridge, dtype, op, &node_counts, &l, &mut mine);
-                win.win.write(g_off + my_node_displ, &mine);
+            if node_stripes.is_empty() {
+                if env.legacy_dataplane() {
+                    let l = win.win.read_vec(l_off, total);
+                    env.count_copy(total);
+                    let mut mine = vec![0u8; node_counts[bidx]];
+                    reduce_scatterv(env, &bridge, dtype, op, &node_counts, &l, &mut mine);
+                    win.win.write(g_off + my_node_displ, &mine);
+                } else {
+                    // L is consumed in place; the reduced node range lands
+                    // directly in G (disjoint window regions).
+                    let l = unsafe { win.win.slice(l_off, total) };
+                    let mine =
+                        unsafe { win.win.slice_mut(g_off + my_node_displ, node_counts[bidx]) };
+                    reduce_scatterv(env, &bridge, dtype, op, &node_counts, l, mine);
+                }
+                env.charge_memcpy(node_counts[bidx]);
             } else {
-                // L is consumed in place; the reduced node range lands
-                // directly in G (disjoint window regions).
+                // Leader j reduces stripe j of every node block over
+                // bridge j; its own reduced stripe lands in G at the
+                // same node-relative offset.
+                let st = &node_stripes[j];
+                let my_stripe_off = st.offsets[bidx];
+                let my_stripe_len = st.counts[bidx];
                 let l = unsafe { win.win.slice(l_off, total) };
-                let mine = unsafe { win.win.slice_mut(g_off + my_node_displ, node_counts[bidx]) };
-                reduce_scatterv(env, bridge, dtype, op, &node_counts, l, mine);
+                let mine = unsafe { win.win.slice_mut(g_off + my_stripe_off, my_stripe_len) };
+                env.with_nic_lane(j, |env| {
+                    reduce_scatterv_offsets(env, &bridge, dtype, op, &st.counts, &st.offsets, l, mine);
+                });
+                env.charge_memcpy(my_stripe_len);
             }
-            env.charge_memcpy(node_counts[bidx]);
         } else {
             // Single node: L is already the full result; land the node's
-            // (= whole) range in G.
-            if env.legacy_dataplane() {
+            // (= whole) range in G, striped per leader when k > 1.
+            let (off, len) = if vec_stripes.is_empty() { (0, total) } else { vec_stripes[j] };
+            if env.legacy_dataplane() && vec_stripes.is_empty() {
                 let l = win.win.read_vec(l_off, total);
                 env.count_copy(total);
                 win.win.write(g_off, &l);
             } else {
-                win.win.copy_within(l_off, g_off, total);
+                win.win.copy_within(l_off + off, g_off + off, len);
             }
-            env.charge_memcpy(total);
+            env.charge_memcpy(len);
         }
-        release(env, pkg, win, scheme);
-    } else {
-        await_release(env, pkg, win, scheme);
     }
+    complete(env, ctx, win, scheme);
 
     // My block: G + my parent-rank displacement.
-    g_off + pkg.parent.rank() * count
-}
-
-/// Convenience wrapper mirroring the pure signature: stores `send`
-/// (`count·p` bytes), runs the wrapper, copies my reduced block out into
-/// `recv` (`count` bytes). `comm` must be the package's parent.
-#[allow(clippy::too_many_arguments)]
-pub fn hy_reduce_scatter_into(
-    env: &mut ProcEnv,
-    pkg: &CommPackage,
-    win: &mut HyWin,
-    sizeset: &[usize],
-    comm: &Communicator,
-    dtype: Datatype,
-    op: ReduceOp,
-    send: &[u8],
-    recv: &mut [u8],
-    scheme: SyncScheme,
-) {
-    let count = recv.len();
-    assert_eq!(send.len(), count * comm.size());
-    let slot = win.local_ptr(pkg.shmem.rank(), send.len());
-    win.store(env, slot, send);
-    let off =
-        hy_reduce_scatter(env, pkg, win, sizeset, dtype, op, count, AllreduceMethod::Tuned, scheme);
-    win.win.read_into(off, recv);
-    env.charge_memcpy(count);
+    g_off + ctx.parent().rank() * count
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coll::testutil::run_nodes;
-    use crate::hybrid::allgather::sizeset_gather;
+    use crate::hybrid::LeaderPolicy;
     use crate::util::{cast_slice, to_bytes};
 
-    fn check(nodes: &'static [usize], n_per_rank: usize, method: AllreduceMethod, scheme: SyncScheme) {
+    fn check(
+        nodes: &'static [usize],
+        n_per_rank: usize,
+        k: usize,
+        method: AllreduceMethod,
+        scheme: SyncScheme,
+    ) {
         let p: usize = nodes.iter().sum();
         let out = run_nodes(nodes, move |env| {
             let w = env.world();
-            let pkg = CommPackage::create(env, &w);
+            let ctx = HybridCtx::create(env, &w, LeaderPolicy::Leaders(k));
             let count = n_per_rank * 8;
-            let mut win = alloc_reduce_scatter_win(env, &pkg, count);
-            let sizeset = sizeset_gather(env, &pkg);
+            let mut rs =
+                ctx.reduce_scatter_init(env, Datatype::F64, ReduceOp::Sum, count, method, scheme);
             let me = w.rank();
             let vals: Vec<f64> =
                 (0..n_per_rank * w.size()).map(|e| ((me + 1) * (e + 1)) as f64).collect();
-            let slot = win.local_ptr(pkg.shmem.rank(), count * w.size());
-            win.store(env, slot, to_bytes(&vals));
-            let off =
-                hy_reduce_scatter(env, &pkg, &mut win, &sizeset, Datatype::F64, ReduceOp::Sum, count, method, scheme);
-            let mine = win.load(env, off, count);
-            env.barrier(&pkg.shmem);
-            win.free(env, &pkg);
+            rs.start_reduce_scatter(env, to_bytes(&vals));
+            let off = rs.wait(env);
+            let mine = rs.window().unwrap().load(env, off, count);
+            env.barrier(ctx.shmem());
+            rs.free(env);
             cast_slice::<f64>(&mine)
         });
         let rank_sum: f64 = (1..=p).map(|r| r as f64).sum();
         for (r, got) in out.into_iter().enumerate() {
             for (i, &v) in got.iter().enumerate() {
                 let e = r * n_per_rank + i;
-                assert_eq!(v, rank_sum * (e + 1) as f64, "method {method:?} rank {r} elem {i}");
+                assert_eq!(
+                    v,
+                    rank_sum * (e + 1) as f64,
+                    "method {method:?} k {k} rank {r} elem {i}"
+                );
             }
         }
     }
@@ -242,45 +234,49 @@ mod tests {
     fn both_methods_both_schemes_irregular() {
         for method in [AllreduceMethod::Method1, AllreduceMethod::Method2] {
             for scheme in [SyncScheme::Barrier, SyncScheme::Spin] {
-                check(&[5, 3], 2, method, scheme);
+                for k in [1, 2, 3] {
+                    check(&[5, 3], 2, k, method, scheme);
+                }
             }
         }
     }
 
     #[test]
     fn three_irregular_nodes_and_single_node() {
-        check(&[5, 3, 4], 3, AllreduceMethod::Tuned, SyncScheme::Spin);
-        check(&[6], 2, AllreduceMethod::Method2, SyncScheme::Spin);
-        check(&[6], 2, AllreduceMethod::Method1, SyncScheme::Barrier);
-        check(&[1], 4, AllreduceMethod::Tuned, SyncScheme::Spin);
+        check(&[5, 3, 4], 3, 1, AllreduceMethod::Tuned, SyncScheme::Spin);
+        check(&[5, 3, 4], 3, 2, AllreduceMethod::Tuned, SyncScheme::Spin);
+        check(&[6], 2, 2, AllreduceMethod::Method2, SyncScheme::Spin);
+        check(&[6], 2, 1, AllreduceMethod::Method1, SyncScheme::Barrier);
+        check(&[1], 4, 1, AllreduceMethod::Tuned, SyncScheme::Spin);
     }
 
     #[test]
     fn matches_pure_reference_bitwise() {
-        let out = run_nodes(&[5, 3], |env| {
-            let w = env.world();
-            let me = w.rank();
-            let n = 4usize;
-            let vals: Vec<f64> = (0..n * w.size()).map(|e| ((me + 2) * (e + 1)) as f64).collect();
-            let mut pure = vec![0u8; n * 8];
-            crate::coll::reduce_scatter(
-                env, &w, Datatype::F64, ReduceOp::Sum, to_bytes(&vals), &mut pure,
-            );
+        for k in [1usize, 2] {
+            let out = run_nodes(&[5, 3], move |env| {
+                let w = env.world();
+                let me = w.rank();
+                let n = 4usize;
+                let vals: Vec<f64> = (0..n * w.size()).map(|e| ((me + 2) * (e + 1)) as f64).collect();
+                let mut pure = vec![0u8; n * 8];
+                crate::coll::reduce_scatter(
+                    env, &w, Datatype::F64, ReduceOp::Sum, to_bytes(&vals), &mut pure,
+                );
 
-            let pkg = CommPackage::create(env, &w);
-            let mut win = alloc_reduce_scatter_win(env, &pkg, n * 8);
-            let sizeset = sizeset_gather(env, &pkg);
-            let mut hy = vec![0u8; n * 8];
-            hy_reduce_scatter_into(
-                env, &pkg, &mut win, &sizeset, &w, Datatype::F64, ReduceOp::Sum,
-                to_bytes(&vals), &mut hy, SyncScheme::Spin,
-            );
-            env.barrier(&pkg.shmem);
-            win.free(env, &pkg);
-            (cast_slice::<f64>(&pure), cast_slice::<f64>(&hy))
-        });
-        for (pure, hy) in out {
-            assert_eq!(pure, hy);
+                let ctx = HybridCtx::create(env, &w, LeaderPolicy::Leaders(k));
+                let mut rs = ctx.reduce_scatter_init(
+                    env, Datatype::F64, ReduceOp::Sum, n * 8, AllreduceMethod::Tuned, SyncScheme::Spin,
+                );
+                rs.start_reduce_scatter(env, to_bytes(&vals));
+                let off = rs.wait(env);
+                let hy = rs.window().unwrap().load(env, off, n * 8);
+                env.barrier(ctx.shmem());
+                rs.free(env);
+                (cast_slice::<f64>(&pure), cast_slice::<f64>(&hy))
+            });
+            for (pure, hy) in out {
+                assert_eq!(pure, hy, "k {k}");
+            }
         }
     }
 }

@@ -1,162 +1,185 @@
-//! `Wrapper_Hy_Scatter` — hybrid MPI+MPI rooted scatter.
+//! The hybrid rooted scatter behind
+//! [`HybridCtx::scatter_init`](super::ctx::HybridCtx::scatter_init).
 //!
-//! Mirror of [`hy_gather`](super::gather::hy_gather): the root stores its
-//! whole rank-ordered send buffer into its node's shared window, a red
-//! sync on the root's node publishes it to the node leader, and the
-//! **leaders** run an irregular scatterv over the bridge — each leader
-//! receives exactly its node's block range and lands it in the node
-//! window at the same global displacement, so after the yellow sync every
-//! rank reads its own `msg`-byte block in place at
-//! `win.local_ptr(parent_rank, msg)`. One bridge message per non-root
-//! node, zero on-node messages.
+//! Mirror of the hybrid gather: the root stores its whole rank-ordered
+//! send buffer into its node's shared window, a red sync on the root's
+//! node publishes it to the node's leaders, and the **leaders** run an
+//! irregular scatterv over the bridge(s) — leader `j` of the root's node
+//! sends stripe `j` of each node block over bridge `j` on NIC lane `j`;
+//! each receiving leader lands its stripe in the node window at the same
+//! global displacement — so after the yellow sync every rank reads its
+//! own `msg`-byte block in place at `win.local_ptr(parent_rank, msg)`.
+//! `k` bridge messages per non-root node, zero on-node messages.
 
 use super::allgather::AllgatherParam;
 use super::bcast::TransTables;
-use super::package::CommPackage;
+use super::ctx::{HybridCtx, StripeTable};
 use super::shmem::HyWin;
-use super::sync::{await_release, red_sync, release, SyncScheme};
-use crate::coll::scatter::scatterv;
+use super::sync::{complete, red_sync, SyncScheme};
+use crate::coll::scatter::{scatterv, scatterv_offsets};
 use crate::mpi::env::ProcEnv;
-use crate::mpi::topo::Placement;
 
-/// `Wrapper_Hy_Scatter`: distribute `data` (present only at `root`, in
-/// parent-rank order, `msg` bytes per rank) so every rank can read its
-/// block at `win.local_ptr(parent_rank, msg)` after the call.
+/// Complete a started scatter (the root's full buffer already stored at
+/// window offset 0 of its node); afterwards every rank reads its block
+/// at `win.local_ptr(parent_rank, msg)`. With `k = 1` (empty `stripes`)
+/// this is byte- and vtime-identical to the pre-session
+/// `Wrapper_Hy_Scatter`.
 #[allow(clippy::too_many_arguments)]
-pub fn hy_scatter(
+pub(crate) fn run(
     env: &mut ProcEnv,
-    pkg: &CommPackage,
+    ctx: &HybridCtx,
     win: &mut HyWin,
     param: &AllgatherParam,
     tables: &TransTables,
+    stripes: &[StripeTable],
     root: usize,
-    data: Option<&[u8]>,
-    msg: usize,
     scheme: SyncScheme,
 ) {
-    assert_eq!(
-        env.topo().placement(),
-        Placement::Block,
-        "Wrapper_Hy_Scatter assumes block-style rank placement (§4)"
-    );
-    let me = pkg.parent.rank();
     let root_node = tables.bridge[root];
-    let root_is_leader = tables.shmem[root] == 0;
+    let root_is_primary = tables.shmem[root] == 0;
+    let k = ctx.leaders_per_node();
 
-    // The root stores the full send buffer into its node's window.
-    if me == root {
-        let d = data.expect("root must supply the scatter payload");
-        assert_eq!(d.len(), msg * pkg.parent.size());
-        win.store(env, 0, d);
+    // The root's node leaders must observe the stored send buffer before
+    // the bridge scatter: red sync on the root's node whenever the root
+    // is a child — or whenever k > 1 (leaders 1..k read what the root,
+    // even root = leader 0, stored).
+    if (!root_is_primary || k > 1) && ctx.node_index() == root_node {
+        red_sync(env, ctx);
     }
-    // If the root is a child, its leader must observe the payload before
-    // the bridge scatter: red sync on the root's node only.
-    if !root_is_leader && tables.bridge[me] == root_node {
-        red_sync(env, pkg);
-    }
-    if let Some(bridge) = &pkg.bridge {
+    if let Some(j) = ctx.leader_index() {
+        let bridge = ctx.bridge().expect("leaders hold a bridge").clone();
         let bidx = bridge.rank();
         if bridge.size() > 1 {
-            let (lo, count) = (param.displs[bidx], param.recvcounts[bidx]);
-            if bidx == root_node {
-                let full_len: usize = param.recvcounts.iter().sum();
-                if env.legacy_dataplane() {
-                    let full = win.win.read_vec(0, full_len);
-                    env.count_copy(full_len);
-                    let mut keep = vec![0u8; count];
-                    scatterv(env, bridge, root_node, &param.recvcounts, Some(&full), &mut keep);
+            if stripes.is_empty() {
+                let (lo, count) = (param.displs[bidx], param.recvcounts[bidx]);
+                if bidx == root_node {
+                    let full_len: usize = param.recvcounts.iter().sum();
+                    if env.legacy_dataplane() {
+                        let full = win.win.read_vec(0, full_len);
+                        env.count_copy(full_len);
+                        let mut keep = vec![0u8; count];
+                        scatterv(env, &bridge, root_node, &param.recvcounts, Some(&full), &mut keep);
+                    } else {
+                        // Outgoing node ranges are borrowed straight from
+                        // the window; `keep` only absorbs the root's own
+                        // (already in-place) range, via a pooled scratch.
+                        let full = unsafe { win.win.slice(0, full_len) };
+                        let mut keep = env.take_buf(count);
+                        scatterv(env, &bridge, root_node, &param.recvcounts, Some(full), &mut keep);
+                    }
+                    // The root node's own range is already in place.
                 } else {
-                    // Outgoing node ranges are borrowed straight from the
-                    // window; `keep` only absorbs the root's own (already
-                    // in-place) range, via a pooled scratch.
-                    let full = unsafe { win.win.slice(0, full_len) };
-                    let mut keep = env.take_buf(count);
-                    scatterv(env, bridge, root_node, &param.recvcounts, Some(full), &mut keep);
+                    let out = unsafe { win.win.slice_mut(lo, count) };
+                    scatterv(env, &bridge, root_node, &param.recvcounts, None, out);
                 }
-                // The root node's own range is already in place.
             } else {
-                let out = unsafe { win.win.slice_mut(lo, count) };
-                scatterv(env, bridge, root_node, &param.recvcounts, None, out);
+                // Leader j moves stripe j of every node block.
+                let st = &stripes[j];
+                env.with_nic_lane(j, |env| {
+                    if bidx == root_node {
+                        let full_len: usize = param.recvcounts.iter().sum();
+                        let full = unsafe { win.win.slice(0, full_len) };
+                        // In-place root mode: the root node's stripe is
+                        // already in place, no self-copy.
+                        scatterv_offsets(
+                            env, &bridge, root_node, &st.counts, &st.offsets, Some(full), None,
+                        );
+                    } else {
+                        let out =
+                            unsafe { win.win.slice_mut(st.offsets[bidx], st.counts[bidx]) };
+                        scatterv_offsets(
+                            env, &bridge, root_node, &st.counts, &st.offsets, None, Some(out),
+                        );
+                    }
+                });
             }
         }
-        release(env, pkg, win, scheme);
-    } else {
-        await_release(env, pkg, win, scheme);
     }
+    complete(env, ctx, win, scheme);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coll::testutil::{payload, run_nodes};
-    use crate::hybrid::allgather::sizeset_gather;
+    use crate::hybrid::LeaderPolicy;
 
-    fn check(nodes: &'static [usize], m: usize, root: usize, scheme: SyncScheme) {
+    fn check(nodes: &'static [usize], m: usize, root: usize, k: usize, scheme: SyncScheme) {
         let out = run_nodes(nodes, move |env| {
             let w = env.world();
-            let pkg = CommPackage::create(env, &w);
-            let mut win = pkg.alloc_shared(env, m, 1, w.size());
-            let sizeset = sizeset_gather(env, &pkg);
-            let param = AllgatherParam::create(env, &pkg, m, &sizeset);
-            let tables = TransTables::create(env, &pkg);
+            let ctx = HybridCtx::create(env, &w, LeaderPolicy::Leaders(k));
+            let mut sc = ctx.scatter_init(env, m, scheme);
             let full: Vec<u8> = (0..w.size()).flat_map(|r| payload(r, m)).collect();
             let arg = (w.rank() == root).then_some(&full[..]);
-            hy_scatter(env, &pkg, &mut win, &param, &tables, root, arg, m, scheme);
-            let got = win.load(env, win.local_ptr(w.rank(), m), m);
-            env.barrier(&pkg.shmem);
-            win.free(env, &pkg);
+            sc.start_scatter(env, root, arg);
+            let off = sc.wait(env);
+            let got = sc.window().unwrap().load(env, off, m);
+            env.barrier(ctx.shmem());
+            sc.free(env);
             got
         });
         for (r, got) in out.into_iter().enumerate() {
-            assert_eq!(got, payload(r, m), "nodes {nodes:?} m {m} root {root} rank {r}");
+            assert_eq!(got, payload(r, m), "nodes {nodes:?} m {m} root {root} k {k} rank {r}");
         }
     }
 
     #[test]
     fn roots_on_every_kind_of_rank() {
-        check(&[5, 3], 16, 0, SyncScheme::Spin); // leader of node 0
-        check(&[5, 3], 16, 5, SyncScheme::Spin); // leader of node 1
-        check(&[5, 3], 16, 2, SyncScheme::Spin); // child on node 0
-        check(&[5, 3], 16, 7, SyncScheme::Barrier); // child on node 1
+        check(&[5, 3], 16, 0, 1, SyncScheme::Spin); // leader of node 0
+        check(&[5, 3], 16, 5, 1, SyncScheme::Spin); // leader of node 1
+        check(&[5, 3], 16, 2, 1, SyncScheme::Spin); // child on node 0
+        check(&[5, 3], 16, 7, 1, SyncScheme::Barrier); // child on node 1
+    }
+
+    #[test]
+    fn multi_leader_roots_everywhere() {
+        for root in [0usize, 1, 6, 7] {
+            check(&[5, 3], 16, root, 2, SyncScheme::Spin);
+            check(&[5, 3], 16, root, 3, SyncScheme::Barrier);
+        }
     }
 
     #[test]
     fn irregular_three_nodes_and_single_node() {
-        check(&[5, 3, 4], 24, 9, SyncScheme::Spin);
-        check(&[6], 8, 3, SyncScheme::Spin);
-        check(&[1], 8, 0, SyncScheme::Barrier);
+        check(&[5, 3, 4], 24, 9, 1, SyncScheme::Spin);
+        check(&[5, 3, 4], 24, 9, 2, SyncScheme::Spin);
+        check(&[6], 8, 3, 2, SyncScheme::Spin);
+        check(&[1], 8, 0, 1, SyncScheme::Barrier);
     }
 
     #[test]
     fn roundtrips_with_hy_gather() {
-        // scatter from rank 2, then gather back to rank 9 — both hybrid.
-        let out = run_nodes(&[5, 3, 4], |env| {
-            let w = env.world();
-            let m = 24usize;
-            let pkg = CommPackage::create(env, &w);
-            let mut win = pkg.alloc_shared(env, m, 1, w.size());
-            let sizeset = sizeset_gather(env, &pkg);
-            let param = AllgatherParam::create(env, &pkg, m, &sizeset);
-            let tables = TransTables::create(env, &pkg);
-            let full: Vec<u8> = (0..w.size()).flat_map(|r| payload(r, m)).collect();
-            let arg = (w.rank() == 2).then_some(&full[..]);
-            hy_scatter(env, &pkg, &mut win, &param, &tables, 2, arg, m, SyncScheme::Spin);
-            let block = win.load(env, win.local_ptr(w.rank(), m), m);
-            // A fresh window for the gather keeps the phases independent.
-            let mut win2 = pkg.alloc_shared(env, m, 1, w.size());
-            win2.store(env, win2.local_ptr(w.rank(), m), &block);
-            crate::hybrid::gather::hy_gather(
-                env, &pkg, &mut win2, &param, &tables, 9, m, SyncScheme::Spin,
-            );
-            let back = if w.rank() == 9 { win2.load(env, 0, m * w.size()) } else { Vec::new() };
-            env.barrier(&pkg.shmem);
-            win.free(env, &pkg);
-            win2.free(env, &pkg);
-            (w.rank() == 9, back, full)
-        });
-        for (is_root, back, full) in out {
-            if is_root {
-                assert_eq!(back, full);
+        // scatter from rank 2, then gather back to rank 9 — both hybrid,
+        // both leader counts.
+        for k in [1usize, 2] {
+            let out = run_nodes(&[5, 3, 4], move |env| {
+                let w = env.world();
+                let m = 24usize;
+                let ctx = HybridCtx::create(env, &w, LeaderPolicy::Leaders(k));
+                let mut sc = ctx.scatter_init(env, m, SyncScheme::Spin);
+                let full: Vec<u8> = (0..w.size()).flat_map(|r| payload(r, m)).collect();
+                let arg = (w.rank() == 2).then_some(&full[..]);
+                sc.start_scatter(env, 2, arg);
+                let off = sc.wait(env);
+                let block = sc.window().unwrap().load(env, off, m);
+                // A fresh handle for the gather keeps the phases independent.
+                let mut g = ctx.gather_init(env, m, SyncScheme::Spin);
+                g.start_gather(env, 9, &block);
+                g.wait(env);
+                let back = if w.rank() == 9 {
+                    g.window().unwrap().load(env, 0, m * w.size())
+                } else {
+                    Vec::new()
+                };
+                env.barrier(ctx.shmem());
+                sc.free(env);
+                g.free(env);
+                (w.rank() == 9, back, full)
+            });
+            for (is_root, back, full) in out {
+                if is_root {
+                    assert_eq!(back, full, "k {k}");
+                }
             }
         }
     }

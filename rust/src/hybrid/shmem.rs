@@ -1,16 +1,22 @@
-//! Shared-region allocation and affinity (§4.1):
+//! Shared-region handles (§4.1): the storage half of
 //! `Wrapper_MPI_Sharedmemory_alloc` + `Wrapper_Get_localpointer`.
+//!
+//! Allocation itself lives on the session
+//! ([`HybridCtx::alloc_shared`](super::ctx::HybridCtx::alloc_shared));
+//! this module holds the window handle the session and its persistent
+//! collectives ([`HyColl`](super::ctx::HyColl)) operate on.
 
-use super::package::CommPackage;
+use super::ctx::HybridCtx;
 use crate::mpi::env::{ProcEnv, Win};
 use crate::mpi::win::SharedWindow;
 use std::sync::Arc;
 
 /// A hybrid shared window: the node's single shared result region.
 ///
-/// The *leader* contributed the full `msize·bsize·flag` bytes; children
-/// contributed zero and attach via `MPI_Win_shared_query` — exactly the
-/// paper's allocation pattern (Fig. 6 lines 12–16).
+/// The *primary leader* contributed the full `msize·bsize·flag` bytes;
+/// everyone else contributed zero and attaches via
+/// `MPI_Win_shared_query` — exactly the paper's allocation pattern
+/// (Fig. 6 lines 12–16).
 pub struct HyWin {
     pub win: Arc<SharedWindow>,
     raw: Option<Win>,
@@ -68,28 +74,10 @@ impl HyWin {
     }
 
     /// Collective free (`MPI_Win_free` inside the wrapper).
-    pub fn free(mut self, env: &mut ProcEnv, pkg: &CommPackage) {
+    pub fn free(mut self, env: &mut ProcEnv, ctx: &HybridCtx) {
         if let Some(raw) = self.raw.take() {
-            raw.free(env, &pkg.shmem);
+            raw.free(env, ctx.shmem());
         }
-    }
-}
-
-impl CommPackage {
-    /// `Wrapper_MPI_Sharedmemory_alloc(msize, bsize, flag, …)`: the leader
-    /// allocates `msize·bsize·flag` bytes shared by the node; children
-    /// attach. One-off cost: the Table-2 "Allocate" law — the base charge
-    /// comes from the window allocation itself, the multi-node saturation
-    /// term is charged here (the wrapper synchronizes all nodes).
-    pub fn alloc_shared(&self, env: &mut ProcEnv, msize: usize, bsize: usize, flag: usize) -> HyWin {
-        let total = msize * bsize * flag;
-        let my_contrib = if self.is_leader() { total } else { 0 };
-        let raw = env.win_allocate_shared(&self.shmem, my_contrib);
-        // Multi-node saturation term of the "Allocate" law.
-        let mgmt = env.state().mgmt.clone();
-        let extra = mgmt.alloc_us(self.bridge_size) - mgmt.alloc_us(1);
-        env.advance(extra.max(0.0));
-        HyWin::new(raw, total)
     }
 }
 
@@ -97,22 +85,23 @@ impl CommPackage {
 mod tests {
     use super::*;
     use crate::coll::testutil::run_nodes;
+    use crate::hybrid::LeaderPolicy;
 
     #[test]
     fn leader_allocates_children_attach() {
         let out = run_nodes(&[5, 3], |env| {
             let w = env.world();
-            let pkg = CommPackage::create(env, &w);
-            let win = pkg.alloc_shared(env, 10, 8, w.size());
+            let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+            let win = ctx.alloc_shared(env, 10, 8, w.size());
             assert_eq!(win.len(), 10 * 8 * 8);
             // Affinity slot = world rank * slot size.
             let off = win.local_ptr(env.world_rank(), 80);
             win.store(env, off, &[env.world_rank() as u8; 80]);
-            env.barrier(&pkg.shmem);
+            env.barrier(ctx.shmem());
             // Every on-node rank sees every on-node write in the shared copy.
             let all = win.load(env, 0, win.len());
-            env.barrier(&pkg.shmem);
-            win.free(env, &pkg);
+            env.barrier(ctx.shmem());
+            win.free(env, &ctx);
             all
         });
         // Node 0 (ranks 0..5) sees slots 0..5 filled; node 1 sees 5..8.
@@ -135,8 +124,8 @@ mod tests {
         // an on-node p2p message of the same size.
         let out = run_nodes(&[2], |env| {
             let w = env.world();
-            let pkg = CommPackage::create(env, &w);
-            let win = pkg.alloc_shared(env, 1024, 8, 1);
+            let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+            let win = ctx.alloc_shared(env, 1024, 8, 1);
             env.harness_sync(&w);
             let t0 = env.vclock();
             if env.world_rank() == 0 {
@@ -152,8 +141,8 @@ mod tests {
             }
             env.harness_sync(&w);
             let p2p_cost = env.vclock() - t1;
-            env.barrier(&pkg.shmem);
-            win.free(env, &pkg);
+            env.barrier(ctx.shmem());
+            win.free(env, &ctx);
             (store_cost, p2p_cost)
         });
         let (store, p2p) = out[0];
@@ -164,9 +153,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "affinity slot out of window")]
     fn local_ptr_bounds_checked() {
-        let w = SharedWindow::allocate(&[64]);
         let hy = HyWin { win: Arc::new(SharedWindow::allocate(&[64])), raw: None, epoch: 0, total: 64 };
-        let _ = w; // silence
         hy.local_ptr(8, 8); // slot 8 of 8-byte slots ends at 72 > 64
     }
 }

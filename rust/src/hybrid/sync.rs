@@ -1,4 +1,5 @@
-//! Node-level synchronization schemes (§4.5).
+//! Node-level synchronization schemes (§4.5), generalized to the
+//! multi-leader session layer.
 //!
 //! Two patterns appear in the hybrid collectives:
 //!
@@ -6,14 +7,22 @@
 //!   ranks (everyone waits for everyone): `MPI_Barrier` on the node
 //!   communicator. Required before a leader may consume its children's
 //!   window writes.
-//! - **yellow sync** — a *release*: children wait only for their leader
-//!   (leader → children). A barrier here would make children handshake
-//!   each other pointlessly (§4.5); the paper's optimization is the
-//!   **spinning** method — a shared status counter the leader increments
-//!   (`status++` + `MPI_Win_sync`), children polling with the
+//! - **yellow sync** — a *release*: children wait only for their node's
+//!   leaders (leader → children). A barrier here would make children
+//!   handshake each other pointlessly (§4.5); the paper's optimization is
+//!   the **spinning** method — a shared status counter the leader
+//!   increments (`status++` + `MPI_Win_sync`), children polling with the
 //!   equality-only exit condition MPI's one-byte-change rule permits.
+//!
+//! With `k > 1` leaders per node ([`HybridCtx`]), the release gains one
+//! extra step: the node's leaders synchronize among themselves (a small
+//! intra-node barrier over the leader group) so every leader's bridge
+//! stripe is published before the *primary* leader (leader 0) posts the
+//! single status flag. With `k = 1` this degenerates to exactly the
+//! paper's release — no leader barrier, one post — so single-leader
+//! virtual time is bit-identical to the pre-session code.
 
-use super::package::CommPackage;
+use super::ctx::HybridCtx;
 use super::shmem::HyWin;
 use crate::mpi::env::ProcEnv;
 
@@ -27,30 +36,38 @@ pub enum SyncScheme {
 }
 
 /// Red sync: full node barrier (all ranks of the node communicator).
-pub fn red_sync(env: &mut ProcEnv, pkg: &CommPackage) {
-    env.barrier(&pkg.shmem);
+pub(crate) fn red_sync(env: &mut ProcEnv, ctx: &HybridCtx) {
+    env.barrier(ctx.shmem());
 }
 
-/// Yellow sync, leader side: release the children.
-pub fn release(env: &mut ProcEnv, pkg: &CommPackage, win: &mut HyWin, scheme: SyncScheme) {
+/// Yellow sync, both sides: leaders publish, children observe.
+///
+/// - `Barrier`: one node barrier orders every leader's writes against
+///   every reader — leaders and children alike.
+/// - `Spin`: with `k > 1` the node's leaders first barrier among
+///   themselves (ordering leaders 1..k's stripes before the post), then
+///   leader 0 increments the status flag; children poll it. Leaders other
+///   than 0 only advance their epoch — the leader barrier already
+///   ordered them past the release point.
+pub(crate) fn complete(env: &mut ProcEnv, ctx: &HybridCtx, win: &mut HyWin, scheme: SyncScheme) {
     match scheme {
-        SyncScheme::Barrier => env.barrier(&pkg.shmem),
-        SyncScheme::Spin => {
-            win.epoch += 1;
-            env.spin_post(&win.win, 0);
-        }
-    }
-}
-
-/// Yellow sync, child side: wait for the leader's release.
-pub fn await_release(env: &mut ProcEnv, pkg: &CommPackage, win: &mut HyWin, scheme: SyncScheme) {
-    match scheme {
-        SyncScheme::Barrier => env.barrier(&pkg.shmem),
-        SyncScheme::Spin => {
-            win.epoch += 1;
-            let target = win.epoch;
-            env.spin_wait(&win.win, 0, target);
-        }
+        SyncScheme::Barrier => env.barrier(ctx.shmem()),
+        SyncScheme::Spin => match ctx.leader_index() {
+            Some(j) => {
+                if let Some(leaders) = ctx.leaders() {
+                    env.barrier(leaders);
+                }
+                win.epoch += 1;
+                if j == 0 {
+                    env.spin_post(&win.win, 0);
+                }
+            }
+            None => {
+                win.epoch += 1;
+                let target = win.epoch;
+                env.spin_wait(&win.win, 0, target);
+            }
+        },
     }
 }
 
@@ -58,26 +75,50 @@ pub fn await_release(env: &mut ProcEnv, pkg: &CommPackage, win: &mut HyWin, sche
 mod tests {
     use super::*;
     use crate::coll::testutil::run_nodes;
+    use crate::hybrid::LeaderPolicy;
 
     #[test]
     fn spin_release_orders_leader_writes() {
         let out = run_nodes(&[6], |env| {
             let w = env.world();
-            let pkg = CommPackage::create(env, &w);
-            let mut win = pkg.alloc_shared(env, 8, 1, 1);
+            let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+            let mut win = ctx.alloc_shared(env, 8, 1, 1);
             for round in 1..=3u8 {
-                if pkg.is_leader() {
+                if ctx.is_leader() {
                     win.store(env, 0, &[round; 8]);
-                    release(env, &pkg, &mut win, SyncScheme::Spin);
-                } else {
-                    await_release(env, &pkg, &mut win, SyncScheme::Spin);
                 }
+                complete(env, &ctx, &mut win, SyncScheme::Spin);
                 let seen = win.load(env, 0, 8);
                 assert_eq!(seen, vec![round; 8], "round {round}");
-                red_sync(env, &pkg); // don't let the leader race ahead
+                red_sync(env, &ctx); // don't let the leader race ahead
             }
             let v = env.vclock();
-            win.free(env, &pkg);
+            win.free(env, &ctx);
+            v
+        });
+        assert!(out.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn multi_leader_release_orders_every_leaders_writes() {
+        // Leaders 0 and 1 each write their half; children must observe
+        // both after one spin release.
+        let out = run_nodes(&[6], |env| {
+            let w = env.world();
+            let ctx = HybridCtx::create(env, &w, LeaderPolicy::Leaders(2));
+            assert_eq!(ctx.leaders_per_node(), 2);
+            let mut win = ctx.alloc_shared(env, 8, 1, 2);
+            for round in 1..=3u8 {
+                if let Some(j) = ctx.leader_index() {
+                    win.store(env, j * 8, &[round; 8]);
+                }
+                complete(env, &ctx, &mut win, SyncScheme::Spin);
+                let seen = win.load(env, 0, 16);
+                assert_eq!(seen, vec![round; 16], "round {round}");
+                red_sync(env, &ctx);
+            }
+            let v = env.vclock();
+            win.free(env, &ctx);
             v
         });
         assert!(out.iter().all(|&v| v > 0.0));
@@ -90,20 +131,16 @@ mod tests {
         let cost = |scheme: SyncScheme| {
             run_nodes(&[16], move |env| {
                 let w = env.world();
-                let pkg = CommPackage::create(env, &w);
-                let mut win = pkg.alloc_shared(env, 8, 1, 1);
+                let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+                let mut win = ctx.alloc_shared(env, 8, 1, 1);
                 env.harness_sync(&w);
                 let t0 = env.vclock();
                 for _ in 0..10 {
-                    if pkg.is_leader() {
-                        release(env, &pkg, &mut win, scheme);
-                    } else {
-                        await_release(env, &pkg, &mut win, scheme);
-                    }
+                    complete(env, &ctx, &mut win, scheme);
                 }
                 let dt = env.vclock() - t0;
-                env.barrier(&pkg.shmem);
-                win.free(env, &pkg);
+                env.barrier(ctx.shmem());
+                win.free(env, &ctx);
                 dt
             })
             .into_iter()

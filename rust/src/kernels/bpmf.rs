@@ -156,16 +156,17 @@ fn rank_program(env: &mut ProcEnv, cfg: BpmfCfg) -> RankStats {
     if hybrid {
         // Seed the shared factor tables in place (the node's single copy,
         // via the plan's window — `Wrapper_Get_localpointer` surface).
-        let pkg = plans.package(&w).expect("hybrid plans build a comm package");
+        let ctx = plans.hybrid_ctx(env, &w, 1).expect("hybrid plans build a session context");
         for side in 0..2 {
             let key =
                 PlanKey::new(&w, CollOp::Allgather, side_msg[side], Datatype::U8, None, flavor, side as u32);
             let win = plans.window_of(&key).expect("hybrid allgather plan is window-backed");
-            if pkg.is_leader() {
+            if ctx.is_leader() {
                 win.win.write(0, to_bytes(&full_init(side)));
             }
         }
-        env.barrier(&pkg.shmem); // initial tables visible node-wide
+        let shmem = ctx.shmem().clone();
+        env.barrier(&shmem); // initial tables visible node-wide
     } else {
         for side in 0..2 {
             locals.push(full_init(side));

@@ -143,9 +143,10 @@ fn rank_program(env: &mut ProcEnv, cfg: PoissonCfg) -> RankStats {
         }
         // Hybrid: ranks must not overwrite their input slots while a slow
         // sibling still reads G — the next store targets a different slot
-        // region than G, but the red sync inside the next hy_allreduce
-        // (method 2) or the reduce (method 1) orders it. For method-2 the
-        // barrier precedes leader reads, so per-slot writes are safe.
+        // region than G, but the red sync inside the next allreduce
+        // handle's wait (method 2) or the reduce (method 1) orders it.
+        // For method-2 the barrier precedes leader reads, so per-slot
+        // writes are safe.
     }
     stats.total_us = env.vclock() - t_start;
     stats.checksum = strip[n..(rows + 1) * n].iter().sum();

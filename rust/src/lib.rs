@@ -22,9 +22,12 @@
 //!   split-binary-tree / pipeline broadcast, ring / recursive-doubling /
 //!   Bruck allgather, recursive-doubling / Rabenseifner allreduce) with
 //!   Open-MPI-style message-size switch points,
-//! - [`hybrid`] — the paper's contribution: the wrapper primitives of §4.1
-//!   and the hybrid collectives of §4.2–§4.4 with the synchronization
-//!   schemes of §4.5 (barrier vs. status-flag spinning),
+//! - [`hybrid`] — the paper's contribution as a **session API**: one
+//!   [`hybrid::HybridCtx`] per communicator (with `k ≥ 1` leaders per
+//!   node striping the bridge across NIC lanes — arXiv 2007.06892) and
+//!   persistent [`hybrid::HyColl`] handles for the collectives of
+//!   §4.2–§4.4 with the synchronization schemes of §4.5 (barrier vs.
+//!   status-flag spinning),
 //! - [`coordinator`] — cluster presets, rank placement, the thread-per-rank
 //!   engine, the OSU-style measurement harness and report writers,
 //! - [`runtime`] — a PJRT client (via the `xla` crate) that loads the

@@ -3,7 +3,7 @@
 //! ```text
 //! hympi figures <name|all> [--out DIR] [--scale X] [--fast]
 //! hympi microbench <allgather|bcast|allreduce|reduce-scatter|gather|scatter>
-//!                  [--preset P] [--nodes N] [--bytes B] [--fast]
+//!                  [--preset P] [--nodes N] [--bytes B] [--leaders K] [--fast]
 //! hympi kernel <summa|poisson|bpmf> [--variant V] [--nodes N] [--n N]
 //!              [--backend B] [--scale X]
 //! hympi info
@@ -28,7 +28,7 @@ fn opt<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
 fn usage() -> ! {
     eprintln!(
         "usage:\n  hympi figures <table1|table2|fig12..fig19|all> [--out DIR] [--scale X] [--fast]\n  \
-         hympi microbench <allgather|bcast|allreduce|reduce-scatter|gather|scatter> [--preset vulcan-sb|vulcan-hsw|hazelhen] [--nodes N] [--bytes B] [--fast]\n  \
+         hympi microbench <allgather|bcast|allreduce|reduce-scatter|gather|scatter> [--preset vulcan-sb|vulcan-hsw|hazelhen] [--nodes N] [--bytes B] [--leaders K] [--fast]\n  \
          hympi kernel <summa|poisson|bpmf> [--variant pure-mpi|mpi+mpi|mpi+openmp] [--nodes N] [--n N] [--backend auto|pjrt|native] [--scale X]\n  \
          hympi info"
     );
@@ -57,6 +57,7 @@ fn main() -> hympi::Result<()> {
                 .unwrap_or_else(|| usage());
             let nodes: usize = opt(&args, "--nodes").and_then(|v| v.parse().ok()).unwrap_or(2);
             let bytes: usize = opt(&args, "--bytes").and_then(|v| v.parse().ok()).unwrap_or(800);
+            let leaders: usize = opt(&args, "--leaders").and_then(|v| v.parse().ok()).unwrap_or(1);
             let fast = flag(&args, "--fast");
             let spec = || ClusterSpec::preset(preset, nodes);
             use hympi::coll::{CollOp, Flavor};
@@ -76,13 +77,14 @@ fn main() -> hympi::Result<()> {
                 fast,
                 coll_op,
                 bytes,
-                Flavor::hybrid(SyncScheme::Spin),
+                Flavor::hybrid_k(SyncScheme::Spin, leaders),
             );
             println!(
-                "{op} on {} x {} ({} B): MPI {:.2} us | hybrid {:.2} us | speedup {:+.1}%",
+                "{op} on {} x {} ({} B, {} leader(s)/node): MPI {:.2} us | hybrid {:.2} us | speedup {:+.1}%",
                 nodes,
                 preset.cores_per_node(),
                 bytes,
+                leaders,
                 pure.mean_us,
                 hy.mean_us,
                 (pure.mean_us - hy.mean_us) / pure.mean_us * 100.0

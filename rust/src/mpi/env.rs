@@ -82,6 +82,11 @@ pub struct ProcEnv {
     /// delivery, window store/load) — debug instrumentation for the
     /// zero-copy tests; independent of virtual-time charging.
     copied: u64,
+    /// NIC lane this rank's inter-node sends currently bind to (default
+    /// 0 — the pre-multi-lane behaviour). The multi-leader hybrid bridge
+    /// rebinds around its bridge step so same-node leaders inject on
+    /// distinct lanes ([`NetModel::nic_lanes`]).
+    nic_lane: usize,
 }
 
 impl ProcEnv {
@@ -96,6 +101,7 @@ impl ProcEnv {
             win_seq: HashMap::new(),
             cores: HashMap::new(),
             copied: 0,
+            nic_lane: 0,
         }
     }
 
@@ -176,6 +182,33 @@ impl ProcEnv {
 
     pub fn net(&self) -> &NetModel {
         &self.state.net
+    }
+
+    /// The NIC lane this rank's inter-node sends currently bind to.
+    pub fn nic_lane(&self) -> usize {
+        self.nic_lane
+    }
+
+    /// Bind this rank's inter-node sends to NIC `lane` (wrapped into the
+    /// model's [`NetModel::nic_lanes`]); returns the previous binding so
+    /// callers can restore it. Everything defaults to lane 0, which makes
+    /// the multi-lane model cost-identical to the old single-NIC model
+    /// until someone (the multi-leader bridge) deliberately spreads out.
+    pub fn set_nic_lane(&mut self, lane: usize) -> usize {
+        let prev = self.nic_lane;
+        self.nic_lane = lane % self.state.net.nic_lanes.max(1);
+        prev
+    }
+
+    /// Run `f` with the NIC binding set to `lane` (wrapped), restoring
+    /// the previous binding afterwards — the guard the multi-leader
+    /// bridge steps use so no path can leak a non-default lane into
+    /// subsequent traffic.
+    pub fn with_nic_lane<R>(&mut self, lane: usize, f: impl FnOnce(&mut ProcEnv) -> R) -> R {
+        let prev = self.set_nic_lane(lane);
+        let r = f(self);
+        self.nic_lane = prev;
+        r
     }
 
     pub fn topo(&self) -> &Topology {
@@ -297,7 +330,7 @@ impl ProcEnv {
         let sent_at = if same {
             self.vclock
         } else {
-            self.state.reserve_nic(self.node(), self.vclock, data.len())
+            self.state.reserve_nic(self.node(), self.nic_lane, self.vclock, data.len())
         };
         self.state.traffic.record(data.len());
         self.state.mailboxes[world_dst].post(Msg {
@@ -373,9 +406,14 @@ impl ProcEnv {
 
     /// Out-of-band send: moves real bytes, charges nothing. Management
     /// operations use this; their cost is charged by calibrated law.
+    /// Control messages bypass the fabric's arrival-ticket counter
+    /// entirely ([`Mailbox::post_ctrl`](super::msg::Mailbox::post_ctrl))
+    /// — their `ANY_SOURCE` receivers are order-insensitive (split/window
+    /// mechanics index replies by source), so the data plane's global
+    /// arrival ordering is one atomic it never needed to pay for.
     pub fn oob_send(&self, comm: &Communicator, dst: usize, tag: i64, data: &[u8]) {
         let world_dst = comm.world_of(dst);
-        self.state.mailboxes[world_dst].post(Msg {
+        self.state.mailboxes[world_dst].post_ctrl(Msg {
             src: comm.rank(),
             tag,
             comm: comm.id(),
@@ -780,6 +818,64 @@ mod tests {
         for v in out {
             assert!(v > 0.0);
         }
+    }
+
+    #[test]
+    fn nic_lane_binding_wraps_and_restores() {
+        let s = two_node_state();
+        let out = run_ranks(&s, |env| {
+            assert_eq!(env.nic_lane(), 0);
+            let prev = env.set_nic_lane(1);
+            assert_eq!(prev, 0);
+            let lane = env.nic_lane();
+            // Wrapping: binding beyond the model's lane count folds back.
+            env.set_nic_lane(env.net().nic_lanes);
+            let wrapped = env.nic_lane();
+            env.set_nic_lane(prev);
+            (lane, wrapped, env.nic_lane())
+        });
+        for (lane, wrapped, restored) in out {
+            assert_eq!(lane, 1);
+            assert_eq!(wrapped, 0);
+            assert_eq!(restored, 0);
+        }
+    }
+
+    #[test]
+    fn distinct_lanes_overlap_same_lane_serializes() {
+        // Rank 0 sends two large cross-node messages: both on lane 0 →
+        // the second's injection waits for the first; on distinct lanes →
+        // both inject starting at the same busy-from point.
+        let s = two_node_state();
+        let out = run_ranks(&s, |env| {
+            let w = env.world();
+            let tag = super::super::USER_TAG_BASE + 77;
+            match env.world_rank() {
+                0 => {
+                    // lane 0 then lane 1: no mutual serialization.
+                    env.send(&w, 2, tag, &[1u8; 100_000]);
+                    env.set_nic_lane(1);
+                    env.send(&w, 3, tag, &[1u8; 100_000]);
+                    env.set_nic_lane(0);
+                    0.0
+                }
+                2 | 3 => {
+                    let (_, _) = env.recv(&w, Some(0), tag);
+                    env.vclock()
+                }
+                _ => 0.0,
+            }
+        });
+        let net = NetModel::infiniband();
+        let occ = net.nic_occupancy(100_000);
+        // Receiver 3's arrival must not include receiver 2's lane-0
+        // occupancy: both finish within ~one occupancy + overheads.
+        assert!(
+            (out[3] - out[2]).abs() < occ * 0.5,
+            "lane-separated sends must overlap: {} vs {}",
+            out[2],
+            out[3]
+        );
     }
 
     #[test]

@@ -11,13 +11,18 @@
 //! - **Fabric** (default, DESIGN.md §5c): the rank's inbox is split into
 //!   [`LANES`] source-sharded lanes (`shard = src % LANES`), each backed
 //!   by an in-crate bounded lock-free ring ([`Ring`], Vyukov-style
-//!   sequence slots) with a mutex-protected overflow spillway and a
-//!   per-lane posted-message sequence counter. The common matched-source
-//!   `recv` drains and scans exactly one lane; `MPI_ANY_SOURCE` falls
-//!   back to a full-lane sweep ordered by a per-mailbox arrival ticket.
-//!   Blocking uses the adaptive spin-then-park [`Doorbell`] instead of a
-//!   condvar, so a post to an idle mailbox is one atomic increment — no
+//!   sequence slots, cache-line-padded) with a mutex-protected overflow
+//!   spillway and a per-lane posted-message sequence counter. The common
+//!   matched-source `recv` drains and scans exactly one lane; `MPI_ANY_SOURCE`
+//!   falls back to a full-lane sweep ordered by a per-mailbox arrival
+//!   ticket. Blocking uses adaptive spin-then-park [`Doorbell`]s — **one
+//!   per lane** plus a summary bell: a matched-source waiter parks on its
+//!   lane's bell and is only woken by that lane's traffic, while the
+//!   summary bell (rung on every post) keeps `MPI_ANY_SOURCE` waiters
+//!   correct. A post to an idle mailbox is two atomic increments — no
 //!   lock handoff, no futex syscall, no wakeup of unrelated waiters.
+//!   Control-plane posts ([`Mailbox::post_ctrl`]) additionally bypass the
+//!   arrival-ticket counter: their receivers are order-insensitive.
 //! - **Legacy**: the pre-PR3 single `Mutex<VecDeque>` + condvar queue,
 //!   kept so `bench_all` can measure both fabrics in one process.
 //!
@@ -77,7 +82,11 @@ pub const LANES: usize = 8;
 const RING_SLOTS: usize = 32;
 
 /// One slot of the bounded MPMC ring: a sequence word (the Vyukov
-/// protocol) plus the uninitialized message cell it guards.
+/// protocol) plus the uninitialized message cell it guards. Padded to a
+/// cache line so concurrent producers claiming adjacent positions never
+/// false-share a line with the consumer's in-flight dequeue (the `(u64,
+/// Msg)` cell is ~72 B, so unpadded slots straddled lines arbitrarily).
+#[repr(align(128))]
 struct Slot {
     seq: AtomicUsize,
     msg: UnsafeCell<MaybeUninit<(u64, Msg)>>,
@@ -189,6 +198,11 @@ struct Lane {
     /// mutex exists to keep the type `Sync` without an unsafe owner
     /// assertion, and costs one uncontended CAS to take.
     pending: Mutex<VecDeque<(u64, Msg)>>,
+    /// Per-lane doorbell (deferred from PR 3): a matched-source waiter
+    /// parks on *its* lane's bell, so it no longer wakes — and rescans —
+    /// on every other lane's traffic. `MPI_ANY_SOURCE` correctness lives
+    /// on the mailbox's summary bell, which every post also rings.
+    bell: Doorbell,
 }
 
 impl Lane {
@@ -200,6 +214,7 @@ impl Lane {
             posted: AtomicU64::new(0),
             taken: AtomicU64::new(0),
             pending: Mutex::new(VecDeque::new()),
+            bell: Doorbell::new(),
         }
     }
 
@@ -231,15 +246,26 @@ impl Lane {
     }
 }
 
+/// Ticket carried by control-plane posts ([`Mailbox::post_ctrl`]): they
+/// skip the arrival counter entirely. `MPI_ANY_SOURCE` control receivers
+/// (split/window mechanics) index replies by source, so the only effect
+/// is that a control message never beats a data message in an any-source
+/// sweep — and the control plane saves the shared `fetch_add`.
+const CTRL_TICKET: u64 = u64::MAX;
+
 /// The sharded, mostly-lock-free transport (DESIGN.md §5c).
 struct Fabric {
     lanes: [Lane; LANES],
-    /// Arrival tickets: total order over posts to this mailbox, used by
-    /// the `MPI_ANY_SOURCE` sweep to pick the earliest match across
-    /// lanes (and by nothing else — matched-source receives never read
-    /// it). One relaxed `fetch_add` per post.
+    /// Arrival tickets: total order over data-plane posts to this
+    /// mailbox, used by the `MPI_ANY_SOURCE` sweep to pick the earliest
+    /// match across lanes (and by nothing else — matched-source receives
+    /// never read it). One relaxed `fetch_add` per data post; control
+    /// posts bypass it ([`CTRL_TICKET`]).
     ticket: AtomicU64,
-    bell: Doorbell,
+    /// Summary bell: rung on *every* post (data and control), waited on
+    /// by `MPI_ANY_SOURCE` receivers only. Matched-source receivers wait
+    /// on their lane's bell instead.
+    summary: Doorbell,
 }
 
 impl Fabric {
@@ -247,12 +273,11 @@ impl Fabric {
         Fabric {
             lanes: std::array::from_fn(|_| Lane::new()),
             ticket: AtomicU64::new(0),
-            bell: Doorbell::new(),
+            summary: Doorbell::new(),
         }
     }
 
-    fn post(&self, msg: Msg) {
-        let t = self.ticket.fetch_add(1, Ordering::Relaxed);
+    fn post_ticketed(&self, t: u64, msg: Msg) {
         let lane = &self.lanes[msg.src % LANES];
         lane.posted.fetch_add(1, Ordering::Relaxed);
         let mut item = (t, msg);
@@ -260,7 +285,9 @@ impl Fabric {
             let mut of = lane.overflow.lock().unwrap();
             if lane.overflowed.load(Ordering::Relaxed) {
                 of.push_back(item);
-                self.bell.ring();
+                drop(of);
+                lane.bell.ring();
+                self.summary.ring();
                 return;
             }
             // Consumer drained the spillway while we waited for the lock;
@@ -273,7 +300,17 @@ impl Fabric {
             lane.overflowed.store(true, Ordering::Release);
             of.push_back(item);
         }
-        self.bell.ring();
+        lane.bell.ring();
+        self.summary.ring();
+    }
+
+    fn post(&self, msg: Msg) {
+        let t = self.ticket.fetch_add(1, Ordering::Relaxed);
+        self.post_ticketed(t, msg);
+    }
+
+    fn post_ctrl(&self, msg: Msg) {
+        self.post_ticketed(CTRL_TICKET, msg);
     }
 
     fn recv(&self, m: Matcher) -> Msg {
@@ -292,7 +329,8 @@ impl Fabric {
         let lane = &self.lanes[src % LANES];
         let mut scanned = 0usize;
         loop {
-            let epoch = self.bell.epoch();
+            // Per-lane bell: only this lane's posts wake (and rescan) us.
+            let epoch = lane.bell.epoch();
             let mut pending = lane.pending.lock().unwrap();
             lane.drain_into(&mut pending);
             if let Some(pos) = pending.iter().skip(scanned).position(|(_, msg)| m.matches(msg)) {
@@ -303,7 +341,7 @@ impl Fabric {
             }
             scanned = pending.len();
             drop(pending);
-            self.bell.wait_change(epoch);
+            lane.bell.wait_change(epoch);
         }
     }
 
@@ -314,7 +352,7 @@ impl Fabric {
     /// fabric's global arrival order whenever posts are ordered at all.
     fn recv_any(&self, m: Matcher) -> Msg {
         loop {
-            let epoch = self.bell.epoch();
+            let epoch = self.summary.epoch();
             let mut best: Option<(u64, usize, usize)> = None; // (ticket, lane, index)
             for (li, lane) in self.lanes.iter().enumerate() {
                 let mut pending = lane.pending.lock().unwrap();
@@ -336,7 +374,7 @@ impl Fabric {
                 lane.taken.fetch_add(1, Ordering::Relaxed);
                 return msg;
             }
-            self.bell.wait_change(epoch);
+            self.summary.wait_change(epoch);
         }
     }
 
@@ -447,6 +485,18 @@ impl Mailbox {
     pub fn post(&self, msg: Msg) {
         match &self.inner {
             Transport::Fabric(f) => f.post(msg),
+            Transport::Legacy(l) => l.post(msg),
+        }
+    }
+
+    /// Deliver a control-plane message: same lanes, same bells, but no
+    /// arrival ticket ([`CTRL_TICKET`]) — the out-of-band mechanics
+    /// (splits, window allocation) identify `ANY_SOURCE` replies by
+    /// source, so the data plane's total arrival order is not needed.
+    /// On the legacy transport this is identical to [`Mailbox::post`].
+    pub fn post_ctrl(&self, msg: Msg) {
+        match &self.inner {
+            Transport::Fabric(f) => f.post_ctrl(msg),
             Transport::Legacy(l) => l.post(msg),
         }
     }
@@ -595,6 +645,52 @@ mod tests {
             }
             assert_eq!(mb.depth(), 0);
         });
+    }
+
+    #[test]
+    fn ctrl_posts_match_and_keep_fifo_without_tickets() {
+        both(|mb| {
+            mb.post_ctrl(msg(1, 7, 0, 0x11));
+            mb.post_ctrl(msg(1, 7, 0, 0x22));
+            mb.post(msg(1, 7, 0, 0x33));
+            let m = Matcher { src: Some(1), tag: 7, comm: 0 };
+            assert_eq!(mb.recv(m).data[0], 0x11, "ctrl stream stays FIFO per source");
+            assert_eq!(mb.recv(m).data[0], 0x22);
+            assert_eq!(mb.recv(m).data[0], 0x33, "data after ctrl still in order");
+            assert_eq!(mb.depth(), 0);
+        });
+    }
+
+    #[test]
+    fn ctrl_posts_wake_any_source_waiters() {
+        both(|mb| {
+            let mb = Arc::new(mb);
+            let mb2 = mb.clone();
+            let h =
+                std::thread::spawn(move || mb2.recv(Matcher { src: None, tag: 4, comm: 0 }).data[0]);
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            mb.post_ctrl(msg(6, 4, 0, 99));
+            assert_eq!(h.join().unwrap(), 99);
+        });
+    }
+
+    #[test]
+    fn matched_waiter_not_woken_needlessly_still_correct() {
+        // Traffic on other lanes must not prevent (or break) a matched
+        // receive on lane 2; the waiter parks on its own lane's bell.
+        let mb = Arc::new(Mailbox::new());
+        let mb2 = mb.clone();
+        let h = std::thread::spawn(move || {
+            mb2.recv(Matcher { src: Some(2), tag: 5, comm: 0 }).data[0]
+        });
+        for i in 0..50u8 {
+            mb.post(msg(1, 5, 0, i)); // lane 1 noise
+            mb.post(msg(3, 5, 0, i)); // lane 3 noise
+        }
+        std::thread::sleep(std::time::Duration::from_millis(15));
+        mb.post(msg(2, 5, 0, 42));
+        assert_eq!(h.join().unwrap(), 42);
+        assert_eq!(mb.depth(), 100);
     }
 
     #[test]

@@ -49,6 +49,16 @@ impl LinkParams {
 pub struct NetModel {
     /// Inter-node fabric.
     pub internode: LinkParams,
+    /// Independent NIC lanes (rails) per node. Each lane serializes its
+    /// own injections at `internode.beta_us_per_byte`; distinct lanes
+    /// overlap. One MPI process drives exactly one lane at a time (the
+    /// arXiv 2401.16551 observation: a single endpoint cannot saturate a
+    /// multi-rail node), so the default binding is lane 0 for every rank
+    /// — all pre-existing traffic patterns serialize exactly as under the
+    /// old single-NIC model — and only the multi-leader hybrid bridge
+    /// ([`crate::hybrid::HybridCtx`]) spreads its leaders across lanes
+    /// (leader `j` → lane `j % nic_lanes`, the arXiv 2007.06892 design).
+    pub nic_lanes: usize,
     /// Per-message latency of intra-node (pure-MPI) p2p (µs).
     pub alpha_shm_us: f64,
     /// Single memory-copy cost (µs/B); intra-node p2p pays it twice.
@@ -84,6 +94,7 @@ impl NetModel {
                 eager_max: 12 * 1024,
                 rndv_alpha_us: 1.1,
             },
+            nic_lanes: 2, // dual-rail IB — one rail per port
             alpha_shm_us: 0.30,
             beta_mem_us_per_byte: 1.0 / 8000.0, // ~8 GB/s single-copy stream
             shm_copies: 2.0,
@@ -107,6 +118,7 @@ impl NetModel {
                 eager_max: 8 * 1024,
                 rndv_alpha_us: 0.6,
             },
+            nic_lanes: 2, // Aries: two injection channels per node model
             alpha_shm_us: 0.25,
             beta_mem_us_per_byte: 1.0 / 10000.0, // Haswell DDR4 stream
             shm_copies: 2.0,
@@ -135,9 +147,12 @@ impl NetModel {
         }
     }
 
-    /// Time `bytes` occupy a node's NIC (µs). All inter-node messages of a
-    /// node share one NIC — the contention that makes a pure collective
-    /// (every rank talking cross-node) lose to a leader-only bridge.
+    /// Time `bytes` occupy one NIC lane of a node (µs). All inter-node
+    /// messages a node injects **on the same lane** serialize — the
+    /// contention that makes a pure collective (every rank talking
+    /// cross-node) lose to a leader-only bridge. Distinct lanes (see
+    /// [`NetModel::nic_lanes`]) proceed in parallel, which is what the
+    /// multi-leader bridge exploits.
     #[inline]
     pub fn nic_occupancy(&self, bytes: usize) -> f64 {
         self.internode.beta_us_per_byte * bytes as f64
@@ -232,6 +247,16 @@ mod tests {
         // §4.5: the spinning release sync must be lighter than a barrier.
         for m in [NetModel::infiniband(), NetModel::aries()] {
             assert!(m.spin_release_us + m.spin_poll_us < m.barrier_round_us * 2.0);
+        }
+    }
+
+    #[test]
+    fn both_presets_model_multiple_nic_lanes() {
+        // The multi-leader bridge needs at least two independent lanes to
+        // overlap; occupancy per lane is unchanged by the lane count.
+        for m in [NetModel::infiniband(), NetModel::aries()] {
+            assert!(m.nic_lanes >= 2, "{}", m.name);
+            assert!(m.nic_occupancy(1 << 20) > 0.0);
         }
     }
 

@@ -190,8 +190,10 @@ pub struct ClusterState {
     pub legacy_fabric: bool,
     pub traffic: TrafficCounters,
     next_comm_id: AtomicU64,
-    /// Per-node NIC busy-until (f64 bits): inter-node sends of a node
-    /// serialize on it (single NIC per node).
+    /// Per-node, per-lane NIC busy-until (f64 bits), laid out
+    /// `node * nic_lanes + lane`: inter-node sends of a node serialize on
+    /// the lane they are bound to ([`NetModel::nic_lanes`] lanes per
+    /// node); distinct lanes overlap.
     nic_busy: Vec<AtomicU64>,
     /// Registry of record for per-communicator slots. Cold path only:
     /// rank threads resolve a communicator's [`CommCore`] here once and
@@ -216,6 +218,7 @@ impl ClusterState {
     ) -> Arc<ClusterState> {
         let world = topo.world_size();
         let nnodes = topo.nnodes();
+        let nic_cells = nnodes * net.nic_lanes.max(1);
         Arc::new(ClusterState {
             topo,
             net,
@@ -227,7 +230,7 @@ impl ClusterState {
             legacy_fabric,
             traffic: TrafficCounters::default(),
             next_comm_id: AtomicU64::new(1), // 0 = world
-            nic_busy: (0..nnodes).map(|_| AtomicU64::new(0)).collect(),
+            nic_busy: (0..nic_cells).map(|_| AtomicU64::new(0)).collect(),
             cores: Mutex::new(HashMap::new()),
         })
     }
@@ -238,14 +241,18 @@ impl ClusterState {
         self.next_comm_id.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Reserve the sending node's NIC for `bytes` starting no earlier than
-    /// `ready`; returns the wire-injection completion time. Concurrent
-    /// senders on a node serialize here — the physical effect behind the
-    /// paper's hybrid advantage (one bridge message per node vs one per
-    /// rank).
-    pub fn reserve_nic(&self, node: usize, ready: f64, bytes: usize) -> f64 {
+    /// Reserve lane `lane` of the sending node's NIC for `bytes` starting
+    /// no earlier than `ready`; returns the wire-injection completion
+    /// time. Concurrent senders on the same lane of a node serialize here
+    /// — the physical effect behind the paper's hybrid advantage (one
+    /// bridge message per node vs one per rank). Distinct lanes overlap;
+    /// everything binds to lane 0 unless it explicitly rebinds
+    /// ([`crate::mpi::env::ProcEnv::set_nic_lane`]), so single-leader and
+    /// pure-MPI traffic serializes exactly as under the old one-NIC model.
+    pub fn reserve_nic(&self, node: usize, lane: usize, ready: f64, bytes: usize) -> f64 {
         let dur = self.net.nic_occupancy(bytes);
-        let cell = &self.nic_busy[node];
+        let lanes = self.net.nic_lanes.max(1);
+        let cell = &self.nic_busy[node * lanes + lane % lanes];
         loop {
             let cur = f64::from_bits(cell.load(Ordering::Acquire));
             let done = cur.max(ready) + dur;
@@ -349,6 +356,23 @@ mod tests {
         let h = MgmtCosts::hazelhen();
         assert!((v.comm_create_us(256) / h.comm_create_us(256) - 10.0).abs() < 1e-9);
         assert!((v.transtable_us(256) / h.transtable_us(256) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nic_lanes_serialize_within_and_overlap_across() {
+        let s = state();
+        let dur = s.net.nic_occupancy(1000);
+        // Two reservations on the same lane back-to-back serialize.
+        let a = s.reserve_nic(0, 0, 0.0, 1000);
+        let b = s.reserve_nic(0, 0, 0.0, 1000);
+        assert!((a - dur).abs() < 1e-12);
+        assert!((b - 2.0 * dur).abs() < 1e-12);
+        // A different lane of the same node is independent.
+        let c = s.reserve_nic(0, 1, 0.0, 1000);
+        assert!((c - dur).abs() < 1e-12, "lane 1 must not see lane 0's occupancy");
+        // Another node is independent too.
+        let d = s.reserve_nic(1, 0, 0.0, 1000);
+        assert!((d - dur).abs() < 1e-12);
     }
 
     #[test]

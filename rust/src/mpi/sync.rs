@@ -21,16 +21,51 @@
 //! rides along in an atomic f64.
 
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 use std::time::Duration;
 
-/// Iterations of `spin_loop` before a waiter starts yielding.
-const SPIN_BUDGET: u32 = 32;
-/// Yields before a waiter escalates to parking (SyncGroup/Doorbell) or
-/// micro-sleeps (SpinFlag). Long enough that the escalation never fires
-/// in a healthy small-scale run; short enough that 1024 blocked rank
-/// threads stop burning the host core almost immediately.
-const YIELD_BUDGET: u32 = 256;
+/// Spin/yield budgets, auto-tuned once per process from
+/// [`std::thread::available_parallelism`] (the PR-3 constants were tuned
+/// for the 1-core CI host and left multi-core runners under-spinning):
+///
+/// - **1 core**: spinning can never observe progress (the producer needs
+///   this very timeslice), so the spin phase is minimal and the yield
+///   phase long — handing the core over is the only way forward.
+/// - **multi-core**: the partner usually runs concurrently, so a longer
+///   spin phase converts most waits into sub-microsecond busy-waits with
+///   no scheduler round-trip, and the yield phase shrinks (yielding on a
+///   lightly-loaded multi-core host mostly spins through the scheduler
+///   anyway — better to park properly and be woken).
+struct Budgets {
+    /// Iterations of `spin_loop` before a waiter starts yielding.
+    spin: u32,
+    /// Yields before a waiter escalates to parking (SyncGroup/Doorbell)
+    /// or micro-sleeps (SpinFlag).
+    yield_: u32,
+}
+
+fn budgets() -> &'static Budgets {
+    static BUDGETS: OnceLock<Budgets> = OnceLock::new();
+    BUDGETS.get_or_init(|| {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        if cores <= 1 {
+            Budgets { spin: 32, yield_: 256 }
+        } else {
+            Budgets { spin: (32 * cores as u32).min(1024), yield_: 64 }
+        }
+    })
+}
+
+#[inline]
+fn spin_budget() -> u32 {
+    budgets().spin
+}
+
+#[inline]
+fn yield_budget() -> u32 {
+    budgets().yield_
+}
+
 /// Bound on every park: turns any lost-wakeup bug into a bounded stall
 /// instead of a hang, and caps the latency cost of a benign race between
 /// "producer rings" and "consumer parks".
@@ -105,12 +140,13 @@ impl Doorbell {
     /// park, each phase bounded; see the module docs for the 1-core-host
     /// fairness argument.
     pub fn wait_change(&self, epoch: u64) {
+        let (spin, yld) = (spin_budget(), yield_budget());
         let mut tries = 0u32;
-        while tries < SPIN_BUDGET + YIELD_BUDGET {
+        while tries < spin + yld {
             if self.events.load(Ordering::SeqCst) != epoch {
                 return;
             }
-            if tries < SPIN_BUDGET {
+            if tries < spin {
                 std::hint::spin_loop();
             } else {
                 std::thread::yield_now();
@@ -190,13 +226,14 @@ impl SyncGroup {
             }
             f64::from_bits(v)
         } else {
+            let (spin, yld) = (spin_budget(), yield_budget());
             let mut tries = 0u32;
             let mut registered = false;
             while self.generation.load(Ordering::Acquire) == gen {
                 tries += 1;
-                if tries < SPIN_BUDGET {
+                if tries < spin {
                     std::hint::spin_loop();
-                } else if tries < SPIN_BUDGET + YIELD_BUDGET {
+                } else if tries < spin + yld {
                     // Single-core host: yield, do not burn the timeslice.
                     std::thread::yield_now();
                 } else {
@@ -258,12 +295,13 @@ impl SpinFlag {
     /// descheduled child observes the previous one cannot strand the child
     /// — the *cost model* still charges the paper's polling scheme.
     pub fn wait_eq(&self, target: u32) -> f64 {
+        let (spin, yld) = (spin_budget(), yield_budget());
         let mut tries = 0u32;
         while self.status.load(Ordering::Acquire) < target {
             tries += 1;
-            if tries < SPIN_BUDGET {
+            if tries < spin {
                 std::hint::spin_loop();
-            } else if tries < SPIN_BUDGET + YIELD_BUDGET {
+            } else if tries < spin + yld {
                 std::thread::yield_now();
             } else {
                 // No doorbell here (the flag models a raw shared-memory
@@ -286,6 +324,17 @@ impl SpinFlag {
 mod tests {
     use super::*;
     use std::sync::Arc;
+
+    #[test]
+    fn budgets_are_sane_for_this_host() {
+        let b = budgets();
+        assert!(b.spin >= 32 && b.spin <= 1024);
+        assert!(b.yield_ >= 64 || b.spin == 32, "1-core keeps the long yield phase");
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        if cores > 1 {
+            assert!(b.spin >= 64, "multi-core hosts spin longer before syscalls");
+        }
+    }
 
     #[test]
     fn atomic_max_keeps_largest() {

@@ -1,0 +1,244 @@
+//! Integration tests for the `HybridCtx` session API (ISSUE 4):
+//! multi-leader (k = 1, 2, 4) hybrid collectives vs the pure-MPI
+//! references, bit-exact on irregular node shapes under both §4.5 sync
+//! schemes; persistent-handle reuse with zero re-setup cost; the
+//! `CommPackage` shim's parity with a k = 1 session; and the multi-lane
+//! NIC acceptance bound (k = 2 strictly cheaper than k = 1 on ≥256 KiB
+//! bridge blocks while k = 1 stays bit-identical to the single-leader
+//! path).
+
+use hympi::coll::{Flavor, PlanCache};
+use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
+use hympi::hybrid::{AllreduceMethod, CommPackage, HybridCtx, LeaderPolicy, SyncScheme};
+use hympi::mpi::{Datatype, ReduceOp};
+use hympi::util::{cast_slice, to_bytes};
+
+fn spec(nodes: &[usize]) -> ClusterSpec {
+    let mut s = ClusterSpec::preset(Preset::VulcanSb, nodes.len());
+    s.nodes = nodes.to_vec();
+    s
+}
+
+/// Deterministic rank-unique byte payload.
+fn payload(r: usize, m: usize) -> Vec<u8> {
+    (0..m).map(|i| (r.wrapping_mul(131) ^ i.wrapping_mul(29)) as u8).collect()
+}
+
+/// Every op, hybrid-at-k vs pure, one irregular cluster shape, one
+/// scheme. Data is integer-valued f64 (or raw bytes), so every reduction
+/// order is exact and the comparison is bit-for-bit.
+fn check_all_ops(nodes: &'static [usize], k: usize, scheme: SyncScheme) {
+    let report = SimCluster::new(spec(nodes)).run(move |env| {
+        let w = env.world();
+        let p = w.size();
+        let me = w.rank();
+        let mut cache = PlanCache::new();
+        let fl = Flavor::hybrid_k(scheme, k);
+        let n = 4usize; // doubles per rank/block
+
+        // allgather --------------------------------------------------
+        let mine: Vec<f64> = (0..n).map(|i| (me * n + i) as f64).collect();
+        let mut pure = vec![0u8; n * 8 * p];
+        cache.allgather(env, &w, Flavor::Pure, to_bytes(&mine), Some(&mut pure));
+        let mut hy = vec![0u8; n * 8 * p];
+        cache.allgather(env, &w, fl, to_bytes(&mine), Some(&mut hy));
+        assert_eq!(pure, hy, "allgather {nodes:?} k {k} {scheme:?}");
+
+        // bcast, rooted at a child on the last node -------------------
+        let root = p - 1;
+        let msg = payload(root, 100);
+        let mut pure_bc = if me == root { msg.clone() } else { vec![0u8; 100] };
+        cache.bcast(env, &w, Flavor::Pure, root, 100, Some(&mut pure_bc));
+        let mut hy_bc = if me == root { msg.clone() } else { vec![0u8; 100] };
+        cache.bcast(env, &w, fl, root, 100, Some(&mut hy_bc));
+        assert_eq!(pure_bc, hy_bc, "bcast {nodes:?} k {k} {scheme:?}");
+
+        // allreduce ---------------------------------------------------
+        let vals: Vec<f64> = (0..n).map(|i| ((me + 1) * (i + 3)) as f64).collect();
+        let mut pure_ar = to_bytes(&vals).to_vec();
+        cache.allreduce(env, &w, Flavor::Pure, Datatype::F64, ReduceOp::Sum, &mut pure_ar);
+        let mut hy_ar = to_bytes(&vals).to_vec();
+        cache.allreduce(env, &w, fl, Datatype::F64, ReduceOp::Sum, &mut hy_ar);
+        assert_eq!(pure_ar, hy_ar, "allreduce {nodes:?} k {k} {scheme:?}");
+
+        // reduce_scatter ----------------------------------------------
+        let full: Vec<f64> = (0..n * p).map(|e| ((me + 1) * (e + 1)) as f64).collect();
+        let mut pure_rs = vec![0u8; n * 8];
+        cache.reduce_scatter(
+            env, &w, Flavor::Pure, Datatype::F64, ReduceOp::Sum, to_bytes(&full), &mut pure_rs,
+        );
+        let mut hy_rs = vec![0u8; n * 8];
+        cache.reduce_scatter(env, &w, fl, Datatype::F64, ReduceOp::Sum, to_bytes(&full), &mut hy_rs);
+        assert_eq!(pure_rs, hy_rs, "reduce_scatter {nodes:?} k {k} {scheme:?}");
+
+        // gather to a mid-cluster child -------------------------------
+        let groot = p / 2;
+        let blk = payload(me, 32);
+        let mut pure_g = vec![0u8; 32 * p];
+        let rb = (me == groot).then_some(&mut pure_g[..]);
+        cache.gather(env, &w, Flavor::Pure, groot, &blk, rb);
+        let mut hy_g = vec![0u8; 32 * p];
+        let rb = (me == groot).then_some(&mut hy_g[..]);
+        cache.gather(env, &w, fl, groot, &blk, rb);
+        if me == groot {
+            assert_eq!(pure_g, hy_g, "gather {nodes:?} k {k} {scheme:?}");
+        }
+
+        // scatter from the same root ----------------------------------
+        let full_sc: Vec<u8> = (0..p).flat_map(|r| payload(r + 7, 32)).collect();
+        let mut pure_sc = vec![0u8; 32];
+        cache.scatter(env, &w, Flavor::Pure, groot, (me == groot).then_some(&full_sc[..]), &mut pure_sc);
+        let mut hy_sc = vec![0u8; 32];
+        cache.scatter(env, &w, fl, groot, (me == groot).then_some(&full_sc[..]), &mut hy_sc);
+        assert_eq!(pure_sc, hy_sc, "scatter {nodes:?} k {k} {scheme:?}");
+        assert_eq!(pure_sc, payload(me + 7, 32));
+
+        env.barrier(&w);
+        cache.free(env);
+        cast_slice::<f64>(&pure_ar)
+    });
+    // Cross-rank agreement of the reduced vector.
+    let first = &report.outputs[0];
+    for got in &report.outputs {
+        assert_eq!(got, first);
+    }
+}
+
+#[test]
+fn k1_matches_pure_on_irregular_shapes_both_schemes() {
+    check_all_ops(&[5, 3, 4], 1, SyncScheme::Spin);
+    check_all_ops(&[5, 3, 4], 1, SyncScheme::Barrier);
+}
+
+#[test]
+fn k2_matches_pure_on_irregular_shapes_both_schemes() {
+    check_all_ops(&[5, 3, 4], 2, SyncScheme::Spin);
+    check_all_ops(&[5, 3, 4], 2, SyncScheme::Barrier);
+    check_all_ops(&[3, 2, 2, 3], 2, SyncScheme::Spin); // clamps to k = 2
+}
+
+#[test]
+fn k4_matches_pure_on_irregular_shapes_both_schemes() {
+    // Smallest node hosts 4 ranks, so k = 4 runs unclamped.
+    check_all_ops(&[5, 4, 7], 4, SyncScheme::Spin);
+    check_all_ops(&[5, 4, 7], 4, SyncScheme::Barrier);
+    // And a shape where k = 4 clamps (min population 3).
+    check_all_ops(&[5, 3], 4, SyncScheme::Spin);
+}
+
+#[test]
+fn persistent_handles_reuse_without_resetup() {
+    // The MPI_Allreduce_init shape: one init, many start/wait cycles —
+    // stable window identity, and identical steady-state virtual time
+    // per invocation (nothing re-split, re-gathered or re-allocated).
+    let report = SimCluster::new(spec(&[5, 3])).run(|env| {
+        let w = env.world();
+        let ctx = HybridCtx::create(env, &w, LeaderPolicy::Leaders(2));
+        let mut ag = ctx.allgather_init(env, 256, SyncScheme::Spin);
+        let mut ar = ctx.allreduce_init(
+            env, Datatype::F64, ReduceOp::Sum, 64, AllreduceMethod::Tuned, SyncScheme::Spin,
+        );
+        let win0 = ag.window().map(|h| h.win.as_ref() as *const _ as usize).unwrap();
+        let mine = vec![w.rank() as u8; 256];
+        let vals = vec![(w.rank() + 1) as f64; 8];
+        let mut dts = Vec::new();
+        for _ in 0..4 {
+            env.harness_sync(&w);
+            let t0 = env.vclock();
+            ag.start_allgather(env, &mine);
+            ag.wait(env);
+            ar.start_allreduce(env, to_bytes(&vals));
+            ar.wait(env);
+            dts.push(env.vclock() - t0);
+        }
+        let win1 = ag.window().map(|h| h.win.as_ref() as *const _ as usize).unwrap();
+        env.barrier(ctx.shmem());
+        ag.free(env);
+        ar.free(env);
+        (win0 == win1, dts)
+    });
+    for (stable, dts) in report.outputs {
+        assert!(stable, "windows must survive across start/wait cycles");
+        assert!(
+            (dts[1] - dts[2]).abs() < 1e-9 && (dts[2] - dts[3]).abs() < 1e-9,
+            "per-invocation vtime must be constant in steady state (zero re-setup): {dts:?}"
+        );
+    }
+}
+
+#[test]
+fn comm_package_shim_parity_with_k1_session() {
+    // The shim is a frozen view of HybridCtx k = 1: identical shapes,
+    // identical creation charge, and a collective run through the shim's
+    // backing session matches a directly-created session bit-for-bit.
+    let report = SimCluster::new(spec(&[5, 3])).run(|env| {
+        let w = env.world();
+        env.harness_sync(&w);
+        let t0 = env.vclock();
+        let pkg = CommPackage::create(env, &w);
+        let shim_create = env.vclock() - t0;
+        env.harness_sync(&w);
+        let t1 = env.vclock();
+        let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+        let direct_create = env.vclock() - t1;
+
+        // Same collective through both sessions.
+        let mine = payload(w.rank(), 48);
+        let run = |env: &mut hympi::mpi::ProcEnv,
+                   ctx: &std::rc::Rc<HybridCtx>,
+                   mine: &[u8]| {
+            let mut ag = ctx.allgather_init(env, 48, SyncScheme::Spin);
+            env.harness_sync(ctx.parent());
+            let t = env.vclock();
+            ag.start_allgather(env, mine);
+            ag.wait(env);
+            let dt = env.vclock() - t;
+            let all = ag.window().unwrap().load(env, 0, 48 * ctx.parent().size());
+            env.barrier(ctx.shmem());
+            ag.free(env);
+            (all, dt)
+        };
+        let (shim_res, shim_dt) = run(env, pkg.ctx(), &mine);
+        let (direct_res, direct_dt) = run(env, &ctx, &mine);
+        (shim_create, direct_create, shim_res, direct_res, shim_dt, direct_dt)
+    });
+    for (sc, dc, sres, dres, sdt, ddt) in report.outputs {
+        assert!((sc - dc).abs() < 1e-9, "creation charge: shim {sc} vs session {dc}");
+        assert_eq!(sres, dres, "results must be bit-identical");
+        assert!((sdt - ddt).abs() < 1e-9, "steady-state vtime: shim {sdt} vs session {ddt}");
+    }
+}
+
+#[test]
+fn k2_strictly_below_k1_on_256kib_bridge_blocks_and_k1_unchanged() {
+    // The PR-4 acceptance criterion. 16-rank VulcanSb nodes at
+    // 16 KiB/rank make 256 KiB node blocks on the bridge.
+    let msg = 16 * 1024;
+    let vt_and_bytes = |k: usize| {
+        let report = SimCluster::new(ClusterSpec::preset(Preset::VulcanSb, 2)).run(move |env| {
+            let w = env.world();
+            let ctx = HybridCtx::create(env, &w, LeaderPolicy::Leaders(k));
+            let mut ag = ctx.allgather_init(env, msg, SyncScheme::Spin);
+            let mine = payload(w.rank() % 13, msg);
+            env.harness_sync(&w);
+            let t0 = env.vclock();
+            ag.start_allgather(env, &mine);
+            ag.wait(env);
+            let dt = env.vclock() - t0;
+            let digest = ag.window().unwrap().load(env, 0, msg * w.size());
+            env.barrier(ctx.shmem());
+            ag.free(env);
+            (dt, digest)
+        });
+        let vt = report.outputs.iter().map(|(dt, _)| *dt).fold(0.0f64, f64::max);
+        let bytes = report.outputs[0].1.clone();
+        (vt, bytes)
+    };
+    let (vt1, bytes1) = vt_and_bytes(1);
+    let (vt2, bytes2) = vt_and_bytes(2);
+    let (vt4, bytes4) = vt_and_bytes(4);
+    assert!(vt2 < vt1, "k=2 modeled vtime ({vt2}) must be strictly below k=1 ({vt1})");
+    assert_eq!(bytes1, bytes2, "result bytes must not depend on k");
+    assert_eq!(bytes1, bytes4, "result bytes must not depend on k");
+    assert!(vt4 <= vt2 * 1.5, "k=4 must not regress catastrophically ({vt4} vs k=2 {vt2})");
+}

@@ -4,7 +4,7 @@
 
 use hympi::coll;
 use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
-use hympi::hybrid::{self, AllreduceMethod, CommPackage, SyncScheme, TransTables};
+use hympi::hybrid::{AllreduceMethod, HybridCtx, LeaderPolicy, SyncScheme};
 use hympi::kernels::{self, Backend, Variant};
 use hympi::mpi::{Datatype, ReduceOp};
 use hympi::util::{cast_slice, to_bytes};
@@ -16,57 +16,58 @@ fn spec(nodes: &[usize]) -> ClusterSpec {
 }
 
 /// A full hybrid program exercising all three collectives back-to-back on
-/// one comm package — the composition pattern of a real application.
+/// one session context — the composition pattern of a real application.
+/// Runs at one and two leaders per node.
 #[test]
 fn hybrid_program_composes_all_three_collectives() {
-    let report = SimCluster::new(spec(&[5, 3, 4])).run(|env| {
-        let w = env.world();
-        let p = w.size();
-        let me = w.rank();
-        let pkg = CommPackage::create(env, &w);
+    for k in [1usize, 2] {
+        let report = SimCluster::new(spec(&[5, 3, 4])).run(move |env| {
+            let w = env.world();
+            let p = w.size();
+            let me = w.rank();
+            let ctx = HybridCtx::create(env, &w, LeaderPolicy::Leaders(k));
 
-        // allgather: every rank contributes 3 doubles.
-        let msg = 24usize;
-        let mut ag_win = pkg.alloc_shared(env, msg, 1, p);
-        let sizeset = hybrid::sizeset_gather(env, &pkg);
-        let param = hybrid::AllgatherParam::create(env, &pkg, msg, &sizeset);
-        let mine = [me as f64, 2.0 * me as f64, -1.0];
-        ag_win.store(env, ag_win.local_ptr(me, msg), to_bytes(&mine));
-        hybrid::hy_allgather(env, &pkg, &mut ag_win, &param, msg, SyncScheme::Spin);
-        let gathered: Vec<f64> = cast_slice(&ag_win.load(env, 0, msg * p));
+            // allgather: every rank contributes 3 doubles.
+            let msg = 24usize;
+            let mut ag = ctx.allgather_init(env, msg, SyncScheme::Spin);
+            let mine = [me as f64, 2.0 * me as f64, -1.0];
+            ag.start_allgather(env, to_bytes(&mine));
+            ag.wait(env);
+            let gathered: Vec<f64> = cast_slice(&ag.window().unwrap().load(env, 0, msg * p));
 
-        // bcast: rank 7 (a child) broadcasts a derived value.
-        let mut bc_win = pkg.alloc_shared(env, 8, 1, 1);
-        let tables = TransTables::create(env, &pkg);
-        let root = 7usize;
-        let payload = [gathered.iter().sum::<f64>()];
-        let arg = (me == root).then(|| to_bytes(&payload));
-        hybrid::hy_bcast(env, &pkg, &mut bc_win, &tables, root, arg.as_deref(), 8, SyncScheme::Spin);
-        let broadcasted = cast_slice::<f64>(&bc_win.load(env, 0, 8))[0];
+            // bcast: rank 7 (a child) broadcasts a derived value.
+            let mut bc = ctx.bcast_init(env, 8, SyncScheme::Spin);
+            let root = 7usize;
+            let payload = [gathered.iter().sum::<f64>()];
+            let arg = (me == root).then(|| to_bytes(&payload));
+            bc.start_bcast(env, root, arg.as_deref());
+            bc.wait(env);
+            let broadcasted = cast_slice::<f64>(&bc.window().unwrap().load(env, 0, 8))[0];
 
-        // allreduce: max of (rank * broadcasted-sign).
-        let mut ar_win = hybrid::allreduce::alloc_allreduce_win(env, &pkg, 8);
-        ar_win.store(env, ar_win.local_ptr(pkg.shmem.rank(), 8), to_bytes(&[me as f64]));
-        let g = hybrid::hy_allreduce(
-            env, &pkg, &mut ar_win, Datatype::F64, ReduceOp::Max, 8,
-            AllreduceMethod::Tuned, SyncScheme::Spin,
-        );
-        let reduced = cast_slice::<f64>(&ar_win.load(env, g, 8))[0];
+            // allreduce: max over ranks.
+            let mut ar = ctx.allreduce_init(
+                env, Datatype::F64, ReduceOp::Max, 8, AllreduceMethod::Tuned, SyncScheme::Spin,
+            );
+            ar.start_allreduce(env, to_bytes(&[me as f64]));
+            let g = ar.wait(env);
+            let reduced = cast_slice::<f64>(&ar.window().unwrap().load(env, g, 8))[0];
 
-        env.barrier(&pkg.shmem);
-        ag_win.free(env, &pkg);
-        bc_win.free(env, &pkg);
-        ar_win.free(env, &pkg);
-        (gathered, broadcasted, reduced)
-    });
+            env.barrier(ctx.shmem());
+            ag.free(env);
+            bc.free(env);
+            ar.free(env);
+            (gathered, broadcasted, reduced)
+        });
 
-    let p = 12;
-    let expect_gather: Vec<f64> = (0..p).flat_map(|r| [r as f64, 2.0 * r as f64, -1.0]).collect();
-    let expect_bcast: f64 = expect_gather.iter().sum();
-    for (gathered, broadcasted, reduced) in report.outputs {
-        assert_eq!(gathered, expect_gather);
-        assert_eq!(broadcasted, expect_bcast);
-        assert_eq!(reduced, (p - 1) as f64);
+        let p = 12;
+        let expect_gather: Vec<f64> =
+            (0..p).flat_map(|r| [r as f64, 2.0 * r as f64, -1.0]).collect();
+        let expect_bcast: f64 = expect_gather.iter().sum();
+        for (gathered, broadcasted, reduced) in report.outputs {
+            assert_eq!(gathered, expect_gather, "k {k}");
+            assert_eq!(broadcasted, expect_bcast, "k {k}");
+            assert_eq!(reduced, (p - 1) as f64, "k {k}");
+        }
     }
 }
 
@@ -81,16 +82,15 @@ fn pure_and_hybrid_allreduce_agree_numerically() {
             let mut pure = to_bytes(&vals).to_vec();
             coll::allreduce(env, &w, Datatype::F64, ReduceOp::Sum, &mut pure, coll::AllreduceAlgo::Auto);
 
-            let pkg = CommPackage::create(env, &w);
-            let mut win = hybrid::allreduce::alloc_allreduce_win(env, &pkg, 16);
-            win.store(env, win.local_ptr(pkg.shmem.rank(), 16), to_bytes(&vals));
-            let g = hybrid::hy_allreduce(
-                env, &pkg, &mut win, Datatype::F64, ReduceOp::Sum, 16,
-                AllreduceMethod::Method2, SyncScheme::Barrier,
+            let ctx = HybridCtx::create(env, &w, LeaderPolicy::Leaders(2));
+            let mut ar = ctx.allreduce_init(
+                env, Datatype::F64, ReduceOp::Sum, 16, AllreduceMethod::Method2, SyncScheme::Barrier,
             );
-            let hy = win.load(env, g, 16);
-            env.barrier(&pkg.shmem);
-            win.free(env, &pkg);
+            ar.start_allreduce(env, to_bytes(&vals));
+            let g = ar.wait(env);
+            let hy = ar.window().unwrap().load(env, g, 16);
+            env.barrier(ctx.shmem());
+            ar.free(env);
             (cast_slice::<f64>(&pure), cast_slice::<f64>(&hy))
         });
         for (pure, hy) in report.outputs {

@@ -161,8 +161,8 @@ fn plan_cache_reuses_plans_windows_and_tables() {
 
 #[test]
 fn per_communicator_one_off_state_is_shared() {
-    // Multiple plans on one communicator must share the comm package
-    // (one pair of splits), like SUMMA's row/column pattern.
+    // Multiple plans on one communicator must share the session context
+    // (one set of splits), like SUMMA's row/column pattern.
     let report = SimCluster::new(spec(&[4, 4])).run(|env| {
         let w = env.world();
         let mut cache = PlanCache::new();
@@ -170,8 +170,8 @@ fn per_communicator_one_off_state_is_shared() {
         cache.plan(env, &w, CollOp::Allgather, 32, Datatype::U8, None, fl);
         cache.plan(env, &w, CollOp::Bcast, 64, Datatype::U8, None, fl);
         cache.plan(env, &w, CollOp::Allreduce, 8, Datatype::F64, Some(ReduceOp::Sum), fl);
-        let pkg = cache.package(&w).unwrap();
-        let stats = (cache.len(), pkg.shmem_size, pkg.bridge_size);
+        let ctx = cache.hybrid_ctx(env, &w, 1).unwrap();
+        let stats = (cache.len(), ctx.shmem_size(), ctx.nnodes());
         env.barrier(&w);
         cache.free(env);
         stats

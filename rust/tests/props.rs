@@ -5,7 +5,7 @@
 
 use hympi::coll;
 use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
-use hympi::hybrid::{CommPackage, TransTables};
+use hympi::hybrid::{HybridCtx, LeaderPolicy};
 use hympi::mpi::topo::{Placement, Topology};
 use hympi::util::quickprop::{default_cases, run};
 use hympi::util::Rng;
@@ -77,9 +77,9 @@ fn prop_transtables_are_consistent_bijections() {
         |nodes| {
             let report = SimCluster::new(spec_for(nodes)).run(|env| {
                 let w = env.world();
-                let pkg = CommPackage::create(env, &w);
-                let t = TransTables::create(env, &pkg);
-                (t.shmem, t.bridge, pkg.shmem_size, pkg.bridge_size)
+                let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+                let t = ctx.tables(env);
+                (t.shmem.clone(), t.bridge.clone(), ctx.shmem_size(), ctx.nnodes())
             });
             let world: usize = nodes.iter().sum();
             for (shmem, bridge, _, bridge_size) in &report.outputs {
