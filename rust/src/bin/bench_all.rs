@@ -1,25 +1,26 @@
-//! `bench_all` — the tracked data-plane/fabric/session performance
-//! baseline.
+//! `bench_all` — the tracked data-plane/fabric/session/overlap
+//! performance baseline.
 //!
-//! PR 4 edition: the PR-3 fabric comparison (every case runs twice in one
-//! process — lock-free fabric vs the emulated pre-PR3
-//! `ClusterSpec::legacy_fabric`) is kept, and a **leader sweep** is
-//! added: fig15/fig16-style engine-scale cases (512 and 1024 ranks) run
-//! the hybrid collectives at k ∈ {1, 2, 4} leaders per node through the
-//! `HybridCtx` session API, recording modeled virtual time (the
-//! multi-lane NIC model makes k > 1 genuinely cheaper on large bridge
-//! blocks) and wall clock. Everything lands in `BENCH_PR4.json` at the
-//! repo root.
+//! PR 5 edition: the PR-3 fabric comparison and the PR-4 leader sweep
+//! are kept, and two sections are added:
 //!
-//! Modeled virtual time must not depend on the fabric (asserted per
-//! case); the parity runs assert bit-identical result bytes and per-rank
-//! virtual clocks across fabrics (now including a k = 2 multi-leader
-//! collective); and the leader sweep asserts the PR-4 acceptance bound —
-//! k = 2 modeled vtime strictly below k = 1 on a ≥256 KiB-node-block
-//! allgather.
+//! - **irregular engine-scale cases** — the §5.2.2 partially-populated
+//!   VulcanSb shapes (12 of 16 cores per node) at 512 and 1024 ranks,
+//!   alongside the fully-populated cases they mirror;
+//! - an **overlap sweep** — blocking vs split-phase (DESIGN.md §5e) for
+//!   the micro probe (pipelined Fixed-root bcast against modeled
+//!   compute), the SUMMA kernel (next panel's broadcasts prefetched
+//!   under the dgemm) and the Poisson kernel (halo exchange hidden
+//!   under the interior sweep), asserting split strictly below blocking
+//!   where the panels are ≥ 256 KiB.
+//!
+//! Everything lands in `BENCH_PR5.json` at the repo root. Modeled
+//! virtual time must not depend on the fabric (asserted per case); the
+//! parity runs assert bit-identical result bytes and per-rank virtual
+//! clocks across fabrics.
 //!
 //! ```text
-//! cargo run --release --bin bench_all              # full sweep, writes BENCH_PR4.json
+//! cargo run --release --bin bench_all              # full sweep, writes BENCH_PR5.json
 //! cargo run --release --bin bench_all -- --smoke   # CI-sized sweep (same pipeline)
 //! cargo run --release --bin bench_all -- --strict  # exit non-zero below the speedup targets
 //! cargo run --release --bin bench_all -- --out P   # alternate output path
@@ -27,8 +28,9 @@
 
 use hympi::coll::{CollOp, Flavor, PlanCache};
 use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
-use hympi::figures::common::drive_report;
+use hympi::figures::common::{drive_report, overlap_probe};
 use hympi::hybrid::SyncScheme;
+use hympi::kernels::poisson::{run as poisson_run, PoissonCfg};
 use hympi::kernels::summa::{run as summa_run, SummaCfg};
 use hympi::kernels::{Backend, Variant};
 use hympi::mpi::env::ProcEnv;
@@ -230,10 +232,115 @@ fn leader_sweep(
     }
 }
 
-fn write_json(path: &str, mode: &str, cases: &[Case], sweep: &[LeaderCase]) {
+/// One blocking-vs-split-phase comparison point (modeled vtime is the
+/// number under test; `gain` = 1 − split/blocking).
+struct OverlapCase {
+    name: String,
+    blocking_us: f64,
+    split_us: f64,
+    wall_ms: f64,
+}
+
+impl OverlapCase {
+    fn gain(&self) -> f64 {
+        if self.blocking_us > 0.0 {
+            1.0 - self.split_us / self.blocking_us
+        } else {
+            0.0
+        }
+    }
+}
+
+fn report_overlap(c: &OverlapCase) {
+    println!(
+        "{:<36} blocking {:>12.2} us | split {:>12.2} us | {:>5.1}% hidden | wall {:>8.1} ms",
+        c.name,
+        c.blocking_us,
+        c.split_us,
+        c.gain() * 100.0,
+        c.wall_ms
+    );
+}
+
+/// The split-phase micro probe: pipelined Fixed-root bcast vs modeled
+/// compute, blocking and split legs through the same handle shape.
+fn probe_case(name: &str, spec: ClusterSpec, bytes: usize, compute_us: f64, fast: bool) -> OverlapCase {
+    let t0 = Instant::now();
+    let (blocking_us, split_us) = overlap_probe(spec, bytes, compute_us, 4, fast);
+    let case = OverlapCase {
+        name: name.to_string(),
+        blocking_us,
+        split_us,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    };
+    report_overlap(&case);
+    case
+}
+
+/// SUMMA blocking-hybrid vs split-phase-overlap on one spec. `assert_win`
+/// enforces the PR-5 acceptance bound (≥ 256 KiB panels: split strictly
+/// below blocking) and the two variants' result parity.
+fn summa_overlap_case(name: &str, spec: ClusterSpec, n: usize, backend: Backend, assert_win: bool) -> OverlapCase {
+    let cfg = |variant| SummaCfg { n, variant, backend, threads: 1 };
+    let t0 = Instant::now();
+    let blocking = summa_run(spec.clone(), cfg(Variant::HybridMpiMpi));
+    let split = summa_run(spec, cfg(Variant::HybridOverlap));
+    assert!(
+        (blocking.checksum - split.checksum).abs() <= 1e-9 * blocking.checksum.abs().max(1.0),
+        "{name}: split-phase SUMMA must reproduce the blocking result"
+    );
+    if assert_win {
+        assert!(
+            split.total_us < blocking.total_us,
+            "{name}: split-phase SUMMA ({}) must be strictly below blocking ({})",
+            split.total_us,
+            blocking.total_us
+        );
+    }
+    let case = OverlapCase {
+        name: name.to_string(),
+        blocking_us: blocking.total_us,
+        split_us: split.total_us,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    };
+    report_overlap(&case);
+    case
+}
+
+/// Poisson blocking-hybrid vs split-phase-overlap (fixed iteration count
+/// so both variants run identical work).
+fn poisson_overlap_case(name: &str, spec: ClusterSpec, n: usize, iters: usize, backend: Backend) -> OverlapCase {
+    let cfg = |variant| PoissonCfg { n, tol: 0.0, max_iters: iters, variant, backend, threads: 1 };
+    let t0 = Instant::now();
+    let blocking = poisson_run(spec.clone(), cfg(Variant::HybridMpiMpi));
+    let split = poisson_run(spec, cfg(Variant::HybridOverlap));
+    if backend != Backend::Phantom {
+        assert!(
+            (blocking.checksum - split.checksum).abs() <= 1e-9 * blocking.checksum.abs().max(1.0),
+            "{name}: split-phase Poisson must reproduce the blocking result"
+        );
+    }
+    assert_eq!(blocking.iters, split.iters, "{name}: identical iteration counts");
+    assert!(
+        split.total_us < blocking.total_us,
+        "{name}: split-phase Poisson ({}) must be strictly below blocking ({})",
+        split.total_us,
+        blocking.total_us
+    );
+    let case = OverlapCase {
+        name: name.to_string(),
+        blocking_us: blocking.total_us,
+        split_us: split.total_us,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    };
+    report_overlap(&case);
+    case
+}
+
+fn write_json(path: &str, mode: &str, cases: &[Case], sweep: &[LeaderCase], overlap: &[OverlapCase]) {
     let mut s = String::new();
     s.push_str("{\n");
-    s.push_str("  \"pr\": 4,\n");
+    s.push_str("  \"pr\": 5,\n");
     s.push_str(&format!("  \"mode\": \"{mode}\",\n"));
     s.push_str("  \"generated_by\": \"cargo run --release --bin bench_all\",\n");
     s.push_str(
@@ -241,9 +348,13 @@ fn write_json(path: &str, mode: &str, cases: &[Case], sweep: &[LeaderCase]) {
          message fabric (ClusterSpec::legacy_fabric; a conservative baseline — see DESIGN.md §5c, \
          so wall_speedup is a lower bound) in the same process on the same machine; modeled_us is \
          asserted identical on both fabrics and the parity runs assert bit-identical result bytes. \
-         leader_sweep: the same hybrid collective at k leaders per node through the HybridCtx \
-         session API (multi-lane NIC model, DESIGN.md §5d) — modeled_us is the number that moves \
-         with k; k=2 is asserted strictly below k=1 on the large-block allgather.\",\n",
+         '_irreg' cases run the §5.2.2 partially-populated VulcanSb shapes (12 of 16 cores per \
+         node). leader_sweep: the same hybrid collective at k leaders per node through the \
+         HybridCtx session API (multi-lane NIC model, DESIGN.md §5d). overlap: blocking vs \
+         split-phase execution of the same hybrid workload (schedule/progress engine, DESIGN.md \
+         §5e) — split_us strictly below blocking_us is asserted for the >=256 KiB SUMMA panels \
+         and the Poisson halo overlap; kernel cases at engine scale use the phantom compute \
+         backend (modeled charge, no host arithmetic).\",\n",
     );
     s.push_str("  \"cases\": [\n");
     for (i, c) in cases.iter().enumerate() {
@@ -272,6 +383,20 @@ fn write_json(path: &str, mode: &str, cases: &[Case], sweep: &[LeaderCase]) {
             if i + 1 < sweep.len() { "," } else { "" }
         ));
     }
+    s.push_str("  ],\n");
+    s.push_str("  \"overlap\": [\n");
+    for (i, c) in overlap.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"blocking_us\": {:.3}, \"split_us\": {:.3}, \
+             \"hidden_frac\": {:.4}, \"wall_ms\": {:.3}}}{}\n",
+            c.name,
+            c.blocking_us,
+            c.split_us,
+            c.gain(),
+            c.wall_ms,
+            if i + 1 < overlap.len() { "," } else { "" }
+        ));
+    }
     s.push_str("  ]\n}\n");
     std::fs::write(path, s).unwrap_or_else(|e| panic!("write {path}: {e}"));
     println!("wrote {path}");
@@ -286,12 +411,13 @@ fn main() {
         .position(|a| a == "--out")
         .and_then(|i| args.get(i + 1))
         .cloned()
-        .unwrap_or_else(|| "BENCH_PR4.json".to_string());
+        .unwrap_or_else(|| "BENCH_PR5.json".to_string());
     let hy = Flavor::hybrid(SyncScheme::Spin);
     let sb = Preset::VulcanSb;
     let hh = Preset::HazelHen;
     let mut cases = Vec::new();
     let mut sweep = Vec::new();
+    let mut overlap = Vec::new();
 
     // Result-level parity first: cheap, and a parity bug must fail the
     // run before any timing is reported.
@@ -340,6 +466,42 @@ fn main() {
             true,
             true,
         );
+        // Irregular engine-scale, CI-sized: a §5.2.2 partially-populated
+        // shape (12 of 16 cores) at 96 ranks.
+        cases.push(coll_case(
+            "fig16_allgather_2KiB_96r_irreg",
+            ClusterSpec::preset_partial(sb, 96, 12),
+            CollOp::Allgather,
+            2 * 1024,
+            hy,
+            true,
+        ));
+        // Overlap sweep, CI-sized: micro probe at 256 KiB, a 36-rank
+        // irregular SUMMA with >=256 KiB panels (phantom compute — the
+        // win bound is asserted), and a 16-rank Poisson halo overlap.
+        overlap.push(probe_case(
+            "overlap_bcast_256KiB_2n",
+            ClusterSpec::preset(sb, 2),
+            256 * 1024,
+            2_000.0,
+            true,
+        ));
+        let mut irregular36 = ClusterSpec::preset(sb, 3);
+        irregular36.nodes = vec![16, 16, 4];
+        overlap.push(summa_overlap_case(
+            "overlap_summa_n1092_36r",
+            irregular36,
+            1092, // 182x182 panels = 259 KiB
+            Backend::Phantom,
+            true,
+        ));
+        overlap.push(poisson_overlap_case(
+            "overlap_poisson_n64_16r",
+            ClusterSpec::preset(sb, 1),
+            64,
+            20,
+            Backend::Modeled,
+        ));
     } else {
         // The PR-2 acceptance pair (256 KiB hybrid, 2 nodes), now timed
         // across fabrics: the ≥1.2x satellite targets.
@@ -403,6 +565,33 @@ fn main() {
             hy,
             true,
         ));
+        // The §5.2.2 partially-populated VulcanSb shapes mirroring the
+        // 512/1024-rank engine-scale cases above: 12 of 16 cores per
+        // node, trailing node smaller still.
+        cases.push(coll_case(
+            "fig16_allgather_2KiB_512r_irreg",
+            ClusterSpec::preset_partial(sb, 512, 12),
+            CollOp::Allgather,
+            2 * 1024,
+            hy,
+            true,
+        ));
+        cases.push(coll_case(
+            "fig15_allreduce_8KiB_512r_irreg",
+            ClusterSpec::preset_partial(sb, 512, 12),
+            CollOp::Allreduce,
+            8 * 1024,
+            hy,
+            true,
+        ));
+        cases.push(coll_case(
+            "fig16_allgather_2KiB_1024r_irreg",
+            ClusterSpec::preset_partial(sb, 1024, 12),
+            CollOp::Allgather,
+            2 * 1024,
+            hy,
+            true,
+        ));
         cases.push(summa_case(false));
         // Leader sweep at engine scale (the ISSUE-4 satellite): 512 and
         // 1024 ranks, k ∈ {1, 2, 4}. The 16 KiB/rank allgather makes
@@ -436,8 +625,36 @@ fn main() {
             false,
             true,
         );
+        // Overlap sweep at engine scale (the PR-5 acceptance bound): the
+        // ~512-rank SUMMA shape is 484 = 22² ranks block-filled onto
+        // 16-core nodes (30 full + one 4-rank node — irregular), with
+        // 182×182 f64 panels (259 KiB ≥ 256 KiB); split-phase must be
+        // strictly below blocking. Poisson runs the §5.2.2
+        // partially-populated 512-rank shape. Both use phantom compute
+        // (modeled charge, no host arithmetic) at this scale.
+        overlap.push(probe_case(
+            "overlap_bcast_256KiB_8n",
+            ClusterSpec::preset(sb, 8),
+            256 * 1024,
+            2_000.0,
+            true,
+        ));
+        overlap.push(summa_overlap_case(
+            "overlap_summa_n4004_484r",
+            ClusterSpec::preset_total_ranks(sb, 484),
+            4004, // 22×22 grid, 182×182 panels = 259 KiB
+            Backend::Phantom,
+            true,
+        ));
+        overlap.push(poisson_overlap_case(
+            "overlap_poisson_n2048_512r_irreg",
+            ClusterSpec::preset_partial(sb, 512, 12),
+            2048,
+            20,
+            Backend::Phantom,
+        ));
     }
-    write_json(&out, if smoke { "smoke" } else { "full" }, &cases, &sweep);
+    write_json(&out, if smoke { "smoke" } else { "full" }, &cases, &sweep, &overlap);
     if !smoke {
         // The PR-3 acceptance headline: the lock-free fabric must beat
         // the old fabric ≥ 2x wall-clock on at least one 1024-rank case

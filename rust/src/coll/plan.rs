@@ -203,6 +203,16 @@ pub trait CollPlan {
         None
     }
 
+    /// Split-phase adapter: the persistent [`HyColl`] request behind a
+    /// hybrid plan, for callers that want to drive it through the
+    /// [`HyReq`](crate::hybrid::HyReq) surface (`start_*` → overlap
+    /// compute → `test`/`wait`) instead of the blocking
+    /// [`CollPlan::execute`]. `None` for pure/hier plans — they have no
+    /// nonblocking form.
+    fn split_handle(&mut self) -> Option<&mut HyColl> {
+        None
+    }
+
     /// Collective teardown (frees shared windows). Called by
     /// [`PlanCache::free`] in plan-creation order on every rank.
     fn teardown(&mut self, env: &mut ProcEnv) {
@@ -414,6 +424,10 @@ impl CollPlan for HybridPlan {
         self.coll.window()
     }
 
+    fn split_handle(&mut self) -> Option<&mut HyColl> {
+        Some(&mut self.coll)
+    }
+
     fn teardown(&mut self, env: &mut ProcEnv) {
         self.coll.free(env);
     }
@@ -597,6 +611,23 @@ impl PlanCache {
     /// Look up a live plan by key.
     pub fn get(&self, key: &PlanKey) -> Option<&dyn CollPlan> {
         self.index.get(key).map(|&i| self.entries[i].1.as_ref())
+    }
+
+    /// Split-phase adapter: plan-or-hit a *hybrid* plan for `key`'s shape
+    /// and return its persistent [`HyColl`] request, ready for
+    /// `start_* → test/progress → wait` driving (the nonblocking face of
+    /// [`CollPlan::execute`]). Panics if `key.flavor` is not hybrid —
+    /// pure plans have no split-phase form.
+    pub fn split_plan(&mut self, env: &mut ProcEnv, comm: &Communicator, key: PlanKey) -> &mut HyColl {
+        assert!(
+            matches!(key.flavor, Flavor::Hybrid { .. }),
+            "split-phase execution requires a hybrid flavor"
+        );
+        let i = self.plan_tagged(env, comm, key.op, key.count, key.dtype, key.rop, key.flavor, key.tag);
+        self.entries[i]
+            .1
+            .split_handle()
+            .expect("hybrid plans always carry a split-phase handle")
     }
 
     // ---- typed execute helpers (plan-or-hit, then run) ---------------
@@ -917,6 +948,51 @@ mod tests {
             (pure_ag, pure_ar, pure_rs)
         });
         assert_eq!(out.len(), 9);
+    }
+
+    #[test]
+    fn split_plan_adapter_drives_the_persistent_handle() {
+        let out = run_nodes(&[5, 3], |env| {
+            let w = env.world();
+            let mut cache = PlanCache::new();
+            let fl = Flavor::hybrid(SyncScheme::Spin);
+            let key = PlanKey::new(&w, CollOp::Allgather, 16, Datatype::U8, None, fl, 0);
+            let mine = payload(w.rank(), 16);
+            // First access plans (collective); start/wait through the
+            // split-phase face of the same handle.
+            {
+                let h = cache.split_plan(env, &w, key.clone());
+                h.start_allgather(env, &mine);
+                h.wait(env);
+            }
+            let got = cache.allgather_view(&w, fl, 16, 16 * w.size()).unwrap().to_vec();
+            // Second access must hit the cache (same handle, no re-plan)
+            // and interoperate with the blocking execute path.
+            let misses_before = cache.misses();
+            let mut blocking = vec![0u8; 16 * w.size()];
+            cache.allgather(env, &w, fl, &mine, Some(&mut blocking));
+            assert_eq!(cache.misses(), misses_before, "split_plan and execute share one plan");
+            assert_eq!(got, blocking);
+            let shmem = cache.hybrid_ctx(env, &w, 1).unwrap().shmem().clone();
+            env.barrier(&shmem);
+            cache.free(env);
+            got
+        });
+        let expect: Vec<u8> = (0..8).flat_map(|r| payload(r, 16)).collect();
+        for got in out {
+            assert_eq!(got, expect);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "split-phase execution requires a hybrid flavor")]
+    fn split_plan_rejects_pure_flavor() {
+        run_nodes(&[2], |env| {
+            let w = env.world();
+            let mut cache = PlanCache::new();
+            let key = PlanKey::new(&w, CollOp::Allgather, 8, Datatype::U8, None, Flavor::Pure, 0);
+            cache.split_plan(env, &w, key);
+        });
     }
 
     #[test]

@@ -56,6 +56,9 @@ impl SimCluster {
         T: Send + 'static,
         F: Fn(&mut ProcEnv) -> T + Send + Sync + 'static,
     {
+        // Apply the spec's park-bound choice (wall-clock wakeup latency
+        // only; 0 = auto-tune from the host core count).
+        crate::mpi::sync::set_park_bound_us(self.spec.park_bound_us.unwrap_or(0));
         let topo = Topology::new(&self.spec.nodes, self.spec.placement);
         let world = topo.world_size();
         let state = ClusterState::with_options(

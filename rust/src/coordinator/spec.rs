@@ -83,6 +83,11 @@ pub struct ClusterSpec {
     /// Identical messages, results and virtual time; `bench_all` uses it
     /// to measure the wall-clock gap.
     pub legacy_fabric: bool,
+    /// Park-timeout bound for blocked rank threads (µs). `None` keeps the
+    /// auto-tuned default (2 ms on a 1-core host, 500 µs multi-core —
+    /// [`crate::mpi::sync::park_bound`]). Wall-clock knob only: modeled
+    /// virtual time and results never depend on it.
+    pub park_bound_us: Option<u64>,
 }
 
 impl ClusterSpec {
@@ -98,7 +103,24 @@ impl ClusterSpec {
             preset_name: p.name(),
             legacy_dataplane: false,
             legacy_fabric: false,
+            park_bound_us: None,
         }
+    }
+
+    /// Request `total` ranks on `per_node`-way partially-populated nodes
+    /// of a preset platform — the §5.2.2 configuration where an
+    /// application deliberately under-fills nodes (e.g. for memory per
+    /// rank), leaving every node irregular relative to the hardware and
+    /// the trailing node irregular relative to its siblings.
+    pub fn preset_partial(p: Preset, total: usize, per_node: usize) -> ClusterSpec {
+        assert!(total > 0 && per_node > 0 && per_node <= p.cores_per_node());
+        let full = total / per_node;
+        let rem = total % per_node;
+        let mut nodes = vec![per_node; full];
+        if rem > 0 {
+            nodes.push(rem);
+        }
+        ClusterSpec { nodes, ..ClusterSpec::preset(p, 1) }
     }
 
     /// Request `total` ranks on a preset platform, filling whole nodes
@@ -144,6 +166,11 @@ impl ClusterSpec {
         self.legacy_fabric = legacy;
         self
     }
+
+    pub fn with_park_bound_us(mut self, us: u64) -> ClusterSpec {
+        self.park_bound_us = Some(us);
+        self
+    }
 }
 
 #[cfg(test)]
@@ -173,6 +200,19 @@ mod tests {
         let s = ClusterSpec::preset_total_ranks(Preset::VulcanSb, 64);
         assert_eq!(s.nnodes(), 4);
         assert!(s.nodes.iter().all(|&c| c == 16));
+    }
+
+    #[test]
+    fn partial_population_shapes() {
+        // 512 ranks at 12 of 16 cores per VulcanSb node: 42 nodes of 12
+        // plus a trailing node of 8 — every node partially populated.
+        let s = ClusterSpec::preset_partial(Preset::VulcanSb, 512, 12);
+        assert_eq!(s.world_size(), 512);
+        assert_eq!(s.nnodes(), 43);
+        assert!(s.nodes[..42].iter().all(|&c| c == 12));
+        assert_eq!(*s.nodes.last().unwrap(), 8);
+        assert!(s.park_bound_us.is_none(), "auto park bound by default");
+        assert_eq!(s.with_park_bound_us(250).park_bound_us, Some(250));
     }
 
     #[test]

@@ -11,7 +11,7 @@
 
 use crate::coll::{CollOp, Flavor, PlanCache};
 use crate::coordinator::{measure_collective, ClusterSpec, MeasureConfig};
-use crate::hybrid::{AllreduceMethod, SyncScheme};
+use crate::hybrid::{AllreduceMethod, HyColl, HybridCtx, LeaderPolicy, RootPolicy, SyncScheme};
 use crate::mpi::{Datatype, ReduceOp};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -215,6 +215,56 @@ pub fn hy_allreduce_k(
     fast: bool,
 ) -> f64 {
     drive(spec, fast, CollOp::Allreduce, bytes, Flavor::hybrid_k(scheme, leaders))
+}
+
+/// Split-phase overlap micro-probe (DESIGN.md §5e): one `bytes`-byte
+/// hybrid broadcast from a [`RootPolicy::Fixed`] root with `depth`
+/// pipelined bridge chunks, against `compute_us` of modeled per-rank
+/// compute. Returns `(blocking_us, split_us)` per iteration: the
+/// blocking leg completes the broadcast *then* computes (`start; wait;
+/// compute`); the split leg computes between `start` and `wait`, so the
+/// root-side chunks injected inside `start` and the release flag overlap
+/// the compute — `split ≤ blocking` always, strictly below once the
+/// bridge has anything to hide.
+pub fn overlap_probe(
+    spec: ClusterSpec,
+    bytes: usize,
+    compute_us: f64,
+    depth: usize,
+    fast: bool,
+) -> (f64, f64) {
+    struct St {
+        h: HyColl,
+        data: Vec<u8>,
+    }
+    let leg = |spec: ClusterSpec, split: bool| {
+        let cfg = cfg_for(&spec, fast);
+        measure_collective(
+            spec,
+            cfg,
+            move |env| {
+                let w = env.world();
+                let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+                let h = ctx.bcast_init_split(env, bytes, SyncScheme::Spin, RootPolicy::Fixed(0), depth);
+                St { h, data: vec![0xA5u8; bytes] }
+            },
+            move |env, st, _| {
+                let w = env.world();
+                let arg = (w.rank() == 0).then_some(&st.data[..]);
+                if split {
+                    st.h.start_bcast(env, 0, arg);
+                    env.compute(compute_us);
+                    st.h.wait(env);
+                } else {
+                    st.h.start_bcast(env, 0, arg);
+                    st.h.wait(env);
+                    env.compute(compute_us);
+                }
+            },
+        )
+        .mean
+    };
+    (leg(spec.clone(), false), leg(spec, true))
 }
 
 /// Pure ring reduce-scatter latency; `bytes` = full input vector.

@@ -17,7 +17,8 @@
 
 use super::ctx::{HybridCtx, StripeTable};
 use super::shmem::HyWin;
-use super::sync::{complete, red_sync, SyncScheme};
+#[cfg(test)]
+use super::sync::SyncScheme;
 use crate::coll::allgather::{allgatherv, allgatherv_inplace, allgatherv_offsets};
 use crate::mpi::env::ProcEnv;
 
@@ -42,20 +43,17 @@ impl AllgatherParam {
     }
 }
 
-/// Complete a started allgather: red sync, (striped) bridge exchange in
-/// place on the shared window, yellow sync. With `k = 1` (empty
-/// `stripes`) this is byte- and vtime-identical to the pre-session
-/// `Wrapper_Hy_Allgather`.
-pub(crate) fn run(
+/// The leaders' bridge exchange — the `Work` stage of the allgather
+/// schedule, executed between the red sync and the yellow release. With
+/// `k = 1` (empty `stripes`) this is byte- and vtime-identical to the
+/// pre-session `Wrapper_Hy_Allgather` bridge step.
+pub(crate) fn bridge(
     env: &mut ProcEnv,
     ctx: &HybridCtx,
     win: &mut HyWin,
     param: &AllgatherParam,
     stripes: &[StripeTable],
-    scheme: SyncScheme,
 ) {
-    // Red sync: all on-node contributions must be in the window.
-    red_sync(env, ctx);
     if let Some(j) = ctx.leader_index() {
         let bridge = ctx.bridge().expect("leaders hold a bridge").clone();
         let full_len: usize = param.recvcounts.iter().sum();
@@ -86,7 +84,6 @@ pub(crate) fn run(
             });
         }
     }
-    complete(env, ctx, win, scheme);
 }
 
 #[cfg(test)]

@@ -28,7 +28,8 @@
 
 use super::ctx::HybridCtx;
 use super::shmem::HyWin;
-use super::sync::{complete, red_sync, SyncScheme};
+#[cfg(test)]
+use super::sync::SyncScheme;
 use crate::coll::allreduce::{allreduce, AllreduceAlgo};
 use crate::coll::reduce::reduce;
 use crate::mpi::env::ProcEnv;
@@ -54,13 +55,16 @@ fn slots(ctx: &HybridCtx, msize: usize) -> (usize, usize) {
     (ctx.shmem_size() * msize, (ctx.shmem_size() + 1) * msize)
 }
 
-/// Complete a started allreduce (operands already stored at the per-rank
-/// slots); returns the window offset of slot `G`. With `k = 1` (empty
-/// `vec_stripes`) every branch is byte- and vtime-identical to the
-/// pre-session `Wrapper_Hy_Allreduce`; `method` arrives resolved (never
-/// [`AllreduceMethod::Tuned`]).
+/// Step 1 — the node-level reduction into `L` (the first `Work` stage of
+/// the allreduce schedule). Method 1 runs on *every* rank (the
+/// `MPI_Reduce` over the node communicator); method 2 runs on leaders
+/// only, *after* the schedule's red sync. The method-1 leader barrier and
+/// the method-2 red sync live in the schedule, not here. With `k = 1`
+/// (empty `vec_stripes`) every branch is byte- and vtime-identical to
+/// the pre-session `Wrapper_Hy_Allreduce` step 1; `method` arrives
+/// resolved (never [`AllreduceMethod::Tuned`]).
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn run(
+pub(crate) fn step1(
     env: &mut ProcEnv,
     ctx: &HybridCtx,
     win: &mut HyWin,
@@ -69,12 +73,9 @@ pub(crate) fn run(
     msize: usize,
     method: AllreduceMethod,
     vec_stripes: &[(usize, usize)],
-    scheme: SyncScheme,
-) -> usize {
-    let (l_off, g_off) = slots(ctx, msize);
+) {
+    let (l_off, _) = slots(ctx, msize);
     let shmem_size = ctx.shmem_size();
-
-    // ---- step 1: node-level reduction into L -------------------------
     match method {
         AllreduceMethod::Method1 => {
             // MPI_Reduce over the node communicator; operands read from
@@ -106,20 +107,17 @@ pub(crate) fn run(
                 }
             }
             // Leaders 1..k read L, which only leader 0 holds so far: the
-            // leader group must synchronize before the striped step 2
-            // (`leaders()` is `Some` only on leaders when k > 1).
-            if let Some(leaders) = ctx.leaders() {
-                env.barrier(leaders);
-            }
+            // schedule synchronizes the leader group right after this
+            // stage, before the striped step 2.
         }
         AllreduceMethod::Method2 => {
-            // Red sync so every input slot is visible, then the leaders
-            // reduce serially straight out of the shared window into
-            // slot L (slot 0 seeds L; slots 1.. fold into it — the same
-            // combine order as the legacy accumulator, so results are
-            // bit-identical). With k > 1 each leader folds only its own
-            // stripe — disjoint L ranges, no leader sync needed here.
-            red_sync(env, ctx);
+            // The schedule's red sync has made every input slot visible;
+            // the leaders reduce serially straight out of the shared
+            // window into slot L (slot 0 seeds L; slots 1.. fold into it
+            // — the same combine order as the legacy accumulator, so
+            // results are bit-identical). With k > 1 each leader folds
+            // only its own stripe — disjoint L ranges, no leader sync
+            // needed here.
             if let Some(j) = ctx.leader_index() {
                 let (off, len) = if vec_stripes.is_empty() {
                     (0, msize)
@@ -152,8 +150,22 @@ pub(crate) fn run(
         }
         AllreduceMethod::Tuned => unreachable!("Tuned resolves at *_init"),
     }
+}
 
-    // ---- step 2: bridge allreduce into G + yellow sync ----------------
+/// Step 2 — `G := L` plus the (striped) bridge allreduce into `G`
+/// (leaders only; the second `Work` stage). The yellow release follows
+/// in the schedule. Byte- and vtime-identical to the pre-session step 2
+/// for `k = 1`.
+pub(crate) fn step2(
+    env: &mut ProcEnv,
+    ctx: &HybridCtx,
+    win: &mut HyWin,
+    dtype: Datatype,
+    op: ReduceOp,
+    msize: usize,
+    vec_stripes: &[(usize, usize)],
+) {
+    let (l_off, g_off) = slots(ctx, msize);
     if let Some(j) = ctx.leader_index() {
         let bridge = ctx.bridge().expect("leaders hold a bridge").clone();
         let (off, len) = if vec_stripes.is_empty() { (0, msize) } else { vec_stripes[j] };
@@ -181,8 +193,6 @@ pub(crate) fn run(
             }
         }
     }
-    complete(env, ctx, win, scheme);
-    g_off
 }
 
 #[cfg(test)]

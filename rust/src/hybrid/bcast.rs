@@ -16,9 +16,10 @@
 //! `Wrapper_Get_transtable` (their one-off build cost is the quadratic
 //! Table-2 "Bcast_transtable" law), cached on the [`HybridCtx`].
 
-use super::ctx::HybridCtx;
+use super::ctx::{chunk_bounds, HybridCtx};
 use super::shmem::HyWin;
-use super::sync::{complete, red_sync, SyncScheme};
+#[cfg(test)]
+use super::sync::SyncScheme;
 use crate::coll::bcast::{bcast, BcastAlgo};
 use crate::mpi::env::ProcEnv;
 
@@ -58,33 +59,21 @@ impl TransTables {
     }
 }
 
-/// Complete a started broadcast (payload already stored at offset 0 of
-/// the root's node window); afterwards every rank can read the payload at
-/// offset 0 of its node's shared window. With `k = 1` (empty
-/// `vec_stripes`) this is byte- and vtime-identical to the pre-session
-/// `Wrapper_Hy_Bcast`.
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn run(
+/// The leaders' across-node broadcast — the (single, `depth = 1`) `Work`
+/// stage of the bcast schedule, executed after the root-node red sync and
+/// before the yellow release. With `k = 1` (empty `vec_stripes`) this is
+/// byte- and vtime-identical to the pre-session `Wrapper_Hy_Bcast`
+/// bridge step. (All ranks may read the single shared copy after the
+/// release — children perform no explicit copy; they read in place via
+/// the local pointer.)
+pub(crate) fn bridge(
     env: &mut ProcEnv,
     ctx: &HybridCtx,
     win: &mut HyWin,
-    tables: &TransTables,
     vec_stripes: &[(usize, usize)],
-    root: usize,
+    root_node: usize,
     len: usize,
-    scheme: SyncScheme,
 ) {
-    let root_node = tables.bridge[root];
-    let root_is_primary = tables.shmem[root] == 0;
-    let k = ctx.leaders_per_node();
-
-    // The root's node leaders must observe the payload before forwarding
-    // across the bridge: red sync on the root's node whenever the root is
-    // a child — or whenever k > 1 (leaders 1..k read what the root, even
-    // root = leader 0, stored).
-    if (!root_is_primary || k > 1) && ctx.node_index() == root_node {
-        red_sync(env, ctx);
-    }
     // Leaders broadcast across the bridge, rooted at the root's node.
     if let Some(j) = ctx.leader_index() {
         let bridge = ctx.bridge().expect("leaders hold a bridge").clone();
@@ -103,9 +92,54 @@ pub(crate) fn run(
             }
         }
     }
-    complete(env, ctx, win, scheme);
-    // All ranks may now read the single shared copy (children perform no
-    // explicit copy here — they read in place via the local pointer).
+}
+
+/// One pipelined bridge sub-step (`depth > 1` handles, DESIGN.md §5e):
+/// chunk `c` of `nchunks` over leader `j`'s payload range, moved by a
+/// flat per-start fan-out instead of the tree — the root-node leader
+/// *sends* its chunk to every other node's same-index leader (eager, so
+/// it can run inside `start`, before any non-root rank arrives:
+/// root-side pipelining), and each receiving leader drains chunks in
+/// FIFO order (one tag per start; chunk identity is positional). The
+/// message pattern deliberately differs from the `depth = 1` tree — a
+/// documented property of the opt-in pipelined mode, traded for
+/// launch-at-start overlap.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn bridge_chunk(
+    env: &mut ProcEnv,
+    ctx: &HybridCtx,
+    win: &mut HyWin,
+    vec_stripes: &[(usize, usize)],
+    root_node: usize,
+    len: usize,
+    chunk: usize,
+    nchunks: usize,
+    tag: i64,
+) {
+    let Some(j) = ctx.leader_index() else { return };
+    let bridge = ctx.bridge().expect("leaders hold a bridge").clone();
+    if bridge.size() <= 1 {
+        return;
+    }
+    // Zero-length chunks are still sent/received: chunk identity is
+    // positional in the FIFO stream, so receivers (and their probes)
+    // must see one message per chunk regardless of the split.
+    let (base_off, base_len) = if vec_stripes.is_empty() { (0, len) } else { vec_stripes[j] };
+    let (lo, clen) = chunk_bounds(base_len, nchunks, chunk);
+    let off = base_off + lo;
+    env.with_nic_lane(j, |env| {
+        if bridge.rank() == root_node {
+            let data = unsafe { win.win.slice(off, clen) };
+            for r in 0..bridge.size() {
+                if r != root_node {
+                    env.send(&bridge, r, tag, data);
+                }
+            }
+        } else {
+            let out = unsafe { win.win.slice_mut(off, clen) };
+            env.recv_into(&bridge, Some(root_node), tag, out);
+        }
+    });
 }
 
 #[cfg(test)]

@@ -44,10 +44,11 @@
 use super::allgather::AllgatherParam;
 use super::allreduce::{AllreduceMethod, METHOD_CUTOFF_BYTES};
 use super::bcast::TransTables;
+use super::progress::{self, HyReq, RootPolicy, Scope, Schedule, Stage};
 use super::shmem::HyWin;
 use super::sync::SyncScheme;
 use crate::mpi::comm::UNDEFINED;
-use crate::mpi::env::ProcEnv;
+use crate::mpi::env::{opcode, ProcEnv};
 use crate::mpi::topo::Placement;
 use crate::mpi::{Communicator, Datatype, ReduceOp};
 use std::cell::RefCell;
@@ -81,6 +82,16 @@ impl LeaderPolicy {
 pub(crate) struct StripeTable {
     pub(crate) counts: Vec<usize>,
     pub(crate) offsets: Vec<usize>,
+}
+
+/// Chunk `c` of `n` over a `len`-byte range: `(offset, len)` with
+/// balanced integer division (the pipelined bridge sub-steps of
+/// `depth > 1` handles; byte-granular — chunk boundaries never split a
+/// reduction element because only the copy-only rooted ops chunk).
+pub(crate) fn chunk_bounds(len: usize, n: usize, c: usize) -> (usize, usize) {
+    let lo = len * c / n;
+    let hi = len * (c + 1) / n;
+    (lo, hi - lo)
 }
 
 /// Stripe `j` of `k` over `len` bytes in `align`-byte units:
@@ -365,50 +376,69 @@ impl HybridCtx {
         let win = self.alloc_shared(env, count, 1, self.parent.size());
         let stripes = self.node_stripes(&param, 1);
         self.charge_stripe_tables(env);
-        HyColl {
-            ctx: self.clone(),
-            op: HyOp::Allgather,
+        self.build(
+            HyOp::Allgather,
             count,
-            dtype: Datatype::U8,
-            rop: None,
+            Datatype::U8,
+            None,
             scheme,
-            method: AllreduceMethod::Method1,
-            win: Some(win),
-            param: Some(param),
-            tables: None,
-            sizeset: Vec::new(),
+            AllreduceMethod::Method1,
+            win,
+            Some(param),
+            None,
+            Vec::new(),
             stripes,
-            vec_stripes: Vec::new(),
-            started: false,
-            pending_root: 0,
-        }
+            Vec::new(),
+            RootPolicy::PerStart,
+            1,
+        )
     }
 
     /// Persistent hybrid broadcast of `len`-byte payloads. The root is
     /// bound per `start` (the window and translation tables are
-    /// root-independent — a documented deviation from
-    /// `MPI_Bcast_init`, which SUMMA's rotating-root phases rely on).
+    /// root-independent — a documented deviation from `MPI_Bcast_init`,
+    /// which SUMMA's rotating-root phases rely on). For the strict
+    /// `MPI_Bcast_init` shape — and the root-side pipelining it enables —
+    /// see [`HybridCtx::bcast_init_split`].
     pub fn bcast_init(self: &Rc<Self>, env: &mut ProcEnv, len: usize, scheme: SyncScheme) -> HyColl {
+        self.bcast_init_split(env, len, scheme, RootPolicy::PerStart, 1)
+    }
+
+    /// [`HybridCtx::bcast_init`] with an explicit [`RootPolicy`] and a
+    /// bridge pipelining `depth`. With `depth > 1` the leaders' bridge
+    /// step becomes `depth` chunked sub-steps over a flat per-start
+    /// fan-out, so the root's node can inject chunks inside `start` —
+    /// before any non-root rank has arrived — and receivers drain them
+    /// chunk-by-chunk via probes (`HyReq::test`). `depth = 1` keeps the
+    /// tree bridge of the blocking path (bit- and vtime-identical).
+    pub fn bcast_init_split(
+        self: &Rc<Self>,
+        env: &mut ProcEnv,
+        len: usize,
+        scheme: SyncScheme,
+        policy: RootPolicy,
+        depth: usize,
+    ) -> HyColl {
+        assert!(depth >= 1, "pipelining depth must be at least 1");
         let tables = self.tables(env);
         let win = self.alloc_shared(env, len, 1, 1);
         let vec_stripes = self.vec_stripes(len, 1);
-        HyColl {
-            ctx: self.clone(),
-            op: HyOp::Bcast,
-            count: len,
-            dtype: Datatype::U8,
-            rop: None,
+        self.build(
+            HyOp::Bcast,
+            len,
+            Datatype::U8,
+            None,
             scheme,
-            method: AllreduceMethod::Method1,
-            win: Some(win),
-            param: None,
-            tables: Some(tables),
-            sizeset: Vec::new(),
-            stripes: Vec::new(),
+            AllreduceMethod::Method1,
+            win,
+            None,
+            Some(tables),
+            Vec::new(),
+            Vec::new(),
             vec_stripes,
-            started: false,
-            pending_root: 0,
-        }
+            policy,
+            depth,
+        )
     }
 
     /// Persistent hybrid allreduce of `msize`-byte operands. `method`
@@ -427,23 +457,22 @@ impl HybridCtx {
         let method = resolve_method(method, msize);
         let win = self.alloc_shared(env, msize, 1, self.shmem_size + 2);
         let vec_stripes = self.vec_stripes(msize, dtype.size());
-        HyColl {
-            ctx: self.clone(),
-            op: HyOp::Allreduce,
-            count: msize,
+        self.build(
+            HyOp::Allreduce,
+            msize,
             dtype,
-            rop: Some(rop),
+            Some(rop),
             scheme,
             method,
-            win: Some(win),
-            param: None,
-            tables: None,
-            sizeset: Vec::new(),
-            stripes: Vec::new(),
+            win,
+            None,
+            None,
+            Vec::new(),
+            Vec::new(),
             vec_stripes,
-            started: false,
-            pending_root: 0,
-        }
+            RootPolicy::PerStart,
+            1,
+        )
     }
 
     /// Persistent hybrid reduce-scatter with `count`-byte result blocks.
@@ -471,28 +500,42 @@ impl HybridCtx {
         let stripes = self.node_stripes(&param, dtype.size());
         let vec_stripes = self.vec_stripes(total, dtype.size());
         self.charge_stripe_tables(env);
-        HyColl {
-            ctx: self.clone(),
-            op: HyOp::ReduceScatter,
+        self.build(
+            HyOp::ReduceScatter,
             count,
             dtype,
-            rop: Some(rop),
+            Some(rop),
             scheme,
             method,
-            win: Some(win),
-            param: Some(param),
-            tables: None,
-            sizeset: sizeset.to_vec(),
+            win,
+            Some(param),
+            None,
+            sizeset.to_vec(),
             stripes,
             vec_stripes,
-            started: false,
-            pending_root: 0,
-        }
+            RootPolicy::PerStart,
+            1,
+        )
     }
 
     /// Persistent hybrid gather of `count`-byte blocks (root bound per
-    /// `start`, like [`HybridCtx::bcast_init`]).
+    /// `start`, like [`HybridCtx::bcast_init`]; pass
+    /// [`RootPolicy::Fixed`] via [`HybridCtx::gather_init_split`] for the
+    /// strict persistent shape).
     pub fn gather_init(self: &Rc<Self>, env: &mut ProcEnv, count: usize, scheme: SyncScheme) -> HyColl {
+        self.gather_init_split(env, count, scheme, RootPolicy::PerStart)
+    }
+
+    /// [`HybridCtx::gather_init`] with an explicit [`RootPolicy`].
+    /// (Gather's bridge converges *on* the root, so there is no send-side
+    /// pipelining to chunk — the red sync gates every leader.)
+    pub fn gather_init_split(
+        self: &Rc<Self>,
+        env: &mut ProcEnv,
+        count: usize,
+        scheme: SyncScheme,
+        policy: RootPolicy,
+    ) -> HyColl {
         assert_block_placement(env, "gather");
         let sizeset = self.sizeset(env);
         let param = AllgatherParam::create(env, self, count, &sizeset);
@@ -500,28 +543,44 @@ impl HybridCtx {
         let win = self.alloc_shared(env, count, 1, self.parent.size());
         let stripes = self.node_stripes(&param, 1);
         self.charge_stripe_tables(env);
-        HyColl {
-            ctx: self.clone(),
-            op: HyOp::Gather,
+        self.build(
+            HyOp::Gather,
             count,
-            dtype: Datatype::U8,
-            rop: None,
+            Datatype::U8,
+            None,
             scheme,
-            method: AllreduceMethod::Method1,
-            win: Some(win),
-            param: Some(param),
-            tables: Some(tables),
-            sizeset: Vec::new(),
+            AllreduceMethod::Method1,
+            win,
+            Some(param),
+            Some(tables),
+            Vec::new(),
             stripes,
-            vec_stripes: Vec::new(),
-            started: false,
-            pending_root: 0,
-        }
+            Vec::new(),
+            policy,
+            1,
+        )
     }
 
     /// Persistent hybrid scatter of `count`-byte blocks (root bound per
     /// `start`).
     pub fn scatter_init(self: &Rc<Self>, env: &mut ProcEnv, count: usize, scheme: SyncScheme) -> HyColl {
+        self.scatter_init_split(env, count, scheme, RootPolicy::PerStart, 1)
+    }
+
+    /// [`HybridCtx::scatter_init`] with an explicit [`RootPolicy`] and
+    /// bridge pipelining `depth` (the mirror of
+    /// [`HybridCtx::bcast_init_split`]: `depth > 1` turns the root
+    /// leaders' bridge scatter into chunked flat sends that launch inside
+    /// `start`).
+    pub fn scatter_init_split(
+        self: &Rc<Self>,
+        env: &mut ProcEnv,
+        count: usize,
+        scheme: SyncScheme,
+        policy: RootPolicy,
+        depth: usize,
+    ) -> HyColl {
+        assert!(depth >= 1, "pipelining depth must be at least 1");
         assert_block_placement(env, "scatter");
         let sizeset = self.sizeset(env);
         let param = AllgatherParam::create(env, self, count, &sizeset);
@@ -529,24 +588,182 @@ impl HybridCtx {
         let win = self.alloc_shared(env, count, 1, self.parent.size());
         let stripes = self.node_stripes(&param, 1);
         self.charge_stripe_tables(env);
+        self.build(
+            HyOp::Scatter,
+            count,
+            Datatype::U8,
+            None,
+            scheme,
+            AllreduceMethod::Method1,
+            win,
+            Some(param),
+            Some(tables),
+            Vec::new(),
+            stripes,
+            Vec::new(),
+            policy,
+            depth,
+        )
+    }
+
+    /// Assemble a handle: bind the one-off state and compile the per-rank
+    /// stage [`Schedule`] once (the tentpole of DESIGN.md §5e).
+    #[allow(clippy::too_many_arguments)]
+    fn build(
+        self: &Rc<Self>,
+        op: HyOp,
+        count: usize,
+        dtype: Datatype,
+        rop: Option<ReduceOp>,
+        scheme: SyncScheme,
+        method: AllreduceMethod,
+        win: HyWin,
+        param: Option<AllgatherParam>,
+        tables: Option<Rc<TransTables>>,
+        sizeset: Vec<usize>,
+        stripes: Vec<StripeTable>,
+        vec_stripes: Vec<(usize, usize)>,
+        policy: RootPolicy,
+        depth: usize,
+    ) -> HyColl {
+        let sched = Schedule::new(compile_stages(self, op, scheme, method, depth, policy, tables.as_deref()));
         HyColl {
             ctx: self.clone(),
-            op: HyOp::Scatter,
+            op,
             count,
-            dtype: Datatype::U8,
-            rop: None,
+            dtype,
+            rop,
             scheme,
-            method: AllreduceMethod::Method1,
+            method,
             win: Some(win),
-            param: Some(param),
-            tables: Some(tables),
-            sizeset: Vec::new(),
+            param,
+            tables,
+            sizeset,
             stripes,
-            vec_stripes: Vec::new(),
+            vec_stripes,
             started: false,
             pending_root: 0,
+            policy,
+            depth,
+            sched,
         }
     }
+}
+
+/// Compile the per-rank stage chain of one persistent collective — the
+/// schedule is built once at `*_init` and re-armed by every `start`.
+/// Drive-to-completion executes exactly the old monolithic `wait` body;
+/// see the [`progress`] module docs for the parity argument.
+fn compile_stages(
+    ctx: &HybridCtx,
+    op: HyOp,
+    scheme: SyncScheme,
+    method: AllreduceMethod,
+    depth: usize,
+    policy: RootPolicy,
+    tables: Option<&TransTables>,
+) -> Vec<Stage> {
+    let leader = ctx.leader_index().is_some();
+    let k = ctx.leaders_per_node();
+    let mut s = Vec::new();
+    let red = |s: &mut Vec<Stage>| {
+        s.push(Stage::Arrive(Scope::Node));
+        s.push(Stage::Await(Scope::Node));
+    };
+    // Conditional red sync on the root's node (bcast/scatter): under
+    // `Fixed` the condition resolves here, at compile time; under
+    // `PerStart` a `RootNode`-scoped pair stays in the schedule and
+    // resolves against the pending root at run time.
+    let root_sync = |s: &mut Vec<Stage>| match policy {
+        RootPolicy::Fixed(root) => {
+            let t = tables.expect("rooted ops bind translation tables");
+            let on_root_node = ctx.node_index() == t.bridge[root];
+            let root_is_primary = t.shmem[root] == 0;
+            if on_root_node && (!root_is_primary || k > 1) {
+                red(s);
+            }
+        }
+        RootPolicy::PerStart => {
+            s.push(Stage::Arrive(Scope::RootNode));
+            s.push(Stage::Await(Scope::RootNode));
+        }
+    };
+    let leader_barrier = |s: &mut Vec<Stage>| {
+        if leader && k > 1 {
+            s.push(Stage::Arrive(Scope::Leaders));
+            s.push(Stage::Await(Scope::Leaders));
+        }
+    };
+    let work = |s: &mut Vec<Stage>, chunk: usize| {
+        s.push(Stage::Work { chunk });
+    };
+
+    match op {
+        HyOp::Allgather | HyOp::Gather => {
+            red(&mut s);
+            if leader {
+                work(&mut s, 0);
+            }
+        }
+        HyOp::Bcast | HyOp::Scatter => {
+            root_sync(&mut s);
+            if leader {
+                for c in 0..depth {
+                    work(&mut s, c);
+                }
+            }
+        }
+        HyOp::Allreduce => {
+            match method {
+                AllreduceMethod::Method1 => {
+                    work(&mut s, 0); // MPI_Reduce over the node comm: everyone
+                    leader_barrier(&mut s); // leaders 1..k read leader 0's L
+                }
+                AllreduceMethod::Method2 => {
+                    red(&mut s);
+                    if leader {
+                        work(&mut s, 0); // striped serial fold into L
+                    }
+                }
+                AllreduceMethod::Tuned => unreachable!("Tuned resolves at *_init"),
+            }
+            if leader {
+                work(&mut s, 1); // L→G + bridge allreduce
+            }
+        }
+        HyOp::ReduceScatter => {
+            match method {
+                AllreduceMethod::Method1 => work(&mut s, 0),
+                AllreduceMethod::Method2 => {
+                    red(&mut s);
+                    if leader {
+                        work(&mut s, 0);
+                    }
+                }
+                AllreduceMethod::Tuned => unreachable!("Tuned resolves at *_init"),
+            }
+            // Step-1 and step-2 stripes partition L differently: every
+            // leader must see the complete L (both methods, k > 1).
+            leader_barrier(&mut s);
+            if leader {
+                work(&mut s, 1);
+            }
+        }
+    }
+
+    // Yellow release.
+    match scheme {
+        SyncScheme::Barrier => red(&mut s),
+        SyncScheme::Spin => {
+            if leader {
+                leader_barrier(&mut s);
+                s.push(Stage::YellowPost);
+            } else {
+                s.push(Stage::YellowWait);
+            }
+        }
+    }
+    s
 }
 
 /// The one clamp rule: ≥ 1, ≤ the smallest node population.
@@ -589,12 +806,16 @@ pub enum HyOp {
 
 /// A persistent hybrid collective handle (the `MPI_Allreduce_init`
 /// shape): all one-off state — shared window, bridge parameters, stripe
-/// tables, translation tables, resolved step-1 method, sync scheme — is
-/// bound at `*_init`; each invocation is a [`start_*`](HyColl::start_allgather)
-/// (stage operands into the window) followed by [`HyColl::wait`]
-/// (node sync + striped bridge + release). Teardown with
-/// [`HyColl::free`] — collective, like `MPI_Request_free` on a
-/// persistent collective.
+/// tables, translation tables, resolved step-1 method, sync scheme, and
+/// the compiled stage schedule — is bound at `*_init`; each
+/// invocation is a [`start_*`](HyColl::start_allgather) (stage operands
+/// into the window and launch every locally-runnable stage) followed by
+/// either the blocking [`HyColl::wait`] (drive the schedule to
+/// completion — bit- and vtime-identical to the PR-4 monolithic wait) or
+/// the split-phase [`HyReq`] surface ([`HyColl::test`] /
+/// [`HyColl::progress`]) that overlaps the remaining stages with caller
+/// compute. Teardown with [`HyColl::free`] — collective, like
+/// `MPI_Request_free` on a persistent collective.
 pub struct HyColl {
     ctx: Rc<HybridCtx>,
     op: HyOp,
@@ -619,6 +840,27 @@ pub struct HyColl {
     vec_stripes: Vec<(usize, usize)>,
     started: bool,
     pending_root: usize,
+    /// Root binding mode (rooted ops; [`RootPolicy::PerStart`] elsewhere).
+    policy: RootPolicy,
+    /// Bridge pipelining depth (`1` = the blocking-parity tree bridge).
+    depth: usize,
+    /// The compiled per-rank stage chain plus its invocation cursor.
+    sched: Schedule,
+}
+
+/// How far one `HyColl::drive` call may go (see the determinism
+/// discussion in the [`progress`] module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Drive {
+    /// `start`-time push: arrivals, send-side chunks, local releases —
+    /// stages whose *eligibility is rank-static*, so the launch point
+    /// (and every charge) is deterministic.
+    Local,
+    /// `test`/`progress`: additionally complete stages whose readiness a
+    /// probe confirms (barrier released, flag posted, chunk arrived).
+    Poll,
+    /// `wait`: execute everything, blocking where needed.
+    Block,
 }
 
 impl HyColl {
@@ -630,6 +872,21 @@ impl HyColl {
     /// The op's per-rank unit size in bytes.
     pub fn count(&self) -> usize {
         self.count
+    }
+
+    /// The §4.5 yellow-sync scheme this handle was compiled for.
+    pub fn scheme(&self) -> SyncScheme {
+        self.scheme
+    }
+
+    /// The handle's root binding mode.
+    pub fn root_policy(&self) -> RootPolicy {
+        self.policy
+    }
+
+    /// Bridge pipelining depth (`1` = the blocking-parity tree bridge).
+    pub fn depth(&self) -> usize {
+        self.depth
     }
 
     /// The backing shared window (the paper's `Wrapper_Get_localpointer`
@@ -648,6 +905,32 @@ impl HyColl {
         self.started = true;
     }
 
+    fn check_root(&self, root: usize) {
+        if let RootPolicy::Fixed(r) = self.policy {
+            assert_eq!(root, r, "RootPolicy::Fixed handle started with a different root");
+        }
+    }
+
+    /// Arm the schedule and launch every locally-runnable stage: barrier
+    /// arrivals (timestamped *now*, so the sync overlaps caller compute)
+    /// and — on pipelined handles — the root side's eager bridge chunks.
+    /// Deterministic: only stages whose eligibility is rank-static run
+    /// here (see [`Drive::Local`]).
+    fn launch(&mut self, env: &mut ProcEnv) {
+        self.sched.reset();
+        if self.depth > 1 {
+            // One tag per start for the chunk stream; FIFO per
+            // (src, tag, comm) makes chunk identity positional. Leaders
+            // allocate in lockstep (every rank starts in program order).
+            let bridge = self.ctx.bridge().cloned();
+            if let Some(bridge) = bridge {
+                let opc = if self.op == HyOp::Bcast { opcode::BCAST } else { opcode::SCATTER };
+                self.sched.bridge_tag = env.next_coll_tag(&bridge, opc);
+            }
+        }
+        self.drive(env, Drive::Local, usize::MAX);
+    }
+
     // ---- start: stage operands (local stores only) ------------------------
 
     /// Stage my `count`-byte allgather block at my parent-rank slot.
@@ -659,17 +942,20 @@ impl HyColl {
         let win = self.win_mut();
         let off = win.local_ptr(me, count);
         win.store(env, off, send);
+        self.launch(env);
     }
 
     /// Stage the broadcast payload (`Some` at `root`, `None` elsewhere).
     pub fn start_bcast(&mut self, env: &mut ProcEnv, root: usize, data: Option<&[u8]>) {
         self.begin(HyOp::Bcast);
+        self.check_root(root);
         self.pending_root = root;
         if self.ctx.parent().rank() == root {
             let d = data.expect("root must supply the broadcast payload");
             assert_eq!(d.len(), self.count);
             self.win_mut().store(env, 0, d);
         }
+        self.launch(env);
     }
 
     /// Stage my allreduce operand at my node-local slot.
@@ -681,6 +967,7 @@ impl HyColl {
         let win = self.win_mut();
         let off = win.local_ptr(slot, count);
         win.store(env, off, operand);
+        self.launch(env);
     }
 
     /// Stage my full reduce-scatter vector (`count·p` bytes) at my
@@ -693,11 +980,13 @@ impl HyColl {
         let win = self.win_mut();
         let off = win.local_ptr(slot, total);
         win.store(env, off, send);
+        self.launch(env);
     }
 
     /// Stage my `count`-byte gather block at my parent-rank slot.
     pub fn start_gather(&mut self, env: &mut ProcEnv, root: usize, send: &[u8]) {
         self.begin(HyOp::Gather);
+        self.check_root(root);
         self.pending_root = root;
         assert_eq!(send.len(), self.count);
         let me = self.ctx.parent().rank();
@@ -705,36 +994,35 @@ impl HyColl {
         let win = self.win_mut();
         let off = win.local_ptr(me, count);
         win.store(env, off, send);
+        self.launch(env);
     }
 
     /// Stage the scatter send buffer (`Some`, `count·p` bytes, at `root`;
     /// `None` elsewhere).
     pub fn start_scatter(&mut self, env: &mut ProcEnv, root: usize, send: Option<&[u8]>) {
         self.begin(HyOp::Scatter);
+        self.check_root(root);
         self.pending_root = root;
         if self.ctx.parent().rank() == root {
             let d = send.expect("root must supply the scatter payload");
             assert_eq!(d.len(), self.count * self.ctx.parent().size());
             self.win_mut().store(env, 0, d);
         }
+        self.launch(env);
     }
 
-    // ---- wait: node sync + striped bridge + release -----------------------
+    // ---- split-phase execution: the schedule interpreter ------------------
 
-    /// Complete the started collective; returns the window byte offset of
-    /// this rank's result (offset 0 for allgather/bcast/gather, slot `G`
-    /// for allreduce, my reduced block for reduce-scatter, my block for
-    /// scatter).
-    pub fn wait(&mut self, env: &mut ProcEnv) -> usize {
-        assert!(self.started, "HyColl wait without start");
-        self.started = false;
+    /// Execute up to `max` stages under `drive` discipline; `true` iff the
+    /// schedule completed. See [`compile_stages`] for the per-op chains
+    /// and the [`progress`] module docs for the blocking-parity argument.
+    fn drive(&mut self, env: &mut ProcEnv, drive: Drive, max: usize) -> bool {
         let HyColl {
             ctx,
             op,
             count,
             dtype,
             rop,
-            scheme,
             method,
             win,
             param,
@@ -743,58 +1031,152 @@ impl HyColl {
             stripes,
             vec_stripes,
             pending_root,
+            depth,
+            sched,
             ..
         } = self;
         let ctx = &**ctx;
         let win = win.as_mut().expect("HyColl already freed");
         let count = *count;
         let root = *pending_root;
-        match op {
-            HyOp::Allgather => {
-                let param = param.as_ref().expect("allgather binds params");
-                super::allgather::run(env, ctx, win, param, stripes, *scheme);
-                0
+        let tables = tables.as_deref();
+        let mut executed = 0usize;
+        while !sched.complete() && executed < max {
+            match sched.stages[sched.next] {
+                Stage::Arrive(scope) => {
+                    if let Some((group, _)) = resolve_scope(ctx, win, tables, scope, root) {
+                        sched.ticket = Some(group.arrive(env.vclock()));
+                    }
+                }
+                Stage::Await(scope) => {
+                    if let Some((group, size)) = resolve_scope(ctx, win, tables, scope, root) {
+                        if drive == Drive::Local {
+                            return false;
+                        }
+                        let t = sched.ticket.expect("Await without a matching Arrive");
+                        let vmax = if drive == Drive::Block {
+                            group.finish(&t)
+                        } else {
+                            match group.poll(&t) {
+                                Some(v) => v,
+                                None => return false,
+                            }
+                        };
+                        sched.ticket = None;
+                        // Same charge law as `ProcEnv::barrier`; all
+                        // handle-private groups are node-local.
+                        env.finish_group_barrier(vmax, size, false);
+                    }
+                }
+                Stage::Work { chunk } => {
+                    if !work_ready(env, ctx, *op, *depth, drive, root, tables, sched.bridge_tag) {
+                        return false;
+                    }
+                    exec_work(
+                        env,
+                        ctx,
+                        win,
+                        *op,
+                        chunk,
+                        *depth,
+                        sched.bridge_tag,
+                        count,
+                        *dtype,
+                        *rop,
+                        *method,
+                        root,
+                        param.as_ref(),
+                        tables,
+                        sizeset,
+                        stripes,
+                        vec_stripes,
+                    );
+                }
+                Stage::YellowPost => {
+                    win.epoch += 1;
+                    if ctx.is_leader() {
+                        env.spin_post(&win.win, 0);
+                    }
+                }
+                Stage::YellowWait => {
+                    if drive == Drive::Local {
+                        return false;
+                    }
+                    let target = match sched.yellow_target {
+                        Some(t) => t,
+                        None => {
+                            win.epoch += 1;
+                            sched.yellow_target = Some(win.epoch);
+                            win.epoch
+                        }
+                    };
+                    if drive == Drive::Block {
+                        env.spin_wait(&win.win, 0, target);
+                    } else if !env.spin_try_wait(&win.win, 0, target) {
+                        return false;
+                    }
+                    sched.yellow_target = None;
+                }
             }
-            HyOp::Bcast => {
-                let tables = tables.as_ref().expect("bcast binds tables");
-                super::bcast::run(env, ctx, win, tables, vec_stripes, root, count, *scheme);
-                0
-            }
-            HyOp::Allreduce => super::allreduce::run(
-                env,
-                ctx,
-                win,
-                *dtype,
-                rop.expect("allreduce binds an op"),
-                count,
-                *method,
-                vec_stripes,
-                *scheme,
-            ),
-            HyOp::ReduceScatter => super::reduce_scatter::run(
-                env,
-                ctx,
-                win,
-                sizeset,
-                *dtype,
-                rop.expect("reduce_scatter binds an op"),
-                count,
-                *method,
-                vec_stripes,
-                stripes,
-                *scheme,
-            ),
-            HyOp::Gather => {
-                let param = param.as_ref().expect("gather binds params");
-                let tables = tables.as_ref().expect("gather binds tables");
-                super::gather::run(env, ctx, win, param, tables, stripes, root, count, *scheme);
-                0
-            }
-            HyOp::Scatter => {
-                let param = param.as_ref().expect("scatter binds params");
-                let tables = tables.as_ref().expect("scatter binds tables");
-                super::scatter::run(env, ctx, win, param, tables, stripes, root, *scheme);
-                ctx.parent().rank() * count
+            sched.next += 1;
+            executed += 1;
+        }
+        sched.complete()
+    }
+
+    // ---- wait/test/progress: completing a started collective --------------
+
+    /// Complete the started collective (drive the compiled schedule to
+    /// completion — blocking, bit- and vtime-identical to the pre-split
+    /// monolithic wait); returns the window byte offset of this rank's
+    /// result (offset 0 for allgather/bcast/gather, slot `G` for
+    /// allreduce, my reduced block for reduce-scatter, my block for
+    /// scatter).
+    pub fn wait(&mut self, env: &mut ProcEnv) -> usize {
+        assert!(self.started, "HyColl wait without start");
+        self.drive(env, Drive::Block, usize::MAX);
+        self.started = false;
+        self.result_offset()
+    }
+
+    /// Split-phase completion probe (`MPI_Test` shape): advance every
+    /// stage that can run without blocking; `true` exactly once, when the
+    /// started collective completed (the handle then returns to inactive
+    /// — a further `test`/`wait` without a new `start` panics). Read the
+    /// result at [`HyColl::result_offset`] / [`HyColl::result_view`].
+    pub fn test(&mut self, env: &mut ProcEnv) -> bool {
+        assert!(self.started, "HyColl test without start (or after completion)");
+        if self.drive(env, Drive::Poll, usize::MAX) {
+            self.started = false;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Advance every non-blocking stage; `true` iff anything moved. No-op
+    /// on an inactive handle (unlike [`HyColl::test`], which treats that
+    /// as a protocol error).
+    pub fn progress(&mut self, env: &mut ProcEnv) -> bool {
+        if !self.started {
+            return false;
+        }
+        let before = self.sched.next;
+        self.drive(env, Drive::Poll, usize::MAX);
+        self.sched.next != before
+    }
+
+    /// The window byte offset of this rank's result — the value
+    /// [`HyColl::wait`] returns, available without consuming completion
+    /// (e.g. after [`HyColl::test`] returned `true`).
+    pub fn result_offset(&self) -> usize {
+        match self.op {
+            HyOp::Allgather | HyOp::Bcast | HyOp::Gather => 0,
+            HyOp::Scatter => self.ctx.parent().rank() * self.count,
+            HyOp::Allreduce => (self.ctx.shmem_size() + 1) * self.count,
+            HyOp::ReduceScatter => {
+                let total = self.count * self.ctx.parent().size();
+                (self.ctx.shmem_size() + 1) * total + self.ctx.parent().rank() * self.count
             }
         }
     }
@@ -820,11 +1202,185 @@ impl HyColl {
     }
 
     /// Collective teardown: frees the shared window (call symmetrically
-    /// on every member of the parent communicator).
+    /// on every member of the parent communicator). Panics on a handle
+    /// with a started-but-unwaited operation — the split-phase analogue
+    /// of freeing an active `MPI_Request`.
     pub fn free(&mut self, env: &mut ProcEnv) {
+        assert!(!self.started, "HyColl freed with a started operation pending (forgotten wait)");
         if let Some(win) = self.win.take() {
             let ctx = self.ctx.clone();
             win.free(env, &ctx);
+        }
+    }
+}
+
+impl HyReq for HyColl {
+    fn test(&mut self, env: &mut ProcEnv) -> bool {
+        HyColl::test(self, env)
+    }
+
+    fn progress(&mut self, env: &mut ProcEnv) -> bool {
+        HyColl::progress(self, env)
+    }
+
+    fn wait(&mut self, env: &mut ProcEnv) -> usize {
+        HyColl::wait(self, env)
+    }
+
+    fn step_blocking(&mut self, env: &mut ProcEnv) {
+        if self.started && !self.sched.complete() {
+            self.drive(env, Drive::Block, 1);
+        }
+    }
+
+    fn is_idle(&self) -> bool {
+        !self.started
+    }
+}
+
+impl HybridCtx {
+    /// Block until one of `reqs` (heterogeneous started handles)
+    /// completes; returns its index. See [`progress::wait_any`] for the
+    /// fairness and ordering contract.
+    pub fn wait_any(env: &mut ProcEnv, reqs: &mut [&mut dyn HyReq]) -> usize {
+        progress::wait_any(env, reqs)
+    }
+
+    /// Drive every started handle to completion; returns the per-handle
+    /// result offsets, index-aligned with `reqs`.
+    pub fn wait_all(env: &mut ProcEnv, reqs: &mut [&mut dyn HyReq]) -> Vec<usize> {
+        progress::wait_all(env, reqs)
+    }
+}
+
+/// Resolve a sync scope against this rank's role: the participating
+/// barrier group and its size, or `None` when the rank sits the stage
+/// out. Handle-private groups live on the shared window (slot 0 = node,
+/// slot 1 = leader set) so in-flight arrivals never interleave with user
+/// barriers on the communicator's shared group.
+fn resolve_scope(
+    ctx: &HybridCtx,
+    win: &HyWin,
+    tables: Option<&TransTables>,
+    scope: Scope,
+    root: usize,
+) -> Option<(std::sync::Arc<crate::mpi::sync::SyncGroup>, usize)> {
+    match scope {
+        Scope::Node => Some((win.win.sync_group(0, ctx.shmem_size()), ctx.shmem_size())),
+        Scope::RootNode => {
+            let t = tables.expect("rooted ops bind translation tables");
+            let on_root_node = ctx.node_index() == t.bridge[root];
+            let needs = t.shmem[root] != 0 || ctx.leaders_per_node() > 1;
+            (on_root_node && needs)
+                .then(|| (win.win.sync_group(0, ctx.shmem_size()), ctx.shmem_size()))
+        }
+        Scope::Leaders => {
+            let k = ctx.leaders_per_node();
+            (ctx.leader_index().is_some() && k > 1).then(|| (win.win.sync_group(1, k), k))
+        }
+    }
+}
+
+/// May this rank's next `Work` stage run under `drive`? Blocking drives
+/// always may; otherwise only the pipelined (`depth > 1`) bcast/scatter
+/// chunks qualify — the send side unconditionally (eager sends, and the
+/// rank-static classification keeps `start`-time launches deterministic),
+/// the receive side when a mailbox probe proves the chunk deliverable
+/// (`Poll` only).
+#[allow(clippy::too_many_arguments)]
+fn work_ready(
+    env: &ProcEnv,
+    ctx: &HybridCtx,
+    op: HyOp,
+    depth: usize,
+    drive: Drive,
+    root: usize,
+    tables: Option<&TransTables>,
+    tag: i64,
+) -> bool {
+    if drive == Drive::Block {
+        return true;
+    }
+    if depth <= 1 || !matches!(op, HyOp::Bcast | HyOp::Scatter) {
+        return false;
+    }
+    let Some(bridge) = ctx.bridge() else { return false };
+    if bridge.size() <= 1 {
+        return true;
+    }
+    let root_node = tables.expect("rooted ops bind translation tables").bridge[root];
+    if bridge.rank() == root_node {
+        return true; // send side: eager, never blocks
+    }
+    drive == Drive::Poll && env.probe(bridge, Some(root_node), tag)
+}
+
+/// Execute one op-specific work unit. With `depth = 1` these are exactly
+/// the pre-split bridge/step bodies — the blocking-parity invariant.
+#[allow(clippy::too_many_arguments)]
+fn exec_work(
+    env: &mut ProcEnv,
+    ctx: &HybridCtx,
+    win: &mut HyWin,
+    op: HyOp,
+    chunk: usize,
+    depth: usize,
+    tag: i64,
+    count: usize,
+    dtype: Datatype,
+    rop: Option<ReduceOp>,
+    method: AllreduceMethod,
+    root: usize,
+    param: Option<&AllgatherParam>,
+    tables: Option<&TransTables>,
+    sizeset: &[usize],
+    stripes: &[StripeTable],
+    vec_stripes: &[(usize, usize)],
+) {
+    match op {
+        HyOp::Allgather => {
+            let param = param.expect("allgather binds params");
+            super::allgather::bridge(env, ctx, win, param, stripes);
+        }
+        HyOp::Gather => {
+            let param = param.expect("gather binds params");
+            let tables = tables.expect("gather binds tables");
+            super::gather::bridge(env, ctx, win, param, tables, stripes, root, count);
+        }
+        HyOp::Bcast => {
+            let tables = tables.expect("bcast binds tables");
+            let root_node = tables.bridge[root];
+            if depth == 1 {
+                super::bcast::bridge(env, ctx, win, vec_stripes, root_node, count);
+            } else {
+                super::bcast::bridge_chunk(env, ctx, win, vec_stripes, root_node, count, chunk, depth, tag);
+            }
+        }
+        HyOp::Scatter => {
+            let param = param.expect("scatter binds params");
+            let tables = tables.expect("scatter binds tables");
+            let root_node = tables.bridge[root];
+            if depth == 1 {
+                super::scatter::bridge(env, ctx, win, param, stripes, root_node);
+            } else {
+                super::scatter::bridge_chunk(env, ctx, win, param, stripes, root_node, chunk, depth, tag);
+            }
+        }
+        HyOp::Allreduce => {
+            let rop = rop.expect("allreduce binds an op");
+            if chunk == 0 {
+                super::allreduce::step1(env, ctx, win, dtype, rop, count, method, vec_stripes);
+            } else {
+                super::allreduce::step2(env, ctx, win, dtype, rop, count, vec_stripes);
+            }
+        }
+        HyOp::ReduceScatter => {
+            let rop = rop.expect("reduce_scatter binds an op");
+            if chunk == 0 {
+                super::reduce_scatter::step1(env, ctx, win, dtype, rop, count, method, vec_stripes);
+            } else {
+                super::reduce_scatter::step2(env, ctx, win, sizeset, dtype, rop, count, stripes, vec_stripes);
+            }
         }
     }
 }

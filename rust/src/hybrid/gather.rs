@@ -16,16 +16,19 @@ use super::allgather::AllgatherParam;
 use super::bcast::TransTables;
 use super::ctx::{HybridCtx, StripeTable};
 use super::shmem::HyWin;
-use super::sync::{complete, red_sync, SyncScheme};
+#[cfg(test)]
+use super::sync::SyncScheme;
 use crate::coll::gather::{gatherv, gatherv_offsets};
 use crate::mpi::env::ProcEnv;
 
-/// Complete a started gather (blocks already stored at the per-rank
-/// slots); afterwards the root can read the full rank-ordered result at
-/// offset 0 of its node's window. With `k = 1` (empty `stripes`) this is
-/// byte- and vtime-identical to the pre-session `Wrapper_Hy_Gather`.
+/// The leaders' bridge gatherv — the `Work` stage of the gather
+/// schedule, executed after the red sync (all on-node contributions in
+/// the window) and before the yellow release; afterwards the root can
+/// read the full rank-ordered result at offset 0 of its node's window.
+/// With `k = 1` (empty `stripes`) this is byte- and vtime-identical to
+/// the pre-session `Wrapper_Hy_Gather` bridge step.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn run(
+pub(crate) fn bridge(
     env: &mut ProcEnv,
     ctx: &HybridCtx,
     win: &mut HyWin,
@@ -34,7 +37,6 @@ pub(crate) fn run(
     stripes: &[StripeTable],
     root: usize,
     msg: usize,
-    scheme: SyncScheme,
 ) {
     assert_eq!(
         param.recvcounts.iter().sum::<usize>(),
@@ -42,8 +44,6 @@ pub(crate) fn run(
         "allgather params must match the gather block size"
     );
     let root_node = tables.bridge[root];
-    // Red sync: all on-node contributions must be in the window.
-    red_sync(env, ctx);
     if let Some(j) = ctx.leader_index() {
         let bridge = ctx.bridge().expect("leaders hold a bridge").clone();
         let bidx = bridge.rank();
@@ -96,7 +96,6 @@ pub(crate) fn run(
             }
         }
     }
-    complete(env, ctx, win, scheme);
 }
 
 #[cfg(test)]

@@ -46,12 +46,28 @@
 //! window/red-sync/bridge/yellow-sync skeleton, rooted or scattered
 //! result placement, all striped across the leader set.
 
+//! ## Split-phase execution (DESIGN.md §5e)
+//!
+//! `HyColl` handles are **nonblocking requests**: `*_init` compiles a
+//! per-rank stage schedule ([`progress`] module), `start_*` stages
+//! operands and launches every locally-runnable stage (barrier arrivals,
+//! the root side's eager pipelined bridge chunks), and completion is
+//! driven either by the blocking [`HyColl::wait`] (bit- and
+//! vtime-identical to the PR-4 monolithic wait) or the split-phase
+//! [`HyReq`] surface — `test`/`progress` between which the caller
+//! overlaps its own compute, plus [`HybridCtx::wait_any`] /
+//! [`HybridCtx::wait_all`] over heterogeneous handles. Rooted ops accept
+//! a [`RootPolicy`] (`Fixed` = the strict `MPI_Bcast_init` shape that
+//! enables root-side bridge pipelining) and, for bcast/scatter, a
+//! pipelining depth that chunks the bridge into per-start sub-steps.
+
 pub mod allgather;
 pub mod allreduce;
 pub mod bcast;
 pub mod ctx;
 pub mod gather;
 pub mod package;
+pub mod progress;
 pub mod reduce_scatter;
 pub mod scatter;
 pub mod shmem;
@@ -61,6 +77,8 @@ pub use allgather::AllgatherParam;
 pub use allreduce::{AllreduceMethod, METHOD_CUTOFF_BYTES};
 pub use bcast::TransTables;
 pub use ctx::{HyColl, HyOp, HybridCtx, LeaderPolicy};
+#[allow(deprecated)]
 pub use package::CommPackage;
+pub use progress::{wait_all, wait_any, HyReq, RootPolicy};
 pub use shmem::HyWin;
 pub use sync::SyncScheme;

@@ -19,6 +19,11 @@ use std::rc::Rc;
 /// The paper's `struct comm_package`: the shared-memory (node) and bridge
 /// (leaders-only) communicators plus their sizes. Deprecated — a frozen
 /// `k = 1` view of [`HybridCtx`].
+#[deprecated(
+    since = "0.1.0",
+    note = "use the session API: HybridCtx::create(env, parent, LeaderPolicy::Single) and the \
+            persistent *_init → start/wait (or split-phase HyReq test/progress) handles"
+)]
 pub struct CommPackage {
     /// The parent this package was derived from.
     pub parent: Communicator,
@@ -34,6 +39,7 @@ pub struct CommPackage {
     ctx: Rc<HybridCtx>,
 }
 
+#[allow(deprecated)]
 impl CommPackage {
     /// `Wrapper_MPI_ShmemBridgeComm_create`: split `parent` into the
     /// node-level communicator and the bridge over node leaders (lowest
@@ -80,6 +86,7 @@ impl CommPackage {
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::coll::testutil::run_nodes;

@@ -1,0 +1,236 @@
+//! The split-phase **progress engine** (DESIGN.md §5e): compiled stage
+//! schedules for the hybrid collectives, advanced non-collectively.
+//!
+//! PR 4's session handles were persistent but *blocking*: `start_*`
+//! staged operands, and one monolithic `wait` performed the node sync,
+//! the striped bridge step and the release in a single call — so a
+//! kernel could never hide bridge latency behind its own computation.
+//! This module redesigns execution into the `MPI_Iallreduce` shape the
+//! follow-up work (arXiv 2007.06892; "MPI×Threads", 2024) identifies as
+//! the payoff of finer-grained communication:
+//!
+//! - every [`HyColl`](super::ctx::HyColl) compiles, once at `*_init`, a
+//!   `Schedule` — the linear chain of stages its rank executes per
+//!   invocation (operand staging → node sync → per-leader bridge
+//!   sub-steps, optionally chunked for pipelining → yellow release);
+//! - the public [`HyReq`] surface advances that schedule: `test` and
+//!   `progress` run every stage that can complete *without blocking*
+//!   (barrier arrivals, send-side bridge chunks, probe-confirmed
+//!   receive chunks, posted spin flags), `wait` drives the remainder to
+//!   completion;
+//! - [`wait_any`]/[`wait_all`] multiplex heterogeneous handles.
+//!
+//! ## Why the blocking path stays bit- and vtime-identical
+//!
+//! `HyColl::wait` is now literally "drive the schedule to completion":
+//! each stage executes the *same primitives in the same order* as the
+//! old monolith (the op modules' bridge bodies are unchanged for
+//! `depth = 1`), barriers charge through
+//! [`ProcEnv::finish_group_barrier`] (the same `vmax + dissemination`
+//! law as [`ProcEnv::barrier`]), and the spin release charges one
+//! `spin_poll_us` at observation exactly as before. A `start` followed
+//! immediately by `wait` therefore charges the identical virtual time
+//! and produces identical bytes — asserted by every pre-existing hybrid
+//! test, which now runs on the schedule path.
+//!
+//! ## Where the overlap win comes from
+//!
+//! Virtual time in this simulator is *arrival-max* based: a receiver's
+//! clock advances to `max(own_clock, sent_at + wire)`. A split-phase
+//! caller that computes between `start` and `wait` therefore hides
+//! in-flight traffic under its own compute: eager sends posted at
+//! `start` (root-side pipelining), barrier arrivals registered at
+//! `start` ([`SyncGroup::arrive`]), and the leader's release flag are
+//! all timestamped *before* the compute, so the `wait`-side charges
+//! collapse to `max(compute, communication)` instead of their sum.
+//!
+//! ## Determinism discipline
+//!
+//! Modeled virtual time stays deterministic as long as stages execute at
+//! fixed program points — `start` and `wait` (plus `test`/`progress`
+//! calls whose outcome is pinned by real synchronization, as in the
+//! `overlap.rs` tests). Kernels and benches follow this discipline;
+//! free-running `test` polling is MPI-faithful but lets host scheduling
+//! choose *when* a stage's charge lands, like a real `MPI_Test` loop.
+//!
+//! ## Ordering contract
+//!
+//! Per-handle syncs run on *window-private* barrier groups
+//! ([`SharedWindow::sync_group`](crate::mpi::win::SharedWindow::sync_group)),
+//! so in-flight handles never interleave with user barriers or with each
+//! other. The one rule carried over from MPI: all members of a session's
+//! communicator must start handles, and fall back to blocking stages
+//! (`wait`, or the [`wait_any`] fallback), in the same program order.
+//!
+//! [`ProcEnv::finish_group_barrier`]: crate::mpi::env::ProcEnv::finish_group_barrier
+//! [`ProcEnv::barrier`]: crate::mpi::env::ProcEnv::barrier
+//! [`SyncGroup::arrive`]: crate::mpi::sync::SyncGroup::arrive
+
+use crate::mpi::env::ProcEnv;
+
+/// How a rooted persistent collective binds its root.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RootPolicy {
+    /// The root is an argument of every `start_*` — the PR-4 behaviour
+    /// (a documented deviation from `MPI_Bcast_init`) that lets SUMMA's
+    /// rotating roots reuse one window.
+    PerStart,
+    /// The strict `MPI_Bcast_init` mode: the root is baked at `*_init`,
+    /// every `start_*` must name the same rank, and the root-side
+    /// schedule is compiled root-aware — which is what lets the root's
+    /// bridge sub-steps launch inside `start`, before any non-root rank
+    /// has arrived (root-side pipelining; closes the ROADMAP
+    /// "root-bound persistent handles" item).
+    Fixed(usize),
+}
+
+/// A nonblocking persistent-collective request — the split-phase face of
+/// [`HyColl`](super::ctx::HyColl) (which is currently the only
+/// implementor; the trait exists so heterogeneous handles can be driven
+/// through one [`wait_any`]/[`wait_all`] surface).
+pub trait HyReq {
+    /// Advance every stage that can complete without blocking; return
+    /// `true` iff the started operation completed. Completion is
+    /// consumed: the handle becomes inactive (`test` again panics, like
+    /// operating on an inactive persistent request), so `true` is
+    /// observed exactly once per `start`.
+    fn test(&mut self, env: &mut ProcEnv) -> bool;
+
+    /// Advance every non-blocking stage; `true` iff anything moved.
+    /// No-op (returning `false`) on an inactive handle, so progress
+    /// loops over mixed handle sets need no bookkeeping.
+    fn progress(&mut self, env: &mut ProcEnv) -> bool;
+
+    /// Drive the schedule to completion and return the result's window
+    /// byte offset (the same value the blocking `HyColl::wait` returns).
+    fn wait(&mut self, env: &mut ProcEnv) -> usize;
+
+    /// Execute exactly one stage, blocking if it must — the fallback
+    /// step [`wait_any`] uses when no handle can progress otherwise.
+    /// No-op on an inactive or completed handle.
+    fn step_blocking(&mut self, env: &mut ProcEnv);
+
+    /// Is the handle inactive (completed or never started)?
+    fn is_idle(&self) -> bool;
+}
+
+/// Block until one of `reqs` completes; returns its index. All requests
+/// must be started. Fairness: each pass polls every request
+/// non-blockingly (so an already-satisfiable handle completes no matter
+/// where it sits in the slice); only when a full pass makes no progress
+/// does the engine execute one *blocking* stage of the first incomplete
+/// request — every member rank must therefore pass its requests in the
+/// same order, the usual MPI collective-ordering rule.
+pub fn wait_any(env: &mut ProcEnv, reqs: &mut [&mut dyn HyReq]) -> usize {
+    assert!(!reqs.is_empty(), "wait_any over an empty request set");
+    for r in reqs.iter() {
+        assert!(!r.is_idle(), "wait_any requires every request to be started");
+    }
+    loop {
+        let mut moved = false;
+        for (i, r) in reqs.iter_mut().enumerate() {
+            if r.test(env) {
+                return i;
+            }
+            moved |= r.progress(env);
+        }
+        if !moved {
+            // Nobody can move without blocking: drive one stage of the
+            // first incomplete request. Deterministic across ranks (same
+            // request order), so all members converge on the same
+            // collective and no cross-handle deadlock can form.
+            reqs[0].step_blocking(env);
+            if reqs[0].test(env) {
+                return 0;
+            }
+        }
+    }
+}
+
+/// Drive every request to completion (in slice order — the usual MPI
+/// collective-ordering rule applies across ranks); returns the
+/// per-request result offsets, index-aligned with `reqs`.
+pub fn wait_all(env: &mut ProcEnv, reqs: &mut [&mut dyn HyReq]) -> Vec<usize> {
+    let mut offs = vec![0usize; reqs.len()];
+    for i in 0..reqs.len() {
+        // Opportunistically push every still-active request before each
+        // blocking drive so later requests' eager stages are in flight.
+        for r in reqs.iter_mut() {
+            if !r.is_idle() {
+                r.progress(env);
+            }
+        }
+        offs[i] = reqs[i].wait(env);
+    }
+    offs
+}
+
+/// Which participants a sync stage involves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Scope {
+    /// All ranks of the node communicator (the red sync, and the
+    /// `Barrier`-scheme yellow sync).
+    Node,
+    /// The node communicator of the *pending root's* node only (the
+    /// conditional red sync of bcast/scatter under `RootPolicy::PerStart`;
+    /// `Fixed` handles compile it down to `Node` or omit it).
+    RootNode,
+    /// The node's leader set (`k > 1` only).
+    Leaders,
+}
+
+/// One stage of a compiled schedule. Stages execute strictly in order —
+/// the chain *is* the per-rank dependency structure of the §4 wrappers.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Stage {
+    /// Register at the scope's window-private barrier group
+    /// (never blocks).
+    Arrive(Scope),
+    /// Complete the matching [`Stage::Arrive`]: poll non-blockingly or
+    /// park-wait, then charge the dissemination-barrier law.
+    Await(Scope),
+    /// Op-specific work unit `chunk` of the handle's `depth` (step-1
+    /// reductions, bridge sub-steps, slot moves). Blocking-only unless
+    /// the op classifies it send-side eligible or a mailbox probe proves
+    /// the inbound chunk deliverable.
+    Work { chunk: usize },
+    /// Yellow release, leader side: bump the handle epoch; the primary
+    /// leader posts the spin flag.
+    YellowPost,
+    /// Yellow release, child side: bump the epoch and observe the flag.
+    YellowWait,
+}
+
+/// A compiled per-rank schedule plus its invocation cursor.
+#[derive(Debug, Default)]
+pub(crate) struct Schedule {
+    pub(crate) stages: Vec<Stage>,
+    /// Next stage to execute (= `stages.len()` when complete).
+    pub(crate) next: usize,
+    /// Outstanding barrier ticket of the last executed `Arrive`.
+    pub(crate) ticket: Option<crate::mpi::sync::BarrierTicket>,
+    /// Spin-flag target of the in-progress `YellowWait` (set on first
+    /// attempt so the epoch bumps exactly once).
+    pub(crate) yellow_target: Option<u32>,
+    /// Per-start bridge tag of the pipelined (`depth > 1`) chunk stream
+    /// (leaders only).
+    pub(crate) bridge_tag: i64,
+}
+
+impl Schedule {
+    pub(crate) fn new(stages: Vec<Stage>) -> Schedule {
+        Schedule { next: stages.len(), stages, ticket: None, yellow_target: None, bridge_tag: 0 }
+    }
+
+    /// Arm the cursor for a fresh invocation.
+    pub(crate) fn reset(&mut self) {
+        self.next = 0;
+        self.ticket = None;
+        self.yellow_target = None;
+        self.bridge_tag = 0;
+    }
+
+    pub(crate) fn complete(&self) -> bool {
+        self.next >= self.stages.len()
+    }
+}

@@ -26,38 +26,36 @@
 use super::allreduce::AllreduceMethod;
 use super::ctx::{HybridCtx, StripeTable};
 use super::shmem::HyWin;
-use super::sync::{complete, red_sync, SyncScheme};
+#[cfg(test)]
+use super::sync::SyncScheme;
 use crate::coll::reduce::reduce;
 use crate::coll::reduce_scatter::{reduce_scatterv, reduce_scatterv_offsets};
 use crate::mpi::env::ProcEnv;
 use crate::mpi::{Datatype, ReduceOp};
 
-/// Complete a started reduce-scatter (full vectors already stored at the
-/// per-rank slots); returns the window offset of the calling rank's
-/// reduced `count`-byte block. With `k = 1` (empty stripe tables) every
-/// branch is byte- and vtime-identical to the pre-session
-/// `Wrapper_Hy_Reduce_scatter`; `method` arrives resolved.
+/// Step 1 — the node-level reduction of the full vectors into `L` (the
+/// first `Work` stage of the reduce-scatter schedule; method-1 runs on
+/// every rank, method-2 on leaders only after the schedule's red sync —
+/// the sync itself, and the inter-method leader barrier, live in the
+/// schedule). With `k = 1` (empty stripe tables) every branch is byte-
+/// and vtime-identical to the pre-session `Wrapper_Hy_Reduce_scatter`
+/// step 1; `method` arrives resolved.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn run(
+pub(crate) fn step1(
     env: &mut ProcEnv,
     ctx: &HybridCtx,
     win: &mut HyWin,
-    sizeset: &[usize],
     dtype: Datatype,
     op: ReduceOp,
     count: usize,
     method: AllreduceMethod,
     vec_stripes: &[(usize, usize)],
-    node_stripes: &[StripeTable],
-    scheme: SyncScheme,
-) -> usize {
+) {
     let p = ctx.parent().size();
     let shmem_size = ctx.shmem_size();
     let total = count * p;
     let l_off = shmem_size * total;
-    let g_off = (shmem_size + 1) * total;
 
-    // ---- step 1: node-level reduction of the full vectors into L ------
     match method {
         AllreduceMethod::Method1 => {
             // Operands are borrowed straight out of the window; the
@@ -86,7 +84,7 @@ pub(crate) fn run(
             }
         }
         AllreduceMethod::Method2 => {
-            red_sync(env, ctx);
+            // The schedule's red sync precedes this stage.
             if let Some(j) = ctx.leader_index() {
                 let (off, len) =
                     if vec_stripes.is_empty() { (0, total) } else { vec_stripes[j] };
@@ -121,15 +119,32 @@ pub(crate) fn run(
     // Step-1 stripes (over the whole T vector) and step-2 stripes (per
     // node block) partition L differently: with k > 1 every leader must
     // see the complete L before reading step-2 ranges that cross step-1
-    // stripe boundaries. (`leaders()` is `Some` only on leaders, k > 1.)
-    if let Some(leaders) = ctx.leaders() {
-        env.barrier(leaders);
-    }
+    // stripe boundaries — the schedule's leader barrier between the two
+    // Work stages provides exactly that.
+}
 
-    // ---- step 2: bridge reduce-scatter of node blocks into G ----------
-    // Node i's block range is its ranks' blocks, contiguous in parent
-    // order under block placement. (Children skip this entirely — their
-    // block offset needs only the parent rank.)
+/// Step 2 — the leaders' (striped) bridge reduce-scatter of node blocks
+/// into `G` (the second `Work` stage; the yellow release follows in the
+/// schedule). Node i's block range is its ranks' blocks, contiguous in
+/// parent order under block placement. (Children skip this entirely —
+/// their block offset needs only the parent rank.)
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn step2(
+    env: &mut ProcEnv,
+    ctx: &HybridCtx,
+    win: &mut HyWin,
+    sizeset: &[usize],
+    dtype: Datatype,
+    op: ReduceOp,
+    count: usize,
+    node_stripes: &[StripeTable],
+    vec_stripes: &[(usize, usize)],
+) {
+    let p = ctx.parent().size();
+    let shmem_size = ctx.shmem_size();
+    let total = count * p;
+    let l_off = shmem_size * total;
+    let g_off = (shmem_size + 1) * total;
     if let Some(j) = ctx.leader_index() {
         let bridge = ctx.bridge().expect("leaders hold a bridge").clone();
         let bidx = bridge.rank();
@@ -180,10 +195,8 @@ pub(crate) fn run(
             env.charge_memcpy(len);
         }
     }
-    complete(env, ctx, win, scheme);
-
-    // My block: G + my parent-rank displacement.
-    g_off + ctx.parent().rank() * count
+    // My block (what `HyColl::result_offset` reports):
+    // G + my parent-rank displacement.
 }
 
 #[cfg(test)]

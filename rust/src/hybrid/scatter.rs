@@ -12,40 +12,28 @@
 //! `k` bridge messages per non-root node, zero on-node messages.
 
 use super::allgather::AllgatherParam;
-use super::bcast::TransTables;
-use super::ctx::{HybridCtx, StripeTable};
+use super::ctx::{chunk_bounds, HybridCtx, StripeTable};
 use super::shmem::HyWin;
-use super::sync::{complete, red_sync, SyncScheme};
+#[cfg(test)]
+use super::sync::SyncScheme;
 use crate::coll::scatter::{scatterv, scatterv_offsets};
 use crate::mpi::env::ProcEnv;
 
-/// Complete a started scatter (the root's full buffer already stored at
-/// window offset 0 of its node); afterwards every rank reads its block
-/// at `win.local_ptr(parent_rank, msg)`. With `k = 1` (empty `stripes`)
+/// The leaders' bridge scatterv — the (single, `depth = 1`) `Work` stage
+/// of the scatter schedule, executed after the root-node red sync (the
+/// root's stored send buffer visible to its node's leaders) and before
+/// the yellow release; afterwards every rank reads its block at
+/// `win.local_ptr(parent_rank, msg)`. With `k = 1` (empty `stripes`)
 /// this is byte- and vtime-identical to the pre-session
-/// `Wrapper_Hy_Scatter`.
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn run(
+/// `Wrapper_Hy_Scatter` bridge step.
+pub(crate) fn bridge(
     env: &mut ProcEnv,
     ctx: &HybridCtx,
     win: &mut HyWin,
     param: &AllgatherParam,
-    tables: &TransTables,
     stripes: &[StripeTable],
-    root: usize,
-    scheme: SyncScheme,
+    root_node: usize,
 ) {
-    let root_node = tables.bridge[root];
-    let root_is_primary = tables.shmem[root] == 0;
-    let k = ctx.leaders_per_node();
-
-    // The root's node leaders must observe the stored send buffer before
-    // the bridge scatter: red sync on the root's node whenever the root
-    // is a child — or whenever k > 1 (leaders 1..k read what the root,
-    // even root = leader 0, stored).
-    if (!root_is_primary || k > 1) && ctx.node_index() == root_node {
-        red_sync(env, ctx);
-    }
     if let Some(j) = ctx.leader_index() {
         let bridge = ctx.bridge().expect("leaders hold a bridge").clone();
         let bidx = bridge.rank();
@@ -95,7 +83,61 @@ pub(crate) fn run(
             }
         }
     }
-    complete(env, ctx, win, scheme);
+}
+
+/// One pipelined bridge sub-step (`depth > 1` handles): the mirror of
+/// [`super::bcast::bridge_chunk`] — the root-node leader `j` flat-sends
+/// chunk `c` of every *other* node's stripe range (eager, so the whole
+/// stream can launch inside `start`); each receiving leader drains its
+/// chunks in FIFO order into the window at the node's global
+/// displacement. The root node's own range is already in place — no
+/// self-copy, one of the documented deviations of the opt-in pipelined
+/// mode from the `depth = 1` tree scatterv.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn bridge_chunk(
+    env: &mut ProcEnv,
+    ctx: &HybridCtx,
+    win: &mut HyWin,
+    param: &AllgatherParam,
+    stripes: &[StripeTable],
+    root_node: usize,
+    chunk: usize,
+    nchunks: usize,
+    tag: i64,
+) {
+    let Some(j) = ctx.leader_index() else { return };
+    let bridge = ctx.bridge().expect("leaders hold a bridge").clone();
+    if bridge.size() <= 1 {
+        return;
+    }
+    // Leader j's (offset, len) range of node i's block.
+    let node_range = |i: usize| -> (usize, usize) {
+        if stripes.is_empty() {
+            (param.displs[i], param.recvcounts[i])
+        } else {
+            (stripes[j].offsets[i], stripes[j].counts[i])
+        }
+    };
+    env.with_nic_lane(j, |env| {
+        if bridge.rank() == root_node {
+            for i in 0..bridge.size() {
+                if i == root_node {
+                    continue;
+                }
+                let (off, len) = node_range(i);
+                let (lo, clen) = chunk_bounds(len, nchunks, chunk);
+                // Zero-length chunks still flow: chunk identity is
+                // positional in the FIFO stream.
+                let data = unsafe { win.win.slice(off + lo, clen) };
+                env.send(&bridge, i, tag, data);
+            }
+        } else {
+            let (off, len) = node_range(bridge.rank());
+            let (lo, clen) = chunk_bounds(len, nchunks, chunk);
+            let out = unsafe { win.win.slice_mut(off + lo, clen) };
+            env.recv_into(&bridge, Some(root_node), tag, out);
+        }
+    });
 }
 
 #[cfg(test)]

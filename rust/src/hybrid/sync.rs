@@ -14,7 +14,8 @@
 //!   increments (`status++` + `MPI_Win_sync`), children polling with the
 //!   equality-only exit condition MPI's one-byte-change rule permits.
 //!
-//! With `k > 1` leaders per node ([`HybridCtx`]), the release gains one
+//! With `k > 1` leaders per node ([`HybridCtx`](super::ctx::HybridCtx)),
+//! the release gains one
 //! extra step: the node's leaders synchronize among themselves (a small
 //! intra-node barrier over the leader group) so every leader's bridge
 //! stripe is published before the *primary* leader (leader 0) posts the
@@ -22,8 +23,11 @@
 //! paper's release — no leader barrier, one post — so single-leader
 //! virtual time is bit-identical to the pre-session code.
 
+#[cfg(test)]
 use super::ctx::HybridCtx;
+#[cfg(test)]
 use super::shmem::HyWin;
+#[cfg(test)]
 use crate::mpi::env::ProcEnv;
 
 /// How the yellow (leader→children) sync point is implemented.
@@ -36,6 +40,14 @@ pub enum SyncScheme {
 }
 
 /// Red sync: full node barrier (all ranks of the node communicator).
+///
+/// Since the split-phase redesign (DESIGN.md §5e) the collectives no
+/// longer call this directly — their compiled schedules carry
+/// `Arrive(Node)`/`Await(Node)` stage pairs on the handle's
+/// window-private [`SyncGroup`](crate::mpi::sync::SyncGroup), which
+/// charge the identical barrier law. Kept as the reference
+/// implementation the sync-scheme tests exercise standalone.
+#[cfg(test)]
 pub(crate) fn red_sync(env: &mut ProcEnv, ctx: &HybridCtx) {
     env.barrier(ctx.shmem());
 }
@@ -49,6 +61,11 @@ pub(crate) fn red_sync(env: &mut ProcEnv, ctx: &HybridCtx) {
 ///   leader 0 increments the status flag; children poll it. Leaders other
 ///   than 0 only advance their epoch — the leader barrier already
 ///   ordered them past the release point.
+///
+/// Like [`red_sync`], superseded in production by the schedules'
+/// `YellowPost`/`YellowWait` (and `Barrier`-scheme `Arrive`/`Await`)
+/// stages, which charge identically; kept for the standalone tests.
+#[cfg(test)]
 pub(crate) fn complete(env: &mut ProcEnv, ctx: &HybridCtx, win: &mut HyWin, scheme: SyncScheme) {
     match scheme {
         SyncScheme::Barrier => env.barrier(ctx.shmem()),

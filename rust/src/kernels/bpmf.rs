@@ -132,7 +132,9 @@ fn rank_program(env: &mut ProcEnv, cfg: BpmfCfg) -> RankStats {
     // the 2·iters sampling regions then execute against cached plans.
     // The two factor tables are tagged by side — they may have equal
     // sizes and must not share a window.
-    let hybrid = cfg.variant == Variant::HybridMpiMpi;
+    // BPMF has no split-phase port (its allgathers gate the very next
+    // batch); HybridOverlap runs the blocking hybrid path.
+    let hybrid = cfg.variant.is_hybrid();
     let flavor = if hybrid { Flavor::hybrid(SyncScheme::Spin) } else { Flavor::Hier };
     let mut plans = PlanCache::new();
     let side_msg = [shards[0].per * k * 8, shards[1].per * k * 8];

@@ -23,6 +23,14 @@ pub enum Backend {
     /// benefits", §3.2.3) and host scheduling noise cannot leak into the
     /// comparison.
     Modeled,
+    /// No computation at all — only the deterministic flop model is
+    /// charged. For engine-scale shapes (hundreds of ranks) where the
+    /// *communication* structure is under test and actually running the
+    /// arithmetic on one host core would take hours: kernel results
+    /// (checksums) are meaningless, payload motion and modeled time stay
+    /// real. Variant comparisons remain valid because every variant
+    /// skips the same work and is charged the same model.
+    Phantom,
 }
 
 /// Modeled per-core throughput (flops/µs): a 2.5 GHz Haswell core doing
@@ -61,6 +69,7 @@ impl Backend {
             "pjrt" => Some(Backend::Pjrt),
             "native" => Some(Backend::Native),
             "modeled" => Some(Backend::Modeled),
+            "phantom" => Some(Backend::Phantom),
             "auto" => Some(Backend::auto()),
             _ => None,
         }
@@ -71,6 +80,7 @@ impl Backend {
             Backend::Pjrt => "pjrt",
             Backend::Native => "native",
             Backend::Modeled => "modeled",
+            Backend::Phantom => "phantom",
         }
     }
 }
@@ -93,6 +103,9 @@ pub fn summa_block(env: &mut ProcEnv, backend: Backend, a: &[f64], b: &[f64], c:
         }
         Backend::Modeled => {
             crate::kernels::native::matmul_acc(a, b, c, edge, edge, edge);
+            env.compute(modeled_matmul_us(edge));
+        }
+        Backend::Phantom => {
             env.compute(modeled_matmul_us(edge));
         }
         _ => {
@@ -118,6 +131,13 @@ pub fn poisson_sweep(env: &mut ProcEnv, backend: Backend, strip: &mut [f64], rp2
             let d = crate::kernels::native::rb_sweep(strip, rp2, n);
             env.compute(modeled_sweep_us(rp2 - 2, n));
             d
+        }
+        Backend::Phantom => {
+            env.compute(modeled_sweep_us(rp2 - 2, n));
+            // No arithmetic: report a "still changing" delta so iteration
+            // counts are driven purely by max_iters (engine-scale benches
+            // fix the iteration count anyway).
+            f64::INFINITY
         }
         _ => env.compute_timed(|| crate::kernels::native::rb_sweep(strip, rp2, n)),
     }
@@ -159,6 +179,9 @@ pub fn bpmf_batch(
         }
         Backend::Modeled => {
             crate::kernels::native::bpmf_posterior(v, w, alpha, lam0, noise, batch, nnz, k, out);
+            env.compute(modeled_bpmf_us(batch, nnz, k));
+        }
+        Backend::Phantom => {
             env.compute(modeled_bpmf_us(batch, nnz, k));
         }
         _ => {

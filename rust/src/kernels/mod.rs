@@ -17,13 +17,21 @@ pub mod summa;
 pub use compute::Backend;
 pub use ompsim::OmpModel;
 
-/// Which of the paper's three implementations to run.
+/// Which of the paper's three implementations to run (plus the
+/// split-phase overlap variant of DESIGN.md §5e).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Variant {
     /// Standard MPI collectives, one rank per core.
     PureMpi,
-    /// The paper's hybrid MPI+MPI wrappers, one rank per core.
+    /// The paper's hybrid MPI+MPI wrappers, one rank per core
+    /// (blocking `start`/`wait` pairs).
     HybridMpiMpi,
+    /// Hybrid MPI+MPI through the split-phase `HyReq` surface: SUMMA
+    /// prefetches the next panel's broadcast under the dgemm, Poisson
+    /// overlaps the halo exchange with the interior sweep. Identical
+    /// math and results to [`Variant::HybridMpiMpi`]; strictly less
+    /// modeled time once communication has anything to hide behind.
+    HybridOverlap,
     /// One rank per node + OpenMP fine-grained loop parallelism.
     MpiOpenMp,
 }
@@ -33,14 +41,21 @@ impl Variant {
         match self {
             Variant::PureMpi => "pure-mpi",
             Variant::HybridMpiMpi => "mpi+mpi",
+            Variant::HybridOverlap => "mpi+mpi-overlap",
             Variant::MpiOpenMp => "mpi+openmp",
         }
+    }
+
+    /// Is this one of the hybrid MPI+MPI variants (blocking or overlap)?
+    pub fn is_hybrid(&self) -> bool {
+        matches!(self, Variant::HybridMpiMpi | Variant::HybridOverlap)
     }
 
     pub fn parse(s: &str) -> Option<Variant> {
         match s {
             "pure-mpi" | "mpi" => Some(Variant::PureMpi),
             "mpi+mpi" | "hybrid" => Some(Variant::HybridMpiMpi),
+            "mpi+mpi-overlap" | "overlap" => Some(Variant::HybridOverlap),
             "mpi+openmp" | "openmp" => Some(Variant::MpiOpenMp),
             _ => None,
         }

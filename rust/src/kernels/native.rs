@@ -20,15 +20,15 @@ pub fn matmul_acc(a: &[f64], b: &[f64], c: &mut [f64], m: usize, kk: usize, n: u
     }
 }
 
-/// Red-black Gauss-Seidel sweep on a halo-padded strip (`rp2` rows × `n`
-/// cols, rows 0 and rp2−1 are halos, cols 0 and n−1 fixed boundary).
-/// Updates in place; returns max |delta| over the owned rows — exactly the
-/// semantics of `stencil_pallas.rb_sweep`.
-pub fn rb_sweep(strip: &mut [f64], rp2: usize, n: usize) -> f64 {
-    assert_eq!(strip.len(), rp2 * n);
-    let old: Vec<f64> = strip.to_vec();
-    // Red pass (i+j even), from old values.
-    for i in 1..rp2 - 1 {
+/// Red pass (i+j even) over `rows` of a halo-padded strip, reading
+/// neighbour values from the `old` snapshot. Split out of [`rb_sweep`] so
+/// the overlap variant of the Poisson kernel can sweep the
+/// halo-independent interior rows while the halo messages are in flight
+/// and bolt on rows 1 and `rp2 − 2` once they arrive — the pass reads
+/// *only* the snapshot, so any row partition produces bit-identical
+/// values.
+pub fn red_pass(strip: &mut [f64], old: &[f64], n: usize, rows: std::ops::Range<usize>) {
+    for i in rows {
         for j in 1..n - 1 {
             if (i + j) % 2 == 0 {
                 strip[i * n + j] = 0.25
@@ -36,8 +36,11 @@ pub fn rb_sweep(strip: &mut [f64], rp2: usize, n: usize) -> f64 {
             }
         }
     }
-    // Black pass (i+j odd), from red-updated values.
-    let red: Vec<f64> = strip.to_vec();
+}
+
+/// Black pass (i+j odd) over all owned rows, reading from the
+/// post-red-pass snapshot `red`.
+pub fn black_pass(strip: &mut [f64], red: &[f64], rp2: usize, n: usize) {
     for i in 1..rp2 - 1 {
         for j in 1..n - 1 {
             if (i + j) % 2 == 1 {
@@ -46,6 +49,10 @@ pub fn rb_sweep(strip: &mut [f64], rp2: usize, n: usize) -> f64 {
             }
         }
     }
+}
+
+/// Max |delta| over the owned rows against the pre-sweep snapshot.
+pub fn max_delta(strip: &[f64], old: &[f64], rp2: usize, n: usize) -> f64 {
     let mut delta = 0.0f64;
     for i in 1..rp2 - 1 {
         for j in 0..n {
@@ -53,6 +60,21 @@ pub fn rb_sweep(strip: &mut [f64], rp2: usize, n: usize) -> f64 {
         }
     }
     delta
+}
+
+/// Red-black Gauss-Seidel sweep on a halo-padded strip (`rp2` rows × `n`
+/// cols, rows 0 and rp2−1 are halos, cols 0 and n−1 fixed boundary).
+/// Updates in place; returns max |delta| over the owned rows — exactly the
+/// semantics of `stencil_pallas.rb_sweep`. Composed from the split passes
+/// above, so the overlap kernel's phased execution is bit-identical by
+/// construction.
+pub fn rb_sweep(strip: &mut [f64], rp2: usize, n: usize) -> f64 {
+    assert_eq!(strip.len(), rp2 * n);
+    let old: Vec<f64> = strip.to_vec();
+    red_pass(strip, &old, n, 1..rp2 - 1);
+    let red: Vec<f64> = strip.to_vec();
+    black_pass(strip, &red, rp2, n);
+    max_delta(strip, &old, rp2, n)
 }
 
 /// In-place Cholesky of a k×k SPD matrix (lower triangle result).

@@ -8,12 +8,13 @@
 //! maximum update delta (8 B — the small-message allreduce regime of
 //! Figs. 14–16) until convergence.
 
-use super::compute::{poisson_sweep, Backend};
+use super::compute::{modeled_sweep_us, poisson_sweep, Backend};
+use super::native::{black_pass, max_delta, red_pass};
 use super::ompsim::OmpModel;
 use super::{KernelReport, RankStats, Variant};
 use crate::coll::{CollOp, Flavor, PlanCache};
 use crate::coordinator::{ClusterSpec, SimCluster};
-use crate::hybrid::SyncScheme;
+use crate::hybrid::{AllreduceMethod, HybridCtx, LeaderPolicy, SyncScheme};
 use crate::mpi::env::{opcode, ProcEnv};
 use crate::mpi::{Datatype, ReduceOp};
 use crate::util::{cast_slice, to_bytes};
@@ -68,6 +69,10 @@ fn rank_program(env: &mut ProcEnv, cfg: PoissonCfg) -> RankStats {
     for i in 0..rp2 {
         strip[i * n] = 1.0;
         strip[i * n + n - 1] = 1.0;
+    }
+
+    if cfg.variant == Variant::HybridOverlap {
+        return overlap_iterations(env, cfg, strip, rows, n);
     }
 
     // Collective plans, built once before the loop (the Table-2 one-off
@@ -153,6 +158,144 @@ fn rank_program(env: &mut ProcEnv, cfg: PoissonCfg) -> RankStats {
 
     plans.free(env);
     stats
+}
+
+/// The split-phase iteration loop ([`Variant::HybridOverlap`],
+/// DESIGN.md §5e): per iteration the halo *sends* go out first (their
+/// payloads are last sweep's boundary rows, ready immediately), the
+/// halo-independent interior red rows sweep while those messages are in
+/// flight, and only then are the halo rows received and the two
+/// halo-adjacent red rows plus the black pass finished. Because every
+/// pass reads a snapshot (see [`red_pass`]), the phased order is
+/// bit-identical to the blocking `rb_sweep` — same deltas, same
+/// iteration count, same checksum — while the halo latency hides under
+/// the interior sweep. The 8 B max-allreduce runs on a split-phase
+/// session handle.
+fn overlap_iterations(
+    env: &mut ProcEnv,
+    cfg: PoissonCfg,
+    mut strip: Vec<f64>,
+    rows: usize,
+    n: usize,
+) -> RankStats {
+    let w = env.world();
+    let p = w.size();
+    let me = w.rank();
+    let rp2 = rows + 2;
+    let full_us = modeled_sweep_us(rows, n);
+    // Flop-model split of one sweep: red ≈ 3/7, black ≈ 3/7, delta ≈ 1/7
+    // of the 7 flops/point; phase A covers the interior share of the red
+    // pass. A + B always sum to the blocking sweep's charge, so the
+    // variants stay charge-comparable point for point.
+    let interior_rows = rows.saturating_sub(2);
+    let phase_a_us = full_us * (3.0 / 7.0) * (interior_rows as f64 / rows as f64);
+    let phase_b_us = full_us - phase_a_us;
+
+    let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+    let mut ar = ctx.allreduce_init(
+        env, Datatype::F64, ReduceOp::Max, 8, AllreduceMethod::Tuned, SyncScheme::Spin,
+    );
+    let halo_tag = env.next_coll_tag(&w, opcode::HALO);
+
+    let mut stats = RankStats::default();
+    env.harness_sync(&w);
+    let t_start = env.vclock();
+
+    for _ in 0..cfg.max_iters {
+        // ---- halo sends first: payloads are last iteration's rows -----
+        let t0 = env.vclock();
+        let mut old: Vec<f64> = strip.to_vec();
+        if p > 1 {
+            if me > 0 {
+                env.send(&w, me - 1, halo_tag, to_bytes(&strip[n..2 * n]));
+            }
+            if me + 1 < p {
+                env.send(&w, me + 1, halo_tag, to_bytes(&strip[rows * n..(rows + 1) * n]));
+            }
+        }
+        stats.comm_us += env.vclock() - t0;
+
+        // ---- phase A: halo-independent interior red rows 2..rp2−2 -----
+        let t1 = env.vclock();
+        match cfg.backend {
+            Backend::Phantom => env.compute(phase_a_us),
+            Backend::Modeled => {
+                red_pass(&mut strip, &old, n, 2..rp2.saturating_sub(2));
+                env.compute(phase_a_us);
+            }
+            _ => {
+                env.compute_timed(|| red_pass(&mut strip, &old, n, 2..rp2.saturating_sub(2)));
+            }
+        }
+        stats.comp_us += env.vclock() - t1;
+
+        // ---- halos arrive (overlapped with phase A above) -------------
+        let t2 = env.vclock();
+        if p > 1 {
+            let mut buf = vec![0u8; n * 8];
+            if me + 1 < p {
+                env.recv_into(&w, Some(me + 1), halo_tag, &mut buf);
+                strip[(rp2 - 1) * n..rp2 * n].copy_from_slice(&cast_slice::<f64>(&buf));
+                old[(rp2 - 1) * n..rp2 * n].copy_from_slice(&cast_slice::<f64>(&buf));
+            }
+            if me > 0 {
+                env.recv_into(&w, Some(me - 1), halo_tag, &mut buf);
+                strip[..n].copy_from_slice(&cast_slice::<f64>(&buf));
+                old[..n].copy_from_slice(&cast_slice::<f64>(&buf));
+            }
+        }
+        stats.comm_us += env.vclock() - t2;
+
+        // ---- phase B: halo-adjacent red rows, black pass, delta -------
+        let t3 = env.vclock();
+        let local_delta = match cfg.backend {
+            Backend::Phantom => {
+                env.compute(phase_b_us);
+                f64::INFINITY
+            }
+            Backend::Modeled => {
+                let d = finish_sweep(&mut strip, &old, rp2, n);
+                env.compute(phase_b_us);
+                d
+            }
+            _ => env.compute_timed(|| finish_sweep(&mut strip, &old, rp2, n)),
+        };
+        stats.comp_us += env.vclock() - t3;
+
+        // ---- the 8 B max-allreduce on the session handle --------------
+        env.harness_sync(&w);
+        let t4 = env.vclock();
+        ar.start_allreduce(env, to_bytes(&[local_delta]));
+        let g = ar.wait(env);
+        let global_delta = cast_slice::<f64>(&ar.window().expect("handle live").load(env, g, 8))[0];
+        stats.comm_us += env.vclock() - t4;
+        stats.iters += 1;
+
+        if global_delta < cfg.tol {
+            break;
+        }
+    }
+    stats.total_us = env.vclock() - t_start;
+    stats.checksum = strip[n..(rows + 1) * n].iter().sum();
+
+    env.barrier(ctx.shmem());
+    ar.free(env);
+    stats
+}
+
+/// Phase B of the phased sweep: the two halo-adjacent red rows (1 and
+/// `rp2 − 2`; on 1- and 2-row strips this is the whole red pass), then
+/// the black pass from the completed red snapshot, then the delta
+/// against the pre-sweep snapshot — composing to exactly
+/// [`crate::kernels::native::rb_sweep`].
+fn finish_sweep(strip: &mut [f64], old: &[f64], rp2: usize, n: usize) -> f64 {
+    red_pass(strip, old, n, 1..2.min(rp2 - 1));
+    if rp2 > 3 {
+        red_pass(strip, old, n, rp2 - 2..rp2 - 1);
+    }
+    let red: Vec<f64> = strip.to_vec();
+    black_pass(strip, &red, rp2, n);
+    max_delta(strip, old, rp2, n)
 }
 
 #[cfg(test)]

@@ -17,10 +17,10 @@ use super::ompsim::OmpModel;
 use super::{KernelReport, RankStats, Variant};
 use crate::coll::{CollOp, Flavor, PlanCache};
 use crate::coordinator::{ClusterSpec, SimCluster};
-use crate::hybrid::SyncScheme;
+use crate::hybrid::{HyColl, HybridCtx, LeaderPolicy, RootPolicy, SyncScheme};
 use crate::mpi::env::ProcEnv;
-use crate::mpi::Datatype;
-use crate::util::from_bytes;
+use crate::mpi::{Communicator, Datatype};
+use crate::util::{from_bytes, to_bytes};
 
 /// SUMMA configuration.
 #[derive(Clone, Copy, Debug)]
@@ -76,6 +76,10 @@ fn rank_program(env: &mut ProcEnv, cfg: SummaCfg) -> RankStats {
         .collect();
     let mut c = vec![0.0f64; nb * nb];
     let blk = nb * nb * 8;
+
+    if cfg.variant == Variant::HybridOverlap {
+        return overlap_phases(env, cfg, &row_comm, &col_comm, q, nb, &my_a, &my_b, &mut c);
+    }
 
     // Collective plans, built once before the phase loop — "a typical
     // example of supporting multiple communicators in our design": one
@@ -175,6 +179,90 @@ fn rank_program(env: &mut ProcEnv, cfg: SummaCfg) -> RankStats {
     stats.checksum = c.iter().sum();
 
     plans.free(env);
+    stats
+}
+
+/// The split-phase SUMMA inner loop ([`Variant::HybridOverlap`],
+/// DESIGN.md §5e): two pipelined persistent bcast handles per
+/// sub-communicator (double-buffered windows), and in phase `k` the
+/// phase-`k+1` broadcasts are *started* — the roots' bridge chunks going
+/// onto the wire inside `start` — before the phase-`k` dgemm runs, so
+/// every other rank's `wait` at the top of phase `k+1` finds the panels
+/// already in flight (or arrived). Same math, same per-phase barrier
+/// count and bit-identical `C` as the blocking hybrid variant; strictly
+/// less modeled time once the panel transfer has a dgemm to hide under.
+///
+/// Roots rotate per phase, so the handles use [`RootPolicy::PerStart`]
+/// (the strict `Fixed` mode suits repeated same-root broadcasts).
+#[allow(clippy::too_many_arguments)]
+fn overlap_phases(
+    env: &mut ProcEnv,
+    cfg: SummaCfg,
+    row_comm: &Communicator,
+    col_comm: &Communicator,
+    q: usize,
+    nb: usize,
+    my_a: &[f64],
+    my_b: &[f64],
+    c: &mut [f64],
+) -> RankStats {
+    let w = env.world();
+    let blk = nb * nb * 8;
+    /// Bridge pipelining depth of the prefetched panel broadcasts.
+    const DEPTH: usize = 4;
+    let row_ctx = HybridCtx::create(env, row_comm, LeaderPolicy::Single);
+    let col_ctx = HybridCtx::create(env, col_comm, LeaderPolicy::Single);
+    let mk = |env: &mut ProcEnv, ctx: &std::rc::Rc<HybridCtx>| {
+        ctx.bcast_init_split(env, blk, SyncScheme::Spin, RootPolicy::PerStart, DEPTH)
+    };
+    let mut ra: [HyColl; 2] = [mk(env, &row_ctx), mk(env, &row_ctx)];
+    let mut cb: [HyColl; 2] = [mk(env, &col_ctx), mk(env, &col_ctx)];
+    let start_phase = |env: &mut ProcEnv, ra: &mut HyColl, cb: &mut HyColl, k: usize| {
+        // Row/col rank k own block-column/-row k of A/B.
+        let a_arg = (row_comm.rank() == k).then(|| to_bytes(my_a));
+        ra.start_bcast(env, k, a_arg);
+        let b_arg = (col_comm.rank() == k).then(|| to_bytes(my_b));
+        cb.start_bcast(env, k, b_arg);
+    };
+
+    let mut stats = RankStats::default();
+    env.harness_sync(&w);
+    let t_start = env.vclock();
+
+    start_phase(env, &mut ra[0], &mut cb[0], 0);
+    for k in 0..q {
+        let h = k % 2;
+        // Complete phase k's broadcasts — overlapped with phase k−1's
+        // dgemm on every rank that isn't this phase's root side.
+        env.harness_sync(&w);
+        let t0 = env.vclock();
+        ra[h].wait(env);
+        cb[h].wait(env);
+        stats.comm_us += env.vclock() - t0;
+
+        if k + 1 < q {
+            // The `(k+1) % 2` windows were last read by phase k−1's
+            // dgemm, which every rank finished before its phase-k wait;
+            // one world barrier (same per-phase count as the blocking
+            // variant) orders the reuse, then prefetch phase k+1.
+            env.barrier(&w);
+            start_phase(env, &mut ra[(k + 1) % 2], &mut cb[(k + 1) % 2], k + 1);
+        }
+
+        let t1 = env.vclock();
+        let a: &[f64] = from_bytes(ra[h].result_view(blk).expect("window live"));
+        let b: &[f64] = from_bytes(cb[h].result_view(blk).expect("window live"));
+        summa_block(env, cfg.backend, a, b, c, nb);
+        stats.comp_us += env.vclock() - t1;
+        stats.iters += 1;
+    }
+    stats.total_us = env.vclock() - t_start;
+    stats.checksum = c.iter().sum();
+
+    env.barrier(&w);
+    for h in [ra, cb].iter_mut().flatten() {
+        h.free(env);
+    }
     stats
 }
 

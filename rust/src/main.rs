@@ -29,7 +29,7 @@ fn usage() -> ! {
     eprintln!(
         "usage:\n  hympi figures <table1|table2|fig12..fig19|all> [--out DIR] [--scale X] [--fast]\n  \
          hympi microbench <allgather|bcast|allreduce|reduce-scatter|gather|scatter> [--preset vulcan-sb|vulcan-hsw|hazelhen] [--nodes N] [--bytes B] [--leaders K] [--fast]\n  \
-         hympi kernel <summa|poisson|bpmf> [--variant pure-mpi|mpi+mpi|mpi+openmp] [--nodes N] [--n N] [--backend auto|pjrt|native] [--scale X]\n  \
+         hympi kernel <summa|poisson|bpmf> [--variant pure-mpi|mpi+mpi|mpi+mpi-overlap|mpi+openmp] [--nodes N] [--n N] [--backend auto|pjrt|native|modeled|phantom] [--scale X]\n  \
          hympi info"
     );
     std::process::exit(2);

@@ -387,6 +387,14 @@ impl ProcEnv {
         self.vclock = self.vclock.max(arrival) + self.state.net.recv_overhead_us;
     }
 
+    /// Non-blocking message probe (`MPI_Iprobe`): is a matching message
+    /// already deliverable? Charges nothing — the split-phase progress
+    /// engine uses it to decide whether a receive-side bridge chunk can
+    /// run without blocking.
+    pub fn probe(&self, comm: &Communicator, src: Option<usize>, tag: i64) -> bool {
+        self.state.mailboxes[self.rank].probe(Matcher { src, tag, comm: comm.id() })
+    }
+
     /// Combined send+receive (`MPI_Sendrecv`). Safe against cycles because
     /// sends are eager.
     pub fn sendrecv(
@@ -444,6 +452,17 @@ impl ProcEnv {
     pub fn harness_sync(&mut self, comm: &Communicator) {
         let g = self.sync_group(comm);
         self.vclock = g.arrive_and_wait(self.vclock);
+    }
+
+    /// Complete a split-phase barrier on a private [`SyncGroup`] (the
+    /// window-owned groups of the split-phase schedules): charge exactly
+    /// what [`ProcEnv::barrier`] charges — `vmax` plus the dissemination
+    /// cost over `size` participants — except the clock can only move
+    /// forward (a rank that computed past the release keeps its time; in
+    /// the drive-to-completion case `vclock ≤ vmax` always holds, so the
+    /// charge is bit-identical to the blocking barrier).
+    pub fn finish_group_barrier(&mut self, vmax: f64, size: usize, spans_nodes: bool) {
+        self.vclock = (vmax + self.state.net.barrier_cost(size, spans_nodes)).max(self.vclock);
     }
 
     // ---- communicator management --------------------------------------------
@@ -597,6 +616,22 @@ impl ProcEnv {
         let release_vt = win.flag(flag).wait_eq(target);
         std::sync::atomic::fence(std::sync::atomic::Ordering::SeqCst);
         self.vclock = self.vclock.max(release_vt) + self.state.net.spin_poll_us;
+    }
+
+    /// Non-blocking child-side probe of the spinning sync: one poll
+    /// iteration. On success charges exactly what [`ProcEnv::spin_wait`]
+    /// charges at release observation; on failure charges nothing (the
+    /// cost model bills one `spin_poll_us` per *observed* release, as the
+    /// blocking path does).
+    pub fn spin_try_wait(&mut self, win: &SharedWindow, flag: usize, target: u32) -> bool {
+        match win.flag(flag).try_wait_eq(target) {
+            Some(release_vt) => {
+                std::sync::atomic::fence(std::sync::atomic::Ordering::SeqCst);
+                self.vclock = self.vclock.max(release_vt) + self.state.net.spin_poll_us;
+                true
+            }
+            None => false,
+        }
     }
 }
 

@@ -16,8 +16,9 @@
 //! happens-after the writers' Release. This mirrors the paper's §4.5
 //! discussion of `MPI_Win_sync` and data integrity.
 
-use super::sync::SpinFlag;
+use super::sync::{SpinFlag, SyncGroup};
 use std::cell::UnsafeCell;
+use std::sync::{Arc, OnceLock};
 
 /// Number of spin flags carried by every window: the hybrid protocols use
 /// flag 0 for the leader→children release and flag 1 for auxiliary phases.
@@ -44,6 +45,12 @@ pub struct SharedWindow {
     sizes: Vec<usize>,
     /// Status flags for the §4.5 spinning synchronization.
     flags: [SpinFlag; WIN_FLAGS],
+    /// Window-private barrier groups (DESIGN.md §5e): slot 0 is the
+    /// node-level red/yellow sync of the split-phase schedules, slot 1 the
+    /// leader-set sync. Private so an in-flight split-phase handle's
+    /// arrivals can never interleave with user barriers (or other
+    /// handles) on the communicator's shared [`SyncGroup`].
+    syncs: [OnceLock<Arc<SyncGroup>>; 2],
 }
 
 // Safety: see module docs — concurrent access is governed by the
@@ -68,7 +75,18 @@ impl SharedWindow {
             offsets,
             sizes: sizes.to_vec(),
             flags: Default::default(),
+            syncs: [OnceLock::new(), OnceLock::new()],
         }
+    }
+
+    /// Window-private barrier group `slot` over `size` participants,
+    /// lazily created on first use (same contract as
+    /// [`CommCore::sync_group`](super::state::CommCore::sync_group): every
+    /// participant must ask with the same size).
+    pub fn sync_group(&self, slot: usize, size: usize) -> Arc<SyncGroup> {
+        let g = self.syncs[slot].get_or_init(|| Arc::new(SyncGroup::new(size)));
+        assert_eq!(g.size(), size, "window sync slot {slot} size mismatch");
+        g.clone()
     }
 
     /// Raw base pointer of the region. Derived from the shared slice

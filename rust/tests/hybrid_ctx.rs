@@ -7,6 +7,8 @@
 //! bridge blocks while k = 1 stays bit-identical to the single-leader
 //! path).
 
+#![allow(deprecated)] // the shim-parity test exercises the deprecated CommPackage
+
 use hympi::coll::{Flavor, PlanCache};
 use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
 use hympi::hybrid::{AllreduceMethod, CommPackage, HybridCtx, LeaderPolicy, SyncScheme};
