@@ -1,0 +1,29 @@
+//! Correctness analysis for compiled hybrid collectives (DESIGN.md §6).
+//!
+//! Two cooperating passes over the split-phase machinery of §5e:
+//!
+//! 1. [`schedule`] — a **static schedule verifier**: ranks export their
+//!    compiled stage chains
+//!    ([`HyColl::export_schedule`](crate::hybrid::HyColl::export_schedule),
+//!    [`PlanCache::verify`](crate::coll::PlanCache::verify)); the
+//!    verifier rebuilds the cross-rank dependency graph (half-barrier
+//!    pairs, yellow release edges, bridge chunk streams, nested
+//!    collectives) and checks deadlock-freedom, barrier arity, orphaned
+//!    sends/recvs, fixed-root consistency and window bounds. Run it over
+//!    every committed shape with `cargo run --release --bin
+//!    verify_schedules` (a CI gate).
+//! 2. [`race`] — a **happens-before race detector**: vector clocks
+//!    advanced at the sync primitives, byte-range access records on every
+//!    [`SharedWindow`](crate::mpi::win::SharedWindow) operation, reports
+//!    for conflicting unordered pairs with replay seed and stage names.
+//!
+//! The verifier proves the *compiled intent* sound; the detector checks
+//! the *executed behavior* (including the op bodies' raw window views the
+//! static model only over-approximates). Together they are the backstop
+//! the engine-refactor roadmap items lean on.
+
+pub mod race;
+pub mod schedule;
+
+pub use race::{RaceDetector, RaceReport};
+pub use schedule::{verify_handle, verify_program, verify_rank_local, Diagnostic, RankSchedule};

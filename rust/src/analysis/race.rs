@@ -1,0 +1,528 @@
+//! The happens-before race detector (DESIGN.md §6, pass 2).
+//!
+//! Shared windows make missing or misplaced syncs a *silent* hazard: a
+//! child that loads before the leader's release still reads bytes — just
+//! possibly stale ones — and pure-MPI semantics never exposes the bug.
+//! This module checks the property directly, FastTrack-style: every
+//! [`SharedWindow`](crate::mpi::win::SharedWindow) byte-range access is
+//! recorded together with the accessing rank's **vector clock**, clocks
+//! advance at exactly the sync events the hybrid protocols use, and any
+//! two overlapping accesses from different ranks, at least one a write,
+//! that are *unordered* by happens-before are reported as a race.
+//!
+//! ## Which sync primitives create edges
+//!
+//! - [`SyncGroup`](crate::mpi::sync::SyncGroup) arrive/finish (the red
+//!   sync and the `Barrier`-scheme yellow sync): every participant
+//!   publishes its clock at *arrive* and joins the accumulated clock of
+//!   the whole generation at *finish* — a full barrier, edges both ways.
+//! - [`SpinFlag`](crate::mpi::sync::SpinFlag) post/wait (the §4.5
+//!   spinning yellow sync): the poster joins its clock into the flag and
+//!   ticks; a waiter joins the flag's clock into its own. Edges flow
+//!   **leader → children only** — yellow sync is a *release*, not a
+//!   barrier, so a leader racing *ahead* past children is (correctly)
+//!   still observable.
+//!
+//! Message-clock piggybacking is deliberately absent: windows are
+//! node-local, and every same-node cross-rank ordering in the hybrid
+//! protocols goes through one of the two primitives above (bridge
+//! messages order *bridge* traffic, whose payloads each rank reads and
+//! writes only in its own window ranges).
+//!
+//! ## Installation
+//!
+//! Detection is opt-in per OS thread (= per simulated rank):
+//! [`install`] binds a thread to a shared [`RaceDetector`]; uninstalled
+//! threads skip every hook through one relaxed atomic load, so parallel
+//! test binaries and un-instrumented clusters pay ~nothing. Reports carry
+//! the handle's run `seed` and the two offending stage labels (set by the
+//! schedule interpreter via [`label`]) for deterministic replay.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A per-rank vector clock; component `r` counts rank `r`'s release
+/// operations observed so far.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VClock(Vec<u64>);
+
+impl VClock {
+    pub fn new(nranks: usize) -> VClock {
+        VClock(vec![0; nranks])
+    }
+
+    /// Pointwise maximum (the acquire half of a sync edge).
+    pub fn join(&mut self, other: &VClock) {
+        for (a, b) in self.0.iter_mut().zip(&other.0) {
+            *a = (*a).max(*b);
+        }
+    }
+
+    /// Advance my own component (the release half).
+    pub fn tick(&mut self, rank: usize) {
+        self.0[rank] += 1;
+    }
+
+    pub fn get(&self, rank: usize) -> u64 {
+        self.0[rank]
+    }
+}
+
+/// One side of a reported conflicting pair.
+#[derive(Clone, Debug)]
+pub struct AccessInfo {
+    pub rank: usize,
+    /// The schedule stage executing when the access happened (set via
+    /// [`label`] by the interpreter; "start"/"result" around it).
+    pub stage: String,
+    pub offset: usize,
+    pub len: usize,
+    pub write: bool,
+}
+
+impl fmt::Display for AccessInfo {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "rank {} {} [{}, {}) during \"{}\"",
+            self.rank,
+            if self.write { "write" } else { "read" },
+            self.offset,
+            self.offset + self.len,
+            self.stage
+        )
+    }
+}
+
+/// A conflicting overlapping access pair unordered by happens-before.
+#[derive(Clone, Debug)]
+pub struct RaceReport {
+    /// Window identity ([`SharedWindow::id`](crate::mpi::win::SharedWindow::id)).
+    pub win: u64,
+    /// The deterministic replay seed the detector was installed with.
+    pub seed: u64,
+    pub first: AccessInfo,
+    pub second: AccessInfo,
+}
+
+impl fmt::Display for RaceReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "data race on window {}: {} is unordered with {} (replay seed {})",
+            self.win, self.first, self.second, self.seed
+        )
+    }
+}
+
+struct Record {
+    info: AccessInfo,
+    clock: VClock,
+}
+
+#[derive(Default)]
+struct DetState {
+    /// Access history per window id.
+    accesses: HashMap<u64, Vec<Record>>,
+    /// Clock accumulator per (group id, generation): everyone publishes
+    /// at arrive, everyone joins at finish.
+    barriers: HashMap<(u64, usize), VClock>,
+    /// Cumulative released clock per flag id (single-poster protocol; a
+    /// cumulative clock is monotone, so late observers acquire a
+    /// superset — never less — of what their post published).
+    flags: HashMap<u64, VClock>,
+    races: Vec<RaceReport>,
+}
+
+/// Shared detector state; one per instrumented cluster run.
+pub struct RaceDetector {
+    nranks: usize,
+    seed: u64,
+    state: Mutex<DetState>,
+}
+
+/// Cap on stored reports (the first few pinpoint the bug; an unsynced
+/// loop would otherwise flood memory).
+const MAX_REPORTS: usize = 64;
+
+/// Access-history cap per window. Accesses older than this are almost
+/// surely ordered before everything current; dropping them can only lose
+/// reports in pathological schedules, never invent one.
+const MAX_RECORDS: usize = 8192;
+
+impl RaceDetector {
+    /// `nranks` sizes the vector clocks; `seed` is echoed in every report
+    /// so a failing configuration can be replayed deterministically.
+    pub fn new(nranks: usize, seed: u64) -> Arc<RaceDetector> {
+        Arc::new(RaceDetector { nranks, seed, state: Mutex::new(DetState::default()) })
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Races found so far.
+    pub fn reports(&self) -> Vec<RaceReport> {
+        self.state.lock().unwrap().races.clone()
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.state.lock().unwrap().races.is_empty()
+    }
+}
+
+struct RankCtx {
+    det: Arc<RaceDetector>,
+    rank: usize,
+    clock: VClock,
+    stage: String,
+}
+
+/// Count of threads with an installed context — the global fast gate
+/// every hook checks first (uninstrumented runs pay one relaxed load).
+static ACTIVE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static CTX: RefCell<Option<RankCtx>> = const { RefCell::new(None) };
+}
+
+/// Bind the current OS thread (= one simulated rank) to `det` as `rank`.
+/// Every [`SharedWindow`](crate::mpi::win::SharedWindow) access and sync
+/// event on this thread is tracked until [`uninstall`].
+pub fn install(det: &Arc<RaceDetector>, rank: usize) {
+    CTX.with(|c| {
+        let mut c = c.borrow_mut();
+        assert!(c.is_none(), "race context already installed on this thread");
+        *c = Some(RankCtx {
+            det: det.clone(),
+            rank,
+            clock: VClock::new(det.nranks),
+            stage: "start".to_string(),
+        });
+    });
+    ACTIVE.fetch_add(1, Ordering::SeqCst);
+}
+
+/// Detach the current thread from its detector (no-op if none).
+pub fn uninstall() {
+    let had = CTX.with(|c| c.borrow_mut().take().is_some());
+    if had {
+        ACTIVE.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Is any thread in this process instrumented? (Hook fast gate.)
+#[inline]
+pub fn enabled() -> bool {
+    ACTIVE.load(Ordering::Relaxed) > 0
+}
+
+/// Set the current thread's stage label for subsequent access reports.
+/// The closure only runs when this thread is instrumented, so callers may
+/// pass a formatting closure with no cost on the common path.
+pub fn label<F: FnOnce() -> String>(f: F) {
+    if !enabled() {
+        return;
+    }
+    CTX.with(|c| {
+        if let Some(ctx) = c.borrow_mut().as_mut() {
+            ctx.stage = f();
+        }
+    });
+}
+
+fn with_ctx(f: impl FnOnce(&mut RankCtx)) {
+    if !enabled() {
+        return;
+    }
+    CTX.with(|c| {
+        if let Some(ctx) = c.borrow_mut().as_mut() {
+            f(ctx);
+        }
+    });
+}
+
+/// Hook: a byte-range window access by the current thread.
+pub(crate) fn on_access(win: u64, offset: usize, len: usize, write: bool) {
+    if len == 0 {
+        return;
+    }
+    with_ctx(|ctx| {
+        let info = AccessInfo { rank: ctx.rank, stage: ctx.stage.clone(), offset, len, write };
+        let mut st = ctx.det.state.lock().unwrap();
+        let st = &mut *st;
+        let recs = st.accesses.entry(win).or_default();
+        for r in recs.iter() {
+            if r.info.rank == ctx.rank || !(r.info.write || write) {
+                continue;
+            }
+            let overlap = r.info.offset < offset + len && offset < r.info.offset + r.info.len;
+            if !overlap {
+                continue;
+            }
+            // Ordered iff one side's release component is contained in
+            // the other's clock.
+            let r_before_me = r.clock.get(r.info.rank) <= ctx.clock.get(r.info.rank);
+            let me_before_r = ctx.clock.get(ctx.rank) <= r.clock.get(ctx.rank);
+            if !(r_before_me || me_before_r) && st.races.len() < MAX_REPORTS {
+                st.races.push(RaceReport {
+                    win,
+                    seed: ctx.det.seed,
+                    first: r.info.clone(),
+                    second: info.clone(),
+                });
+            }
+        }
+        if recs.len() >= MAX_RECORDS {
+            recs.drain(..MAX_RECORDS / 2);
+        }
+        recs.push(Record { info, clock: ctx.clock.clone() });
+    });
+}
+
+/// Hook: barrier arrival. Publishes my clock into the generation's
+/// accumulator *before* the arrival count moves (the caller guarantees
+/// ordering), then ticks my release component.
+pub(crate) fn on_barrier_arrive(group: u64, generation: usize) {
+    with_ctx(|ctx| {
+        let mut st = ctx.det.state.lock().unwrap();
+        let nranks = ctx.det.nranks;
+        st.barriers
+            .entry((group, generation))
+            .or_insert_with(|| VClock::new(nranks))
+            .join(&ctx.clock);
+        drop(st);
+        ctx.clock.tick(ctx.rank);
+    });
+}
+
+/// Hook: barrier completion observed (poll success, blocking finish, or
+/// — for the generation's releasing last arriver — arrive itself). Joins
+/// the generation's accumulated clock; idempotent, since accumulation is
+/// complete before any member can observe the release.
+pub(crate) fn on_barrier_finish(group: u64, generation: usize) {
+    with_ctx(|ctx| {
+        let st = ctx.det.state.lock().unwrap();
+        if let Some(acc) = st.barriers.get(&(group, generation)) {
+            let acc = acc.clone();
+            drop(st);
+            ctx.clock.join(&acc);
+        }
+    });
+}
+
+/// Hook: spin-flag post (runs *before* the status increment). Release
+/// half only: the poster's clock flows into the flag, nothing flows back.
+pub(crate) fn on_flag_post(flag: u64) {
+    with_ctx(|ctx| {
+        let mut st = ctx.det.state.lock().unwrap();
+        let nranks = ctx.det.nranks;
+        st.flags.entry(flag).or_insert_with(|| VClock::new(nranks)).join(&ctx.clock);
+        drop(st);
+        ctx.clock.tick(ctx.rank);
+    });
+}
+
+/// Hook: spin-flag wait satisfied. Acquire half: the flag's cumulative
+/// released clock flows into the observer.
+pub(crate) fn on_flag_acquire(flag: u64) {
+    with_ctx(|ctx| {
+        let st = ctx.det.state.lock().unwrap();
+        if let Some(fc) = st.flags.get(&flag) {
+            let fc = fc.clone();
+            drop(st);
+            ctx.clock.join(&fc);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::sync::{SpinFlag, SyncGroup};
+    use crate::mpi::win::SharedWindow;
+
+    #[test]
+    fn vclock_join_and_tick() {
+        let mut a = VClock::new(3);
+        let mut b = VClock::new(3);
+        a.tick(0);
+        a.tick(0);
+        b.tick(1);
+        b.join(&a);
+        assert_eq!(b.get(0), 2);
+        assert_eq!(b.get(1), 1);
+        assert_eq!(b.get(2), 0);
+    }
+
+    /// Run `f0`/`f1` as two instrumented rank threads over shared state.
+    fn two_ranks<S: Send + Sync + 'static>(
+        det: &Arc<RaceDetector>,
+        shared: Arc<S>,
+        f0: impl FnOnce(&S) + Send + 'static,
+        f1: impl FnOnce(&S) + Send + 'static,
+    ) {
+        let spawn = |rank: usize, det: Arc<RaceDetector>, s: Arc<S>, f: Box<dyn FnOnce(&S) + Send>| {
+            std::thread::spawn(move || {
+                install(&det, rank);
+                f(&s);
+                uninstall();
+            })
+        };
+        let h0 = spawn(0, det.clone(), shared.clone(), Box::new(f0));
+        let h1 = spawn(1, det.clone(), shared, Box::new(f1));
+        h0.join().unwrap();
+        h1.join().unwrap();
+    }
+
+    #[test]
+    fn unsynchronized_write_read_races() {
+        let det = RaceDetector::new(2, 42);
+        let win = Arc::new(SharedWindow::allocate(&[16]));
+        two_ranks(
+            &det,
+            win,
+            |w| w.write(0, &[1; 8]),
+            |w| {
+                let _ = w.read_vec(4, 8);
+            },
+        );
+        let reports = det.reports();
+        assert_eq!(reports.len(), 1, "exactly one conflicting pair: {reports:?}");
+        assert_eq!(reports[0].seed, 42);
+        let shown = reports[0].to_string();
+        assert!(shown.contains("seed 42"), "{shown}");
+    }
+
+    #[test]
+    fn disjoint_ranges_do_not_race() {
+        let det = RaceDetector::new(2, 0);
+        let win = Arc::new(SharedWindow::allocate(&[16]));
+        two_ranks(&det, win, |w| w.write(0, &[1; 8]), |w| w.write(8, &[2; 8]));
+        assert!(det.is_clean(), "{:?}", det.reports());
+    }
+
+    #[test]
+    fn barrier_orders_write_before_read() {
+        let det = RaceDetector::new(2, 0);
+        struct S {
+            win: SharedWindow,
+            grp: SyncGroup,
+        }
+        let s = Arc::new(S { win: SharedWindow::allocate(&[16]), grp: SyncGroup::new(2) });
+        two_ranks(
+            &det,
+            s,
+            |s| {
+                s.win.write(0, &[7; 16]);
+                s.grp.arrive_and_wait(1.0);
+            },
+            |s| {
+                s.grp.arrive_and_wait(2.0);
+                let _ = s.win.read_vec(0, 16);
+            },
+        );
+        assert!(det.is_clean(), "{:?}", det.reports());
+    }
+
+    #[test]
+    fn flag_release_orders_write_before_read() {
+        let det = RaceDetector::new(2, 0);
+        struct S {
+            win: SharedWindow,
+            flag: SpinFlag,
+        }
+        let s = Arc::new(S { win: SharedWindow::allocate(&[16]), flag: SpinFlag::new() });
+        two_ranks(
+            &det,
+            s,
+            |s| {
+                s.win.write(0, &[7; 16]);
+                s.flag.post(1.0);
+            },
+            |s| {
+                s.flag.wait_eq(1);
+                let _ = s.win.read_vec(0, 16);
+            },
+        );
+        assert!(det.is_clean(), "{:?}", det.reports());
+    }
+
+    #[test]
+    fn ack_flag_closes_the_back_edge() {
+        // A waiter can signal *back* through a second flag; the poster's
+        // wait on it is an acquire, so the round trip is fully ordered
+        // and must stay clean (contrast `poster_racing_ahead_is_caught`,
+        // where the back edge is missing).
+        let det = RaceDetector::new(2, 0);
+        struct S {
+            win: SharedWindow,
+            go: SpinFlag,
+            ack: SpinFlag,
+        }
+        let s = Arc::new(S {
+            win: SharedWindow::allocate(&[16]),
+            go: SpinFlag::new(),
+            ack: SpinFlag::new(),
+        });
+        two_ranks(
+            &det,
+            s,
+            |s| {
+                s.go.post(1.0);
+                s.ack.wait_eq(1);
+                let _ = s.win.read_vec(0, 8);
+            },
+            |s| {
+                s.go.wait_eq(1);
+                s.win.write(0, &[9; 8]);
+                s.ack.post(2.0);
+            },
+        );
+        assert!(det.is_clean(), "{:?}", det.reports());
+    }
+
+    #[test]
+    fn poster_racing_ahead_is_caught() {
+        // The genuinely one-directional case: after posting, the leader
+        // reads a range the child writes post-wait, with only wall-clock
+        // (join) ordering between them — a real protocol bug the release
+        // edge must NOT mask.
+        let det = RaceDetector::new(2, 7);
+        let win = Arc::new(SharedWindow::allocate(&[16]));
+        struct S {
+            win: Arc<SharedWindow>,
+            go: SpinFlag,
+        }
+        let s = Arc::new(S { win: win.clone(), go: SpinFlag::new() });
+        let det2 = det.clone();
+        let s2 = s.clone();
+        let child = std::thread::spawn(move || {
+            install(&det2, 1);
+            s2.go.wait_eq(1);
+            s2.win.write(0, &[9; 8]);
+            uninstall();
+        });
+        install(&det, 0);
+        s.go.post(1.0);
+        child.join().unwrap(); // real-time order, no happens-before edge
+        let _ = s.win.read_vec(0, 8);
+        uninstall();
+        let reports = det.reports();
+        assert_eq!(reports.len(), 1, "leader's post-release read races: {reports:?}");
+        assert_eq!(reports[0].seed, 7);
+    }
+
+    #[test]
+    fn uninstalled_threads_pay_nothing_and_record_nothing() {
+        let det = RaceDetector::new(2, 0);
+        let win = SharedWindow::allocate(&[8]);
+        win.write(0, &[1; 8]); // no context on this thread: untracked
+        let _ = win.read_vec(0, 8);
+        assert!(det.is_clean());
+        assert!(det.reports().is_empty());
+    }
+}

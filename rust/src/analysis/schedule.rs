@@ -1,0 +1,829 @@
+//! The static schedule verifier (DESIGN.md §6, pass 1).
+//!
+//! Since the split-phase redesign (§5e) every hybrid collective is
+//! compiled into a per-rank [`Stage`](crate::hybrid) chain — *data*, not
+//! control flow. This module gives that data a checkable model: each rank
+//! exports its chain as a [`RankSchedule`] of [`StageModel`]s (via
+//! [`HyColl::export_schedule`](crate::hybrid::HyColl::export_schedule)),
+//! and [`verify_handle`]/[`verify_program`] rebuild the *cross-rank
+//! dependency graph* those chains imply:
+//!
+//! - `Arrive`/`Await` half-barrier pairs on the handle's window-private
+//!   [`SyncGroup`](crate::mpi::sync::SyncGroup)s (one episode per matched
+//!   arrival round),
+//! - `Post`/`Wait` release edges of the §4.5 yellow sync (leader →
+//!   children, one-directional),
+//! - bridge chunk-stream sends/recvs matched by `(comm, src, dst, tag)`
+//!   in FIFO channel order,
+//! - nested bridge/node collectives matched by per-communicator call
+//!   sequence (a rendezvous: nobody leaves before everybody entered).
+//!
+//! On that graph the verifier checks deadlock-freedom (Kahn cycle
+//! detection), barrier arity consistency, orphaned or mismatched
+//! sends/recvs, missing releases, fixed-root consistency across ranks,
+//! and window bounds on every `Work` access. Every [`Diagnostic`] names
+//! the offending rank/stage pair where one exists.
+//!
+//! The model is deliberately *coarse on data, exact on synchronization*:
+//! `Work` access ranges may over-approximate (a striped leader is modeled
+//! as touching the union of its stripes), but every barrier, flag and
+//! message the schedule executes appears exactly once — which is what the
+//! graph-shaped checks need.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::fmt;
+
+/// A window-private barrier group: (window id, sync slot). Slot 0 is the
+/// node-level red/yellow sync, slot 1 the leader-set sync — the same
+/// slots [`SharedWindow::sync_group`](crate::mpi::win::SharedWindow::sync_group)
+/// hands out.
+pub type GroupId = (u64, usize);
+
+/// A window-resident spin flag: (window id, flag index).
+pub type FlagId = (u64, usize);
+
+/// One byte-range touched by a `Work` stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Access {
+    pub offset: usize,
+    pub len: usize,
+    pub write: bool,
+}
+
+/// One bridge point-to-point message of a pipelined chunk stream.
+/// `src`/`dst` are ranks *of that comm* (node indices on the bridges).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MsgModel {
+    pub comm: u64,
+    pub src: usize,
+    pub dst: usize,
+    pub tag: i64,
+    /// `true` on the sender's schedule, `false` on the receiver's.
+    pub send: bool,
+}
+
+/// One nested collective call (bridge allgatherv, node-level reduce, …)
+/// a `Work` stage performs. Matched across ranks by per-comm sequence
+/// position.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CollModel {
+    pub comm: u64,
+    pub kind: &'static str,
+    /// The comm's size — every member must call, in the same order.
+    pub size: usize,
+}
+
+/// One stage of a rank's schedule, resolved against that rank's role
+/// (a stage the rank sits out exports as [`StageModel::Skip`]).
+#[derive(Clone, Debug)]
+pub enum StageModel {
+    /// Register at a barrier group (never blocks).
+    Arrive { group: GroupId, size: usize },
+    /// Complete the matching `Arrive` (blocks until all `size` arrive).
+    Await { group: GroupId, size: usize },
+    /// An op work unit: window accesses, chunk-stream messages, nested
+    /// collectives.
+    Work { chunk: usize, accesses: Vec<Access>, msgs: Vec<MsgModel>, colls: Vec<CollModel> },
+    /// Yellow release, poster side (never blocks).
+    Post { flag: FlagId },
+    /// Yellow release, observer side (blocks until the matching post).
+    Wait { flag: FlagId },
+    /// The rank does not participate in this stage.
+    Skip,
+}
+
+impl StageModel {
+    fn kind_name(&self) -> &'static str {
+        match self {
+            StageModel::Arrive { .. } => "Arrive",
+            StageModel::Await { .. } => "Await",
+            StageModel::Work { .. } => "Work",
+            StageModel::Post { .. } => "Post",
+            StageModel::Wait { .. } => "Wait",
+            StageModel::Skip => "Skip",
+        }
+    }
+}
+
+/// One rank's exported schedule for one handle.
+#[derive(Clone, Debug)]
+pub struct RankSchedule {
+    /// Rank in the session's parent communicator.
+    pub rank: usize,
+    /// The rank's node index (= bridge rank on leaders).
+    pub node: usize,
+    /// Operation name (diagnostics only).
+    pub op: &'static str,
+    /// The root this schedule was compiled/exported for (`None` on
+    /// unrooted ops). [`verify_handle`] requires agreement across ranks.
+    pub root: Option<usize>,
+    /// Backing window identity ([`SharedWindow::id`](crate::mpi::win::SharedWindow::id)).
+    pub win: u64,
+    /// Window length in bytes — the bound every access is checked against.
+    pub win_len: usize,
+    pub stages: Vec<StageModel>,
+}
+
+/// A verifier finding. Display names the offending rank/stage pair
+/// wherever one exists.
+#[derive(Clone, Debug)]
+pub enum Diagnostic {
+    /// A `Work` access exceeds the window.
+    OutOfWindow { rank: usize, stage: usize, offset: usize, len: usize, win_len: usize },
+    /// An `Await` with no outstanding `Arrive` on that group.
+    AwaitWithoutArrive { rank: usize, stage: usize, group: GroupId },
+    /// An `Arrive` never completed by an `Await`.
+    ArriveWithoutAwait { rank: usize, stage: usize, group: GroupId },
+    /// A second `Arrive` on a group while one is outstanding (the
+    /// half-barrier contract forbids it).
+    OverlappingArrive { rank: usize, stage: usize, group: GroupId },
+    /// Ranks disagree on a group's participant count.
+    GroupSizeMismatch { group: GroupId, sizes: Vec<(usize, Vec<usize>)> },
+    /// Participants or per-rank episode counts don't line up: some rank
+    /// would wait forever at the barrier.
+    BarrierArity { group: GroupId, expected: usize, participants: Vec<(usize, usize)> },
+    /// A `Wait` episode with no corresponding `Post` anywhere.
+    MissingRelease { flag: FlagId, rank: usize, stage: usize, episode: usize },
+    /// A send no recv ever matches.
+    UnmatchedSend { rank: usize, stage: usize, comm: u64, dst: usize, tag: i64 },
+    /// A recv no send ever matches.
+    UnmatchedRecv { rank: usize, stage: usize, comm: u64, src: usize, tag: i64 },
+    /// Nested collective call sequences disagree across a comm's members.
+    CollectiveMismatch { comm: u64, detail: String },
+    /// Fixed-root handles compiled against different roots.
+    RootMismatch { roots: Vec<(usize, usize)> },
+    /// The cross-rank dependency graph has a cycle (or events stranded
+    /// behind one); `blocked` names the first few stuck events.
+    Deadlock { blocked: Vec<String> },
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Diagnostic::OutOfWindow { rank, stage, offset, len, win_len } => write!(
+                f,
+                "rank {rank} stage {stage}: access [{offset}, {}) exceeds window length {win_len}",
+                offset.saturating_add(*len)
+            ),
+            Diagnostic::AwaitWithoutArrive { rank, stage, group } => write!(
+                f,
+                "rank {rank} stage {stage}: Await on group {group:?} without a matching Arrive"
+            ),
+            Diagnostic::ArriveWithoutAwait { rank, stage, group } => {
+                write!(f, "rank {rank} stage {stage}: Arrive on group {group:?} never Awaited")
+            }
+            Diagnostic::OverlappingArrive { rank, stage, group } => write!(
+                f,
+                "rank {rank} stage {stage}: second Arrive on group {group:?} while one is outstanding"
+            ),
+            Diagnostic::GroupSizeMismatch { group, sizes } => {
+                write!(f, "group {group:?}: declared sizes disagree (size -> ranks): {sizes:?}")
+            }
+            Diagnostic::BarrierArity { group, expected, participants } => write!(
+                f,
+                "group {group:?}: expected {expected} participants with equal episode counts, \
+                 got (rank, episodes): {participants:?}"
+            ),
+            Diagnostic::MissingRelease { flag, rank, stage, episode } => write!(
+                f,
+                "flag {flag:?}: rank {rank} stage {stage} waits for release episode {episode} \
+                 but no such post exists"
+            ),
+            Diagnostic::UnmatchedSend { rank, stage, comm, dst, tag } => write!(
+                f,
+                "rank {rank} stage {stage}: send on comm {comm} to {dst} tag {tag} never received"
+            ),
+            Diagnostic::UnmatchedRecv { rank, stage, comm, src, tag } => write!(
+                f,
+                "rank {rank} stage {stage}: recv on comm {comm} from {src} tag {tag} never sent"
+            ),
+            Diagnostic::CollectiveMismatch { comm, detail } => write!(f, "comm {comm}: {detail}"),
+            Diagnostic::RootMismatch { roots } => {
+                write!(f, "fixed-root schedules disagree on the root (rank, root): {roots:?}")
+            }
+            Diagnostic::Deadlock { blocked } => {
+                write!(f, "dependency cycle — blocked events: {}", blocked.join("; "))
+            }
+        }
+    }
+}
+
+/// Rank-local checks on one schedule: window bounds on every access and
+/// well-formed `Arrive`/`Await` pairing per group. The cross-rank checks
+/// of [`verify_handle`] subsume these; exposed separately so a single
+/// rank (e.g. [`PlanCache::verify`](crate::coll::PlanCache::verify)) can
+/// self-check without its peers' schedules.
+pub fn verify_rank_local(s: &RankSchedule) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut outstanding: BTreeMap<GroupId, usize> = BTreeMap::new();
+    for (i, st) in s.stages.iter().enumerate() {
+        match st {
+            StageModel::Arrive { group, .. } => {
+                if outstanding.insert(*group, i).is_some() {
+                    out.push(Diagnostic::OverlappingArrive { rank: s.rank, stage: i, group: *group });
+                }
+            }
+            StageModel::Await { group, .. } => {
+                if outstanding.remove(group).is_none() {
+                    out.push(Diagnostic::AwaitWithoutArrive { rank: s.rank, stage: i, group: *group });
+                }
+            }
+            StageModel::Work { accesses, .. } => {
+                for a in accesses {
+                    let ok = match a.offset.checked_add(a.len) {
+                        Some(end) => end <= s.win_len,
+                        None => false,
+                    };
+                    if !ok {
+                        out.push(Diagnostic::OutOfWindow {
+                            rank: s.rank,
+                            stage: i,
+                            offset: a.offset,
+                            len: a.len,
+                            win_len: s.win_len,
+                        });
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut leftover: Vec<(usize, GroupId)> = outstanding.into_iter().map(|(g, i)| (i, g)).collect();
+    leftover.sort_unstable();
+    for (stage, group) in leftover {
+        out.push(Diagnostic::ArriveWithoutAwait { rank: s.rank, stage, group });
+    }
+    out
+}
+
+/// Verify one handle's schedules across all ranks of its communicator.
+pub fn verify_handle(ranks: &[RankSchedule]) -> Vec<Diagnostic> {
+    verify_program(&[ranks])
+}
+
+/// Verify a *program* of overlapping in-flight handles: each inner slice
+/// is one handle's all-rank schedule set, listed in the order the ranks
+/// start them (the [`progress`](crate::hybrid::progress) ordering rule).
+/// Handles own private windows and groups but share bridge comms, so
+/// message/collective matching and cycle detection run over the
+/// concatenated per-rank event streams.
+pub fn verify_program(handles: &[&[RankSchedule]]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+
+    // -- rank-local checks; remember broken arrive/await pairings so the
+    //    graph phase doesn't build barrier edges from malformed chains.
+    let mut broken_pairing: BTreeSet<(usize, usize)> = BTreeSet::new();
+    for (h, hs) in handles.iter().enumerate() {
+        for s in hs.iter() {
+            let local = verify_rank_local(s);
+            if local.iter().any(|d| {
+                matches!(
+                    d,
+                    Diagnostic::AwaitWithoutArrive { .. }
+                        | Diagnostic::ArriveWithoutAwait { .. }
+                        | Diagnostic::OverlappingArrive { .. }
+                )
+            }) {
+                broken_pairing.insert((h, s.rank));
+            }
+            out.extend(local);
+        }
+    }
+
+    // -- fixed-root consistency, per handle.
+    for hs in handles.iter() {
+        let roots: Vec<(usize, usize)> =
+            hs.iter().filter_map(|s| s.root.map(|r| (s.rank, r))).collect();
+        let mut distinct: Vec<usize> = roots.iter().map(|&(_, r)| r).collect();
+        distinct.sort_unstable();
+        distinct.dedup();
+        if distinct.len() > 1 {
+            out.push(Diagnostic::RootMismatch { roots });
+        }
+    }
+
+    // -- flatten every rank's stages (all handles, start order) into one
+    //    event list; program order within a rank is edge-implied.
+    struct Ev<'a> {
+        rank: usize,
+        handle: usize,
+        stage: usize,
+        op: &'a str,
+        kind: &'a StageModel,
+    }
+    let mut evs: Vec<Ev<'_>> = Vec::new();
+    let mut per_rank: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    let mut rank_list: Vec<usize> =
+        handles.iter().flat_map(|hs| hs.iter().map(|s| s.rank)).collect();
+    rank_list.sort_unstable();
+    rank_list.dedup();
+    for &rank in &rank_list {
+        for (h, hs) in handles.iter().enumerate() {
+            for s in hs.iter().filter(|s| s.rank == rank) {
+                for (i, st) in s.stages.iter().enumerate() {
+                    let id = evs.len();
+                    evs.push(Ev { rank, handle: h, stage: i, op: s.op, kind: st });
+                    per_rank.entry(rank).or_default().push(id);
+                }
+            }
+        }
+    }
+    let mut pred: Vec<Option<usize>> = vec![None; evs.len()];
+    for ids in per_rank.values() {
+        for w in ids.windows(2) {
+            pred[w[1]] = Some(w[0]);
+        }
+    }
+
+    // -- classify events.
+    #[derive(Default)]
+    struct GroupUse {
+        /// handle owning the group's window (groups are window-private).
+        handle: usize,
+        sizes: BTreeMap<usize, Vec<usize>>,
+        arrives: BTreeMap<usize, Vec<usize>>,
+        awaits: BTreeMap<usize, Vec<usize>>,
+    }
+    let mut groups: BTreeMap<GroupId, GroupUse> = BTreeMap::new();
+    let mut flag_posts: BTreeMap<FlagId, Vec<usize>> = BTreeMap::new();
+    let mut flag_waits: BTreeMap<FlagId, BTreeMap<usize, Vec<usize>>> = BTreeMap::new();
+    struct CollCall {
+        kind: &'static str,
+        size: usize,
+        ev: usize,
+    }
+    let mut colls: BTreeMap<u64, BTreeMap<usize, Vec<CollCall>>> = BTreeMap::new();
+    let mut sends: BTreeMap<(u64, usize, usize, i64), VecDeque<usize>> = BTreeMap::new();
+    for (id, ev) in evs.iter().enumerate() {
+        match ev.kind {
+            StageModel::Arrive { group, size } => {
+                let g = groups.entry(*group).or_default();
+                g.handle = ev.handle;
+                g.sizes.entry(*size).or_default().push(ev.rank);
+                g.arrives.entry(ev.rank).or_default().push(id);
+            }
+            StageModel::Await { group, size } => {
+                let g = groups.entry(*group).or_default();
+                g.sizes.entry(*size).or_default().push(ev.rank);
+                g.awaits.entry(ev.rank).or_default().push(id);
+            }
+            StageModel::Post { flag } => flag_posts.entry(*flag).or_default().push(id),
+            StageModel::Wait { flag } => {
+                flag_waits.entry(*flag).or_default().entry(ev.rank).or_default().push(id)
+            }
+            StageModel::Work { msgs, colls: cs, .. } => {
+                for m in msgs.iter().filter(|m| m.send) {
+                    sends.entry((m.comm, m.src, m.dst, m.tag)).or_default().push_back(id);
+                }
+                for c in cs {
+                    colls
+                        .entry(c.comm)
+                        .or_default()
+                        .entry(ev.rank)
+                        .or_default()
+                        .push(CollCall { kind: c.kind, size: c.size, ev: id });
+                }
+            }
+            StageModel::Skip => {}
+        }
+    }
+
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    for ids in per_rank.values() {
+        for w in ids.windows(2) {
+            edges.push((w[0], w[1]));
+        }
+    }
+    let mut next_node = evs.len();
+    let mut new_vnode = || {
+        let v = next_node;
+        next_node += 1;
+        v
+    };
+
+    // -- barrier episodes: the i-th matched arrival round per group.
+    for (gid, gu) in &groups {
+        if gu.sizes.len() > 1 {
+            out.push(Diagnostic::GroupSizeMismatch {
+                group: *gid,
+                sizes: gu.sizes.iter().map(|(sz, rs)| (*sz, rs.clone())).collect(),
+            });
+            continue;
+        }
+        let size = *gu.sizes.keys().next().expect("a used group has a declared size");
+        let counts: Vec<(usize, usize)> =
+            gu.arrives.iter().map(|(r, v)| (*r, v.len())).collect();
+        let nepisodes = counts.iter().map(|&(_, c)| c).max().unwrap_or(0);
+        let arity_ok =
+            gu.arrives.len() == size && counts.iter().all(|&(_, c)| c == nepisodes);
+        if !arity_ok {
+            out.push(Diagnostic::BarrierArity { group: *gid, expected: size, participants: counts });
+            continue;
+        }
+        if gu.arrives.keys().any(|r| broken_pairing.contains(&(gu.handle, *r)))
+            || !gu
+                .arrives
+                .iter()
+                .all(|(r, v)| gu.awaits.get(r).is_some_and(|w| w.len() == v.len()))
+        {
+            continue; // pairing diagnostics already emitted above
+        }
+        for e in 0..nepisodes {
+            let v = new_vnode();
+            for (r, arr) in &gu.arrives {
+                edges.push((arr[e], v));
+                edges.push((v, gu.awaits[r][e]));
+            }
+        }
+    }
+
+    // -- yellow releases: wait episode i needs post episode i. Posts never
+    //    block, so surplus posts are harmless; a missing one strands the
+    //    waiter.
+    for (fid, waits) in &flag_waits {
+        let posts = flag_posts.get(fid).map(Vec::as_slice).unwrap_or(&[]);
+        for (rank, wl) in waits {
+            for (e, &wev) in wl.iter().enumerate() {
+                match posts.get(e) {
+                    Some(&pev) => edges.push((pev, wev)),
+                    None => out.push(Diagnostic::MissingRelease {
+                        flag: *fid,
+                        rank: *rank,
+                        stage: evs[wev].stage,
+                        episode: e,
+                    }),
+                }
+            }
+        }
+    }
+
+    // -- chunk-stream messages: FIFO per (comm, src, dst, tag) channel.
+    for (id, ev) in evs.iter().enumerate() {
+        if let StageModel::Work { msgs, .. } = ev.kind {
+            for m in msgs.iter().filter(|m| !m.send) {
+                match sends.get_mut(&(m.comm, m.src, m.dst, m.tag)).and_then(VecDeque::pop_front) {
+                    Some(sev) => edges.push((sev, id)),
+                    None => out.push(Diagnostic::UnmatchedRecv {
+                        rank: ev.rank,
+                        stage: ev.stage,
+                        comm: m.comm,
+                        src: m.src,
+                        tag: m.tag,
+                    }),
+                }
+            }
+        }
+    }
+    for (&(comm, _src, dst, tag), q) in &sends {
+        for &sev in q {
+            out.push(Diagnostic::UnmatchedSend {
+                rank: evs[sev].rank,
+                stage: evs[sev].stage,
+                comm,
+                dst,
+                tag,
+            });
+        }
+    }
+
+    // -- nested collectives: rendezvous per per-comm sequence position.
+    for (comm, parts) in &colls {
+        let (r0, seq0) = parts.iter().next().expect("a used comm has a caller");
+        let mut ok = true;
+        for (r, seq) in parts.iter().skip(1) {
+            if seq.len() != seq0.len()
+                || seq.iter().zip(seq0.iter()).any(|(a, b)| a.kind != b.kind || a.size != b.size)
+            {
+                out.push(Diagnostic::CollectiveMismatch {
+                    comm: *comm,
+                    detail: format!(
+                        "rank {r} calls [{}] but rank {r0} calls [{}]",
+                        seq.iter().map(|c| c.kind).collect::<Vec<_>>().join(", "),
+                        seq0.iter().map(|c| c.kind).collect::<Vec<_>>().join(", ")
+                    ),
+                });
+                ok = false;
+            }
+        }
+        if ok {
+            for (e, c) in seq0.iter().enumerate() {
+                if parts.len() != c.size {
+                    out.push(Diagnostic::CollectiveMismatch {
+                        comm: *comm,
+                        detail: format!(
+                            "{} episode {e} declares {} participants but {} ranks call it",
+                            c.kind,
+                            c.size,
+                            parts.len()
+                        ),
+                    });
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if !ok {
+            continue;
+        }
+        for e in 0..seq0.len() {
+            // Rendezvous: the episode depends on every participant's
+            // progress up to just before its call, and every call depends
+            // on the episode — nobody completes before everybody entered.
+            let v = new_vnode();
+            for seq in parts.values() {
+                let ev = seq[e].ev;
+                if let Some(p) = pred[ev] {
+                    edges.push((p, v));
+                }
+                edges.push((v, ev));
+            }
+        }
+    }
+
+    // -- Kahn topological sort: leftovers are deadlocked (in or behind a
+    //    cycle).
+    let nnodes = next_node;
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); nnodes];
+    let mut indeg = vec![0usize; nnodes];
+    for &(a, b) in &edges {
+        adj[a].push(b);
+        indeg[b] += 1;
+    }
+    let mut q: VecDeque<usize> = (0..nnodes).filter(|&n| indeg[n] == 0).collect();
+    let mut done = 0usize;
+    while let Some(n) = q.pop_front() {
+        done += 1;
+        for &m in &adj[n] {
+            indeg[m] -= 1;
+            if indeg[m] == 0 {
+                q.push_back(m);
+            }
+        }
+    }
+    if done < nnodes {
+        let mut blocked: Vec<String> = (0..evs.len())
+            .filter(|&n| indeg[n] > 0)
+            .map(|n| {
+                let e = &evs[n];
+                format!("rank {} handle {} stage {} ({} {})", e.rank, e.handle, e.stage, e.op, e.kind.kind_name())
+            })
+            .collect();
+        blocked.truncate(8);
+        out.push(Diagnostic::Deadlock { blocked });
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const WIN: u64 = 7;
+    const GRP: GroupId = (WIN, 0);
+    const FLG: FlagId = (WIN, 0);
+
+    fn work(accesses: Vec<Access>, msgs: Vec<MsgModel>, colls: Vec<CollModel>) -> StageModel {
+        StageModel::Work { chunk: 0, accesses, msgs, colls }
+    }
+
+    fn sched(rank: usize, root: Option<usize>, stages: Vec<StageModel>) -> RankSchedule {
+        RankSchedule { rank, node: rank, op: "test", root, win: WIN, win_len: 64, stages }
+    }
+
+    /// Two ranks: barrier, leader write + yellow release, child read.
+    fn two_rank_clean() -> Vec<RankSchedule> {
+        vec![
+            sched(
+                0,
+                None,
+                vec![
+                    StageModel::Arrive { group: GRP, size: 2 },
+                    StageModel::Await { group: GRP, size: 2 },
+                    work(vec![Access { offset: 0, len: 32, write: true }], vec![], vec![]),
+                    StageModel::Post { flag: FLG },
+                ],
+            ),
+            sched(
+                1,
+                None,
+                vec![
+                    StageModel::Arrive { group: GRP, size: 2 },
+                    StageModel::Await { group: GRP, size: 2 },
+                    StageModel::Wait { flag: FLG },
+                ],
+            ),
+        ]
+    }
+
+    #[test]
+    fn clean_schedule_passes() {
+        let diags = verify_handle(&two_rank_clean());
+        assert!(diags.is_empty(), "expected clean, got: {diags:?}");
+    }
+
+    #[test]
+    fn dropped_arrive_is_flagged_with_rank_and_stage() {
+        let mut s = two_rank_clean();
+        s[0].stages[0] = StageModel::Skip; // rank 0 never arrives
+        let diags = verify_handle(&s);
+        assert!(
+            diags.iter().any(|d| matches!(
+                d,
+                Diagnostic::AwaitWithoutArrive { rank: 0, stage: 1, group } if *group == GRP
+            )),
+            "got: {diags:?}"
+        );
+        assert!(
+            diags.iter().any(|d| matches!(d, Diagnostic::BarrierArity { expected: 2, .. })),
+            "arity must also fire: {diags:?}"
+        );
+    }
+
+    #[test]
+    fn skipped_release_is_flagged() {
+        let mut s = two_rank_clean();
+        s[0].stages[3] = StageModel::Skip; // leader forgets the post
+        let diags = verify_handle(&s);
+        assert!(
+            diags.iter().any(|d| matches!(
+                d,
+                Diagnostic::MissingRelease { rank: 1, stage: 2, episode: 0, flag } if *flag == FLG
+            )),
+            "got: {diags:?}"
+        );
+    }
+
+    #[test]
+    fn shrunk_window_is_flagged() {
+        let mut s = two_rank_clean();
+        s[0].win_len = 16; // Work writes [0, 32)
+        let diags = verify_handle(&s);
+        assert!(
+            diags.iter().any(|d| matches!(
+                d,
+                Diagnostic::OutOfWindow { rank: 0, stage: 2, offset: 0, len: 32, win_len: 16 }
+            )),
+            "got: {diags:?}"
+        );
+    }
+
+    #[test]
+    fn mismatched_tag_orphans_both_sides() {
+        let send =
+            |tag| MsgModel { comm: 9, src: 0, dst: 1, tag, send: true };
+        let recv =
+            |tag| MsgModel { comm: 9, src: 0, dst: 1, tag, send: false };
+        let s = vec![
+            sched(0, Some(0), vec![work(vec![], vec![send(5)], vec![])]),
+            sched(1, Some(0), vec![work(vec![], vec![recv(6)], vec![])]),
+        ];
+        let diags = verify_handle(&s);
+        assert!(
+            diags.iter().any(|d| matches!(d, Diagnostic::UnmatchedSend { rank: 0, tag: 5, .. })),
+            "got: {diags:?}"
+        );
+        assert!(
+            diags.iter().any(|d| matches!(d, Diagnostic::UnmatchedRecv { rank: 1, tag: 6, .. })),
+            "got: {diags:?}"
+        );
+    }
+
+    #[test]
+    fn fixed_root_disagreement_is_flagged() {
+        let s = vec![sched(0, Some(0), vec![]), sched(1, Some(2), vec![])];
+        let diags = verify_handle(&s);
+        assert!(
+            diags.iter().any(|d| matches!(d, Diagnostic::RootMismatch { .. })),
+            "got: {diags:?}"
+        );
+    }
+
+    #[test]
+    fn group_size_disagreement_is_flagged() {
+        let s = vec![
+            sched(
+                0,
+                None,
+                vec![
+                    StageModel::Arrive { group: GRP, size: 2 },
+                    StageModel::Await { group: GRP, size: 2 },
+                ],
+            ),
+            sched(
+                1,
+                None,
+                vec![
+                    StageModel::Arrive { group: GRP, size: 3 },
+                    StageModel::Await { group: GRP, size: 3 },
+                ],
+            ),
+        ];
+        let diags = verify_handle(&s);
+        assert!(
+            diags.iter().any(|d| matches!(d, Diagnostic::GroupSizeMismatch { .. })),
+            "got: {diags:?}"
+        );
+    }
+
+    #[test]
+    fn message_cycle_deadlocks() {
+        // Each rank recvs from the other before sending to it: classic
+        // rendezvous deadlock.
+        let m = |src: usize, dst: usize, send: bool| MsgModel { comm: 9, src, dst, tag: 0, send };
+        let s = vec![
+            sched(
+                0,
+                None,
+                vec![
+                    work(vec![], vec![m(1, 0, false)], vec![]),
+                    work(vec![], vec![m(0, 1, true)], vec![]),
+                ],
+            ),
+            sched(
+                1,
+                None,
+                vec![
+                    work(vec![], vec![m(0, 1, false)], vec![]),
+                    work(vec![], vec![m(1, 0, true)], vec![]),
+                ],
+            ),
+        ];
+        let diags = verify_handle(&s);
+        assert!(
+            diags.iter().any(|d| matches!(d, Diagnostic::Deadlock { .. })),
+            "got: {diags:?}"
+        );
+    }
+
+    #[test]
+    fn collective_order_mismatch_is_flagged() {
+        let c = |kind| CollModel { comm: 9, kind, size: 2 };
+        let s = vec![
+            sched(0, None, vec![work(vec![], vec![], vec![c("bcast"), c("reduce")])]),
+            sched(1, None, vec![work(vec![], vec![], vec![c("reduce"), c("bcast")])]),
+        ];
+        let diags = verify_handle(&s);
+        assert!(
+            diags.iter().any(|d| matches!(d, Diagnostic::CollectiveMismatch { comm: 9, .. })),
+            "got: {diags:?}"
+        );
+    }
+
+    #[test]
+    fn collective_missing_participant_is_flagged() {
+        let c = CollModel { comm: 9, kind: "allgatherv", size: 2 };
+        let s = vec![
+            sched(0, None, vec![work(vec![], vec![], vec![c])]),
+            sched(1, None, vec![]),
+        ];
+        let diags = verify_handle(&s);
+        assert!(
+            diags.iter().any(|d| matches!(d, Diagnostic::CollectiveMismatch { comm: 9, .. })),
+            "got: {diags:?}"
+        );
+    }
+
+    #[test]
+    fn overlapping_in_flight_handles_verify_as_a_program() {
+        // Handle B's barrier sits between handle A's arrive and await in
+        // rank 0's stream — legal (private groups), must stay clean.
+        let grp_b: GroupId = (8, 0);
+        let a = two_rank_clean();
+        let b = vec![
+            RankSchedule {
+                rank: 0,
+                node: 0,
+                op: "b",
+                root: None,
+                win: 8,
+                win_len: 16,
+                stages: vec![
+                    StageModel::Arrive { group: grp_b, size: 2 },
+                    StageModel::Await { group: grp_b, size: 2 },
+                ],
+            },
+            RankSchedule {
+                rank: 1,
+                node: 1,
+                op: "b",
+                root: None,
+                win: 8,
+                win_len: 16,
+                stages: vec![
+                    StageModel::Arrive { group: grp_b, size: 2 },
+                    StageModel::Await { group: grp_b, size: 2 },
+                ],
+            },
+        ];
+        let diags = verify_program(&[&a, &b]);
+        assert!(diags.is_empty(), "expected clean program, got: {diags:?}");
+    }
+
+    #[test]
+    fn diagnostics_display_names_rank_and_stage() {
+        let d = Diagnostic::OutOfWindow { rank: 3, stage: 5, offset: 8, len: 16, win_len: 12 };
+        let s = d.to_string();
+        assert!(s.contains("rank 3") && s.contains("stage 5"), "{s}");
+    }
+}

@@ -1,0 +1,228 @@
+//! `verify_schedules` — the CI gate of the correctness-analysis subsystem
+//! (DESIGN.md §6).
+//!
+//! Sweeps every committed collective shape — the figure/bench cluster
+//! shapes, both §4.5 sync schemes, k ∈ {1, 2, 4} leaders per node, both
+//! §5.2.4 allreduce methods, fixed and per-start roots, and pipelined
+//! bridge depths {1, 2, 4} — compiles the persistent handles, exports
+//! each rank's stage schedule ([`HyColl::export_schedule`]) and runs the
+//! static verifier ([`verify_handle`] / [`verify_program`]) over the
+//! cross-rank dependency graph. Any diagnostic fails the run (exit 1).
+//!
+//! A final pass drives a small instrumented cluster end-to-end under the
+//! happens-before race detector and requires it to come back clean, so
+//! the *executed* window accesses — not just the compiled intent — are
+//! covered on every CI run.
+
+use hympi::analysis::race;
+use hympi::analysis::{verify_handle, verify_program, Diagnostic, RaceDetector, RankSchedule};
+use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
+use hympi::hybrid::{AllreduceMethod, HybridCtx, LeaderPolicy, RootPolicy, SyncScheme};
+use hympi::mpi::{Datatype, ReduceOp};
+use std::process::ExitCode;
+
+/// The swept cluster shapes: the irregular figure shapes, a single node,
+/// and a regular two-node bench shape.
+const SHAPES: &[(&str, Preset, &[usize])] = &[
+    ("vulcan-sb 5+3", Preset::VulcanSb, &[5, 3]),
+    ("vulcan-hsw 3+4+2", Preset::VulcanHsw, &[3, 4, 2]),
+    ("vulcan-sb single-node 6", Preset::VulcanSb, &[6]),
+    ("vulcan-sb 8+8", Preset::VulcanSb, &[8, 8]),
+];
+
+const LEADER_COUNTS: &[usize] = &[1, 2, 4];
+const SCHEMES: &[SyncScheme] = &[SyncScheme::Barrier, SyncScheme::Spin];
+const DEPTHS: &[usize] = &[1, 2, 4];
+
+fn spec(p: Preset, nodes: &[usize]) -> ClusterSpec {
+    let mut s = ClusterSpec::preset(p, nodes.len());
+    s.nodes = nodes.to_vec();
+    s
+}
+
+/// Build every handle flavor on one session and export each rank's
+/// schedule. Returned per rank, in handle-creation order (= the program
+/// order the ranks would start them in).
+fn export_all(nodes: &'static [usize], preset: Preset, k: usize) -> Vec<Vec<(String, RankSchedule)>> {
+    let report = SimCluster::new(spec(preset, nodes)).run(move |env| {
+        let w = env.world();
+        let p = w.size();
+        let eff = HybridCtx::effective_leaders(env, &w, k);
+        let policy = if eff == 1 { LeaderPolicy::Single } else { LeaderPolicy::Leaders(eff) };
+        let ctx = HybridCtx::create(env, &w, policy);
+        let root = p - 1; // a child on the last node
+        let mut handles = Vec::new();
+        for &scheme in SCHEMES {
+            let tag = |name: &str| format!("{name} {scheme:?}");
+            handles.push((tag("allgather"), 0, ctx.allgather_init(env, 64, scheme)));
+            handles.push((tag("bcast perstart"), root, ctx.bcast_init(env, 96, scheme)));
+            for &d in DEPTHS {
+                handles.push((
+                    tag(&format!("bcast fixed d{d}")),
+                    root,
+                    ctx.bcast_init_split(env, 96, scheme, RootPolicy::Fixed(root), d),
+                ));
+                handles.push((
+                    tag(&format!("scatter fixed d{d}")),
+                    root,
+                    ctx.scatter_init_split(env, 48, scheme, RootPolicy::Fixed(root), d),
+                ));
+            }
+            // Root 0 is the primary leader of node 0: the fixed-root
+            // compile drops the root-node red sync entirely at k = 1.
+            handles.push((
+                tag("bcast fixed root0 d2"),
+                0,
+                ctx.bcast_init_split(env, 96, scheme, RootPolicy::Fixed(0), 2),
+            ));
+            for (mname, method) in
+                [("m1", AllreduceMethod::Method1), ("m2", AllreduceMethod::Method2)]
+            {
+                handles.push((
+                    tag(&format!("allreduce {mname}")),
+                    0,
+                    ctx.allreduce_init(env, Datatype::F64, ReduceOp::Sum, 64, method, scheme),
+                ));
+                handles.push((
+                    tag(&format!("reduce_scatter {mname}")),
+                    0,
+                    ctx.reduce_scatter_init(env, Datatype::F64, ReduceOp::Sum, 32, method, scheme),
+                ));
+            }
+            handles.push((
+                tag("gather fixed"),
+                root,
+                ctx.gather_init_split(env, 48, scheme, RootPolicy::Fixed(root)),
+            ));
+            handles.push((tag("gather perstart"), 0, ctx.gather_init(env, 48, scheme)));
+            handles.push((tag("scatter perstart"), root, ctx.scatter_init(env, 48, scheme)));
+        }
+        let exports: Vec<(String, RankSchedule)> =
+            handles.iter().map(|(name, root, h)| (name.clone(), h.export_schedule(*root))).collect();
+        env.barrier(&w);
+        for (_, _, h) in handles.iter_mut() {
+            h.free(env);
+        }
+        exports
+    });
+    report.outputs
+}
+
+/// Group the per-rank exports by handle name (rank order preserved).
+fn by_handle(per_rank: &[Vec<(String, RankSchedule)>]) -> Vec<(String, Vec<RankSchedule>)> {
+    let mut out: Vec<(String, Vec<RankSchedule>)> = Vec::new();
+    for (i, (name, _)) in per_rank[0].iter().enumerate() {
+        let set: Vec<RankSchedule> = per_rank.iter().map(|r| r[i].1.clone()).collect();
+        out.push((name.clone(), set));
+    }
+    out
+}
+
+fn report(label: &str, diags: &[Diagnostic]) -> usize {
+    for d in diags {
+        eprintln!("FAIL [{label}]: {d}");
+    }
+    diags.len()
+}
+
+/// Drive a small instrumented cluster end-to-end: both schemes, two
+/// epochs per handle, children reading results in place — the detector
+/// must come back clean.
+fn runtime_race_pass() -> usize {
+    let seed = 0xC0FFEE;
+    let nodes: &[usize] = &[3, 2];
+    let cluster = SimCluster::new(spec(Preset::VulcanSb, nodes));
+    let world: usize = nodes.iter().sum();
+    let det = RaceDetector::new(world, seed);
+    let det2 = det.clone();
+    cluster.run(move |env| {
+        let w = env.world();
+        let me = w.rank();
+        let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+        let mut handles = Vec::new();
+        for &scheme in SCHEMES {
+            handles.push(ctx.allgather_init(env, 32, scheme));
+            handles.push(ctx.allreduce_init(
+                env,
+                Datatype::F64,
+                ReduceOp::Sum,
+                64,
+                AllreduceMethod::Method1,
+                scheme,
+            ));
+            handles.push(ctx.bcast_init(env, 48, scheme));
+        }
+        race::install(&det2, me);
+        let operand = vec![me as u8; 64];
+        let block = vec![me as u8; 32];
+        let payload = vec![7u8; 48];
+        for epoch in 0..2 {
+            for h in handles.iter_mut() {
+                match h.count() {
+                    32 => h.start_allgather(env, &block),
+                    64 => h.start_allreduce(env, &operand),
+                    48 => h.start_bcast(env, 0, (me == 0).then_some(&payload[..])),
+                    _ => unreachable!(),
+                }
+                h.wait(env);
+                // In-place result read — the §4 sharing the detector must
+                // prove ordered behind the handle's own sync. Final epoch
+                // only: the window discipline makes a result view valid
+                // until the *next* start, and a start's operand staging
+                // precedes its opening sync — reading a stale epoch while
+                // a peer re-stages is exactly the hazard the detector
+                // exists to flag (tests/verify.rs asserts it fires).
+                if epoch == 1 {
+                    let view =
+                        h.result_view(h.count()).expect("hybrid handles are window-backed");
+                    std::hint::black_box(view[0]);
+                }
+            }
+        }
+        race::uninstall();
+        env.barrier(&w);
+        for h in handles.iter_mut() {
+            h.free(env);
+        }
+    });
+    let reports = det.reports();
+    for r in &reports {
+        eprintln!("FAIL [runtime race pass]: {r}");
+    }
+    reports.len()
+}
+
+fn main() -> ExitCode {
+    let mut failures = 0usize;
+    let mut handles_checked = 0usize;
+    for &(shape_name, preset, nodes) in SHAPES {
+        for &k in LEADER_COUNTS {
+            let per_rank = export_all(nodes, preset, k);
+            let grouped = by_handle(&per_rank);
+            for (name, set) in &grouped {
+                failures += report(&format!("{shape_name} k{k} {name}"), &verify_handle(set));
+                handles_checked += 1;
+            }
+            // Two handles in flight at once (the overlap idiom): their
+            // concatenated per-rank streams must still be acyclic.
+            let a = &grouped[0].1; // allgather
+            let b = grouped
+                .iter()
+                .find(|(n, _)| n.starts_with("allreduce m1"))
+                .map(|(_, s)| s)
+                .expect("sweep builds an allreduce handle");
+            failures += report(
+                &format!("{shape_name} k{k} overlap allgather+allreduce"),
+                &verify_program(&[a, b]),
+            );
+        }
+    }
+    failures += runtime_race_pass();
+    if failures == 0 {
+        println!("verify_schedules: {handles_checked} handle configurations verified clean; runtime race pass clean");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("verify_schedules: {failures} diagnostic(s)");
+        ExitCode::FAILURE
+    }
+}

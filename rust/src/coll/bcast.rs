@@ -15,7 +15,7 @@
 //!   strictly worse than trees (hardware store-and-forward pipelining is
 //!   not expressible in α-β), so the tuned decision uses this for the
 //!   >362 KB regime on multi-node runs to reproduce the published "large
-//!   message dip" of Fig. 13 (documented substitution, DESIGN.md §8).
+//!   message dip" of Fig. 13 (documented substitution, DESIGN.md §9).
 
 use super::tuning::Tuning;
 use crate::mpi::env::{opcode, ProcEnv};

@@ -54,6 +54,7 @@ use super::reduce::reduce;
 use super::reduce_scatter::reduce_scatter;
 use super::scatter::scatter;
 use super::tuning::Tuning;
+use crate::analysis::schedule::{verify_rank_local, Diagnostic, RankSchedule};
 use crate::hybrid::allreduce::AllreduceMethod;
 use crate::hybrid::ctx::{HyColl, HybridCtx, LeaderPolicy};
 use crate::hybrid::shmem::HyWin;
@@ -117,7 +118,7 @@ impl Flavor {
 /// operand, reduce-scatter result block). `tag` disambiguates plans that
 /// would otherwise collide but must not share a window (e.g. BPMF's two
 /// factor tables of equal size).
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct PlanKey {
     pub comm: u64,
     pub op: CollOp,
@@ -217,6 +218,15 @@ pub trait CollPlan {
     /// [`PlanCache::free`] in plan-creation order on every rank.
     fn teardown(&mut self, env: &mut ProcEnv) {
         let _ = env;
+    }
+
+    /// Static-analysis export: this rank's compiled stage schedule as a
+    /// [`RankSchedule`] model for the [`crate::analysis::schedule`]
+    /// verifier. `root` names the rooted op's root (ignored by rootless
+    /// ops). `None` for pure/hier plans — they have no stage schedule.
+    fn export_schedule(&self, root: usize) -> Option<RankSchedule> {
+        let _ = root;
+        None
     }
 
     /// One-line description for reports and debugging.
@@ -432,6 +442,10 @@ impl CollPlan for HybridPlan {
         self.coll.free(env);
     }
 
+    fn export_schedule(&self, root: usize) -> Option<RankSchedule> {
+        Some(self.coll.export_schedule(root))
+    }
+
     fn describe(&self) -> String {
         format!(
             "hybrid {:?} on comm {} ({} B, {:?})",
@@ -566,13 +580,13 @@ impl PlanCache {
         }
         self.misses += 1;
         let plan: Box<dyn CollPlan> = match flavor {
-            Flavor::Pure => Box::new(PurePlan::new(key.clone(), comm)),
+            Flavor::Pure => Box::new(PurePlan::new(key, comm)),
             Flavor::Hier => {
                 assert!(
                     matches!(op, CollOp::Allgather | CollOp::Bcast | CollOp::Allreduce),
                     "no hierarchical plan for {op:?}"
                 );
-                Box::new(HierPlan { key: key.clone(), ctx: self.hier(env, comm) })
+                Box::new(HierPlan { key, ctx: self.hier(env, comm) })
             }
             Flavor::Hybrid { scheme, method, leaders } => {
                 let ctx = self.hybrid(env, comm, leaders);
@@ -599,10 +613,10 @@ impl PlanCache {
                     CollOp::Scatter => ctx.scatter_init(env, count, scheme),
                     CollOp::Reduce => panic!("no hybrid plan for Reduce (use Allreduce or Gather)"),
                 };
-                Box::new(HybridPlan { key: key.clone(), coll })
+                Box::new(HybridPlan { key, coll })
             }
         };
-        self.entries.push((key.clone(), plan));
+        self.entries.push((key, plan));
         let i = self.entries.len() - 1;
         self.index.insert(key, i);
         i
@@ -611,6 +625,33 @@ impl PlanCache {
     /// Look up a live plan by key.
     pub fn get(&self, key: &PlanKey) -> Option<&dyn CollPlan> {
         self.index.get(key).map(|&i| self.entries[i].1.as_ref())
+    }
+
+    /// Static-analysis export: this rank's compiled stage schedule for
+    /// every window-backed (hybrid) plan in creation order. Pure/hier
+    /// plans have no stage schedule and are skipped. Collect the exports
+    /// of all member ranks for a key and hand them to
+    /// [`crate::analysis::verify_handle`] for the cross-rank checks.
+    pub fn export_schedules(&self, root: usize) -> Vec<(PlanKey, RankSchedule)> {
+        self.entries
+            .iter()
+            .filter_map(|(key, plan)| plan.export_schedule(root).map(|s| (*key, s)))
+            .collect()
+    }
+
+    /// Rank-local verification of every window-backed plan in the cache:
+    /// window-segment bounds on each `Work` stage, Arrive/Await pairing
+    /// and yellow release/acquire pairing on this rank's own schedule.
+    /// (The cross-rank properties — barrier arity, bridge send/recv
+    /// matching, deadlock-freedom, root consistency — need all ranks'
+    /// schedules; gather those via [`PlanCache::export_schedules`] and
+    /// run [`crate::analysis::verify_handle`].) Returns every diagnostic
+    /// found; empty means clean.
+    pub fn verify(&self, root: usize) -> Vec<Diagnostic> {
+        self.export_schedules(root)
+            .iter()
+            .flat_map(|(_, sched)| verify_rank_local(sched))
+            .collect()
     }
 
     /// Split-phase adapter: plan-or-hit a *hybrid* plan for `key`'s shape
@@ -961,7 +1002,7 @@ mod tests {
             // First access plans (collective); start/wait through the
             // split-phase face of the same handle.
             {
-                let h = cache.split_plan(env, &w, key.clone());
+                let h = cache.split_plan(env, &w, key);
                 h.start_allgather(env, &mine);
                 h.wait(env);
             }

@@ -44,7 +44,7 @@ impl Tuning {
     /// α-β model a flat chain cannot express the hardware pipelining that
     /// makes it win on real fabrics, so multi-rank large broadcasts use
     /// van de Geijn scatter-allgather — same published switch point, same
-    /// qualitative effect (the Fig. 13 dip at 512 KB). See DESIGN.md §8.
+    /// qualitative effect (the Fig. 13 dip at 512 KB). See DESIGN.md §9.
     pub fn bcast_algo(&self, p: usize, bytes: usize) -> BcastAlgo {
         if p <= 2 || bytes <= self.bcast_small_max {
             BcastAlgo::Binomial

@@ -47,6 +47,8 @@ use super::bcast::TransTables;
 use super::progress::{self, HyReq, RootPolicy, Scope, Schedule, Stage};
 use super::shmem::HyWin;
 use super::sync::SyncScheme;
+use crate::analysis::race;
+use crate::analysis::schedule::{Access, CollModel, MsgModel, RankSchedule, StageModel};
 use crate::mpi::comm::UNDEFINED;
 use crate::mpi::env::{opcode, ProcEnv};
 use crate::mpi::topo::Placement;
@@ -903,6 +905,9 @@ impl HyColl {
         assert_eq!(self.op, op, "HyColl start/op mismatch");
         assert!(!self.started, "HyColl started twice without wait");
         self.started = true;
+        if race::enabled() {
+            race::label(move || format!("{op:?} start (operand staging)"));
+        }
     }
 
     fn check_root(&self, root: usize) {
@@ -1042,6 +1047,13 @@ impl HyColl {
         let tables = tables.as_deref();
         let mut executed = 0usize;
         while !sched.complete() && executed < max {
+            if race::enabled() {
+                // Name the stage for the race detector: a report's two
+                // sides carry these labels, so "which stages conflict" is
+                // readable straight off the diagnostic.
+                let (o, i, st) = (*op, sched.next, sched.stages[sched.next]);
+                race::label(move || format!("{o:?} stage {i}: {st:?}"));
+            }
             match sched.stages[sched.next] {
                 Stage::Arrive(scope) => {
                     if let Some((group, _)) = resolve_scope(ctx, win, tables, scope, root) {
@@ -1136,6 +1148,10 @@ impl HyColl {
         assert!(self.started, "HyColl wait without start");
         self.drive(env, Drive::Block, usize::MAX);
         self.started = false;
+        if race::enabled() {
+            let op = self.op;
+            race::label(move || format!("{op:?} complete (result reads)"));
+        }
         self.result_offset()
     }
 
@@ -1199,6 +1215,287 @@ impl HyColl {
         // Safety: protocol-level — callers read between the handle's
         // yellow sync and the next start, per the window discipline.
         Some(unsafe { win.win.slice(off, len) })
+    }
+
+    // ---- static-schedule export (the analysis subsystem's input) ----------
+
+    /// Export this rank's compiled schedule as the static model the
+    /// [`analysis`](crate::analysis) verifier consumes: each [`Stage`]
+    /// resolved against this rank's role (stages the rank sits out export
+    /// as [`StageModel::Skip`]), with barrier groups keyed by
+    /// `(window id, slot)`, the yellow flag by `(window id, 0)`, and the
+    /// `Work` stages expanded into their window accesses, pipelined
+    /// chunk-stream messages and nested collectives. `root` is the root
+    /// the next `start` will bind (ignored by unrooted ops; must equal
+    /// the baked root on [`RootPolicy::Fixed`] handles). Collect one
+    /// schedule per rank and hand the set to
+    /// [`verify_handle`](crate::analysis::verify_handle) — or the
+    /// concatenation across in-flight handles to
+    /// [`verify_program`](crate::analysis::verify_program).
+    pub fn export_schedule(&self, root: usize) -> RankSchedule {
+        let ctx = &*self.ctx;
+        let win = self.win.as_ref().expect("HyColl already freed");
+        let win_id = win.win.id();
+        let tables = self.tables.as_deref();
+        let rooted = matches!(self.op, HyOp::Bcast | HyOp::Scatter | HyOp::Gather);
+        if let RootPolicy::Fixed(r) = self.policy {
+            assert_eq!(root, r, "export root must match the RootPolicy::Fixed root");
+        }
+        let stages = self
+            .sched
+            .stages
+            .iter()
+            .map(|st| match *st {
+                Stage::Arrive(scope) => match model_scope(ctx, tables, scope, root) {
+                    Some((slot, size)) => StageModel::Arrive { group: (win_id, slot), size },
+                    None => StageModel::Skip,
+                },
+                Stage::Await(scope) => match model_scope(ctx, tables, scope, root) {
+                    Some((slot, size)) => StageModel::Await { group: (win_id, slot), size },
+                    None => StageModel::Skip,
+                },
+                Stage::Work { chunk } => self.model_work(chunk, root),
+                // Only the primary leader posts the flag; leaders 1..k
+                // merely bump their local epoch (ordered by the leader
+                // barrier the schedule placed before this stage).
+                Stage::YellowPost => {
+                    if ctx.is_leader() {
+                        StageModel::Post { flag: (win_id, 0) }
+                    } else {
+                        StageModel::Skip
+                    }
+                }
+                Stage::YellowWait => StageModel::Wait { flag: (win_id, 0) },
+            })
+            .collect();
+        RankSchedule {
+            rank: ctx.parent().rank(),
+            node: ctx.node_index(),
+            op: op_name(self.op),
+            root: rooted.then_some(root),
+            win: win_id,
+            win_len: win.len(),
+            stages,
+        }
+    }
+
+    /// The model of one `Work` stage — *coarse on data, exact on
+    /// synchronization*: every nested collective and every pipelined
+    /// chunk message the stage performs appears exactly once (mirroring
+    /// the op bodies' guards, including the zero-length-chunks-still-flow
+    /// rule of the pipelined streams), while window accesses may
+    /// over-approximate to union ranges (the verifier only bounds-checks
+    /// them; exact byte ranges are the *runtime* detector's job).
+    fn model_work(&self, chunk: usize, root: usize) -> StageModel {
+        let ctx = &*self.ctx;
+        let mut accesses = Vec::new();
+        let mut msgs = Vec::new();
+        let mut colls = Vec::new();
+        let count = self.count;
+        let shmem_size = ctx.shmem_size();
+        let j = ctx.leader_index();
+        // Leader j's stripe of one `len`-byte vector ((0, len) for k = 1).
+        let stripe_of = |len: usize| {
+            if self.vec_stripes.is_empty() {
+                (0, len)
+            } else {
+                self.vec_stripes[j.expect("striped work runs on leaders")]
+            }
+        };
+        match self.op {
+            HyOp::Allgather => {
+                let bridge = ctx.bridge().expect("allgather work runs on leaders");
+                let param = self.param.as_ref().expect("allgather binds params");
+                let full: usize = param.recvcounts.iter().sum();
+                accesses.push(Access { offset: 0, len: full, write: true });
+                colls.push(CollModel { comm: bridge.id(), kind: "allgatherv", size: bridge.size() });
+            }
+            HyOp::Gather => {
+                let bridge = ctx.bridge().expect("gather work runs on leaders");
+                if bridge.size() > 1 {
+                    let param = self.param.as_ref().expect("gather binds params");
+                    let t = tables_of(self);
+                    let me = ctx.node_index();
+                    if me == t.bridge[root] {
+                        let full: usize = param.recvcounts.iter().sum();
+                        accesses.push(Access { offset: 0, len: full, write: true });
+                    } else if self.stripes.is_empty() {
+                        accesses.push(Access {
+                            offset: param.displs[me],
+                            len: param.recvcounts[me],
+                            write: false,
+                        });
+                    } else {
+                        let st = &self.stripes[j.expect("striped work runs on leaders")];
+                        accesses.push(Access { offset: st.offsets[me], len: st.counts[me], write: false });
+                    }
+                    colls.push(CollModel { comm: bridge.id(), kind: "gatherv", size: bridge.size() });
+                }
+            }
+            HyOp::Bcast => {
+                let bridge = ctx.bridge().expect("bcast work runs on leaders");
+                if bridge.size() > 1 {
+                    let t = tables_of(self);
+                    let root_node = t.bridge[root];
+                    let me = ctx.node_index();
+                    let on_root = me == root_node;
+                    let (base_off, base_len) = stripe_of(count);
+                    if self.depth == 1 {
+                        if self.vec_stripes.is_empty() || base_len > 0 {
+                            accesses.push(Access { offset: base_off, len: base_len, write: !on_root });
+                            colls.push(CollModel { comm: bridge.id(), kind: "bcast", size: bridge.size() });
+                        }
+                    } else {
+                        let (lo, clen) = chunk_bounds(base_len, self.depth, chunk);
+                        accesses.push(Access { offset: base_off + lo, len: clen, write: !on_root });
+                        let tag = self.sched.bridge_tag;
+                        if on_root {
+                            for r in 0..bridge.size() {
+                                if r != root_node {
+                                    msgs.push(MsgModel { comm: bridge.id(), src: me, dst: r, tag, send: true });
+                                }
+                            }
+                        } else {
+                            msgs.push(MsgModel { comm: bridge.id(), src: root_node, dst: me, tag, send: false });
+                        }
+                    }
+                }
+            }
+            HyOp::Scatter => {
+                let bridge = ctx.bridge().expect("scatter work runs on leaders");
+                if bridge.size() > 1 {
+                    let param = self.param.as_ref().expect("scatter binds params");
+                    let t = tables_of(self);
+                    let root_node = t.bridge[root];
+                    let me = ctx.node_index();
+                    let full: usize = param.recvcounts.iter().sum();
+                    // Leader j's (offset, len) range of node i's block.
+                    let node_range = |i: usize| {
+                        if self.stripes.is_empty() {
+                            (param.displs[i], param.recvcounts[i])
+                        } else {
+                            let st = &self.stripes[j.expect("striped work runs on leaders")];
+                            (st.offsets[i], st.counts[i])
+                        }
+                    };
+                    let tag = self.sched.bridge_tag;
+                    if me == root_node {
+                        accesses.push(Access { offset: 0, len: full, write: false });
+                        if self.depth > 1 {
+                            for r in 0..bridge.size() {
+                                if r != root_node {
+                                    msgs.push(MsgModel { comm: bridge.id(), src: me, dst: r, tag, send: true });
+                                }
+                            }
+                        }
+                    } else {
+                        let (off, len) = node_range(me);
+                        if self.depth == 1 {
+                            accesses.push(Access { offset: off, len, write: true });
+                        } else {
+                            let (lo, clen) = chunk_bounds(len, self.depth, chunk);
+                            accesses.push(Access { offset: off + lo, len: clen, write: true });
+                            msgs.push(MsgModel { comm: bridge.id(), src: root_node, dst: me, tag, send: false });
+                        }
+                    }
+                    if self.depth == 1 {
+                        colls.push(CollModel { comm: bridge.id(), kind: "scatterv", size: bridge.size() });
+                    }
+                }
+            }
+            HyOp::Allreduce => {
+                let msize = count;
+                let l_off = shmem_size * msize;
+                let g_off = (shmem_size + 1) * msize;
+                if chunk == 0 {
+                    match self.method {
+                        AllreduceMethod::Method1 => {
+                            accesses.push(Access {
+                                offset: ctx.shmem().rank() * msize,
+                                len: msize,
+                                write: false,
+                            });
+                            if ctx.is_leader() {
+                                accesses.push(Access { offset: l_off, len: msize, write: true });
+                            }
+                            colls.push(CollModel { comm: ctx.shmem().id(), kind: "reduce", size: shmem_size });
+                        }
+                        AllreduceMethod::Method2 => {
+                            let (off, len) = stripe_of(msize);
+                            if len > 0 {
+                                accesses.push(Access { offset: 0, len: shmem_size * msize, write: false });
+                                accesses.push(Access { offset: l_off + off, len, write: true });
+                            }
+                        }
+                        AllreduceMethod::Tuned => unreachable!("Tuned resolves at *_init"),
+                    }
+                } else {
+                    let (off, len) = stripe_of(msize);
+                    if len > 0 {
+                        accesses.push(Access { offset: l_off + off, len, write: false });
+                        accesses.push(Access { offset: g_off + off, len, write: true });
+                        let bridge = ctx.bridge().expect("allreduce step 2 runs on leaders");
+                        if bridge.size() > 1 {
+                            colls.push(CollModel { comm: bridge.id(), kind: "allreduce", size: bridge.size() });
+                        }
+                    }
+                }
+            }
+            HyOp::ReduceScatter => {
+                let total = count * ctx.parent().size();
+                let l_off = shmem_size * total;
+                let g_off = (shmem_size + 1) * total;
+                if chunk == 0 {
+                    match self.method {
+                        AllreduceMethod::Method1 => {
+                            accesses.push(Access {
+                                offset: ctx.shmem().rank() * total,
+                                len: total,
+                                write: false,
+                            });
+                            if ctx.is_leader() {
+                                accesses.push(Access { offset: l_off, len: total, write: true });
+                            }
+                            colls.push(CollModel { comm: ctx.shmem().id(), kind: "reduce", size: shmem_size });
+                        }
+                        AllreduceMethod::Method2 => {
+                            let (off, len) = stripe_of(total);
+                            if len > 0 {
+                                accesses.push(Access { offset: 0, len: shmem_size * total, write: false });
+                                accesses.push(Access { offset: l_off + off, len, write: true });
+                            }
+                        }
+                        AllreduceMethod::Tuned => unreachable!("Tuned resolves at *_init"),
+                    }
+                } else {
+                    let bridge = ctx.bridge().expect("reduce_scatter step 2 runs on leaders");
+                    if bridge.size() > 1 {
+                        let param = self.param.as_ref().expect("reduce_scatter binds params");
+                        let me = ctx.node_index();
+                        accesses.push(Access { offset: l_off, len: total, write: false });
+                        let (woff, wlen) = if self.stripes.is_empty() {
+                            (param.displs[me], param.recvcounts[me])
+                        } else {
+                            let st = &self.stripes[j.expect("striped work runs on leaders")];
+                            (st.offsets[me], st.counts[me])
+                        };
+                        accesses.push(Access { offset: g_off + woff, len: wlen, write: true });
+                        colls.push(CollModel {
+                            comm: bridge.id(),
+                            kind: "reduce_scatterv",
+                            size: bridge.size(),
+                        });
+                    } else {
+                        let (off, len) = stripe_of(total);
+                        if len > 0 {
+                            accesses.push(Access { offset: l_off + off, len, write: false });
+                            accesses.push(Access { offset: g_off + off, len, write: true });
+                        }
+                    }
+                }
+            }
+        }
+        StageModel::Work { chunk, accesses, msgs, colls }
     }
 
     /// Collective teardown: frees the shared window (call symmetrically
@@ -1278,6 +1575,47 @@ fn resolve_scope(
             let k = ctx.leaders_per_node();
             (ctx.leader_index().is_some() && k > 1).then(|| (win.win.sync_group(1, k), k))
         }
+    }
+}
+
+/// The static-model twin of [`resolve_scope`]: the window sync-group
+/// *slot* (0 = node, 1 = leader set) and participant count this rank
+/// uses for `scope`, or `None` when it sits the stage out. Must stay in
+/// lockstep with [`resolve_scope`] — the verifier checks what this
+/// reports, the engine executes what that resolves.
+fn model_scope(
+    ctx: &HybridCtx,
+    tables: Option<&TransTables>,
+    scope: Scope,
+    root: usize,
+) -> Option<(usize, usize)> {
+    match scope {
+        Scope::Node => Some((0, ctx.shmem_size())),
+        Scope::RootNode => {
+            let t = tables.expect("rooted ops bind translation tables");
+            let on_root_node = ctx.node_index() == t.bridge[root];
+            let needs = t.shmem[root] != 0 || ctx.leaders_per_node() > 1;
+            (on_root_node && needs).then_some((0, ctx.shmem_size()))
+        }
+        Scope::Leaders => {
+            let k = ctx.leaders_per_node();
+            (ctx.leader_index().is_some() && k > 1).then_some((1, k))
+        }
+    }
+}
+
+fn tables_of(h: &HyColl) -> &TransTables {
+    h.tables.as_deref().expect("rooted ops bind translation tables")
+}
+
+fn op_name(op: HyOp) -> &'static str {
+    match op {
+        HyOp::Allgather => "allgather",
+        HyOp::Bcast => "bcast",
+        HyOp::Allreduce => "allreduce",
+        HyOp::ReduceScatter => "reduce_scatter",
+        HyOp::Gather => "gather",
+        HyOp::Scatter => "scatter",
     }
 }
 

@@ -62,6 +62,16 @@
 //! communicator must start handles, and fall back to blocking stages
 //! (`wait`, or the [`wait_any`] fallback), in the same program order.
 //!
+//! ## Analyzability
+//!
+//! A compiled schedule is also a *checkable artifact*:
+//! [`HyColl::export_schedule`](super::ctx::HyColl::export_schedule)
+//! lowers it into the [`analysis`](crate::analysis) model — coarse on
+//! data, exact on synchronization — which the static verifier checks
+//! across ranks for deadlock-freedom, barrier arity, bridge send/recv
+//! matching and window bounds (DESIGN.md §6; the `verify_schedules`
+//! binary sweeps every committed shape in CI).
+//!
 //! [`ProcEnv::finish_group_barrier`]: crate::mpi::env::ProcEnv::finish_group_barrier
 //! [`ProcEnv::barrier`]: crate::mpi::env::ProcEnv::barrier
 //! [`SyncGroup::arrive`]: crate::mpi::sync::SyncGroup::arrive

@@ -22,6 +22,15 @@
 //! single status flag. With `k = 1` this degenerates to exactly the
 //! paper's release — no leader barrier, one post — so single-leader
 //! virtual time is bit-identical to the pre-session code.
+//!
+//! In happens-before terms (DESIGN.md §6): red sync is a full
+//! synchronization (everyone's clock joins everyone's), while yellow
+//! sync is a one-way **release edge** — post joins the leader's clock
+//! into the flag, each observing child acquires it, and *nothing* flows
+//! from children back to the leader. The race detector
+//! ([`analysis::race`](crate::analysis::race)) models exactly this
+//! asymmetry, which is what lets it flag a leader re-staging the next
+//! epoch while a child still reads the previous one.
 
 #[cfg(test)]
 use super::ctx::HybridCtx;

@@ -28,6 +28,10 @@
 //!   persistent [`hybrid::HyColl`] handles for the collectives of
 //!   §4.2–§4.4 with the synchronization schemes of §4.5 (barrier vs.
 //!   status-flag spinning),
+//! - [`analysis`] — the correctness-analysis subsystem: a static
+//!   verifier over the compiled stage schedules (deadlock, barrier
+//!   arity, send/recv matching, bounds) and a vector-clock
+//!   happens-before race detector over shared-window accesses,
 //! - [`coordinator`] — cluster presets, rank placement, the thread-per-rank
 //!   engine, the OSU-style measurement harness and report writers,
 //! - [`runtime`] — a PJRT client (via the `xla` crate) that loads the
@@ -48,6 +52,7 @@
 #![allow(clippy::too_many_arguments)]
 #![allow(clippy::manual_div_ceil)]
 
+pub mod analysis;
 pub mod coll;
 pub mod coordinator;
 pub mod figures;

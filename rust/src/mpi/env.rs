@@ -298,7 +298,7 @@ impl ProcEnv {
     // ---- data-plane point-to-point -----------------------------------------
 
     /// Send `data` to communicator rank `dst` (`MPI_Send`; eager/buffered —
-    /// never blocks, matching our rendezvous approximation in DESIGN.md §8).
+    /// never blocks, matching our rendezvous approximation in DESIGN.md §9).
     /// The payload is staged into a recycled pool slab: one copy, no heap
     /// allocation in steady state.
     pub fn send(&mut self, comm: &Communicator, dst: usize, tag: i64, data: &[u8]) {

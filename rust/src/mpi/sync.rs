@@ -20,9 +20,16 @@
 //! one-byte-polling restriction the paper discusses). Virtual release time
 //! rides along in an atomic f64.
 
+use crate::analysis::race;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 use std::time::Duration;
+
+/// Process-unique identities for [`SyncGroup`]s and [`SpinFlag`]s so the
+/// happens-before race detector ([`crate::analysis::race`]) can key its
+/// per-primitive vector clocks. Zero is never issued (it stays free as a
+/// "no identity" sentinel for diagnostics).
+static NEXT_SYNC_ID: AtomicU64 = AtomicU64::new(1);
 
 /// Spin/yield budgets, auto-tuned once per process from
 /// [`std::thread::available_parallelism`] (the PR-3 constants were tuned
@@ -206,6 +213,7 @@ pub struct BarrierTicket {
 /// Barrier over a fixed group that returns the max virtual clock of all
 /// participants at arrival.
 pub struct SyncGroup {
+    id: u64,
     size: usize,
     count: AtomicUsize,
     generation: AtomicUsize,
@@ -221,6 +229,7 @@ impl SyncGroup {
     pub fn new(size: usize) -> SyncGroup {
         assert!(size > 0);
         SyncGroup {
+            id: NEXT_SYNC_ID.fetch_add(1, Ordering::Relaxed),
             size,
             count: AtomicUsize::new(0),
             generation: AtomicUsize::new(0),
@@ -232,6 +241,12 @@ impl SyncGroup {
 
     pub fn size(&self) -> usize {
         self.size
+    }
+
+    /// Process-unique identity (race-detector vector-clock key; also the
+    /// window-slot identity exported to the static verifier).
+    pub fn id(&self) -> u64 {
+        self.id
     }
 
     /// Arrive with my virtual clock; block until all `size` members arrive;
@@ -262,9 +277,16 @@ impl SyncGroup {
             return BarrierTicket { gen: 0, immediate: Some(my_vtime) };
         }
         let gen = self.generation.load(Ordering::Acquire);
+        // Publish my vector clock *before* registering the arrival: the
+        // last arriver joins the accumulated clock on this same call, so
+        // every publish must already be in place when the count trips.
+        race::on_barrier_arrive(self.id, gen);
         atomic_f64_max(&self.vmax_acc, my_vtime);
         if self.count.fetch_add(1, Ordering::AcqRel) == self.size - 1 {
-            // Last arriver releases the group.
+            // Last arriver releases the group. Its ticket is `immediate`
+            // and short-circuits poll/finish, so the happens-before join
+            // for it must happen here, not there.
+            race::on_barrier_finish(self.id, gen);
             let v = self.vmax_acc.swap(0, Ordering::AcqRel);
             self.released[gen & 1].store(v, Ordering::Release);
             self.count.store(0, Ordering::Release);
@@ -289,6 +311,7 @@ impl SyncGroup {
             return Some(v);
         }
         if self.generation.load(Ordering::Acquire) != t.gen {
+            race::on_barrier_finish(self.id, t.gen);
             Some(f64::from_bits(self.released[t.gen & 1].load(Ordering::Acquire)))
         } else {
             None
@@ -333,6 +356,7 @@ impl SyncGroup {
                     std::thread::park_timeout(park_bound());
                 }
             }
+            race::on_barrier_finish(self.id, gen);
             f64::from_bits(self.released[gen & 1].load(Ordering::Acquire))
         }
     }
@@ -341,6 +365,7 @@ impl SyncGroup {
 /// The paper's spinning status flag (§4.5): leader increments, children
 /// poll for equality. Lives inside a shared window in the hybrid layer.
 pub struct SpinFlag {
+    id: u64,
     status: AtomicU32,
     release_vtime: AtomicU64,
 }
@@ -353,12 +378,25 @@ impl Default for SpinFlag {
 
 impl SpinFlag {
     pub fn new() -> SpinFlag {
-        SpinFlag { status: AtomicU32::new(0), release_vtime: AtomicU64::new(0) }
+        SpinFlag {
+            id: NEXT_SYNC_ID.fetch_add(1, Ordering::Relaxed),
+            status: AtomicU32::new(0),
+            release_vtime: AtomicU64::new(0),
+        }
+    }
+
+    /// Process-unique identity (race-detector vector-clock key).
+    pub fn id(&self) -> u64 {
+        self.id
     }
 
     /// Leader: publish `status++` with its virtual release time.
     /// (`MPI_Win_sync` on the leader side is the Release ordering here.)
     pub fn post(&self, vtime: f64) {
+        // Release edge for the race detector: join my clock into the
+        // flag's clock *before* the status increment a child may already
+        // be polling on.
+        race::on_flag_post(self.id);
         atomic_f64_max(&self.release_vtime, vtime);
         self.status.fetch_add(1, Ordering::Release);
     }
@@ -389,6 +427,7 @@ impl SpinFlag {
                 std::thread::sleep(Duration::from_micros(50));
             }
         }
+        race::on_flag_acquire(self.id);
         f64::from_bits(self.release_vtime.load(Ordering::Acquire))
     }
 
@@ -399,6 +438,7 @@ impl SpinFlag {
     /// charges).
     pub fn try_wait_eq(&self, target: u32) -> Option<f64> {
         if self.status.load(Ordering::Acquire) >= target {
+            race::on_flag_acquire(self.id);
             Some(f64::from_bits(self.release_vtime.load(Ordering::Acquire)))
         } else {
             None

@@ -16,9 +16,16 @@
 //! happens-after the writers' Release. This mirrors the paper's §4.5
 //! discussion of `MPI_Win_sync` and data integrity.
 
+use crate::analysis::race;
+
 use super::sync::{SpinFlag, SyncGroup};
 use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
+
+/// Process-unique window identities for the analysis subsystem
+/// (DESIGN.md §6): race reports and schedule models name windows by id.
+static NEXT_WIN_ID: AtomicU64 = AtomicU64::new(1);
 
 /// Number of spin flags carried by every window: the hybrid protocols use
 /// flag 0 for the leader→children release and flag 1 for auxiliary phases.
@@ -37,6 +44,8 @@ pub const WIN_FLAGS: usize = 4;
 /// slot `L` in place) are sound under Rust's aliasing model, not merely
 /// correct in practice.
 pub struct SharedWindow {
+    /// Process-unique identity (analysis subsystem key).
+    id: u64,
     buf: Box<[UnsafeCell<u64>]>,
     total: usize,
     /// Byte offset of each local rank's segment.
@@ -70,6 +79,7 @@ impl SharedWindow {
             acc += s;
         }
         SharedWindow {
+            id: NEXT_WIN_ID.fetch_add(1, Ordering::Relaxed),
             buf: (0..total.div_ceil(8)).map(|_| UnsafeCell::new(0u64)).collect(),
             total,
             offsets,
@@ -77,6 +87,12 @@ impl SharedWindow {
             flags: Default::default(),
             syncs: [OnceLock::new(), OnceLock::new()],
         }
+    }
+
+    /// Process-unique window identity — the key the analysis subsystem
+    /// (race reports, exported schedule models) names this window by.
+    pub fn id(&self) -> u64 {
+        self.id
     }
 
     /// Window-private barrier group `slot` over `size` participants,
@@ -115,13 +131,21 @@ impl SharedWindow {
         (self.offsets[r], self.sizes[r])
     }
 
+    /// Overflow-proof bounds check (an `offset + len` sum can wrap; the
+    /// subtractive form cannot).
+    #[inline]
+    fn check(&self, offset: usize, len: usize, what: &str) {
+        assert!(offset <= self.total && len <= self.total - offset, "window {what} out of bounds");
+    }
+
     /// Raw read view. Caller must hold an Acquire sync ordering after the
     /// writers' Release (see module docs).
     ///
     /// # Safety
     /// No concurrent writer may overlap `[offset, offset+len)`.
     pub unsafe fn slice(&self, offset: usize, len: usize) -> &[u8] {
-        assert!(offset + len <= self.total, "window view out of bounds");
+        self.check(offset, len, "view");
+        race::on_access(self.id, offset, len, false);
         std::slice::from_raw_parts(self.base().add(offset) as *const u8, len)
     }
 
@@ -133,7 +157,8 @@ impl SharedWindow {
     /// (from [`SharedWindow::slice`]/`slice_mut`) must not overlap it.
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn slice_mut(&self, offset: usize, len: usize) -> &mut [u8] {
-        assert!(offset + len <= self.total, "window view out of bounds");
+        self.check(offset, len, "view");
+        race::on_access(self.id, offset, len, true);
         std::slice::from_raw_parts_mut(self.base().add(offset), len)
     }
 
@@ -142,17 +167,23 @@ impl SharedWindow {
     ///
     /// Panics on out-of-bounds.
     pub fn write(&self, offset: usize, data: &[u8]) {
-        assert!(offset + data.len() <= self.len(), "window write out of bounds");
+        self.check(offset, data.len(), "write");
+        race::on_access(self.id, offset, data.len(), true);
         unsafe {
-            self.slice_mut(offset, data.len()).copy_from_slice(data);
+            std::slice::from_raw_parts_mut(self.base().add(offset), data.len())
+                .copy_from_slice(data);
         }
     }
 
     /// Copy `out.len()` bytes from the window at `offset` into `out`.
     pub fn read_into(&self, offset: usize, out: &mut [u8]) {
-        assert!(offset + out.len() <= self.len(), "window read out of bounds");
+        self.check(offset, out.len(), "read");
+        race::on_access(self.id, offset, out.len(), false);
         unsafe {
-            out.copy_from_slice(self.slice(offset, out.len()));
+            out.copy_from_slice(std::slice::from_raw_parts(
+                self.base().add(offset) as *const u8,
+                out.len(),
+            ));
         }
     }
 
@@ -163,13 +194,22 @@ impl SharedWindow {
         v
     }
 
-    /// Copy `len` bytes from `src` to `dst` inside the window (may
-    /// overlap) — the in-place slot-to-slot move of the hybrid
-    /// reductions, replacing a `read_vec` + `write` round-trip. The
-    /// caller charges `net.memcpy` and must hold protocol-exclusive
-    /// access to both ranges.
+    /// Copy `len` bytes from `src` to `dst` inside the window — the
+    /// in-place slot-to-slot move of the hybrid reductions, replacing a
+    /// `read_vec` + `write` round-trip. The caller charges `net.memcpy`
+    /// and must hold protocol-exclusive access to both ranges. Every
+    /// protocol use moves between *disjoint* slots; debug builds assert
+    /// it (overlapping moves would also be modeled wrong by the charge
+    /// law, which prices one clean memcpy).
     pub fn copy_within(&self, src: usize, dst: usize, len: usize) {
-        assert!(src + len <= self.total && dst + len <= self.total, "window copy out of bounds");
+        self.check(src, len, "copy");
+        self.check(dst, len, "copy");
+        debug_assert!(
+            src == dst || src.abs_diff(dst) >= len,
+            "window copy_within ranges overlap: src {src}, dst {dst}, len {len}"
+        );
+        race::on_access(self.id, src, len, false);
+        race::on_access(self.id, dst, len, true);
         unsafe {
             let base = self.base();
             std::ptr::copy(base.add(src), base.add(dst), len);
@@ -237,6 +277,39 @@ mod tests {
         let w = SharedWindow::allocate(&[100, 0, 0, 0]);
         assert_eq!(w.len(), 100);
         assert_eq!(w.segment(3), (100, 0));
+    }
+
+    #[test]
+    fn window_ids_are_process_unique() {
+        let a = SharedWindow::allocate(&[8]);
+        let b = SharedWindow::allocate(&[8]);
+        assert_ne!(a.id(), b.id());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn wrapping_offset_is_caught() {
+        // `offset + len` would wrap around usize::MAX and pass a naive
+        // additive check; the subtractive form must reject it.
+        let w = SharedWindow::allocate(&[8]);
+        w.read_into(usize::MAX - 2, &mut [0u8; 8]);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "overlap")]
+    fn copy_within_overlap_is_debug_checked() {
+        let w = SharedWindow::allocate(&[16]);
+        w.copy_within(0, 4, 8);
+    }
+
+    #[test]
+    fn copy_within_identity_and_disjoint_allowed() {
+        let w = SharedWindow::allocate(&[16]);
+        w.write(0, &[3; 4]);
+        w.copy_within(0, 0, 4); // src == dst is a no-op, not an overlap
+        w.copy_within(0, 4, 4);
+        assert_eq!(w.read_vec(4, 4), vec![3; 4]);
     }
 
     #[test]

@@ -1,0 +1,295 @@
+//! Integration tests for the correctness-analysis subsystem (ISSUE 6):
+//! the static schedule verifier over *real* exported schedules — a clean
+//! sweep, then mutation tests that corrupt the exports (dropped arrive,
+//! skipped yellow release, mismatched bridge tag, shrunk window, root
+//! disagreement) and assert each is flagged with a diagnostic naming the
+//! offending rank/stage pair — and the happens-before race detector
+//! driven end-to-end: clean under the window discipline, reporting when
+//! a rank re-stages an epoch while a peer still reads the previous one.
+
+use hympi::analysis::race;
+use hympi::analysis::schedule::{Diagnostic, RankSchedule, StageModel};
+use hympi::analysis::{verify_handle, RaceDetector};
+use hympi::coll::{Flavor, PlanCache};
+use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
+use hympi::hybrid::{AllreduceMethod, HybridCtx, LeaderPolicy, RootPolicy, SyncScheme};
+use hympi::mpi::{Datatype, ReduceOp};
+
+fn spec(nodes: &[usize]) -> ClusterSpec {
+    let mut s = ClusterSpec::preset(Preset::VulcanSb, nodes.len());
+    s.nodes = nodes.to_vec();
+    s
+}
+
+/// Build one handle per rank on a [5, 3] cluster, export its schedule,
+/// free it, and return the all-rank schedule set. `build` must be
+/// deterministic — every rank runs it in the same collective order.
+fn export<F>(k: usize, root: usize, build: F) -> Vec<RankSchedule>
+where
+    F: Fn(&std::rc::Rc<HybridCtx>, &mut hympi::mpi::env::ProcEnv) -> hympi::hybrid::HyColl
+        + Send
+        + Sync
+        + 'static,
+{
+    let report = SimCluster::new(spec(&[5, 3])).run(move |env| {
+        let w = env.world();
+        let policy = if k == 1 { LeaderPolicy::Single } else { LeaderPolicy::Leaders(k) };
+        let ctx = HybridCtx::create(env, &w, policy);
+        let mut h = build(&ctx, env);
+        let s = h.export_schedule(root);
+        env.barrier(&w);
+        h.free(env);
+        s
+    });
+    report.outputs
+}
+
+#[test]
+fn real_exports_verify_clean() {
+    for scheme in [SyncScheme::Barrier, SyncScheme::Spin] {
+        for k in [1, 2] {
+            let ag = export(k, 0, move |ctx, env| ctx.allgather_init(env, 64, scheme));
+            let diags = verify_handle(&ag);
+            assert!(diags.is_empty(), "allgather k{k} {scheme:?}: {diags:?}");
+
+            let bc = export(k, 7, move |ctx, env| {
+                ctx.bcast_init_split(env, 96, scheme, RootPolicy::Fixed(7), 2)
+            });
+            let diags = verify_handle(&bc);
+            assert!(diags.is_empty(), "bcast k{k} {scheme:?}: {diags:?}");
+
+            let ar = export(k, 0, move |ctx, env| {
+                ctx.allreduce_init(
+                    env,
+                    Datatype::F64,
+                    ReduceOp::Sum,
+                    64,
+                    AllreduceMethod::Method2,
+                    scheme,
+                )
+            });
+            let diags = verify_handle(&ar);
+            assert!(diags.is_empty(), "allreduce k{k} {scheme:?}: {diags:?}");
+        }
+    }
+}
+
+#[test]
+fn mutation_dropped_arrive_is_flagged() {
+    let mut s = export(1, 0, |ctx, env| ctx.allgather_init(env, 64, SyncScheme::Spin));
+    let i = s[0]
+        .stages
+        .iter()
+        .position(|st| matches!(st, StageModel::Arrive { .. }))
+        .expect("allgather opens with a red sync");
+    s[0].stages[i] = StageModel::Skip;
+    let diags = verify_handle(&s);
+    assert!(
+        diags.iter().any(
+            |d| matches!(d, Diagnostic::AwaitWithoutArrive { rank: 0, stage, .. } if *stage == i + 1)
+        ),
+        "got: {diags:?}"
+    );
+    assert!(
+        diags.iter().any(|d| matches!(d, Diagnostic::BarrierArity { .. })),
+        "the group must also be short one participant: {diags:?}"
+    );
+}
+
+#[test]
+fn mutation_skipped_yellow_release_is_flagged() {
+    let mut s = export(1, 0, |ctx, env| ctx.allgather_init(env, 64, SyncScheme::Spin));
+    let (r, i) = s
+        .iter()
+        .enumerate()
+        .find_map(|(r, sched)| {
+            sched
+                .stages
+                .iter()
+                .position(|st| matches!(st, StageModel::Post { .. }))
+                .map(|i| (r, i))
+        })
+        .expect("spin schedules carry a yellow post on the primary leader");
+    s[r].stages[i] = StageModel::Skip;
+    let diags = verify_handle(&s);
+    assert!(
+        diags
+            .iter()
+            .any(|d| matches!(d, Diagnostic::MissingRelease { episode: 0, .. })),
+        "got: {diags:?}"
+    );
+}
+
+#[test]
+fn mutation_mismatched_bridge_tag_orphans_both_sides() {
+    // Pipelined fixed-root bcast: the root node's leader streams chunks
+    // to every other node's leader.
+    let mut s = export(1, 7, |ctx, env| {
+        ctx.bcast_init_split(env, 96, SyncScheme::Spin, RootPolicy::Fixed(7), 2)
+    });
+    let mut mutated = None;
+    'outer: for sched in s.iter_mut() {
+        let rank = sched.rank;
+        for (i, st) in sched.stages.iter_mut().enumerate() {
+            if let StageModel::Work { msgs, .. } = st {
+                if let Some(m) = msgs.iter_mut().find(|m| !m.send) {
+                    m.tag += 17;
+                    mutated = Some((rank, i));
+                    break 'outer;
+                }
+            }
+        }
+    }
+    let (rank, _) = mutated.expect("a receiving leader exists on the 2-node shape");
+    let diags = verify_handle(&s);
+    assert!(
+        diags.iter().any(|d| matches!(d, Diagnostic::UnmatchedRecv { rank: r, .. } if *r == rank)),
+        "got: {diags:?}"
+    );
+    assert!(
+        diags.iter().any(|d| matches!(d, Diagnostic::UnmatchedSend { .. })),
+        "the orphaned sender must be named too: {diags:?}"
+    );
+}
+
+#[test]
+fn mutation_shrunk_window_is_flagged() {
+    let mut s = export(1, 0, |ctx, env| ctx.allgather_init(env, 64, SyncScheme::Spin));
+    s[0].win_len = 8; // the leader's Work writes the full gathered vector
+    let diags = verify_handle(&s);
+    assert!(
+        diags.iter().any(|d| matches!(d, Diagnostic::OutOfWindow { rank: 0, .. })),
+        "got: {diags:?}"
+    );
+}
+
+#[test]
+fn mutation_root_disagreement_is_flagged() {
+    // Rank 2 exports its per-start gather schedule against a different
+    // root than everyone else.
+    let report = SimCluster::new(spec(&[5, 3])).run(|env| {
+        let w = env.world();
+        let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+        let mut h = ctx.gather_init(env, 48, SyncScheme::Spin);
+        let root = if w.rank() == 2 { 1 } else { 0 };
+        let s = h.export_schedule(root);
+        env.barrier(&w);
+        h.free(env);
+        s
+    });
+    let diags = verify_handle(&report.outputs);
+    assert!(
+        diags.iter().any(
+            |d| matches!(d, Diagnostic::RootMismatch { roots } if roots.contains(&(2, 1)))
+        ),
+        "got: {diags:?}"
+    );
+}
+
+#[test]
+fn plan_cache_verify_is_clean_on_hybrid_plans() {
+    let report = SimCluster::new(spec(&[5, 3])).run(|env| {
+        let w = env.world();
+        let mut cache = PlanCache::new();
+        let fl = Flavor::hybrid(SyncScheme::Spin);
+        let mine = vec![env.world_rank() as u8; 16];
+        cache.allgather(env, &w, fl, &mine, None);
+        let mut buf = vec![1u8; 32];
+        cache.allreduce(env, &w, fl, Datatype::F64, ReduceOp::Sum, &mut buf);
+        let exports = cache.export_schedules(0);
+        let diags = cache.verify(0);
+        env.barrier(&w);
+        cache.free(env);
+        (exports.len(), diags.len())
+    });
+    for (nexports, ndiags) in report.outputs {
+        assert_eq!(nexports, 2, "both hybrid plans must export a schedule");
+        assert_eq!(ndiags, 0, "rank-local verification must be clean");
+    }
+}
+
+#[test]
+fn race_detector_clean_under_the_window_discipline() {
+    let det = RaceDetector::new(5, 42);
+    let det2 = det.clone();
+    SimCluster::new(spec(&[3, 2])).run(move |env| {
+        let w = env.world();
+        let me = w.rank();
+        let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+        let mut ag = ctx.allgather_init(env, 32, SyncScheme::Spin);
+        let mut bc = ctx.bcast_init(env, 48, SyncScheme::Barrier);
+        race::install(&det2, me);
+        let block = vec![me as u8; 32];
+        let payload = vec![9u8; 48];
+        for epoch in 0..2 {
+            ag.start_allgather(env, &block);
+            ag.wait(env);
+            bc.start_bcast(env, 0, (me == 0).then_some(&payload[..]));
+            bc.wait(env);
+            if epoch == 1 {
+                // Reads are safe on the last epoch: nobody re-stages.
+                std::hint::black_box(ag.result_view(32).unwrap()[0]);
+                std::hint::black_box(bc.result_view(48).unwrap()[0]);
+            }
+        }
+        race::uninstall();
+        env.barrier(&w);
+        ag.free(env);
+        bc.free(env);
+    });
+    let reports = det.reports();
+    assert!(reports.is_empty(), "expected clean, got: {reports:?}");
+}
+
+#[test]
+fn race_detector_flags_stale_epoch_read_vs_restaging() {
+    // Rank 1 reads the gathered result *after* its wait, while rank 0 —
+    // already past its own wait (the yellow post does not wait for
+    // children) — re-stages block 0 for the next epoch. Real time never
+    // orders them; happens-before must flag the pair.
+    let det = RaceDetector::new(5, 7);
+    let det2 = det.clone();
+    let report = SimCluster::new(spec(&[3, 2])).run(move |env| {
+        let w = env.world();
+        let me = w.rank();
+        let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+        let mut ag = ctx.allgather_init(env, 32, SyncScheme::Spin);
+        let win_id = {
+            let hw = ag.window().expect("window-backed handle");
+            hw.win.id()
+        };
+        race::install(&det2, me);
+        let block = vec![me as u8; 32];
+        ag.start_allgather(env, &block);
+        ag.wait(env);
+        if me == 1 {
+            // Epoch-1 in-place read of rank 0's block. No barrier before
+            // the restart below: `env.barrier` rides the instrumented
+            // SyncGroup and would (correctly) order the pair. Detection
+            // is happens-before, not timing — both accesses get recorded
+            // whichever order the threads actually run in.
+            std::hint::black_box(ag.result_view(32).unwrap()[0]);
+        }
+        ag.start_allgather(env, &block); // rank 0 rewrites block 0
+        ag.wait(env);
+        race::uninstall();
+        env.barrier(&w);
+        ag.free(env);
+        win_id
+    });
+    let win_id = report.outputs[0];
+    let reports = det.reports();
+    assert!(!reports.is_empty(), "the stale-epoch read must be flagged");
+    let r = &reports[0];
+    assert_eq!(r.win, win_id, "report names the offending window");
+    assert_eq!(r.seed, 7, "report echoes the replay seed");
+    let ranks = [r.first.rank, r.second.rank];
+    assert!(ranks.contains(&0) && ranks.contains(&1), "offenders are ranks 0 and 1: {r}");
+    assert!(
+        r.first.write != r.second.write,
+        "one side reads, the other writes: {r}"
+    );
+    for side in [&r.first, &r.second] {
+        assert!(!side.stage.is_empty(), "each side names its stage: {r}");
+    }
+}
