@@ -26,4 +26,6 @@ pub mod race;
 pub mod schedule;
 
 pub use race::{RaceDetector, RaceReport};
-pub use schedule::{verify_handle, verify_program, verify_rank_local, Diagnostic, RankSchedule};
+pub use schedule::{
+    verify_handle, verify_program, verify_rank_local, verify_survivors, Diagnostic, RankSchedule,
+};

@@ -152,6 +152,10 @@ pub enum Diagnostic {
     CollectiveMismatch { comm: u64, detail: String },
     /// Fixed-root handles compiled against different roots.
     RootMismatch { roots: Vec<(usize, usize)> },
+    /// A post-shrink schedule set does not cover exactly the expected
+    /// survivor ranks (a dead rank still exports, or a survivor is
+    /// missing from the rebuilt session).
+    SurvivorSetMismatch { expected: Vec<usize>, got: Vec<usize> },
     /// The cross-rank dependency graph has a cycle (or events stranded
     /// behind one); `blocked` names the first few stuck events.
     Deadlock { blocked: Vec<String> },
@@ -201,6 +205,10 @@ impl fmt::Display for Diagnostic {
             Diagnostic::RootMismatch { roots } => {
                 write!(f, "fixed-root schedules disagree on the root (rank, root): {roots:?}")
             }
+            Diagnostic::SurvivorSetMismatch { expected, got } => write!(
+                f,
+                "post-shrink schedules cover ranks {got:?} but the survivor set is {expected:?}"
+            ),
             Diagnostic::Deadlock { blocked } => {
                 write!(f, "dependency cycle — blocked events: {}", blocked.join("; "))
             }
@@ -259,6 +267,28 @@ pub fn verify_rank_local(s: &RankSchedule) -> Vec<Diagnostic> {
 /// Verify one handle's schedules across all ranks of its communicator.
 pub fn verify_handle(ranks: &[RankSchedule]) -> Vec<Diagnostic> {
     verify_program(&[ranks])
+}
+
+/// Verify a *post-shrink* handle: the full [`verify_handle`] pass plus a
+/// coverage check that the exported schedules come from exactly the
+/// expected survivor ranks — no dead rank still exporting, no survivor
+/// dropped by the rebuilt session. `expected` is in the shrunken comm's
+/// rank numbering (0..survivors), the same numbering
+/// [`RankSchedule::rank`] carries after a
+/// [`HyColl::rebuild`](crate::hybrid::HyColl::rebuild).
+pub fn verify_survivors(ranks: &[RankSchedule], expected: &[usize]) -> Vec<Diagnostic> {
+    let mut got: Vec<usize> = ranks.iter().map(|s| s.rank).collect();
+    got.sort_unstable();
+    got.dedup();
+    let mut want: Vec<usize> = expected.to_vec();
+    want.sort_unstable();
+    want.dedup();
+    let mut out = Vec::new();
+    if got != want {
+        out.push(Diagnostic::SurvivorSetMismatch { expected: want, got });
+    }
+    out.extend(verify_handle(ranks));
+    out
 }
 
 /// Verify a *program* of overlapping in-flight handles: each inner slice
@@ -818,6 +848,27 @@ mod tests {
         ];
         let diags = verify_program(&[&a, &b]);
         assert!(diags.is_empty(), "expected clean program, got: {diags:?}");
+    }
+
+    #[test]
+    fn survivor_coverage_passes_on_exact_match() {
+        let diags = verify_survivors(&two_rank_clean(), &[0, 1]);
+        assert!(diags.is_empty(), "expected clean, got: {diags:?}");
+    }
+
+    #[test]
+    fn stale_or_missing_survivor_is_flagged() {
+        // A schedule from a rank outside the survivor set (stale export
+        // from before the shrink) and a missing survivor both surface.
+        let diags = verify_survivors(&two_rank_clean(), &[0, 2]);
+        assert!(
+            diags.iter().any(|d| matches!(
+                d,
+                Diagnostic::SurvivorSetMismatch { expected, got }
+                    if expected == &[0, 2] && got == &[0, 1]
+            )),
+            "got: {diags:?}"
+        );
     }
 
     #[test]

@@ -19,22 +19,33 @@
 //! parity runs assert bit-identical result bytes and per-rank virtual
 //! clocks across fabrics.
 //!
+//! PR 7 adds a **chaos sweep** (`--chaos`): the same session-API
+//! allreduce workload under deterministic fault injection — skew, OS
+//! noise, a 4× straggler — for both §4.5 sync schemes at k ∈ {1, 2},
+//! reporting each scenario's vtime degradation over the clean run
+//! (results are asserted bit-identical: faults perturb timing, never
+//! bytes), plus a dead-rank scenario per configuration that kills the
+//! last node's leader mid-run and must recover through
+//! `HybridCtx::shrink` + `HyColl::rebuild`. Lands in
+//! `BENCH_PR7.chaos.json`.
+//!
 //! ```text
 //! cargo run --release --bin bench_all              # full sweep, writes BENCH_PR5.json
 //! cargo run --release --bin bench_all -- --smoke   # CI-sized sweep (same pipeline)
 //! cargo run --release --bin bench_all -- --strict  # exit non-zero below the speedup targets
 //! cargo run --release --bin bench_all -- --out P   # alternate output path
+//! cargo run --release --bin bench_all -- --chaos   # fault-injection sweep only
 //! ```
 
 use hympi::coll::{CollOp, Flavor, PlanCache};
 use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
 use hympi::figures::common::{drive_report, overlap_probe};
-use hympi::hybrid::SyncScheme;
+use hympi::hybrid::{AllreduceMethod, HybridCtx, LeaderPolicy, SyncScheme};
 use hympi::kernels::poisson::{run as poisson_run, PoissonCfg};
 use hympi::kernels::summa::{run as summa_run, SummaCfg};
 use hympi::kernels::{Backend, Variant};
 use hympi::mpi::env::ProcEnv;
-use hympi::mpi::{Datatype, ReduceOp};
+use hympi::mpi::{Datatype, FaultPlan, ReduceOp};
 use hympi::util::to_bytes;
 use std::time::Instant;
 
@@ -337,6 +348,284 @@ fn poisson_overlap_case(name: &str, spec: ClusterSpec, n: usize, iters: usize, b
     case
 }
 
+// ---- chaos sweep (PR 7: fault injection + self-healing sessions) ----------
+
+/// Master seed for every chaos scenario — fixed so the sweep is
+/// reproducible run to run (the determinism the `fault` tests pin down).
+const CHAOS_SEED: u64 = 0xC4A0_5EED;
+
+/// One fault-injection measurement point.
+struct ChaosCase {
+    scheme: SyncScheme,
+    k: usize,
+    scenario: &'static str,
+    modeled_us: f64,
+    /// vtime relative to the same configuration's clean run (1.0 = clean).
+    degradation: f64,
+    wall_ms: f64,
+}
+
+/// One dead-rank recovery measurement: kill + detect + shrink + rebuild +
+/// finish on the survivors.
+struct DeadCase {
+    scheme: SyncScheme,
+    k: usize,
+    victim: usize,
+    modeled_us: f64,
+    wall_ms: f64,
+}
+
+fn chaos_spec(smoke: bool) -> ClusterSpec {
+    if smoke {
+        // The irregular two-node figure shape: leaders, children and an
+        // uneven trailing node in 8 ranks.
+        let mut s = ClusterSpec::preset(Preset::VulcanSb, 2);
+        s.nodes = vec![5, 3];
+        s
+    } else {
+        ClusterSpec::preset(Preset::VulcanSb, 4)
+    }
+}
+
+/// `iters` persistent-handle allreduce rounds against fixed modeled
+/// compute; returns (makespan, result digest). Faults may stretch the
+/// makespan but must never touch the digest.
+fn chaos_run(spec: ClusterSpec, scheme: SyncScheme, k: usize, iters: usize, count: usize) -> (f64, Vec<u8>) {
+    let rep = SimCluster::new(spec).run(move |env| {
+        let w = env.world();
+        let eff = HybridCtx::effective_leaders(env, &w, k);
+        let policy = if eff == 1 { LeaderPolicy::Single } else { LeaderPolicy::Leaders(eff) };
+        let ctx = HybridCtx::create(env, &w, policy);
+        let mut h = ctx.allreduce_init(
+            env,
+            Datatype::F64,
+            ReduceOp::Sum,
+            count,
+            AllreduceMethod::Method1,
+            scheme,
+        );
+        let vals: Vec<f64> = (0..count / 8).map(|i| ((w.rank() + 1) * (i + 1)) as f64).collect();
+        let operand = to_bytes(&vals).to_vec();
+        let mut digest = Vec::new();
+        for _ in 0..iters {
+            env.compute(50.0);
+            h.start_allreduce(env, &operand);
+            h.wait(env);
+            let view = h.result_view(count).expect("hybrid handles are window-backed");
+            digest.extend_from_slice(&view[..32.min(count)]);
+        }
+        env.barrier(&w);
+        h.free(env);
+        digest
+    });
+    let mut digests = rep.outputs.into_iter();
+    let first = digests.next().expect("at least one rank");
+    assert!(digests.all(|d| d == first), "allreduce digest must agree on every rank");
+    (rep.max_vtime_us(), first)
+}
+
+/// The recovery scenario: the last node's primary leader dies at the
+/// iteration-2 boundary; survivors detect (`Err(RankFailed)` from
+/// `try_wait`), shrink, rebuild the handle and finish all `iters`
+/// rounds. Panics if any survivor fails to complete.
+fn chaos_dead_run(
+    spec: ClusterSpec,
+    scheme: SyncScheme,
+    k: usize,
+    iters: usize,
+    count: usize,
+    victim: usize,
+) -> f64 {
+    let plan = FaultPlan::seeded(CHAOS_SEED).with_dead(victim, 0.0).with_detect_bound_us(2_000);
+    let rep = SimCluster::new(spec.with_faults(plan)).run(move |env| {
+        let w = env.world();
+        let eff = HybridCtx::effective_leaders(env, &w, k);
+        let policy = if eff == 1 { LeaderPolicy::Single } else { LeaderPolicy::Leaders(eff) };
+        let mut ctx = HybridCtx::create(env, &w, policy);
+        let mut h = ctx.allreduce_init(
+            env,
+            Datatype::F64,
+            ReduceOp::Sum,
+            count,
+            AllreduceMethod::Method1,
+            scheme,
+        );
+        let vals: Vec<f64> = (0..count / 8).map(|i| ((w.rank() + 1) * (i + 1)) as f64).collect();
+        let operand = to_bytes(&vals).to_vec();
+        let mut it = 0usize;
+        while it < iters {
+            // The injection checkpoint sits at the iteration boundary —
+            // gated so the victim completes two clean rounds first.
+            if it >= 2 && env.rank_dead() {
+                return false;
+            }
+            env.compute(50.0);
+            h.start_allreduce(env, &operand);
+            match h.try_wait(env) {
+                Ok(_) => it += 1,
+                Err(_) => {
+                    ctx = ctx.shrink(env);
+                    h.rebuild(env, &ctx);
+                    // retry the same iteration on the shrunken session
+                }
+            }
+        }
+        env.barrier(ctx.parent());
+        h.free(env);
+        true
+    });
+    let finished = rep.outputs.iter().filter(|&&ok| ok).count();
+    assert_eq!(
+        finished,
+        rep.outputs.len() - 1,
+        "every survivor must recover and finish; only the victim returns early"
+    );
+    rep.max_vtime_us()
+}
+
+/// The full chaos sweep: scheme × k × scenario grid plus a dead-rank
+/// recovery per configuration, a best-tolerance summary, and its own
+/// JSON artifact.
+fn run_chaos(smoke: bool, out: &str) {
+    let spec = chaos_spec(smoke);
+    let (iters, count) = if smoke { (6, 4096) } else { (10, 16 * 1024) };
+    let world = spec.world_size();
+    let straggler = world / 2;
+    let victim = world - spec.nodes.last().copied().expect("spec has nodes");
+    let scenarios: &[(&str, Option<fn() -> FaultPlan>)] = &[
+        ("clean", None),
+        ("skew25", Some(|| FaultPlan::seeded(CHAOS_SEED).with_skew(0.25))),
+        ("noise", Some(|| FaultPlan::seeded(CHAOS_SEED).with_noise(200.0, 25.0))),
+        ("straggler4x", None), // filled in below (needs the rank)
+    ];
+    let mut sweep: Vec<ChaosCase> = Vec::new();
+    let mut dead: Vec<DeadCase> = Vec::new();
+    for &scheme in &[SyncScheme::Barrier, SyncScheme::Spin] {
+        for &k in &[1usize, 2] {
+            let mut clean_us = 0.0;
+            let mut clean_digest = Vec::new();
+            for (name, mk) in scenarios {
+                let plan = match (*name, mk) {
+                    ("straggler4x", _) => {
+                        Some(FaultPlan::seeded(CHAOS_SEED).with_straggler(straggler, 4.0))
+                    }
+                    (_, Some(mk)) => Some(mk()),
+                    (_, None) => None,
+                };
+                let s = match plan {
+                    Some(p) => spec.clone().with_faults(p),
+                    None => spec.clone(),
+                };
+                let t0 = Instant::now();
+                let (vt, digest) = chaos_run(s, scheme, k, iters, count);
+                let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+                if *name == "clean" {
+                    clean_us = vt;
+                    clean_digest = digest;
+                } else {
+                    assert_eq!(
+                        digest, clean_digest,
+                        "chaos {name}: faults must perturb timing, never results"
+                    );
+                }
+                let case = ChaosCase {
+                    scheme,
+                    k,
+                    scenario: name,
+                    modeled_us: vt,
+                    degradation: vt / clean_us,
+                    wall_ms,
+                };
+                println!(
+                    "chaos {:>7?} k{} {:<12} modeled {:>12.2} us | {:>5.3}x clean | wall {:>7.1} ms",
+                    case.scheme, case.k, case.scenario, case.modeled_us, case.degradation, case.wall_ms
+                );
+                sweep.push(case);
+            }
+            let t0 = Instant::now();
+            let vt = chaos_dead_run(spec.clone(), scheme, k, iters, count, victim);
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            println!(
+                "chaos {scheme:>7?} k{k} dead-leader   modeled {vt:>12.2} us | recovered | wall {wall_ms:>7.1} ms"
+            );
+            dead.push(DeadCase { scheme, k, victim, modeled_us: vt, wall_ms });
+        }
+    }
+    // Which configuration tolerates faults best: lowest worst-case
+    // degradation across the non-clean scenarios.
+    let best = sweep
+        .chunks(scenarios.len())
+        .map(|grp| {
+            let worst =
+                grp.iter().filter(|c| c.scenario != "clean").map(|c| c.degradation).fold(0.0, f64::max);
+            (grp[0].scheme, grp[0].k, worst)
+        })
+        .min_by(|a, b| a.2.total_cmp(&b.2))
+        .expect("sweep is non-empty");
+    println!(
+        "chaos: best fault tolerance: {:?} k={} (worst-case degradation {:.3}x)",
+        best.0, best.1, best.2
+    );
+    write_chaos_json(out, if smoke { "smoke" } else { "full" }, &sweep, &dead, best);
+}
+
+fn write_chaos_json(
+    path: &str,
+    mode: &str,
+    sweep: &[ChaosCase],
+    dead: &[DeadCase],
+    best: (SyncScheme, usize, f64),
+) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"pr\": 7,\n");
+    s.push_str(&format!("  \"mode\": \"{mode}\",\n"));
+    s.push_str(&format!("  \"seed\": {CHAOS_SEED},\n"));
+    s.push_str("  \"generated_by\": \"cargo run --release --bin bench_all -- --chaos\",\n");
+    s.push_str(
+        "  \"note\": \"sweep: persistent-handle allreduce rounds under deterministic fault \
+         injection (FaultPlan); degradation = modeled vtime over the same configuration's clean \
+         run; result digests are asserted bit-identical across scenarios. dead: the last node's \
+         primary leader dies mid-run; survivors detect via Err(RankFailed), recover via \
+         HybridCtx::shrink + HyColl::rebuild and finish every round (asserted).\",\n",
+    );
+    s.push_str("  \"sweep\": [\n");
+    for (i, c) in sweep.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"scheme\": \"{:?}\", \"k\": {}, \"scenario\": \"{}\", \"modeled_us\": {:.3}, \
+             \"degradation\": {:.4}, \"wall_ms\": {:.3}}}{}\n",
+            c.scheme,
+            c.k,
+            c.scenario,
+            c.modeled_us,
+            c.degradation,
+            if i + 1 < sweep.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"dead\": [\n");
+    for (i, c) in dead.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"scheme\": \"{:?}\", \"k\": {}, \"victim\": {}, \"modeled_us\": {:.3}, \
+             \"recovered\": true, \"wall_ms\": {:.3}}}{}\n",
+            c.scheme,
+            c.k,
+            c.victim,
+            c.modeled_us,
+            c.wall_ms,
+            if i + 1 < dead.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!(
+        "  \"best\": {{\"scheme\": \"{:?}\", \"k\": {}, \"worst_degradation\": {:.4}}}\n",
+        best.0, best.1, best.2
+    ));
+    s.push_str("}\n");
+    std::fs::write(path, s).unwrap_or_else(|e| panic!("write {path}: {e}"));
+    println!("wrote {path}");
+}
+
 fn write_json(path: &str, mode: &str, cases: &[Case], sweep: &[LeaderCase], overlap: &[OverlapCase]) {
     let mut s = String::new();
     s.push_str("{\n");
@@ -406,12 +695,19 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let smoke = args.iter().any(|a| a == "--smoke");
     let strict = args.iter().any(|a| a == "--strict");
+    let chaos = args.iter().any(|a| a == "--chaos");
     let out = args
         .iter()
         .position(|a| a == "--out")
         .and_then(|i| args.get(i + 1))
         .cloned()
-        .unwrap_or_else(|| "BENCH_PR5.json".to_string());
+        .unwrap_or_else(|| {
+            (if chaos { "BENCH_PR7.chaos.json" } else { "BENCH_PR5.json" }).to_string()
+        });
+    if chaos {
+        run_chaos(smoke, &out);
+        return;
+    }
     let hy = Flavor::hybrid(SyncScheme::Spin);
     let sb = Preset::VulcanSb;
     let hh = Preset::HazelHen;

@@ -15,10 +15,12 @@
 //! covered on every CI run.
 
 use hympi::analysis::race;
-use hympi::analysis::{verify_handle, verify_program, Diagnostic, RaceDetector, RankSchedule};
+use hympi::analysis::{
+    verify_handle, verify_program, verify_survivors, Diagnostic, RaceDetector, RankSchedule,
+};
 use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
 use hympi::hybrid::{AllreduceMethod, HybridCtx, LeaderPolicy, RootPolicy, SyncScheme};
-use hympi::mpi::{Datatype, ReduceOp};
+use hympi::mpi::{Datatype, FaultPlan, ReduceOp};
 use std::process::ExitCode;
 
 /// The swept cluster shapes: the irregular figure shapes, a single node,
@@ -192,6 +194,68 @@ fn runtime_race_pass() -> usize {
     reports.len()
 }
 
+/// The ISSUE-7 post-shrink gate: kill a non-root leader mid-steady-state,
+/// recover with [`HybridCtx::shrink`] + [`HyColl::rebuild`] on every
+/// survivor, and verify the rebuilt handles' exported schedules — both
+/// the full cross-rank dependency-graph pass and coverage of exactly the
+/// survivor set ([`verify_survivors`]).
+///
+/// [`HyColl::rebuild`]: hympi::hybrid::HyColl::rebuild
+fn post_shrink_pass() -> usize {
+    const VICTIM: usize = 5; // node 1's (k = 1) leader on the 5+3 shape
+    let nodes: &[usize] = &[5, 3];
+    let plan = FaultPlan::seeded(0x5EED).with_dead(VICTIM, 0.0).with_detect_bound_us(2_000);
+    let cluster = SimCluster::new(spec(Preset::VulcanSb, nodes).with_faults(plan));
+    let run = cluster.run(move |env| {
+        let w = env.world();
+        let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+        let mut ar = ctx.allreduce_init(
+            env,
+            Datatype::F64,
+            ReduceOp::Sum,
+            64,
+            AllreduceMethod::Method1,
+            SyncScheme::Barrier,
+        );
+        let mut bc = ctx.bcast_init_split(env, 96, SyncScheme::Barrier, RootPolicy::Fixed(7), 2);
+        if env.rank_dead() {
+            return None; // the victim stops participating here
+        }
+        let operand = vec![w.rank() as u8; 64];
+        ar.start_allreduce(env, &operand);
+        let err = ar.try_wait(env).expect_err("a dead leader must surface, not hang");
+        assert_eq!(err.world_rank, VICTIM, "detection must name the victim");
+        let ctx = ctx.shrink(env);
+        ar.rebuild(env, &ctx);
+        bc.rebuild(env, &ctx);
+        let root = ctx.parent().rank_of_world(7).expect("world rank 7 survives");
+        let exports = vec![
+            ("allreduce".to_string(), ar.export_schedule(0)),
+            ("bcast fixed".to_string(), bc.export_schedule(root)),
+        ];
+        // One live invocation each: the rebuilt schedules must also drive.
+        ar.start_allreduce(env, &operand);
+        ar.try_wait(env).expect("post-shrink allreduce completes on survivors");
+        let payload = vec![9u8; 96];
+        let me = ctx.parent().rank();
+        bc.start_bcast(env, root, (me == root).then_some(&payload[..]));
+        bc.try_wait(env).expect("post-shrink bcast completes on survivors");
+        env.barrier(ctx.parent());
+        ar.free(env);
+        bc.free(env);
+        Some(exports)
+    });
+    let sets: Vec<Vec<(String, RankSchedule)>> = run.outputs.into_iter().flatten().collect();
+    let survivors: Vec<usize> = (0..7).collect(); // shrunken-comm numbering
+    let mut failures = 0usize;
+    for i in 0..sets[0].len() {
+        let name = &sets[0][i].0;
+        let set: Vec<RankSchedule> = sets.iter().map(|s| s[i].1.clone()).collect();
+        failures += report(&format!("post-shrink {name}"), &verify_survivors(&set, &survivors));
+    }
+    failures
+}
+
 fn main() -> ExitCode {
     let mut failures = 0usize;
     let mut handles_checked = 0usize;
@@ -218,8 +282,9 @@ fn main() -> ExitCode {
         }
     }
     failures += runtime_race_pass();
+    failures += post_shrink_pass();
     if failures == 0 {
-        println!("verify_schedules: {handles_checked} handle configurations verified clean; runtime race pass clean");
+        println!("verify_schedules: {handles_checked} handle configurations verified clean; runtime race pass clean; post-shrink pass clean");
         ExitCode::SUCCESS
     } else {
         eprintln!("verify_schedules: {failures} diagnostic(s)");

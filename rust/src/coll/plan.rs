@@ -229,6 +229,11 @@ pub trait CollPlan {
         None
     }
 
+    /// World ranks of the communicator this plan is collective over, in
+    /// communicator-rank order — what [`PlanCache::purge_failed`]
+    /// consults against the dead-rank registry.
+    fn members(&self) -> &[usize];
+
     /// One-line description for reports and debugging.
     fn describe(&self) -> String;
 }
@@ -297,6 +302,10 @@ impl CollPlan for PurePlan {
         }
     }
 
+    fn members(&self) -> &[usize] {
+        self.comm.members()
+    }
+
     fn describe(&self) -> String {
         format!("pure {:?} on comm {} ({} B)", self.key.op, self.key.comm, self.key.count)
     }
@@ -332,6 +341,10 @@ impl CollPlan for HierPlan {
             }
             _ => panic!("{}: incompatible CollIo", self.describe()),
         }
+    }
+
+    fn members(&self) -> &[usize] {
+        self.ctx.comm.members()
     }
 
     fn describe(&self) -> String {
@@ -444,6 +457,10 @@ impl CollPlan for HybridPlan {
 
     fn export_schedule(&self, root: usize) -> Option<RankSchedule> {
         Some(self.coll.export_schedule(root))
+    }
+
+    fn members(&self) -> &[usize] {
+        self.coll.ctx().parent().members()
     }
 
     fn describe(&self) -> String {
@@ -844,6 +861,41 @@ impl PlanCache {
         for (_, plan) in self.entries.iter_mut() {
             plan.teardown(env);
         }
+    }
+
+    /// Drop every plan whose communicator contains a registered-dead
+    /// rank, plus the per-communicator session state (hybrid sessions,
+    /// hierarchy contexts) of those communicators — after a failure,
+    /// re-planning on a shrunken communicator must not resurrect a
+    /// session whose group includes the dead rank. Windows of purged
+    /// plans are abandoned *without* a collective free (the ULFM-revoke
+    /// analogue: their group can no longer meet to free them; the
+    /// registry entries leak deliberately). Not collective — every
+    /// survivor reaches the identical decision from the shared dead
+    /// registry. Returns the number of plans dropped; free on clean runs
+    /// (one relaxed load).
+    pub fn purge_failed(&mut self, env: &ProcEnv) -> usize {
+        if !env.state().any_dead() {
+            return 0;
+        }
+        let dead = env.state().dead_ranks();
+        let before = self.entries.len();
+        let mut doomed_comms = Vec::new();
+        self.entries.retain(|(key, plan)| {
+            let doomed = plan.members().iter().any(|w| dead.contains(w));
+            if doomed {
+                doomed_comms.push(key.comm);
+            }
+            !doomed
+        });
+        for c in doomed_comms {
+            self.comms.remove(&c);
+        }
+        self.index.clear();
+        for (i, (key, _)) in self.entries.iter().enumerate() {
+            self.index.insert(*key, i);
+        }
+        before - self.entries.len()
     }
 }
 

@@ -57,17 +57,24 @@ impl SimCluster {
         F: Fn(&mut ProcEnv) -> T + Send + Sync + 'static,
     {
         // Apply the spec's park-bound choice (wall-clock wakeup latency
-        // only; 0 = auto-tune from the host core count).
-        crate::mpi::sync::set_park_bound_us(self.spec.park_bound_us.unwrap_or(0));
+        // only; 0 = auto-tune from the host core count) and the fault
+        // plan's failure-detection bound (also wall-clock only).
+        crate::mpi::sync::set_park_bound_us(self.spec.knobs.park_bound_us.unwrap_or(0));
+        crate::mpi::fault::set_detect_bound_us(
+            self.spec
+                .knobs
+                .fault
+                .as_ref()
+                .map(|f| f.detect_bound_us)
+                .unwrap_or(crate::mpi::fault::DEFAULT_DETECT_BOUND_US),
+        );
         let topo = Topology::new(&self.spec.nodes, self.spec.placement);
         let world = topo.world_size();
-        let state = ClusterState::with_options(
+        let state = ClusterState::with_knobs(
             topo,
             self.spec.net.clone(),
             self.spec.mgmt.clone(),
-            self.spec.compute_scale,
-            self.spec.legacy_dataplane,
-            self.spec.legacy_fabric,
+            self.spec.knobs.clone(),
         );
         let f = Arc::new(f);
         let t0 = Instant::now();
@@ -103,13 +110,17 @@ impl SimCluster {
             }
         }
         if let Some((rank, e)) = panic {
-            std::panic::panic_any(format!(
-                "rank {rank} panicked: {}",
-                e.downcast_ref::<String>()
-                    .map(|s| s.as_str())
-                    .or_else(|| e.downcast_ref::<&str>().copied())
-                    .unwrap_or("<non-string panic>")
-            ));
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| (*s).to_string()))
+                // The failure detector panics with a typed payload; name
+                // the dead rank rather than printing "<non-string panic>".
+                .or_else(|| {
+                    e.downcast_ref::<crate::mpi::fault::RankFailed>().map(|rf| rf.to_string())
+                })
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            std::panic::panic_any(format!("rank {rank} panicked: {msg}"));
         }
         RunReport {
             outputs,

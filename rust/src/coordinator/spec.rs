@@ -1,7 +1,8 @@
 //! Cluster specifications and the paper's testbed presets (§5.1).
 
+use crate::mpi::fault::FaultPlan;
 use crate::mpi::net::NetModel;
-use crate::mpi::state::MgmtCosts;
+use crate::mpi::state::{Knobs, MgmtCosts};
 use crate::mpi::topo::Placement;
 
 /// The paper's experimental platforms.
@@ -67,27 +68,26 @@ pub struct ClusterSpec {
     pub net: NetModel,
     pub mgmt: MgmtCosts,
     pub placement: Placement,
-    /// Host-CPU-time → virtual-compute-time multiplier.
-    pub compute_scale: f64,
     pub preset_name: &'static str,
-    /// Emulate the pre-refactor allocating data plane (no slab recycling,
-    /// window materialization through copies). Identical virtual time;
-    /// `bench_all` uses it to measure the wall-clock gap.
-    pub legacy_dataplane: bool,
-    /// Emulate the pre-PR3 message fabric (one mutex+condvar queue per
-    /// mailbox, per-operation global-registry lookups) instead of the
-    /// sharded lock-free fabric. A conservative stand-in — barrier
-    /// parking and per-communicator window condvars remain, so measured
-    /// speedups understate the true gap (see
-    /// [`ClusterState::legacy_fabric`](crate::mpi::state::ClusterState)).
-    /// Identical messages, results and virtual time; `bench_all` uses it
-    /// to measure the wall-clock gap.
-    pub legacy_fabric: bool,
-    /// Park-timeout bound for blocked rank threads (µs). `None` keeps the
-    /// auto-tuned default (2 ms on a 1-core host, 500 µs multi-core —
-    /// [`crate::mpi::sync::park_bound`]). Wall-clock knob only: modeled
-    /// virtual time and results never depend on it.
-    pub park_bound_us: Option<u64>,
+    /// Behavioral knobs, gathered behind one struct ([`Knobs`]) so call
+    /// sites stop churning every time a mode is added:
+    ///
+    /// - `compute_scale` — host-CPU-time → virtual-compute-time multiplier;
+    /// - `legacy_dataplane` — emulate the pre-refactor allocating data
+    ///   plane (no slab recycling, window materialization through copies;
+    ///   identical virtual time, `bench_all` measures the wall-clock gap);
+    /// - `legacy_fabric` — emulate the pre-PR3 mutex+condvar message
+    ///   fabric (a conservative stand-in: identical messages, results and
+    ///   virtual time; see
+    ///   [`ClusterState::legacy_fabric`](crate::mpi::state::ClusterState));
+    /// - `park_bound_us` — park-timeout bound for blocked rank threads
+    ///   (wall-clock knob only; `None` keeps the auto-tuned default,
+    ///   [`crate::mpi::sync::park_bound`]);
+    /// - `fault` — deterministic fault-injection plan (skew, noise,
+    ///   stragglers, dead ranks; [`FaultPlan`]).
+    ///
+    /// Prefer the chainable `with_*` builders over direct field pokes.
+    pub knobs: Knobs,
 }
 
 impl ClusterSpec {
@@ -99,11 +99,8 @@ impl ClusterSpec {
             net: p.net(),
             mgmt: p.mgmt(),
             placement: Placement::Block,
-            compute_scale: 1.0,
             preset_name: p.name(),
-            legacy_dataplane: false,
-            legacy_fabric: false,
-            park_bound_us: None,
+            knobs: Knobs::default(),
         }
     }
 
@@ -153,22 +150,29 @@ impl ClusterSpec {
     }
 
     pub fn with_compute_scale(mut self, s: f64) -> ClusterSpec {
-        self.compute_scale = s;
+        self.knobs.compute_scale = s;
         self
     }
 
     pub fn with_legacy_dataplane(mut self, legacy: bool) -> ClusterSpec {
-        self.legacy_dataplane = legacy;
+        self.knobs.legacy_dataplane = legacy;
         self
     }
 
     pub fn with_legacy_fabric(mut self, legacy: bool) -> ClusterSpec {
-        self.legacy_fabric = legacy;
+        self.knobs.legacy_fabric = legacy;
         self
     }
 
     pub fn with_park_bound_us(mut self, us: u64) -> ClusterSpec {
-        self.park_bound_us = Some(us);
+        self.knobs.park_bound_us = Some(us);
+        self
+    }
+
+    /// Attach a deterministic fault-injection plan (skew, noise,
+    /// stragglers, dead ranks — [`FaultPlan`]).
+    pub fn with_faults(mut self, plan: FaultPlan) -> ClusterSpec {
+        self.knobs.fault = Some(plan);
         self
     }
 }
@@ -211,8 +215,21 @@ mod tests {
         assert_eq!(s.nnodes(), 43);
         assert!(s.nodes[..42].iter().all(|&c| c == 12));
         assert_eq!(*s.nodes.last().unwrap(), 8);
-        assert!(s.park_bound_us.is_none(), "auto park bound by default");
-        assert_eq!(s.with_park_bound_us(250).park_bound_us, Some(250));
+        assert!(s.knobs.park_bound_us.is_none(), "auto park bound by default");
+        assert_eq!(s.with_park_bound_us(250).knobs.park_bound_us, Some(250));
+    }
+
+    #[test]
+    fn knob_builders_compose() {
+        let s = ClusterSpec::preset(Preset::VulcanSb, 2)
+            .with_compute_scale(2.0)
+            .with_legacy_fabric(true)
+            .with_faults(FaultPlan::seeded(7).with_skew(0.1).with_dead(3, 500.0));
+        assert_eq!(s.knobs.compute_scale, 2.0);
+        assert!(s.knobs.legacy_fabric && !s.knobs.legacy_dataplane);
+        let f = s.knobs.fault.as_ref().unwrap();
+        assert_eq!(f.seed, 7);
+        assert_eq!(f.dead, vec![(3, 500.0)]);
     }
 
     #[test]

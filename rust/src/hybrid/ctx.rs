@@ -51,11 +51,14 @@ use crate::analysis::race;
 use crate::analysis::schedule::{Access, CollModel, MsgModel, RankSchedule, StageModel};
 use crate::mpi::comm::UNDEFINED;
 use crate::mpi::env::{opcode, ProcEnv};
+use crate::mpi::fault::{self, RankFailed};
 use crate::mpi::topo::Placement;
 use crate::mpi::{Communicator, Datatype, ReduceOp};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::Arc;
+use std::time::Instant;
 
 /// How many leaders each node contributes to the bridge step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -216,6 +219,85 @@ impl HybridCtx {
             *pops.entry(topo.node_of(w)).or_insert(0) += 1;
         }
         clamp_leaders(requested, pops.values().copied().min().unwrap_or(1))
+    }
+
+    /// ULFM-style `MPI_Comm_shrink` over the session: build a fresh
+    /// session over the parent's *survivors* — every member not in the
+    /// dead registry — preserving survivor rank order and the leader
+    /// policy (the current effective `k`, re-clamped against the shrunken
+    /// node populations).
+    ///
+    /// The old parent's collectives are unusable (a member is dead), so
+    /// agreement runs over the control plane: the lowest survivor
+    /// allocates the new context id, collects every survivor's clock and
+    /// answers with `(id, max clock)` — the arrival-max rule the barrier
+    /// inside `MPI_Comm_split` would have applied — and every survivor
+    /// then charges the Table-2 split law for the shrunken group before
+    /// the new session's own splits run. Collective over the survivors
+    /// only; a registered-dead rank must not call this. Old windows and
+    /// handles on `self` are *not* freed here — rebuild the handles you
+    /// still need with [`HyColl::rebuild`] and abandon the rest.
+    pub fn shrink(self: &Rc<Self>, env: &mut ProcEnv) -> Rc<HybridCtx> {
+        let parent = &self.parent;
+        let survivors: Vec<usize> = parent
+            .members()
+            .iter()
+            .copied()
+            .filter(|&w| !env.state().is_dead(w))
+            .collect();
+        assert!(
+            survivors.len() < parent.size(),
+            "shrink without a registered death on the parent communicator"
+        );
+        let my_rank = survivors
+            .iter()
+            .position(|&w| w == env.world_rank())
+            .expect("a registered-dead rank must not call shrink");
+        let tag = opcode::CTRL_SHRINK;
+        let (id, vmax) = if my_rank == 0 {
+            let id = env.state().alloc_comm_id();
+            let mut vmax = env.vclock();
+            // Directed receives (not ANY_SOURCE): a bounded recv from a
+            // *live* peer re-arms on expiry, whereas ANY_SOURCE would
+            // consult the whole (dead-containing) member list and panic
+            // if a slow survivor outlasted the detection bound.
+            for &w in &survivors[1..] {
+                let src = parent.rank_of_world(w).expect("survivor is a member");
+                let (_, data) = env.oob_recv(parent, Some(src), tag);
+                vmax = vmax.max(f64::from_le_bytes(data[..8].try_into().unwrap()));
+            }
+            let mut reply = Vec::with_capacity(16);
+            reply.extend_from_slice(&id.to_le_bytes());
+            reply.extend_from_slice(&vmax.to_le_bytes());
+            for &w in &survivors[1..] {
+                let dst = parent.rank_of_world(w).expect("survivor is a member");
+                env.oob_send(parent, dst, tag, &reply);
+            }
+            (id, vmax)
+        } else {
+            let root = parent.rank_of_world(survivors[0]).expect("survivor is a member");
+            env.oob_send(parent, root, tag, &env.vclock().to_le_bytes());
+            let (_, data) = env.oob_recv(parent, Some(root), tag);
+            (
+                u64::from_le_bytes(data[..8].try_into().unwrap()),
+                f64::from_le_bytes(data[8..16].try_into().unwrap()),
+            )
+        };
+        let spans = {
+            let topo = env.topo();
+            let node0 = topo.node_of(survivors[0]);
+            survivors.iter().any(|&w| topo.node_of(w) != node0)
+        };
+        // Synchronize to the agreed clock, then charge the split law —
+        // identical on every survivor, so the shrunken session starts
+        // from a common virtual time.
+        let dv = (vmax - env.vclock()).max(0.0);
+        let cost = env.state().mgmt.comm_split_us(survivors.len());
+        env.advance(dv + cost);
+        let shrunk = Communicator::new(id, Arc::new(survivors), my_rank, spans);
+        let policy =
+            if self.k == 1 { LeaderPolicy::Single } else { LeaderPolicy::Leaders(self.k) };
+        HybridCtx::create(env, &shrunk, policy)
     }
 
     // ---- identity ---------------------------------------------------------
@@ -648,6 +730,7 @@ impl HybridCtx {
             policy,
             depth,
             sched,
+            fail_check: None,
         }
     }
 }
@@ -848,6 +931,10 @@ pub struct HyColl {
     depth: usize,
     /// The compiled per-rank stage chain plus its invocation cursor.
     sched: Schedule,
+    /// Armed by a stalled [`HyColl::try_test`] while the dead registry is
+    /// non-empty: polls never park, so detection needs a handle-local
+    /// deadline instead of the bounded-park timeout.
+    fail_check: Option<Instant>,
 }
 
 /// How far one `HyColl::drive` call may go (see the determinism
@@ -933,7 +1020,8 @@ impl HyColl {
                 self.sched.bridge_tag = env.next_coll_tag(&bridge, opc);
             }
         }
-        self.drive(env, Drive::Local, usize::MAX);
+        self.drive(env, Drive::Local, usize::MAX)
+            .expect("Drive::Local never blocks, so it never consults the failure detector");
     }
 
     // ---- start: stage operands (local stores only) ------------------------
@@ -1018,10 +1106,18 @@ impl HyColl {
 
     // ---- split-phase execution: the schedule interpreter ------------------
 
-    /// Execute up to `max` stages under `drive` discipline; `true` iff the
-    /// schedule completed. See [`compile_stages`] for the per-op chains
-    /// and the [`progress`] module docs for the blocking-parity argument.
-    fn drive(&mut self, env: &mut ProcEnv, drive: Drive, max: usize) -> bool {
+    /// Execute up to `max` stages under `drive` discipline; `Ok(true)`
+    /// iff the schedule completed. See [`compile_stages`] for the per-op
+    /// chains and the [`progress`] module docs for the blocking-parity
+    /// argument.
+    ///
+    /// Under a fault plan, blocking stages park with a deadline
+    /// ([`fault::detect_bound`]); on expiry the dead registry is
+    /// consulted — a registered death surfaces as `Err(RankFailed)` (the
+    /// handle stays `started`; recover with [`HybridCtx::shrink`] +
+    /// [`HyColl::rebuild`]), while a clean-but-slow group simply
+    /// re-parks. `Local`/`Poll` drives never block, so they never error.
+    fn drive(&mut self, env: &mut ProcEnv, drive: Drive, max: usize) -> Result<bool, RankFailed> {
         let HyColl {
             ctx,
             op,
@@ -1063,15 +1159,29 @@ impl HyColl {
                 Stage::Await(scope) => {
                     if let Some((group, size)) = resolve_scope(ctx, win, tables, scope, root) {
                         if drive == Drive::Local {
-                            return false;
+                            return Ok(false);
                         }
                         let t = sched.ticket.expect("Await without a matching Arrive");
                         let vmax = if drive == Drive::Block {
-                            group.finish(&t)
+                            if env.state().fault.is_some() {
+                                loop {
+                                    let dl = Instant::now() + fault::detect_bound();
+                                    match group.finish_deadline(&t, dl) {
+                                        Some(v) => break v,
+                                        None => {
+                                            if let Some(r) = env.failed_peer(ctx.parent()) {
+                                                return Err(RankFailed { world_rank: r });
+                                            }
+                                        }
+                                    }
+                                }
+                            } else {
+                                group.finish(&t)
+                            }
                         } else {
                             match group.poll(&t) {
                                 Some(v) => v,
-                                None => return false,
+                                None => return Ok(false),
                             }
                         };
                         sched.ticket = None;
@@ -1082,27 +1192,49 @@ impl HyColl {
                 }
                 Stage::Work { chunk } => {
                     if !work_ready(env, ctx, *op, *depth, drive, root, tables, sched.bridge_tag) {
-                        return false;
+                        return Ok(false);
                     }
-                    exec_work(
-                        env,
-                        ctx,
-                        win,
-                        *op,
-                        chunk,
-                        *depth,
-                        sched.bridge_tag,
-                        count,
-                        *dtype,
-                        *rop,
-                        *method,
-                        root,
-                        param.as_ref(),
-                        tables,
-                        sizeset,
-                        stripes,
-                        vec_stripes,
-                    );
+                    let fault_run = env.state().fault.is_some();
+                    let run = std::panic::AssertUnwindSafe(|| {
+                        exec_work(
+                            env,
+                            ctx,
+                            win,
+                            *op,
+                            chunk,
+                            *depth,
+                            sched.bridge_tag,
+                            count,
+                            *dtype,
+                            *rop,
+                            *method,
+                            root,
+                            param.as_ref(),
+                            tables,
+                            sizeset,
+                            stripes,
+                            vec_stripes,
+                        );
+                    });
+                    if fault_run {
+                        // A work unit's nested pure-MPI traffic (bridge
+                        // chunk streams, bridge/node collectives) signals
+                        // a detected failure by panicking with a typed
+                        // `RankFailed` payload — catch exactly that here
+                        // and turn it into the session layer's recoverable
+                        // error. Anything else is a genuine bug: rethrow.
+                        // Unwind safety: the handle is only reusable after
+                        // a `rebuild`, which replaces every piece of state
+                        // the aborted work unit may have left half-written.
+                        if let Err(payload) = std::panic::catch_unwind(run) {
+                            match payload.downcast::<RankFailed>() {
+                                Ok(rf) => return Err(*rf),
+                                Err(p) => std::panic::resume_unwind(p),
+                            }
+                        }
+                    } else {
+                        run.0();
+                    }
                 }
                 Stage::YellowPost => {
                     win.epoch += 1;
@@ -1112,7 +1244,7 @@ impl HyColl {
                 }
                 Stage::YellowWait => {
                     if drive == Drive::Local {
-                        return false;
+                        return Ok(false);
                     }
                     let target = match sched.yellow_target {
                         Some(t) => t,
@@ -1123,9 +1255,21 @@ impl HyColl {
                         }
                     };
                     if drive == Drive::Block {
-                        env.spin_wait(&win.win, 0, target);
+                        if env.state().fault.is_some() {
+                            loop {
+                                let dl = Instant::now() + fault::detect_bound();
+                                if env.spin_wait_deadline(&win.win, 0, target, dl) {
+                                    break;
+                                }
+                                if let Some(r) = env.failed_peer(ctx.parent()) {
+                                    return Err(RankFailed { world_rank: r });
+                                }
+                            }
+                        } else {
+                            env.spin_wait(&win.win, 0, target);
+                        }
                     } else if !env.spin_try_wait(&win.win, 0, target) {
-                        return false;
+                        return Ok(false);
                     }
                     sched.yellow_target = None;
                 }
@@ -1133,7 +1277,7 @@ impl HyColl {
             sched.next += 1;
             executed += 1;
         }
-        sched.complete()
+        Ok(sched.complete())
     }
 
     // ---- wait/test/progress: completing a started collective --------------
@@ -1145,14 +1289,29 @@ impl HyColl {
     /// allreduce, my reduced block for reduce-scatter, my block for
     /// scatter).
     pub fn wait(&mut self, env: &mut ProcEnv) -> usize {
+        match self.try_wait(env) {
+            Ok(off) => off,
+            Err(e) => panic!("HyColl::wait: {e} (use try_wait + HybridCtx::shrink to recover)"),
+        }
+    }
+
+    /// Fault-aware [`HyColl::wait`]: identical on clean runs (bit- and
+    /// vtime-identical completion), but a peer death detected at a
+    /// bounded park surfaces as `Err(`[`RankFailed`]`)` instead of
+    /// hanging (or panicking, as the plain `wait` does). On error the
+    /// handle stays `started` and must not be waited again — recover by
+    /// [`HybridCtx::shrink`]ing the session and [`HyColl::rebuild`]ing
+    /// the handle on the survivors.
+    pub fn try_wait(&mut self, env: &mut ProcEnv) -> Result<usize, RankFailed> {
         assert!(self.started, "HyColl wait without start");
-        self.drive(env, Drive::Block, usize::MAX);
+        self.drive(env, Drive::Block, usize::MAX)?;
         self.started = false;
+        self.fail_check = None;
         if race::enabled() {
             let op = self.op;
             race::label(move || format!("{op:?} complete (result reads)"));
         }
-        self.result_offset()
+        Ok(self.result_offset())
     }
 
     /// Split-phase completion probe (`MPI_Test` shape): advance every
@@ -1161,12 +1320,55 @@ impl HyColl {
     /// — a further `test`/`wait` without a new `start` panics). Read the
     /// result at [`HyColl::result_offset`] / [`HyColl::result_view`].
     pub fn test(&mut self, env: &mut ProcEnv) -> bool {
+        match self.try_test(env) {
+            Ok(done) => done,
+            Err(e) => panic!("HyColl::test: {e} (use try_test + HybridCtx::shrink to recover)"),
+        }
+    }
+
+    /// Fault-aware [`HyColl::test`]. Polls never park, so the bounded-park
+    /// detector cannot fire here; instead a poll that moves *nothing*
+    /// while the dead registry is non-empty arms a handle-local deadline
+    /// ([`fault::detect_bound`]), and only after that expires — with the
+    /// op still stuck and a parent member registered dead — does the
+    /// death surface as `Err(`[`RankFailed`]`)`. Any progress (or a
+    /// clean registry) re-arms, so a merely slow peer never trips it.
+    pub fn try_test(&mut self, env: &mut ProcEnv) -> Result<bool, RankFailed> {
         assert!(self.started, "HyColl test without start (or after completion)");
-        if self.drive(env, Drive::Poll, usize::MAX) {
+        let before = self.sched.next;
+        if self.drive(env, Drive::Poll, usize::MAX)? {
             self.started = false;
-            true
-        } else {
-            false
+            self.fail_check = None;
+            return Ok(true);
+        }
+        if self.sched.next != before || !env.state().any_dead() {
+            self.fail_check = None;
+            return Ok(false);
+        }
+        match self.fail_check {
+            None => {
+                self.fail_check = Some(Instant::now() + fault::detect_bound());
+                Ok(false)
+            }
+            Some(at) if Instant::now() < at => Ok(false),
+            Some(_) => match env.failed_peer(self.ctx.parent()) {
+                Some(r) => Err(RankFailed { world_rank: r }),
+                None => {
+                    self.fail_check = None;
+                    Ok(false)
+                }
+            },
+        }
+    }
+
+    /// Pre-start probe for fault-injected runs: `Err` if a member of the
+    /// parent communicator is already registered dead — a collective
+    /// started now could never complete, so don't start it. Free on
+    /// clean runs (one relaxed load).
+    pub fn start_ok(&self, env: &ProcEnv) -> Result<(), RankFailed> {
+        match env.failed_peer(self.ctx.parent()) {
+            Some(r) => Err(RankFailed { world_rank: r }),
+            None => Ok(()),
         }
     }
 
@@ -1178,7 +1380,7 @@ impl HyColl {
             return false;
         }
         let before = self.sched.next;
-        self.drive(env, Drive::Poll, usize::MAX);
+        self.drive(env, Drive::Poll, usize::MAX).expect("Drive::Poll never blocks");
         self.sched.next != before
     }
 
@@ -1509,6 +1711,62 @@ impl HyColl {
             win.free(env, &ctx);
         }
     }
+
+    /// Rebuild this handle on a shrunken session — the recovery half of
+    /// [`HybridCtx::shrink`]. Re-runs the matching `*_init` on `new_ctx`
+    /// with the same shape parameters (count, dtype, reduce op, resolved
+    /// method, sync scheme, pipelining depth), producing a fresh window,
+    /// fresh stripe/translation tables and a freshly compiled stage
+    /// schedule over the survivors. A [`RootPolicy::Fixed`] root is
+    /// remapped through world ranks; if the root itself died this panics
+    /// — picking a replacement root is an application decision, not a
+    /// library one.
+    ///
+    /// The old window is abandoned *without* a collective free (the
+    /// ULFM-revoke analogue): the old group can no longer meet to free
+    /// it, so its registry entry is leaked deliberately. Any
+    /// started-but-unfinished invocation is discarded — re-`start` after
+    /// rebuilding and the collective runs on the new group. Collective
+    /// over `new_ctx`'s parent.
+    pub fn rebuild(&mut self, env: &mut ProcEnv, new_ctx: &Rc<HybridCtx>) {
+        let old = self.ctx.parent().clone();
+        let remap = |r: usize| {
+            new_ctx
+                .parent()
+                .rank_of_world(old.world_of(r))
+                .expect("rebuild with a dead fixed root: choose a new root and a new handle")
+        };
+        let policy = match self.policy {
+            RootPolicy::Fixed(r) => RootPolicy::Fixed(remap(r)),
+            RootPolicy::PerStart => RootPolicy::PerStart,
+        };
+        *self = match self.op {
+            HyOp::Allgather => new_ctx.allgather_init(env, self.count, self.scheme),
+            HyOp::Bcast => {
+                new_ctx.bcast_init_split(env, self.count, self.scheme, policy, self.depth)
+            }
+            HyOp::Allreduce => new_ctx.allreduce_init(
+                env,
+                self.dtype,
+                self.rop.expect("allreduce binds an op"),
+                self.count,
+                self.method,
+                self.scheme,
+            ),
+            HyOp::ReduceScatter => new_ctx.reduce_scatter_init(
+                env,
+                self.dtype,
+                self.rop.expect("reduce_scatter binds an op"),
+                self.count,
+                self.method,
+                self.scheme,
+            ),
+            HyOp::Gather => new_ctx.gather_init_split(env, self.count, self.scheme, policy),
+            HyOp::Scatter => {
+                new_ctx.scatter_init_split(env, self.count, self.scheme, policy, self.depth)
+            }
+        };
+    }
 }
 
 impl HyReq for HyColl {
@@ -1526,7 +1784,9 @@ impl HyReq for HyColl {
 
     fn step_blocking(&mut self, env: &mut ProcEnv) {
         if self.started && !self.sched.complete() {
-            self.drive(env, Drive::Block, 1);
+            if let Err(e) = self.drive(env, Drive::Block, 1) {
+                panic!("HyColl::step_blocking: {e} (use try_wait + HybridCtx::shrink to recover)");
+            }
         }
     }
 

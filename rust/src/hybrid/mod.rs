@@ -60,6 +60,19 @@
 //! a [`RootPolicy`] (`Fixed` = the strict `MPI_Bcast_init` shape that
 //! enables root-side bridge pipelining) and, for bcast/scatter, a
 //! pipelining depth that chunks the bridge into per-start sub-steps.
+//!
+//! ## Fault tolerance (DESIGN.md fault model)
+//!
+//! Under a [`FaultPlan`](crate::mpi::FaultPlan) the session degrades
+//! gracefully instead of hanging: blocking completions park with a
+//! deadline and consult the dead-rank registry on expiry, so a peer
+//! death surfaces as `Err(`[`RankFailed`](crate::mpi::RankFailed)`)`
+//! from [`HyColl::try_wait`] / [`HyColl::try_test`] within the
+//! configured detection bound. Recovery is ULFM-shaped:
+//! [`HybridCtx::shrink`] rebuilds the session (leader set, bridge
+//! communicators, stripe tables) over the survivors, and
+//! [`HyColl::rebuild`] re-initializes a handle — including its compiled
+//! stage schedule — on the shrunken session.
 
 pub mod allgather;
 pub mod allreduce;

@@ -72,6 +72,22 @@
 //! matching and window bounds (DESIGN.md §6; the `verify_schedules`
 //! binary sweeps every committed shape in CI).
 //!
+//! ## Fault-aware driving (PR 7)
+//!
+//! Under a [`FaultPlan`](crate::mpi::FaultPlan) every blocking stage
+//! parks with a deadline, so a dead peer surfaces as
+//! `Err(`[`RankFailed`](crate::mpi::RankFailed)`)` from
+//! [`HyColl::try_wait`](super::ctx::HyColl::try_wait) /
+//! [`try_test`](super::ctx::HyColl::try_test) instead of a hang. The
+//! infallible `HyReq` surface stays infallible: `wait`/`test` (and the
+//! [`wait_any`]/[`wait_all`] multiplexers, via `step_blocking`) panic
+//! with the typed error and a recovery hint — callers that want to
+//! *survive* a failure drive the handle through the fallible methods and
+//! recover with [`HybridCtx::shrink`](super::ctx::HybridCtx::shrink) +
+//! [`HyColl::rebuild`](super::ctx::HyColl::rebuild). `progress` and
+//! poll-mode `test` never park, so on clean stalls they simply report no
+//! movement.
+//!
 //! [`ProcEnv::finish_group_barrier`]: crate::mpi::env::ProcEnv::finish_group_barrier
 //! [`ProcEnv::barrier`]: crate::mpi::env::ProcEnv::barrier
 //! [`SyncGroup::arrive`]: crate::mpi::sync::SyncGroup::arrive

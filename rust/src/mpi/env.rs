@@ -16,6 +16,7 @@
 //!   measurements without double-charging message mechanics.
 
 use super::comm::{Communicator, UNDEFINED};
+use super::fault::{self, FaultState};
 use super::msg::{Matcher, Msg};
 use super::net::NetModel;
 use super::pool::{BufPool, Payload, PoolBuf};
@@ -26,6 +27,7 @@ use super::win::SharedWindow;
 use crate::util::Rng;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Collective/control op codes folded into message tags.
 pub mod opcode {
@@ -41,6 +43,11 @@ pub mod opcode {
     pub const SCATTER: i64 = 10;
     pub const REDSCAT: i64 = 11;
     pub const HALO: i64 = 12;
+    /// Survivor agreement during [`HybridCtx::shrink`]
+    /// (crate::hybrid::HybridCtx::shrink). Used as a *raw* control tag —
+    /// [`ProcEnv::next_coll_tag`] values are `≥ 256`, so raw opcodes
+    /// never collide with them.
+    pub const CTRL_SHRINK: i64 = 13;
 }
 
 /// A shared-memory window handle (`MPI_Win` analogue): the shared region
@@ -87,11 +94,17 @@ pub struct ProcEnv {
     /// rebinds around its bridge step so same-node leaders inject on
     /// distinct lanes ([`NetModel::nic_lanes`]).
     nic_lane: usize,
+    /// This rank's derived fault-injection state (skew factor, noise
+    /// stream, death schedule), built from the cluster's
+    /// [`FaultPlan`](super::fault::FaultPlan) at construction. `None` on
+    /// clean runs — every fault hook is then a branch on a dead `Option`.
+    fault: Option<FaultState>,
 }
 
 impl ProcEnv {
     pub fn new(state: Arc<ClusterState>, rank: usize) -> ProcEnv {
         let world = Communicator::world(state.topo.world_size(), rank, state.topo.nnodes() > 1);
+        let fault = state.fault.as_ref().map(|p| p.state_for(rank));
         ProcEnv {
             rank,
             state,
@@ -102,6 +115,7 @@ impl ProcEnv {
             cores: HashMap::new(),
             copied: 0,
             nic_lane: 0,
+            fault,
         }
     }
 
@@ -145,15 +159,20 @@ impl ProcEnv {
         self.vclock
     }
 
-    /// Advance the virtual clock by `us` (modelled local work).
+    /// Advance the virtual clock by `us` (modelled local work), then
+    /// charge any OS-noise pulses the fault plan scheduled inside the
+    /// window the clock just crossed.
     pub fn advance(&mut self, us: f64) {
         debug_assert!(us >= 0.0);
         self.vclock += us;
+        self.fault_tick();
     }
 
-    /// Charge a local compute phase of `us` microseconds.
+    /// Charge a local compute phase of `us` microseconds. Under fault
+    /// injection the charge is stretched by this rank's slowdown factor
+    /// (skew × straggler) — noise pulses land via [`ProcEnv::advance`].
     pub fn compute(&mut self, us: f64) {
-        self.advance(us);
+        self.advance(us * self.fault_slowdown());
     }
 
     /// Run `f` and charge its *thread CPU time* (× the preset's compute
@@ -163,7 +182,8 @@ impl ProcEnv {
         let t0 = thread_cpu_us();
         let r = f();
         let dt = (thread_cpu_us() - t0).max(0.0);
-        self.vclock += dt * self.state.compute_scale;
+        self.vclock += dt * self.state.compute_scale * self.fault_slowdown();
+        self.fault_tick();
         r
     }
 
@@ -227,6 +247,55 @@ impl ProcEnv {
     /// Deterministic per-rank RNG (`salt` distinguishes uses).
     pub fn rng(&self, salt: u64) -> Rng {
         Rng::new((self.rank as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ salt)
+    }
+
+    // ---- fault injection ---------------------------------------------------
+
+    /// This rank's compute slowdown factor under the active fault plan
+    /// (1.0 on clean runs): deterministic per-rank skew draw × any
+    /// straggler factors targeting this rank.
+    pub fn fault_slowdown(&self) -> f64 {
+        self.fault.as_ref().map_or(1.0, |f| f.slowdown)
+    }
+
+    /// Charge every OS-noise pulse scheduled at or before the current
+    /// virtual time. Called from each vclock mutation point; pulses are
+    /// drawn from the plan's per-rank stream keyed off virtual time, so
+    /// the charge is independent of host scheduling (the property the
+    /// determinism tests pin down). Noise only — death is *cooperative*,
+    /// via [`ProcEnv::rank_dead`] checkpoints, so a rank never goes dead
+    /// in the middle of a collective it is still participating in.
+    fn fault_tick(&mut self) {
+        if let Some(f) = &mut self.fault {
+            self.vclock += f.noise_due(self.vclock);
+        }
+    }
+
+    /// Injection checkpoint for the dead-rank mode: true once this rank's
+    /// scheduled death time has passed, in which case the rank is
+    /// registered in the shared dead registry (first call wins) and the
+    /// caller is expected to stop participating — return from its
+    /// closure, post nothing further. Always false on clean runs.
+    pub fn rank_dead(&mut self) -> bool {
+        let Some(f) = &self.fault else { return false };
+        let Some(at) = f.dead_at else { return false };
+        if self.vclock < at {
+            return false;
+        }
+        self.state.mark_dead(self.rank, self.vclock);
+        true
+    }
+
+    /// Lowest-ranked member of `comm` registered in the dead registry
+    /// (by world rank), excluding this rank itself. One relaxed load on
+    /// clean runs. This is the failure-detection consult: a bounded wait
+    /// that expires asks this before deciding between "peer died —
+    /// surface [`fault::RankFailed`]" and "just slow — re-arm".
+    pub fn failed_peer(&self, comm: &Communicator) -> Option<usize> {
+        if !self.state.any_dead() {
+            return None;
+        }
+        comm.members().iter().copied().find(|&w| w != self.rank && self.state.is_dead(w))
     }
 
     // ---- payload pool & copy instrumentation -------------------------------
@@ -342,10 +411,60 @@ impl ProcEnv {
         });
     }
 
+    /// Blocking mailbox receive, bounded under fault injection: on clean
+    /// runs this is the plain (indefinitely parking) fabric receive; with
+    /// a fault plan active each wait round is capped at the detection
+    /// bound, after which the dead registry is consulted. A detected
+    /// failure panics with a typed [`fault::RankFailed`] payload — the
+    /// pure-MPI call surface has no recoverable error path, but the
+    /// hybrid session layer catches exactly this payload inside its work
+    /// stages and converts it to the recoverable `Err(RankFailed)`.
+    ///
+    /// Escalation policy, from strongest evidence to weakest:
+    /// - the directed source (or, `ANY_SOURCE`, any member of `comm`) is
+    ///   registered dead → fail immediately;
+    /// - `data_plane` receives additionally fail on a dead member of
+    ///   `comm` even when directed at a live source — a dead member
+    ///   revokes the whole communicator;
+    /// - `data_plane` receives finally fail after
+    ///   [`fault::CASCADE_ROUNDS`] consecutive expiries while *any* rank
+    ///   anywhere is dead: the expected sender is alive but itself
+    ///   stranded behind the failure (it got its own `RankFailed` and
+    ///   abandoned the op), so no message is ever coming. Control-plane
+    ///   receives never take this branch — the shrink protocol runs its
+    ///   directed recovery traffic while dead ranks are legitimately
+    ///   registered.
+    fn recv_bounded(&self, comm: &Communicator, src: Option<usize>, tag: i64, data_plane: bool) -> Msg {
+        if self.state.fault.is_none() {
+            return self.state.mailboxes[self.rank].recv(Matcher { src, tag, comm: comm.id() });
+        }
+        let mut expiries = 0u32;
+        loop {
+            let deadline = Instant::now() + fault::detect_bound();
+            let m = Matcher { src, tag, comm: comm.id() };
+            if let Some(msg) = self.state.mailboxes[self.rank].recv_deadline(m, deadline) {
+                return msg;
+            }
+            expiries += 1;
+            let failed = match src {
+                Some(s) if self.state.is_dead(comm.world_of(s)) => Some(comm.world_of(s)),
+                Some(_) if data_plane => self.failed_peer(comm),
+                Some(_) => None,
+                None => self.failed_peer(comm),
+            };
+            let cascade = failed.is_none() && data_plane && expiries >= fault::CASCADE_ROUNDS;
+            let failed =
+                failed.or_else(|| cascade.then(|| self.state.dead_ranks().first().copied()).flatten());
+            if let Some(r) = failed {
+                std::panic::panic_any(fault::RankFailed { world_rank: r });
+            }
+        }
+    }
+
     /// Receive into `out` (must be exactly the payload size — collective
     /// internals always know sizes). Returns the source's communicator rank.
     pub fn recv_into(&mut self, comm: &Communicator, src: Option<usize>, tag: i64, out: &mut [u8]) -> usize {
-        let msg = self.state.mailboxes[self.rank].recv(Matcher { src, tag, comm: comm.id() });
+        let msg = self.recv_bounded(comm, src, tag, true);
         assert_eq!(
             msg.data.len(),
             out.len(),
@@ -361,7 +480,7 @@ impl ProcEnv {
     /// Receive the payload itself (zero-copy; the slab returns to its
     /// sender's pool when the returned handle drops).
     pub fn recv_payload(&mut self, comm: &Communicator, src: Option<usize>, tag: i64) -> (usize, Payload) {
-        let msg = self.state.mailboxes[self.rank].recv(Matcher { src, tag, comm: comm.id() });
+        let msg = self.recv_bounded(comm, src, tag, true);
         self.charge_arrival(comm, &msg);
         (msg.src, msg.data)
     }
@@ -385,6 +504,7 @@ impl ProcEnv {
             msg.sent_at + self.state.net.wire_latency(msg.data.len())
         };
         self.vclock = self.vclock.max(arrival) + self.state.net.recv_overhead_us;
+        self.fault_tick();
     }
 
     /// Non-blocking message probe (`MPI_Iprobe`): is a matching message
@@ -430,9 +550,13 @@ impl ProcEnv {
         });
     }
 
-    /// Out-of-band receive (no virtual-time charge).
+    /// Out-of-band receive (no virtual-time charge). Control-plane
+    /// semantics under fault injection: a directed receive fails only if
+    /// *that source* is registered dead — never on deaths elsewhere —
+    /// because the shrink protocol legitimately runs directed recovery
+    /// traffic while the registry is non-empty.
     pub fn oob_recv(&self, comm: &Communicator, src: Option<usize>, tag: i64) -> (usize, Vec<u8>) {
-        let msg = self.state.mailboxes[self.rank].recv(Matcher { src, tag, comm: comm.id() });
+        let msg = self.recv_bounded(comm, src, tag, false);
         (msg.src, msg.data.to_vec())
     }
 
@@ -443,15 +567,51 @@ impl ProcEnv {
     /// barrier over the group (`⌈log2 p⌉` rounds at the group's tier).
     pub fn barrier(&mut self, comm: &Communicator) {
         let g = self.sync_group(comm);
-        let vmax = g.arrive_and_wait(self.vclock);
+        let vmax = if self.state.fault.is_some() {
+            // Bounded completion under fault injection: a peer that died
+            // before arriving would otherwise park this rank forever. The
+            // pure-MPI layers have no recoverable error path, so a
+            // confirmed-dead peer is surfaced as a panic naming it (the
+            // hybrid session layer's typed Err(RankFailed) is the
+            // recoverable route).
+            let t = g.arrive(self.vclock);
+            loop {
+                match g.finish_deadline(&t, Instant::now() + fault::detect_bound()) {
+                    Some(v) => break v,
+                    None => {
+                        if let Some(r) = self.failed_peer(comm) {
+                            std::panic::panic_any(fault::RankFailed { world_rank: r });
+                        }
+                    }
+                }
+            }
+        } else {
+            g.arrive_and_wait(self.vclock)
+        };
         self.vclock = vmax + self.state.net.barrier_cost(comm.size(), comm.spans_nodes());
+        self.fault_tick();
     }
 
     /// Align virtual clocks across a communicator *without* charging any
-    /// cost (harness-internal; not an MPI operation).
+    /// cost (harness-internal; not an MPI operation). Bounded under fault
+    /// injection exactly like [`ProcEnv::barrier`].
     pub fn harness_sync(&mut self, comm: &Communicator) {
         let g = self.sync_group(comm);
-        self.vclock = g.arrive_and_wait(self.vclock);
+        self.vclock = if self.state.fault.is_some() {
+            let t = g.arrive(self.vclock);
+            loop {
+                match g.finish_deadline(&t, Instant::now() + fault::detect_bound()) {
+                    Some(v) => break v,
+                    None => {
+                        if let Some(r) = self.failed_peer(comm) {
+                            std::panic::panic_any(fault::RankFailed { world_rank: r });
+                        }
+                    }
+                }
+            }
+        } else {
+            g.arrive_and_wait(self.vclock)
+        };
     }
 
     /// Complete a split-phase barrier on a private [`SyncGroup`] (the
@@ -463,6 +623,7 @@ impl ProcEnv {
     /// charge is bit-identical to the blocking barrier).
     pub fn finish_group_barrier(&mut self, vmax: f64, size: usize, spans_nodes: bool) {
         self.vclock = (vmax + self.state.net.barrier_cost(size, spans_nodes)).max(self.vclock);
+        self.fault_tick();
     }
 
     // ---- communicator management --------------------------------------------
@@ -616,6 +777,29 @@ impl ProcEnv {
         let release_vt = win.flag(flag).wait_eq(target);
         std::sync::atomic::fence(std::sync::atomic::Ordering::SeqCst);
         self.vclock = self.vclock.max(release_vt) + self.state.net.spin_poll_us;
+    }
+
+    /// Child side of the spinning sync with a hard wall-clock deadline:
+    /// the failure-detection variant of [`ProcEnv::spin_wait`]. On
+    /// success charges exactly what the blocking wait charges; on
+    /// deadline expiry returns `false` with no charge so the caller can
+    /// consult the dead registry and either surface
+    /// [`fault::RankFailed`] or re-arm.
+    pub fn spin_wait_deadline(
+        &mut self,
+        win: &SharedWindow,
+        flag: usize,
+        target: u32,
+        deadline: Instant,
+    ) -> bool {
+        match win.flag(flag).wait_eq_deadline(target, deadline) {
+            Some(release_vt) => {
+                std::sync::atomic::fence(std::sync::atomic::Ordering::SeqCst);
+                self.vclock = self.vclock.max(release_vt) + self.state.net.spin_poll_us;
+                true
+            }
+            None => false,
+        }
     }
 
     /// Non-blocking child-side probe of the spinning sync: one poll

@@ -1,0 +1,322 @@
+//! Deterministic fault injection (ISSUE 7): compute-speed skew, OS-noise
+//! pulses, straggler ranks and scheduled rank death — plus the typed
+//! failure the detection path surfaces.
+//!
+//! Everything here is **seeded and deterministic**: a [`FaultPlan`] is a
+//! pure description (seed + knobs), expanded per rank into a
+//! [`FaultState`] whose draws come from the crate's own
+//! [`Rng`](crate::util::Rng) keyed by `(seed, world rank)`. Because the
+//! per-rank virtual clock evolves deterministically (host scheduling
+//! never reaches it — see DESIGN.md §2), noise pulses keyed off vclock
+//! thresholds land at identical virtual times on every run with the same
+//! seed: same `FaultPlan` ⇒ bitwise-identical results *and* identical
+//! modeled vtime (asserted by `tests/fault.rs`).
+//!
+//! What each knob injects:
+//!
+//! - **skew** — a per-rank compute slowdown factor drawn uniformly in
+//!   `[1, 1 + skew_frac]`, multiplying every [`compute`] charge. Models
+//!   heterogeneous clocks / thermal throttling.
+//! - **noise** — OS jitter: exponentially distributed gaps between
+//!   pulses, exponentially distributed pulse lengths, charged to vtime
+//!   whenever the rank's clock crosses the next pulse threshold. Models
+//!   daemons/interrupts stealing cycles (the classic "OS noise"
+//!   literature's model).
+//! - **stragglers** — explicit per-rank slowdown factors stacked on top
+//!   of the drawn skew. Models a persistently slow node.
+//! - **dead** — the headline: `(world rank, vtime µs)` pairs. Death is
+//!   **cooperative**: it takes effect at the next *injection checkpoint*
+//!   ([`ProcEnv::rank_dead`](crate::mpi::env::ProcEnv::rank_dead)), the
+//!   way a SIGKILL between collectives would — the rank registers itself
+//!   in the cluster-wide dead registry and stops responding (returns from
+//!   its closure). Peers blocked on it time out after
+//!   [`detect_bound`] of wall clock, consult the registry, and surface
+//!   [`RankFailed`] instead of hanging forever. A run with *no* dead
+//!   ranks can never spuriously fail: a timeout with an empty registry
+//!   just re-arms the wait.
+//!
+//! Not modeled (DESIGN.md §7): silent data corruption, byzantine
+//! behavior, network partitions, deaths *inside* a bridge transfer
+//! (checkpoints sit at collective boundaries), or deaths racing with an
+//! in-progress [`shrink`](crate::hybrid::HybridCtx::shrink).
+//!
+//! [`compute`]: crate::mpi::env::ProcEnv::compute
+//! [`detect_bound`]: detect_bound
+
+use crate::util::Rng;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Default failure-detection bound (wall-clock µs): how long a bounded
+/// wait may stall before consulting the dead registry. Generous enough
+/// that a healthy but heavily loaded host never trips it between two
+/// registry checks (the check is cheap and the wait re-arms).
+pub const DEFAULT_DETECT_BOUND_US: u64 = 20_000;
+
+/// Process-global detection bound, set by
+/// [`SimCluster::run`](crate::coordinator::SimCluster::run) from the
+/// spec's [`FaultPlan`] (mirrors `PARK_BOUND_US` in [`super::sync`]).
+static DETECT_BOUND_US: AtomicU64 = AtomicU64::new(DEFAULT_DETECT_BOUND_US);
+
+/// Install the detection bound for subsequent bounded waits.
+pub fn set_detect_bound_us(us: u64) {
+    DETECT_BOUND_US.store(us.max(1), Ordering::Relaxed);
+}
+
+/// The current failure-detection bound as a [`Duration`].
+pub fn detect_bound() -> Duration {
+    Duration::from_micros(DETECT_BOUND_US.load(Ordering::Relaxed))
+}
+
+/// Consecutive detection-bound expiries after which a *data-plane*
+/// receive directed at a live source gives up anyway, provided some rank
+/// anywhere is registered dead: the sender is then presumed stranded
+/// behind that failure (it surfaced its own [`RankFailed`] and abandoned
+/// the operation), so the expected message is never coming. The factor
+/// keeps the two-tier policy safe: a direct failure is detected in one
+/// bound, while the cascade escape needs `CASCADE_ROUNDS` bounds of
+/// *continuous* silence — post-shrink steady state (registry permanently
+/// non-empty) never accumulates that on a healthy host, because any
+/// delivery resets the count.
+pub(crate) const CASCADE_ROUNDS: u32 = 25;
+
+/// The typed failure surfaced by the detection path: a peer of the
+/// operation's communicator died (registered in the cluster dead
+/// registry) and the wait's detection bound expired.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RankFailed {
+    /// World rank of the (lowest-numbered) failed peer.
+    pub world_rank: usize,
+}
+
+impl fmt::Display for RankFailed {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "rank {} failed (dead registry, detection bound expired)", self.world_rank)
+    }
+}
+
+impl std::error::Error for RankFailed {}
+
+/// OS-noise configuration: exponentially distributed pulse gaps and
+/// lengths (both means in µs of virtual time).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NoiseCfg {
+    /// Mean virtual time between pulse starts.
+    pub mean_gap_us: f64,
+    /// Mean pulse length charged to vtime.
+    pub mean_pulse_us: f64,
+}
+
+/// A deterministic, seedable fault-injection plan. Attach one to a
+/// [`ClusterSpec`](crate::coordinator::ClusterSpec) via
+/// [`with_faults`](crate::coordinator::ClusterSpec::with_faults); the
+/// engine expands it per rank at thread spawn.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Master seed; per-rank draws are keyed by `(seed, world rank)`.
+    pub seed: u64,
+    /// Per-rank compute slowdown drawn uniformly in `[1, 1 + skew_frac]`
+    /// (0 = no skew).
+    pub skew_frac: f64,
+    /// OS-noise pulses charged to vtime.
+    pub noise: Option<NoiseCfg>,
+    /// Designated stragglers: `(world rank, slowdown factor ≥ 1)`.
+    pub stragglers: Vec<(usize, f64)>,
+    /// Scheduled deaths: `(world rank, vtime µs)` — the rank stops
+    /// responding at its first injection checkpoint at or after that
+    /// virtual time.
+    pub dead: Vec<(usize, f64)>,
+    /// Wall-clock failure-detection bound in µs (see [`detect_bound`]).
+    pub detect_bound_us: u64,
+}
+
+impl FaultPlan {
+    /// An empty plan under `seed`: no skew, no noise, nobody slow, nobody
+    /// dies. Chain the `with_*` builders to arm it.
+    pub fn seeded(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            skew_frac: 0.0,
+            noise: None,
+            stragglers: Vec::new(),
+            dead: Vec::new(),
+            detect_bound_us: DEFAULT_DETECT_BOUND_US,
+        }
+    }
+
+    /// Draw every rank's compute slowdown uniformly in `[1, 1 + frac]`.
+    pub fn with_skew(mut self, frac: f64) -> FaultPlan {
+        assert!(frac >= 0.0, "skew fraction must be non-negative");
+        self.skew_frac = frac;
+        self
+    }
+
+    /// Charge exponential OS-noise pulses (`mean_gap_us` between starts,
+    /// `mean_pulse_us` long) to every rank's vtime.
+    pub fn with_noise(mut self, mean_gap_us: f64, mean_pulse_us: f64) -> FaultPlan {
+        assert!(mean_gap_us > 0.0 && mean_pulse_us > 0.0, "noise means must be positive");
+        self.noise = Some(NoiseCfg { mean_gap_us, mean_pulse_us });
+        self
+    }
+
+    /// Mark `world_rank` a straggler: all its compute charges multiply by
+    /// `factor` (≥ 1), stacked on the drawn skew.
+    pub fn with_straggler(mut self, world_rank: usize, factor: f64) -> FaultPlan {
+        assert!(factor >= 1.0, "straggler factor must be >= 1");
+        self.stragglers.push((world_rank, factor));
+        self
+    }
+
+    /// Schedule `world_rank` to die at virtual time `at_us`.
+    pub fn with_dead(mut self, world_rank: usize, at_us: f64) -> FaultPlan {
+        self.dead.push((world_rank, at_us));
+        self
+    }
+
+    /// Override the wall-clock failure-detection bound.
+    pub fn with_detect_bound_us(mut self, us: u64) -> FaultPlan {
+        self.detect_bound_us = us.max(1);
+        self
+    }
+
+    /// Expand the plan into one rank's runtime state.
+    pub(crate) fn state_for(&self, world_rank: usize) -> FaultState {
+        // Per-rank stream: mix the rank into the seed so neighboring
+        // ranks draw independent skews/noise trains.
+        let mut rng = Rng::new(self.seed ^ (world_rank as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut slowdown = if self.skew_frac > 0.0 { 1.0 + self.skew_frac * rng.f64() } else { 1.0 };
+        for &(r, f) in &self.stragglers {
+            if r == world_rank {
+                slowdown *= f;
+            }
+        }
+        let noise = self.noise.map(|cfg| {
+            let mut ns = NoiseState { cfg, rng: rng.clone(), next_at: 0.0 };
+            ns.next_at = exp_draw(&mut ns.rng, cfg.mean_gap_us);
+            ns
+        });
+        let dead_at = self
+            .dead
+            .iter()
+            .filter(|&&(r, _)| r == world_rank)
+            .map(|&(_, at)| at)
+            .fold(None, |acc: Option<f64>, at| Some(acc.map_or(at, |a| a.min(at))));
+        FaultState { slowdown, noise, dead_at }
+    }
+}
+
+/// Exponential draw with the given mean (inverse-CDF; `1 - u` keeps the
+/// argument of `ln` strictly positive since `u ∈ [0, 1)`).
+fn exp_draw(rng: &mut Rng, mean: f64) -> f64 {
+    -mean * (1.0 - rng.f64()).ln()
+}
+
+/// Rolling noise-pulse generator: pulse `i` starts when the rank's
+/// vclock first crosses `next_at`.
+#[derive(Clone, Debug)]
+struct NoiseState {
+    cfg: NoiseCfg,
+    rng: Rng,
+    next_at: f64,
+}
+
+/// One rank's expanded fault state (private to the MPI substrate; the
+/// public face is [`ProcEnv::rank_dead`] /
+/// [`ProcEnv::failed_peer`]).
+///
+/// [`ProcEnv::rank_dead`]: crate::mpi::env::ProcEnv::rank_dead
+/// [`ProcEnv::failed_peer`]: crate::mpi::env::ProcEnv::failed_peer
+#[derive(Clone, Debug)]
+pub(crate) struct FaultState {
+    /// Combined skew × straggler compute multiplier (≥ 1).
+    pub(crate) slowdown: f64,
+    noise: Option<NoiseState>,
+    /// Scheduled death vtime, if any.
+    pub(crate) dead_at: Option<f64>,
+}
+
+impl FaultState {
+    /// Extra virtual time to charge for noise pulses whose start
+    /// thresholds `vclock` has crossed. Charging the pulse advances the
+    /// clock, which may cross further thresholds — the loop settles
+    /// because gaps are strictly positive.
+    pub(crate) fn noise_due(&mut self, vclock: f64) -> f64 {
+        let Some(ns) = self.noise.as_mut() else { return 0.0 };
+        let mut extra = 0.0;
+        while vclock + extra >= ns.next_at {
+            extra += exp_draw(&mut ns.rng, ns.cfg.mean_pulse_us);
+            ns.next_at += exp_draw(&mut ns.rng, ns.cfg.mean_gap_us);
+        }
+        extra
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_inert() {
+        let st = FaultPlan::seeded(1).state_for(3);
+        assert_eq!(st.slowdown, 1.0);
+        assert!(st.dead_at.is_none());
+        let mut st = st;
+        assert_eq!(st.noise_due(1e9), 0.0);
+    }
+
+    #[test]
+    fn skew_draws_are_deterministic_and_bounded() {
+        let plan = FaultPlan::seeded(42).with_skew(0.25);
+        for r in 0..16 {
+            let a = plan.state_for(r).slowdown;
+            let b = plan.state_for(r).slowdown;
+            assert_eq!(a, b, "rank {r} draw must be reproducible");
+            assert!((1.0..=1.25).contains(&a), "rank {r} slowdown {a}");
+        }
+        // Different ranks draw different skews (w.h.p. for 16 draws).
+        let distinct: std::collections::BTreeSet<u64> =
+            (0..16).map(|r| plan.state_for(r).slowdown.to_bits()).collect();
+        assert!(distinct.len() > 8);
+    }
+
+    #[test]
+    fn stragglers_stack_on_skew() {
+        let plan = FaultPlan::seeded(7).with_straggler(2, 4.0);
+        assert_eq!(plan.state_for(2).slowdown, 4.0);
+        assert_eq!(plan.state_for(1).slowdown, 1.0);
+    }
+
+    #[test]
+    fn noise_pulses_are_deterministic_and_positive() {
+        let plan = FaultPlan::seeded(9).with_noise(100.0, 5.0);
+        let mut a = plan.state_for(0);
+        let mut b = plan.state_for(0);
+        let mut va = 0.0;
+        let mut vb = 0.0;
+        let mut charged = 0.0;
+        for step in 0..200 {
+            let da = a.noise_due(va);
+            let db = b.noise_due(vb);
+            assert_eq!(da, db, "step {step}");
+            assert!(da >= 0.0);
+            charged += da;
+            va += 37.0 + da;
+            vb += 37.0 + db;
+        }
+        assert!(charged > 0.0, "noise must fire over 200 × 37 us of vtime");
+    }
+
+    #[test]
+    fn earliest_death_wins() {
+        let plan = FaultPlan::seeded(1).with_dead(5, 900.0).with_dead(5, 300.0);
+        assert_eq!(plan.state_for(5).dead_at, Some(300.0));
+        assert_eq!(plan.state_for(4).dead_at, None);
+    }
+
+    #[test]
+    fn rank_failed_displays_the_rank() {
+        let e = RankFailed { world_rank: 11 };
+        assert!(e.to_string().contains("rank 11"));
+    }
+}

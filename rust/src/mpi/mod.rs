@@ -22,6 +22,7 @@
 pub mod comm;
 pub mod datatype;
 pub mod env;
+pub mod fault;
 pub mod msg;
 pub mod net;
 pub mod op;
@@ -34,6 +35,8 @@ pub mod win;
 pub use comm::Communicator;
 pub use datatype::Datatype;
 pub use env::ProcEnv;
+pub use fault::{FaultPlan, NoiseCfg, RankFailed};
+pub use state::Knobs;
 pub use net::NetModel;
 pub use op::ReduceOp;
 pub use pool::{BufPool, Payload, PoolBuf};

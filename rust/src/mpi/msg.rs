@@ -320,6 +320,66 @@ impl Fabric {
         }
     }
 
+    /// [`Fabric::recv`] with a hard wall-clock deadline: `None` once
+    /// `deadline` passes without a match (failure detection — a receive
+    /// whose source died must not park forever). Every individual bell
+    /// wait is already bounded by the park timeout, so checking the
+    /// deadline between wait rounds bounds total blocking to
+    /// `deadline + park_bound`.
+    fn recv_deadline(&self, m: Matcher, deadline: std::time::Instant) -> Option<Msg> {
+        match m.src {
+            Some(src) => {
+                let lane = &self.lanes[src % LANES];
+                let mut scanned = 0usize;
+                loop {
+                    let epoch = lane.bell.epoch();
+                    let mut pending = lane.pending.lock().unwrap();
+                    lane.drain_into(&mut pending);
+                    if let Some(pos) =
+                        pending.iter().skip(scanned).position(|(_, msg)| m.matches(msg))
+                    {
+                        let (_, msg) = pending.remove(scanned + pos).unwrap();
+                        drop(pending);
+                        lane.taken.fetch_add(1, Ordering::Relaxed);
+                        return Some(msg);
+                    }
+                    scanned = pending.len();
+                    drop(pending);
+                    if std::time::Instant::now() >= deadline {
+                        return None;
+                    }
+                    lane.bell.wait_change(epoch);
+                }
+            }
+            None => loop {
+                let epoch = self.summary.epoch();
+                let mut best: Option<(u64, usize, usize)> = None;
+                for (li, lane) in self.lanes.iter().enumerate() {
+                    let mut pending = lane.pending.lock().unwrap();
+                    lane.drain_into(&mut pending);
+                    for (idx, (t, msg)) in pending.iter().enumerate() {
+                        if m.matches(msg) {
+                            if best.map_or(true, |(bt, _, _)| *t < bt) {
+                                best = Some((*t, li, idx));
+                            }
+                            break;
+                        }
+                    }
+                }
+                if let Some((_, li, idx)) = best {
+                    let lane = &self.lanes[li];
+                    let (_, msg) = lane.pending.lock().unwrap().remove(idx).unwrap();
+                    lane.taken.fetch_add(1, Ordering::Relaxed);
+                    return Some(msg);
+                }
+                if std::time::Instant::now() >= deadline {
+                    return None;
+                }
+                self.summary.wait_change(epoch);
+            },
+        }
+    }
+
     /// Matched-source receive: touches exactly one lane. The scanned
     /// prefix resumes across wakeups (only the owner removes messages and
     /// drains only append, so a scanned prefix can never start matching
@@ -436,6 +496,25 @@ impl LegacyQueue {
         }
     }
 
+    /// [`LegacyQueue::recv`] with a hard wall-clock deadline (condvar
+    /// timed waits); `None` on expiry without a match.
+    fn recv_deadline(&self, m: Matcher, deadline: std::time::Instant) -> Option<Msg> {
+        let mut q = self.q.lock().unwrap();
+        let mut scanned = 0usize;
+        loop {
+            if let Some(pos) = q.iter().skip(scanned).position(|msg| m.matches(msg)) {
+                return Some(q.remove(scanned + pos).unwrap());
+            }
+            scanned = q.len();
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _timeout) = self.cv.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+    }
+
     fn probe(&self, m: Matcher) -> bool {
         self.q.lock().unwrap().iter().any(|msg| m.matches(msg))
     }
@@ -507,6 +586,17 @@ impl Mailbox {
         match &self.inner {
             Transport::Fabric(f) => f.recv(m),
             Transport::Legacy(l) => l.recv(m),
+        }
+    }
+
+    /// [`Mailbox::recv`] with a hard wall-clock deadline: `Some(msg)` on
+    /// a match, `None` once `deadline` passes without one. The
+    /// fault-injection layer's receive path — the caller consults the
+    /// dead registry on `None` and either re-arms or surfaces the failure.
+    pub fn recv_deadline(&self, m: Matcher, deadline: std::time::Instant) -> Option<Msg> {
+        match &self.inner {
+            Transport::Fabric(f) => f.recv_deadline(m, deadline),
+            Transport::Legacy(l) => l.recv_deadline(m, deadline),
         }
     }
 
@@ -691,6 +781,28 @@ mod tests {
         mb.post(msg(2, 5, 0, 42));
         assert_eq!(h.join().unwrap(), 42);
         assert_eq!(mb.depth(), 100);
+    }
+
+    #[test]
+    fn recv_deadline_times_out_then_matches() {
+        both(|mb| {
+            let m = Matcher { src: Some(1), tag: 7, comm: 0 };
+            let start = std::time::Instant::now();
+            let deadline = start + std::time::Duration::from_millis(20);
+            assert!(mb.recv_deadline(m, deadline).is_none());
+            assert!(start.elapsed() >= std::time::Duration::from_millis(20));
+            mb.post(msg(1, 7, 0, 0x5A));
+            let far = std::time::Instant::now() + std::time::Duration::from_secs(5);
+            assert_eq!(mb.recv_deadline(m, far).unwrap().data[0], 0x5A);
+            // ANY_SOURCE flavor times out and matches too.
+            let any = Matcher { src: None, tag: 8, comm: 0 };
+            assert!(mb
+                .recv_deadline(any, std::time::Instant::now() + std::time::Duration::from_millis(10))
+                .is_none());
+            mb.post(msg(3, 8, 0, 0x6B));
+            let far = std::time::Instant::now() + std::time::Duration::from_secs(5);
+            assert_eq!(mb.recv_deadline(any, far).unwrap().data[0], 0x6B);
+        });
     }
 
     #[test]

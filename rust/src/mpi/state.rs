@@ -1,5 +1,6 @@
 //! Process-global cluster state shared by all rank threads.
 
+use super::fault::FaultPlan;
 use super::msg::Mailbox;
 use super::net::NetModel;
 use super::pool::BufPool;
@@ -7,8 +8,45 @@ use super::sync::SyncGroup;
 use super::topo::Topology;
 use super::win::SharedWindow;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Behavioral knobs of a simulated cluster, gathered in one place so
+/// call sites ([`crate::coordinator::spec::ClusterSpec`], tests,
+/// benches) stop churning every time a new mode is added. Construct
+/// with `Knobs::default()` and set what you need; `ClusterSpec`'s
+/// chainable `with_*` builders delegate here.
+#[derive(Clone, Debug)]
+pub struct Knobs {
+    /// Multiplier from measured host CPU time to charged virtual
+    /// compute time (maps this host's core to the paper's testbed core).
+    pub compute_scale: f64,
+    /// Emulate the pre-refactor allocating data plane (see
+    /// [`ClusterState::legacy_dataplane`]).
+    pub legacy_dataplane: bool,
+    /// Emulate the pre-PR3 mutex+condvar message fabric (see
+    /// [`ClusterState::legacy_fabric`]).
+    pub legacy_fabric: bool,
+    /// Override for the bounded-park doorbell timeout in µs
+    /// ([`crate::mpi::sync::set_park_bound_us`]); `None` keeps the
+    /// default.
+    pub park_bound_us: Option<u64>,
+    /// Deterministic fault-injection plan (skew, noise, stragglers,
+    /// dead ranks); `None` runs clean.
+    pub fault: Option<FaultPlan>,
+}
+
+impl Default for Knobs {
+    fn default() -> Knobs {
+        Knobs {
+            compute_scale: 1.0,
+            legacy_dataplane: false,
+            legacy_fabric: false,
+            park_bound_us: None,
+            fault: None,
+        }
+    }
+}
 
 
 /// Calibrated one-off management costs (Table 2 of the paper). These are
@@ -188,7 +226,21 @@ pub struct ClusterState {
     /// identical in both modes; only wall-clock differs (`bench_all`
     /// measures the gap).
     pub legacy_fabric: bool,
+    /// The active fault-injection plan, if any. Per-rank derived state
+    /// (skew factor, noise stream, death schedule) lives on `ProcEnv`;
+    /// this is the shared source of truth ranks derive it from.
+    pub fault: Option<FaultPlan>,
     pub traffic: TrafficCounters,
+    /// Dead-rank registry: `dead[r]` is 0 while world rank `r` is alive,
+    /// else `1 + vclock_bits` of the moment it died. A rank marks itself
+    /// dead cooperatively (at an injection checkpoint); waiters consult
+    /// the registry after a bounded park expires to turn an indefinite
+    /// hang into a typed [`super::fault::RankFailed`] error.
+    dead: Vec<AtomicU64>,
+    /// Fast path for the failure check on clean runs: flipped once by the
+    /// first death, so `failed_peer` scans cost one relaxed load until
+    /// something actually dies.
+    any_dead: AtomicBool,
     next_comm_id: AtomicU64,
     /// Per-node, per-lane NIC busy-until (f64 bits), laid out
     /// `node * nic_lanes + lane`: inter-node sends of a node serialize on
@@ -203,19 +255,18 @@ pub struct ClusterState {
 
 impl ClusterState {
     pub fn new(topo: Topology, net: NetModel, mgmt: MgmtCosts, compute_scale: f64) -> Arc<ClusterState> {
-        Self::with_options(topo, net, mgmt, compute_scale, false, false)
+        Self::with_knobs(topo, net, mgmt, Knobs { compute_scale, ..Knobs::default() })
     }
 
-    /// [`ClusterState::new`] with the data-plane and fabric modes made
-    /// explicit.
-    pub fn with_options(
+    /// [`ClusterState::new`] with every behavioral knob made explicit.
+    pub fn with_knobs(
         topo: Topology,
         net: NetModel,
         mgmt: MgmtCosts,
-        compute_scale: f64,
-        legacy_dataplane: bool,
-        legacy_fabric: bool,
+        knobs: Knobs,
     ) -> Arc<ClusterState> {
+        let Knobs { compute_scale, legacy_dataplane, legacy_fabric, park_bound_us: _, fault } =
+            knobs;
         let world = topo.world_size();
         let nnodes = topo.nnodes();
         let nic_cells = nnodes * net.nic_lanes.max(1);
@@ -228,11 +279,43 @@ impl ClusterState {
             pools: (0..world).map(|_| Arc::new(BufPool::new(legacy_dataplane))).collect(),
             legacy_dataplane,
             legacy_fabric,
+            fault,
             traffic: TrafficCounters::default(),
+            dead: (0..world).map(|_| AtomicU64::new(0)).collect(),
+            any_dead: AtomicBool::new(false),
             next_comm_id: AtomicU64::new(1), // 0 = world
             nic_busy: (0..nic_cells).map(|_| AtomicU64::new(0)).collect(),
             cores: Mutex::new(HashMap::new()),
         })
+    }
+
+    /// Record that world rank `rank` died at virtual time `at` (µs).
+    /// Idempotent: the first marking wins. Called by the dying rank
+    /// itself at an injection checkpoint
+    /// ([`crate::mpi::env::ProcEnv::rank_dead`]).
+    pub fn mark_dead(&self, rank: usize, at: f64) {
+        let enc = 1 + at.max(0.0).to_bits();
+        let _ = self.dead[rank].compare_exchange(0, enc, Ordering::AcqRel, Ordering::Acquire);
+        self.any_dead.store(true, Ordering::Release);
+    }
+
+    /// Is world rank `rank` registered dead?
+    pub fn is_dead(&self, rank: usize) -> bool {
+        self.any_dead.load(Ordering::Acquire) && self.dead[rank].load(Ordering::Acquire) != 0
+    }
+
+    /// Every world rank currently registered dead, ascending.
+    pub fn dead_ranks(&self) -> Vec<usize> {
+        if !self.any_dead.load(Ordering::Acquire) {
+            return Vec::new();
+        }
+        (0..self.dead.len()).filter(|&r| self.dead[r].load(Ordering::Acquire) != 0).collect()
+    }
+
+    /// True once any rank has been registered dead (one relaxed-ish load;
+    /// the fast path for failure checks on clean runs).
+    pub fn any_dead(&self) -> bool {
+        self.any_dead.load(Ordering::Acquire)
     }
 
     /// Allocate a globally-unique communicator id (root of a split calls
@@ -373,6 +456,28 @@ mod tests {
         // Another node is independent too.
         let d = s.reserve_nic(1, 0, 0.0, 1000);
         assert!((d - dur).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dead_registry_marks_once_and_lists() {
+        let s = state();
+        assert!(!s.any_dead());
+        assert!(s.dead_ranks().is_empty());
+        s.mark_dead(3, 120.5);
+        s.mark_dead(3, 999.0); // second marking is a no-op
+        s.mark_dead(6, 40.0);
+        assert!(s.any_dead());
+        assert!(s.is_dead(3) && s.is_dead(6));
+        assert!(!s.is_dead(0));
+        assert_eq!(s.dead_ranks(), vec![3, 6]);
+    }
+
+    #[test]
+    fn knobs_default_is_clean() {
+        let k = Knobs::default();
+        assert_eq!(k.compute_scale, 1.0);
+        assert!(!k.legacy_dataplane && !k.legacy_fabric);
+        assert!(k.park_bound_us.is_none() && k.fault.is_none());
     }
 
     #[test]

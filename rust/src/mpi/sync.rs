@@ -23,7 +23,7 @@
 use crate::analysis::race;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Process-unique identities for [`SyncGroup`]s and [`SpinFlag`]s so the
 /// happens-before race detector ([`crate::analysis::race`]) can key its
@@ -360,6 +360,47 @@ impl SyncGroup {
             f64::from_bits(self.released[gen & 1].load(Ordering::Acquire))
         }
     }
+
+    /// [`SyncGroup::finish`] with a hard wall-clock deadline: spin →
+    /// yield → park as usual, but give up and return `None` once
+    /// `deadline` passes without the generation releasing. This is the
+    /// failure-detection hook — before it, a waiter whose peer died
+    /// re-parked forever (only the individual parks were bounded, not
+    /// logical progress). On `None` the arrival ticket stays valid: the
+    /// caller can consult the dead registry and either surface a
+    /// [`crate::mpi::fault::RankFailed`] or re-arm the deadline and keep
+    /// waiting. The race-detector join fires only on success.
+    pub fn finish_deadline(&self, t: &BarrierTicket, deadline: Instant) -> Option<f64> {
+        if let Some(v) = t.immediate {
+            return Some(v);
+        }
+        let gen = t.gen;
+        let (spin, yld) = (spin_budget(), yield_budget());
+        let mut tries = 0u32;
+        let mut registered = false;
+        while self.generation.load(Ordering::Acquire) == gen {
+            tries += 1;
+            if tries < spin {
+                std::hint::spin_loop();
+            } else if tries < spin + yld {
+                std::thread::yield_now();
+            } else {
+                if Instant::now() >= deadline {
+                    return None;
+                }
+                if !registered {
+                    self.sleepers.lock().unwrap().push(std::thread::current());
+                    registered = true;
+                    if self.generation.load(Ordering::Acquire) != gen {
+                        break;
+                    }
+                }
+                std::thread::park_timeout(park_bound());
+            }
+        }
+        race::on_barrier_finish(self.id, gen);
+        Some(f64::from_bits(self.released[gen & 1].load(Ordering::Acquire)))
+    }
 }
 
 /// The paper's spinning status flag (§4.5): leader increments, children
@@ -429,6 +470,33 @@ impl SpinFlag {
         }
         race::on_flag_acquire(self.id);
         f64::from_bits(self.release_vtime.load(Ordering::Acquire))
+    }
+
+    /// [`SpinFlag::wait_eq`] with a hard wall-clock deadline: `None` once
+    /// `deadline` passes without the status reaching `target`. The
+    /// failure-detection counterpart of
+    /// [`SyncGroup::finish_deadline`] for the yellow-sync path — a child
+    /// polling a flag whose posting leader died otherwise micro-sleeps
+    /// forever. The race-detector acquire fires only on success; on
+    /// `None` the caller may consult the dead registry and re-arm.
+    pub fn wait_eq_deadline(&self, target: u32, deadline: Instant) -> Option<f64> {
+        let (spin, yld) = (spin_budget(), yield_budget());
+        let mut tries = 0u32;
+        while self.status.load(Ordering::Acquire) < target {
+            tries += 1;
+            if tries < spin {
+                std::hint::spin_loop();
+            } else if tries < spin + yld {
+                std::thread::yield_now();
+            } else {
+                if Instant::now() >= deadline {
+                    return None;
+                }
+                std::thread::sleep(Duration::from_micros(50));
+            }
+        }
+        race::on_flag_acquire(self.id);
+        Some(f64::from_bits(self.release_vtime.load(Ordering::Acquire)))
     }
 
     /// Non-blocking probe of [`SpinFlag::wait_eq`]: `Some(release_vtime)`
@@ -643,6 +711,45 @@ mod tests {
         let auto = Duration::from_micros(budgets().park_us);
         assert!(auto >= Duration::from_micros(500) && auto <= Duration::from_millis(2));
         assert!(park_bound() >= Duration::from_micros(1), "bound must be non-trivial");
+    }
+
+    #[test]
+    fn finish_deadline_times_out_then_succeeds_after_release() {
+        let g = Arc::new(SyncGroup::new(2));
+        let t = g.arrive(1.0);
+        // Nobody else arrives: the bounded wait must give up, not hang.
+        let start = Instant::now();
+        assert!(g.finish_deadline(&t, start + Duration::from_millis(20)).is_none());
+        assert!(start.elapsed() >= Duration::from_millis(20));
+        // Ticket stays valid: once the peer arrives, re-arming succeeds.
+        let g2 = g.clone();
+        let h = std::thread::spawn(move || g2.arrive_and_wait(9.0));
+        let v = loop {
+            if let Some(v) = g.finish_deadline(&t, Instant::now() + Duration::from_millis(50)) {
+                break v;
+            }
+        };
+        assert_eq!(v, 9.0);
+        assert_eq!(h.join().unwrap(), 9.0);
+    }
+
+    #[test]
+    fn finish_deadline_immediate_ticket_ignores_deadline() {
+        let g = SyncGroup::new(1);
+        let t = g.arrive(3.25);
+        // Already-released (single-member) tickets complete even with a
+        // deadline in the past.
+        assert_eq!(g.finish_deadline(&t, Instant::now() - Duration::from_secs(1)), Some(3.25));
+    }
+
+    #[test]
+    fn wait_eq_deadline_times_out_then_sees_post() {
+        let f = Arc::new(SpinFlag::new());
+        let start = Instant::now();
+        assert!(f.wait_eq_deadline(1, start + Duration::from_millis(20)).is_none());
+        assert!(start.elapsed() >= Duration::from_millis(20));
+        f.post(77.0);
+        assert_eq!(f.wait_eq_deadline(1, Instant::now() + Duration::from_secs(1)), Some(77.0));
     }
 
     #[test]

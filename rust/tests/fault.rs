@@ -1,0 +1,296 @@
+//! Integration tests for the ISSUE-7 fault-injection layer and the
+//! self-healing session surface:
+//!
+//! - **determinism** — the same [`FaultPlan`] seed yields bitwise-
+//!   identical collective results *and* bit-equal per-rank virtual
+//!   clocks on an irregular shape, for both §4.5 sync schemes at
+//!   k ∈ {1, 2}; faults perturb timing, never bytes.
+//! - **detection** — a rank dying mid-steady-state surfaces as
+//!   `Err(RankFailed)` naming the victim on every survivor (blocking
+//!   `try_wait` and polling `try_test` paths both), instead of hanging.
+//! - **recovery** — survivors shrink the session, rebuild the handle,
+//!   and the post-shrink hybrid result is bit-identical to a pure-MPI
+//!   reference on the shrunken communicator; the rebuilt schedules pass
+//!   the static verifier and cover exactly the survivor set. Killing a
+//!   non-root leader (k = 1 and k = 2) and a non-leader child are both
+//!   exercised, and [`PlanCache::purge_failed`] drops the doomed
+//!   world-communicator plans on the way.
+
+use hympi::analysis::{verify_survivors, RankSchedule};
+use hympi::coll::{Flavor, PlanCache};
+use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
+use hympi::hybrid::{AllreduceMethod, HybridCtx, LeaderPolicy, SyncScheme};
+use hympi::mpi::{Datatype, FaultPlan, ReduceOp};
+use hympi::util::to_bytes;
+
+fn spec(nodes: &[usize]) -> ClusterSpec {
+    let mut s = ClusterSpec::preset(Preset::VulcanSb, nodes.len());
+    s.nodes = nodes.to_vec();
+    s
+}
+
+const COUNT: usize = 512; // allreduce payload bytes (64 f64 elements)
+const ITERS: usize = 6;
+
+/// The chaos workload: persistent-handle allreduce rounds against fixed
+/// modeled compute. Returns (result digest, final vclock) per rank —
+/// the pair the determinism tests compare bit-for-bit.
+fn chaos_workload(
+    nodes: &'static [usize],
+    plan: Option<FaultPlan>,
+    scheme: SyncScheme,
+    k: usize,
+) -> (Vec<Vec<u8>>, Vec<f64>) {
+    let s = match plan {
+        Some(p) => spec(nodes).with_faults(p),
+        None => spec(nodes),
+    };
+    let rep = SimCluster::new(s).run(move |env| {
+        let w = env.world();
+        let eff = HybridCtx::effective_leaders(env, &w, k);
+        let policy = if eff == 1 { LeaderPolicy::Single } else { LeaderPolicy::Leaders(eff) };
+        let ctx = HybridCtx::create(env, &w, policy);
+        let mut h = ctx.allreduce_init(
+            env,
+            Datatype::F64,
+            ReduceOp::Sum,
+            COUNT,
+            AllreduceMethod::Method1,
+            scheme,
+        );
+        let vals: Vec<f64> = (0..COUNT / 8).map(|i| ((w.rank() + 1) * (i + 1)) as f64).collect();
+        let operand = to_bytes(&vals).to_vec();
+        let mut digest = Vec::new();
+        for _ in 0..ITERS {
+            env.compute(50.0); // scaled by skew/straggler, noise ticks on top
+            h.start_allreduce(env, &operand);
+            h.wait(env);
+            let view = h.result_view(COUNT).expect("hybrid handles are window-backed");
+            digest.extend_from_slice(view);
+        }
+        env.barrier(&w);
+        h.free(env);
+        digest
+    });
+    (rep.outputs, rep.vtimes)
+}
+
+/// Same seed ⇒ bitwise-identical results and bit-equal vtimes; faults
+/// never change result bytes relative to a clean run; noise strictly
+/// stretches modeled time.
+#[test]
+fn same_seed_is_bitwise_reproducible() {
+    let nodes: &'static [usize] = &[5, 3]; // irregular
+    let plan = || {
+        FaultPlan::seeded(0xDE7E_C7)
+            .with_skew(0.25)
+            .with_noise(100.0, 10.0)
+            .with_straggler(3, 4.0)
+    };
+    for scheme in [SyncScheme::Barrier, SyncScheme::Spin] {
+        for k in [1usize, 2] {
+            let (clean_out, clean_vt) = chaos_workload(nodes, None, scheme, k);
+            let (a_out, a_vt) = chaos_workload(nodes, Some(plan()), scheme, k);
+            let (b_out, b_vt) = chaos_workload(nodes, Some(plan()), scheme, k);
+            assert_eq!(a_out, b_out, "{scheme:?} k{k}: same seed, same bytes");
+            for (r, (va, vb)) in a_vt.iter().zip(b_vt.iter()).enumerate() {
+                assert_eq!(
+                    va.to_bits(),
+                    vb.to_bits(),
+                    "{scheme:?} k{k}: rank {r} vtime must be bit-equal across runs"
+                );
+            }
+            assert_eq!(a_out, clean_out, "{scheme:?} k{k}: faults must never change results");
+            let clean_max = clean_vt.iter().copied().fold(0.0, f64::max);
+            let fault_max = a_vt.iter().copied().fold(0.0, f64::max);
+            assert!(
+                fault_max > clean_max,
+                "{scheme:?} k{k}: skew+noise+straggler must stretch modeled time \
+                 ({fault_max} vs clean {clean_max})"
+            );
+        }
+    }
+}
+
+/// Run the kill scenario without recovery: every survivor must get
+/// `Err(RankFailed)` naming the victim from the blocking wait path.
+fn no_hang_case(nodes: &'static [usize], victim: usize, k: usize) {
+    let plan = FaultPlan::seeded(7).with_dead(victim, 0.0).with_detect_bound_us(2_000);
+    let rep = SimCluster::new(spec(nodes).with_faults(plan)).run(move |env| {
+        let w = env.world();
+        let eff = HybridCtx::effective_leaders(env, &w, k);
+        let policy = if eff == 1 { LeaderPolicy::Single } else { LeaderPolicy::Leaders(eff) };
+        let ctx = HybridCtx::create(env, &w, policy);
+        let mut h = ctx.allreduce_init(
+            env,
+            Datatype::F64,
+            ReduceOp::Sum,
+            COUNT,
+            AllreduceMethod::Method1,
+            SyncScheme::Barrier,
+        );
+        let operand = vec![w.rank() as u8; COUNT];
+        let mut it = 0usize;
+        while it < ITERS {
+            if it >= 2 && env.rank_dead() {
+                return None; // the victim stops participating here
+            }
+            h.start_allreduce(env, &operand);
+            match h.try_wait(env) {
+                Ok(_) => it += 1,
+                Err(e) => return Some(e.world_rank),
+            }
+        }
+        panic!("rank {}: the kill at iteration 2 must abort the loop", w.rank());
+    });
+    for (r, out) in rep.outputs.iter().enumerate() {
+        match out {
+            None => assert_eq!(r, victim, "only the victim returns dead"),
+            Some(named) => {
+                assert_eq!(*named, victim, "rank {r} must name the victim in RankFailed");
+            }
+        }
+    }
+}
+
+/// A dead non-root leader: its node's members starve at the red sync,
+/// the peer node's leader dies inside the bridge recv (typed panic,
+/// caught by the work stage) — everyone still gets the typed error.
+#[test]
+fn dead_leader_surfaces_rank_failed_on_every_survivor() {
+    no_hang_case(&[5, 3], 5, 1);
+}
+
+/// A dead non-leader child: nobody's direct peer died — node-1 members
+/// starve at the red sync and node 0's leader is stranded behind an
+/// alive-but-stuck bridge peer, which only the cascade escape resolves.
+#[test]
+fn dead_child_surfaces_rank_failed_on_every_survivor() {
+    no_hang_case(&[5, 3], 7, 1);
+}
+
+/// The polling completion path: `try_test` never parks, so detection
+/// rides the handle-local deadline armed when a poll makes no progress
+/// while the registry is non-empty.
+#[test]
+fn try_test_poll_path_detects_death() {
+    let nodes: &'static [usize] = &[6]; // single node: pure Await/Yellow stalls
+    let victim = 3usize;
+    let plan = FaultPlan::seeded(11).with_dead(victim, 0.0).with_detect_bound_us(2_000);
+    let rep = SimCluster::new(spec(nodes).with_faults(plan)).run(move |env| {
+        let w = env.world();
+        let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+        let mut h = ctx.allgather_init(env, 64, SyncScheme::Spin);
+        let mine = vec![w.rank() as u8; 64];
+        if env.rank_dead() {
+            return None;
+        }
+        h.start_allgather(env, &mine);
+        loop {
+            match h.try_test(env) {
+                Ok(true) => panic!("rank {}: cannot complete without the victim", w.rank()),
+                Ok(false) => env.compute(5.0), // overlap compute between polls
+                Err(e) => return Some(e.world_rank),
+            }
+        }
+    });
+    for (r, out) in rep.outputs.iter().enumerate() {
+        match out {
+            None => assert_eq!(r, victim),
+            Some(named) => assert_eq!(*named, victim, "rank {r} must name the victim"),
+        }
+    }
+}
+
+/// Kill → detect → purge → shrink → rebuild → verify: the full recovery
+/// path. Post-shrink hybrid allreduce must match a pure-MPI reference on
+/// the shrunken communicator bit-for-bit, and the rebuilt schedules must
+/// verify clean over exactly the survivor set.
+fn shrink_case(nodes: &'static [usize], victim: usize, k: usize) {
+    let world: usize = nodes.iter().sum();
+    let plan = FaultPlan::seeded(23).with_dead(victim, 0.0).with_detect_bound_us(2_000);
+    let rep = SimCluster::new(spec(nodes).with_faults(plan)).run(move |env| {
+        let w = env.world();
+        let eff = HybridCtx::effective_leaders(env, &w, k);
+        let policy = if eff == 1 { LeaderPolicy::Single } else { LeaderPolicy::Leaders(eff) };
+        let mut ctx = HybridCtx::create(env, &w, policy);
+        let mut h = ctx.allreduce_init(
+            env,
+            Datatype::F64,
+            ReduceOp::Sum,
+            COUNT,
+            AllreduceMethod::Method1,
+            SyncScheme::Barrier,
+        );
+        let vals: Vec<f64> = (0..COUNT / 8).map(|i| ((w.rank() + 1) * (i + 1)) as f64).collect();
+        let operand = to_bytes(&vals).to_vec();
+        // A cached pure plan on the doomed world communicator: the
+        // recovery path must purge it.
+        let mut cache = PlanCache::new();
+        let contrib = vec![w.rank() as u8; 16];
+        let mut ag = vec![0u8; 16 * w.size()];
+        cache.allgather(env, &w, Flavor::Pure, &contrib, Some(&mut ag));
+        let mut it = 0usize;
+        let mut shrunk = false;
+        while it < ITERS {
+            if it >= 2 && env.rank_dead() {
+                return None; // the victim dies at the iteration-2 boundary
+            }
+            h.start_allreduce(env, &operand);
+            match h.try_wait(env) {
+                Ok(_) => it += 1,
+                Err(e) => {
+                    assert!(!shrunk, "one death, one recovery");
+                    assert_eq!(e.world_rank, victim);
+                    assert!(
+                        cache.purge_failed(env) >= 1,
+                        "the world-communicator plan must be purged"
+                    );
+                    ctx = ctx.shrink(env);
+                    h.rebuild(env, &ctx);
+                    shrunk = true;
+                    // retry the same iteration on the shrunken session
+                }
+            }
+        }
+        assert!(shrunk, "rank {}: the kill must have been observed", w.rank());
+        // Post-shrink parity: the handle's result vs a pure-MPI
+        // allreduce on the shrunken communicator, bit-for-bit.
+        let hy = h.result_view(COUNT).expect("window-backed").to_vec();
+        let mut pure = operand.clone();
+        cache.allreduce(env, ctx.parent(), Flavor::Pure, Datatype::F64, ReduceOp::Sum, &mut pure);
+        assert_eq!(hy, pure, "post-shrink hybrid result must match pure MPI on the survivors");
+        let sched = h.export_schedule(0);
+        env.barrier(ctx.parent());
+        h.free(env);
+        cache.free(env);
+        Some(sched)
+    });
+    let set: Vec<RankSchedule> = rep.outputs.into_iter().flatten().collect();
+    assert_eq!(set.len(), world - 1, "every survivor exports a rebuilt schedule");
+    let survivors: Vec<usize> = (0..world - 1).collect(); // shrunken-comm numbering
+    let diags = verify_survivors(&set, &survivors);
+    assert!(diags.is_empty(), "rebuilt schedules must verify clean, got: {diags:?}");
+}
+
+/// Kill the last node's primary leader at k = 1: the shrink rebuilds the
+/// leader set and both bridge endpoints.
+#[test]
+fn shrink_after_dead_leader_k1() {
+    shrink_case(&[5, 3], 5, 1);
+}
+
+/// Kill the same leader at k = 2: the surviving secondary leader and the
+/// remaining child re-form a two-leader node.
+#[test]
+fn shrink_after_dead_leader_k2() {
+    shrink_case(&[5, 3], 5, 2);
+}
+
+/// Kill a non-leader child: no bridge endpoint dies, detection rides the
+/// red-sync starvation and the cascade escape, and the shrink drops one
+/// window slot.
+#[test]
+fn shrink_after_dead_child_k1() {
+    shrink_case(&[5, 3], 7, 1);
+}
