@@ -156,6 +156,11 @@ pub enum Diagnostic {
     /// survivor ranks (a dead rank still exports, or a survivor is
     /// missing from the rebuilt session).
     SurvivorSetMismatch { expected: Vec<usize>, got: Vec<usize> },
+    /// A rebuilt fixed-root schedule still names a root that is not a
+    /// live member of the shrunken communicator — the root died and the
+    /// rebuild neither remapped nor re-elected it
+    /// ([`RootPolicy::Reelect`](crate::hybrid::RootPolicy::Reelect)).
+    DeadRootRetained { rank: usize, root: usize },
     /// The cross-rank dependency graph has a cycle (or events stranded
     /// behind one); `blocked` names the first few stuck events.
     Deadlock { blocked: Vec<String> },
@@ -208,6 +213,11 @@ impl fmt::Display for Diagnostic {
             Diagnostic::SurvivorSetMismatch { expected, got } => write!(
                 f,
                 "post-shrink schedules cover ranks {got:?} but the survivor set is {expected:?}"
+            ),
+            Diagnostic::DeadRootRetained { rank, root } => write!(
+                f,
+                "rank {rank}: rebuilt fixed-root schedule names root {root}, \
+                 not a live member of the shrunken communicator"
             ),
             Diagnostic::Deadlock { blocked } => {
                 write!(f, "dependency cycle — blocked events: {}", blocked.join("; "))
@@ -272,9 +282,12 @@ pub fn verify_handle(ranks: &[RankSchedule]) -> Vec<Diagnostic> {
 /// Verify a *post-shrink* handle: the full [`verify_handle`] pass plus a
 /// coverage check that the exported schedules come from exactly the
 /// expected survivor ranks — no dead rank still exporting, no survivor
-/// dropped by the rebuilt session. `expected` is in the shrunken comm's
-/// rank numbering (0..survivors), the same numbering
-/// [`RankSchedule::rank`] carries after a
+/// dropped by the rebuilt session — and a **live-root check**: every
+/// rooted schedule must name a root that is itself an expected survivor
+/// (a dead fixed root the rebuild failed to remap or re-elect surfaces
+/// as [`Diagnostic::DeadRootRetained`]). `expected` is in the shrunken
+/// comm's rank numbering (0..survivors), the same numbering
+/// [`RankSchedule::rank`] and [`RankSchedule::root`] carry after a
 /// [`HyColl::rebuild`](crate::hybrid::HyColl::rebuild).
 pub fn verify_survivors(ranks: &[RankSchedule], expected: &[usize]) -> Vec<Diagnostic> {
     let mut got: Vec<usize> = ranks.iter().map(|s| s.rank).collect();
@@ -286,6 +299,13 @@ pub fn verify_survivors(ranks: &[RankSchedule], expected: &[usize]) -> Vec<Diagn
     let mut out = Vec::new();
     if got != want {
         out.push(Diagnostic::SurvivorSetMismatch { expected: want, got });
+    }
+    for s in ranks {
+        if let Some(r) = s.root {
+            if !want.contains(&r) {
+                out.push(Diagnostic::DeadRootRetained { rank: s.rank, root: r });
+            }
+        }
     }
     out.extend(verify_handle(ranks));
     out
@@ -869,6 +889,27 @@ mod tests {
             )),
             "got: {diags:?}"
         );
+    }
+
+    #[test]
+    fn dead_root_retained_is_flagged() {
+        // Mutation: a rebuilt rooted handle whose schedules still name
+        // the pre-shrink root (rank 5 — not a survivor) must be flagged;
+        // the same set with the root remapped onto a survivor is clean.
+        let mut s = two_rank_clean();
+        for r in &mut s {
+            r.root = Some(5);
+        }
+        let diags = verify_survivors(&s, &[0, 1]);
+        assert!(
+            diags.iter().any(|d| matches!(d, Diagnostic::DeadRootRetained { root: 5, .. })),
+            "got: {diags:?}"
+        );
+        for r in &mut s {
+            r.root = Some(0);
+        }
+        let diags = verify_survivors(&s, &[0, 1]);
+        assert!(diags.is_empty(), "expected clean after remap, got: {diags:?}");
     }
 
     #[test]

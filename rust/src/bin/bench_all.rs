@@ -29,21 +29,37 @@
 //! `HybridCtx::shrink` + `HyColl::rebuild`. Lands in
 //! `BENCH_PR7.chaos.json`.
 //!
+//! PR 8 adds a **recovery matrix** (`--chaos-recovery`): kernel-shaped
+//! drills (SUMMA panel broadcasts, the Poisson residual allreduce)
+//! driven end-to-end by the self-healing retry driver
+//! (`HybridCtx::run_resilient`) under seeded deaths — a dead fixed
+//! root re-elected through `RootPolicy::Reelect`, a shrink-coordinator
+//! death mid-agreement (restarting the epoch-tagged round), and two
+//! overlapping deaths — each reporting the per-epoch
+//! detect/shrink/rebuild vtime breakdown. The detection-cost model's
+//! charges are asserted nonzero for every scenario. Lands in
+//! `BENCH_PR8.recovery.json`; the `--chaos` dead-leader runs now ride
+//! the same driver and report epochs + detection vtime too.
+//!
 //! ```text
-//! cargo run --release --bin bench_all              # full sweep, writes BENCH_PR5.json
-//! cargo run --release --bin bench_all -- --smoke   # CI-sized sweep (same pipeline)
-//! cargo run --release --bin bench_all -- --strict  # exit non-zero below the speedup targets
-//! cargo run --release --bin bench_all -- --out P   # alternate output path
-//! cargo run --release --bin bench_all -- --chaos   # fault-injection sweep only
+//! cargo run --release --bin bench_all                      # full sweep, writes BENCH_PR5.json
+//! cargo run --release --bin bench_all -- --smoke           # CI-sized sweep (same pipeline)
+//! cargo run --release --bin bench_all -- --strict          # exit non-zero below the speedup targets
+//! cargo run --release --bin bench_all -- --out P           # alternate output path
+//! cargo run --release --bin bench_all -- --chaos           # fault-injection sweep only
+//! cargo run --release --bin bench_all -- --chaos-recovery  # run_resilient recovery matrix
 //! ```
 
 use hympi::coll::{CollOp, Flavor, PlanCache};
 use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
 use hympi::figures::common::{drive_report, overlap_probe};
-use hympi::hybrid::{AllreduceMethod, HybridCtx, LeaderPolicy, SyncScheme};
-use hympi::kernels::poisson::{run as poisson_run, PoissonCfg};
-use hympi::kernels::summa::{run as summa_run, SummaCfg};
-use hympi::kernels::{Backend, Variant};
+use hympi::hybrid::{
+    AllreduceMethod, EpochReport, HybridCtx, LeaderPolicy, Resilience, RetryPolicy, RootPolicy,
+    SyncScheme,
+};
+use hympi::kernels::poisson::{recovery_drill as poisson_recovery_drill, run as poisson_run, PoissonCfg};
+use hympi::kernels::summa::{recovery_drill as summa_recovery_drill, run as summa_run, SummaCfg};
+use hympi::kernels::{Backend, DrillOutcome, Variant};
 use hympi::mpi::env::ProcEnv;
 use hympi::mpi::{Datatype, FaultPlan, ReduceOp};
 use hympi::util::to_bytes;
@@ -366,11 +382,16 @@ struct ChaosCase {
 }
 
 /// One dead-rank recovery measurement: kill + detect + shrink + rebuild +
-/// finish on the survivors.
+/// finish on the survivors, driven by `HybridCtx::run_resilient`.
 struct DeadCase {
     scheme: SyncScheme,
     k: usize,
     victim: usize,
+    /// Max recovery epochs any survivor ran.
+    epochs: usize,
+    /// Max per-survivor detection vtime charged by the fault plan's
+    /// detection-cost model (nonzero is asserted).
+    detect_us: f64,
     modeled_us: f64,
     wall_ms: f64,
 }
@@ -424,10 +445,13 @@ fn chaos_run(spec: ClusterSpec, scheme: SyncScheme, k: usize, iters: usize, coun
     (rep.max_vtime_us(), first)
 }
 
-/// The recovery scenario: the last node's primary leader dies at the
-/// iteration-2 boundary; survivors detect (`Err(RankFailed)` from
-/// `try_wait`), shrink, rebuild the handle and finish all `iters`
-/// rounds. Panics if any survivor fails to complete.
+/// The recovery scenario: the last node's primary leader dies mid-run;
+/// survivors run the whole workload through the self-healing retry
+/// driver (`HybridCtx::run_resilient`: detect → purge → shrink →
+/// rebuild → restart) and finish all `iters` rounds, with the
+/// detection cost charged to virtual time. Returns (makespan, worst
+/// per-survivor epoch count, worst per-survivor detection vtime).
+/// Panics if any survivor fails to complete.
 fn chaos_dead_run(
     spec: ClusterSpec,
     scheme: SyncScheme,
@@ -435,13 +459,13 @@ fn chaos_dead_run(
     iters: usize,
     count: usize,
     victim: usize,
-) -> f64 {
+) -> (f64, usize, f64) {
     let plan = FaultPlan::seeded(CHAOS_SEED).with_dead(victim, 0.0).with_detect_bound_us(2_000);
     let rep = SimCluster::new(spec.with_faults(plan)).run(move |env| {
         let w = env.world();
         let eff = HybridCtx::effective_leaders(env, &w, k);
         let policy = if eff == 1 { LeaderPolicy::Single } else { LeaderPolicy::Leaders(eff) };
-        let mut ctx = HybridCtx::create(env, &w, policy);
+        let ctx = HybridCtx::create(env, &w, policy);
         let mut h = ctx.allreduce_init(
             env,
             Datatype::F64,
@@ -452,35 +476,52 @@ fn chaos_dead_run(
         );
         let vals: Vec<f64> = (0..count / 8).map(|i| ((w.rank() + 1) * (i + 1)) as f64).collect();
         let operand = to_bytes(&vals).to_vec();
+        // Persists across epochs: completed rounds are not redone — the
+        // driver restarts the attempt, which resumes at `it` (safe for
+        // allreduce: no rank can complete a round a survivor is missing
+        // from, so survivors stay in lockstep).
         let mut it = 0usize;
-        while it < iters {
-            // The injection checkpoint sits at the iteration boundary —
-            // gated so the victim completes two clean rounds first.
-            if it >= 2 && env.rank_dead() {
-                return false;
-            }
-            env.compute(50.0);
-            h.start_allreduce(env, &operand);
-            match h.try_wait(env) {
-                Ok(_) => it += 1,
-                Err(_) => {
-                    ctx = ctx.shrink(env);
-                    h.rebuild(env, &ctx);
-                    // retry the same iteration on the shrunken session
+        let out = ctx.run_resilient(
+            env,
+            &mut [&mut h],
+            None,
+            RetryPolicy::default(),
+            |env, _cx, hs| {
+                while it < iters {
+                    if env.rank_dead() {
+                        return Ok(None);
+                    }
+                    env.compute(50.0);
+                    hs[0].start_allreduce(env, &operand);
+                    hs[0].try_wait(env)?;
+                    it += 1;
                 }
+                Ok(Some(it))
+            },
+        );
+        match out {
+            Resilience::Completed { ctx: fin, epochs, .. } => {
+                env.barrier(fin.parent());
+                h.free(env);
+                let detect: f64 = epochs.iter().map(|e| e.detect_us).sum();
+                Some((epochs.len(), detect))
+            }
+            Resilience::Died => None,
+            Resilience::Exhausted { last, .. } => {
+                panic!("chaos dead-leader run exhausted its retry budget: {last}")
             }
         }
-        env.barrier(ctx.parent());
-        h.free(env);
-        true
     });
-    let finished = rep.outputs.iter().filter(|&&ok| ok).count();
+    let survivors: Vec<(usize, f64)> = rep.outputs.iter().filter_map(|o| *o).collect();
     assert_eq!(
-        finished,
+        survivors.len(),
         rep.outputs.len() - 1,
-        "every survivor must recover and finish; only the victim returns early"
+        "every survivor must recover and finish; only the victim retires early"
     );
-    rep.max_vtime_us()
+    let epochs = survivors.iter().map(|&(e, _)| e).max().unwrap_or(0);
+    let detect = survivors.iter().map(|&(_, d)| d).fold(0.0, f64::max);
+    assert!(detect > 0.0, "recovery must charge nonzero detection vtime");
+    (rep.max_vtime_us(), epochs, detect)
 }
 
 /// The full chaos sweep: scheme × k × scenario grid plus a dead-rank
@@ -543,12 +584,13 @@ fn run_chaos(smoke: bool, out: &str) {
                 sweep.push(case);
             }
             let t0 = Instant::now();
-            let vt = chaos_dead_run(spec.clone(), scheme, k, iters, count, victim);
+            let (vt, epochs, detect_us) = chaos_dead_run(spec.clone(), scheme, k, iters, count, victim);
             let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
             println!(
-                "chaos {scheme:>7?} k{k} dead-leader   modeled {vt:>12.2} us | recovered | wall {wall_ms:>7.1} ms"
+                "chaos {scheme:>7?} k{k} dead-leader   modeled {vt:>12.2} us | {epochs} epoch(s), \
+                 detect {detect_us:>9.1} us | wall {wall_ms:>7.1} ms"
             );
-            dead.push(DeadCase { scheme, k, victim, modeled_us: vt, wall_ms });
+            dead.push(DeadCase { scheme, k, victim, epochs, detect_us, modeled_us: vt, wall_ms });
         }
     }
     // Which configuration tolerates faults best: lowest worst-case
@@ -586,8 +628,9 @@ fn write_chaos_json(
         "  \"note\": \"sweep: persistent-handle allreduce rounds under deterministic fault \
          injection (FaultPlan); degradation = modeled vtime over the same configuration's clean \
          run; result digests are asserted bit-identical across scenarios. dead: the last node's \
-         primary leader dies mid-run; survivors detect via Err(RankFailed), recover via \
-         HybridCtx::shrink + HyColl::rebuild and finish every round (asserted).\",\n",
+         primary leader dies mid-run; survivors recover through HybridCtx::run_resilient (detect \
+         -> purge -> shrink -> rebuild -> restart) and finish every round (asserted); detect_us \
+         is the detection-cost model's vtime charge (asserted nonzero).\",\n",
     );
     s.push_str("  \"sweep\": [\n");
     for (i, c) in sweep.iter().enumerate() {
@@ -606,11 +649,14 @@ fn write_chaos_json(
     s.push_str("  \"dead\": [\n");
     for (i, c) in dead.iter().enumerate() {
         s.push_str(&format!(
-            "    {{\"scheme\": \"{:?}\", \"k\": {}, \"victim\": {}, \"modeled_us\": {:.3}, \
-             \"recovered\": true, \"wall_ms\": {:.3}}}{}\n",
+            "    {{\"scheme\": \"{:?}\", \"k\": {}, \"victim\": {}, \"epochs\": {}, \
+             \"detect_us\": {:.3}, \"modeled_us\": {:.3}, \"recovered\": true, \
+             \"wall_ms\": {:.3}}}{}\n",
             c.scheme,
             c.k,
             c.victim,
+            c.epochs,
+            c.detect_us,
             c.modeled_us,
             c.wall_ms,
             if i + 1 < dead.len() { "," } else { "" }
@@ -622,6 +668,252 @@ fn write_chaos_json(
         best.0, best.1, best.2
     ));
     s.push_str("}\n");
+    std::fs::write(path, s).unwrap_or_else(|e| panic!("write {path}: {e}"));
+    println!("wrote {path}");
+}
+
+// ---- recovery matrix (PR 8: the self-healing retry driver) ----------------
+
+/// One `--chaos-recovery` scenario: a kernel-shaped drill run to
+/// completion through `HybridCtx::run_resilient` under seeded deaths.
+struct RecoveryCase {
+    scenario: &'static str,
+    workload: &'static str,
+    world: usize,
+    survivors: usize,
+    /// Max recovery epochs any survivor ran.
+    epochs: usize,
+    /// Max across survivors of the per-rank vtime charged by the
+    /// detection-cost model, summed over its epochs (nonzero asserted —
+    /// the ISSUE-8 acceptance gate).
+    detect_us: f64,
+    shrink_us: f64,
+    rebuild_us: f64,
+    modeled_us: f64,
+    wall_ms: f64,
+    /// Per-epoch breakdown from the survivor that ran the most epochs.
+    breakdown: Vec<EpochReport>,
+}
+
+/// Validate a drill's outcomes and fold them into a [`RecoveryCase`]:
+/// exactly `expected_dead` casualties, checksum agreement across every
+/// finishing rank, at least one recovery epoch, nonzero detection vtime.
+fn recovery_case(
+    scenario: &'static str,
+    workload: &'static str,
+    world: usize,
+    expected_dead: usize,
+    modeled_us: f64,
+    outs: &[DrillOutcome],
+    wall_ms: f64,
+) -> RecoveryCase {
+    let finished: Vec<&DrillOutcome> = outs.iter().filter(|o| o.finished).collect();
+    assert_eq!(
+        finished.len(),
+        world - expected_dead,
+        "{scenario}: every survivor must complete the drill"
+    );
+    let c0 = finished[0].checksum;
+    assert!(
+        finished.iter().all(|o| (o.checksum - c0).abs() < 1e-9),
+        "{scenario}: survivors must agree bitwise on the drill checksum"
+    );
+    let per_rank_max = |f: fn(&EpochReport) -> f64| {
+        finished.iter().map(|o| o.epochs.iter().map(f).sum::<f64>()).fold(0.0, f64::max)
+    };
+    let detect_us = per_rank_max(|e| e.detect_us);
+    assert!(detect_us > 0.0, "{scenario}: recovery must charge nonzero detection vtime");
+    let epochs = finished.iter().map(|o| o.epochs.len()).max().unwrap_or(0);
+    assert!(epochs >= 1, "{scenario}: at least one recovery epoch must run");
+    let breakdown =
+        finished.iter().max_by_key(|o| o.epochs.len()).map(|o| o.epochs.clone()).unwrap_or_default();
+    let case = RecoveryCase {
+        scenario,
+        workload,
+        world,
+        survivors: finished.len(),
+        epochs,
+        detect_us,
+        shrink_us: per_rank_max(|e| e.shrink_us),
+        rebuild_us: per_rank_max(|e| e.rebuild_us),
+        modeled_us,
+        wall_ms,
+        breakdown,
+    };
+    println!(
+        "recovery {:<16} [{}] {}->{} ranks | {} epoch(s) | detect {:>9.1} us, shrink {:>9.1} us, \
+         rebuild {:>9.1} us | modeled {:>12.2} us | wall {:>7.1} ms",
+        case.scenario,
+        case.workload,
+        case.world,
+        case.survivors,
+        case.epochs,
+        case.detect_us,
+        case.shrink_us,
+        case.rebuild_us,
+        case.modeled_us,
+        case.wall_ms
+    );
+    case
+}
+
+/// The `--chaos-recovery` scenario matrix (ISSUE 8): kernel drills
+/// driven end-to-end by `HybridCtx::run_resilient` under seeded
+/// deaths — a dead fixed root (re-elected), a shrink-coordinator death
+/// mid-agreement, two overlapping deaths, and the Poisson residual
+/// loop. Every scenario must complete on the survivors with nonzero
+/// charged detection vtime and bitwise-agreeing checksums.
+fn run_chaos_recovery(smoke: bool, out: &str) {
+    let spec = chaos_spec(smoke);
+    let world = spec.world_size();
+    let (phases, panel) = if smoke { (6, 4096) } else { (8, 16 * 1024) };
+    let victim = world - spec.nodes.last().copied().expect("spec has nodes");
+    // Detection charges (DETECT_COST vus per modeled round) dominate the
+    // drills' collective + compute vtime, so vtime-scheduled deaths land
+    // at chosen driver checkpoints (the tests/fault.rs technique): the
+    // trigger victim dies at a phase boundary early in the steady state
+    // (every phase charges >= 500 vus of modeled compute, so vclock
+    // crosses 1_200 by phase 2), and the shrink coordinator's death time
+    // sits above every pre-failure phase clock but below the first
+    // post-detection clock — it retires *inside* the recovery path,
+    // mid-agreement, and the survivors must restart the round under the
+    // next coordinator.
+    const DETECT_COST: f64 = 20_000.0;
+    const TRIGGER_AT: f64 = 1_200.0;
+    let base = || {
+        FaultPlan::seeded(CHAOS_SEED).with_detect_bound_us(2_000).with_detect_cost_us(DETECT_COST)
+    };
+    let mut cases: Vec<RecoveryCase> = Vec::new();
+
+    // 1. A fixed-root broadcast whose root dies mid-steady-state: the
+    //    handle's Reelect hook must move the root to a live survivor
+    //    (same node preferred) and the drill finishes from there.
+    let t0 = Instant::now();
+    let (vt, outs) = summa_recovery_drill(
+        spec.clone().with_faults(base().with_dead(victim, TRIGGER_AT)),
+        phases,
+        panel,
+        RootPolicy::reelect(victim),
+    );
+    cases.push(recovery_case(
+        "dead-root",
+        "summa-panel-bcast",
+        world,
+        1,
+        vt,
+        &outs,
+        t0.elapsed().as_secs_f64() * 1e3,
+    ));
+
+    // 2. The shrink coordinator (rank 0, the lowest survivor) dies
+    //    mid-agreement: its death clock lands after the survivors'
+    //    first detection charge, so it retires inside the recovery path
+    //    and the epoch-tagged round restarts under rank 1.
+    let t0 = Instant::now();
+    let (vt, outs) = summa_recovery_drill(
+        spec.clone()
+            .with_faults(base().with_dead(victim, TRIGGER_AT).with_dead(0, DETECT_COST / 2.0)),
+        phases,
+        panel,
+        RootPolicy::PerStart,
+    );
+    cases.push(recovery_case(
+        "mid-shrink-death",
+        "summa-panel-bcast",
+        world,
+        2,
+        vt,
+        &outs,
+        t0.elapsed().as_secs_f64() * 1e3,
+    ));
+
+    // 3. Two overlapping deaths in the same window (a remote leader and
+    //    a node-0 child): the agreement must converge on the final
+    //    survivor set whichever registration order the scheduler picks.
+    let t0 = Instant::now();
+    let (vt, outs) = summa_recovery_drill(
+        spec.clone().with_faults(base().with_dead(victim, TRIGGER_AT).with_dead(1, TRIGGER_AT)),
+        phases,
+        panel,
+        RootPolicy::PerStart,
+    );
+    cases.push(recovery_case(
+        "double-death",
+        "summa-panel-bcast",
+        world,
+        2,
+        vt,
+        &outs,
+        t0.elapsed().as_secs_f64() * 1e3,
+    ));
+
+    // 4. The Poisson residual loop (8 B max-allreduce per round) under a
+    //    leader death plus 25% skew — the solver-shaped drill.
+    let t0 = Instant::now();
+    let (vt, outs) = poisson_recovery_drill(
+        spec.clone().with_faults(base().with_dead(victim, TRIGGER_AT).with_skew(0.25)),
+        2 * phases,
+    );
+    cases.push(recovery_case(
+        "poisson-residual",
+        "poisson-allreduce",
+        world,
+        1,
+        vt,
+        &outs,
+        t0.elapsed().as_secs_f64() * 1e3,
+    ));
+
+    write_recovery_json(out, if smoke { "smoke" } else { "full" }, &cases);
+}
+
+fn write_recovery_json(path: &str, mode: &str, cases: &[RecoveryCase]) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"pr\": 8,\n");
+    s.push_str(&format!("  \"mode\": \"{mode}\",\n"));
+    s.push_str(&format!("  \"seed\": {CHAOS_SEED},\n"));
+    s.push_str("  \"generated_by\": \"cargo run --release --bin bench_all -- --chaos-recovery\",\n");
+    s.push_str(
+        "  \"note\": \"kernel-shaped drills driven by HybridCtx::run_resilient under seeded \
+         deaths. Per scenario: survivors is the finishing rank count (asserted = world - deaths), \
+         detect/shrink/rebuild_us are the worst per-rank recovery costs in virtual microseconds \
+         (detect_us comes from the FaultPlan detection-cost model and is asserted nonzero), and \
+         epoch_breakdown is the per-epoch cost split from the survivor that ran the most epochs. \
+         Checksums are asserted bitwise-identical across all finishing ranks.\",\n",
+    );
+    s.push_str("  \"scenarios\": [\n");
+    for (i, c) in cases.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"scenario\": \"{}\", \"workload\": \"{}\", \"world\": {}, \"survivors\": {}, \
+             \"epochs\": {}, \"detect_us\": {:.3}, \"shrink_us\": {:.3}, \"rebuild_us\": {:.3}, \
+             \"modeled_us\": {:.3}, \"wall_ms\": {:.3}, \"epoch_breakdown\": [",
+            c.scenario,
+            c.workload,
+            c.world,
+            c.survivors,
+            c.epochs,
+            c.detect_us,
+            c.shrink_us,
+            c.rebuild_us,
+            c.modeled_us,
+            c.wall_ms,
+        ));
+        for (j, e) in c.breakdown.iter().enumerate() {
+            s.push_str(&format!(
+                "{{\"epoch\": {}, \"failed\": {}, \"detect_us\": {:.3}, \"shrink_us\": {:.3}, \
+                 \"rebuild_us\": {:.3}}}{}",
+                e.epoch,
+                e.failed,
+                e.detect_us,
+                e.shrink_us,
+                e.rebuild_us,
+                if j + 1 < c.breakdown.len() { ", " } else { "" }
+            ));
+        }
+        s.push_str(&format!("]}}{}\n", if i + 1 < cases.len() { "," } else { "" }));
+    }
+    s.push_str("  ]\n}\n");
     std::fs::write(path, s).unwrap_or_else(|e| panic!("write {path}: {e}"));
     println!("wrote {path}");
 }
@@ -696,14 +988,26 @@ fn main() {
     let smoke = args.iter().any(|a| a == "--smoke");
     let strict = args.iter().any(|a| a == "--strict");
     let chaos = args.iter().any(|a| a == "--chaos");
+    let recovery = args.iter().any(|a| a == "--chaos-recovery");
     let out = args
         .iter()
         .position(|a| a == "--out")
         .and_then(|i| args.get(i + 1))
         .cloned()
         .unwrap_or_else(|| {
-            (if chaos { "BENCH_PR7.chaos.json" } else { "BENCH_PR5.json" }).to_string()
+            (if recovery {
+                "BENCH_PR8.recovery.json"
+            } else if chaos {
+                "BENCH_PR7.chaos.json"
+            } else {
+                "BENCH_PR5.json"
+            })
+            .to_string()
         });
+    if recovery {
+        run_chaos_recovery(smoke, &out);
+        return;
+    }
     if chaos {
         run_chaos(smoke, &out);
         return;

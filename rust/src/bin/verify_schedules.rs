@@ -200,6 +200,12 @@ fn runtime_race_pass() -> usize {
 /// the full cross-rank dependency-graph pass and coverage of exactly the
 /// survivor set ([`verify_survivors`]).
 ///
+/// ISSUE 8 adds a dead-root handle: the victim is also the pinned root
+/// of a `RootPolicy::Reelect` broadcast, so the rebuild must re-elect a
+/// live root (lowest survivor on the dead root's node) and the
+/// verifier's `DeadRootRetained` check must find every rebuilt rooted
+/// schedule naming a live member.
+///
 /// [`HyColl::rebuild`]: hympi::hybrid::HyColl::rebuild
 fn post_shrink_pass() -> usize {
     const VICTIM: usize = 5; // node 1's (k = 1) leader on the 5+3 shape
@@ -218,6 +224,8 @@ fn post_shrink_pass() -> usize {
             SyncScheme::Barrier,
         );
         let mut bc = ctx.bcast_init_split(env, 96, SyncScheme::Barrier, RootPolicy::Fixed(7), 2);
+        let mut rb =
+            ctx.bcast_init_split(env, 96, SyncScheme::Barrier, RootPolicy::reelect(VICTIM), 1);
         if env.rank_dead() {
             return None; // the victim stops participating here
         }
@@ -228,10 +236,20 @@ fn post_shrink_pass() -> usize {
         let ctx = ctx.shrink(env);
         ar.rebuild(env, &ctx);
         bc.rebuild(env, &ctx);
+        rb.rebuild(env, &ctx);
         let root = ctx.parent().rank_of_world(7).expect("world rank 7 survives");
+        // The victim was the Reelect root: the rebuild must have moved it
+        // onto a live survivor of the dead root's node (world rank 6).
+        let eroot = rb.root_policy().fixed_root().expect("reelect handles stay fixed-root");
+        assert_eq!(
+            ctx.parent().world_of(eroot),
+            6,
+            "re-election must pick the lowest survivor on the dead root's node"
+        );
         let exports = vec![
             ("allreduce".to_string(), ar.export_schedule(0)),
             ("bcast fixed".to_string(), bc.export_schedule(root)),
+            ("bcast reelected".to_string(), rb.export_schedule(eroot)),
         ];
         // One live invocation each: the rebuilt schedules must also drive.
         ar.start_allreduce(env, &operand);
@@ -240,9 +258,12 @@ fn post_shrink_pass() -> usize {
         let me = ctx.parent().rank();
         bc.start_bcast(env, root, (me == root).then_some(&payload[..]));
         bc.try_wait(env).expect("post-shrink bcast completes on survivors");
+        rb.start_bcast(env, eroot, (me == eroot).then_some(&payload[..]));
+        rb.try_wait(env).expect("post-shrink re-elected bcast completes on survivors");
         env.barrier(ctx.parent());
         ar.free(env);
         bc.free(env);
+        rb.free(env);
         Some(exports)
     });
     let sets: Vec<Vec<(String, RankSchedule)>> = run.outputs.into_iter().flatten().collect();

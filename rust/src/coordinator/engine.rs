@@ -58,15 +58,19 @@ impl SimCluster {
     {
         // Apply the spec's park-bound choice (wall-clock wakeup latency
         // only; 0 = auto-tune from the host core count) and the fault
-        // plan's failure-detection bound (also wall-clock only).
+        // plan's failure-detection knobs. The detection bound is
+        // stretched by the plan's worst straggler factor so a
+        // slow-but-alive rank never trips the cascade escape; the
+        // cascade-round count comes straight from the plan.
         crate::mpi::sync::set_park_bound_us(self.spec.knobs.park_bound_us.unwrap_or(0));
+        let fault = self.spec.knobs.fault.as_ref();
         crate::mpi::fault::set_detect_bound_us(
-            self.spec
-                .knobs
-                .fault
-                .as_ref()
-                .map(|f| f.detect_bound_us)
+            fault
+                .map(crate::mpi::FaultPlan::scaled_detect_bound_us)
                 .unwrap_or(crate::mpi::fault::DEFAULT_DETECT_BOUND_US),
+        );
+        crate::mpi::fault::set_cascade_rounds(
+            fault.map(|f| f.cascade_rounds).unwrap_or(crate::mpi::fault::DEFAULT_CASCADE_ROUNDS),
         );
         let topo = Topology::new(&self.spec.nodes, self.spec.placement);
         let world = topo.world_size();

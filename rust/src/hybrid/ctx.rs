@@ -227,73 +227,196 @@ impl HybridCtx {
     /// policy (the current effective `k`, re-clamped against the shrunken
     /// node populations).
     ///
+    /// ## Epoch-tagged restartable agreement (ISSUE 8, DESIGN.md §6b)
+    ///
     /// The old parent's collectives are unusable (a member is dead), so
-    /// agreement runs over the control plane: the lowest survivor
-    /// allocates the new context id, collects every survivor's clock and
-    /// answers with `(id, max clock)` — the arrival-max rule the barrier
-    /// inside `MPI_Comm_split` would have applied — and every survivor
-    /// then charges the Table-2 split law for the shrunken group before
-    /// the new session's own splits run. Collective over the survivors
-    /// only; a registered-dead rank must not call this. Old windows and
-    /// handles on `self` are *not* freed here — rebuild the handles you
-    /// still need with [`HyColl::rebuild`] and abandon the rest.
+    /// agreement runs over the control plane — and because the
+    /// *coordinator itself* may die mid-agreement, every wait is a
+    /// bounded park ([`ProcEnv::oob_recv_deadline`]) and the whole
+    /// protocol is a restartable round:
+    ///
+    /// - **Round state.** Each participant derives, from the shared dead
+    ///   registry, the survivor set (`parent ∖ dead`), the **epoch**
+    ///   (global dead-rank count — monotone, so a later round always
+    ///   carries a strictly higher epoch), and the **scope** (FNV-1a
+    ///   hash of the sorted survivor world-rank set — the agreement's
+    ///   identity, shared even by survivors whose `parent` comms differ
+    ///   after a death *during rebuild* left some of them one session
+    ///   ahead).
+    /// - **Coordinator** = lowest survivor. It collects one
+    ///   `[epoch, scope, vclock]` request per child, allocates the new
+    ///   context id, and answers all children with
+    ///   `[epoch, scope, id, max-clock]` — the arrival-max rule the
+    ///   barrier inside `MPI_Comm_split` would have applied.
+    /// - **Stale messages** — requests or replies whose scope does not
+    ///   match the receiver's current round (traffic from a lower epoch,
+    ///   or from a concurrent shrink of a *different* session) — are
+    ///   discarded on receipt, and leftovers are swept by
+    ///   [`ProcEnv::oob_drain`] once agreement completes.
+    /// - **Restart.** On a deadline expiry each side re-derives the
+    ///   survivor set; if it changed (a death registered — including the
+    ///   coordinator's own), the round restarts under the higher epoch
+    ///   with the next-lowest survivor coordinating. Unchanged-set
+    ///   expiries merely resend (children) or re-arm (coordinator), so a
+    ///   slow survivor is never falsely abandoned.
+    ///
+    /// Cascading deaths therefore converge to the final survivor set:
+    /// any prefix of the protocol invalidated by a new death is
+    /// discarded wholesale by the scope check and rebuilt from the
+    /// registry. After agreement every survivor charges the
+    /// [detection-cost model](ProcEnv::charge_detection) for the newly
+    /// shrunk-out members, synchronizes to the agreed clock and charges
+    /// the Table-2 split law for the shrunken group before the new
+    /// session's own splits run. Collective over the survivors only; a
+    /// registered-dead rank must not call this. Old windows and handles
+    /// on `self` are *not* freed here — rebuild the handles you still
+    /// need with [`HyColl::rebuild`] (see [`HybridCtx::run_resilient`]
+    /// for the full detect → shrink → rebuild → retry driver) and
+    /// abandon the rest.
     pub fn shrink(self: &Rc<Self>, env: &mut ProcEnv) -> Rc<HybridCtx> {
+        /// FNV-1a over the sorted survivor world-rank set: the round's
+        /// scope key. Same survivors ⇒ same key on every participant,
+        /// regardless of which parent communicator they derived the set
+        /// from; different sessions' concurrent agreements (disjoint or
+        /// overlapping member sets) collide only if their survivor sets
+        /// are identical — in which case the agreements are
+        /// interchangeable anyway.
+        fn scope_key(survivors: &[usize]) -> u64 {
+            let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+            for &w in survivors {
+                for b in (w as u64).to_le_bytes() {
+                    h ^= u64::from(b);
+                    h = h.wrapping_mul(0x0100_0000_01b3);
+                }
+            }
+            h
+        }
+        let world = env.world();
+        let me = env.world_rank();
         let parent = &self.parent;
-        let survivors: Vec<usize> = parent
-            .members()
-            .iter()
-            .copied()
-            .filter(|&w| !env.state().is_dead(w))
-            .collect();
-        assert!(
-            survivors.len() < parent.size(),
-            "shrink without a registered death on the parent communicator"
-        );
+        let survivors_now = |env: &ProcEnv| -> (Vec<usize>, u64, u64) {
+            let s: Vec<usize> = parent
+                .members()
+                .iter()
+                .copied()
+                .filter(|&w| !env.state().is_dead(w))
+                .collect();
+            let epoch = env.state().dead_ranks().len() as u64;
+            let scope = scope_key(&s);
+            (s, epoch, scope)
+        };
+        let (id, vmax, survivors) = 'round: loop {
+            let (survivors, epoch, scope) = survivors_now(env);
+            assert!(
+                survivors.len() < parent.size(),
+                "shrink without a registered death on the parent communicator"
+            );
+            let my_idx = survivors
+                .iter()
+                .position(|&w| w == me)
+                .expect("a registered-dead rank must not call shrink");
+            if my_idx == 0 {
+                // Coordinator: one directed bounded receive per child (not
+                // ANY_SOURCE — directed re-arming never consults the
+                // dead-containing member list, so a slow survivor cannot
+                // be falsely declared failed).
+                let mut vmax = env.vclock();
+                for &w in &survivors[1..] {
+                    loop {
+                        let deadline = Instant::now() + fault::detect_bound();
+                        match env.oob_recv_deadline(&world, Some(w), opcode::CTRL_SHRINK, deadline)
+                        {
+                            Some((_, data)) if data.len() >= 24 => {
+                                let m_scope = u64::from_le_bytes(data[8..16].try_into().unwrap());
+                                if m_scope != scope {
+                                    continue; // stale epoch / foreign session: discard
+                                }
+                                let v = f64::from_le_bytes(data[16..24].try_into().unwrap());
+                                vmax = vmax.max(v);
+                                break;
+                            }
+                            Some(_) => continue, // malformed: discard
+                            None => {
+                                let (_, _, s2) = survivors_now(env);
+                                if s2 != scope {
+                                    continue 'round; // a death registered: restart
+                                }
+                                // Unchanged set: the child is slow, not
+                                // dead — re-arm and keep waiting.
+                            }
+                        }
+                    }
+                }
+                let cid = env.state().alloc_comm_id();
+                let mut reply = Vec::with_capacity(32);
+                reply.extend_from_slice(&epoch.to_le_bytes());
+                reply.extend_from_slice(&scope.to_le_bytes());
+                reply.extend_from_slice(&cid.to_le_bytes());
+                reply.extend_from_slice(&vmax.to_le_bytes());
+                for &w in &survivors[1..] {
+                    env.oob_send(&world, w, opcode::CTRL_SHRINK_ACK, &reply);
+                }
+                break (cid, vmax, survivors);
+            } else {
+                let coord = survivors[0];
+                let mut req = Vec::with_capacity(24);
+                req.extend_from_slice(&epoch.to_le_bytes());
+                req.extend_from_slice(&scope.to_le_bytes());
+                req.extend_from_slice(&env.vclock().to_le_bytes());
+                env.oob_send(&world, coord, opcode::CTRL_SHRINK, &req);
+                loop {
+                    let deadline = Instant::now() + fault::detect_bound();
+                    match env.oob_recv_deadline(&world, Some(coord), opcode::CTRL_SHRINK_ACK, deadline)
+                    {
+                        Some((_, data)) if data.len() >= 32 => {
+                            let m_scope = u64::from_le_bytes(data[8..16].try_into().unwrap());
+                            if m_scope != scope {
+                                continue; // stale epoch / foreign session: discard
+                            }
+                            let cid = u64::from_le_bytes(data[16..24].try_into().unwrap());
+                            let v = f64::from_le_bytes(data[24..32].try_into().unwrap());
+                            break 'round (cid, v, survivors);
+                        }
+                        Some(_) => continue, // malformed: discard
+                        None => {
+                            let (_, _, s2) = survivors_now(env);
+                            if s2 != scope {
+                                continue 'round; // coordinator (or peer) died: restart
+                            }
+                            // Unchanged set: the request (or its reply)
+                            // may be racing a coordinator restart — resend
+                            // so a restarted round cannot strand us.
+                            env.oob_send(&world, coord, opcode::CTRL_SHRINK, &req);
+                        }
+                    }
+                }
+            }
+        };
+        // Post-agreement hygiene: duplicate requests re-sent during the
+        // bounded-park loop (and replies a restarted coordinator
+        // superseded) must never alias a later epoch's traffic. A foreign
+        // session's early request swept here is re-sent by its owner's
+        // own bounded-park loop, so the drain is always safe.
+        env.oob_drain(&world, None, opcode::CTRL_SHRINK);
+        env.oob_drain(&world, None, opcode::CTRL_SHRINK_ACK);
         let my_rank = survivors
             .iter()
-            .position(|&w| w == env.world_rank())
-            .expect("a registered-dead rank must not call shrink");
-        let tag = opcode::CTRL_SHRINK;
-        let (id, vmax) = if my_rank == 0 {
-            let id = env.state().alloc_comm_id();
-            let mut vmax = env.vclock();
-            // Directed receives (not ANY_SOURCE): a bounded recv from a
-            // *live* peer re-arms on expiry, whereas ANY_SOURCE would
-            // consult the whole (dead-containing) member list and panic
-            // if a slow survivor outlasted the detection bound.
-            for &w in &survivors[1..] {
-                let src = parent.rank_of_world(w).expect("survivor is a member");
-                let (_, data) = env.oob_recv(parent, Some(src), tag);
-                vmax = vmax.max(f64::from_le_bytes(data[..8].try_into().unwrap()));
-            }
-            let mut reply = Vec::with_capacity(16);
-            reply.extend_from_slice(&id.to_le_bytes());
-            reply.extend_from_slice(&vmax.to_le_bytes());
-            for &w in &survivors[1..] {
-                let dst = parent.rank_of_world(w).expect("survivor is a member");
-                env.oob_send(parent, dst, tag, &reply);
-            }
-            (id, vmax)
-        } else {
-            let root = parent.rank_of_world(survivors[0]).expect("survivor is a member");
-            env.oob_send(parent, root, tag, &env.vclock().to_le_bytes());
-            let (_, data) = env.oob_recv(parent, Some(root), tag);
-            (
-                u64::from_le_bytes(data[..8].try_into().unwrap()),
-                f64::from_le_bytes(data[8..16].try_into().unwrap()),
-            )
-        };
+            .position(|&w| w == me)
+            .expect("agreement preserves my membership");
         let spans = {
             let topo = env.topo();
             let node0 = topo.node_of(survivors[0]);
             survivors.iter().any(|&w| topo.node_of(w) != node0)
         };
-        // Synchronize to the agreed clock, then charge the split law —
-        // identical on every survivor, so the shrunken session starts
-        // from a common virtual time.
+        // Synchronize to the agreed clock and charge the Table-2 split
+        // law — identical on every survivor, so the shrunken session
+        // starts from a common virtual time — then charge the
+        // detection-cost model for the members shrunk out this epoch
+        // (ISSUE 8: recovery vtime includes time-to-detect).
         let dv = (vmax - env.vclock()).max(0.0);
         let cost = env.state().mgmt.comm_split_us(survivors.len());
         env.advance(dv + cost);
+        env.charge_detection((parent.size() - survivors.len()) as f64);
         let shrunk = Communicator::new(id, Arc::new(survivors), my_rank, spans);
         let policy =
             if self.k == 1 { LeaderPolicy::Single } else { LeaderPolicy::Leaders(self.k) };
@@ -760,7 +883,7 @@ fn compile_stages(
     // `PerStart` a `RootNode`-scoped pair stays in the schedule and
     // resolves against the pending root at run time.
     let root_sync = |s: &mut Vec<Stage>| match policy {
-        RootPolicy::Fixed(root) => {
+        RootPolicy::Fixed(root) | RootPolicy::Reelect(root, _) => {
             let t = tables.expect("rooted ops bind translation tables");
             let on_root_node = ctx.node_index() == t.bridge[root];
             let root_is_primary = t.shmem[root] == 0;
@@ -998,8 +1121,12 @@ impl HyColl {
     }
 
     fn check_root(&self, root: usize) {
-        if let RootPolicy::Fixed(r) = self.policy {
-            assert_eq!(root, r, "RootPolicy::Fixed handle started with a different root");
+        if let Some(r) = self.policy.fixed_root() {
+            assert_eq!(
+                root, r,
+                "fixed-root handle started with a different root (after a rebuild, query \
+                 root_policy().fixed_root() — a Reelect root may have moved)"
+            );
         }
     }
 
@@ -1164,12 +1291,25 @@ impl HyColl {
                         let t = sched.ticket.expect("Await without a matching Arrive");
                         let vmax = if drive == Drive::Block {
                             if env.state().fault.is_some() {
+                                let fuse = 2 * fault::cascade_rounds();
+                                let mut expiries = 0u32;
                                 loop {
                                     let dl = Instant::now() + fault::detect_bound();
                                     match group.finish_deadline(&t, dl) {
                                         Some(v) => break v,
                                         None => {
+                                            expiries += 1;
                                             if let Some(r) = env.failed_peer(ctx.parent()) {
+                                                env.charge_detection(1.0);
+                                                return Err(RankFailed { world_rank: r });
+                                            }
+                                            // Cascade escape: a member that
+                                            // retreated into a recovery epoch
+                                            // (death during rebuild elsewhere)
+                                            // never arrives.
+                                            if expiries >= fuse && env.state().any_dead() {
+                                                let r = env.state().dead_ranks()[0];
+                                                env.charge_detection(f64::from(fuse));
                                                 return Err(RankFailed { world_rank: r });
                                             }
                                         }
@@ -1228,7 +1368,13 @@ impl HyColl {
                         // the aborted work unit may have left half-written.
                         if let Err(payload) = std::panic::catch_unwind(run) {
                             match payload.downcast::<RankFailed>() {
-                                Ok(rf) => return Err(*rf),
+                                Ok(rf) => {
+                                    // Charge the rounds the failing wait
+                                    // noted (or one detection round if the
+                                    // panic site predates the model).
+                                    env.flush_detection(1.0);
+                                    return Err(*rf);
+                                }
                                 Err(p) => std::panic::resume_unwind(p),
                             }
                         }
@@ -1256,12 +1402,21 @@ impl HyColl {
                     };
                     if drive == Drive::Block {
                         if env.state().fault.is_some() {
+                            let fuse = 2 * fault::cascade_rounds();
+                            let mut expiries = 0u32;
                             loop {
                                 let dl = Instant::now() + fault::detect_bound();
                                 if env.spin_wait_deadline(&win.win, 0, target, dl) {
                                     break;
                                 }
+                                expiries += 1;
                                 if let Some(r) = env.failed_peer(ctx.parent()) {
+                                    env.charge_detection(1.0);
+                                    return Err(RankFailed { world_rank: r });
+                                }
+                                if expiries >= fuse && env.state().any_dead() {
+                                    let r = env.state().dead_ranks()[0];
+                                    env.charge_detection(f64::from(fuse));
                                     return Err(RankFailed { world_rank: r });
                                 }
                             }
@@ -1352,7 +1507,10 @@ impl HyColl {
             }
             Some(at) if Instant::now() < at => Ok(false),
             Some(_) => match env.failed_peer(self.ctx.parent()) {
-                Some(r) => Err(RankFailed { world_rank: r }),
+                Some(r) => {
+                    env.charge_detection(1.0);
+                    Err(RankFailed { world_rank: r })
+                }
                 None => {
                     self.fail_check = None;
                     Ok(false)
@@ -1440,8 +1598,8 @@ impl HyColl {
         let win_id = win.win.id();
         let tables = self.tables.as_deref();
         let rooted = matches!(self.op, HyOp::Bcast | HyOp::Scatter | HyOp::Gather);
-        if let RootPolicy::Fixed(r) = self.policy {
-            assert_eq!(root, r, "export root must match the RootPolicy::Fixed root");
+        if let Some(r) = self.policy.fixed_root() {
+            assert_eq!(root, r, "export root must match the handle's fixed root");
         }
         let stages = self
             .sched
@@ -1720,7 +1878,14 @@ impl HyColl {
     /// schedule over the survivors. A [`RootPolicy::Fixed`] root is
     /// remapped through world ranks; if the root itself died this panics
     /// — picking a replacement root is an application decision, not a
-    /// library one.
+    /// library one. A [`RootPolicy::Reelect`] root is remapped the same
+    /// way while the root lives, and **re-elected** through the handle's
+    /// election hook when it died: the hook sees the dead root's former
+    /// world rank and node plus the survivor set, and the default
+    /// ([`progress::default_reelect`]) picks the lowest-ranked survivor
+    /// on the dead root's former node — preserving the root's shared
+    /// window locality — falling back to the lowest survivor when that
+    /// node lost every member.
     ///
     /// The old window is abandoned *without* a collective free (the
     /// ULFM-revoke analogue): the old group can no longer meet to free
@@ -1738,6 +1903,33 @@ impl HyColl {
         };
         let policy = match self.policy {
             RootPolicy::Fixed(r) => RootPolicy::Fixed(remap(r)),
+            RootPolicy::Reelect(r, elect) => {
+                let old_world = old.world_of(r);
+                let new_root = match new_ctx.parent().rank_of_world(old_world) {
+                    Some(nr) => nr, // root survived: plain remap
+                    None => {
+                        // Dead root: re-elect among the survivors.
+                        let survivors_world = new_ctx.parent().members();
+                        let topo = env.topo();
+                        let survivor_nodes: Vec<usize> =
+                            survivors_world.iter().map(|&w| topo.node_of(w)).collect();
+                        let e = progress::Reelection {
+                            old_root_world: old_world,
+                            old_root_node: topo.node_of(old_world),
+                            survivors_world,
+                            survivor_nodes: &survivor_nodes,
+                        };
+                        let nr = elect(&e);
+                        assert!(
+                            nr < survivors_world.len(),
+                            "re-elected root {nr} out of range for {} survivors",
+                            survivors_world.len()
+                        );
+                        nr
+                    }
+                };
+                RootPolicy::Reelect(new_root, elect)
+            }
             RootPolicy::PerStart => RootPolicy::PerStart,
         };
         *self = match self.op {
@@ -1807,6 +1999,207 @@ impl HybridCtx {
     /// result offsets, index-aligned with `reqs`.
     pub fn wait_all(env: &mut ProcEnv, reqs: &mut [&mut dyn HyReq]) -> Vec<usize> {
         progress::wait_all(env, reqs)
+    }
+}
+
+// ---- self-healing retry driver (ISSUE 8) ----------------------------------
+
+/// How [`HybridCtx::run_resilient`] paces its recovery epochs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Give up ([`Resilience::Exhausted`]) after this many recovery
+    /// epochs — each epoch is one detect → purge → shrink → rebuild →
+    /// restart cycle.
+    pub max_epochs: usize,
+    /// Virtual microseconds charged before the first recovery epoch's
+    /// shrink (0 = retry immediately). Models the grace period a real
+    /// runtime inserts so a transient stall is not escalated instantly.
+    pub backoff_us: f64,
+    /// Multiplier applied to the backoff after every epoch
+    /// (exponential backoff; 1.0 = constant).
+    pub backoff_factor: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_epochs: 8, backoff_us: 0.0, backoff_factor: 2.0 }
+    }
+}
+
+/// Per-epoch recovery cost breakdown from [`HybridCtx::run_resilient`],
+/// in virtual microseconds. `detect_us` is the detection-cost model's
+/// charge ([`ProcEnv::detection_vtime_us`] delta: bounded-park rounds at
+/// the failing wait plus any cascade rounds inside the shrink
+/// agreement); `shrink_us` / `rebuild_us` are the wall-clock-free vclock
+/// deltas of the agreement + session rebuild and the handle re-inits.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EpochReport {
+    /// 1-based recovery epoch index.
+    pub epoch: usize,
+    /// World rank whose death (or abandonment) triggered this epoch.
+    pub failed: usize,
+    pub detect_us: f64,
+    pub shrink_us: f64,
+    pub rebuild_us: f64,
+}
+
+/// Outcome of [`HybridCtx::run_resilient`].
+pub enum Resilience<T> {
+    /// The attempt completed. `ctx` is the session it completed on (the
+    /// original if no fault fired, the latest shrunken session
+    /// otherwise); `epochs` records every recovery cycle that ran.
+    Completed { value: T, ctx: Rc<HybridCtx>, epochs: Vec<EpochReport> },
+    /// *This rank* is the casualty: it observed its own scheduled death
+    /// (`ProcEnv::rank_dead`) and must stop participating. Survivors
+    /// keep running and will shrink around it.
+    Died,
+    /// `max_epochs` recovery cycles did not yield a completed attempt.
+    Exhausted { last: RankFailed, epochs: Vec<EpochReport> },
+}
+
+impl HybridCtx {
+    /// The self-healing retry driver: run `attempt` until it completes,
+    /// looping **detect → purge → shrink → rebuild → restart** around
+    /// every detected failure, with per-epoch backoff and a `max_epochs`
+    /// bound.
+    ///
+    /// `attempt` receives the *current* session and the handle set
+    /// (freshly rebuilt each epoch) and returns:
+    /// - `Ok(Some(v))` — completed; `run_resilient` returns
+    ///   [`Resilience::Completed`] with `v` and the final session.
+    /// - `Ok(None)` — this rank observed its own scheduled death and
+    ///   retired cooperatively (it already called
+    ///   [`ProcEnv::rank_dead`]); maps to [`Resilience::Died`].
+    /// - `Err(RankFailed)` — a peer failure surfaced from a bounded
+    ///   park ([`HyColl::try_wait`] / [`HyColl::try_test`] /
+    ///   [`HyColl::start_ok`]); the driver recovers and retries.
+    ///   `RankFailed` *panics* escaping `attempt` (from plain `wait` or
+    ///   raw pure-MPI calls) are caught and treated identically.
+    ///
+    /// Recovery epoch: charge the policy backoff, purge doomed plans
+    /// from `cache` ([`PlanCache::purge_failed`](crate::coll::PlanCache::purge_failed)),
+    /// [`HybridCtx::shrink`] (itself restartable — a death racing the
+    /// agreement or the session rebuild panics back here and the shrink
+    /// is simply re-entered), then [`HyColl::rebuild`] every handle on
+    /// the shrunken session. A death observed *between* shrink and
+    /// rebuild retires this rank ([`Resilience::Died`]) while its
+    /// survivors' next epoch shrinks around it — the death-during-rebuild
+    /// case. Each epoch's detect/shrink/rebuild virtual-time split is
+    /// recorded in an [`EpochReport`].
+    ///
+    /// The attempt must be **restartable from its inputs**: it is
+    /// re-invoked from the top after every recovery, so any partial
+    /// results it wrote must be recomputed or idempotent.
+    pub fn run_resilient<T>(
+        self: &Rc<Self>,
+        env: &mut ProcEnv,
+        handles: &mut [&mut HyColl],
+        mut cache: Option<&mut crate::coll::PlanCache>,
+        policy: RetryPolicy,
+        mut attempt: impl FnMut(
+            &mut ProcEnv,
+            &Rc<HybridCtx>,
+            &mut [&mut HyColl],
+        ) -> Result<Option<T>, RankFailed>,
+    ) -> Resilience<T> {
+        let mut ctx = self.clone();
+        let mut epochs: Vec<EpochReport> = Vec::new();
+        let mut backoff = policy.backoff_us;
+        loop {
+            if env.rank_dead() {
+                return Resilience::Died;
+            }
+            let detect0 = env.detection_vtime_us();
+            // Run one attempt, converting a RankFailed *panic* escaping
+            // it (plain waits, raw pure-MPI traffic) into the same
+            // recoverable error the try_* surface returns. Unwind
+            // safety: every handle is rebuilt before reuse, and the
+            // attempt contract requires restartability from inputs.
+            let outcome = {
+                let att = std::panic::AssertUnwindSafe(|| attempt(env, &ctx, &mut *handles));
+                match std::panic::catch_unwind(att) {
+                    Ok(res) => res,
+                    Err(payload) => match payload.downcast::<RankFailed>() {
+                        Ok(rf) => {
+                            env.flush_detection(1.0);
+                            Err(*rf)
+                        }
+                        Err(p) => std::panic::resume_unwind(p),
+                    },
+                }
+            };
+            let failed = match outcome {
+                Ok(Some(value)) => return Resilience::Completed { value, ctx, epochs },
+                Ok(None) => return Resilience::Died,
+                Err(f) => f,
+            };
+            if epochs.len() >= policy.max_epochs {
+                return Resilience::Exhausted { last: failed, epochs };
+            }
+            if backoff > 0.0 {
+                env.advance(backoff);
+                backoff *= policy.backoff_factor;
+            }
+            if let Some(c) = cache.as_deref_mut() {
+                c.purge_failed(env);
+            }
+            let v0 = env.vclock();
+            // Shrink, re-entering the (restartable) agreement if another
+            // death lands during it or during the session rebuild.
+            let new_ctx = loop {
+                if env.rank_dead() {
+                    return Resilience::Died;
+                }
+                let sh = std::panic::AssertUnwindSafe(|| ctx.shrink(env));
+                match std::panic::catch_unwind(sh) {
+                    Ok(c) => break c,
+                    Err(payload) => match payload.downcast::<RankFailed>() {
+                        Ok(_) => env.flush_detection(1.0),
+                        Err(p) => std::panic::resume_unwind(p),
+                    },
+                }
+            };
+            let shrink_us = env.vclock() - v0;
+            let detect_us = env.detection_vtime_us() - detect0;
+            // Cooperative-death checkpoint between shrink and rebuild:
+            // a rank dying *here* completed the agreement but never
+            // joins the handle re-inits — its survivors' create/rebuild
+            // collectives abandon via their bounded parks and the next
+            // epoch shrinks around it.
+            if env.rank_dead() {
+                return Resilience::Died;
+            }
+            let v1 = env.vclock();
+            let rb = std::panic::AssertUnwindSafe(|| {
+                for h in handles.iter_mut() {
+                    h.rebuild(env, &new_ctx);
+                }
+            });
+            let rebuilt = match std::panic::catch_unwind(rb) {
+                Ok(()) => true,
+                Err(payload) => match payload.downcast::<RankFailed>() {
+                    Ok(_) => {
+                        env.flush_detection(1.0);
+                        false
+                    }
+                    Err(p) => std::panic::resume_unwind(p),
+                },
+            };
+            epochs.push(EpochReport {
+                epoch: epochs.len() + 1,
+                failed: failed.world_rank,
+                detect_us,
+                shrink_us,
+                rebuild_us: env.vclock() - v1,
+            });
+            // A rebuild aborted by a racing death leaves the handle set
+            // half re-initialized; adopting the shrunken session anyway
+            // is safe because the next attempt fails fast (its parent
+            // has a registered-dead member) and the following epoch
+            // re-inits every handle on the next survivor set.
+            let _ = rebuilt;
+            ctx = new_ctx;
+        }
     }
 }
 

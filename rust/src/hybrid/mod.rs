@@ -70,9 +70,18 @@
 //! from [`HyColl::try_wait`] / [`HyColl::try_test`] within the
 //! configured detection bound. Recovery is ULFM-shaped:
 //! [`HybridCtx::shrink`] rebuilds the session (leader set, bridge
-//! communicators, stripe tables) over the survivors, and
-//! [`HyColl::rebuild`] re-initializes a handle — including its compiled
-//! stage schedule — on the shrunken session.
+//! communicators, stripe tables) over the survivors through an
+//! epoch-tagged restartable agreement (deaths *during* the agreement —
+//! the coordinator's included — restart the round under a higher
+//! epoch), and [`HyColl::rebuild`] re-initializes a handle — including
+//! its compiled stage schedule — on the shrunken session, re-electing a
+//! dead fixed root when the handle carries a [`RootPolicy::Reelect`]
+//! hook. [`HybridCtx::run_resilient`] wraps the whole detect → purge →
+//! shrink → rebuild → restart cycle into a self-healing retry driver
+//! with configurable backoff ([`RetryPolicy`]) and per-epoch recovery
+//! cost reports ([`EpochReport`]); detection time is charged to virtual
+//! time by the fault plan's detection-cost model, so chaos benchmarks
+//! include time-to-detect.
 
 pub mod allgather;
 pub mod allreduce;
@@ -89,9 +98,9 @@ pub mod sync;
 pub use allgather::AllgatherParam;
 pub use allreduce::{AllreduceMethod, METHOD_CUTOFF_BYTES};
 pub use bcast::TransTables;
-pub use ctx::{HyColl, HyOp, HybridCtx, LeaderPolicy};
+pub use ctx::{EpochReport, HyColl, HyOp, HybridCtx, LeaderPolicy, Resilience, RetryPolicy};
 #[allow(deprecated)]
 pub use package::CommPackage;
-pub use progress::{wait_all, wait_any, HyReq, RootPolicy};
+pub use progress::{default_reelect, wait_all, wait_any, ElectRoot, HyReq, Reelection, RootPolicy};
 pub use shmem::HyWin;
 pub use sync::SyncScheme;

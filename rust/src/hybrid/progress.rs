@@ -106,8 +106,64 @@ pub enum RootPolicy {
     /// schedule is compiled root-aware — which is what lets the root's
     /// bridge sub-steps launch inside `start`, before any non-root rank
     /// has arrived (root-side pipelining; closes the ROADMAP
-    /// "root-bound persistent handles" item).
+    /// "root-bound persistent handles" item). If the root dies,
+    /// [`HyColl::rebuild`](super::ctx::HyColl::rebuild) panics — picking
+    /// a replacement is an application decision; opt into one with
+    /// [`RootPolicy::Reelect`].
     Fixed(usize),
+    /// [`RootPolicy::Fixed`] with failover (ISSUE 8): compiles and
+    /// drives exactly like `Fixed(root)`, but if the root is dead at
+    /// [`HyColl::rebuild`](super::ctx::HyColl::rebuild) the election
+    /// hook picks a successor among the survivors instead of panicking.
+    /// Construct with [`RootPolicy::reelect`] for the default rule
+    /// (lowest-ranked survivor on the dead root's former node, else the
+    /// lowest survivor); a plain `fn` keeps the policy `Copy`/`Eq`.
+    Reelect(usize, ElectRoot),
+}
+
+/// A root-election hook: given the election context, return the new
+/// root's rank *in the shrunken communicator*. Must be deterministic in
+/// its arguments — every survivor runs the election independently and
+/// they must all pick the same rank.
+pub type ElectRoot = fn(&Reelection<'_>) -> usize;
+
+/// What a root election gets to look at. `survivors_world` is the
+/// shrunken communicator's membership in rank order (ascending world
+/// rank), `survivor_nodes` the topology node of each entry.
+#[derive(Debug)]
+pub struct Reelection<'a> {
+    /// World rank of the dead root.
+    pub old_root_world: usize,
+    /// Topology node the dead root lived on.
+    pub old_root_node: usize,
+    /// Survivor world ranks, indexed by new communicator rank.
+    pub survivors_world: &'a [usize],
+    /// Topology node of each survivor, index-aligned with
+    /// `survivors_world`.
+    pub survivor_nodes: &'a [usize],
+}
+
+/// The default election rule: the lowest-ranked survivor on the dead
+/// root's former node (its shared window and on-node data layout are the
+/// closest match to the old root's), else the lowest survivor overall.
+pub fn default_reelect(e: &Reelection<'_>) -> usize {
+    e.survivor_nodes.iter().position(|&n| n == e.old_root_node).unwrap_or(0)
+}
+
+impl RootPolicy {
+    /// `Fixed(root)` semantics with the default re-election rule on root
+    /// death (see [`default_reelect`]).
+    pub fn reelect(root: usize) -> RootPolicy {
+        RootPolicy::Reelect(root, default_reelect)
+    }
+
+    /// The currently bound root of a `Fixed`/`Reelect` handle.
+    pub fn fixed_root(&self) -> Option<usize> {
+        match *self {
+            RootPolicy::Fixed(r) | RootPolicy::Reelect(r, _) => Some(r),
+            RootPolicy::PerStart => None,
+        }
+    }
 }
 
 /// A nonblocking persistent-collective request — the split-phase face of

@@ -17,6 +17,22 @@ pub mod summa;
 pub use compute::Backend;
 pub use ompsim::OmpModel;
 
+/// Per-rank outcome of a kernel fault-recovery drill
+/// ([`summa::recovery_drill`], [`poisson::recovery_drill`]): the
+/// kernel's communication skeleton run to completion through
+/// [`crate::hybrid::HybridCtx::run_resilient`] under a fault plan.
+#[derive(Clone, Debug)]
+pub struct DrillOutcome {
+    /// `false`: this rank was a scheduled casualty and retired
+    /// cooperatively (`Resilience::Died`).
+    pub finished: bool,
+    /// Workload checksum, recomputed from scratch on every attempt —
+    /// all finishing ranks must agree (the drill callers assert it).
+    pub checksum: f64,
+    /// Recovery epochs this rank ran (empty on a clean run).
+    pub epochs: Vec<crate::hybrid::EpochReport>,
+}
+
 /// Which of the paper's three implementations to run (plus the
 /// split-phase overlap variant of DESIGN.md §5e).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

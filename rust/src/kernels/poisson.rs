@@ -11,10 +11,10 @@
 use super::compute::{modeled_sweep_us, poisson_sweep, Backend};
 use super::native::{black_pass, max_delta, red_pass};
 use super::ompsim::OmpModel;
-use super::{KernelReport, RankStats, Variant};
+use super::{DrillOutcome, KernelReport, RankStats, Variant};
 use crate::coll::{CollOp, Flavor, PlanCache};
 use crate::coordinator::{ClusterSpec, SimCluster};
-use crate::hybrid::{AllreduceMethod, HybridCtx, LeaderPolicy, SyncScheme};
+use crate::hybrid::{AllreduceMethod, HybridCtx, LeaderPolicy, Resilience, RetryPolicy, SyncScheme};
 use crate::mpi::env::{opcode, ProcEnv};
 use crate::mpi::{Datatype, ReduceOp};
 use crate::util::{cast_slice, to_bytes};
@@ -281,6 +281,59 @@ fn overlap_iterations(
     env.barrier(ctx.shmem());
     ar.free(env);
     stats
+}
+
+/// The Poisson chaos drill (DESIGN.md fault model): the solver's
+/// collective skeleton — a modeled sweep followed by the 8 B residual
+/// max-allreduce, per round — run to completion through
+/// [`HybridCtx::run_resilient`] under the spec's fault plan. Scheduled
+/// casualties retire cooperatively at the next round boundary (or the
+/// driver's own checkpoints) once their death time arrives; survivors
+/// detect, shrink, rebuild the persistent handle and restart. Every
+/// attempt recomputes the checksum (the sum of the weighted global
+/// residuals) from round 0, so all finishing ranks agree on the final
+/// survivor set. Returns the makespan and the per-rank
+/// [`DrillOutcome`]s.
+pub fn recovery_drill(spec: ClusterSpec, rounds: usize) -> (f64, Vec<DrillOutcome>) {
+    let rep = SimCluster::new(spec).run(move |env| {
+        let w = env.world();
+        let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+        let mut h = ctx.allreduce_init(
+            env, Datatype::F64, ReduceOp::Max, 8, AllreduceMethod::Tuned, SyncScheme::Spin,
+        );
+        let out = ctx.run_resilient(
+            env,
+            &mut [&mut h],
+            None,
+            RetryPolicy::default(),
+            |env, cx, hs| {
+                let mut checksum = 0.0f64;
+                for it in 0..rounds {
+                    if env.rank_dead() {
+                        return Ok(None);
+                    }
+                    env.compute(300.0); // the round's red-black sweep (modeled)
+                    let me_w = cx.parent().world_of(cx.parent().rank());
+                    let local = (me_w + 1) as f64 * 0.5 / (it + 1) as f64;
+                    hs[0].start_allreduce(env, to_bytes(&[local]));
+                    hs[0].try_wait(env)?;
+                    let g = hs[0].result_view(8).expect("hybrid handles are window-backed");
+                    checksum += cast_slice::<f64>(g)[0] * (it + 1) as f64;
+                }
+                Ok(Some(checksum))
+            },
+        );
+        match out {
+            Resilience::Completed { value, epochs, .. } => {
+                DrillOutcome { finished: true, checksum: value, epochs }
+            }
+            Resilience::Died => DrillOutcome { finished: false, checksum: 0.0, epochs: Vec::new() },
+            Resilience::Exhausted { last, .. } => {
+                panic!("Poisson recovery drill exhausted its retry budget: {last}")
+            }
+        }
+    });
+    (rep.max_vtime_us(), rep.outputs)
 }
 
 /// Phase B of the phased sweep: the two halo-adjacent red rows (1 and

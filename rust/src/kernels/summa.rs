@@ -14,10 +14,10 @@
 
 use super::compute::{summa_block, Backend};
 use super::ompsim::OmpModel;
-use super::{KernelReport, RankStats, Variant};
+use super::{DrillOutcome, KernelReport, RankStats, Variant};
 use crate::coll::{CollOp, Flavor, PlanCache};
 use crate::coordinator::{ClusterSpec, SimCluster};
-use crate::hybrid::{HyColl, HybridCtx, LeaderPolicy, RootPolicy, SyncScheme};
+use crate::hybrid::{HyColl, HybridCtx, LeaderPolicy, Resilience, RetryPolicy, RootPolicy, SyncScheme};
 use crate::mpi::env::ProcEnv;
 use crate::mpi::{Communicator, Datatype};
 use crate::util::{from_bytes, to_bytes};
@@ -264,6 +264,72 @@ fn overlap_phases(
         h.free(env);
     }
     stats
+}
+
+/// The SUMMA chaos drill (DESIGN.md fault model): the kernel's
+/// communication skeleton — a panel broadcast per phase with a modeled
+/// dgemm slice between them — run to completion through
+/// [`HybridCtx::run_resilient`] under the spec's fault plan.
+///
+/// With [`RootPolicy::PerStart`] the roots rotate per phase (the SUMMA
+/// shape); with [`RootPolicy::reelect`] the root is pinned and the
+/// drill re-queries `root_policy().fixed_root()` every phase, so after
+/// a rebuild it broadcasts from wherever the election hook moved the
+/// root — killing the pinned root exercises dead-root re-election
+/// mid-steady-state. Scheduled casualties retire cooperatively at the
+/// next phase boundary (or the driver's own checkpoints) once their
+/// death time arrives. Every attempt recomputes the checksum from
+/// phase 0, so all finishing ranks agree on the final survivor set no
+/// matter how many recovery epochs ran. Returns the makespan and the
+/// per-rank [`DrillOutcome`]s.
+pub fn recovery_drill(
+    spec: ClusterSpec,
+    phases: usize,
+    panel: usize,
+    policy: RootPolicy,
+) -> (f64, Vec<DrillOutcome>) {
+    let rep = SimCluster::new(spec).run(move |env| {
+        let w = env.world();
+        let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+        let mut h = ctx.bcast_init_split(env, panel, SyncScheme::Spin, policy, 1);
+        let out = ctx.run_resilient(
+            env,
+            &mut [&mut h],
+            None,
+            RetryPolicy::default(),
+            |env, cx, hs| {
+                let mut checksum = 0.0f64;
+                for k in 0..phases {
+                    if env.rank_dead() {
+                        return Ok(None);
+                    }
+                    let root = match hs[0].root_policy().fixed_root() {
+                        Some(r) => r,
+                        None => k % cx.parent().size(),
+                    };
+                    let root_w = cx.parent().world_of(root);
+                    let fill = ((root_w * 31 + k * 7) % 251) as u8;
+                    let payload = (cx.parent().rank() == root).then(|| vec![fill; panel]);
+                    hs[0].start_bcast(env, root, payload.as_deref());
+                    hs[0].try_wait(env)?;
+                    let b = hs[0].result_view(panel).expect("hybrid handles are window-backed")[0];
+                    checksum += f64::from(b) * (k + 1) as f64;
+                    env.compute(500.0); // the phase's dgemm slice (modeled)
+                }
+                Ok(Some(checksum))
+            },
+        );
+        match out {
+            Resilience::Completed { value, epochs, .. } => {
+                DrillOutcome { finished: true, checksum: value, epochs }
+            }
+            Resilience::Died => DrillOutcome { finished: false, checksum: 0.0, epochs: Vec::new() },
+            Resilience::Exhausted { last, .. } => {
+                panic!("SUMMA recovery drill exhausted its retry budget: {last}")
+            }
+        }
+    });
+    (rep.max_vtime_us(), rep.outputs)
 }
 
 /// The verification oracle: checksum of the full `C = A·B` for edge `n`.

@@ -21,7 +21,7 @@ use super::msg::{Matcher, Msg};
 use super::net::NetModel;
 use super::pool::{BufPool, Payload, PoolBuf};
 use super::state::{ClusterState, CommCore};
-use super::sync::SyncGroup;
+use super::sync::{BarrierTicket, SyncGroup};
 use super::topo::Topology;
 use super::win::SharedWindow;
 use crate::util::Rng;
@@ -44,10 +44,15 @@ pub mod opcode {
     pub const REDSCAT: i64 = 11;
     pub const HALO: i64 = 12;
     /// Survivor agreement during [`HybridCtx::shrink`]
-    /// (crate::hybrid::HybridCtx::shrink). Used as a *raw* control tag —
+    /// (crate::hybrid::HybridCtx::shrink): epoch-tagged requests
+    /// (child → coordinator). Used as a *raw* control tag —
     /// [`ProcEnv::next_coll_tag`] values are `≥ 256`, so raw opcodes
     /// never collide with them.
     pub const CTRL_SHRINK: i64 = 13;
+    /// Coordinator → child replies of the shrink agreement. A distinct
+    /// tag so a restarted round's requests can never be matched as
+    /// stale replies (or vice versa).
+    pub const CTRL_SHRINK_ACK: i64 = 14;
 }
 
 /// A shared-memory window handle (`MPI_Win` analogue): the shared region
@@ -99,12 +104,24 @@ pub struct ProcEnv {
     /// [`FaultPlan`](super::fault::FaultPlan) at construction. `None` on
     /// clean runs — every fault hook is then a branch on a dead `Option`.
     fault: Option<FaultState>,
+    /// Virtual µs per *modeled* detection round, resolved from the fault
+    /// plan's detection-cost model at construction (0 on clean runs).
+    detect_cost_us: f64,
+    /// Modeled detection rounds noted by `&self` failure paths
+    /// ([`ProcEnv::recv_bounded`] panics before any `&mut` charge can
+    /// run); the catcher flushes them into the clock via
+    /// [`ProcEnv::flush_detection`].
+    pending_detect: std::cell::Cell<f64>,
+    /// Cumulative detection vtime charged to this rank (µs) — the
+    /// time-to-detect component the chaos benches report.
+    detect_charged: f64,
 }
 
 impl ProcEnv {
     pub fn new(state: Arc<ClusterState>, rank: usize) -> ProcEnv {
         let world = Communicator::world(state.topo.world_size(), rank, state.topo.nnodes() > 1);
         let fault = state.fault.as_ref().map(|p| p.state_for(rank));
+        let detect_cost_us = state.fault.as_ref().map_or(0.0, |p| p.resolved_detect_cost_us());
         ProcEnv {
             rank,
             state,
@@ -116,6 +133,9 @@ impl ProcEnv {
             copied: 0,
             nic_lane: 0,
             fault,
+            detect_cost_us,
+            pending_detect: std::cell::Cell::new(0.0),
+            detect_charged: 0.0,
         }
     }
 
@@ -298,6 +318,48 @@ impl ProcEnv {
         comm.members().iter().copied().find(|&w| w != self.rank && self.state.is_dead(w))
     }
 
+    // ---- detection-cost model (ISSUE 8) ------------------------------------
+    //
+    // Bounded-park expiries are wall-clock events and therefore host-
+    // dependent, so charging *actual* expiries would break the bitwise
+    // vtime determinism the fault tests pin down. Instead each failure
+    // surfacing charges its *modeled* round count: 1 round for a
+    // registry-detected death (one detection bound of waiting), the full
+    // cascade fuse for a cascade-declared one. Branch identity is
+    // determined by the fault plan, not the host, so the charge is
+    // deterministic.
+
+    /// Charge `rounds` modeled detection rounds to virtual time (the
+    /// fault plan's per-round detection cost; no-op on clean runs).
+    pub fn charge_detection(&mut self, rounds: f64) {
+        let us = rounds * self.detect_cost_us;
+        self.detect_charged += us;
+        self.advance(us);
+    }
+
+    /// Note `rounds` modeled detection rounds from a `&self` failure
+    /// path (the bounded receives panic before any `&mut` charge can
+    /// run); whoever catches the typed panic flushes the note into the
+    /// clock with [`ProcEnv::flush_detection`].
+    pub fn note_detection(&self, rounds: f64) {
+        self.pending_detect.set(rounds);
+    }
+
+    /// Flush any noted detection rounds into the virtual clock; if
+    /// nothing was noted, charge `default_rounds` (the catcher knows a
+    /// detection happened even when the panic path could not say how
+    /// many bounds it modeled).
+    pub fn flush_detection(&mut self, default_rounds: f64) {
+        let rounds = self.pending_detect.replace(0.0);
+        self.charge_detection(if rounds > 0.0 { rounds } else { default_rounds });
+    }
+
+    /// Cumulative detection vtime charged to this rank (µs): the
+    /// time-to-detect component of the chaos degradation numbers.
+    pub fn detection_vtime_us(&self) -> f64 {
+        self.detect_charged
+    }
+
     // ---- payload pool & copy instrumentation -------------------------------
 
     /// This rank's payload slab pool.
@@ -426,18 +488,26 @@ impl ProcEnv {
     /// - `data_plane` receives additionally fail on a dead member of
     ///   `comm` even when directed at a live source — a dead member
     ///   revokes the whole communicator;
-    /// - `data_plane` receives finally fail after
-    ///   [`fault::CASCADE_ROUNDS`] consecutive expiries while *any* rank
-    ///   anywhere is dead: the expected sender is alive but itself
-    ///   stranded behind the failure (it got its own `RankFailed` and
-    ///   abandoned the op), so no message is ever coming. Control-plane
-    ///   receives never take this branch — the shrink protocol runs its
-    ///   directed recovery traffic while dead ranks are legitimately
-    ///   registered.
+    /// - receives finally fail after [`fault::cascade_rounds`]
+    ///   consecutive expiries (control-plane receives get a doubled
+    ///   fuse) while *any* rank anywhere is dead: the expected sender is
+    ///   alive but itself stranded behind the failure (it got its own
+    ///   `RankFailed` and abandoned the op, or retreated into a recovery
+    ///   epoch), so no message is ever coming. Since ISSUE 8 the shrink
+    ///   agreement runs on explicit [`ProcEnv::oob_recv_deadline`] waits
+    ///   instead of indefinite re-arming, so control-plane traffic no
+    ///   longer needs a cascade exemption — only the longer fuse, which
+    ///   keeps a rebuild's split/window handshakes from misfiring while
+    ///   their (live, participating) root is busy gathering.
+    ///
+    /// Failure paths note their *modeled* detection rounds (1 for a
+    /// registry hit, the fuse length for a cascade) for the catcher to
+    /// charge to virtual time — see the detection-cost model above.
     fn recv_bounded(&self, comm: &Communicator, src: Option<usize>, tag: i64, data_plane: bool) -> Msg {
         if self.state.fault.is_none() {
             return self.state.mailboxes[self.rank].recv(Matcher { src, tag, comm: comm.id() });
         }
+        let fuse = if data_plane { fault::cascade_rounds() } else { 2 * fault::cascade_rounds() };
         let mut expiries = 0u32;
         loop {
             let deadline = Instant::now() + fault::detect_bound();
@@ -452,10 +522,11 @@ impl ProcEnv {
                 Some(_) => None,
                 None => self.failed_peer(comm),
             };
-            let cascade = failed.is_none() && data_plane && expiries >= fault::CASCADE_ROUNDS;
+            let cascade = failed.is_none() && expiries >= fuse;
             let failed =
                 failed.or_else(|| cascade.then(|| self.state.dead_ranks().first().copied()).flatten());
             if let Some(r) = failed {
+                self.note_detection(if cascade { fuse as f64 } else { 1.0 });
                 std::panic::panic_any(fault::RankFailed { world_rank: r });
             }
         }
@@ -551,16 +622,78 @@ impl ProcEnv {
     }
 
     /// Out-of-band receive (no virtual-time charge). Control-plane
-    /// semantics under fault injection: a directed receive fails only if
-    /// *that source* is registered dead — never on deaths elsewhere —
-    /// because the shrink protocol legitimately runs directed recovery
-    /// traffic while the registry is non-empty.
+    /// semantics under fault injection: a directed receive fails if
+    /// *that source* is registered dead, or — with a doubled cascade
+    /// fuse — after sustained silence while any rank anywhere is dead
+    /// (the source then abandoned the handshake for a recovery epoch;
+    /// see [`ProcEnv::recv_bounded`]'s escalation policy).
     pub fn oob_recv(&self, comm: &Communicator, src: Option<usize>, tag: i64) -> (usize, Vec<u8>) {
         let msg = self.recv_bounded(comm, src, tag, false);
         (msg.src, msg.data.to_vec())
     }
 
+    /// Out-of-band receive with an explicit wall-clock deadline: returns
+    /// `None` on expiry with no charge and *no* failure escalation — the
+    /// caller owns the consult-registry-and-retry decision. This is the
+    /// primitive the epoch-tagged shrink agreement runs on: every one of
+    /// its control-plane waits is bounded, so a coordinator death can
+    /// never park a survivor indefinitely.
+    pub fn oob_recv_deadline(
+        &self,
+        comm: &Communicator,
+        src: Option<usize>,
+        tag: i64,
+        deadline: Instant,
+    ) -> Option<(usize, Vec<u8>)> {
+        let m = Matcher { src, tag, comm: comm.id() };
+        self.state.mailboxes[self.rank].recv_deadline(m, deadline).map(|msg| (msg.src, msg.data.to_vec()))
+    }
+
+    /// Discard every control message currently queued for me that
+    /// matches `(comm, src, tag)`; returns how many were dropped.
+    /// Owner-side hygiene for restartable protocols
+    /// ([`Mailbox::drain`](super::msg::Mailbox::drain)): after an epoch
+    /// of the shrink agreement completes, re-sent duplicate requests and
+    /// superseded replies are swept so they can never alias a later
+    /// epoch's traffic.
+    pub fn oob_drain(&self, comm: &Communicator, src: Option<usize>, tag: i64) -> usize {
+        let m = Matcher { src, tag, comm: comm.id() };
+        self.state.mailboxes[self.rank].drain(m)
+    }
+
     // ---- barrier ------------------------------------------------------------
+
+    /// Finish an arrived sync-group episode under fault injection: each
+    /// wait round is capped at the detection bound, after which the dead
+    /// registry is consulted; after the control-plane cascade fuse of
+    /// continuous silence while any rank anywhere is dead, a stranded
+    /// episode is abandoned (a member that retreated into a recovery
+    /// epoch never arrives — the death-during-rebuild case). Panics with
+    /// the typed [`fault::RankFailed`]; the pure-MPI layers have no
+    /// recoverable error path, so the hybrid session layer catches
+    /// exactly this payload and converts it to the recoverable
+    /// `Err(RankFailed)`.
+    fn finish_group_bounded(&self, g: &SyncGroup, t: &BarrierTicket, comm: &Communicator) -> f64 {
+        let fuse = 2 * fault::cascade_rounds();
+        let mut expiries = 0u32;
+        loop {
+            match g.finish_deadline(t, Instant::now() + fault::detect_bound()) {
+                Some(v) => return v,
+                None => {
+                    expiries += 1;
+                    let failed = self.failed_peer(comm);
+                    let cascade = failed.is_none() && expiries >= fuse;
+                    let failed = failed.or_else(|| {
+                        cascade.then(|| self.state.dead_ranks().first().copied()).flatten()
+                    });
+                    if let Some(r) = failed {
+                        self.note_detection(if cascade { fuse as f64 } else { 1.0 });
+                        std::panic::panic_any(fault::RankFailed { world_rank: r });
+                    }
+                }
+            }
+        }
+    }
 
     /// `MPI_Barrier`: real synchronization via the communicator's
     /// [`SyncGroup`](super::sync::SyncGroup); virtual cost = dissemination
@@ -569,22 +702,9 @@ impl ProcEnv {
         let g = self.sync_group(comm);
         let vmax = if self.state.fault.is_some() {
             // Bounded completion under fault injection: a peer that died
-            // before arriving would otherwise park this rank forever. The
-            // pure-MPI layers have no recoverable error path, so a
-            // confirmed-dead peer is surfaced as a panic naming it (the
-            // hybrid session layer's typed Err(RankFailed) is the
-            // recoverable route).
+            // before arriving would otherwise park this rank forever.
             let t = g.arrive(self.vclock);
-            loop {
-                match g.finish_deadline(&t, Instant::now() + fault::detect_bound()) {
-                    Some(v) => break v,
-                    None => {
-                        if let Some(r) = self.failed_peer(comm) {
-                            std::panic::panic_any(fault::RankFailed { world_rank: r });
-                        }
-                    }
-                }
-            }
+            self.finish_group_bounded(&g, &t, comm)
         } else {
             g.arrive_and_wait(self.vclock)
         };
@@ -599,16 +719,7 @@ impl ProcEnv {
         let g = self.sync_group(comm);
         self.vclock = if self.state.fault.is_some() {
             let t = g.arrive(self.vclock);
-            loop {
-                match g.finish_deadline(&t, Instant::now() + fault::detect_bound()) {
-                    Some(v) => break v,
-                    None => {
-                        if let Some(r) = self.failed_peer(comm) {
-                            std::panic::panic_any(fault::RankFailed { world_rank: r });
-                        }
-                    }
-                }
-            }
+            self.finish_group_bounded(&g, &t, comm)
         } else {
             g.arrive_and_wait(self.vclock)
         };
@@ -692,9 +803,17 @@ impl ProcEnv {
             my_reply = data;
         }
 
-        // Synchronize and charge the calibrated split cost.
+        // Synchronize and charge the calibrated split cost. Bounded
+        // under fault injection: a rebuild's split must not hang on a
+        // member that died (or retreated into a recovery epoch) after
+        // the agreement that picked this membership.
         let g = self.sync_group(comm);
-        let vmax = g.arrive_and_wait(self.vclock);
+        let vmax = if self.state.fault.is_some() {
+            let t = g.arrive(self.vclock);
+            self.finish_group_bounded(&g, &t, comm)
+        } else {
+            g.arrive_and_wait(self.vclock)
+        };
         self.vclock = vmax + self.state.mgmt.comm_split_us(p);
 
         if my_reply.is_empty() {
@@ -747,10 +866,40 @@ impl ProcEnv {
         } else {
             self.oob_send(comm, 0, tag, &(my_bytes as u64).to_le_bytes());
         }
-        let win = core.lookup_window(seq);
+        // Bounded lookup under fault injection: the publishing leader may
+        // have died — or abandoned the allocation for a recovery epoch —
+        // before publishing, and a child parked on the condvar would
+        // otherwise never learn of it.
+        let win = if self.state.fault.is_some() {
+            let fuse = 2 * fault::cascade_rounds();
+            let mut expiries = 0u32;
+            loop {
+                if let Some(w) =
+                    core.lookup_window_deadline(seq, Instant::now() + fault::detect_bound())
+                {
+                    break w;
+                }
+                expiries += 1;
+                let failed = self.failed_peer(comm);
+                let cascade = failed.is_none() && expiries >= fuse;
+                let failed = failed
+                    .or_else(|| cascade.then(|| self.state.dead_ranks().first().copied()).flatten());
+                if let Some(r) = failed {
+                    self.note_detection(if cascade { fuse as f64 } else { 1.0 });
+                    std::panic::panic_any(fault::RankFailed { world_rank: r });
+                }
+            }
+        } else {
+            core.lookup_window(seq)
+        };
 
         let g = self.sync_group(comm);
-        let vmax = g.arrive_and_wait(self.vclock);
+        let vmax = if self.state.fault.is_some() {
+            let t = g.arrive(self.vclock);
+            self.finish_group_bounded(&g, &t, comm)
+        } else {
+            g.arrive_and_wait(self.vclock)
+        };
         self.vclock = vmax + self.state.mgmt.alloc_us(1);
         Win { win, comm_id: comm.id(), seq }
     }

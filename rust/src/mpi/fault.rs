@@ -36,16 +36,18 @@
 //!   just re-arms the wait.
 //!
 //! Not modeled (DESIGN.md §7): silent data corruption, byzantine
-//! behavior, network partitions, deaths *inside* a bridge transfer
-//! (checkpoints sit at collective boundaries), or deaths racing with an
-//! in-progress [`shrink`](crate::hybrid::HybridCtx::shrink).
+//! behavior, network partitions, or deaths *inside* a bridge transfer
+//! (checkpoints sit at collective boundaries). Deaths racing with an
+//! in-progress [`shrink`](crate::hybrid::HybridCtx::shrink) — including
+//! a dead agreement coordinator and deaths during rebuild — *are*
+//! handled since ISSUE 8: the agreement is epoch-tagged and restartable.
 //!
 //! [`compute`]: crate::mpi::env::ProcEnv::compute
 //! [`detect_bound`]: detect_bound
 
 use crate::util::Rng;
 use std::fmt;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::time::Duration;
 
 /// Default failure-detection bound (wall-clock µs): how long a bounded
@@ -59,7 +61,10 @@ pub const DEFAULT_DETECT_BOUND_US: u64 = 20_000;
 /// spec's [`FaultPlan`] (mirrors `PARK_BOUND_US` in [`super::sync`]).
 static DETECT_BOUND_US: AtomicU64 = AtomicU64::new(DEFAULT_DETECT_BOUND_US);
 
-/// Install the detection bound for subsequent bounded waits.
+/// Install the detection bound for subsequent bounded waits. The engine
+/// passes [`FaultPlan::scaled_detect_bound_us`], which stretches the
+/// configured bound by the plan's worst straggler factor so a
+/// heavily-straggled-but-alive peer is not misdeclared dead.
 pub fn set_detect_bound_us(us: u64) {
     DETECT_BOUND_US.store(us.max(1), Ordering::Relaxed);
 }
@@ -69,17 +74,35 @@ pub fn detect_bound() -> Duration {
     Duration::from_micros(DETECT_BOUND_US.load(Ordering::Relaxed))
 }
 
-/// Consecutive detection-bound expiries after which a *data-plane*
-/// receive directed at a live source gives up anyway, provided some rank
-/// anywhere is registered dead: the sender is then presumed stranded
-/// behind that failure (it surfaced its own [`RankFailed`] and abandoned
-/// the operation), so the expected message is never coming. The factor
-/// keeps the two-tier policy safe: a direct failure is detected in one
-/// bound, while the cascade escape needs `CASCADE_ROUNDS` bounds of
-/// *continuous* silence — post-shrink steady state (registry permanently
-/// non-empty) never accumulates that on a healthy host, because any
-/// delivery resets the count.
-pub(crate) const CASCADE_ROUNDS: u32 = 25;
+/// Default for [`FaultPlan::cascade_rounds`]: consecutive
+/// detection-bound expiries after which a receive directed at a live
+/// source gives up anyway, provided some rank anywhere is registered
+/// dead (see [`cascade_rounds`]).
+pub const DEFAULT_CASCADE_ROUNDS: u32 = 25;
+
+/// Process-global cascade-round count, installed by the engine from the
+/// spec's [`FaultPlan`] (mirrors `DETECT_BOUND_US` above).
+static CASCADE_ROUNDS: AtomicU32 = AtomicU32::new(DEFAULT_CASCADE_ROUNDS);
+
+/// Install the cascade-round count for subsequent bounded waits.
+pub fn set_cascade_rounds(rounds: u32) {
+    CASCADE_ROUNDS.store(rounds.max(2), Ordering::Relaxed);
+}
+
+/// Consecutive detection-bound expiries after which a receive directed
+/// at a live source gives up anyway, provided some rank anywhere is
+/// registered dead: the sender is then presumed stranded behind that
+/// failure (it surfaced its own [`RankFailed`] and abandoned the
+/// operation, or retreated into a recovery epoch), so the expected
+/// message is never coming. The factor keeps the two-tier policy safe:
+/// a direct failure is detected in one bound, while the cascade escape
+/// needs this many bounds of *continuous* silence — post-shrink steady
+/// state (registry permanently non-empty) never accumulates that on a
+/// healthy host, because any delivery resets the count. Configurable
+/// via [`FaultPlan::with_cascade_rounds`] since ISSUE 8.
+pub(crate) fn cascade_rounds() -> u32 {
+    CASCADE_ROUNDS.load(Ordering::Relaxed)
+}
 
 /// The typed failure surfaced by the detection path: a peer of the
 /// operation's communicator died (registered in the cluster dead
@@ -129,6 +152,14 @@ pub struct FaultPlan {
     pub dead: Vec<(usize, f64)>,
     /// Wall-clock failure-detection bound in µs (see [`detect_bound`]).
     pub detect_bound_us: u64,
+    /// Detection-bound expiries of continuous silence before the cascade
+    /// escape fires (see [`cascade_rounds`]).
+    pub cascade_rounds: u32,
+    /// Virtual µs charged per *modeled* detection round when a failure
+    /// is surfaced (the detection-cost model). `None` charges one
+    /// detection bound per round — the time a real timeout-based
+    /// detector spends waiting before it declares the peer dead.
+    pub detect_cost_us: Option<f64>,
 }
 
 impl FaultPlan {
@@ -142,6 +173,8 @@ impl FaultPlan {
             stragglers: Vec::new(),
             dead: Vec::new(),
             detect_bound_us: DEFAULT_DETECT_BOUND_US,
+            cascade_rounds: DEFAULT_CASCADE_ROUNDS,
+            detect_cost_us: None,
         }
     }
 
@@ -178,6 +211,40 @@ impl FaultPlan {
     pub fn with_detect_bound_us(mut self, us: u64) -> FaultPlan {
         self.detect_bound_us = us.max(1);
         self
+    }
+
+    /// Override the cascade-escape round count (see [`cascade_rounds`];
+    /// clamped to ≥ 2 so a direct detection always beats the cascade).
+    pub fn with_cascade_rounds(mut self, rounds: u32) -> FaultPlan {
+        self.cascade_rounds = rounds.max(2);
+        self
+    }
+
+    /// Override the virtual detection cost charged per modeled round
+    /// when a failure is surfaced (defaults to one detection bound).
+    pub fn with_detect_cost_us(mut self, us: f64) -> FaultPlan {
+        assert!(us >= 0.0, "detection cost must be non-negative");
+        self.detect_cost_us = Some(us);
+        self
+    }
+
+    /// Worst straggler slowdown in the plan (≥ 1): the factor by which
+    /// the wall-clock detection deadline is stretched so a slow-but-alive
+    /// peer does not trip the cascade escape (false-positive fix).
+    pub fn max_straggler(&self) -> f64 {
+        self.stragglers.iter().map(|&(_, f)| f).fold(1.0, f64::max)
+    }
+
+    /// The wall-clock detection bound to install: the configured bound
+    /// scaled by [`max_straggler`](FaultPlan::max_straggler).
+    pub fn scaled_detect_bound_us(&self) -> u64 {
+        (self.detect_bound_us as f64 * self.max_straggler()).ceil() as u64
+    }
+
+    /// The virtual detection cost per modeled round (the cost-model
+    /// resolution of [`detect_cost_us`](FaultPlan::detect_cost_us)).
+    pub fn resolved_detect_cost_us(&self) -> f64 {
+        self.detect_cost_us.unwrap_or(self.detect_bound_us as f64)
     }
 
     /// Expand the plan into one rank's runtime state.
@@ -318,5 +385,30 @@ mod tests {
     fn rank_failed_displays_the_rank() {
         let e = RankFailed { world_rank: 11 };
         assert!(e.to_string().contains("rank 11"));
+    }
+
+    #[test]
+    fn cascade_rounds_builder_clamps_and_defaults() {
+        assert_eq!(FaultPlan::seeded(1).cascade_rounds, DEFAULT_CASCADE_ROUNDS);
+        assert_eq!(FaultPlan::seeded(1).with_cascade_rounds(0).cascade_rounds, 2);
+        assert_eq!(FaultPlan::seeded(1).with_cascade_rounds(40).cascade_rounds, 40);
+    }
+
+    #[test]
+    fn detect_bound_scales_with_worst_straggler() {
+        let plan = FaultPlan::seeded(3)
+            .with_detect_bound_us(1_000)
+            .with_straggler(2, 4.0)
+            .with_straggler(5, 2.0);
+        assert_eq!(plan.max_straggler(), 4.0);
+        assert_eq!(plan.scaled_detect_bound_us(), 4_000);
+        assert_eq!(FaultPlan::seeded(3).with_detect_bound_us(1_000).scaled_detect_bound_us(), 1_000);
+    }
+
+    #[test]
+    fn detect_cost_defaults_to_the_bound() {
+        let plan = FaultPlan::seeded(4).with_detect_bound_us(2_000);
+        assert_eq!(plan.resolved_detect_cost_us(), 2_000.0);
+        assert_eq!(plan.with_detect_cost_us(750.0).resolved_detect_cost_us(), 750.0);
     }
 }

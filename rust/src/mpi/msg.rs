@@ -601,12 +601,29 @@ impl Mailbox {
     }
 
     /// Non-blocking probe: does a matching message exist? (Owner-side
-    /// operation, like `recv`.)
+    /// operation, like `probe`.)
     pub fn probe(&self, m: Matcher) -> bool {
         match &self.inner {
             Transport::Fabric(f) => f.probe(m),
             Transport::Legacy(l) => l.probe(m),
         }
+    }
+
+    /// Remove and discard every currently-matching message; returns how
+    /// many were dropped. Owner-side hygiene for restartable protocols:
+    /// after an epoch of the shrink agreement completes, duplicate
+    /// requests a child re-sent (and replies a restarted coordinator
+    /// superseded) are swept so they can never alias a later epoch's
+    /// traffic. Not a receive — nothing is charged, nothing is returned.
+    pub fn drain(&self, m: Matcher) -> usize {
+        let mut n = 0;
+        // A deadline already in the past turns `recv_deadline` into a
+        // single non-blocking match attempt on both transports.
+        let now = std::time::Instant::now();
+        while self.recv_deadline(m, now).is_some() {
+            n += 1;
+        }
+        n
     }
 
     /// Current queue depth (diagnostics).

@@ -189,6 +189,30 @@ impl CommCore {
         }
     }
 
+    /// Bounded window lookup (the fault-mode variant of
+    /// [`CommCore::lookup_window`]): `None` on deadline expiry so the
+    /// caller can consult the dead registry instead of parking forever
+    /// behind a leader that died — or abandoned the allocation for a
+    /// recovery epoch — before publishing.
+    pub fn lookup_window_deadline(
+        &self,
+        seq: u64,
+        deadline: std::time::Instant,
+    ) -> Option<Arc<SharedWindow>> {
+        let mut map = self.windows.lock().unwrap();
+        loop {
+            if let Some(w) = map.get(&seq) {
+                return Some(w.clone());
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (m, _timeout) = self.windows_cv.wait_timeout(map, deadline - now).unwrap();
+            map = m;
+        }
+    }
+
     /// Collective window free (leader side): drop the registry entry.
     pub fn retire_window(&self, seq: u64) {
         self.windows.lock().unwrap().remove(&seq);

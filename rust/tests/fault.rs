@@ -19,7 +19,9 @@
 use hympi::analysis::{verify_survivors, RankSchedule};
 use hympi::coll::{Flavor, PlanCache};
 use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
-use hympi::hybrid::{AllreduceMethod, HybridCtx, LeaderPolicy, SyncScheme};
+use hympi::hybrid::{
+    AllreduceMethod, HybridCtx, LeaderPolicy, Resilience, RetryPolicy, RootPolicy, SyncScheme,
+};
 use hympi::mpi::{Datatype, FaultPlan, ReduceOp};
 use hympi::util::to_bytes;
 
@@ -293,4 +295,267 @@ fn shrink_after_dead_leader_k2() {
 #[test]
 fn shrink_after_dead_child_k1() {
     shrink_case(&[5, 3], 7, 1);
+}
+
+// ---- ISSUE 8: epoch-tagged agreement + run_resilient -----------------------
+
+/// Virtual µs charged per modeled detection round in the recovery tests:
+/// large enough to dominate the compute/collective vtime, which is what
+/// lets the vtime-scheduled deaths below land at specific driver
+/// checkpoints (shrink-loop top, pre-rebuild) with wide margins.
+const DETECT_COST: f64 = 5_000.0;
+
+fn recovery_plan(seed: u64) -> FaultPlan {
+    FaultPlan::seeded(seed).with_detect_bound_us(2_000).with_detect_cost_us(DETECT_COST)
+}
+
+/// Generic [`HybridCtx::run_resilient`] drill: persistent allreduce
+/// rounds with per-rank death guards (`die_at`: world rank → iteration
+/// threshold for the cooperative in-attempt checkpoint; vtime-only
+/// deaths in the plan fire at the driver's own checkpoints instead).
+/// Returns per rank `None` if the rank died, else
+/// `Some((final comm size, recovery epochs, total detection vtime))`
+/// after asserting the resilient result is bit-identical to pure MPI on
+/// the final survivor set.
+fn resilient_case(
+    nodes: &'static [usize],
+    plan: FaultPlan,
+    die_at: &'static [(usize, usize)],
+    iters: usize,
+) -> Vec<Option<(usize, usize, f64)>> {
+    let rep = SimCluster::new(spec(nodes).with_faults(plan)).run(move |env| {
+        let w = env.world();
+        let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+        let mut h = ctx.allreduce_init(
+            env,
+            Datatype::F64,
+            ReduceOp::Sum,
+            COUNT,
+            AllreduceMethod::Method1,
+            SyncScheme::Barrier,
+        );
+        let vals: Vec<f64> = (0..COUNT / 8).map(|i| ((w.rank() + 1) * (i + 1)) as f64).collect();
+        let operand = to_bytes(&vals).to_vec();
+        // A cached pure plan on the doomed world communicator: the
+        // driver's purge step must be able to drop it.
+        let mut cache = PlanCache::new();
+        let contrib = vec![w.rank() as u8; 16];
+        let mut ag = vec![0u8; 16 * w.size()];
+        cache.allgather(env, &w, Flavor::Pure, &contrib, Some(&mut ag));
+        let me = env.world_rank();
+        let my_die = die_at.iter().find(|&&(r, _)| r == me).map(|&(_, at)| at);
+        let mut it = 0usize;
+        let res = ctx.run_resilient(
+            env,
+            &mut [&mut h],
+            Some(&mut cache),
+            RetryPolicy::default(),
+            |env, _cx, hs| {
+                let h = &mut *hs[0];
+                while it < iters {
+                    if let Some(at) = my_die {
+                        if it >= at && env.rank_dead() {
+                            return Ok(None);
+                        }
+                    }
+                    h.start_ok(env)?;
+                    h.start_allreduce(env, &operand);
+                    h.try_wait(env)?;
+                    it += 1;
+                }
+                Ok(Some(h.result_view(COUNT).expect("window-backed").to_vec()))
+            },
+        );
+        match res {
+            Resilience::Completed { value, ctx: fin, epochs } => {
+                let mut pure = operand.clone();
+                cache.allreduce(
+                    env,
+                    fin.parent(),
+                    Flavor::Pure,
+                    Datatype::F64,
+                    ReduceOp::Sum,
+                    &mut pure,
+                );
+                assert_eq!(
+                    value, pure,
+                    "rank {me}: resilient result must match pure MPI on the final survivor set"
+                );
+                let detect: f64 = epochs.iter().map(|e| e.detect_us).sum();
+                Some((fin.parent().size(), epochs.len(), detect))
+            }
+            Resilience::Died => None,
+            Resilience::Exhausted { last, epochs } => {
+                panic!("rank {me}: retries exhausted after {} epochs: {last}", epochs.len())
+            }
+        }
+    });
+    rep.outputs
+}
+
+fn assert_survivor(out: &[Option<(usize, usize, f64)>], rank: usize, size: usize) {
+    let (got_size, epochs, detect) =
+        out[rank].unwrap_or_else(|| panic!("rank {rank} must survive and complete"));
+    assert_eq!(got_size, size, "rank {rank}: final communicator size");
+    assert!(epochs >= 1, "rank {rank}: at least one recovery epoch must have run");
+    assert!(detect > 0.0, "rank {rank}: detection vtime must be charged");
+}
+
+/// The shrink coordinator (lowest survivor, rank 0) dies *during* the
+/// recovery — it observes its own death at the driver's shrink-loop
+/// checkpoint, so from every other survivor's view the coordinator goes
+/// silent mid-agreement. The bounded parks expire, the registry change
+/// restarts the round under a higher epoch, and rank 1 — the
+/// next-lowest survivor — coordinates the rest of the agreement.
+#[test]
+fn coordinator_death_mid_agreement_restarts_the_round() {
+    // Rank 5 dies at iteration 2 (the failure everyone detects); rank 0
+    // is scheduled to die at 2 500 vµs — past session setup, but well
+    // before the ≥ 5 000 vµs detection charge every failing wait adds,
+    // so its first post-failure checkpoint (shrink-loop top) retires it.
+    let plan = recovery_plan(31).with_dead(5, 0.0).with_dead(0, 2_500.0);
+    let out = resilient_case(&[5, 3], plan, &[(5, 2)], ITERS);
+    assert!(out[5].is_none(), "rank 5 is a casualty");
+    assert!(out[0].is_none(), "rank 0 (the coordinator) is a casualty");
+    for r in [1, 2, 3, 4, 6, 7] {
+        assert_survivor(&out, r, 6);
+    }
+}
+
+/// Two ranks die in the same detection window (one recovery epoch's
+/// worth of wall time): whichever death the first agreement round
+/// misses lands as a restart or as a failed rebuild, and the driver
+/// converges to the 6-rank survivor set either way.
+#[test]
+fn overlapping_deaths_converge_to_final_survivor_set() {
+    let plan = recovery_plan(37).with_dead(5, 0.0).with_dead(7, 0.0);
+    let out = resilient_case(&[5, 3], plan, &[(5, 2), (7, 2)], ITERS);
+    assert!(out[5].is_none() && out[7].is_none(), "both victims retire");
+    for r in [0, 1, 2, 3, 4, 6] {
+        assert_survivor(&out, r, 6);
+    }
+}
+
+/// A death *during rebuild*: rank 4 completes the epoch-1 agreement and
+/// the shrunken session's create, then dies at the driver's pre-rebuild
+/// checkpoint. The survivors' handle re-inits strand on it, abandon via
+/// their bounded parks (window-alloc deadline, cascade escape on the
+/// bridge), and epoch 2 shrinks around it.
+#[test]
+fn death_during_rebuild_takes_a_second_epoch() {
+    // 8 000 vµs sits between rank 4's shrink-loop checkpoint (≈ one
+    // 5 000 vµs detection charge after the failing wait) and its
+    // pre-rebuild checkpoint (a second 5 000 vµs charge inside shrink).
+    let plan = recovery_plan(43).with_dead(5, 0.0).with_dead(4, 8_000.0);
+    let out = resilient_case(&[5, 3], plan, &[(5, 2)], ITERS);
+    assert!(out[5].is_none(), "rank 5 is the first casualty");
+    assert!(out[4].is_none(), "rank 4 dies between shrink and rebuild");
+    for r in [0, 1, 2, 3, 6, 7] {
+        assert_survivor(&out, r, 6);
+        let (_, epochs, _) = out[r].unwrap();
+        assert!(epochs >= 2, "rank {r}: the rebuild-time death must cost a second epoch");
+    }
+}
+
+/// Dead fixed root with [`RootPolicy::Reelect`]: rebuild re-elects the
+/// lowest survivor on the dead root's former node (world rank 6 after
+/// world rank 5 — node 1's leader — dies) for both a rooted bcast and a
+/// rooted scatter, and the handles keep producing root-correct bytes.
+#[test]
+fn dead_root_is_reelected_for_bcast_and_scatter() {
+    const ROOT_W: usize = 5; // node 1's leader on [5, 3]
+    let nodes: &'static [usize] = &[5, 3];
+    let plan = recovery_plan(41).with_dead(ROOT_W, 0.0);
+    let rep = SimCluster::new(spec(nodes).with_faults(plan)).run(move |env| {
+        let w = env.world();
+        let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+        let mut bc =
+            ctx.bcast_init_split(env, COUNT, SyncScheme::Barrier, RootPolicy::reelect(ROOT_W), 1);
+        let mut sc =
+            ctx.scatter_init_split(env, 64, SyncScheme::Barrier, RootPolicy::reelect(ROOT_W), 1);
+        let me = env.world_rank();
+        let mut it = 0usize;
+        let res = ctx.run_resilient(
+            env,
+            &mut [&mut bc, &mut sc],
+            None,
+            RetryPolicy::default(),
+            |env, cx, hs| {
+                while it < ITERS {
+                    if me == ROOT_W && it >= 2 && env.rank_dead() {
+                        return Ok(None);
+                    }
+                    let root = hs[0].root_policy().fixed_root().expect("rooted handle");
+                    let root_w = cx.parent().world_of(root);
+                    let bcast_bytes = vec![root_w as u8 + 1; COUNT];
+                    {
+                        let h = &mut *hs[0];
+                        h.start_ok(env)?;
+                        let data = (cx.parent().rank() == root).then_some(&bcast_bytes[..]);
+                        h.start_bcast(env, root, data);
+                        h.try_wait(env)?;
+                        assert_eq!(
+                            h.result_view(COUNT).expect("window-backed"),
+                            &bcast_bytes[..],
+                            "rank {me}: bcast bytes must come from the current root"
+                        );
+                    }
+                    {
+                        let h = &mut *hs[1];
+                        h.start_ok(env)?;
+                        let p = cx.parent().size();
+                        let send: Option<Vec<u8>> = (cx.parent().rank() == root).then(|| {
+                            (0..p).flat_map(|r| vec![(root_w * 16 + r) as u8; 64]).collect()
+                        });
+                        h.start_scatter(env, root, send.as_deref());
+                        h.try_wait(env)?;
+                        let mine = vec![(root_w * 16 + cx.parent().rank()) as u8; 64];
+                        assert_eq!(
+                            h.result_view(64).expect("window-backed"),
+                            &mine[..],
+                            "rank {me}: scatter chunk must come from the current root"
+                        );
+                    }
+                    it += 1;
+                }
+                Ok(Some(hs[0].root_policy().fixed_root().expect("rooted handle")))
+            },
+        );
+        match res {
+            Resilience::Completed { value: root, ctx: fin, epochs } => {
+                assert!(!epochs.is_empty(), "rank {me}: the root death must cost an epoch");
+                Some(fin.parent().world_of(root))
+            }
+            Resilience::Died => None,
+            Resilience::Exhausted { last, epochs } => {
+                panic!("rank {me}: retries exhausted after {} epochs: {last}", epochs.len())
+            }
+        }
+    });
+    for (r, out) in rep.outputs.iter().enumerate() {
+        match out {
+            None => assert_eq!(r, ROOT_W, "only the dead root retires"),
+            Some(root_w) => assert_eq!(
+                *root_w, 6,
+                "rank {r}: default re-election picks the lowest survivor on the root's node"
+            ),
+        }
+    }
+}
+
+/// Seeded multi-epoch soak: three staggered deaths across eight rounds,
+/// recovered epoch by epoch by `run_resilient`; the surviving five
+/// ranks' final allreduce is asserted (inside [`resilient_case`])
+/// bit-identical to pure MPI on the final survivor set.
+#[test]
+fn multi_epoch_soak_is_bitwise_correct_on_final_survivors() {
+    let plan =
+        recovery_plan(53).with_dead(5, 0.0).with_dead(7, 0.0).with_dead(2, 0.0).with_skew(0.25);
+    let out = resilient_case(&[5, 3], plan, &[(5, 1), (7, 3), (2, 5)], 8);
+    for v in [2, 5, 7] {
+        assert!(out[v].is_none(), "victim {v} retires");
+    }
+    for r in [0, 1, 3, 4, 6] {
+        assert_survivor(&out, r, 5);
+    }
 }
