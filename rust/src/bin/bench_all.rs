@@ -48,7 +48,16 @@
 //! cargo run --release --bin bench_all -- --out P           # alternate output path
 //! cargo run --release --bin bench_all -- --chaos           # fault-injection sweep only
 //! cargo run --release --bin bench_all -- --chaos-recovery  # run_resilient recovery matrix
+//! cargo run --release --bin bench_all -- --tuned           # tuned-vs-static selection sweep
 //! ```
+//!
+//! PR 9 adds the **tuned sweep** (`--tuned`): per figure point, every
+//! viable candidate from the selection registry is raced through the
+//! real simulation (a `PinnedSelector` forces the choice) and the
+//! winner is reported against the static Open MPI 4.0.1 tables, with
+//! tuned ≤ static asserted per point. Lands in `BENCH_PR9.tuned.json`.
+//! The `--bcast-small-max` flag family (mirroring the microbench CLI)
+//! overrides any static threshold for the run.
 
 use hympi::coll::{CollOp, Flavor, PlanCache};
 use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
@@ -918,6 +927,225 @@ fn write_recovery_json(path: &str, mode: &str, cases: &[RecoveryCase]) {
     println!("wrote {path}");
 }
 
+// ---- tuned sweep (PR 9: the selection subsystem, raced end-to-end) --------
+
+/// One tuned-vs-static figure point: every viable registry candidate is
+/// raced through the real simulation (a `PinnedSelector` forces the
+/// choice, `drive_report` measures modeled vtime) and the winner is
+/// compared against what the static tables would have picked.
+struct TunedCase {
+    name: String,
+    op: &'static str,
+    static_algo: String,
+    static_us: f64,
+    tuned_algo: String,
+    tuned_us: f64,
+    /// Every candidate's (label, modeled vtime) — the race transcript.
+    times: Vec<(String, f64)>,
+}
+
+impl TunedCase {
+    fn gain(&self) -> f64 {
+        if self.static_us > 0.0 {
+            1.0 - self.tuned_us / self.static_us
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Race one figure point: run the static tables, then every viable
+/// candidate from the registry, and assert the winner is never slower
+/// than static — which holds by construction (the static choice is
+/// itself in the candidate set, and identical runs are deterministic).
+fn tuned_point(
+    name: &str,
+    spec: &ClusterSpec,
+    op: CollOp,
+    bytes: usize,
+    flavor: Flavor,
+    fast: bool,
+) -> TunedCase {
+    use hympi::select::{self, registry, PinnedSelector, SelectPoint, Selector, StaticSelector};
+    let p = spec.world_size();
+    let rpn = spec.nodes.iter().copied().max().unwrap_or(1);
+    let pt = SelectPoint::new(p, bytes, rpn);
+    let net = spec.net.clone();
+    let stat: std::sync::Arc<dyn select::Selector> =
+        std::sync::Arc::new(StaticSelector::new(hympi::coll::Tuning::from_env()));
+
+    let prev = select::install(stat.clone());
+    let static_us = drive_report(spec.clone(), fast, op, bytes, flavor).mean_us;
+
+    // (label, pinned selector) per viable candidate. The op string names
+    // which Selector slot the race exercises.
+    let t = hympi::coll::Tuning::from_env();
+    let (op_name, pinned): (&'static str, Vec<(String, PinnedSelector)>) = match op {
+        CollOp::Bcast => (
+            "bcast",
+            registry::bcast_candidates(&net, pt, &t)
+                .iter()
+                .map(|c| {
+                    let (n, seg) = registry::bcast_name(c.algo);
+                    let label = if seg > 0 { format!("{n}:{seg}") } else { n.to_string() };
+                    (label, PinnedSelector::over(stat.clone()).pin_bcast(c.algo))
+                })
+                .collect(),
+        ),
+        CollOp::Allgather => (
+            "allgather",
+            registry::allgather_candidates(&net, pt)
+                .iter()
+                .map(|c| {
+                    let n = registry::allgather_name(c.algo);
+                    (n.to_string(), PinnedSelector::over(stat.clone()).pin_allgather(c.algo))
+                })
+                .collect(),
+        ),
+        CollOp::Allreduce if matches!(flavor, Flavor::Hybrid { .. }) => (
+            "allreduce_method",
+            registry::method_candidates(&net, spec.nodes.len(), rpn, bytes)
+                .iter()
+                .map(|c| {
+                    let n = registry::method_name(c.algo);
+                    (n.to_string(), PinnedSelector::over(stat.clone()).pin_method(c.algo))
+                })
+                .collect(),
+        ),
+        CollOp::Allreduce => (
+            "allreduce",
+            registry::allreduce_candidates(&net, pt)
+                .iter()
+                .map(|c| {
+                    let n = registry::allreduce_name(c.algo);
+                    (n.to_string(), PinnedSelector::over(stat.clone()).pin_allreduce(c.algo))
+                })
+                .collect(),
+        ),
+        _ => panic!("tuned sweep covers bcast/allgather/allreduce points"),
+    };
+    let static_algo = match op_name {
+        "bcast" => {
+            let (n, seg) = registry::bcast_name(stat.bcast_algo(p, bytes));
+            if seg > 0 { format!("{n}:{seg}") } else { n.to_string() }
+        }
+        "allgather" => registry::allgather_name(stat.allgather_algo(p, bytes)).to_string(),
+        "allreduce" => registry::allreduce_name(stat.allreduce_algo(p, bytes)).to_string(),
+        _ => registry::method_name(stat.allreduce_method(bytes)).to_string(),
+    };
+
+    let mut times = Vec::new();
+    for (label, sel) in pinned {
+        select::install(std::sync::Arc::new(sel));
+        let us = drive_report(spec.clone(), fast, op, bytes, flavor).mean_us;
+        times.push((label, us));
+    }
+    select::install(prev);
+    let outcome = select::race(times.clone());
+    let (tuned_algo, tuned_us) = (outcome.winner_label().to_string(), outcome.winner_us());
+    assert!(
+        tuned_us <= static_us + 1e-9,
+        "{name}: tuned ({tuned_algo}, {tuned_us:.3} us) must never be slower than static \
+         ({static_algo}, {static_us:.3} us)"
+    );
+    let case = TunedCase {
+        name: name.to_string(),
+        op: op_name,
+        static_algo,
+        static_us,
+        tuned_algo,
+        tuned_us,
+        times,
+    };
+    println!(
+        "tuned {:<34} static {:<18} {:>10.2} us | tuned {:<18} {:>10.2} us | {:>5.1}% [{}]",
+        case.name,
+        case.static_algo,
+        case.static_us,
+        case.tuned_algo,
+        case.tuned_us,
+        case.gain() * 100.0,
+        if case.tuned_algo == case.static_algo { "TIE" } else { "WIN" },
+    );
+    case
+}
+
+/// The `--tuned` sweep: tuned-vs-static across the figure points, one
+/// race per point, with the per-point never-slower assertion (the
+/// ISSUE-9 acceptance bound) and its own JSON artifact.
+fn run_tuned(smoke: bool, out: &str) {
+    let sb = Preset::VulcanSb;
+    let hy = Flavor::hybrid(SyncScheme::Spin);
+    let mut cases = Vec::new();
+    let spec2 = ClusterSpec::preset(sb, 2);
+    // CI-sized core grid: each pure op at a latency-bound and a
+    // bandwidth-bound size, plus the §5.2.4 hybrid method cutoff probed
+    // from both sides. 2 VulcanSb nodes = 32 ranks (power of two, so
+    // the RD allgather candidate is in play).
+    for (name, op, bytes, fl) in [
+        ("fig13_bcast_1KiB", CollOp::Bcast, 1024, Flavor::Pure),
+        ("fig13_bcast_64KiB", CollOp::Bcast, 64 * 1024, Flavor::Pure),
+        ("fig12_allgather_1KiB", CollOp::Allgather, 1024, Flavor::Pure),
+        ("fig12_allgather_64KiB", CollOp::Allgather, 64 * 1024, Flavor::Pure),
+        ("fig14_allreduce_4KiB", CollOp::Allreduce, 4 * 1024, Flavor::Pure),
+        ("fig14_allreduce_256KiB", CollOp::Allreduce, 256 * 1024, Flavor::Pure),
+        ("fig15_method_1KiB_hybrid", CollOp::Allreduce, 1024, hy),
+        ("fig15_method_64KiB_hybrid", CollOp::Allreduce, 64 * 1024, hy),
+    ] {
+        cases.push(tuned_point(name, &spec2, op, bytes, fl, true));
+    }
+    if !smoke {
+        // Engine scale: 512 ranks, plus an irregular (non-pow2) shape
+        // where the RD candidate must drop out of the race.
+        let spec32 = ClusterSpec::preset(sb, 32);
+        cases.push(tuned_point("fig16_allgather_2KiB_512r", &spec32, CollOp::Allgather, 2 * 1024, Flavor::Pure, true));
+        cases.push(tuned_point("fig15_allreduce_8KiB_512r", &spec32, CollOp::Allreduce, 8 * 1024, Flavor::Pure, true));
+        cases.push(tuned_point("fig13_bcast_512KiB_512r", &spec32, CollOp::Bcast, 512 * 1024, Flavor::Pure, true));
+        let irr = ClusterSpec::preset_partial(sb, 96, 12);
+        cases.push(tuned_point("fig16_allgather_2KiB_96r_irreg", &irr, CollOp::Allgather, 2 * 1024, Flavor::Pure, true));
+    }
+    let wins = cases.iter().filter(|c| c.tuned_us < c.static_us - 1e-9).count();
+    println!(
+        "tuned sweep: {wins}/{} points strictly below static, 0 regressions (asserted per point)",
+        cases.len()
+    );
+    write_tuned_json(out, if smoke { "smoke" } else { "full" }, &cases);
+}
+
+fn write_tuned_json(path: &str, mode: &str, cases: &[TunedCase]) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"pr\": 9,\n");
+    s.push_str(&format!("  \"mode\": \"{mode}\",\n"));
+    s.push_str("  \"generated_by\": \"cargo run --release --bin bench_all -- --tuned\",\n");
+    s.push_str(
+        "  \"note\": \"tuned-vs-static per figure point: every viable registry candidate is \
+         raced through the simulation (PinnedSelector forces the choice, drive_report measures \
+         modeled vtime) and the winner is compared against the static Open MPI 4.0.1 tables. \
+         tuned_us <= static_us is asserted per point (the static choice is in the candidate \
+         set). times is the full race transcript.\",\n",
+    );
+    s.push_str("  \"points\": [\n");
+    for (i, c) in cases.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"op\": \"{}\", \"static_algo\": \"{}\", \
+             \"static_us\": {:.3}, \"tuned_algo\": \"{}\", \"tuned_us\": {:.3}, \
+             \"gain_frac\": {:.4}, \"times\": [",
+            c.name, c.op, c.static_algo, c.static_us, c.tuned_algo, c.tuned_us, c.gain(),
+        ));
+        for (j, (label, us)) in c.times.iter().enumerate() {
+            s.push_str(&format!(
+                "{{\"algo\": \"{label}\", \"modeled_us\": {us:.3}}}{}",
+                if j + 1 < c.times.len() { ", " } else { "" }
+            ));
+        }
+        s.push_str(&format!("]}}{}\n", if i + 1 < cases.len() { "," } else { "" }));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s).unwrap_or_else(|e| panic!("write {path}: {e}"));
+    println!("wrote {path}");
+}
+
 fn write_json(path: &str, mode: &str, cases: &[Case], sweep: &[LeaderCase], overlap: &[OverlapCase]) {
     let mut s = String::new();
     s.push_str("{\n");
@@ -983,19 +1211,54 @@ fn write_json(path: &str, mode: &str, cases: &[Case], sweep: &[LeaderCase], over
     println!("wrote {path}");
 }
 
+/// Apply the `--bcast-small-max` family of threshold flags (the same
+/// surface as the microbench CLI): if any is present, install a
+/// `StaticSelector` over the overridden tables so every `Auto` dispatch
+/// in the run uses them. Flags stack on top of `HYMPI_*` env overrides.
+fn apply_tuning_flags(args: &[String]) {
+    let opt = |name: &str| {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse::<usize>().ok())
+    };
+    let mut t = hympi::coll::Tuning::from_env();
+    let mut any = false;
+    let mut set = |name: &str, slot: &mut usize| {
+        if let Some(v) = opt(name) {
+            *slot = v;
+            any = true;
+        }
+    };
+    set("--bcast-small-max", &mut t.bcast_small_max);
+    set("--bcast-medium-max", &mut t.bcast_medium_max);
+    set("--bcast-seg", &mut t.bcast_seg);
+    set("--pipeline-seg", &mut t.pipeline_seg);
+    set("--allreduce-small-max", &mut t.allreduce_small_max);
+    set("--allgather-small-max", &mut t.allgather_small_max);
+    set("--allreduce-method-max", &mut t.allreduce_method_max);
+    if any {
+        hympi::select::install(std::sync::Arc::new(hympi::select::StaticSelector::new(t)));
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let smoke = args.iter().any(|a| a == "--smoke");
     let strict = args.iter().any(|a| a == "--strict");
     let chaos = args.iter().any(|a| a == "--chaos");
     let recovery = args.iter().any(|a| a == "--chaos-recovery");
+    let tuned = args.iter().any(|a| a == "--tuned");
+    apply_tuning_flags(&args);
     let out = args
         .iter()
         .position(|a| a == "--out")
         .and_then(|i| args.get(i + 1))
         .cloned()
         .unwrap_or_else(|| {
-            (if recovery {
+            (if tuned {
+                "BENCH_PR9.tuned.json"
+            } else if recovery {
                 "BENCH_PR8.recovery.json"
             } else if chaos {
                 "BENCH_PR7.chaos.json"
@@ -1004,6 +1267,10 @@ fn main() {
             })
             .to_string()
         });
+    if tuned {
+        run_tuned(smoke, &out);
+        return;
+    }
     if recovery {
         run_chaos_recovery(smoke, &out);
         return;

@@ -1,0 +1,257 @@
+//! `tune_all` — sweep the selection registry and persist the winners
+//! into the versioned tuning table (the UCC persisted-tuning shape).
+//!
+//! Two sources feed the table, in priority order (lookup is first match
+//! wins, so raced entries outrank modeled ones):
+//!
+//! - **race** entries — `PlanCache::plan_raced` times every viable
+//!   candidate on a persistent handle inside the real simulation
+//!   (bit-identity across candidates and cross-rank winner agreement
+//!   are asserted in-engine) at a few representative figure points;
+//! - **model** entries — the closed-form α-β cost registry arg-min'd
+//!   over a (p, bytes) grid, adjacent byte points with the same winner
+//!   merged into range entries.
+//!
+//! ```text
+//! cargo run --release --bin tune_all                  # full sweep, writes TUNING.json
+//! cargo run --release --bin tune_all -- --smoke       # CI-sized sweep, writes TUNING.smoke.json
+//! cargo run --release --bin tune_all -- --out PATH    # alternate output path
+//! cargo run --release --bin tune_all -- --check PATH  # validate a committed table; exit 1 on drift
+//! ```
+//!
+//! `--check` is the CI drift gate: the committed `TUNING.json` must
+//! load under the current `TABLE_VERSION` and every entry must name an
+//! op and algorithm the registry can parse.
+
+use hympi::coll::{CollOp, PlanCache, Tuning};
+use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
+use hympi::mpi::net::NetModel;
+use hympi::mpi::{Datatype, ReduceOp};
+use hympi::select::table::Entry;
+use hympi::select::{registry, SelectPoint, TuningTable, TABLE_VERSION};
+use std::path::Path;
+
+/// Validate a committed table against the current schema and registry.
+fn run_check(path: &str) -> i32 {
+    match TuningTable::load(Path::new(path)) {
+        Err(e) => {
+            eprintln!("tune_all --check {path}: {e}");
+            1
+        }
+        Ok(t) => match t.validate() {
+            Ok(()) => {
+                println!(
+                    "{path}: ok — version {TABLE_VERSION}, {} entries, model \"{}\"",
+                    t.entries.len(),
+                    t.model
+                );
+                0
+            }
+            Err(errs) => {
+                for e in &errs {
+                    eprintln!("tune_all --check {path}: {e}");
+                }
+                1
+            }
+        },
+    }
+}
+
+fn byte_grid(smoke: bool) -> Vec<usize> {
+    if smoke {
+        vec![256, 4 * 1024, 64 * 1024, 1 << 20]
+    } else {
+        (6..=22).map(|i| 1usize << i).collect() // 64 B .. 4 MiB
+    }
+}
+
+fn p_grid(smoke: bool) -> Vec<usize> {
+    if smoke {
+        vec![8, 32]
+    } else {
+        vec![4, 8, 16, 24, 32, 64, 128, 256, 512, 1024]
+    }
+}
+
+/// Arg-min the cost registry over the (p, bytes) grid; adjacent byte
+/// points with the same winner merge into one range entry per p.
+fn model_entries(net: &NetModel, smoke: bool) -> Vec<Entry> {
+    let t = Tuning::from_env();
+    let rpn = 16; // VulcanSb node population — the committed table's topology
+    let mut out = Vec::new();
+    for p in p_grid(smoke) {
+        let mut push_runs = |op: &str, picks: &[(usize, String, usize)]| {
+            let mut i = 0;
+            while i < picks.len() {
+                let j0 = i;
+                while i + 1 < picks.len()
+                    && picks[i + 1].1 == picks[j0].1
+                    && picks[i + 1].2 == picks[j0].2
+                {
+                    i += 1;
+                }
+                out.push(Entry {
+                    op: op.to_string(),
+                    p_min: p,
+                    p_max: p,
+                    bytes_min: picks[j0].0,
+                    bytes_max: picks[i].0,
+                    algo: picks[j0].1.clone(),
+                    seg: picks[j0].2,
+                    source: "model".to_string(),
+                });
+                i += 1;
+            }
+        };
+        let grid = byte_grid(smoke);
+        let bcast: Vec<_> = grid
+            .iter()
+            .map(|&b| {
+                let best = registry::best(&registry::bcast_candidates(
+                    net,
+                    SelectPoint::new(p, b, rpn),
+                    &t,
+                ));
+                let (name, seg) = registry::bcast_name(best.algo);
+                (b, name.to_string(), seg)
+            })
+            .collect();
+        push_runs("bcast", &bcast);
+        let ag: Vec<_> = grid
+            .iter()
+            .map(|&b| {
+                let best =
+                    registry::best(&registry::allgather_candidates(net, SelectPoint::new(p, b, rpn)));
+                (b, registry::allgather_name(best.algo).to_string(), 0)
+            })
+            .collect();
+        push_runs("allgather", &ag);
+        let ar: Vec<_> = grid
+            .iter()
+            .map(|&b| {
+                let best =
+                    registry::best(&registry::allreduce_candidates(net, SelectPoint::new(p, b, rpn)));
+                (b, registry::allreduce_name(best.algo).to_string(), 0)
+            })
+            .collect();
+        push_runs("allreduce", &ar);
+        if p > rpn {
+            // §5.2.4 step-1 method: only meaningful when a bridge exists.
+            let nnodes = p.div_ceil(rpn);
+            let meth: Vec<_> = grid
+                .iter()
+                .map(|&b| {
+                    let best = registry::best(&registry::method_candidates(net, nnodes, rpn, b));
+                    (b, registry::method_name(best.algo).to_string(), 0)
+                })
+                .collect();
+            push_runs("allreduce_method", &meth);
+        }
+    }
+    out
+}
+
+fn spec_of(nodes: &[usize]) -> ClusterSpec {
+    let mut s = ClusterSpec::preset(Preset::VulcanSb, nodes.len());
+    s.nodes = nodes.to_vec();
+    s
+}
+
+/// Empirically race candidates on persistent handles inside the
+/// simulation at representative figure points. `plan_raced` asserts
+/// bit-identical results across candidates and folds per-candidate
+/// times with a Max-allreduce, so the recorded winner is the same on
+/// every rank (a divergence would deadlock the simulation).
+fn race_entries(smoke: bool) -> Vec<Entry> {
+    let shapes: Vec<Vec<usize>> = if smoke {
+        vec![vec![5, 3]]
+    } else {
+        vec![vec![5, 3], vec![16, 16]]
+    };
+    let points: Vec<(CollOp, usize, Datatype, Option<ReduceOp>)> = if smoke {
+        vec![
+            (CollOp::Allgather, 64, Datatype::U8, None),
+            (CollOp::Allreduce, 64, Datatype::F64, Some(ReduceOp::Sum)),
+        ]
+    } else {
+        vec![
+            (CollOp::Allgather, 1024, Datatype::U8, None),
+            (CollOp::Allgather, 64 * 1024, Datatype::U8, None),
+            (CollOp::Bcast, 4 * 1024, Datatype::U8, None),
+            (CollOp::Bcast, 512 * 1024, Datatype::U8, None),
+            (CollOp::Allreduce, 4 * 1024, Datatype::F64, Some(ReduceOp::Sum)),
+            (CollOp::Allreduce, 256 * 1024, Datatype::F64, Some(ReduceOp::Sum)),
+        ]
+    };
+    let iters = if smoke { 2 } else { 3 };
+    let mut entries = Vec::new();
+    for nodes in &shapes {
+        let p: usize = nodes.iter().sum();
+        for &(op, count, dt, rop) in &points {
+            let report = SimCluster::new(spec_of(nodes)).run(move |env| {
+                let w = env.world();
+                let mut cache = PlanCache::new();
+                let (_, race) = cache.plan_raced(env, &w, op, count, dt, rop, iters);
+                (race.winner, race.seg, race.times.len())
+            });
+            let (winner, seg, ncand) = report.outputs.into_iter().next().expect("rank 0 output");
+            let op_name = match op {
+                CollOp::Allgather => "allgather",
+                CollOp::Bcast => "bcast",
+                CollOp::Allreduce => "allreduce",
+                _ => unreachable!("race points cover allgather/bcast/allreduce"),
+            };
+            let algo = winner.split(':').next().expect("non-empty label").to_string();
+            println!("race {op_name:<10} p={p:<5} {count:>8} B -> {winner} ({ncand} candidates)");
+            entries.push(Entry {
+                op: op_name.to_string(),
+                p_min: p,
+                p_max: p,
+                bytes_min: count,
+                bytes_max: count,
+                algo,
+                seg,
+                source: "race".to_string(),
+            });
+        }
+    }
+    entries
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opt = |name: &str| {
+        args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+    };
+    if let Some(path) = opt("--check") {
+        std::process::exit(run_check(&path));
+    }
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out = opt("--out")
+        .unwrap_or_else(|| (if smoke { "TUNING.smoke.json" } else { "TUNING.json" }).to_string());
+    let net = NetModel::infiniband();
+    let mut table = TuningTable::new(
+        net.name,
+        "swept by tune_all: raced entries precede modeled ones (lookup is first match wins); \
+         points outside the swept grid fall back to the static tables",
+    );
+    let raced = race_entries(smoke);
+    let n_raced = raced.len();
+    for e in raced {
+        table.entries.push(e);
+    }
+    for e in model_entries(&net, smoke) {
+        table.entries.push(e);
+    }
+    if let Err(errs) = table.validate() {
+        for e in &errs {
+            eprintln!("tune_all: generated table invalid: {e}");
+        }
+        std::process::exit(1);
+    }
+    table.save(Path::new(&out)).unwrap_or_else(|e| {
+        eprintln!("tune_all: {e}");
+        std::process::exit(1);
+    });
+    println!("wrote {out}: {} entries ({n_raced} raced, version {TABLE_VERSION})", table.entries.len());
+}

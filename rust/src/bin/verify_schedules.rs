@@ -2,9 +2,11 @@
 //! (DESIGN.md §6).
 //!
 //! Sweeps every committed collective shape — the figure/bench cluster
-//! shapes, both §4.5 sync schemes, k ∈ {1, 2, 4} leaders per node, both
-//! §5.2.4 allreduce methods, fixed and per-start roots, and pipelined
-//! bridge depths {1, 2, 4} — compiles the persistent handles, exports
+//! shapes, both §4.5 sync schemes, k ∈ {1, 2, 4} leaders per node, the
+//! §5.2.4 allreduce methods (m1, m2, and the tuner-resolved `Tuned` —
+//! the process-wide selector is the online autotuner for the whole
+//! sweep), fixed and per-start roots, and pipelined bridge depths
+//! {1, 2, 4} — compiles the persistent handles, exports
 //! each rank's stage schedule ([`HyColl::export_schedule`]) and runs the
 //! static verifier ([`verify_handle`] / [`verify_program`]) over the
 //! cross-rank dependency graph. Any diagnostic fails the run (exit 1).
@@ -77,9 +79,13 @@ fn export_all(nodes: &'static [usize], preset: Preset, k: usize) -> Vec<Vec<(Str
                 0,
                 ctx.bcast_init_split(env, 96, scheme, RootPolicy::Fixed(0), 2),
             ));
-            for (mname, method) in
-                [("m1", AllreduceMethod::Method1), ("m2", AllreduceMethod::Method2)]
-            {
+            // "mt" resolves through the installed tuner-backed selector
+            // (see main), so the verifier sweeps tuner-chosen plans too.
+            for (mname, method) in [
+                ("m1", AllreduceMethod::Method1),
+                ("m2", AllreduceMethod::Method2),
+                ("mt", AllreduceMethod::Tuned),
+            ] {
                 handles.push((
                     tag(&format!("allreduce {mname}")),
                     0,
@@ -278,6 +284,20 @@ fn post_shrink_pass() -> usize {
 }
 
 fn main() -> ExitCode {
+    // Route every Auto/Tuned resolution in the sweep through the online
+    // autotuner (cost-model mode, seeded from the committed table when
+    // one is present) — the "mt" handles below then carry tuner-chosen
+    // methods, and the verifier covers the tuner's choices end to end.
+    {
+        use hympi::mpi::net::NetModel;
+        use hympi::select::{self, table, Autotuner, TuneMode, TuningTable};
+        let tuner = Autotuner::new(NetModel::infiniband(), 16, TuneMode::CostModel);
+        let tuner = match TuningTable::load(&table::default_path()) {
+            Ok(t) => tuner.seed(t),
+            Err(_) => tuner,
+        };
+        select::install(std::sync::Arc::new(tuner));
+    }
     let mut failures = 0usize;
     let mut handles_checked = 0usize;
     for &(shape_name, preset, nodes) in SHAPES {

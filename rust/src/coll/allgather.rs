@@ -10,7 +10,6 @@
 //!   latency is governed by the *maximum* per-node contribution, the
 //!   penalty the paper cites from Träff's analysis).
 
-use super::tuning::Tuning;
 use crate::mpi::env::{opcode, ProcEnv};
 use crate::mpi::Communicator;
 
@@ -34,7 +33,12 @@ pub fn allgather(env: &mut ProcEnv, comm: &Communicator, mine: &[u8], out: &mut 
         return;
     }
     let algo = match algo {
-        AllgatherAlgo::Auto => Tuning::default().allgather_algo(p, m),
+        // Auto routes through the installed process-wide selector;
+        // sanitize defensively (a stale table entry naming recursive
+        // doubling off powers of two degrades to ring, not an abort).
+        AllgatherAlgo::Auto => {
+            crate::select::sanitize_allgather(crate::select::global().allgather_algo(p, m), p)
+        }
         a => a,
     };
     match algo {

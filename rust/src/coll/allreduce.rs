@@ -12,7 +12,6 @@
 //! set runs the main algorithm, then the folded ranks receive the result.
 
 use super::pow2_le;
-use super::tuning::Tuning;
 use crate::mpi::env::{opcode, ProcEnv};
 use crate::mpi::{Communicator, Datatype, ReduceOp};
 
@@ -39,7 +38,9 @@ pub fn allreduce(
         return;
     }
     let algo = match algo {
-        AllreduceAlgo::Auto => Tuning::default().allreduce_algo(p, buf.len()),
+        // Auto routes through the installed process-wide selector (the
+        // static tables by default; see `crate::select`).
+        AllreduceAlgo::Auto => crate::select::global().allreduce_algo(p, buf.len()),
         a => a,
     };
     let tag = env.next_coll_tag(comm, opcode::ALLREDUCE);

@@ -17,7 +17,6 @@
 //!   >362 KB regime on multi-node runs to reproduce the published "large
 //!   message dip" of Fig. 13 (documented substitution, DESIGN.md §9).
 
-use super::tuning::Tuning;
 use crate::mpi::env::{opcode, ProcEnv};
 use crate::mpi::Communicator;
 
@@ -42,7 +41,9 @@ pub fn bcast(env: &mut ProcEnv, comm: &Communicator, root: usize, buf: &mut [u8]
     }
     assert!(root < p, "root {root} out of range for comm of size {p}");
     let algo = match algo {
-        BcastAlgo::Auto => Tuning::default().bcast_algo(p, buf.len()),
+        // Auto routes through the installed process-wide selector (the
+        // static tables by default; see `crate::select`).
+        BcastAlgo::Auto => crate::select::global().bcast_algo(p, buf.len()),
         a => a,
     };
     match algo {
@@ -282,6 +283,7 @@ fn scatter_allgather(env: &mut ProcEnv, comm: &Communicator, root: usize, buf: &
 mod tests {
     use super::*;
     use crate::coll::testutil::{payload, run8, run_nodes};
+    use crate::coll::tuning::Tuning;
 
     fn check_all_algos(nodes: &[usize], m: usize, root: usize) {
         for algo in [

@@ -27,7 +27,7 @@ pub use allgather::{allgather, allgatherv, allgatherv_inplace, allgatherv_offset
 pub use allreduce::{allreduce, AllreduceAlgo};
 pub use bcast::{bcast, BcastAlgo};
 pub use gather::{gather, gatherv, gatherv_offsets};
-pub use plan::{CollIo, CollOp, CollPlan, Flavor, PlanCache, PlanKey};
+pub use plan::{CollIo, CollOp, CollPlan, Flavor, PlanCache, PlanKey, RaceReport};
 pub use reduce::reduce;
 pub use reduce_scatter::{reduce_scatter, reduce_scatterv, reduce_scatterv_offsets};
 pub use scatter::{scatter, scatterv, scatterv_offsets};

@@ -53,7 +53,6 @@ use super::hier::{hier_allgather, hier_allreduce, hier_bcast, HierCtx};
 use super::reduce::reduce;
 use super::reduce_scatter::reduce_scatter;
 use super::scatter::scatter;
-use super::tuning::Tuning;
 use crate::analysis::schedule::{verify_rank_local, Diagnostic, RankSchedule};
 use crate::hybrid::allreduce::AllreduceMethod;
 use crate::hybrid::ctx::{HyColl, HybridCtx, LeaderPolicy};
@@ -61,8 +60,10 @@ use crate::hybrid::shmem::HyWin;
 use crate::hybrid::sync::SyncScheme;
 use crate::mpi::env::ProcEnv;
 use crate::mpi::{Communicator, Datatype, ReduceOp};
+use crate::select::{registry, SelectPoint, Selector};
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::Arc;
 
 /// Which collective operation a plan executes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -251,16 +252,30 @@ struct PurePlan {
 }
 
 impl PurePlan {
-    fn new(key: PlanKey, comm: &Communicator) -> PurePlan {
-        let t = Tuning::default();
+    /// Resolve the three tuned choices once, at plan time, through the
+    /// cache's selector (the static tables unless a tuned table or
+    /// autotuner is in play — see [`crate::select`]).
+    fn new(key: PlanKey, comm: &Communicator, sel: &dyn Selector) -> PurePlan {
         let p = comm.size();
         PurePlan {
-            ag_algo: t.allgather_algo(p, key.count),
-            bc_algo: t.bcast_algo(p, key.count),
-            ar_algo: t.allreduce_algo(p, key.count),
+            ag_algo: crate::select::sanitize_allgather(sel.allgather_algo(p, key.count), p),
+            bc_algo: sel.bcast_algo(p, key.count),
+            ar_algo: sel.allreduce_algo(p, key.count),
             key,
             comm: comm.clone(),
         }
+    }
+
+    /// Bind explicit algorithms (the race path: the winner of a
+    /// [`PlanCache::plan_raced`] sweep becomes the cached plan).
+    fn with_algos(
+        key: PlanKey,
+        comm: &Communicator,
+        ag_algo: AllgatherAlgo,
+        bc_algo: BcastAlgo,
+        ar_algo: AllreduceAlgo,
+    ) -> PurePlan {
+        PurePlan { ag_algo, bc_algo, ar_algo, key, comm: comm.clone() }
     }
 }
 
@@ -483,6 +498,16 @@ struct CommCtx {
     hier: Option<Rc<HierCtx>>,
 }
 
+/// Outcome of one [`PlanCache::plan_raced`] sweep: the winning
+/// algorithm (and its segment size, 0 if unsegmented) plus the
+/// cross-rank agreed per-candidate mean times.
+#[derive(Clone, Debug)]
+pub struct RaceReport {
+    pub winner: String,
+    pub seg: usize,
+    pub times: Vec<(String, f64)>,
+}
+
 /// The per-rank plan cache. See the module docs for the contract; in
 /// short: identical call sequences on every member rank, like any MPI
 /// collective, and a symmetric [`PlanCache::free`] at the end if hybrid
@@ -494,11 +519,25 @@ pub struct PlanCache {
     comms: HashMap<u64, CommCtx>,
     hits: u64,
     misses: u64,
+    /// Explicit selector for plan-time algorithm resolution; `None`
+    /// falls back to the process-wide [`crate::select::global`].
+    selector: Option<Arc<dyn Selector>>,
 }
 
 impl PlanCache {
     pub fn new() -> PlanCache {
         PlanCache::default()
+    }
+
+    /// A cache whose pure plans resolve through `selector` instead of
+    /// the process-wide one — how tests and drivers thread a tuned
+    /// selector without mutating global state.
+    pub fn with_selector(selector: Arc<dyn Selector>) -> PlanCache {
+        PlanCache { selector: Some(selector), ..PlanCache::default() }
+    }
+
+    fn selector(&self) -> Arc<dyn Selector> {
+        self.selector.clone().unwrap_or_else(crate::select::global)
     }
 
     /// Cache hits so far (executions that reused an existing plan).
@@ -597,7 +636,7 @@ impl PlanCache {
         }
         self.misses += 1;
         let plan: Box<dyn CollPlan> = match flavor {
-            Flavor::Pure => Box::new(PurePlan::new(key, comm)),
+            Flavor::Pure => Box::new(PurePlan::new(key, comm, self.selector().as_ref())),
             Flavor::Hier => {
                 assert!(
                     matches!(op, CollOp::Allgather | CollOp::Bcast | CollOp::Allreduce),
@@ -637,6 +676,199 @@ impl PlanCache {
         let i = self.entries.len() - 1;
         self.index.insert(key, i);
         i
+    }
+
+    /// Empirically race every viable candidate algorithm for a pure
+    /// collective and cache the winner — the measurement half of the
+    /// autotuner (`TuneMode::Race`), amortized exactly as UCC's
+    /// repetitive-collective model intends: a few timed warm-up
+    /// invocations at plan time buy the best algorithm for every later
+    /// execute.
+    ///
+    /// Collective: all member ranks must call with identical arguments.
+    /// Each candidate runs `iters` timed invocations on scratch buffers
+    /// (virtual-time deltas between two harness syncs); per-candidate
+    /// means are then **max-reduced across the communicator** (an exact
+    /// reduction — no float-association drift) so every rank folds
+    /// identical times and the first-index-tie-break arg-min picks the
+    /// same winner everywhere. Divergent winners would deadlock later
+    /// executes, so agreement is structural, not hoped-for.
+    ///
+    /// Results are asserted bit-identical across candidates on every
+    /// rank. Raced allreduce therefore requires `Datatype::F64` and
+    /// uses integer-valued payloads (exact under Sum/Max/Min; Prod is
+    /// seeded so the product stays a small power of two) — candidate
+    /// algorithms may associate differently, and only integer values
+    /// make every association bitwise equal.
+    pub fn plan_raced(
+        &mut self,
+        env: &mut ProcEnv,
+        comm: &Communicator,
+        op: CollOp,
+        count: usize,
+        dtype: Datatype,
+        rop: Option<ReduceOp>,
+        iters: usize,
+    ) -> (usize, RaceReport) {
+        enum Cand {
+            Ag(AllgatherAlgo),
+            Bc(BcastAlgo),
+            Ar(AllreduceAlgo),
+        }
+        assert!(iters >= 1, "race needs at least one timed invocation");
+        let p = comm.size();
+        let rpn = env.topo().ranks_on(0).len();
+        let pt = SelectPoint::new(p, count, rpn);
+        let net = env.net().clone();
+        let tuning = super::tuning::Tuning::from_env();
+
+        // Viable candidates at this point, labelled for the report.
+        let cands: Vec<(String, usize, Cand)> = match op {
+            CollOp::Allgather => registry::allgather_candidates(&net, pt)
+                .into_iter()
+                .map(|c| (registry::allgather_name(c.algo).to_string(), 0, Cand::Ag(c.algo)))
+                .collect(),
+            CollOp::Bcast => registry::bcast_candidates(&net, pt, &tuning)
+                .into_iter()
+                .map(|c| {
+                    let (name, seg) = registry::bcast_name(c.algo);
+                    let label =
+                        if seg > 0 { format!("{name}:{seg}") } else { name.to_string() };
+                    (label, seg, Cand::Bc(c.algo))
+                })
+                .collect(),
+            CollOp::Allreduce => {
+                assert_eq!(dtype, Datatype::F64, "raced allreduce uses f64 payloads");
+                assert_eq!(count % dtype.size(), 0);
+                registry::allreduce_candidates(&net, pt)
+                    .into_iter()
+                    .map(|c| (registry::allreduce_name(c.algo).to_string(), 0, Cand::Ar(c.algo)))
+                    .collect()
+            }
+            other => panic!("plan_raced covers the tuned pure collectives, not {other:?}"),
+        };
+
+        // Deterministic, integer-valued scratch payloads.
+        let me = comm.rank();
+        let rop_v = rop.unwrap_or(ReduceOp::Sum);
+        let fill_bytes = |buf: &mut [u8], salt: usize| {
+            for (i, b) in buf.iter_mut().enumerate() {
+                *b = ((salt * 31 + i * 7) % 251) as u8;
+            }
+        };
+        let fill_f64 = |buf: &mut [u8]| {
+            for (i, chunk) in buf.chunks_exact_mut(8).enumerate() {
+                let v = match rop_v {
+                    // Keep the product a small power of two: exact.
+                    ReduceOp::Prod => {
+                        if me == 0 {
+                            2.0
+                        } else {
+                            1.0
+                        }
+                    }
+                    _ => (1 + (me + i) % 7) as f64,
+                };
+                chunk.copy_from_slice(&v.to_le_bytes());
+            }
+        };
+
+        // Time each candidate: iters invocations between harness syncs.
+        let mut local_means: Vec<f64> = Vec::with_capacity(cands.len());
+        let mut reference: Option<Vec<u8>> = None;
+        let mut mine = vec![0u8; count];
+        let mut out = vec![0u8; count * p.max(1)];
+        for (label, _seg, cand) in &cands {
+            let mut result: Vec<u8> = Vec::new();
+            env.harness_sync(comm);
+            let t0 = env.vclock();
+            for _ in 0..iters {
+                match cand {
+                    Cand::Ag(a) => {
+                        fill_bytes(&mut mine, me + 1);
+                        allgather(env, comm, &mine, &mut out, *a);
+                        result.clear();
+                        result.extend_from_slice(&out);
+                    }
+                    Cand::Bc(a) => {
+                        if me == 0 {
+                            fill_bytes(&mut mine, 0xB0);
+                        }
+                        bcast(env, comm, 0, &mut mine, *a);
+                        result.clear();
+                        result.extend_from_slice(&mine);
+                    }
+                    Cand::Ar(a) => {
+                        fill_f64(&mut mine);
+                        allreduce(env, comm, dtype, rop_v, &mut mine, *a);
+                        result.clear();
+                        result.extend_from_slice(&mine);
+                    }
+                }
+            }
+            env.harness_sync(comm);
+            local_means.push((env.vclock() - t0) / iters as f64);
+            // Acceptance gate: every candidate must produce the same
+            // bits — an algorithm that "wins" by computing something
+            // else is a bug, not a winner.
+            match &reference {
+                None => reference = Some(result),
+                Some(first) => assert_eq!(
+                    first, &result,
+                    "candidate {label} diverges bitwise from {}",
+                    cands[0].0
+                ),
+            }
+        }
+
+        // Cross-rank agreement: max-reduce the per-candidate means so
+        // every rank sees the same (worst-rank) time per candidate.
+        // Max over f64 is order-exact, so explicit recursive doubling
+        // is safe on any p (the non-pow2 fold is handled inside).
+        let mut agreed: Vec<u8> = local_means.iter().flat_map(|t| t.to_le_bytes()).collect();
+        allreduce(
+            env,
+            comm,
+            Datatype::F64,
+            ReduceOp::Max,
+            &mut agreed,
+            AllreduceAlgo::RecursiveDoubling,
+        );
+        let times: Vec<(String, f64)> = cands
+            .iter()
+            .zip(agreed.chunks_exact(8))
+            .map(|((label, _, _), b)| {
+                (label.clone(), f64::from_le_bytes(b.try_into().expect("8-byte chunk")))
+            })
+            .collect();
+        let outcome = crate::select::race(times);
+
+        // Bind the winner into a plan and cache it under the normal
+        // pure key (re-racing an existing key rebinds it in place).
+        let sel = self.selector();
+        let mut ag = crate::select::sanitize_allgather(sel.allgather_algo(p, count), p);
+        let mut bc = sel.bcast_algo(p, count);
+        let mut ar = sel.allreduce_algo(p, count);
+        let (winner_label, winner_seg, winner_cand) = &cands[outcome.winner];
+        match winner_cand {
+            Cand::Ag(a) => ag = *a,
+            Cand::Bc(a) => bc = *a,
+            Cand::Ar(a) => ar = *a,
+        }
+        let key = PlanKey::new(comm, op, count, dtype, rop, Flavor::Pure, 0);
+        let plan = Box::new(PurePlan::with_algos(key, comm, ag, bc, ar));
+        let idx = if let Some(&i) = self.index.get(&key) {
+            self.entries[i].1 = plan;
+            i
+        } else {
+            self.misses += 1;
+            self.entries.push((key, plan));
+            self.index.insert(key, self.entries.len() - 1);
+            self.entries.len() - 1
+        };
+        let report =
+            RaceReport { winner: winner_label.clone(), seg: *winner_seg, times: outcome.times };
+        (idx, report)
     }
 
     /// Look up a live plan by key.
@@ -921,6 +1153,37 @@ mod tests {
         for (hits, misses, got) in out {
             assert_eq!(misses, 1, "one plan built");
             assert_eq!(hits, 3, "three reuses");
+            assert_eq!(got, expect);
+        }
+    }
+
+    #[test]
+    fn raced_plans_agree_across_ranks_and_cache_the_winner() {
+        let out = run_nodes(&[5, 3], |env| {
+            let w = env.world();
+            let mut cache = PlanCache::new();
+            // Race two ops; every rank must fold to the same winner
+            // (divergent winners would deadlock later executes).
+            let (_i, ag_report) =
+                cache.plan_raced(env, &w, CollOp::Allgather, 64, Datatype::U8, None, 2);
+            let (_j, ar_report) = cache.plan_raced(
+                env, &w, CollOp::Allreduce, 4 * 8, Datatype::F64, Some(ReduceOp::Sum), 2,
+            );
+            assert!(ag_report.times.len() >= 2, "multiple candidates raced");
+            assert!(ag_report.times.iter().all(|t| t.1.is_finite() && t.1 > 0.0));
+            // The winner is cached under the normal pure key: the next
+            // typed call is a hit and executes correctly.
+            let mine = payload(w.rank(), 64);
+            let mut got = vec![0u8; 64 * w.size()];
+            cache.allgather(env, &w, Flavor::Pure, &mine, Some(&mut got));
+            assert_eq!(cache.hits(), 1, "raced plan reused, not re-planned");
+            (ag_report.winner, ar_report.winner, got)
+        });
+        let expect: Vec<u8> = (0..8).flat_map(|r| payload(r, 64)).collect();
+        let (ag0, ar0) = (out[0].0.clone(), out[0].1.clone());
+        for (w_ag, w_ar, got) in out {
+            assert_eq!(w_ag, ag0, "allgather winner agreed on every rank");
+            assert_eq!(w_ar, ar0, "allreduce winner agreed on every rank");
             assert_eq!(got, expect);
         }
     }

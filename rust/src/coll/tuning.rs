@@ -1,13 +1,23 @@
 //! Tuned decision rules — which algorithm a production MPI picks at a
 //! given (communicator size, message size), after Open MPI 4.0.1's fixed
 //! decision tables as observed by the paper (§5.2.3, §5.2.4).
+//!
+//! Since PR 9 this module is the **static-fallback provider** of the
+//! selection subsystem: [`crate::select::StaticSelector`] puts these
+//! tables behind the [`crate::select::Selector`] trait, the process-wide
+//! default consults them whenever the persisted tuning table has no
+//! entry, and the thresholds are no longer compile-time constants —
+//! [`Tuning::from_env`] (`HYMPI_*` variables) and the microbench /
+//! `bench_all` CLI flags (`--bcast-small-max`, …) override any of them
+//! per run, so static-table experiments don't require recompiles.
 
 use super::allgather::AllgatherAlgo;
 use super::allreduce::AllreduceAlgo;
 use super::bcast::BcastAlgo;
+use crate::hybrid::allreduce::{AllreduceMethod, METHOD_CUTOFF_BYTES};
 
 /// Message-size thresholds (bytes).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Tuning {
     /// Broadcast: ≤ this → binomial (paper: 2 KB).
     pub bcast_small_max: usize,
@@ -22,6 +32,9 @@ pub struct Tuning {
     /// Allgather: ≤ this per-rank message size → Bruck (log-round,
     /// latency-bound — Open MPI's small-message choice).
     pub allgather_small_max: usize,
+    /// Hybrid allreduce family: ≤ this → §5.2.4 method 2, above →
+    /// method 1 (the Fig. 15 cutoff).
+    pub allreduce_method_max: usize,
 }
 
 impl Default for Tuning {
@@ -33,11 +46,39 @@ impl Default for Tuning {
             pipeline_seg: 128 * 1024,
             allreduce_small_max: 9 * 1024,
             allgather_small_max: 2 * 1024,
+            allreduce_method_max: METHOD_CUTOFF_BYTES,
         }
     }
 }
 
 impl Tuning {
+    /// The defaults with any `HYMPI_*` environment overrides applied
+    /// (read once; unparseable values fall back silently so a typo'd
+    /// experiment degrades to the published tables, not a crash).
+    pub fn from_env() -> Tuning {
+        Tuning::from_lookup(|k| std::env::var(k).ok())
+    }
+
+    /// [`Tuning::from_env`] with the lookup injected — tests override
+    /// thresholds without mutating process environment (env mutation
+    /// races parallel `cargo test` threads).
+    pub fn from_lookup(get: impl Fn(&str) -> Option<String>) -> Tuning {
+        let mut t = Tuning::default();
+        let mut set = |key: &str, slot: &mut usize| {
+            if let Some(v) = get(key).and_then(|v| v.trim().parse::<usize>().ok()) {
+                *slot = v;
+            }
+        };
+        set("HYMPI_BCAST_SMALL_MAX", &mut t.bcast_small_max);
+        set("HYMPI_BCAST_MEDIUM_MAX", &mut t.bcast_medium_max);
+        set("HYMPI_BCAST_SEG", &mut t.bcast_seg);
+        set("HYMPI_PIPELINE_SEG", &mut t.pipeline_seg);
+        set("HYMPI_ALLREDUCE_SMALL_MAX", &mut t.allreduce_small_max);
+        set("HYMPI_ALLGATHER_SMALL_MAX", &mut t.allgather_small_max);
+        set("HYMPI_ALLREDUCE_METHOD_MAX", &mut t.allreduce_method_max);
+        t
+    }
+
     /// Broadcast decision.
     ///
     /// Above `bcast_medium_max` Open MPI switches to its pipeline; in our
@@ -79,11 +120,22 @@ impl Tuning {
             AllreduceAlgo::Rabenseifner
         }
     }
+
+    /// §5.2.4 step-1 method decision for the hybrid allreduce family
+    /// (`bytes` = what the bridge moves per node).
+    pub fn allreduce_method(&self, bytes: usize) -> AllreduceMethod {
+        if bytes <= self.allreduce_method_max {
+            AllreduceMethod::Method2
+        } else {
+            AllreduceMethod::Method1
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::quickprop as props;
 
     #[test]
     fn bcast_thresholds_match_paper() {
@@ -107,5 +159,124 @@ mod tests {
         assert_eq!(t.allgather_algo(768, 800), AllgatherAlgo::Bruck);
         assert_eq!(t.allgather_algo(64, 64 * 1024), AllgatherAlgo::RecursiveDoubling);
         assert_eq!(t.allgather_algo(24, 64 * 1024), AllgatherAlgo::Ring);
+    }
+
+    #[test]
+    fn method_cutoff_matches_fig15() {
+        let t = Tuning::default();
+        assert_eq!(t.allreduce_method(0), AllreduceMethod::Method2);
+        assert_eq!(t.allreduce_method(METHOD_CUTOFF_BYTES), AllreduceMethod::Method2);
+        assert_eq!(t.allreduce_method(METHOD_CUTOFF_BYTES + 1), AllreduceMethod::Method1);
+    }
+
+    #[test]
+    fn exact_threshold_bytes_sit_on_the_small_side() {
+        // Every cutoff is inclusive: `bytes == threshold` takes the
+        // smaller-message algorithm, `threshold + 1` switches.
+        let t = Tuning::default();
+        assert_eq!(t.bcast_algo(64, t.bcast_small_max), BcastAlgo::Binomial);
+        assert!(matches!(t.bcast_algo(64, t.bcast_small_max + 1), BcastAlgo::SplitBinary { .. }));
+        assert!(matches!(t.bcast_algo(64, t.bcast_medium_max), BcastAlgo::SplitBinary { .. }));
+        assert_eq!(t.bcast_algo(64, t.bcast_medium_max + 1), BcastAlgo::ScatterAllgather);
+        assert_eq!(t.bcast_algo(8, t.bcast_medium_max + 1), BcastAlgo::Pipeline { seg: t.pipeline_seg });
+        assert_eq!(t.allgather_algo(24, t.allgather_small_max), AllgatherAlgo::Bruck);
+        assert_eq!(t.allgather_algo(24, t.allgather_small_max + 1), AllgatherAlgo::Ring);
+        assert_eq!(t.allgather_algo(32, t.allgather_small_max + 1), AllgatherAlgo::RecursiveDoubling);
+        assert_eq!(t.allreduce_algo(4, t.allreduce_small_max), AllreduceAlgo::RecursiveDoubling);
+        assert_eq!(t.allreduce_algo(4, t.allreduce_small_max + 1), AllreduceAlgo::Rabenseifner);
+    }
+
+    #[test]
+    fn tiny_communicators_degenerate_correctly() {
+        let t = Tuning::default();
+        // p <= 2: every broadcast is binomial regardless of size (a
+        // 2-rank "tree" is one send; segmentation buys nothing).
+        for bytes in [0, 1, 2 * 1024, 362 * 1024, 1 << 24] {
+            assert_eq!(t.bcast_algo(1, bytes), BcastAlgo::Binomial);
+            assert_eq!(t.bcast_algo(2, bytes), BcastAlgo::Binomial);
+        }
+        // p == 1 allgather is the ring no-op; p == 2 follows the tables
+        // (2 is a power of two, so large messages take RD).
+        assert_eq!(t.allgather_algo(1, 1 << 24), AllgatherAlgo::Ring);
+        assert_eq!(t.allgather_algo(2, 16), AllgatherAlgo::Bruck);
+        assert_eq!(t.allgather_algo(2, 1 << 24), AllgatherAlgo::RecursiveDoubling);
+        // Zero-byte edge: always the small-message algorithm.
+        assert_eq!(t.allgather_algo(24, 0), AllgatherAlgo::Bruck);
+        assert_eq!(t.allreduce_algo(2, 0), AllreduceAlgo::RecursiveDoubling);
+    }
+
+    #[test]
+    fn from_lookup_overrides_only_parseable_keys() {
+        let t = Tuning::from_lookup(|k| match k {
+            "HYMPI_BCAST_SMALL_MAX" => Some("4096".to_string()),
+            "HYMPI_ALLREDUCE_METHOD_MAX" => Some(" 1024 ".to_string()),
+            "HYMPI_PIPELINE_SEG" => Some("not-a-number".to_string()),
+            _ => None,
+        });
+        assert_eq!(t.bcast_small_max, 4096);
+        assert!(matches!(t.bcast_algo(64, 4096), BcastAlgo::Binomial));
+        assert_eq!(t.allreduce_method(1024), AllreduceMethod::Method2);
+        assert_eq!(t.allreduce_method(1025), AllreduceMethod::Method1);
+        // Garbage value: silently keeps the default.
+        assert_eq!(t.pipeline_seg, Tuning::default().pipeline_seg);
+        // No overrides at all: identical to the published tables.
+        assert_eq!(Tuning::from_lookup(|_| None), Tuning::default());
+    }
+
+    #[test]
+    fn every_point_maps_to_exactly_one_algorithm_static_and_tuned() {
+        // The ISSUE-9 satellite property: under both the static tables
+        // and the tuned (model) selector, every (p, bytes) point yields
+        // exactly one bound, viable algorithm per op — no Auto leaks,
+        // no RD allgather off powers of two. Exhaustive over the
+        // decision structure is impossible; random points + the exact
+        // thresholds (±1) cover every region boundary.
+        use crate::select::{ModelSelector, Selector, StaticSelector};
+        let selectors: [&dyn Selector; 2] = [
+            &StaticSelector::default(),
+            &ModelSelector::new(crate::mpi::net::NetModel::infiniband(), 16),
+        ];
+        let t = Tuning::default();
+        let edges = [
+            t.bcast_small_max, t.bcast_medium_max, t.allgather_small_max,
+            t.allreduce_small_max, t.allreduce_method_max,
+        ];
+        props::run(
+            "one-algorithm-per-point",
+            props::default_cases(),
+            |r| {
+                let p = 1 + r.below(1024);
+                let bytes = if r.below(2) == 0 {
+                    // Half the cases land exactly on a threshold ± 1.
+                    let e = edges[r.below(edges.len())];
+                    (e + r.below(3)).saturating_sub(1)
+                } else {
+                    r.below(1 << 22)
+                };
+                (p, bytes)
+            },
+            |&(p, bytes)| {
+                for s in selectors {
+                    let who = s.describe();
+                    if matches!(s.bcast_algo(p, bytes), BcastAlgo::Auto) {
+                        return Err(format!("{who}: bcast Auto at ({p},{bytes})"));
+                    }
+                    let ag = s.allgather_algo(p, bytes);
+                    if matches!(ag, AllgatherAlgo::Auto) {
+                        return Err(format!("{who}: allgather Auto at ({p},{bytes})"));
+                    }
+                    if ag == AllgatherAlgo::RecursiveDoubling && !p.is_power_of_two() {
+                        return Err(format!("{who}: RD at non-pow2 p={p}"));
+                    }
+                    if matches!(s.allreduce_algo(p, bytes), AllreduceAlgo::Auto) {
+                        return Err(format!("{who}: allreduce Auto at ({p},{bytes})"));
+                    }
+                    if matches!(s.allreduce_method(bytes), AllreduceMethod::Tuned) {
+                        return Err(format!("{who}: method Tuned at {bytes}"));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -2,7 +2,7 @@
 //! per-collective handles.
 //!
 //! The paper's §4 wrappers grew here as a pile of free functions, each
-//! with its own setup object (`CommPackage`, `AllgatherParam`,
+//! with its own setup object (`comm_package`, `AllgatherParam`,
 //! `TransTables`, `alloc_*_win`) — exactly the leaked design detail §4
 //! warns the user-facing API against. [`HybridCtx`] folds all of it
 //! behind two calls:
@@ -35,14 +35,12 @@
 //! node block, bound to NIC lane `j % nic_lanes` so the stripes genuinely
 //! overlap on the wire ([`NetModel::nic_lanes`]). With `k = 1` every code
 //! path, message and virtual-time charge is bit-identical to the
-//! pre-session single-leader implementation (the deprecated
-//! [`CommPackage`](super::package::CommPackage) shim is a thin wrapper
-//! over this case).
+//! pre-session single-leader implementation.
 //!
 //! [`NetModel::nic_lanes`]: crate::mpi::net::NetModel::nic_lanes
 
 use super::allgather::AllgatherParam;
-use super::allreduce::{AllreduceMethod, METHOD_CUTOFF_BYTES};
+use super::allreduce::AllreduceMethod;
 use super::bcast::TransTables;
 use super::progress::{self, HyReq, RootPolicy, Scope, Schedule, Stage};
 use super::shmem::HyWin;
@@ -990,12 +988,15 @@ fn assert_block_placement(env: &ProcEnv, op: &str) {
 
 fn resolve_method(method: AllreduceMethod, bytes: usize) -> AllreduceMethod {
     match method {
+        // Tuned resolves once at `*_init` through the installed
+        // process-wide selector (static tables → the Fig. 15
+        // `METHOD_CUTOFF_BYTES`; a tuned table or autotuner may move
+        // the cutoff). The resolved method is bound into the compiled
+        // schedule; later selector swaps never change a live handle.
         AllreduceMethod::Tuned => {
-            if bytes <= METHOD_CUTOFF_BYTES {
-                AllreduceMethod::Method2
-            } else {
-                AllreduceMethod::Method1
-            }
+            let m = crate::select::global().allreduce_method(bytes);
+            debug_assert!(m != AllreduceMethod::Tuned, "selector returned an unbound method");
+            m
         }
         m => m,
     }

@@ -26,7 +26,7 @@
 //!
 //! | paper (§4) | here |
 //! |---|---|
-//! | `struct comm_package` | [`HybridCtx`] (deprecated shim: [`package::CommPackage`]) |
+//! | `struct comm_package` | [`HybridCtx`] |
 //! | `Wrapper_MPI_ShmemBridgeComm_create` | [`HybridCtx::create`] |
 //! | `Wrapper_MPI_Sharedmemory_alloc` | [`HybridCtx::alloc_shared`] (inside every `*_init`) |
 //! | `Wrapper_Get_localpointer` | [`shmem::HyWin::local_ptr`] / [`HyColl::result_view`] |
@@ -88,7 +88,6 @@ pub mod allreduce;
 pub mod bcast;
 pub mod ctx;
 pub mod gather;
-pub mod package;
 pub mod progress;
 pub mod reduce_scatter;
 pub mod scatter;
@@ -99,8 +98,6 @@ pub use allgather::AllgatherParam;
 pub use allreduce::{AllreduceMethod, METHOD_CUTOFF_BYTES};
 pub use bcast::TransTables;
 pub use ctx::{EpochReport, HyColl, HyOp, HybridCtx, LeaderPolicy, Resilience, RetryPolicy};
-#[allow(deprecated)]
-pub use package::CommPackage;
 pub use progress::{default_reelect, wait_all, wait_any, ElectRoot, HyReq, Reelection, RootPolicy};
 pub use shmem::HyWin;
 pub use sync::SyncScheme;

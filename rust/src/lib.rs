@@ -32,6 +32,11 @@
 //!   verifier over the compiled stage schedules (deadlock, barrier
 //!   arity, send/recv matching, bounds) and a vector-clock
 //!   happens-before race detector over shared-window accesses,
+//! - [`select`] — the UCC-style algorithm-selection subsystem: every
+//!   hard-coded algorithm choice routed through one [`select::Selector`]
+//!   layer, with a candidate registry (closed-form α-β cost per viable
+//!   algorithm), an online autotuner (cost-model or race at `*_init`),
+//!   and a versioned persisted tuning table (`TUNING.json`),
 //! - [`coordinator`] — cluster presets, rank placement, the thread-per-rank
 //!   engine, the OSU-style measurement harness and report writers,
 //! - [`runtime`] — a PJRT client (via the `xla` crate) that loads the
@@ -60,6 +65,7 @@ pub mod hybrid;
 pub mod kernels;
 pub mod mpi;
 pub mod runtime;
+pub mod select;
 pub mod util;
 
 /// Crate-wide result alias (backed by [`util::Error`]; the default build

@@ -4,6 +4,9 @@
 //! hympi figures <name|all> [--out DIR] [--scale X] [--fast]
 //! hympi microbench <allgather|bcast|allreduce|reduce-scatter|gather|scatter>
 //!                  [--preset P] [--nodes N] [--bytes B] [--leaders K] [--fast]
+//!                  [--bcast-small-max B] [--bcast-medium-max B] [--bcast-seg B]
+//!                  [--pipeline-seg B] [--allreduce-small-max B]
+//!                  [--allgather-small-max B] [--allreduce-method-max B]
 //! hympi kernel <summa|poisson|bpmf> [--variant V] [--nodes N] [--n N]
 //!              [--backend B] [--scale X]
 //! hympi info
@@ -25,10 +28,35 @@ fn opt<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
 }
 
+/// Apply the `--bcast-small-max` family of threshold flags: if any is
+/// present, install a [`StaticSelector`](hympi::select::StaticSelector)
+/// over the overridden tables so the whole run — `Auto` arms included —
+/// uses them. Flags stack on top of any `HYMPI_*` env overrides.
+fn apply_tuning_flags(args: &[String]) {
+    let mut t = hympi::coll::Tuning::from_env();
+    let mut any = false;
+    let mut set = |name: &str, slot: &mut usize| {
+        if let Some(v) = opt(args, name).and_then(|v| v.parse::<usize>().ok()) {
+            *slot = v;
+            any = true;
+        }
+    };
+    set("--bcast-small-max", &mut t.bcast_small_max);
+    set("--bcast-medium-max", &mut t.bcast_medium_max);
+    set("--bcast-seg", &mut t.bcast_seg);
+    set("--pipeline-seg", &mut t.pipeline_seg);
+    set("--allreduce-small-max", &mut t.allreduce_small_max);
+    set("--allgather-small-max", &mut t.allgather_small_max);
+    set("--allreduce-method-max", &mut t.allreduce_method_max);
+    if any {
+        hympi::select::install(std::sync::Arc::new(hympi::select::StaticSelector::new(t)));
+    }
+}
+
 fn usage() -> ! {
     eprintln!(
         "usage:\n  hympi figures <table1|table2|fig12..fig19|all> [--out DIR] [--scale X] [--fast]\n  \
-         hympi microbench <allgather|bcast|allreduce|reduce-scatter|gather|scatter> [--preset vulcan-sb|vulcan-hsw|hazelhen] [--nodes N] [--bytes B] [--leaders K] [--fast]\n  \
+         hympi microbench <allgather|bcast|allreduce|reduce-scatter|gather|scatter> [--preset vulcan-sb|vulcan-hsw|hazelhen] [--nodes N] [--bytes B] [--leaders K] [--fast] [--bcast-small-max B] [--bcast-medium-max B] [--bcast-seg B] [--pipeline-seg B] [--allreduce-small-max B] [--allgather-small-max B] [--allreduce-method-max B]\n  \
          hympi kernel <summa|poisson|bpmf> [--variant pure-mpi|mpi+mpi|mpi+mpi-overlap|mpi+openmp] [--nodes N] [--n N] [--backend auto|pjrt|native|modeled|phantom] [--scale X]\n  \
          hympi info"
     );
@@ -59,6 +87,7 @@ fn main() -> hympi::Result<()> {
             let bytes: usize = opt(&args, "--bytes").and_then(|v| v.parse().ok()).unwrap_or(800);
             let leaders: usize = opt(&args, "--leaders").and_then(|v| v.parse().ok()).unwrap_or(1);
             let fast = flag(&args, "--fast");
+            apply_tuning_flags(&args);
             let spec = || ClusterSpec::preset(preset, nodes);
             use hympi::coll::{CollOp, Flavor};
             use hympi::figures::common as mb;

@@ -1,0 +1,205 @@
+//! The algorithm-selection subsystem (UCC-style): one layer through
+//! which **every** algorithm choice in the library flows.
+//!
+//! Production collective stacks (UCC — see SNIPPETS.md 1–2) converged on
+//! the same shape this module implements: algorithm implementations are
+//! *components*, a *selection layer* scores the viable candidates for a
+//! given `(op, message size, communicator size, topology)` point, and
+//! "repetitive collective operations (init once and invoke multiple
+//! times)" amortize the cost of choosing well. Our persistent-collective
+//! engine ([`crate::coll::PlanCache`]) already is the repetitive-
+//! collective model; this module supplies the selection layer:
+//!
+//! - [`Selector`] — the one trait behind which every decision lives.
+//!   The pure-MPI `Auto` dispatches ([`crate::coll::bcast`],
+//!   [`crate::coll::allgather`], [`crate::coll::allreduce`] — and through
+//!   them the hierarchical collectives of [`crate::coll::hier`] and the
+//!   hybrid layer's internal bridge collectives), plan-time resolution in
+//!   [`crate::coll::PlanCache`], and the §5.2.4 step-1 method resolution
+//!   in `HybridCtx::*_init` all consult a `Selector` instead of
+//!   hard-coded tables.
+//! - [`StaticSelector`] — the fallback provider: the Open MPI 4.0.1
+//!   decision tables of [`crate::coll::Tuning`] (overridable per-run via
+//!   `Tuning::from_env` / CLI flags) behind the trait.
+//! - [`registry`](self::registry) — the candidate-plan registry: every
+//!   *viable* `(algorithm, segment size)` for a point, each with a
+//!   closed-form α-β cost estimate derived from [`crate::mpi::NetModel`]
+//!   ([`ModelSelector`] picks the arg-min).
+//! - [`table`](self::table) — the versioned persisted tuning table
+//!   (`TUNING.json`, committed like the arXiv 2007.06892 per-cluster
+//!   tables; [`TableSelector`] consults it before any fallback).
+//! - [`tuner`](self::tuner) — the online [`Autotuner`]: consult the
+//!   table, else cost-model the registry; plus the race helper that
+//!   `PlanCache::plan_raced`, `bin/tune_all` and `bench_all --tuned` use
+//!   to time candidates empirically on persistent handles.
+//!
+//! ## The process-wide selector
+//!
+//! The `Auto` dispatch sites sit deep inside free functions with no
+//! session object to hang state on, so the installed selector is
+//! process-wide: [`global`] reads it, [`install`] swaps it (returning
+//! the previous one). The default is the static tables wrapped behind
+//! the committed `TUNING.json` (if present and non-empty) — i.e. the
+//! table is *loaded once, consulted before any re-tuning*, exactly the
+//! UCC persisted-tuning shape. Binaries (`bench_all --tuned`,
+//! `tune_all`, `verify_schedules`) install richer selectors; library
+//! tests never install, so `cargo test` always sees the static default.
+
+pub mod registry;
+pub mod table;
+pub mod tuner;
+
+use crate::coll::allgather::AllgatherAlgo;
+use crate::coll::allreduce::AllreduceAlgo;
+use crate::coll::bcast::BcastAlgo;
+use crate::coll::tuning::Tuning;
+use crate::hybrid::allreduce::AllreduceMethod;
+use std::sync::{Arc, OnceLock, RwLock};
+
+pub use registry::{ModelSelector, SelectPoint};
+pub use table::{TableSelector, TuningTable, TABLE_VERSION};
+pub use tuner::{race, Autotuner, PinnedSelector, RaceOutcome, TuneMode};
+
+/// One layer, every choice: the decisions a production MPI's tuned
+/// module makes, as a trait.
+///
+/// Contract: implementations return a *bound, viable* choice — never
+/// `Auto`/`Tuned`, never `RecursiveDoubling` allgather on a
+/// non-power-of-two communicator (callers sanitize defensively, see
+/// [`sanitize_allgather`]).
+pub trait Selector: Send + Sync {
+    /// Human-readable name for reports (`"static"`, `"model"`, …).
+    fn describe(&self) -> String;
+
+    /// Broadcast algorithm for a `p`-rank communicator, `bytes` payload.
+    fn bcast_algo(&self, p: usize, bytes: usize) -> BcastAlgo;
+
+    /// Allgather algorithm (`bytes` = per-rank contribution).
+    fn allgather_algo(&self, p: usize, bytes: usize) -> AllgatherAlgo;
+
+    /// Allreduce algorithm (`bytes` = operand size).
+    fn allreduce_algo(&self, p: usize, bytes: usize) -> AllreduceAlgo;
+
+    /// §5.2.4 step-1 method for the hybrid allreduce family (`bytes` =
+    /// the size the bridge moves per node).
+    fn allreduce_method(&self, bytes: usize) -> AllreduceMethod;
+}
+
+/// The static-fallback provider: the hard-coded Open MPI 4.0.1 decision
+/// tables ([`Tuning`]) behind the [`Selector`] trait.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StaticSelector {
+    tuning: Tuning,
+}
+
+impl StaticSelector {
+    pub fn new(tuning: Tuning) -> StaticSelector {
+        StaticSelector { tuning }
+    }
+
+    /// The decision tables this selector serves.
+    pub fn tuning(&self) -> &Tuning {
+        &self.tuning
+    }
+}
+
+impl Selector for StaticSelector {
+    fn describe(&self) -> String {
+        "static (Open MPI 4.0.1 tables)".to_string()
+    }
+
+    fn bcast_algo(&self, p: usize, bytes: usize) -> BcastAlgo {
+        self.tuning.bcast_algo(p, bytes)
+    }
+
+    fn allgather_algo(&self, p: usize, bytes: usize) -> AllgatherAlgo {
+        self.tuning.allgather_algo(p, bytes)
+    }
+
+    fn allreduce_algo(&self, p: usize, bytes: usize) -> AllreduceAlgo {
+        self.tuning.allreduce_algo(p, bytes)
+    }
+
+    fn allreduce_method(&self, bytes: usize) -> AllreduceMethod {
+        self.tuning.allreduce_method(bytes)
+    }
+}
+
+/// Defensive viability clamp for allgather choices: recursive doubling
+/// asserts a power-of-two communicator, so a selector (or a stale table
+/// entry) naming it for any other `p` degrades to ring instead of
+/// aborting the run.
+pub fn sanitize_allgather(algo: AllgatherAlgo, p: usize) -> AllgatherAlgo {
+    match algo {
+        AllgatherAlgo::RecursiveDoubling if !p.is_power_of_two() => AllgatherAlgo::Ring,
+        a => a,
+    }
+}
+
+static GLOBAL: OnceLock<RwLock<Arc<dyn Selector>>> = OnceLock::new();
+
+fn cell() -> &'static RwLock<Arc<dyn Selector>> {
+    GLOBAL.get_or_init(|| RwLock::new(default_selector()))
+}
+
+/// The default process-wide selector: the static tables (with any
+/// `HYMPI_*` env overrides applied once), wrapped behind the committed
+/// tuning table when one is present and non-empty — so persisted
+/// winners are consulted before the static fallback, without any
+/// behavioral change while `TUNING.json` is the empty schema
+/// placeholder. `HYMPI_TUNING=off` skips the table entirely.
+fn default_selector() -> Arc<dyn Selector> {
+    let stat: Arc<dyn Selector> = Arc::new(StaticSelector::new(Tuning::from_env()));
+    if std::env::var("HYMPI_TUNING").map(|v| v == "off").unwrap_or(false) {
+        return stat;
+    }
+    match TuningTable::load(&table::default_path()) {
+        Ok(t) if !t.entries.is_empty() => Arc::new(TableSelector::new(t, stat)),
+        _ => stat,
+    }
+}
+
+/// The installed process-wide selector (a cheap `Arc` clone).
+pub fn global() -> Arc<dyn Selector> {
+    cell().read().expect("selector lock").clone()
+}
+
+/// Install a process-wide selector, returning the previous one (so a
+/// driver can restore it). Binaries only; library code and tests should
+/// thread selectors explicitly (`PlanCache::with_selector`).
+pub fn install(s: Arc<dyn Selector>) -> Arc<dyn Selector> {
+    std::mem::replace(&mut *cell().write().expect("selector lock"), s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_selector_matches_the_tables() {
+        let s = StaticSelector::default();
+        let t = Tuning::default();
+        for (p, b) in [(2, 100), (8, 4096), (32, 500_000), (64, 9 * 1024)] {
+            assert_eq!(s.bcast_algo(p, b), t.bcast_algo(p, b));
+            assert_eq!(s.allgather_algo(p, b), t.allgather_algo(p, b));
+            assert_eq!(s.allreduce_algo(p, b), t.allreduce_algo(p, b));
+        }
+        assert_eq!(s.allreduce_method(2048), AllreduceMethod::Method2);
+        assert_eq!(s.allreduce_method(2049), AllreduceMethod::Method1);
+    }
+
+    #[test]
+    fn sanitize_degrades_rd_on_non_pow2() {
+        assert_eq!(sanitize_allgather(AllgatherAlgo::RecursiveDoubling, 8), AllgatherAlgo::RecursiveDoubling);
+        assert_eq!(sanitize_allgather(AllgatherAlgo::RecursiveDoubling, 12), AllgatherAlgo::Ring);
+        assert_eq!(sanitize_allgather(AllgatherAlgo::Bruck, 12), AllgatherAlgo::Bruck);
+    }
+
+    #[test]
+    fn global_default_is_static_or_table_backed() {
+        // Never a panic, and always a bound decision (not Auto/Tuned).
+        let g = global();
+        assert!(!matches!(g.bcast_algo(8, 4096), BcastAlgo::Auto));
+        assert!(!matches!(g.allreduce_method(100), AllreduceMethod::Tuned));
+    }
+}

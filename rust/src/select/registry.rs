@@ -1,0 +1,523 @@
+//! The candidate-plan registry: every viable `(algorithm, segment
+//! size)` for a selection point, each with a closed-form α-β cost
+//! estimate derived from the [`NetModel`].
+//!
+//! The estimates are *rankings*, not predictions: they reuse the same
+//! link laws the simulator charges (`LinkParams::transfer`, the
+//! shared-memory double copy, the reduction throughput) but collapse
+//! per-hop topology to a mixed intra/inter-node average, so absolute
+//! values are coarse while the crossovers land where the paper's tuned
+//! tables put them. When exactness matters, the race path
+//! ([`super::tuner::race`] / `PlanCache::plan_raced`) times candidates
+//! on the live engine instead and the model is only the tie-breaker
+//! seed.
+
+use crate::coll::allgather::AllgatherAlgo;
+use crate::coll::allreduce::AllreduceAlgo;
+use crate::coll::bcast::BcastAlgo;
+use crate::coll::tuning::Tuning;
+use crate::hybrid::allreduce::AllreduceMethod;
+use crate::mpi::net::NetModel;
+
+use super::Selector;
+
+/// One selection point: the coordinates every decision keys on.
+#[derive(Clone, Copy, Debug)]
+pub struct SelectPoint {
+    /// Communicator size.
+    pub p: usize,
+    /// The op's natural message size in bytes (per-rank block for
+    /// allgather, payload for bcast, operand for allreduce).
+    pub bytes: usize,
+    /// Ranks per node (topology hint; 1 = every rank on its own node).
+    pub ranks_per_node: usize,
+}
+
+impl SelectPoint {
+    pub fn new(p: usize, bytes: usize, ranks_per_node: usize) -> SelectPoint {
+        SelectPoint { p, bytes, ranks_per_node: ranks_per_node.max(1) }
+    }
+}
+
+/// A scored candidate.
+#[derive(Clone, Copy, Debug)]
+pub struct Candidate<A> {
+    pub algo: A,
+    /// Closed-form cost estimate (µs).
+    pub cost_us: f64,
+}
+
+/// Average cost of one tree/ring hop of `bytes` at this point: hops of
+/// a flat algorithm under block placement are intra-node with
+/// probability `(rpn − 1)/(p − 1)`-ish; we use the byte-weighted mix of
+/// the two link laws. Single-node communicators are purely intra-node.
+fn hop_us(net: &NetModel, pt: SelectPoint, bytes: usize) -> f64 {
+    let intra = net.transfer(true, bytes);
+    if pt.p <= pt.ranks_per_node {
+        return intra;
+    }
+    let inter = net.transfer(false, bytes) + net.send_overhead_us + net.recv_overhead_us;
+    let frac_intra = (pt.ranks_per_node.saturating_sub(1)) as f64 / (pt.p - 1) as f64;
+    frac_intra * intra + (1.0 - frac_intra) * inter
+}
+
+fn log2_ceil(p: usize) -> usize {
+    (usize::BITS - p.saturating_sub(1).leading_zeros()) as usize
+}
+
+fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+// ---------------------------------------------------------------------
+// Closed-form per-algorithm estimates.
+// ---------------------------------------------------------------------
+
+/// Binomial tree: `⌈log2 p⌉` serial full-message hops on the critical
+/// path.
+pub fn cost_bcast_binomial(net: &NetModel, pt: SelectPoint) -> f64 {
+    log2_ceil(pt.p) as f64 * hop_us(net, pt, pt.bytes)
+}
+
+/// Split-binary tree: each half pipelines `seg`-sized chunks down a
+/// depth-`⌈log2 p⌉−1` binary subtree (each parent forwards every
+/// segment to *two* children serially, hence the factor 2 per slot),
+/// then subtree pairs exchange halves.
+pub fn cost_bcast_split_binary(net: &NetModel, pt: SelectPoint, seg: usize) -> f64 {
+    let half = (pt.bytes / 2).max(1);
+    let seg = seg.min(half).max(1);
+    let slots = log2_ceil(pt.p).saturating_sub(1) + div_ceil(half, seg) - 1;
+    slots as f64 * 2.0 * hop_us(net, pt, seg) + hop_us(net, pt, half)
+}
+
+/// Segmented chain: `p − 1 + nseg − 1` pipeline slots of one segment.
+pub fn cost_bcast_pipeline(net: &NetModel, pt: SelectPoint, seg: usize) -> f64 {
+    let seg = seg.min(pt.bytes).max(1);
+    let slots = pt.p - 1 + div_ceil(pt.bytes, seg) - 1;
+    slots as f64 * hop_us(net, pt, seg)
+}
+
+/// Van de Geijn: binomial scatter of halving blocks, then a ring
+/// allgather of `bytes/p` blocks.
+pub fn cost_bcast_scatter_allgather(net: &NetModel, pt: SelectPoint) -> f64 {
+    let mut cost = 0.0;
+    let mut blk = pt.bytes;
+    for _ in 0..log2_ceil(pt.p) {
+        blk = (blk / 2).max(1);
+        cost += hop_us(net, pt, blk);
+    }
+    cost + (pt.p - 1) as f64 * hop_us(net, pt, (pt.bytes / pt.p).max(1))
+}
+
+/// Bruck: `⌈log2 p⌉` rounds, round `i` moving `min(2^i, p − 2^i)`
+/// blocks.
+pub fn cost_allgather_bruck(net: &NetModel, pt: SelectPoint) -> f64 {
+    let m = pt.bytes.max(1);
+    let mut cost = 0.0;
+    let mut sent = 1usize;
+    while sent < pt.p {
+        cost += hop_us(net, pt, sent.min(pt.p - sent) * m);
+        sent *= 2;
+    }
+    cost
+}
+
+/// Recursive doubling (power-of-two only): round `i` exchanges `2^i`
+/// blocks.
+pub fn cost_allgather_rd(net: &NetModel, pt: SelectPoint) -> f64 {
+    let m = pt.bytes.max(1);
+    (0..log2_ceil(pt.p)).map(|i| hop_us(net, pt, (1usize << i) * m)).sum()
+}
+
+/// Ring: `p − 1` single-block neighbor steps.
+pub fn cost_allgather_ring(net: &NetModel, pt: SelectPoint) -> f64 {
+    (pt.p - 1) as f64 * hop_us(net, pt, pt.bytes.max(1))
+}
+
+/// Recursive doubling allreduce: `⌈log2 p⌉` full-operand exchange +
+/// combine rounds.
+pub fn cost_allreduce_rd(net: &NetModel, pt: SelectPoint) -> f64 {
+    log2_ceil(pt.p) as f64 * (hop_us(net, pt, pt.bytes) + net.reduce_cost(pt.bytes))
+}
+
+/// Rabenseifner: recursive-halving reduce-scatter, then a
+/// recursive-doubling allgather of the same halving block sizes.
+pub fn cost_allreduce_rabenseifner(net: &NetModel, pt: SelectPoint) -> f64 {
+    let mut cost = 0.0;
+    let mut blk = pt.bytes;
+    for _ in 0..log2_ceil(pt.p) {
+        blk = (blk / 2).max(1);
+        cost += 2.0 * hop_us(net, pt, blk) + net.reduce_cost(blk);
+    }
+    cost
+}
+
+/// §5.2.4 method 1 at bridge block `bytes` over `nnodes` leaders.
+/// The on-node pre-reduction into the shared window is common to both
+/// methods and cancels in the ranking, so only the differences are
+/// charged: a recursive-doubling bridge allreduce (compute once), plus
+/// the extra release synchronization to publish the reduced result to
+/// the node (spin release/observe pair bracketed by window syncs).
+pub fn cost_method1(net: &NetModel, nnodes: usize, _rpn: usize, bytes: usize) -> f64 {
+    let bridge = log2_ceil(nnodes) as f64 * (net.transfer(false, bytes) + net.reduce_cost(bytes));
+    bridge + net.spin_release_us + net.spin_poll_us + 2.0 * net.win_sync_us
+}
+
+/// §5.2.4 method 2: leaders allgather the per-node inputs over the
+/// bridge (recursive doubling), then every node combines all `nnodes`
+/// contributions locally — redundant arithmetic and memory traffic
+/// (`(nnodes−1)·bytes` streamed per node) that buys away method 1's
+/// publish synchronization, hence the small-message winner.
+pub fn cost_method2(net: &NetModel, nnodes: usize, _rpn: usize, bytes: usize) -> f64 {
+    let bridge: f64 =
+        (0..log2_ceil(nnodes)).map(|i| net.transfer(false, (1usize << i) * bytes)).sum();
+    bridge + (nnodes.saturating_sub(1)) as f64 * (net.reduce_cost(bytes) + net.memcpy(bytes))
+}
+
+// ---------------------------------------------------------------------
+// Candidate enumeration (viability-filtered).
+// ---------------------------------------------------------------------
+
+/// Segment-size grid for the segmented broadcasts: the static table's
+/// own segments plus one step either side, deduplicated.
+fn seg_grid(base: usize) -> Vec<usize> {
+    let mut v = vec![base / 4, base, base * 4];
+    v.retain(|&s| s >= 1024);
+    v.dedup();
+    v
+}
+
+/// Every viable broadcast candidate at `pt`, scored.
+pub fn bcast_candidates(net: &NetModel, pt: SelectPoint, t: &Tuning) -> Vec<Candidate<BcastAlgo>> {
+    let mut out = vec![Candidate { algo: BcastAlgo::Binomial, cost_us: cost_bcast_binomial(net, pt) }];
+    if pt.p > 2 {
+        for seg in seg_grid(t.bcast_seg) {
+            out.push(Candidate {
+                algo: BcastAlgo::SplitBinary { seg },
+                cost_us: cost_bcast_split_binary(net, pt, seg),
+            });
+        }
+        for seg in seg_grid(t.pipeline_seg) {
+            out.push(Candidate {
+                algo: BcastAlgo::Pipeline { seg },
+                cost_us: cost_bcast_pipeline(net, pt, seg),
+            });
+        }
+        if pt.bytes >= pt.p {
+            out.push(Candidate {
+                algo: BcastAlgo::ScatterAllgather,
+                cost_us: cost_bcast_scatter_allgather(net, pt),
+            });
+        }
+    }
+    out
+}
+
+/// Every viable allgather candidate at `pt`, scored. Recursive doubling
+/// is enumerated only on power-of-two communicators.
+pub fn allgather_candidates(net: &NetModel, pt: SelectPoint) -> Vec<Candidate<AllgatherAlgo>> {
+    let mut out = vec![
+        Candidate { algo: AllgatherAlgo::Bruck, cost_us: cost_allgather_bruck(net, pt) },
+        Candidate { algo: AllgatherAlgo::Ring, cost_us: cost_allgather_ring(net, pt) },
+    ];
+    if pt.p.is_power_of_two() && pt.p > 1 {
+        out.push(Candidate {
+            algo: AllgatherAlgo::RecursiveDoubling,
+            cost_us: cost_allgather_rd(net, pt),
+        });
+    }
+    out
+}
+
+/// Both allreduce candidates, scored (the non-power-of-two fold is
+/// shared by both implementations, so it cancels in the ranking).
+pub fn allreduce_candidates(net: &NetModel, pt: SelectPoint) -> Vec<Candidate<AllreduceAlgo>> {
+    vec![
+        Candidate { algo: AllreduceAlgo::RecursiveDoubling, cost_us: cost_allreduce_rd(net, pt) },
+        Candidate { algo: AllreduceAlgo::Rabenseifner, cost_us: cost_allreduce_rabenseifner(net, pt) },
+    ]
+}
+
+/// Both §5.2.4 step-1 methods, scored.
+pub fn method_candidates(
+    net: &NetModel,
+    nnodes: usize,
+    rpn: usize,
+    bytes: usize,
+) -> Vec<Candidate<AllreduceMethod>> {
+    vec![
+        Candidate { algo: AllreduceMethod::Method1, cost_us: cost_method1(net, nnodes, rpn, bytes) },
+        Candidate { algo: AllreduceMethod::Method2, cost_us: cost_method2(net, nnodes, rpn, bytes) },
+    ]
+}
+
+/// Arg-min over a candidate list (first wins ties — enumeration order
+/// is deterministic, so every rank picks the same winner).
+pub fn best<A: Copy>(cands: &[Candidate<A>]) -> Candidate<A> {
+    let mut win = cands[0];
+    for c in &cands[1..] {
+        if c.cost_us < win.cost_us {
+            win = *c;
+        }
+    }
+    win
+}
+
+// ---------------------------------------------------------------------
+// Algo <-> name mapping (tuning-table entries, reports).
+// ---------------------------------------------------------------------
+
+/// `(name, seg)` of a broadcast algorithm (`seg` = 0 when unsegmented).
+pub fn bcast_name(a: BcastAlgo) -> (&'static str, usize) {
+    match a {
+        BcastAlgo::Binomial => ("binomial", 0),
+        BcastAlgo::SplitBinary { seg } => ("split_binary", seg),
+        BcastAlgo::Pipeline { seg } => ("pipeline", seg),
+        BcastAlgo::ScatterAllgather => ("scatter_allgather", 0),
+        BcastAlgo::Auto => ("auto", 0),
+    }
+}
+
+pub fn allgather_name(a: AllgatherAlgo) -> &'static str {
+    match a {
+        AllgatherAlgo::Bruck => "bruck",
+        AllgatherAlgo::RecursiveDoubling => "recursive_doubling",
+        AllgatherAlgo::Ring => "ring",
+        AllgatherAlgo::Auto => "auto",
+    }
+}
+
+pub fn allreduce_name(a: AllreduceAlgo) -> &'static str {
+    match a {
+        AllreduceAlgo::RecursiveDoubling => "recursive_doubling",
+        AllreduceAlgo::Rabenseifner => "rabenseifner",
+        AllreduceAlgo::Auto => "auto",
+    }
+}
+
+pub fn method_name(m: AllreduceMethod) -> &'static str {
+    match m {
+        AllreduceMethod::Method1 => "method1",
+        AllreduceMethod::Method2 => "method2",
+        AllreduceMethod::Tuned => "tuned",
+    }
+}
+
+pub fn parse_bcast(name: &str, seg: usize) -> Option<BcastAlgo> {
+    match name {
+        "binomial" => Some(BcastAlgo::Binomial),
+        "split_binary" if seg > 0 => Some(BcastAlgo::SplitBinary { seg }),
+        "pipeline" if seg > 0 => Some(BcastAlgo::Pipeline { seg }),
+        "scatter_allgather" => Some(BcastAlgo::ScatterAllgather),
+        _ => None,
+    }
+}
+
+pub fn parse_allgather(name: &str) -> Option<AllgatherAlgo> {
+    match name {
+        "bruck" => Some(AllgatherAlgo::Bruck),
+        "recursive_doubling" => Some(AllgatherAlgo::RecursiveDoubling),
+        "ring" => Some(AllgatherAlgo::Ring),
+        _ => None,
+    }
+}
+
+pub fn parse_allreduce(name: &str) -> Option<AllreduceAlgo> {
+    match name {
+        "recursive_doubling" => Some(AllreduceAlgo::RecursiveDoubling),
+        "rabenseifner" => Some(AllreduceAlgo::Rabenseifner),
+        _ => None,
+    }
+}
+
+pub fn parse_method(name: &str) -> Option<AllreduceMethod> {
+    match name {
+        "method1" => Some(AllreduceMethod::Method1),
+        "method2" => Some(AllreduceMethod::Method2),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------
+// The cost-model selector.
+// ---------------------------------------------------------------------
+
+/// Picks the registry's cheapest viable candidate at every point —
+/// the online (no-measurement) half of the autotuner.
+#[derive(Clone, Debug)]
+pub struct ModelSelector {
+    net: NetModel,
+    ranks_per_node: usize,
+    tuning: Tuning,
+}
+
+impl ModelSelector {
+    /// `ranks_per_node` is the topology hint (cores per node of the
+    /// cluster being modeled; 16 for the VulcanSb preset).
+    pub fn new(net: NetModel, ranks_per_node: usize) -> ModelSelector {
+        ModelSelector { net, ranks_per_node: ranks_per_node.max(1), tuning: Tuning::from_env() }
+    }
+
+    fn point(&self, p: usize, bytes: usize) -> SelectPoint {
+        SelectPoint::new(p, bytes, self.ranks_per_node)
+    }
+
+    /// The model this selector scores with.
+    pub fn net(&self) -> &NetModel {
+        &self.net
+    }
+
+    pub fn ranks_per_node(&self) -> usize {
+        self.ranks_per_node
+    }
+}
+
+impl Selector for ModelSelector {
+    fn describe(&self) -> String {
+        format!("model ({}, {} ranks/node)", self.net.name, self.ranks_per_node)
+    }
+
+    fn bcast_algo(&self, p: usize, bytes: usize) -> BcastAlgo {
+        if p <= 2 || bytes == 0 {
+            return BcastAlgo::Binomial;
+        }
+        best(&bcast_candidates(&self.net, self.point(p, bytes), &self.tuning)).algo
+    }
+
+    fn allgather_algo(&self, p: usize, bytes: usize) -> AllgatherAlgo {
+        if p <= 1 {
+            return AllgatherAlgo::Ring;
+        }
+        best(&allgather_candidates(&self.net, self.point(p, bytes))).algo
+    }
+
+    fn allreduce_algo(&self, p: usize, bytes: usize) -> AllreduceAlgo {
+        if p <= 1 {
+            return AllreduceAlgo::RecursiveDoubling;
+        }
+        best(&allreduce_candidates(&self.net, self.point(p, bytes))).algo
+    }
+
+    fn allreduce_method(&self, bytes: usize) -> AllreduceMethod {
+        // Method choice keys on the bridge block; model a nominal
+        // two-node bridge (the figure shapes) at this node width.
+        best(&method_candidates(&self.net, 2, self.ranks_per_node, bytes)).algo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop as props;
+
+    fn pt(p: usize, bytes: usize) -> SelectPoint {
+        SelectPoint::new(p, bytes, 16)
+    }
+
+    #[test]
+    fn registry_enumerates_only_viable_candidates() {
+        let net = NetModel::infiniband();
+        // Non-power-of-two: recursive doubling must not be offered.
+        for c in allgather_candidates(&net, pt(24, 4096)) {
+            assert_ne!(c.algo, AllgatherAlgo::RecursiveDoubling);
+        }
+        // Power-of-two: it must be.
+        assert!(allgather_candidates(&net, pt(32, 4096))
+            .iter()
+            .any(|c| c.algo == AllgatherAlgo::RecursiveDoubling));
+        // p = 2: only binomial broadcast (trees degenerate).
+        assert_eq!(bcast_candidates(&net, pt(2, 1 << 20), &Tuning::default()).len(), 1);
+    }
+
+    #[test]
+    fn costs_are_finite_and_positive() {
+        let net = NetModel::aries();
+        for p in [2, 5, 8, 24, 127, 1024] {
+            for bytes in [1, 800, 64 * 1024, 4 << 20] {
+                for c in bcast_candidates(&net, pt(p, bytes), &Tuning::default()) {
+                    assert!(c.cost_us.is_finite() && c.cost_us > 0.0, "{:?}", c.algo);
+                }
+                for c in allgather_candidates(&net, pt(p, bytes)) {
+                    assert!(c.cost_us.is_finite() && c.cost_us > 0.0, "{:?}", c.algo);
+                }
+                for c in allreduce_candidates(&net, pt(p, bytes)) {
+                    assert!(c.cost_us.is_finite() && c.cost_us > 0.0, "{:?}", c.algo);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn model_reproduces_the_published_crossover_shapes() {
+        let m = ModelSelector::new(NetModel::infiniband(), 16);
+        // Latency-bound smalls: log-round algorithms.
+        assert_eq!(m.allgather_algo(24, 64), AllgatherAlgo::Bruck);
+        assert_eq!(m.bcast_algo(32, 256), BcastAlgo::Binomial);
+        assert_eq!(m.allreduce_algo(32, 512), AllreduceAlgo::RecursiveDoubling);
+        // Bandwidth-bound larges: the bandwidth-optimal family.
+        assert_eq!(m.allreduce_algo(32, 4 << 20), AllreduceAlgo::Rabenseifner);
+        assert!(matches!(
+            m.bcast_algo(32, 4 << 20),
+            BcastAlgo::ScatterAllgather | BcastAlgo::Pipeline { .. } | BcastAlgo::SplitBinary { .. }
+        ));
+        // Method cutoff: method 2 small, method 1 large (§5.2.4).
+        assert_eq!(m.allreduce_method(256), AllreduceMethod::Method2);
+        assert_eq!(m.allreduce_method(1 << 20), AllreduceMethod::Method1);
+    }
+
+    #[test]
+    fn model_selector_is_total_and_viable() {
+        // Property: every (p, bytes) maps to exactly one viable,
+        // bound algorithm under the model selector (the tuned half of
+        // the ISSUE-9 satellite property; the static half lives in
+        // coll/tuning.rs).
+        let m = ModelSelector::new(NetModel::infiniband(), 16);
+        props::run(
+            "model-selector-total",
+            props::default_cases(),
+            |r| (1 + r.below(1024), r.below(1 << 20)),
+            |&(p, bytes)| {
+                let bc = m.bcast_algo(p, bytes);
+                if matches!(bc, BcastAlgo::Auto) {
+                    return Err(format!("bcast unbound at ({p},{bytes})"));
+                }
+                let ag = m.allgather_algo(p, bytes);
+                if matches!(ag, AllgatherAlgo::Auto) {
+                    return Err(format!("allgather unbound at ({p},{bytes})"));
+                }
+                if ag == AllgatherAlgo::RecursiveDoubling && !p.is_power_of_two() {
+                    return Err(format!("RD offered at non-pow2 p={p}"));
+                }
+                if matches!(m.allreduce_algo(p, bytes), AllreduceAlgo::Auto) {
+                    return Err(format!("allreduce unbound at ({p},{bytes})"));
+                }
+                if matches!(m.allreduce_method(bytes), AllreduceMethod::Tuned) {
+                    return Err(format!("method unbound at {bytes}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for a in [
+            BcastAlgo::Binomial,
+            BcastAlgo::SplitBinary { seg: 32 * 1024 },
+            BcastAlgo::Pipeline { seg: 128 * 1024 },
+            BcastAlgo::ScatterAllgather,
+        ] {
+            let (n, s) = bcast_name(a);
+            assert_eq!(parse_bcast(n, s), Some(a));
+        }
+        for a in [AllgatherAlgo::Bruck, AllgatherAlgo::RecursiveDoubling, AllgatherAlgo::Ring] {
+            assert_eq!(parse_allgather(allgather_name(a)), Some(a));
+        }
+        for a in [AllreduceAlgo::RecursiveDoubling, AllreduceAlgo::Rabenseifner] {
+            assert_eq!(parse_allreduce(allreduce_name(a)), Some(a));
+        }
+        for m in [AllreduceMethod::Method1, AllreduceMethod::Method2] {
+            assert_eq!(parse_method(method_name(m)), Some(m));
+        }
+    }
+}

@@ -1,0 +1,508 @@
+//! The versioned persisted tuning table (`TUNING.json`).
+//!
+//! The follow-up paper (arXiv 2007.06892) ships per-cluster tuned
+//! cutoff tables; UCC persists tuner output so "init once" sessions
+//! never re-measure a point the cluster has already answered. This
+//! module is that artifact: a committed JSON file of range entries
+//! (`op`, `p` range, `bytes` range → algorithm) that
+//! [`TableSelector`] consults *before* any fallback, `bin/tune_all`
+//! regenerates, and CI drift-checks against the registry schema.
+//!
+//! The crate builds with zero dependencies, so the file format is a
+//! strict JSON subset (objects, arrays, strings, non-negative
+//! integers) parsed by the ~100-line reader below — the same spirit as
+//! the hand-rolled writers in `bench_all`.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::coll::allgather::AllgatherAlgo;
+use crate::coll::allreduce::AllreduceAlgo;
+use crate::coll::bcast::BcastAlgo;
+use crate::hybrid::allreduce::AllreduceMethod;
+
+use super::registry;
+use super::{sanitize_allgather, Selector};
+
+/// Schema version this build reads and writes. Bump on any change to
+/// the entry shape; `load` rejects other versions so a stale committed
+/// table fails loudly (the CI drift check) instead of mis-selecting.
+pub const TABLE_VERSION: u64 = 1;
+
+/// The op names a table entry may carry.
+pub const OPS: [&str; 4] = ["bcast", "allgather", "allreduce", "allreduce_method"];
+
+/// One tuned range: for `op` on communicators of `p_min..=p_max` ranks
+/// and messages of `bytes_min..=bytes_max` bytes, run `algo` (with
+/// segment `seg` if the algorithm is segmented).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Entry {
+    pub op: String,
+    pub p_min: usize,
+    pub p_max: usize,
+    pub bytes_min: usize,
+    pub bytes_max: usize,
+    pub algo: String,
+    pub seg: usize,
+    /// Provenance: `"model"`, `"race"`, or `"manual"`.
+    pub source: String,
+}
+
+impl Entry {
+    fn matches(&self, op: &str, p: usize, bytes: usize) -> bool {
+        self.op == op
+            && (self.p_min..=self.p_max).contains(&p)
+            && (self.bytes_min..=self.bytes_max).contains(&bytes)
+    }
+}
+
+/// The in-memory table: version header + ordered entries (first match
+/// wins, so more specific ranges go first — `tune_all` emits
+/// point-disjoint ranges and order never matters for its output).
+#[derive(Clone, Debug, Default)]
+pub struct TuningTable {
+    /// Model/cluster the numbers were tuned on (e.g. `"infiniband"`).
+    pub model: String,
+    /// Free-form provenance note.
+    pub note: String,
+    pub entries: Vec<Entry>,
+}
+
+/// Path the default selector loads: `HYMPI_TUNING_TABLE` if set, else
+/// `TUNING.json` in the working directory (the repo root under
+/// `cargo run`/`cargo test`, since `Cargo.toml` lives there).
+pub fn default_path() -> PathBuf {
+    std::env::var("HYMPI_TUNING_TABLE").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("TUNING.json"))
+}
+
+impl TuningTable {
+    pub fn new(model: &str, note: &str) -> TuningTable {
+        TuningTable { model: model.to_string(), note: note.to_string(), entries: Vec::new() }
+    }
+
+    /// First entry matching `(op, p, bytes)`.
+    pub fn lookup(&self, op: &str, p: usize, bytes: usize) -> Option<&Entry> {
+        self.entries.iter().find(|e| e.matches(op, p, bytes))
+    }
+
+    /// Append a tuned range.
+    pub fn push(&mut self, e: Entry) {
+        self.entries.push(e);
+    }
+
+    /// Validate against the registry schema: known ops, parseable
+    /// algorithms, sane ranges. Returns every problem, not just the
+    /// first — this is the CI drift check.
+    pub fn validate(&self) -> Result<(), Vec<String>> {
+        let mut errs = Vec::new();
+        for (i, e) in self.entries.iter().enumerate() {
+            let at = |msg: String| format!("entry {i} ({}/{}): {msg}", e.op, e.algo);
+            if !OPS.contains(&e.op.as_str()) {
+                errs.push(at(format!("unknown op {:?}", e.op)));
+                continue;
+            }
+            if e.p_min > e.p_max || e.p_min == 0 {
+                errs.push(at(format!("bad p range {}..={}", e.p_min, e.p_max)));
+            }
+            if e.bytes_min > e.bytes_max {
+                errs.push(at(format!("bad bytes range {}..={}", e.bytes_min, e.bytes_max)));
+            }
+            let known = match e.op.as_str() {
+                "bcast" => registry::parse_bcast(&e.algo, e.seg.max(1)).is_some(),
+                "allgather" => registry::parse_allgather(&e.algo).is_some(),
+                "allreduce" => registry::parse_allreduce(&e.algo).is_some(),
+                _ => registry::parse_method(&e.algo).is_some(),
+            };
+            if !known {
+                errs.push(at("algorithm not in the registry".to_string()));
+            }
+            if matches!(e.algo.as_str(), "split_binary" | "pipeline") && e.seg == 0 {
+                errs.push(at("segmented algorithm with seg = 0".to_string()));
+            }
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs)
+        }
+    }
+
+    /// Serialize (stable key order, one entry per line — diff-friendly
+    /// for the committed artifact).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        let _ = writeln!(s, "  \"version\": {},", TABLE_VERSION);
+        let _ = writeln!(s, "  \"model\": \"{}\",", escape(&self.model));
+        let _ = writeln!(s, "  \"note\": \"{}\",", escape(&self.note));
+        s.push_str("  \"entries\": [");
+        for (i, e) in self.entries.iter().enumerate() {
+            s.push_str(if i == 0 { "\n" } else { ",\n" });
+            let _ = write!(
+                s,
+                "    {{\"op\": \"{}\", \"p_min\": {}, \"p_max\": {}, \"bytes_min\": {}, \"bytes_max\": {}, \"algo\": \"{}\", \"seg\": {}, \"source\": \"{}\"}}",
+                escape(&e.op), e.p_min, e.p_max, e.bytes_min, e.bytes_max, escape(&e.algo), e.seg, escape(&e.source)
+            );
+        }
+        s.push_str(if self.entries.is_empty() { "]\n}\n" } else { "\n  ]\n}\n" });
+        s
+    }
+
+    /// Parse a table (strict: unknown versions are errors).
+    pub fn from_json(text: &str) -> Result<TuningTable, String> {
+        let v = Json::parse(text)?;
+        let obj = v.as_obj().ok_or("top level is not an object")?;
+        let version = get(obj, "version").and_then(Json::as_u64).ok_or("missing \"version\"")?;
+        if version != TABLE_VERSION {
+            return Err(format!("table version {version}, this build reads {TABLE_VERSION}"));
+        }
+        let mut t = TuningTable {
+            model: get(obj, "model").and_then(Json::as_str).unwrap_or_default().to_string(),
+            note: get(obj, "note").and_then(Json::as_str).unwrap_or_default().to_string(),
+            entries: Vec::new(),
+        };
+        let entries = get(obj, "entries").and_then(Json::as_arr).ok_or("missing \"entries\"")?;
+        for (i, e) in entries.iter().enumerate() {
+            let o = e.as_obj().ok_or(format!("entry {i} is not an object"))?;
+            let us = |k: &str| -> Result<usize, String> {
+                get(o, k).and_then(Json::as_u64).map(|v| v as usize).ok_or(format!("entry {i}: missing \"{k}\""))
+            };
+            let st = |k: &str| -> Result<String, String> {
+                get(o, k).and_then(Json::as_str).map(str::to_string).ok_or(format!("entry {i}: missing \"{k}\""))
+            };
+            t.entries.push(Entry {
+                op: st("op")?,
+                p_min: us("p_min")?,
+                p_max: us("p_max")?,
+                bytes_min: us("bytes_min")?,
+                bytes_max: us("bytes_max")?,
+                algo: st("algo")?,
+                seg: us("seg")?,
+                source: st("source")?,
+            });
+        }
+        Ok(t)
+    }
+
+    pub fn load(path: &Path) -> Result<TuningTable, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::from_json(&text)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, self.to_json()).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.chars().flat_map(|c| match c {
+        '"' => vec!['\\', '"'],
+        '\\' => vec!['\\', '\\'],
+        c if (c as u32) < 0x20 => vec![' '],
+        c => vec![c],
+    }).collect()
+}
+
+fn get<'a>(obj: &'a [(String, Json)], key: &str) -> Option<&'a Json> {
+    obj.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+}
+
+/// The JSON subset the table format needs. Numbers are non-negative
+/// integers (all table fields are counts/sizes); floats, booleans and
+/// null are accepted and ignored-typed so foreign files fail with a
+/// field error rather than a parse error.
+#[derive(Clone, Debug)]
+enum Json {
+    Num(u64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+    Other,
+}
+
+impl Json {
+    fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+    fn as_obj(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    fn parse(text: &str) -> Result<Json, String> {
+        let b = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(b, &mut pos)?;
+        skip_ws(b, &mut pos);
+        if pos != b.len() {
+            return Err(format!("trailing garbage at byte {pos}"));
+        }
+        Ok(v)
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && b[*pos].is_ascii_whitespace() {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<(), String> {
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == c {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(format!("expected {:?} at byte {}", c as char, *pos))
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        Some(b'{') => {
+            *pos += 1;
+            let mut out = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(out));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                expect(b, pos, b':')?;
+                out.push((key, parse_value(b, pos)?));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(out));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at byte {}", *pos)),
+                }
+            }
+        }
+        Some(b'[') => {
+            *pos += 1;
+            let mut out = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(out));
+            }
+            loop {
+                out.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(out));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at byte {}", *pos)),
+                }
+            }
+        }
+        Some(b'"') => Ok(Json::Str(parse_string(b, pos)?)),
+        Some(c) if c.is_ascii_digit() => {
+            let start = *pos;
+            while *pos < b.len() && (b[*pos].is_ascii_digit() || matches!(b[*pos], b'.' | b'e' | b'E' | b'+' | b'-')) {
+                *pos += 1;
+            }
+            let s = std::str::from_utf8(&b[start..*pos]).unwrap();
+            Ok(s.parse::<u64>().map(Json::Num).unwrap_or(Json::Other))
+        }
+        Some(b'-') => {
+            *pos += 1;
+            while *pos < b.len() && (b[*pos].is_ascii_digit() || matches!(b[*pos], b'.' | b'e' | b'E' | b'+')) {
+                *pos += 1;
+            }
+            Ok(Json::Other)
+        }
+        Some(_) => {
+            for lit in ["true", "false", "null"] {
+                if b[*pos..].starts_with(lit.as_bytes()) {
+                    *pos += lit.len();
+                    return Ok(Json::Other);
+                }
+            }
+            Err(format!("unexpected byte {} in value position", *pos))
+        }
+        None => Err("unexpected end of input".to_string()),
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
+    if b.get(*pos) != Some(&b'"') {
+        return Err(format!("expected string at byte {}", *pos));
+    }
+    *pos += 1;
+    let mut out = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(&c) => out.push(c as char),
+                    None => return Err("dangling escape".to_string()),
+                }
+                *pos += 1;
+            }
+            c => {
+                // Multi-byte UTF-8 passes through byte-wise intact.
+                out.push(c as char);
+                *pos += 1;
+            }
+        }
+    }
+    Err("unterminated string".to_string())
+}
+
+/// Persisted winners first, fallback second: the selector the default
+/// global wraps around [`super::StaticSelector`] when a non-empty
+/// `TUNING.json` is present, and that [`super::tuner::Autotuner`]
+/// layers over the model.
+pub struct TableSelector {
+    table: TuningTable,
+    fallback: Arc<dyn Selector>,
+}
+
+impl TableSelector {
+    pub fn new(table: TuningTable, fallback: Arc<dyn Selector>) -> TableSelector {
+        TableSelector { table, fallback }
+    }
+
+    pub fn table(&self) -> &TuningTable {
+        &self.table
+    }
+}
+
+impl Selector for TableSelector {
+    fn describe(&self) -> String {
+        format!("table ({} entries, {}) over {}", self.table.entries.len(), self.table.model, self.fallback.describe())
+    }
+
+    fn bcast_algo(&self, p: usize, bytes: usize) -> BcastAlgo {
+        self.table
+            .lookup("bcast", p, bytes)
+            .and_then(|e| registry::parse_bcast(&e.algo, e.seg))
+            .unwrap_or_else(|| self.fallback.bcast_algo(p, bytes))
+    }
+
+    fn allgather_algo(&self, p: usize, bytes: usize) -> AllgatherAlgo {
+        let a = self
+            .table
+            .lookup("allgather", p, bytes)
+            .and_then(|e| registry::parse_allgather(&e.algo))
+            .unwrap_or_else(|| self.fallback.allgather_algo(p, bytes));
+        sanitize_allgather(a, p)
+    }
+
+    fn allreduce_algo(&self, p: usize, bytes: usize) -> AllreduceAlgo {
+        self.table
+            .lookup("allreduce", p, bytes)
+            .and_then(|e| registry::parse_allreduce(&e.algo))
+            .unwrap_or_else(|| self.fallback.allreduce_algo(p, bytes))
+    }
+
+    fn allreduce_method(&self, bytes: usize) -> AllreduceMethod {
+        self.table
+            .lookup("allreduce_method", 1, bytes)
+            .and_then(|e| registry::parse_method(&e.algo))
+            .unwrap_or_else(|| self.fallback.allreduce_method(bytes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::select::StaticSelector;
+
+    fn entry(op: &str, p: (usize, usize), bytes: (usize, usize), algo: &str, seg: usize) -> Entry {
+        Entry {
+            op: op.to_string(),
+            p_min: p.0,
+            p_max: p.1,
+            bytes_min: bytes.0,
+            bytes_max: bytes.1,
+            algo: algo.to_string(),
+            seg,
+            source: "manual".to_string(),
+        }
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let mut t = TuningTable::new("infiniband", "unit test");
+        t.push(entry("bcast", (3, 64), (0, 2048), "binomial", 0));
+        t.push(entry("allgather", (2, 1024), (4096, usize::MAX), "ring", 0));
+        let back = TuningTable::from_json(&t.to_json()).expect("round trip");
+        assert_eq!(back.model, "infiniband");
+        assert_eq!(back.entries, t.entries);
+        assert!(back.validate().is_ok());
+    }
+
+    #[test]
+    fn wrong_version_and_garbage_are_rejected() {
+        assert!(TuningTable::from_json("{\"version\": 99, \"entries\": []}").is_err());
+        assert!(TuningTable::from_json("not json").is_err());
+        assert!(TuningTable::from_json("{\"version\": 1}").is_err()); // no entries key
+        // Empty table with the right version is fine.
+        let t = TuningTable::from_json("{\"version\": 1, \"model\": \"x\", \"note\": \"\", \"entries\": []}").unwrap();
+        assert!(t.entries.is_empty());
+    }
+
+    #[test]
+    fn validate_flags_schema_drift() {
+        let mut t = TuningTable::new("m", "");
+        t.push(entry("bcast", (3, 8), (0, 100), "warp_drive", 0)); // unknown algo
+        t.push(entry("frobnicate", (1, 8), (0, 100), "ring", 0)); // unknown op
+        t.push(entry("bcast", (8, 3), (0, 100), "binomial", 0)); // inverted p range
+        t.push(entry("bcast", (3, 8), (0, 100), "pipeline", 0)); // seg = 0
+        let errs = t.validate().unwrap_err();
+        assert_eq!(errs.len(), 4, "{errs:?}");
+    }
+
+    #[test]
+    fn table_hits_win_and_misses_fall_back() {
+        let mut t = TuningTable::new("m", "");
+        t.push(entry("bcast", (2, 1024), (0, usize::MAX), "scatter_allgather", 0));
+        // RD persisted for *all* p: sanitize must degrade it off pow2.
+        t.push(entry("allgather", (2, 1024), (0, usize::MAX), "recursive_doubling", 0));
+        let s = TableSelector::new(t, Arc::new(StaticSelector::default()));
+        assert_eq!(s.bcast_algo(8, 100), BcastAlgo::ScatterAllgather);
+        assert_eq!(s.allgather_algo(8, 100), AllgatherAlgo::RecursiveDoubling);
+        assert_eq!(s.allgather_algo(12, 100), AllgatherAlgo::Ring);
+        // No allreduce entries: static fallback decides.
+        assert_eq!(s.allreduce_algo(8, 100), StaticSelector::default().allreduce_algo(8, 100));
+        assert_eq!(s.allreduce_method(4096), StaticSelector::default().allreduce_method(4096));
+    }
+}

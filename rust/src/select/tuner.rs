@@ -1,0 +1,325 @@
+//! The online autotuner: table first, model second, race when asked.
+//!
+//! [`Autotuner`] is the selector binaries install for tuned runs. Every
+//! query goes through the UCC-shaped decision ladder:
+//!
+//! 1. **persisted** — a seeded [`TuningTable`] hit answers immediately
+//!    (winners from a previous `tune_all` run, "consulted before
+//!    re-tuning");
+//! 2. **modeled** — otherwise the [`ModelSelector`] arg-mins the
+//!    registry's closed-form costs, and the answer is memoized into the
+//!    live table so the point is decided once per process;
+//! 3. **raced** — empirical timing never happens implicitly inside a
+//!    query (selectors are called from `*_init` hot paths); instead
+//!    `PlanCache::plan_raced`, `tune_all` and `bench_all --tuned` time
+//!    candidates on live persistent handles and feed winners back via
+//!    [`Autotuner::record`] / the generic [`race`] fold.
+//!
+//! [`PinnedSelector`] is the race harness's lever: it forces one
+//! candidate for one op while delegating everything else, so a driver
+//! can install it, time a figure point, and restore the previous
+//! selector.
+
+use std::sync::{Arc, Mutex};
+
+use crate::coll::allgather::AllgatherAlgo;
+use crate::coll::allreduce::AllreduceAlgo;
+use crate::coll::bcast::BcastAlgo;
+use crate::mpi::net::NetModel;
+
+use super::registry::{self, ModelSelector};
+use super::table::{Entry, TuningTable};
+use super::{sanitize_allgather, Selector};
+use crate::hybrid::allreduce::AllreduceMethod;
+
+/// How the tuner binds a winner at `*_init` time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TuneMode {
+    /// Closed-form α-β estimates only (no measurement; deterministic).
+    CostModel,
+    /// Race candidates with `iters` timed warm-up invocations each
+    /// (drivers call `PlanCache::plan_raced`; queries still answer from
+    /// table-then-model until a race result is recorded).
+    Race { iters: usize },
+}
+
+/// Result of one race: per-candidate mean times and the arg-min.
+#[derive(Clone, Debug)]
+pub struct RaceOutcome {
+    /// Index of the winner in the candidate list.
+    pub winner: usize,
+    /// `(label, mean µs)` per candidate, in enumeration order.
+    pub times: Vec<(String, f64)>,
+}
+
+impl RaceOutcome {
+    pub fn winner_label(&self) -> &str {
+        &self.times[self.winner].0
+    }
+    pub fn winner_us(&self) -> f64 {
+        self.times[self.winner].1
+    }
+}
+
+/// Fold measured candidate times into a winner: strict arg-min with
+/// first-index tie-break. Callers that race *collectively* must pass
+/// times already agreed across ranks (e.g. a max-reduction of local
+/// means) so every rank folds identical inputs — enumeration order is
+/// deterministic, so the winner index then is too.
+pub fn race(times: Vec<(String, f64)>) -> RaceOutcome {
+    assert!(!times.is_empty(), "race over zero candidates");
+    let mut winner = 0;
+    for (i, t) in times.iter().enumerate().skip(1) {
+        if t.1 < times[winner].1 {
+            winner = i;
+        }
+    }
+    RaceOutcome { winner, times }
+}
+
+/// The online autotuner (decision ladder above).
+pub struct Autotuner {
+    model: ModelSelector,
+    table: Mutex<TuningTable>,
+    mode: TuneMode,
+}
+
+impl Autotuner {
+    /// Tuner over `net` with `ranks_per_node` topology hint, starting
+    /// from an empty live table.
+    pub fn new(net: NetModel, ranks_per_node: usize, mode: TuneMode) -> Autotuner {
+        let table = TuningTable::new(net.name, "live autotuner memo");
+        Autotuner { model: ModelSelector::new(net, ranks_per_node), table: Mutex::new(table), mode }
+    }
+
+    /// Seed the live table with persisted winners (loaded
+    /// `TUNING.json`): those points answer from the table and are never
+    /// re-tuned.
+    pub fn seed(self, table: TuningTable) -> Autotuner {
+        *self.table.lock().expect("tuner table") = table;
+        self
+    }
+
+    pub fn mode(&self) -> TuneMode {
+        self.mode
+    }
+
+    /// Snapshot of the live table (persisted winners + everything
+    /// memoized or recorded since) — what `tune_all` writes out.
+    pub fn export_table(&self) -> TuningTable {
+        self.table.lock().expect("tuner table").clone()
+    }
+
+    /// Record an empirically raced winner for a point (source
+    /// `"race"`); subsequent queries for exactly that point answer from
+    /// the table.
+    pub fn record(&self, op: &str, p: usize, bytes: usize, algo: &str, seg: usize) {
+        let mut t = self.table.lock().expect("tuner table");
+        t.entries.insert(
+            0, // races outrank memoized model picks: first match wins
+            Entry {
+                op: op.to_string(),
+                p_min: p,
+                p_max: p,
+                bytes_min: bytes,
+                bytes_max: bytes,
+                algo: algo.to_string(),
+                seg,
+                source: "race".to_string(),
+            },
+        );
+    }
+
+    fn memo(&self, op: &str, p: usize, bytes: usize, algo: &str, seg: usize) {
+        self.table.lock().expect("tuner table").push(Entry {
+            op: op.to_string(),
+            p_min: p,
+            p_max: p,
+            bytes_min: bytes,
+            bytes_max: bytes,
+            algo: algo.to_string(),
+            seg,
+            source: "model".to_string(),
+        });
+    }
+
+    fn hit(&self, op: &str, p: usize, bytes: usize) -> Option<(String, usize)> {
+        let t = self.table.lock().expect("tuner table");
+        t.lookup(op, p, bytes).map(|e| (e.algo.clone(), e.seg))
+    }
+}
+
+impl Selector for Autotuner {
+    fn describe(&self) -> String {
+        let n = self.table.lock().expect("tuner table").entries.len();
+        format!("autotuner ({:?}, {} table entries, model {})", self.mode, n, self.model.net().name)
+    }
+
+    fn bcast_algo(&self, p: usize, bytes: usize) -> BcastAlgo {
+        if let Some((algo, seg)) = self.hit("bcast", p, bytes) {
+            if let Some(a) = registry::parse_bcast(&algo, seg) {
+                return a;
+            }
+        }
+        let a = self.model.bcast_algo(p, bytes);
+        let (name, seg) = registry::bcast_name(a);
+        self.memo("bcast", p, bytes, name, seg);
+        a
+    }
+
+    fn allgather_algo(&self, p: usize, bytes: usize) -> AllgatherAlgo {
+        if let Some((algo, _)) = self.hit("allgather", p, bytes) {
+            if let Some(a) = registry::parse_allgather(&algo) {
+                return sanitize_allgather(a, p);
+            }
+        }
+        let a = self.model.allgather_algo(p, bytes);
+        self.memo("allgather", p, bytes, registry::allgather_name(a), 0);
+        sanitize_allgather(a, p)
+    }
+
+    fn allreduce_algo(&self, p: usize, bytes: usize) -> AllreduceAlgo {
+        if let Some((algo, _)) = self.hit("allreduce", p, bytes) {
+            if let Some(a) = registry::parse_allreduce(&algo) {
+                return a;
+            }
+        }
+        let a = self.model.allreduce_algo(p, bytes);
+        self.memo("allreduce", p, bytes, registry::allreduce_name(a), 0);
+        a
+    }
+
+    fn allreduce_method(&self, bytes: usize) -> AllreduceMethod {
+        if let Some((algo, _)) = self.hit("allreduce_method", 1, bytes) {
+            if let Some(m) = registry::parse_method(&algo) {
+                return m;
+            }
+        }
+        let m = self.model.allreduce_method(bytes);
+        self.memo("allreduce_method", 1, bytes, registry::method_name(m), 0);
+        m
+    }
+}
+
+/// Forces one candidate for one (or more) ops, delegating the rest —
+/// the lever race harnesses use to time a specific candidate through
+/// the normal `Auto` path.
+pub struct PinnedSelector {
+    inner: Arc<dyn Selector>,
+    bcast: Option<BcastAlgo>,
+    allgather: Option<AllgatherAlgo>,
+    allreduce: Option<AllreduceAlgo>,
+    method: Option<AllreduceMethod>,
+}
+
+impl PinnedSelector {
+    pub fn over(inner: Arc<dyn Selector>) -> PinnedSelector {
+        PinnedSelector { inner, bcast: None, allgather: None, allreduce: None, method: None }
+    }
+
+    pub fn pin_bcast(mut self, a: BcastAlgo) -> PinnedSelector {
+        self.bcast = Some(a);
+        self
+    }
+    pub fn pin_allgather(mut self, a: AllgatherAlgo) -> PinnedSelector {
+        self.allgather = Some(a);
+        self
+    }
+    pub fn pin_allreduce(mut self, a: AllreduceAlgo) -> PinnedSelector {
+        self.allreduce = Some(a);
+        self
+    }
+    pub fn pin_method(mut self, m: AllreduceMethod) -> PinnedSelector {
+        self.method = Some(m);
+        self
+    }
+}
+
+impl Selector for PinnedSelector {
+    fn describe(&self) -> String {
+        format!("pinned over {}", self.inner.describe())
+    }
+    fn bcast_algo(&self, p: usize, bytes: usize) -> BcastAlgo {
+        self.bcast.unwrap_or_else(|| self.inner.bcast_algo(p, bytes))
+    }
+    fn allgather_algo(&self, p: usize, bytes: usize) -> AllgatherAlgo {
+        sanitize_allgather(self.allgather.unwrap_or_else(|| self.inner.allgather_algo(p, bytes)), p)
+    }
+    fn allreduce_algo(&self, p: usize, bytes: usize) -> AllreduceAlgo {
+        self.allreduce.unwrap_or_else(|| self.inner.allreduce_algo(p, bytes))
+    }
+    fn allreduce_method(&self, bytes: usize) -> AllreduceMethod {
+        self.method.unwrap_or_else(|| self.inner.allreduce_method(bytes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::select::StaticSelector;
+
+    #[test]
+    fn race_folds_argmin_with_first_tie_break() {
+        let out = race(vec![
+            ("ring".to_string(), 8.0),
+            ("bruck".to_string(), 3.0),
+            ("rd".to_string(), 3.0),
+        ]);
+        assert_eq!(out.winner, 1);
+        assert_eq!(out.winner_label(), "bruck");
+        assert_eq!(out.winner_us(), 3.0);
+    }
+
+    #[test]
+    fn tuner_memoizes_and_seeded_points_are_never_retuned() {
+        let tuner = Autotuner::new(NetModel::infiniband(), 16, TuneMode::CostModel);
+        let a = tuner.bcast_algo(32, 4096);
+        let b = tuner.bcast_algo(32, 4096);
+        assert_eq!(a, b);
+        // One table entry per distinct point, not per query.
+        assert_eq!(tuner.export_table().entries.len(), 1);
+
+        // Seed a deliberately contrarian winner: the table must answer.
+        let mut seed = TuningTable::new("test", "");
+        seed.push(Entry {
+            op: "allreduce".to_string(),
+            p_min: 2,
+            p_max: 1024,
+            bytes_min: 0,
+            bytes_max: usize::MAX,
+            algo: "rabenseifner".to_string(),
+            seg: 0,
+            source: "manual".to_string(),
+        });
+        let tuner = Autotuner::new(NetModel::infiniband(), 16, TuneMode::CostModel).seed(seed);
+        assert_eq!(tuner.allreduce_algo(8, 16), AllreduceAlgo::Rabenseifner);
+        // Seeded range, not a memo: table unchanged by the query.
+        assert_eq!(tuner.export_table().entries.len(), 1);
+    }
+
+    #[test]
+    fn recorded_race_winner_outranks_model_memo() {
+        let tuner = Autotuner::new(NetModel::infiniband(), 16, TuneMode::Race { iters: 3 });
+        let modeled = tuner.allgather_algo(24, 512);
+        let forced = match modeled {
+            AllgatherAlgo::Ring => "bruck",
+            _ => "ring",
+        };
+        tuner.record("allgather", 24, 512, forced, 0);
+        assert_ne!(tuner.allgather_algo(24, 512), modeled);
+        let t = tuner.export_table();
+        assert_eq!(t.entries[0].source, "race");
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn pinned_selector_forces_only_the_pinned_op() {
+        let inner = Arc::new(StaticSelector::default());
+        let pin = PinnedSelector::over(inner.clone()).pin_bcast(BcastAlgo::ScatterAllgather);
+        assert_eq!(pin.bcast_algo(8, 100), BcastAlgo::ScatterAllgather);
+        assert_eq!(pin.allreduce_algo(8, 100), inner.allreduce_algo(8, 100));
+        // Pinning RD allgather still sanitizes on non-pow2.
+        let pin = PinnedSelector::over(inner).pin_allgather(AllgatherAlgo::RecursiveDoubling);
+        assert_eq!(pin.allgather_algo(12, 100), AllgatherAlgo::Ring);
+    }
+}

@@ -1,17 +1,15 @@
 //! Integration tests for the `HybridCtx` session API (ISSUE 4):
 //! multi-leader (k = 1, 2, 4) hybrid collectives vs the pure-MPI
 //! references, bit-exact on irregular node shapes under both §4.5 sync
-//! schemes; persistent-handle reuse with zero re-setup cost; the
-//! `CommPackage` shim's parity with a k = 1 session; and the multi-lane
-//! NIC acceptance bound (k = 2 strictly cheaper than k = 1 on ≥256 KiB
-//! bridge blocks while k = 1 stays bit-identical to the single-leader
-//! path).
-
-#![allow(deprecated)] // the shim-parity test exercises the deprecated CommPackage
+//! schemes; persistent-handle reuse with zero re-setup cost; the k = 1
+//! session's leader/bridge shape (the paper's `comm_package` layout);
+//! and the multi-lane NIC acceptance bound (k = 2 strictly cheaper than
+//! k = 1 on ≥256 KiB bridge blocks while k = 1 stays bit-identical to
+//! the single-leader path).
 
 use hympi::coll::{Flavor, PlanCache};
 use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
-use hympi::hybrid::{AllreduceMethod, CommPackage, HybridCtx, LeaderPolicy, SyncScheme};
+use hympi::hybrid::{AllreduceMethod, HybridCtx, LeaderPolicy, SyncScheme};
 use hympi::mpi::{Datatype, ReduceOp};
 use hympi::util::{cast_slice, to_bytes};
 
@@ -169,45 +167,44 @@ fn persistent_handles_reuse_without_resetup() {
 }
 
 #[test]
-fn comm_package_shim_parity_with_k1_session() {
-    // The shim is a frozen view of HybridCtx k = 1: identical shapes,
-    // identical creation charge, and a collective run through the shim's
-    // backing session matches a directly-created session bit-for-bit.
+fn k1_session_exposes_the_comm_package_shape() {
+    // The paper's `comm_package` layout on a 5+3 cluster, expressed as a
+    // k = 1 session: node-lowest ranks (world 0 and 5) are leaders and
+    // sit on a 2-member bridge communicator; children get no bridge; the
+    // shmem communicator spans exactly the local node; and a collective
+    // through the session is readable from the shared window.
     let report = SimCluster::new(spec(&[5, 3])).run(|env| {
         let w = env.world();
-        env.harness_sync(&w);
-        let t0 = env.vclock();
-        let pkg = CommPackage::create(env, &w);
-        let shim_create = env.vclock() - t0;
-        env.harness_sync(&w);
-        let t1 = env.vclock();
+        let me = w.rank();
         let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
-        let direct_create = env.vclock() - t1;
+        assert_eq!(ctx.leaders_per_node(), 1);
+        assert_eq!(ctx.nnodes(), 2);
+        let on_first_node = me < 5;
+        assert_eq!(ctx.node_index(), usize::from(!on_first_node));
+        assert_eq!(ctx.shmem_size(), if on_first_node { 5 } else { 3 });
+        assert_eq!(ctx.is_leader(), me == 0 || me == 5);
+        match ctx.bridge() {
+            Some(b) => {
+                assert!(ctx.is_leader(), "only leaders may hold a bridge (rank {me})");
+                assert_eq!(b.size(), 2);
+                assert_eq!(b.rank(), usize::from(me == 5));
+            }
+            None => assert!(!ctx.is_leader(), "leaders must hold a bridge (rank {me})"),
+        }
 
-        // Same collective through both sessions.
-        let mine = payload(w.rank(), 48);
-        let run = |env: &mut hympi::mpi::ProcEnv,
-                   ctx: &std::rc::Rc<HybridCtx>,
-                   mine: &[u8]| {
-            let mut ag = ctx.allgather_init(env, 48, SyncScheme::Spin);
-            env.harness_sync(ctx.parent());
-            let t = env.vclock();
-            ag.start_allgather(env, mine);
-            ag.wait(env);
-            let dt = env.vclock() - t;
-            let all = ag.window().unwrap().load(env, 0, 48 * ctx.parent().size());
-            env.barrier(ctx.shmem());
-            ag.free(env);
-            (all, dt)
-        };
-        let (shim_res, shim_dt) = run(env, pkg.ctx(), &mine);
-        let (direct_res, direct_dt) = run(env, &ctx, &mine);
-        (shim_create, direct_create, shim_res, direct_res, shim_dt, direct_dt)
+        // A collective through the session, read back from the window.
+        let mine = payload(me, 48);
+        let mut ag = ctx.allgather_init(env, 48, SyncScheme::Spin);
+        ag.start_allgather(env, &mine);
+        ag.wait(env);
+        let all = ag.window().unwrap().load(env, 0, 48 * ctx.parent().size());
+        env.barrier(ctx.shmem());
+        ag.free(env);
+        all
     });
-    for (sc, dc, sres, dres, sdt, ddt) in report.outputs {
-        assert!((sc - dc).abs() < 1e-9, "creation charge: shim {sc} vs session {dc}");
-        assert_eq!(sres, dres, "results must be bit-identical");
-        assert!((sdt - ddt).abs() < 1e-9, "steady-state vtime: shim {sdt} vs session {ddt}");
+    let expect: Vec<u8> = (0..8).flat_map(|r| payload(r, 48)).collect();
+    for got in report.outputs {
+        assert_eq!(got, expect, "gathered window contents must be the ordered rank payloads");
     }
 }
 
