@@ -1,0 +1,438 @@
+//! The stateless model-checking engine (DESIGN.md §6c).
+//!
+//! [`explore`] executes a [`Model`] — any explicit-state transition
+//! system with enabled-transition semantics — over *every* interleaving
+//! of its processes, in the stateless-model-checking tradition of
+//! VeriSoft/loom-style checkers. Three reduction strategies:
+//!
+//! - [`Reduction::Exhaustive`] — full state enumeration with a
+//!   state-hash visited set. Because the systems checked here are
+//!   acyclic (every transition strictly advances a program counter or a
+//!   monotone protocol counter), visiting every *distinct state* once is
+//!   sound **and complete** for state-local properties (deadlock,
+//!   co-enabled conflicts, per-process invariants): every reachable
+//!   state is checked exactly once. This is the oracle mode the mutation
+//!   tests cross-check the reduced modes against.
+//! - [`Reduction::Dpor`] — classic Flanagan–Godefroid dynamic
+//!   partial-order reduction: persistent sets built by dynamic
+//!   backtrack-point insertion at the last dependent transition, plus
+//!   sleep sets. Stateless (no visited set); sound for deadlocks and
+//!   per-process local assertions by the standard DPOR theorems.
+//! - [`Reduction::DporCached`] — `Dpor` plus a state-hash cache: a
+//!   state revisited with a sleep set no smaller than a cached visit is
+//!   pruned. Naive caching under DPOR is unsound (the pruned subtree can
+//!   no longer contribute backtrack points to the *current* prefix — the
+//!   stateful-DPOR problem), so every prune applies the conservative
+//!   repair: all enabled transitions of every frame on the current path
+//!   are added to that frame's backtrack set, which dominates any
+//!   insertion the skipped subtree could have made. The cache therefore
+//!   trades subtree re-execution for extra ancestor exploration and
+//!   stays sound; the cache size is capped by [`Budget::max_states`].
+//!
+//! Requirements on a [`Model`]: the transition system must be **acyclic**
+//! (explore does not detect cycles — a cyclic model diverges until the
+//! budget trips), and [`Model::dependent`] must be reflexive over a
+//! process (same-process actions are always dependent) and include
+//! enabling ("a can enable or disable b" implies dependent).
+//!
+//! A failed check comes back as a [`Counterexample`]: the violation plus
+//! the exact interleaving that produced it, shortened by a bounded BFS
+//! over the trace's own per-process projections and re-executable with
+//! [`replay`] (the tests assert every emitted trace reproduces its
+//! violation).
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::fmt;
+use std::hash::{Hash, Hasher};
+
+/// What a model check can report. `Display` is the operator-facing text
+/// `verify_schedules --explore` prints above the trace.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Violation {
+    /// No transition is enabled but some process has work left — and no
+    /// process died, so the runtime would hang rather than surface
+    /// `Err(RankFailed)`.
+    Deadlock { blocked: Vec<String> },
+    /// Two conflicting window accesses are enabled in the same state —
+    /// nothing orders them (sound and complete under
+    /// [`Reduction::Exhaustive`] on an acyclic model).
+    Conflict { first: String, second: String },
+    /// A protocol invariant broke (shrink-agreement checks).
+    Protocol { detail: String },
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Violation::Deadlock { blocked } => {
+                write!(f, "deadlock — blocked: {}", blocked.join("; "))
+            }
+            Violation::Conflict { first, second } => {
+                write!(f, "unordered conflicting accesses: {first} / {second}")
+            }
+            Violation::Protocol { detail } => write!(f, "protocol violation: {detail}"),
+        }
+    }
+}
+
+/// An explicit-state transition system the engine can run.
+pub trait Model {
+    type State: Clone + Hash;
+    type Action: Clone + PartialEq + fmt::Debug;
+
+    fn initial(&self) -> Self::State;
+    /// All transitions enabled in `s`. An empty result marks a terminal
+    /// state ([`Model::check`] classifies it as clean or violating).
+    fn enabled(&self, s: &Self::State) -> Vec<Self::Action>;
+    /// Execute one enabled transition. Must be deterministic.
+    fn step(&self, s: &Self::State, a: &Self::Action) -> Self::State;
+    /// The process an action belongs to (the unit of interleaving).
+    fn proc_of(&self, a: &Self::Action) -> usize;
+    /// May `a` and `b` fail to commute (or enable/disable each other)?
+    /// Must return `true` whenever `proc_of` agrees.
+    fn dependent(&self, a: &Self::Action, b: &Self::Action) -> bool;
+    /// Check `s` (with its enabled set, so terminal states are
+    /// classifiable). Checks must be *state-local* — a function of `s`
+    /// alone, not of the path that reached it.
+    fn check(&self, s: &Self::State, enabled: &[Self::Action]) -> Option<Violation>;
+    /// Human-readable action label for traces.
+    fn describe(&self, a: &Self::Action) -> String;
+}
+
+/// Reduction strategy — see the module docs for the soundness story.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Reduction {
+    Exhaustive,
+    Dpor,
+    DporCached,
+}
+
+/// Exploration bounds. `max_transitions` caps executed steps,
+/// `max_states` caps the visited/cache set ([`Reduction::Exhaustive`]
+/// stops at the cap; `DporCached` merely stops caching). A tripped
+/// transition cap clears [`ExploreReport::complete`].
+#[derive(Clone, Copy, Debug)]
+pub struct Budget {
+    pub max_transitions: usize,
+    pub max_states: usize,
+}
+
+impl Budget {
+    /// The CI smoke budget (`verify_schedules --explore --smoke`).
+    pub fn smoke() -> Budget {
+        Budget { max_transitions: 400_000, max_states: 200_000 }
+    }
+
+    /// The full-sweep budget documented for toolchain'd runs.
+    pub fn full() -> Budget {
+        Budget { max_transitions: 8_000_000, max_states: 2_000_000 }
+    }
+}
+
+/// A violation plus the interleaving that produced it: `trace` is
+/// re-executable with [`replay`], `steps` the described transitions.
+#[derive(Clone, Debug)]
+pub struct Counterexample<A> {
+    pub violation: Violation,
+    pub trace: Vec<A>,
+    pub steps: Vec<String>,
+}
+
+impl<A> fmt::Display for Counterexample<A> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{}", self.violation)?;
+        writeln!(f, "minimal interleaving ({} steps):", self.steps.len())?;
+        for (i, s) in self.steps.iter().enumerate() {
+            writeln!(f, "  {i:3}. {s}")?;
+        }
+        Ok(())
+    }
+}
+
+/// What an exploration did. `complete` means the stated bounds were not
+/// tripped — together with a `None` counterexample that is the
+/// exhaustiveness claim (under the mode's reduction) the CI gate rests
+/// on.
+#[derive(Clone, Debug)]
+pub struct ExploreReport<A> {
+    pub transitions: usize,
+    /// Distinct state hashes seen (Exhaustive/DporCached) or states
+    /// pushed (Dpor).
+    pub states: usize,
+    /// Maximal (terminal) states reached.
+    pub terminals: usize,
+    /// Branches cut by the state cache (`DporCached` only).
+    pub dedup_prunes: usize,
+    pub complete: bool,
+    pub counterexample: Option<Counterexample<A>>,
+}
+
+fn hash_of<T: Hash>(t: &T) -> u64 {
+    let mut h = DefaultHasher::new();
+    t.hash(&mut h);
+    h.finish()
+}
+
+struct Frame<S, A> {
+    state: S,
+    enabled: Vec<A>,
+    /// Actions scheduled for exploration from this state (grows via
+    /// dynamic backtrack-point insertion; Exhaustive schedules all).
+    backtrack: Vec<A>,
+    done: Vec<A>,
+    sleep: Vec<A>,
+    /// The action currently being explored (the edge to the frame
+    /// above) — the trace is the chain of `chosen` down the stack.
+    chosen: Option<A>,
+}
+
+/// Run `model` to completion (or budget) under `reduction`.
+pub fn explore<M: Model>(model: &M, reduction: Reduction, budget: &Budget) -> ExploreReport<M::Action> {
+    let mut report = ExploreReport {
+        transitions: 0,
+        states: 1,
+        terminals: 0,
+        dedup_prunes: 0,
+        complete: true,
+        counterexample: None,
+    };
+    // state hash -> sleep sets (as action-hash sets) it was visited with.
+    // Exhaustive stores one empty entry per state and prunes every
+    // revisit; DporCached prunes only sleep-superset revisits.
+    let mut cache: HashMap<u64, Vec<Vec<u64>>> = HashMap::new();
+    let dpor = matches!(reduction, Reduction::Dpor | Reduction::DporCached);
+    let cached = matches!(reduction, Reduction::Exhaustive | Reduction::DporCached);
+
+    let s0 = model.initial();
+    let en0 = model.enabled(&s0);
+    if let Some(v) = model.check(&s0, &en0) {
+        report.counterexample = Some(Counterexample { violation: v, trace: Vec::new(), steps: Vec::new() });
+        return report;
+    }
+    if en0.is_empty() {
+        report.terminals = 1;
+        return report;
+    }
+    if cached {
+        cache.insert(hash_of(&s0), vec![Vec::new()]);
+    }
+    let bt0 = if dpor { vec![en0[0].clone()] } else { en0.clone() };
+    let mut stack: Vec<Frame<M::State, M::Action>> =
+        vec![Frame { state: s0, enabled: en0, backtrack: bt0, done: Vec::new(), sleep: Vec::new(), chosen: None }];
+
+    'outer: while let Some(top) = stack.last() {
+        let pick = top
+            .backtrack
+            .iter()
+            .find(|a| !top.done.contains(a) && !top.sleep.contains(a))
+            .cloned();
+        let Some(a) = pick else {
+            // This frame is exhausted: pop, and record its in-edge in the
+            // parent's sleep set (its subtree is fully explored).
+            stack.pop();
+            if let Some(parent) = stack.last_mut() {
+                let done = parent.chosen.take().expect("a popped frame has an in-edge");
+                if dpor {
+                    parent.sleep.push(done);
+                }
+            }
+            continue;
+        };
+        if dpor {
+            // Flanagan–Godefroid backtrack-point insertion: find the last
+            // earlier transition dependent with `a` from another process
+            // and schedule `a`'s process (or, if not enabled there,
+            // everything) at that frame.
+            let proc = model.proc_of(&a);
+            for i in (0..stack.len() - 1).rev() {
+                let dep = {
+                    let ch = stack[i].chosen.as_ref().expect("inner frames have in-edges");
+                    model.dependent(ch, &a) && model.proc_of(ch) != proc
+                };
+                if dep {
+                    let fi = &mut stack[i];
+                    let alts: Vec<M::Action> =
+                        fi.enabled.iter().filter(|e| model.proc_of(e) == proc).cloned().collect();
+                    let adds = if alts.is_empty() { fi.enabled.clone() } else { alts };
+                    for e in adds {
+                        if !fi.backtrack.contains(&e) {
+                            fi.backtrack.push(e);
+                        }
+                    }
+                    break;
+                }
+            }
+        }
+        if report.transitions >= budget.max_transitions {
+            report.complete = false;
+            break 'outer;
+        }
+        report.transitions += 1;
+        let top = stack.last_mut().expect("loop guard holds the stack non-empty");
+        let next = model.step(&top.state, &a);
+        top.done.push(a.clone());
+        top.chosen = Some(a.clone());
+        let child_sleep: Vec<M::Action> = if dpor {
+            top.sleep.iter().filter(|b| !model.dependent(b, &a)).cloned().collect()
+        } else {
+            Vec::new()
+        };
+
+        if cached {
+            let h = hash_of(&next);
+            let sleep_hashes: Vec<u64> = child_sleep.iter().map(hash_of).collect();
+            let prune = cache.get(&h).is_some_and(|seen| {
+                seen.iter().any(|s| s.iter().all(|x| sleep_hashes.contains(x)))
+            });
+            if prune {
+                report.dedup_prunes += 1;
+                if reduction == Reduction::DporCached {
+                    // The skipped subtree can no longer insert backtrack
+                    // points into this path — over-approximate them all.
+                    for fi in stack.iter_mut() {
+                        for e in fi.enabled.clone() {
+                            if !fi.backtrack.contains(&e) {
+                                fi.backtrack.push(e);
+                            }
+                        }
+                    }
+                }
+                let top = stack.last_mut().expect("stack non-empty while pruning");
+                let done = top.chosen.take().expect("prune follows an execution");
+                if dpor {
+                    top.sleep.push(done);
+                }
+                continue;
+            }
+            if cache.len() < budget.max_states {
+                cache.entry(h).or_default().push(sleep_hashes);
+                report.states = cache.len();
+            } else if reduction == Reduction::Exhaustive {
+                // Exhaustive soundness rests on the visited set; at the
+                // cap the claim is gone, so stop rather than mislead.
+                report.complete = false;
+                break 'outer;
+            }
+        } else {
+            report.states += 1;
+        }
+
+        let en = model.enabled(&next);
+        if let Some(v) = model.check(&next, &en) {
+            let mut trace: Vec<M::Action> =
+                stack.iter().filter_map(|f| f.chosen.clone()).collect();
+            trace = shorten(model, &trace, budget);
+            let steps = trace.iter().map(|x| model.describe(x)).collect();
+            let violation = replay(model, &trace).unwrap_or(v);
+            report.counterexample = Some(Counterexample { violation, trace, steps });
+            break 'outer;
+        }
+        if en.is_empty() {
+            report.terminals += 1;
+            let top = stack.last_mut().expect("stack non-empty at a terminal");
+            let done = top.chosen.take().expect("terminal follows an execution");
+            if dpor {
+                top.sleep.push(done);
+            }
+            continue;
+        }
+        let bt = if dpor {
+            match en.iter().find(|e| !child_sleep.contains(e)) {
+                Some(first) => vec![first.clone()],
+                None => {
+                    // Every enabled transition is asleep: this trace is
+                    // covered elsewhere — a sleep-blocked leaf.
+                    let top = stack.last_mut().expect("stack non-empty at a leaf");
+                    let done = top.chosen.take().expect("leaf follows an execution");
+                    top.sleep.push(done);
+                    continue;
+                }
+            }
+        } else {
+            en.clone()
+        };
+        stack.push(Frame {
+            state: next,
+            enabled: en,
+            backtrack: bt,
+            done: Vec::new(),
+            sleep: child_sleep,
+            chosen: None,
+        });
+    }
+    report
+}
+
+/// Re-execute a recorded interleaving and return the violation its final
+/// state (or any prefix state) checks to. Returns `None` — and thereby
+/// fails the caller's assertion — if the trace no longer reproduces.
+pub fn replay<M: Model>(model: &M, trace: &[M::Action]) -> Option<Violation> {
+    let mut s = model.initial();
+    let mut en = model.enabled(&s);
+    if let Some(v) = model.check(&s, &en) {
+        return Some(v);
+    }
+    for a in trace {
+        if !en.contains(a) {
+            return None;
+        }
+        s = model.step(&s, a);
+        en = model.enabled(&s);
+        if let Some(v) = model.check(&s, &en) {
+            return Some(v);
+        }
+    }
+    None
+}
+
+/// Shorten a violating trace to a minimal interleaving: BFS over the
+/// per-process projections of the trace itself (each BFS node is a
+/// vector of per-process prefix lengths), stopping at the first — hence
+/// shortest — state that checks to a violation. The violating endpoint
+/// is in this space, so within budget the result is never longer than
+/// the input; on budget exhaustion the input comes back unchanged.
+fn shorten<M: Model>(model: &M, trace: &[M::Action], budget: &Budget) -> Vec<M::Action> {
+    use std::collections::{HashSet, VecDeque};
+    if trace.is_empty() {
+        return Vec::new();
+    }
+    let mut procs: Vec<usize> = trace.iter().map(|a| model.proc_of(a)).collect();
+    procs.sort_unstable();
+    procs.dedup();
+    let proj: Vec<Vec<&M::Action>> = procs
+        .iter()
+        .map(|&p| trace.iter().filter(|a| model.proc_of(a) == p).collect())
+        .collect();
+    let mut queue: VecDeque<(Vec<usize>, M::State, Vec<M::Action>)> = VecDeque::new();
+    let mut seen: HashSet<Vec<usize>> = HashSet::new();
+    let start = vec![0usize; proj.len()];
+    seen.insert(start.clone());
+    queue.push_back((start, model.initial(), Vec::new()));
+    let mut visited = 0usize;
+    while let Some((idx, state, path)) = queue.pop_front() {
+        visited += 1;
+        if visited > budget.max_states {
+            return trace.to_vec();
+        }
+        for (pi, pj) in proj.iter().enumerate() {
+            let Some(&a) = pj.get(idx[pi]) else { continue };
+            if !model.enabled(&state).contains(a) {
+                continue;
+            }
+            let mut nidx = idx.clone();
+            nidx[pi] += 1;
+            if !seen.insert(nidx.clone()) {
+                continue;
+            }
+            let ns = model.step(&state, a);
+            let mut np = path.clone();
+            np.push(a.clone());
+            if model.check(&ns, &model.enabled(&ns)).is_some() {
+                return np;
+            }
+            queue.push_back((nidx, ns, np));
+        }
+    }
+    trace.to_vec()
+}

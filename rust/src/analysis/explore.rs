@@ -1,0 +1,1036 @@
+//! Exhaustive interleaving exploration of hybrid schedules and the
+//! shrink/recovery protocol (DESIGN.md §6c).
+//!
+//! Two [`Model`]s for the [`dpor`](crate::analysis::dpor) engine:
+//!
+//! - [`ScheduleModel`] — executes exported [`RankSchedule`]s as a
+//!   transition system. [`lower_program`] breaks every stage into
+//!   single-rank [`MicroStep`]s whose enabled-predicates mirror the
+//!   runtime primitives: `Arrive` registers and never blocks, `Await`
+//!   blocks until the registered barrier generation closes, yellow
+//!   `Post`/`Wait` is a one-way release, bridge messages are eager sends
+//!   into per-`(comm, src, dst, tag)` FIFO channels with genuine
+//!   match-order choice points (any non-empty channel's receive may fire
+//!   in any interleaving), and nested collectives are rendezvous —
+//!   nobody leaves an episode before everybody entered it. Optional
+//!   fault choice points kill a rank before any of its remaining stages,
+//!   drawn from a bounded kill-set. The checker proves deadlock-freedom
+//!   (a stuck state with *no* dead rank — a stuck state behind a death
+//!   is a *detected failure*, which the runtime surfaces as
+//!   `Err(RankFailed)`, and is counted as a terminal, not a violation)
+//!   and, under [`Reduction::Exhaustive`], absence of co-enabled
+//!   conflicting window accesses.
+//! - [`ShrinkModel`] — a protocol model of
+//!   [`HybridCtx::shrink`](crate::hybrid::HybridCtx::shrink)'s
+//!   epoch-tagged agreement (ISSUE 8): coordinator = lowest survivor,
+//!   scope = [`shrink_scope_key`] over the survivor set, children
+//!   send scope-tagged requests, the coordinator collects one per
+//!   survivor and replies with the agreed comm id, scope-mismatched
+//!   traffic is discarded on receipt, and any side whose scope went
+//!   stale (a death registered) restarts the round. Checked invariants:
+//!   no stale-scope message is ever *accepted*, no two survivors agree
+//!   on the same scope with different comm ids (split-brain), every
+//!   interleaving of ≤ `max_kills` overlapping deaths converges to
+//!   agreement on the true survivor set, and — when a
+//!   [`RootPolicy::Reelect`](crate::hybrid::RootPolicy) root is
+//!   configured — the election hook lands on the lowest survivor of the
+//!   dead root's node. [`ShrinkMutation`] knobs re-introduce the bugs
+//!   the protocol exists to prevent, for counterexample tests.
+//!
+//! Both models are deliberately coarse where the verifier or the runtime
+//! detector is the better tool — see DESIGN.md §6c "what is not
+//! modeled".
+
+use super::dpor::{Model, Violation};
+use super::schedule::{lower_program, ChanId, FlagId, GroupId, MicroOp, MicroStep, RankSchedule};
+use crate::hybrid::{shrink_scope_key, ElectRoot, Reelection};
+use std::collections::BTreeMap;
+
+// ====================================================================
+// Schedule execution model
+// ====================================================================
+
+/// Barrier group runtime state as commutative monotone counters:
+/// `arrived[p]` / `awaited[p]` count p's registrations and completions.
+/// p's outstanding registration (the `arrived[p]`-th) completes once
+/// every member's `arrived` reaches it — same-group arrivals by
+/// different ranks therefore commute in *every* state, which is what
+/// lets [`Model::dependent`] declare them independent and DPOR collapse
+/// the `n!` arrival orders of an episode to one representative.
+#[derive(Clone, Debug, Default, PartialEq, Eq, Hash)]
+struct GroupSt {
+    arrived: BTreeMap<usize, u32>,
+    awaited: BTreeMap<usize, u32>,
+}
+
+/// Yellow flag state: cumulative posts, per-observer consumed waits.
+#[derive(Clone, Debug, Default, PartialEq, Eq, Hash)]
+struct FlagSt {
+    posts: u32,
+    waited: BTreeMap<usize, u32>,
+}
+
+/// Rendezvous state per nested-collective comm: per-proc episode entry
+/// and leave counts.
+#[derive(Clone, Debug, Default, PartialEq, Eq, Hash)]
+struct CollSt {
+    entered: BTreeMap<usize, u32>,
+    left: BTreeMap<usize, u32>,
+}
+
+/// Global state of a schedule execution: per-proc program counters,
+/// liveness, and every sync object's runtime state. Zero-count channel
+/// entries are removed so equal behaviors hash equal.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct SchedState {
+    pc: Vec<u32>,
+    alive: Vec<bool>,
+    groups: BTreeMap<GroupId, GroupSt>,
+    flags: BTreeMap<FlagId, FlagSt>,
+    chans: BTreeMap<ChanId, u32>,
+    colls: BTreeMap<u64, CollSt>,
+}
+
+/// One transition: execute a proc's next micro-op, or kill it at its
+/// current position (a fault choice point). `pc` is carried so every
+/// distinct choice point is a distinct action for the DPOR identity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SchedAction {
+    Exec { proc: usize, pc: u32 },
+    Die { proc: usize, pc: u32 },
+}
+
+/// The schedule transition system. Build with [`ScheduleModel::from_handle`]
+/// or [`ScheduleModel::from_program`], opt into fault choice points with
+/// [`ScheduleModel::with_kills`] and co-enabled conflict checking with
+/// [`ScheduleModel::with_conflict_check`] (meaningful under
+/// [`Reduction::Exhaustive`], where every reachable state is visited —
+/// under DPOR reductions it is a heuristic, and k ≥ 2 exports
+/// over-approximate striped leader accesses to full-range unions, so the
+/// conflict check is reserved for k = 1 models; the runtime
+/// happens-before detector owns exact race checking).
+///
+/// [`Reduction::Exhaustive`]: crate::analysis::dpor::Reduction::Exhaustive
+pub struct ScheduleModel {
+    ranks: Vec<usize>,
+    progs: Vec<Vec<MicroStep>>,
+    /// Per barrier group: the procs that arrive at it (its members, as
+    /// lowered — a rank whose Arrive was dropped is *not* a member, so
+    /// the others close without it and its Await deadlocks, which is
+    /// exactly the dynamic consequence of the corruption).
+    group_members: BTreeMap<GroupId, Vec<usize>>,
+    coll_parts: BTreeMap<u64, Vec<usize>>,
+    kill_set: Vec<usize>,
+    max_kills: u8,
+    check_conflicts: bool,
+}
+
+impl ScheduleModel {
+    /// Model a program of overlapping in-flight handles (the
+    /// [`verify_program`](super::schedule::verify_program) input shape).
+    pub fn from_program(handles: &[&[RankSchedule]]) -> ScheduleModel {
+        let lowered = lower_program(handles);
+        let ranks: Vec<usize> = lowered.keys().copied().collect();
+        let progs: Vec<Vec<MicroStep>> = lowered.into_values().collect();
+        let mut coll_parts: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+        let mut group_members: BTreeMap<GroupId, Vec<usize>> = BTreeMap::new();
+        for (p, prog) in progs.iter().enumerate() {
+            for ms in prog {
+                match ms.micro {
+                    MicroOp::CollEnter { comm, .. } => {
+                        let parts = coll_parts.entry(comm).or_default();
+                        if !parts.contains(&p) {
+                            parts.push(p);
+                        }
+                    }
+                    MicroOp::Arrive { group, .. } => {
+                        let mem = group_members.entry(group).or_default();
+                        if !mem.contains(&p) {
+                            mem.push(p);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        ScheduleModel {
+            ranks,
+            progs,
+            group_members,
+            coll_parts,
+            kill_set: Vec::new(),
+            max_kills: 0,
+            check_conflicts: false,
+        }
+    }
+
+    /// Model one handle's all-rank schedule set.
+    pub fn from_handle(ranks: &[RankSchedule]) -> ScheduleModel {
+        ScheduleModel::from_program(&[ranks])
+    }
+
+    /// Enable fault choice points: any of `ranks` (schedule rank ids)
+    /// may die before any of its remaining micro-ops, at most
+    /// `max_kills` deaths per execution.
+    pub fn with_kills(mut self, ranks: &[usize], max_kills: u8) -> ScheduleModel {
+        self.kill_set = ranks
+            .iter()
+            .filter_map(|r| self.ranks.iter().position(|x| x == r))
+            .collect();
+        self.max_kills = max_kills;
+        self
+    }
+
+    /// Also report co-enabled conflicting window accesses.
+    pub fn with_conflict_check(mut self) -> ScheduleModel {
+        self.check_conflicts = true;
+        self
+    }
+
+    fn micro_enabled(&self, s: &SchedState, p: usize, m: &MicroOp) -> bool {
+        let cnt = |m: &BTreeMap<usize, u32>, q: usize| m.get(&q).copied().unwrap_or(0);
+        match *m {
+            // No double registration while one is outstanding.
+            MicroOp::Arrive { group, .. } => s
+                .groups
+                .get(&group)
+                .map_or(true, |g| cnt(&g.arrived, p) == cnt(&g.awaited, p)),
+            // My outstanding (`arrived[p]`-th) registration completes once
+            // every member has arrived that often — the generation closed.
+            MicroOp::AwaitGroup { group } => s.groups.get(&group).is_some_and(|g| {
+                let a = cnt(&g.arrived, p);
+                cnt(&g.awaited, p) < a
+                    && self
+                        .group_members
+                        .get(&group)
+                        .is_some_and(|mem| mem.iter().all(|&q| cnt(&g.arrived, q) >= a))
+            }),
+            MicroOp::WaitFlag { flag } => s
+                .flags
+                .get(&flag)
+                .is_some_and(|f| f.posts > f.waited.get(&p).copied().unwrap_or(0)),
+            MicroOp::Recv { chan } => s.chans.get(&chan).copied().unwrap_or(0) > 0,
+            MicroOp::CollLeave { comm } => {
+                let st = s.colls.get(&comm);
+                let round = st.and_then(|c| c.left.get(&p)).copied().unwrap_or(0);
+                self.coll_parts.get(&comm).is_some_and(|parts| {
+                    parts.iter().all(|q| {
+                        st.and_then(|c| c.entered.get(q)).copied().unwrap_or(0) > round
+                    })
+                })
+            }
+            MicroOp::Post { .. }
+            | MicroOp::Send { .. }
+            | MicroOp::CollEnter { .. }
+            | MicroOp::Access { .. } => true,
+        }
+    }
+
+    fn micro_of(&self, a: &SchedAction) -> Option<&MicroStep> {
+        match *a {
+            SchedAction::Exec { proc, pc } => Some(&self.progs[proc][pc as usize]),
+            SchedAction::Die { .. } => None,
+        }
+    }
+
+    fn conflicting(a: &MicroOp, b: &MicroOp) -> bool {
+        if let (
+            MicroOp::Access { win: w1, offset: o1, len: l1, write: wr1 },
+            MicroOp::Access { win: w2, offset: o2, len: l2, write: wr2 },
+        ) = (*a, *b)
+        {
+            w1 == w2 && (wr1 || wr2) && o1 < o2 + l2 && o2 < o1 + l1
+        } else {
+            false
+        }
+    }
+
+    fn describe_step(&self, proc: usize, ms: &MicroStep) -> String {
+        format!(
+            "rank {} {} h{} stage {}: {:?}",
+            self.ranks[proc], ms.op, ms.handle, ms.stage, ms.micro
+        )
+    }
+}
+
+impl Model for ScheduleModel {
+    type State = SchedState;
+    type Action = SchedAction;
+
+    fn initial(&self) -> SchedState {
+        SchedState {
+            pc: vec![0; self.progs.len()],
+            alive: vec![true; self.progs.len()],
+            groups: BTreeMap::new(),
+            flags: BTreeMap::new(),
+            chans: BTreeMap::new(),
+            colls: BTreeMap::new(),
+        }
+    }
+
+    fn enabled(&self, s: &SchedState) -> Vec<SchedAction> {
+        let mut execs = Vec::new();
+        let mut dies = Vec::new();
+        let kills = s.alive.iter().filter(|a| !**a).count() as u8;
+        for p in 0..self.progs.len() {
+            if !s.alive[p] {
+                continue;
+            }
+            let pc = s.pc[p] as usize;
+            if pc >= self.progs[p].len() {
+                continue;
+            }
+            if self.micro_enabled(s, p, &self.progs[p][pc].micro) {
+                execs.push(SchedAction::Exec { proc: p, pc: s.pc[p] });
+            }
+            if kills < self.max_kills && self.kill_set.contains(&p) {
+                dies.push(SchedAction::Die { proc: p, pc: s.pc[p] });
+            }
+        }
+        // A stuck state is terminal even with kill budget left: dying
+        // there cannot un-stick anyone, and check() classifies it.
+        if execs.is_empty() {
+            return execs;
+        }
+        execs.extend(dies);
+        execs
+    }
+
+    fn step(&self, s: &SchedState, a: &SchedAction) -> SchedState {
+        let mut n = s.clone();
+        match *a {
+            SchedAction::Die { proc, .. } => {
+                n.alive[proc] = false;
+            }
+            SchedAction::Exec { proc, pc } => {
+                match self.progs[proc][pc as usize].micro {
+                    MicroOp::Arrive { group, .. } => {
+                        *n.groups.entry(group).or_default().arrived.entry(proc).or_insert(0) += 1;
+                    }
+                    MicroOp::AwaitGroup { group } => {
+                        *n.groups.entry(group).or_default().awaited.entry(proc).or_insert(0) += 1;
+                    }
+                    MicroOp::Post { flag } => n.flags.entry(flag).or_default().posts += 1,
+                    MicroOp::WaitFlag { flag } => {
+                        *n.flags.entry(flag).or_default().waited.entry(proc).or_insert(0) += 1;
+                    }
+                    MicroOp::Send { chan } => *n.chans.entry(chan).or_insert(0) += 1,
+                    MicroOp::Recv { chan } => {
+                        let c = n.chans.get_mut(&chan).expect("recv enabled on a non-empty channel");
+                        *c -= 1;
+                        if *c == 0 {
+                            n.chans.remove(&chan);
+                        }
+                    }
+                    MicroOp::CollEnter { comm, .. } => {
+                        *n.colls.entry(comm).or_default().entered.entry(proc).or_insert(0) += 1;
+                    }
+                    MicroOp::CollLeave { comm } => {
+                        *n.colls.entry(comm).or_default().left.entry(proc).or_insert(0) += 1;
+                    }
+                    MicroOp::Access { .. } => {}
+                }
+                n.pc[proc] = pc + 1;
+            }
+        }
+        n
+    }
+
+    fn proc_of(&self, a: &SchedAction) -> usize {
+        match *a {
+            SchedAction::Exec { proc, .. } | SchedAction::Die { proc, .. } => proc,
+        }
+    }
+
+    fn dependent(&self, a: &SchedAction, b: &SchedAction) -> bool {
+        if self.proc_of(a) == self.proc_of(b) {
+            return true;
+        }
+        let (Some(ma), Some(mb)) = (self.micro_of(a), self.micro_of(b)) else {
+            return true; // a death is dependent with everything
+        };
+        // Only genuine enabling/conflict pairs are dependent — the
+        // commutative-counter state encoding makes same-side operations
+        // (Arrive/Arrive, Post/Post, Await/Await, Enter/Enter, …) of
+        // different ranks commute in every state, so DPOR explores one
+        // representative order of each barrier episode instead of `n!`.
+        match (&ma.micro, &mb.micro) {
+            (MicroOp::Arrive { group: g1, .. }, MicroOp::AwaitGroup { group: g2 })
+            | (MicroOp::AwaitGroup { group: g1 }, MicroOp::Arrive { group: g2, .. }) => g1 == g2,
+            (MicroOp::Post { flag: f1 }, MicroOp::WaitFlag { flag: f2 })
+            | (MicroOp::WaitFlag { flag: f1 }, MicroOp::Post { flag: f2 }) => f1 == f2,
+            // Send enables Recv; two Recvs race for the same queued
+            // message (one can disable the other). Send/Send commutes.
+            (MicroOp::Send { chan: c1 }, MicroOp::Recv { chan: c2 })
+            | (MicroOp::Recv { chan: c1 }, MicroOp::Send { chan: c2 })
+            | (MicroOp::Recv { chan: c1 }, MicroOp::Recv { chan: c2 }) => c1 == c2,
+            (MicroOp::CollEnter { comm: c1, .. }, MicroOp::CollLeave { comm: c2 })
+            | (MicroOp::CollLeave { comm: c1 }, MicroOp::CollEnter { comm: c2, .. }) => c1 == c2,
+            (acc1 @ MicroOp::Access { .. }, acc2 @ MicroOp::Access { .. }) => {
+                ScheduleModel::conflicting(acc1, acc2)
+            }
+            _ => false,
+        }
+    }
+
+    fn check(&self, s: &SchedState, enabled: &[SchedAction]) -> Option<Violation> {
+        if self.check_conflicts {
+            let accesses: Vec<(usize, &MicroStep)> = enabled
+                .iter()
+                .filter_map(|a| match *a {
+                    SchedAction::Exec { proc, .. } => self
+                        .micro_of(a)
+                        .filter(|ms| matches!(ms.micro, MicroOp::Access { .. }))
+                        .map(|ms| (proc, ms)),
+                    SchedAction::Die { .. } => None,
+                })
+                .collect();
+            for (i, &(p1, m1)) in accesses.iter().enumerate() {
+                for &(p2, m2) in &accesses[i + 1..] {
+                    if p1 != p2 && ScheduleModel::conflicting(&m1.micro, &m2.micro) {
+                        return Some(Violation::Conflict {
+                            first: self.describe_step(p1, m1),
+                            second: self.describe_step(p2, m2),
+                        });
+                    }
+                }
+            }
+        }
+        if enabled.is_empty() {
+            let stuck: Vec<usize> = (0..self.progs.len())
+                .filter(|&p| s.alive[p] && (s.pc[p] as usize) < self.progs[p].len())
+                .collect();
+            if stuck.is_empty() {
+                return None; // clean completion
+            }
+            if s.alive.iter().any(|a| !a) {
+                // Stuck behind a death: the runtime detects this and
+                // surfaces Err(RankFailed) — a terminal, not a hang.
+                return None;
+            }
+            let blocked = stuck
+                .iter()
+                .map(|&p| {
+                    let ms = &self.progs[p][s.pc[p] as usize];
+                    self.describe_step(p, ms)
+                })
+                .collect();
+            return Some(Violation::Deadlock { blocked });
+        }
+        None
+    }
+
+    fn describe(&self, a: &SchedAction) -> String {
+        match *a {
+            SchedAction::Exec { proc, pc } => {
+                self.describe_step(proc, &self.progs[proc][pc as usize])
+            }
+            SchedAction::Die { proc, pc } => {
+                format!("rank {} dies (before micro-op {pc})", self.ranks[proc])
+            }
+        }
+    }
+}
+
+// ====================================================================
+// Shrink-agreement protocol model
+// ====================================================================
+
+/// Mutation knobs re-introducing the bugs the protocol prevents —
+/// each must produce a counterexample trace (tests/explore.rs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShrinkMutation {
+    None,
+    /// Children accept acknowledgements regardless of scope — the
+    /// stale-epoch acceptance the scope filter exists to stop.
+    AcceptStale,
+    /// Nobody restarts a stale round — the restart-on-death edge the
+    /// bounded-park expiry exists to provide.
+    SkipRestart,
+}
+
+/// In-flight protocol message identity: `(is_req, src, dst, scope,
+/// seq)`, all member indices. Keyed (not a queue) so concurrent sends by
+/// different members commute — equal behaviors reach equal states.
+type MsgKey = (bool, usize, usize, u64, u8);
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct MsgVal {
+    cid: u32,
+    consumed: bool,
+}
+
+/// Per-member protocol phase. `Done::own` records the member's *own*
+/// round scope at acceptance — the no-stale-acceptance invariant is
+/// `scope == own`, which the scope filter guarantees and
+/// [`ShrinkMutation::AcceptStale`] breaks.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+enum Phase {
+    Start,
+    Coord { scope: u64, need: Vec<bool>, collected: Vec<bool> },
+    WaitAck { scope: u64 },
+    Done { scope: u64, own: u64, cid: u32 },
+}
+
+/// Global protocol state: the death registry, each member's phase, the
+/// keyed message pool, and the comm-id allocator.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ShrinkState {
+    dead: Vec<bool>,
+    phase: Vec<Phase>,
+    msgs: BTreeMap<MsgKey, MsgVal>,
+    next_cid: u32,
+}
+
+/// One protocol transition. `Enter` folds compute-role + initial send
+/// (both local/eager in the implementation); `RecvReq`/`RecvAck` consume
+/// one identified message; `Restart`/`Rejoin` are the stale-scope
+/// re-derivation edges; `Die` is a fault choice point.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum ShrinkAction {
+    Die { member: usize },
+    Enter { member: usize },
+    RecvReq { member: usize, msg: MsgKey },
+    RecvAck { member: usize, msg: MsgKey },
+    Resend { member: usize },
+    Restart { member: usize },
+    Rejoin { member: usize },
+}
+
+/// The shrink-agreement transition system. Construct from a live
+/// session with
+/// [`HybridCtx::export_shrink_model`](crate::hybrid::HybridCtx::export_shrink_model)
+/// or directly with [`ShrinkModel::new`] for synthetic topologies.
+pub struct ShrinkModel {
+    members: Vec<usize>,
+    nodes: Vec<usize>,
+    initial_dead: Vec<usize>,
+    kill_set: Vec<usize>,
+    max_kills: u8,
+    root: Option<usize>,
+    elect: ElectRoot,
+    mutation: ShrinkMutation,
+}
+
+impl ShrinkModel {
+    /// `members` are parent-communicator world ranks in comm (ascending)
+    /// order, `nodes` their topology nodes, `initial_dead` the world
+    /// ranks already registered dead (the protocol requires at least
+    /// one).
+    pub fn new(members: &[usize], nodes: &[usize], initial_dead: &[usize]) -> ShrinkModel {
+        assert_eq!(members.len(), nodes.len());
+        assert!(!initial_dead.is_empty(), "shrink requires a registered death");
+        let idx = |w: usize| {
+            members.iter().position(|&m| m == w).expect("dead/kill ranks must be members")
+        };
+        ShrinkModel {
+            members: members.to_vec(),
+            nodes: nodes.to_vec(),
+            initial_dead: initial_dead.iter().map(|&w| idx(w)).collect(),
+            kill_set: Vec::new(),
+            max_kills: 0,
+            root: None,
+            elect: crate::hybrid::default_reelect,
+            mutation: ShrinkMutation::None,
+        }
+    }
+
+    /// Allow up to `max_kills` additional overlapping deaths, drawn from
+    /// `world_ranks`, at any point of the agreement.
+    pub fn with_kills(mut self, world_ranks: &[usize], max_kills: u8) -> ShrinkModel {
+        self.kill_set = world_ranks
+            .iter()
+            .map(|&w| self.members.iter().position(|&m| m == w).expect("kill ranks must be members"))
+            .collect();
+        self.max_kills = max_kills;
+        self
+    }
+
+    /// Check root re-election for a `Reelect`-pinned root (world rank):
+    /// at every terminal where it is dead, the election hook must land
+    /// on the lowest survivor of its node (else the lowest survivor).
+    pub fn with_root(mut self, world: usize) -> ShrinkModel {
+        assert!(self.members.contains(&world));
+        self.root = Some(world);
+        self
+    }
+
+    /// Swap the election hook under check (for mutant tests).
+    pub fn with_elect(mut self, elect: ElectRoot) -> ShrinkModel {
+        self.elect = elect;
+        self
+    }
+
+    pub fn with_mutation(mut self, mutation: ShrinkMutation) -> ShrinkModel {
+        self.mutation = mutation;
+        self
+    }
+
+    /// Surviving member indices, in member (ascending world) order.
+    fn survivors(&self, dead: &[bool]) -> Vec<usize> {
+        (0..self.members.len()).filter(|&i| !dead[i]).collect()
+    }
+
+    fn current_scope(&self, dead: &[bool]) -> u64 {
+        let worlds: Vec<usize> =
+            self.survivors(dead).iter().map(|&i| self.members[i]).collect();
+        shrink_scope_key(&worlds)
+    }
+
+    /// Has every live member agreed on the current survivor set? (The
+    /// death choice points switch off here — the protocol is over.)
+    fn settled(&self, s: &ShrinkState) -> bool {
+        let scope = self.current_scope(&s.dead);
+        self.survivors(&s.dead)
+            .iter()
+            .all(|&m| matches!(s.phase[m], Phase::Done { scope: sc, .. } if sc == scope))
+    }
+
+    fn next_seq(&self, s: &ShrinkState, req: bool, src: usize, dst: usize, scope: u64) -> u8 {
+        (0..=u8::MAX)
+            .find(|&q| !s.msgs.contains_key(&(req, src, dst, scope, q)))
+            .expect("bounded protocol rounds never exhaust sequence numbers")
+    }
+}
+
+impl Model for ShrinkModel {
+    type State = ShrinkState;
+    type Action = ShrinkAction;
+
+    fn initial(&self) -> ShrinkState {
+        let mut dead = vec![false; self.members.len()];
+        for &i in &self.initial_dead {
+            dead[i] = true;
+        }
+        ShrinkState {
+            dead,
+            phase: vec![Phase::Start; self.members.len()],
+            msgs: BTreeMap::new(),
+            next_cid: 1,
+        }
+    }
+
+    fn enabled(&self, s: &ShrinkState) -> Vec<ShrinkAction> {
+        let mut out = Vec::new();
+        let cur = self.current_scope(&s.dead);
+        let kills = s.dead.iter().filter(|d| **d).count() - self.initial_dead.len();
+        let surv = self.survivors(&s.dead);
+        let restarts = self.mutation != ShrinkMutation::SkipRestart;
+        for &m in &surv {
+            match &s.phase[m] {
+                Phase::Start => out.push(ShrinkAction::Enter { member: m }),
+                Phase::Coord { scope, .. } => {
+                    for (&k, v) in &s.msgs {
+                        if k.0 && k.2 == m && !v.consumed {
+                            out.push(ShrinkAction::RecvReq { member: m, msg: k });
+                        }
+                    }
+                    if restarts && *scope != cur {
+                        out.push(ShrinkAction::Restart { member: m });
+                    }
+                }
+                Phase::WaitAck { scope } => {
+                    for (&k, v) in &s.msgs {
+                        if !k.0 && k.2 == m && !v.consumed {
+                            out.push(ShrinkAction::RecvAck { member: m, msg: k });
+                        }
+                    }
+                    if *scope != cur {
+                        if restarts {
+                            out.push(ShrinkAction::Restart { member: m });
+                        }
+                    } else {
+                        // Bounded-park expiry resend, modeled only where
+                        // it can make progress: the round coordinator is
+                        // live and actively collecting at our scope, has
+                        // not collected us, and no request of ours is in
+                        // flight (see DESIGN.md §6c on this bound).
+                        let coord = surv[0];
+                        let active = coord != m
+                            && matches!(
+                                &s.phase[coord],
+                                Phase::Coord { scope: cs, collected, .. }
+                                    if *cs == cur && !collected[m]
+                            );
+                        let in_flight = s
+                            .msgs
+                            .iter()
+                            .any(|(k, v)| k.0 && k.1 == m && k.3 == cur && !v.consumed);
+                        if active && !in_flight {
+                            out.push(ShrinkAction::Resend { member: m });
+                        }
+                    }
+                }
+                Phase::Done { scope, .. } => {
+                    if restarts && *scope != cur {
+                        out.push(ShrinkAction::Rejoin { member: m });
+                    }
+                }
+            }
+        }
+        if !self.settled(s) && (kills as u8) < self.max_kills {
+            for &m in &self.kill_set {
+                if !s.dead[m] {
+                    out.push(ShrinkAction::Die { member: m });
+                }
+            }
+        }
+        out
+    }
+
+    fn step(&self, s: &ShrinkState, a: &ShrinkAction) -> ShrinkState {
+        let mut n = s.clone();
+        match *a {
+            ShrinkAction::Die { member } => n.dead[member] = true,
+            ShrinkAction::Enter { member } => {
+                let surv = self.survivors(&n.dead);
+                let scope = self.current_scope(&n.dead);
+                if surv[0] == member {
+                    let mut need = vec![false; self.members.len()];
+                    for &q in &surv[1..] {
+                        need[q] = true;
+                    }
+                    n.phase[member] =
+                        Phase::Coord { scope, need, collected: vec![false; self.members.len()] };
+                    coord_try_finish(self, &mut n, member);
+                } else {
+                    let coord = surv[0];
+                    let seq = self.next_seq(&n, true, member, coord, scope);
+                    n.msgs.insert((true, member, coord, scope, seq), MsgVal { cid: 0, consumed: false });
+                    n.phase[member] = Phase::WaitAck { scope };
+                }
+            }
+            ShrinkAction::Resend { member } => {
+                let Phase::WaitAck { scope } = n.phase[member] else {
+                    unreachable!("resend only fires while awaiting an ack")
+                };
+                let coord = self.survivors(&n.dead)[0];
+                let seq = self.next_seq(&n, true, member, coord, scope);
+                n.msgs.insert((true, member, coord, scope, seq), MsgVal { cid: 0, consumed: false });
+            }
+            ShrinkAction::RecvReq { member, msg } => {
+                n.msgs.get_mut(&msg).expect("recv of an existing message").consumed = true;
+                let Phase::Coord { scope, collected, .. } = &mut n.phase[member] else {
+                    unreachable!("recv-req only fires while coordinating")
+                };
+                if msg.3 == *scope {
+                    collected[msg.1] = true; // scope match: collect
+                } // else: stale epoch / foreign round — discard
+                coord_try_finish(self, &mut n, member);
+            }
+            ShrinkAction::RecvAck { member, msg } => {
+                let val = n.msgs.get_mut(&msg).expect("recv of an existing message");
+                val.consumed = true;
+                let cid = val.cid;
+                let Phase::WaitAck { scope } = n.phase[member] else {
+                    unreachable!("recv-ack only fires while awaiting an ack")
+                };
+                if msg.3 == scope || self.mutation == ShrinkMutation::AcceptStale {
+                    n.phase[member] = Phase::Done { scope: msg.3, own: scope, cid };
+                } // else: stale epoch — discard
+            }
+            ShrinkAction::Restart { member } | ShrinkAction::Rejoin { member } => {
+                n.phase[member] = Phase::Start;
+            }
+        }
+        n
+    }
+
+    fn proc_of(&self, a: &ShrinkAction) -> usize {
+        match *a {
+            ShrinkAction::Die { member }
+            | ShrinkAction::Enter { member }
+            | ShrinkAction::RecvReq { member, .. }
+            | ShrinkAction::RecvAck { member, .. }
+            | ShrinkAction::Resend { member }
+            | ShrinkAction::Restart { member }
+            | ShrinkAction::Rejoin { member } => member,
+        }
+    }
+
+    fn dependent(&self, a: &ShrinkAction, b: &ShrinkAction) -> bool {
+        if self.proc_of(a) == self.proc_of(b) {
+            return true;
+        }
+        // Deaths touch the registry every transition reads; resends read
+        // the coordinator's phase (cross-member enabledness).
+        let global = |x: &ShrinkAction| {
+            matches!(x, ShrinkAction::Die { .. } | ShrinkAction::Resend { .. })
+        };
+        if global(a) || global(b) {
+            return true;
+        }
+        // A receive is dependent with the peer whose sends feed it
+        // (send-enables-recv); everything else commutes.
+        let feeds = |x: &ShrinkAction, y: &ShrinkAction| match *x {
+            ShrinkAction::RecvReq { msg, .. } | ShrinkAction::RecvAck { msg, .. } => {
+                msg.1 == self.proc_of(y)
+            }
+            _ => false,
+        };
+        feeds(a, b) || feeds(b, a)
+    }
+
+    fn check(&self, s: &ShrinkState, enabled: &[ShrinkAction]) -> Option<Violation> {
+        let surv = self.survivors(&s.dead);
+        // No stale-scope acceptance: a Done member's agreed scope must be
+        // the scope of its own round at acceptance.
+        for &m in &surv {
+            if let Phase::Done { scope, own, .. } = s.phase[m] {
+                if scope != own {
+                    return Some(Violation::Protocol {
+                        detail: format!(
+                            "member {m} (world {}) accepted a stale-scope ack: agreed scope \
+                             {scope:#x} but its round scope was {own:#x}",
+                            self.members[m]
+                        ),
+                    });
+                }
+            }
+        }
+        // No split-brain: same scope, same comm id.
+        for (i, &m1) in surv.iter().enumerate() {
+            for &m2 in &surv[i + 1..] {
+                if let (
+                    Phase::Done { scope: s1, cid: c1, .. },
+                    Phase::Done { scope: s2, cid: c2, .. },
+                ) = (&s.phase[m1], &s.phase[m2])
+                {
+                    if s1 == s2 && c1 != c2 {
+                        return Some(Violation::Protocol {
+                            detail: format!(
+                                "split-brain: members {m1} and {m2} agreed scope {s1:#x} \
+                                 with different comm ids ({c1} vs {c2})"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        if enabled.is_empty() {
+            // Terminal: every survivor must have converged on the true
+            // survivor set's scope.
+            let cur = self.current_scope(&s.dead);
+            let stragglers: Vec<String> = surv
+                .iter()
+                .filter(|&&m| !matches!(s.phase[m], Phase::Done { scope, .. } if scope == cur))
+                .map(|&m| {
+                    format!(
+                        "member {m} (world {}) stuck in {:?}",
+                        self.members[m],
+                        phase_name(&s.phase[m])
+                    )
+                })
+                .collect();
+            if !stragglers.is_empty() {
+                return Some(Violation::Protocol {
+                    detail: format!(
+                        "agreement did not converge to the true survivor set: {}",
+                        stragglers.join("; ")
+                    ),
+                });
+            }
+            // Root re-election: model-side spec computed independently of
+            // the election hook under check.
+            if let Some(rw) = self.root {
+                let ri = self.members.iter().position(|&m| m == rw).expect("root is a member");
+                if s.dead[ri] && !surv.is_empty() {
+                    let survivors_world: Vec<usize> =
+                        surv.iter().map(|&i| self.members[i]).collect();
+                    let survivor_nodes: Vec<usize> =
+                        surv.iter().map(|&i| self.nodes[i]).collect();
+                    let expected = survivor_nodes
+                        .iter()
+                        .position(|&nd| nd == self.nodes[ri])
+                        .unwrap_or(0);
+                    let e = Reelection {
+                        old_root_world: rw,
+                        old_root_node: self.nodes[ri],
+                        survivors_world: &survivors_world,
+                        survivor_nodes: &survivor_nodes,
+                    };
+                    let chosen = (self.elect)(&e);
+                    if chosen != expected {
+                        return Some(Violation::Protocol {
+                            detail: format!(
+                                "re-election picked comm rank {chosen} (world {:?}) but the \
+                                 lowest survivor of dead root {rw}'s node is comm rank \
+                                 {expected} (world {})",
+                                survivors_world.get(chosen),
+                                survivors_world[expected]
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    fn describe(&self, a: &ShrinkAction) -> String {
+        let w = |m: usize| self.members[m];
+        match *a {
+            ShrinkAction::Die { member } => format!("world {} dies", w(member)),
+            ShrinkAction::Enter { member } => {
+                format!("world {} enters the round (derives survivors, sends/collects)", w(member))
+            }
+            ShrinkAction::RecvReq { member, msg } => format!(
+                "world {} (coordinator) receives req from world {} scope {:#x}",
+                w(member),
+                w(msg.1),
+                msg.3
+            ),
+            ShrinkAction::RecvAck { member, msg } => format!(
+                "world {} receives ack from world {} scope {:#x}",
+                w(member),
+                w(msg.1),
+                msg.3
+            ),
+            ShrinkAction::Resend { member } => {
+                format!("world {} resends its request (bounded-park expiry)", w(member))
+            }
+            ShrinkAction::Restart { member } => {
+                format!("world {} restarts the round (scope went stale)", w(member))
+            }
+            ShrinkAction::Rejoin { member } => {
+                format!("world {} rejoins (agreed scope went stale)", w(member))
+            }
+        }
+    }
+}
+
+fn phase_name(p: &Phase) -> &'static str {
+    match p {
+        Phase::Start => "Start",
+        Phase::Coord { .. } => "Coord",
+        Phase::WaitAck { .. } => "WaitAck",
+        Phase::Done { .. } => "Done",
+    }
+}
+
+/// If `member`'s coordinator round has collected every needed request,
+/// allocate the comm id, emit the acknowledgements and finish.
+fn coord_try_finish(model: &ShrinkModel, n: &mut ShrinkState, member: usize) {
+    let Phase::Coord { scope, need, collected } = &n.phase[member] else {
+        return;
+    };
+    let scope = *scope;
+    if !need.iter().zip(collected).all(|(nd, c)| !*nd || *c) {
+        return;
+    }
+    let children: Vec<usize> =
+        need.iter().enumerate().filter_map(|(i, nd)| nd.then_some(i)).collect();
+    let cid = n.next_cid;
+    n.next_cid += 1;
+    for c in children {
+        let seq = model.next_seq(n, false, member, c, scope);
+        n.msgs.insert((false, member, c, scope, seq), MsgVal { cid, consumed: false });
+    }
+    n.phase[member] = Phase::Done { scope, own: scope, cid };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::dpor::{explore, Budget, Reduction};
+    use crate::analysis::schedule::{Access, StageModel};
+
+    fn sched(rank: usize, stages: Vec<StageModel>) -> RankSchedule {
+        RankSchedule { rank, node: rank, op: "test", root: None, win: 7, win_len: 64, stages }
+    }
+
+    fn clean_pair() -> Vec<RankSchedule> {
+        let grp: GroupId = (7, 0);
+        let flg: FlagId = (7, 0);
+        vec![
+            sched(
+                0,
+                vec![
+                    StageModel::Arrive { group: grp, size: 2 },
+                    StageModel::Await { group: grp, size: 2 },
+                    StageModel::Work {
+                        chunk: 0,
+                        accesses: vec![Access { offset: 0, len: 32, write: true }],
+                        msgs: vec![],
+                        colls: vec![],
+                    },
+                    StageModel::Post { flag: flg },
+                ],
+            ),
+            sched(
+                1,
+                vec![
+                    StageModel::Arrive { group: grp, size: 2 },
+                    StageModel::Await { group: grp, size: 2 },
+                    StageModel::Wait { flag: flg },
+                    StageModel::Work {
+                        chunk: 0,
+                        accesses: vec![Access { offset: 0, len: 32, write: false }],
+                        msgs: vec![],
+                        colls: vec![],
+                    },
+                ],
+            ),
+        ]
+    }
+
+    #[test]
+    fn clean_pair_explores_clean_in_every_mode() {
+        for red in [Reduction::Exhaustive, Reduction::Dpor, Reduction::DporCached] {
+            let m = ScheduleModel::from_handle(&clean_pair()).with_conflict_check();
+            let r = explore(&m, red, &Budget::smoke());
+            assert!(r.complete, "{red:?} must finish in budget");
+            assert!(r.counterexample.is_none(), "{red:?}: {:?}", r.counterexample);
+            assert!(r.terminals >= 1);
+        }
+    }
+
+    #[test]
+    fn unsynchronized_writes_are_a_co_enabled_conflict() {
+        let w = |rank| {
+            sched(
+                rank,
+                vec![StageModel::Work {
+                    chunk: 0,
+                    accesses: vec![Access { offset: 0, len: 16, write: true }],
+                    msgs: vec![],
+                    colls: vec![],
+                }],
+            )
+        };
+        let m = ScheduleModel::from_handle(&[w(0), w(1)]).with_conflict_check();
+        let r = explore(&m, Reduction::Exhaustive, &Budget::smoke());
+        let cex = r.counterexample.expect("two unsynchronized writers must conflict");
+        assert!(matches!(cex.violation, Violation::Conflict { .. }), "{:?}", cex.violation);
+    }
+
+    #[test]
+    fn reductions_agree_on_a_deadlock() {
+        // Rank 1 waits on a flag nobody posts.
+        let flg: FlagId = (7, 3);
+        let s = vec![sched(0, vec![]), sched(1, vec![StageModel::Wait { flag: flg }])];
+        for red in [Reduction::Exhaustive, Reduction::Dpor, Reduction::DporCached] {
+            let m = ScheduleModel::from_handle(&s);
+            let r = explore(&m, red, &Budget::smoke());
+            let cex = r.counterexample.unwrap_or_else(|| panic!("{red:?} must deadlock"));
+            assert!(matches!(cex.violation, Violation::Deadlock { .. }));
+        }
+    }
+
+    #[test]
+    fn shrink_protocol_converges_exhaustively() {
+        let m = ShrinkModel::new(&[0, 1, 2, 3], &[0, 0, 1, 1], &[3]);
+        let r = explore(&m, Reduction::Exhaustive, &Budget::smoke());
+        assert!(r.complete);
+        assert!(r.counterexample.is_none(), "{:?}", r.counterexample);
+        assert!(r.terminals >= 1);
+    }
+
+    #[test]
+    fn shrink_death_choice_points_stay_convergent() {
+        let m = ShrinkModel::new(&[0, 1, 2, 3], &[0, 0, 1, 1], &[3]).with_kills(&[0, 2], 2);
+        let r = explore(&m, Reduction::Exhaustive, &Budget::smoke());
+        assert!(r.complete);
+        assert!(r.counterexample.is_none(), "{:?}", r.counterexample);
+    }
+}

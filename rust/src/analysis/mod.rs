@@ -21,11 +21,23 @@
 //! the *executed behavior* (including the op bodies' raw window views the
 //! static model only over-approximates). Together they are the backstop
 //! the engine-refactor roadmap items lean on.
+//!
+//! A third pass closes the interleaving gap (DESIGN.md §6c): the
+//! verifier checks one topological order, the detector one executed
+//! trace — [`dpor`] + [`explore`] check **every** reachable interleaving
+//! of a schedule (and of the shrink/recovery agreement) under dynamic
+//! partial-order reduction, emitting minimal replayable counterexample
+//! traces. Run with `verify_schedules --explore`.
 
+pub mod dpor;
+pub mod explore;
 pub mod race;
 pub mod schedule;
 
+pub use dpor::{explore, Budget, Counterexample, ExploreReport, Model, Reduction, Violation};
+pub use explore::{ScheduleModel, ShrinkModel, ShrinkMutation};
 pub use race::{RaceDetector, RaceReport};
 pub use schedule::{
-    verify_handle, verify_program, verify_rank_local, verify_survivors, Diagnostic, RankSchedule,
+    lower_handle, lower_program, verify_handle, verify_program, verify_rank_local,
+    verify_survivors, Diagnostic, MicroOp, MicroStep, RankSchedule,
 };

@@ -118,6 +118,41 @@ impl fmt::Display for RaceReport {
     }
 }
 
+impl RaceReport {
+    /// A run-independent identity for this report: the two access sides
+    /// in sorted order, *excluding* the window id (window ids come from a
+    /// process-global counter, so the same logical configuration re-run
+    /// in the same process allocates fresh ids) and the seed. What
+    /// `verify_schedules --replay` compares across the two runs.
+    pub fn canonical(&self) -> String {
+        let side = |a: &AccessInfo| {
+            format!(
+                "rank {} {} [{}, {}) during \"{}\"",
+                a.rank,
+                if a.write { "write" } else { "read" },
+                a.offset,
+                a.offset + a.len,
+                a.stage
+            )
+        };
+        let (mut x, mut y) = (side(&self.first), side(&self.second));
+        if x > y {
+            std::mem::swap(&mut x, &mut y);
+        }
+        format!("{x} <-> {y}")
+    }
+}
+
+/// The canonical, deterministically ordered fingerprint of a report set —
+/// equal across replays of the same configuration iff the detector found
+/// the same races.
+pub fn canonical_reports(reports: &[RaceReport]) -> Vec<String> {
+    let mut keys: Vec<String> = reports.iter().map(RaceReport::canonical).collect();
+    keys.sort();
+    keys.dedup();
+    keys
+}
+
 struct Record {
     info: AccessInfo,
     clock: VClock,

@@ -625,6 +625,125 @@ pub fn verify_program(handles: &[&[RankSchedule]]) -> Vec<Diagnostic> {
     out
 }
 
+// ---- micro-op lowering (DESIGN.md §6c) --------------------------------
+//
+// The verifier above checks ONE topological order of the dependency
+// graph. The model checker (`analysis::explore`) instead *executes* the
+// schedules under every interleaving, which needs each stage broken into
+// single-rank transitions with enabled-predicates: that is what a
+// `MicroStep` is. The lowering is shared here so the verifier and the
+// checker agree on what a schedule means.
+
+/// A FIFO bridge channel identity: `(comm, src, dst, tag)` — the match
+/// key of [`MsgModel`].
+pub type ChanId = (u64, usize, usize, i64);
+
+/// One single-rank transition of a lowered schedule. Each variant's
+/// enabled-predicate mirrors the runtime primitive it models (see
+/// `analysis::explore::ScheduleModel`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MicroOp {
+    /// Register at a barrier group — never blocks.
+    Arrive { group: GroupId, size: usize },
+    /// Complete the outstanding arrival — enabled once the registered
+    /// generation closed (all `size` arrived).
+    AwaitGroup { group: GroupId },
+    /// Yellow release, poster side — never blocks.
+    Post { flag: FlagId },
+    /// Yellow release, observer side — enabled once an unconsumed post
+    /// exists for this observer.
+    WaitFlag { flag: FlagId },
+    /// Eagerly-buffered chunk-stream send — never blocks.
+    Send { chan: ChanId },
+    /// FIFO channel receive — enabled while the channel is non-empty.
+    Recv { chan: ChanId },
+    /// Enter a nested collective (post my arrival) — never blocks.
+    CollEnter { comm: u64, kind: &'static str, size: usize },
+    /// Leave the rendezvous — enabled once every participant entered
+    /// this episode.
+    CollLeave { comm: u64 },
+    /// A window byte-range touch — never blocks, carries no sync.
+    Access { win: u64, offset: usize, len: usize, write: bool },
+}
+
+/// One lowered transition with its provenance (rank, handle index in the
+/// program, stage index, op name) — what violation traces print.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct MicroStep {
+    pub rank: usize,
+    pub handle: usize,
+    pub stage: usize,
+    pub op: &'static str,
+    pub micro: MicroOp,
+}
+
+/// Lower a program of in-flight handles (same shape as
+/// [`verify_program`]'s input) into per-rank micro-op sequences, keyed
+/// by rank, in rank program order (handles in start order). `Skip`
+/// stages lower to nothing; a `Work` stage lowers to its messages (in
+/// schedule order — FIFO identity preserved), then its nested
+/// collectives, then its accesses (accesses never block and are ordered
+/// against peers by the surrounding sync stages, so their intra-stage
+/// position is immaterial to every checked property).
+pub fn lower_program(handles: &[&[RankSchedule]]) -> BTreeMap<usize, Vec<MicroStep>> {
+    let mut out: BTreeMap<usize, Vec<MicroStep>> = BTreeMap::new();
+    let mut rank_list: Vec<usize> =
+        handles.iter().flat_map(|hs| hs.iter().map(|s| s.rank)).collect();
+    rank_list.sort_unstable();
+    rank_list.dedup();
+    for &rank in &rank_list {
+        let prog = out.entry(rank).or_default();
+        for (h, hs) in handles.iter().enumerate() {
+            for s in hs.iter().filter(|s| s.rank == rank) {
+                for (i, st) in s.stages.iter().enumerate() {
+                    let mut push = |micro: MicroOp| {
+                        prog.push(MicroStep { rank, handle: h, stage: i, op: s.op, micro })
+                    };
+                    match st {
+                        StageModel::Arrive { group, size } => {
+                            push(MicroOp::Arrive { group: *group, size: *size })
+                        }
+                        StageModel::Await { group, .. } => {
+                            push(MicroOp::AwaitGroup { group: *group })
+                        }
+                        StageModel::Post { flag } => push(MicroOp::Post { flag: *flag }),
+                        StageModel::Wait { flag } => push(MicroOp::WaitFlag { flag: *flag }),
+                        StageModel::Work { accesses, msgs, colls, .. } => {
+                            for m in msgs {
+                                let chan = (m.comm, m.src, m.dst, m.tag);
+                                push(if m.send {
+                                    MicroOp::Send { chan }
+                                } else {
+                                    MicroOp::Recv { chan }
+                                });
+                            }
+                            for c in colls {
+                                push(MicroOp::CollEnter { comm: c.comm, kind: c.kind, size: c.size });
+                                push(MicroOp::CollLeave { comm: c.comm });
+                            }
+                            for a in accesses {
+                                push(MicroOp::Access {
+                                    win: s.win,
+                                    offset: a.offset,
+                                    len: a.len,
+                                    write: a.write,
+                                });
+                            }
+                        }
+                        StageModel::Skip => {}
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// [`lower_program`] for a single handle's all-rank schedule set.
+pub fn lower_handle(ranks: &[RankSchedule]) -> BTreeMap<usize, Vec<MicroStep>> {
+    lower_program(&[ranks])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -917,5 +1036,49 @@ mod tests {
         let d = Diagnostic::OutOfWindow { rank: 3, stage: 5, offset: 8, len: 16, win_len: 12 };
         let s = d.to_string();
         assert!(s.contains("rank 3") && s.contains("stage 5"), "{s}");
+    }
+
+    #[test]
+    fn lowering_preserves_order_and_provenance() {
+        let progs = lower_handle(&two_rank_clean());
+        let r0 = &progs[&0];
+        assert_eq!(
+            r0.iter().map(|m| m.micro).collect::<Vec<_>>(),
+            vec![
+                MicroOp::Arrive { group: GRP, size: 2 },
+                MicroOp::AwaitGroup { group: GRP },
+                MicroOp::Access { win: WIN, offset: 0, len: 32, write: true },
+                MicroOp::Post { flag: FLG },
+            ]
+        );
+        // Provenance: the Access came from stage 2 of handle 0.
+        assert_eq!((r0[2].handle, r0[2].stage, r0[2].op), (0, 2, "test"));
+        let r1 = &progs[&1];
+        assert!(matches!(r1.last().unwrap().micro, MicroOp::WaitFlag { flag } if flag == FLG));
+    }
+
+    #[test]
+    fn lowering_orders_msgs_before_colls_within_a_stage() {
+        let s = vec![sched(
+            0,
+            None,
+            vec![work(
+                vec![Access { offset: 0, len: 8, write: false }],
+                vec![MsgModel { comm: 9, src: 0, dst: 1, tag: 3, send: true }],
+                vec![CollModel { comm: 9, kind: "allgatherv", size: 1 }],
+            )],
+        )];
+        let progs = lower_handle(&s);
+        let kinds: Vec<&str> = progs[&0]
+            .iter()
+            .map(|m| match m.micro {
+                MicroOp::Send { .. } => "send",
+                MicroOp::CollEnter { .. } => "enter",
+                MicroOp::CollLeave { .. } => "leave",
+                MicroOp::Access { .. } => "access",
+                _ => "other",
+            })
+            .collect();
+        assert_eq!(kinds, vec!["send", "enter", "leave", "access"]);
     }
 }

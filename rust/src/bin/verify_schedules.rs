@@ -15,7 +15,31 @@
 //! happens-before race detector and requires it to come back clean, so
 //! the *executed* window accesses — not just the compiled intent — are
 //! covered on every CI run.
+//!
+//! Modes and flags (DESIGN.md §6c):
+//!
+//! - `--shapes <filter>`: restrict the sweep to shapes whose name
+//!   contains `<filter>` (substring match) — the CI shard key. The
+//!   fixed-shape runtime-race and post-shrink passes only run on an
+//!   unfiltered sweep.
+//! - `--jobs <n>`: verify (shape, k) configurations on `n` worker
+//!   threads instead of serially.
+//! - `--explore [--smoke] [--trace-out <path>]`: run the exhaustive
+//!   interleaving model checker instead of the static sweep — real
+//!   exported shapes per scheme under [`Reduction::Exhaustive`] with
+//!   co-enabled-conflict checking, DPOR cross-checks, fault choice
+//!   points (≤ 2 kills), and the shrink-agreement protocol model.
+//!   `--smoke` selects the bounded CI budget; violations print a minimal
+//!   replayable interleaving trace and are also written to
+//!   `--trace-out` for artifact upload. An exhausted budget fails the
+//!   run — the gate's claim is exhaustiveness under the stated bounds.
+//! - `--replay <seed>`: re-run the canonical instrumented race
+//!   configuration twice under `<seed>` and assert the detector
+//!   reproduces the identical report set (the replay contract every
+//!   `RaceReport` advertises).
 
+use hympi::analysis::dpor::{explore, Budget, ExploreReport, Reduction};
+use hympi::analysis::explore::{ScheduleModel, ShrinkModel};
 use hympi::analysis::race;
 use hympi::analysis::{
     verify_handle, verify_program, verify_survivors, Diagnostic, RaceDetector, RankSchedule,
@@ -23,7 +47,9 @@ use hympi::analysis::{
 use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
 use hympi::hybrid::{AllreduceMethod, HybridCtx, LeaderPolicy, RootPolicy, SyncScheme};
 use hympi::mpi::{Datatype, FaultPlan, ReduceOp};
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// The swept cluster shapes: the irregular figure shapes, a single node,
 /// and a regular two-node bench shape.
@@ -37,6 +63,11 @@ const SHAPES: &[(&str, Preset, &[usize])] = &[
 const LEADER_COUNTS: &[usize] = &[1, 2, 4];
 const SCHEMES: &[SyncScheme] = &[SyncScheme::Barrier, SyncScheme::Spin];
 const DEPTHS: &[usize] = &[1, 2, 4];
+
+/// The exploration shapes: small enough that full state enumeration of
+/// each exported handle fits the smoke budget.
+const EXPLORE_NODES: &[usize] = &[2, 1];
+const EXPLORE_NODES_K2: &[usize] = &[2, 2];
 
 fn spec(p: Preset, nodes: &[usize]) -> ClusterSpec {
     let mut s = ClusterSpec::preset(p, nodes.len());
@@ -131,6 +162,30 @@ fn report(label: &str, diags: &[Diagnostic]) -> usize {
         eprintln!("FAIL [{label}]: {d}");
     }
     diags.len()
+}
+
+/// Verify one (shape, k) configuration: every handle flavor plus the
+/// two-in-flight overlap program. Returns (failures, handles checked).
+fn sweep_one(shape_name: &str, preset: Preset, nodes: &'static [usize], k: usize) -> (usize, usize) {
+    let mut failures = 0usize;
+    let per_rank = export_all(nodes, preset, k);
+    let grouped = by_handle(&per_rank);
+    for (name, set) in &grouped {
+        failures += report(&format!("{shape_name} k{k} {name}"), &verify_handle(set));
+    }
+    // Two handles in flight at once (the overlap idiom): their
+    // concatenated per-rank streams must still be acyclic.
+    let a = &grouped[0].1; // allgather
+    let b = grouped
+        .iter()
+        .find(|(n, _)| n.starts_with("allreduce m1"))
+        .map(|(_, s)| s)
+        .expect("sweep builds an allreduce handle");
+    failures += report(
+        &format!("{shape_name} k{k} overlap allgather+allreduce"),
+        &verify_program(&[a, b]),
+    );
+    (failures, grouped.len())
 }
 
 /// Drive a small instrumented cluster end-to-end: both schemes, two
@@ -283,7 +338,260 @@ fn post_shrink_pass() -> usize {
     failures
 }
 
+// ====================================================================
+// --replay: deterministic race-report reproduction
+// ====================================================================
+
+/// Drive the canonical racy configuration (the stale-epoch in-place read
+/// racing a peer's re-staging — the same scenario tests/verify.rs pins)
+/// under `seed` and return the canonical report set.
+fn racy_run(seed: u64) -> Vec<String> {
+    let det = RaceDetector::new(5, seed);
+    let det2 = det.clone();
+    SimCluster::new(spec(Preset::VulcanSb, &[3, 2])).run(move |env| {
+        let w = env.world();
+        let me = w.rank();
+        let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+        let mut ag = ctx.allgather_init(env, 32, SyncScheme::Spin);
+        race::install(&det2, me);
+        let block = vec![me as u8; 32];
+        ag.start_allgather(env, &block);
+        ag.wait(env);
+        if me == 1 {
+            // Epoch-1 in-place read of rank 0's block while rank 0 —
+            // already released by the yellow post — re-stages below.
+            std::hint::black_box(ag.result_view(32).unwrap()[0]);
+        }
+        ag.start_allgather(env, &block); // rank 0 rewrites block 0
+        ag.wait(env);
+        race::uninstall();
+        env.barrier(&w);
+        ag.free(env);
+    });
+    let reports = det.reports();
+    for r in &reports {
+        if r.seed != seed {
+            eprintln!("FAIL [replay]: report does not echo the requested seed: {r}");
+        }
+    }
+    race::canonical_reports(&reports)
+}
+
+/// `--replay <seed>`: the same instrumented configuration, run twice,
+/// must produce the identical (canonicalized) report set — and a
+/// non-empty one, since the configuration is the known-racy scenario.
+fn replay_pass(seed: u64) -> usize {
+    let first = racy_run(seed);
+    let second = racy_run(seed);
+    if first.is_empty() {
+        eprintln!("FAIL [replay seed {seed:#x}]: the known-racy configuration produced no report");
+        return 1;
+    }
+    if first != second {
+        eprintln!(
+            "FAIL [replay seed {seed:#x}]: reports did not reproduce\n  first:  {first:?}\n  second: {second:?}"
+        );
+        return 1;
+    }
+    println!("replay seed {seed:#x}: {} race report(s) reproduced identically:", first.len());
+    for r in &first {
+        println!("  {r}");
+    }
+    0
+}
+
+// ====================================================================
+// --explore: exhaustive interleaving checking
+// ====================================================================
+
+/// The handle flavors explored per scheme (base names without the scheme
+/// suffix). The smoke set covers each sync-primitive family: half-barrier
+/// episodes + yellow releases (allgather), the pipelined bridge chunk
+/// stream (bcast fixed d2), and the nested-collective rendezvous
+/// (allreduce m1).
+const EXPLORE_OPS_SMOKE: &[&str] = &["allgather", "bcast fixed d2", "allreduce m1"];
+const EXPLORE_OPS_FULL: &[&str] = &[
+    "allgather",
+    "bcast fixed d2",
+    "allreduce m1",
+    "scatter fixed d1",
+    "gather fixed",
+    "reduce_scatter m1",
+];
+
+/// Account one exploration: violations print (and collect for
+/// `--trace-out`) their minimal replayable interleaving; an exhausted
+/// budget is a failure because the gate's claim is exhaustiveness.
+fn judge<A>(label: &str, r: &ExploreReport<A>, traces: &mut String) -> usize {
+    if let Some(cex) = &r.counterexample {
+        eprintln!("FAIL [explore {label}]: {cex}");
+        traces.push_str(&format!("[{label}]\n{cex}\n"));
+        return 1;
+    }
+    if !r.complete {
+        eprintln!(
+            "FAIL [explore {label}]: budget exhausted before exhaustive coverage \
+             ({} transitions, {} states)",
+            r.transitions, r.states
+        );
+        traces.push_str(&format!("[{label}] budget exhausted\n"));
+        return 1;
+    }
+    println!(
+        "explore [{label}]: clean — {} transitions, {} states, {} terminals, {} cache prunes",
+        r.transitions, r.states, r.terminals, r.dedup_prunes
+    );
+    0
+}
+
+/// `--explore`: prove deadlock-freedom and yellow-release safety over
+/// *every* interleaving of real exported shapes (per scheme), absence of
+/// co-enabled conflicting accesses (exhaustive mode, k = 1), liveness
+/// under fault choice points, and the shrink-agreement invariants under
+/// ≤ 2 overlapping deaths.
+fn explore_pass(smoke: bool, trace_out: Option<&Path>) -> usize {
+    let budget = if smoke { Budget::smoke() } else { Budget::full() };
+    let ops = if smoke { EXPLORE_OPS_SMOKE } else { EXPLORE_OPS_FULL };
+    let mut failures = 0usize;
+    let mut traces = String::new();
+
+    // Real exported shapes, k = 1, full state enumeration + co-enabled
+    // conflict check, with a cached-DPOR cross-check of each model.
+    let grouped = by_handle(&export_all(EXPLORE_NODES, Preset::VulcanSb, 1));
+    for (name, set) in &grouped {
+        let base = name.rsplit_once(' ').map_or(name.as_str(), |(b, _)| b);
+        if !ops.contains(&base) {
+            continue;
+        }
+        let m = ScheduleModel::from_handle(set).with_conflict_check();
+        failures += judge(
+            &format!("[2,1] k1 {name} exhaustive"),
+            &explore(&m, Reduction::Exhaustive, &budget),
+            &mut traces,
+        );
+        let m = ScheduleModel::from_handle(set);
+        failures += judge(
+            &format!("[2,1] k1 {name} dpor"),
+            &explore(&m, Reduction::DporCached, &budget),
+            &mut traces,
+        );
+        // Fault choice points: the leader of node 0 or the remote rank
+        // may die before any of its remaining micro-ops (≤ 2 kills). A
+        // stuck state behind a death is a detected failure (terminal);
+        // only a death-free stuck state is a deadlock.
+        let m = ScheduleModel::from_handle(set).with_kills(&[0, 2], 2);
+        failures += judge(
+            &format!("[2,1] k1 {name} faults(≤2)"),
+            &explore(&m, Reduction::Exhaustive, &budget),
+            &mut traces,
+        );
+    }
+
+    // Striped leaders (k = 2): cached DPOR keeps the larger rank count
+    // tractable; no conflict check here — k ≥ 2 exports over-approximate
+    // striped leader accesses to full-range unions (DESIGN.md §6c).
+    let grouped = by_handle(&export_all(EXPLORE_NODES_K2, Preset::VulcanSb, 2));
+    for (name, set) in &grouped {
+        let base = name.rsplit_once(' ').map_or(name.as_str(), |(b, _)| b);
+        if base != "allgather" && base != "bcast fixed d2" {
+            continue;
+        }
+        let m = ScheduleModel::from_handle(set);
+        failures += judge(
+            &format!("[2,2] k2 {name} dpor"),
+            &explore(&m, Reduction::DporCached, &budget),
+            &mut traces,
+        );
+    }
+
+    // The shrink-agreement protocol model (exhaustive — its split-brain
+    // invariant is a cross-member predicate, outside DPOR's guarantees).
+    // 3+2 members, one registered death; then the same with the dead
+    // rank being a Reelect-pinned root and ≤2 overlapping deaths drawn
+    // from {coordinator, reelection target}.
+    let m = ShrinkModel::new(&[0, 1, 2], &[0, 1, 1], &[0]);
+    failures +=
+        judge("shrink 1+2, coordinator dead", &explore(&m, Reduction::Exhaustive, &budget), &mut traces);
+    let m = ShrinkModel::new(&[0, 1, 2, 3, 4], &[0, 0, 0, 1, 1], &[3]).with_root(3);
+    failures +=
+        judge("shrink 3+2, dead root 3", &explore(&m, Reduction::Exhaustive, &budget), &mut traces);
+    let m = ShrinkModel::new(&[0, 1, 2, 3, 4], &[0, 0, 0, 1, 1], &[3])
+        .with_root(3)
+        .with_kills(&[0, 4], 2);
+    failures += judge(
+        "shrink 3+2, dead root 3, ≤2 overlapping kills {0,4}",
+        &explore(&m, Reduction::Exhaustive, &budget),
+        &mut traces,
+    );
+
+    if let Some(path) = trace_out {
+        if !traces.is_empty() {
+            if let Err(e) = std::fs::write(path, &traces) {
+                eprintln!("FAIL [explore]: cannot write trace artifact {}: {e}", path.display());
+                failures += 1;
+            } else {
+                eprintln!("explore: violation traces written to {}", path.display());
+            }
+        }
+    }
+    failures
+}
+
+// ====================================================================
+// CLI
+// ====================================================================
+
+struct Cli {
+    shapes: Option<String>,
+    jobs: usize,
+    explore: bool,
+    smoke: bool,
+    replay: Option<u64>,
+    trace_out: Option<PathBuf>,
+}
+
+const USAGE: &str = "usage: verify_schedules [--shapes <filter>] [--jobs <n>] \
+[--explore [--smoke] [--trace-out <path>]] [--replay <seed>]";
+
+fn parse_cli() -> Result<Cli, String> {
+    let mut cli = Cli { shapes: None, jobs: 1, explore: false, smoke: false, replay: None, trace_out: None };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        let mut val = |flag: &str| args.next().ok_or_else(|| format!("{flag} needs a value"));
+        match a.as_str() {
+            "--shapes" => cli.shapes = Some(val("--shapes")?),
+            "--jobs" => {
+                cli.jobs = val("--jobs")?
+                    .parse::<usize>()
+                    .map_err(|e| format!("--jobs: {e}"))?
+                    .max(1);
+            }
+            "--explore" => cli.explore = true,
+            "--smoke" => cli.smoke = true,
+            "--replay" => {
+                let v = val("--replay")?;
+                let parsed = match v.strip_prefix("0x") {
+                    Some(hex) => u64::from_str_radix(hex, 16),
+                    None => v.parse::<u64>(),
+                };
+                cli.replay = Some(parsed.map_err(|e| format!("--replay: {e}"))?);
+            }
+            "--trace-out" => cli.trace_out = Some(PathBuf::from(val("--trace-out")?)),
+            "--help" | "-h" => return Err(USAGE.to_string()),
+            other => return Err(format!("unknown flag {other}\n{USAGE}")),
+        }
+    }
+    Ok(cli)
+}
+
 fn main() -> ExitCode {
+    let cli = match parse_cli() {
+        Ok(c) => c,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::FAILURE;
+        }
+    };
     // Route every Auto/Tuned resolution in the sweep through the online
     // autotuner (cost-model mode, seeded from the committed table when
     // one is present) — the "mt" handles below then carry tuner-chosen
@@ -298,34 +606,61 @@ fn main() -> ExitCode {
         };
         select::install(std::sync::Arc::new(tuner));
     }
-    let mut failures = 0usize;
-    let mut handles_checked = 0usize;
-    for &(shape_name, preset, nodes) in SHAPES {
-        for &k in LEADER_COUNTS {
-            let per_rank = export_all(nodes, preset, k);
-            let grouped = by_handle(&per_rank);
-            for (name, set) in &grouped {
-                failures += report(&format!("{shape_name} k{k} {name}"), &verify_handle(set));
-                handles_checked += 1;
-            }
-            // Two handles in flight at once (the overlap idiom): their
-            // concatenated per-rank streams must still be acyclic.
-            let a = &grouped[0].1; // allgather
-            let b = grouped
-                .iter()
-                .find(|(n, _)| n.starts_with("allreduce m1"))
-                .map(|(_, s)| s)
-                .expect("sweep builds an allreduce handle");
-            failures += report(
-                &format!("{shape_name} k{k} overlap allgather+allreduce"),
-                &verify_program(&[a, b]),
-            );
-        }
+
+    // Dedicated modes: exploration and replay run instead of the sweep.
+    if let Some(seed) = cli.replay {
+        let failures = replay_pass(seed);
+        return if failures == 0 { ExitCode::SUCCESS } else { ExitCode::FAILURE };
     }
-    failures += runtime_race_pass();
-    failures += post_shrink_pass();
+    if cli.explore {
+        let failures = explore_pass(cli.smoke, cli.trace_out.as_deref());
+        return if failures == 0 {
+            println!("verify_schedules --explore: all explorations exhaustively clean");
+            ExitCode::SUCCESS
+        } else {
+            eprintln!("verify_schedules --explore: {failures} failure(s)");
+            ExitCode::FAILURE
+        };
+    }
+
+    let work: Vec<(&str, Preset, &'static [usize], usize)> = SHAPES
+        .iter()
+        .filter(|(name, _, _)| cli.shapes.as_deref().map_or(true, |f| name.contains(f)))
+        .flat_map(|&(name, preset, nodes)| {
+            LEADER_COUNTS.iter().map(move |&k| (name, preset, nodes, k))
+        })
+        .collect();
+    if work.is_empty() {
+        eprintln!("verify_schedules: --shapes filter matched no shape");
+        return ExitCode::FAILURE;
+    }
+    let failures = AtomicUsize::new(0);
+    let handles_checked = AtomicUsize::new(0);
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..cli.jobs.min(work.len()) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                let Some(&(name, preset, nodes, k)) = work.get(i) else { break };
+                let (f, h) = sweep_one(name, preset, nodes, k);
+                failures.fetch_add(f, Ordering::SeqCst);
+                handles_checked.fetch_add(h, Ordering::SeqCst);
+            });
+        }
+    });
+    let mut failures = failures.into_inner();
+    let handles_checked = handles_checked.into_inner();
+    // The fixed-shape end-to-end passes belong to the full gate only — a
+    // sharded (filtered) invocation would run them redundantly per shard.
+    let extra = if cli.shapes.is_none() {
+        failures += runtime_race_pass();
+        failures += post_shrink_pass();
+        "; runtime race pass clean; post-shrink pass clean"
+    } else {
+        ""
+    };
     if failures == 0 {
-        println!("verify_schedules: {handles_checked} handle configurations verified clean; runtime race pass clean; post-shrink pass clean");
+        println!("verify_schedules: {handles_checked} handle configurations verified clean{extra}");
         ExitCode::SUCCESS
     } else {
         eprintln!("verify_schedules: {failures} diagnostic(s)");

@@ -108,6 +108,27 @@ pub(crate) fn stripe_bounds(len: usize, k: usize, j: usize, align: usize) -> (us
     (lo, hi - lo)
 }
 
+/// FNV-1a over the sorted survivor world-rank set: the shrink round's
+/// scope key. Same survivors ⇒ same key on every participant,
+/// regardless of which parent communicator they derived the set from;
+/// different sessions' concurrent agreements (disjoint or overlapping
+/// member sets) collide only if their survivor sets are identical — in
+/// which case the agreements are interchangeable anyway. Public so the
+/// exploration model ([`analysis::explore::ShrinkModel`]) tags its
+/// protocol messages with the *same* scope the implementation computes.
+///
+/// [`analysis::explore::ShrinkModel`]: crate::analysis::explore::ShrinkModel
+pub fn shrink_scope_key(survivors: &[usize]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &w in survivors {
+        for b in (w as u64).to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0100_0000_01b3);
+        }
+    }
+    h
+}
+
 /// The hybrid session context: the two-level (node + `k` bridges)
 /// communicator split of one parent communicator, plus the cached one-off
 /// wrapper state every persistent collective on it shares.
@@ -272,23 +293,6 @@ impl HybridCtx {
     /// for the full detect → shrink → rebuild → retry driver) and
     /// abandon the rest.
     pub fn shrink(self: &Rc<Self>, env: &mut ProcEnv) -> Rc<HybridCtx> {
-        /// FNV-1a over the sorted survivor world-rank set: the round's
-        /// scope key. Same survivors ⇒ same key on every participant,
-        /// regardless of which parent communicator they derived the set
-        /// from; different sessions' concurrent agreements (disjoint or
-        /// overlapping member sets) collide only if their survivor sets
-        /// are identical — in which case the agreements are
-        /// interchangeable anyway.
-        fn scope_key(survivors: &[usize]) -> u64 {
-            let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-            for &w in survivors {
-                for b in (w as u64).to_le_bytes() {
-                    h ^= u64::from(b);
-                    h = h.wrapping_mul(0x0100_0000_01b3);
-                }
-            }
-            h
-        }
         let world = env.world();
         let me = env.world_rank();
         let parent = &self.parent;
@@ -300,7 +304,7 @@ impl HybridCtx {
                 .filter(|&w| !env.state().is_dead(w))
                 .collect();
             let epoch = env.state().dead_ranks().len() as u64;
-            let scope = scope_key(&s);
+            let scope = shrink_scope_key(&s);
             (s, epoch, scope)
         };
         let (id, vmax, survivors) = 'round: loop {
@@ -426,6 +430,22 @@ impl HybridCtx {
     /// The parent communicator this session was derived from.
     pub fn parent(&self) -> &Communicator {
         &self.parent
+    }
+
+    /// Export the [`shrink`](HybridCtx::shrink) agreement this session
+    /// would run — its parent members, their topology nodes and the
+    /// currently registered deaths — as a checkable protocol model for
+    /// the exhaustive explorer (DESIGN.md §6c). Like `shrink` itself,
+    /// this requires at least one registered death. Layer fault choice
+    /// points, a `Reelect` root or a mutation onto the returned model
+    /// with its builder methods.
+    pub fn export_shrink_model(&self, env: &ProcEnv) -> crate::analysis::explore::ShrinkModel {
+        let members: Vec<usize> = self.parent.members().to_vec();
+        let topo = env.topo();
+        let nodes: Vec<usize> = members.iter().map(|&w| topo.node_of(w)).collect();
+        let dead: Vec<usize> =
+            members.iter().copied().filter(|&w| env.state().is_dead(w)).collect();
+        crate::analysis::explore::ShrinkModel::new(&members, &nodes, &dead)
     }
 
     /// Node-level communicator (`MPI_Comm_split_type(…SHARED…)`).

@@ -97,7 +97,9 @@ pub mod sync;
 pub use allgather::AllgatherParam;
 pub use allreduce::{AllreduceMethod, METHOD_CUTOFF_BYTES};
 pub use bcast::TransTables;
-pub use ctx::{EpochReport, HyColl, HyOp, HybridCtx, LeaderPolicy, Resilience, RetryPolicy};
+pub use ctx::{
+    shrink_scope_key, EpochReport, HyColl, HyOp, HybridCtx, LeaderPolicy, Resilience, RetryPolicy,
+};
 pub use progress::{default_reelect, wait_all, wait_any, ElectRoot, HyReq, Reelection, RootPolicy};
 pub use shmem::HyWin;
 pub use sync::SyncScheme;

@@ -1,0 +1,373 @@
+//! Integration tests for the exhaustive interleaving model checker
+//! (ISSUE 10, DESIGN.md §6c): real exported schedules explored clean
+//! under every reduction mode, mutation tests showing a dropped Arrive,
+//! a skipped yellow release and a stale-epoch acceptance each produce a
+//! minimal *replayable* counterexample trace naming the interleaving,
+//! fault choice points (≤ 2 kills) staying deadlock-free, and the
+//! shrink-agreement protocol model — including one exported from a live
+//! post-death session — converging under ≤ 2 overlapping deaths with
+//! correct root re-election.
+
+use hympi::analysis::dpor::{explore, replay, Budget, Reduction, Violation};
+use hympi::analysis::explore::{ScheduleModel, ShrinkModel, ShrinkMutation};
+use hympi::analysis::schedule::{RankSchedule, StageModel};
+use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
+use hympi::hybrid::{
+    AllreduceMethod, HybridCtx, LeaderPolicy, Reelection, RootPolicy, SyncScheme,
+};
+use hympi::mpi::{Datatype, FaultPlan, ReduceOp};
+
+fn spec(nodes: &[usize]) -> ClusterSpec {
+    let mut s = ClusterSpec::preset(Preset::VulcanSb, nodes.len());
+    s.nodes = nodes.to_vec();
+    s
+}
+
+/// Export one handle's all-rank schedule set on the small [2, 1]
+/// exploration shape (3 ranks — full state enumeration stays tiny).
+fn export<F>(root: usize, build: F) -> Vec<RankSchedule>
+where
+    F: Fn(&std::rc::Rc<HybridCtx>, &mut hympi::mpi::env::ProcEnv) -> hympi::hybrid::HyColl
+        + Send
+        + Sync
+        + 'static,
+{
+    let report = SimCluster::new(spec(&[2, 1])).run(move |env| {
+        let w = env.world();
+        let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+        let mut h = build(&ctx, env);
+        let s = h.export_schedule(root);
+        env.barrier(&w);
+        h.free(env);
+        s
+    });
+    report.outputs
+}
+
+fn allgather(scheme: SyncScheme) -> Vec<RankSchedule> {
+    export(0, move |ctx, env| ctx.allgather_init(env, 64, scheme))
+}
+
+// ---- real exports, every reduction mode --------------------------------
+
+#[test]
+fn real_exports_explore_clean_in_every_mode() {
+    for scheme in [SyncScheme::Barrier, SyncScheme::Spin] {
+        let sets = [
+            ("allgather", allgather(scheme)),
+            (
+                "bcast fixed d2",
+                export(2, move |ctx, env| {
+                    ctx.bcast_init_split(env, 96, scheme, RootPolicy::Fixed(2), 2)
+                }),
+            ),
+            (
+                "allreduce m1",
+                export(0, move |ctx, env| {
+                    ctx.allreduce_init(
+                        env,
+                        Datatype::F64,
+                        ReduceOp::Sum,
+                        64,
+                        AllreduceMethod::Method1,
+                        scheme,
+                    )
+                }),
+            ),
+        ];
+        for (name, set) in &sets {
+            for red in [Reduction::Exhaustive, Reduction::Dpor, Reduction::DporCached] {
+                let m = if red == Reduction::Exhaustive {
+                    // Conflict checking is exact only under full state
+                    // enumeration (DESIGN.md §6c).
+                    ScheduleModel::from_handle(set).with_conflict_check()
+                } else {
+                    ScheduleModel::from_handle(set)
+                };
+                let r = explore(&m, red, &Budget::smoke());
+                assert!(r.complete, "{name} {scheme:?} {red:?} must finish in budget");
+                assert!(
+                    r.counterexample.is_none(),
+                    "{name} {scheme:?} {red:?}: {}",
+                    r.counterexample.unwrap()
+                );
+                assert!(r.terminals >= 1, "{name} {scheme:?} {red:?} reached no terminal");
+            }
+        }
+    }
+}
+
+#[test]
+fn dpor_explores_fewer_transitions_than_exhaustive() {
+    let set = allgather(SyncScheme::Barrier);
+    let ex = explore(&ScheduleModel::from_handle(&set), Reduction::Exhaustive, &Budget::smoke());
+    let dp = explore(&ScheduleModel::from_handle(&set), Reduction::DporCached, &Budget::smoke());
+    assert!(ex.complete && dp.complete);
+    assert!(
+        dp.transitions < ex.transitions,
+        "DPOR must reduce: {} (dpor) vs {} (exhaustive)",
+        dp.transitions,
+        ex.transitions
+    );
+}
+
+// ---- mutation: dropped Arrive ------------------------------------------
+
+#[test]
+fn dropped_arrive_yields_minimal_replayable_deadlock_trace() {
+    let mut set = allgather(SyncScheme::Barrier);
+    let i = set[1]
+        .stages
+        .iter()
+        .position(|st| matches!(st, StageModel::Arrive { .. }))
+        .expect("allgather opens with a red sync on every rank");
+    set[1].stages[i] = StageModel::Skip;
+    for red in [Reduction::Exhaustive, Reduction::Dpor, Reduction::DporCached] {
+        let m = ScheduleModel::from_handle(&set);
+        let r = explore(&m, red, &Budget::smoke());
+        let cex = r.counterexample.unwrap_or_else(|| panic!("{red:?} must find the deadlock"));
+        let Violation::Deadlock { blocked } = &cex.violation else {
+            panic!("{red:?}: expected a deadlock, got {}", cex.violation)
+        };
+        // The corrupted rank is stuck at its Await; the trace names the
+        // interleaving step by step and replays to the same violation.
+        assert!(
+            blocked.iter().any(|b| b.starts_with("rank 1") && b.contains("AwaitGroup")),
+            "{red:?}: blocked set must name rank 1's await: {blocked:?}"
+        );
+        assert_eq!(cex.trace.len(), cex.steps.len());
+        assert!(cex.steps.iter().all(|s| s.starts_with("rank ")));
+        let replayed = replay(&m, &cex.trace).expect("the emitted trace must reproduce");
+        assert!(matches!(replayed, Violation::Deadlock { .. }));
+    }
+}
+
+// ---- mutation: skipped yellow release ----------------------------------
+
+#[test]
+fn skipped_yellow_release_yields_minimal_replayable_deadlock_trace() {
+    let mut set = allgather(SyncScheme::Spin);
+    let (r, i) = set
+        .iter()
+        .enumerate()
+        .find_map(|(r, sched)| {
+            sched
+                .stages
+                .iter()
+                .position(|st| matches!(st, StageModel::Post { .. }))
+                .map(|i| (r, i))
+        })
+        .expect("the primary leader carries the yellow post");
+    set[r].stages[i] = StageModel::Skip;
+    let m = ScheduleModel::from_handle(&set);
+    let rep = explore(&m, Reduction::Exhaustive, &Budget::smoke());
+    let cex = rep.counterexample.expect("the skipped release must deadlock some interleaving");
+    let Violation::Deadlock { blocked } = &cex.violation else {
+        panic!("expected a deadlock, got {}", cex.violation)
+    };
+    assert!(
+        blocked.iter().any(|b| b.contains("WaitFlag")),
+        "the stuck yellow waits must be named: {blocked:?}"
+    );
+    let replayed = replay(&m, &cex.trace).expect("the emitted trace must reproduce");
+    assert!(matches!(replayed, Violation::Deadlock { .. }));
+}
+
+// ---- co-enabled conflicting accesses -----------------------------------
+
+#[test]
+fn misranged_access_surfaces_as_a_co_enabled_conflict() {
+    // Corrupt rank 1's step-1 input read to land on the leader's reduce
+    // scratch (offset 2·msize on the node-0 window): after the node
+    // reduce both ranks' remaining accesses are concurrent, so some
+    // interleaving co-enables the child's read with the leader's scratch
+    // write — the class of bug the over-approximated access ranges are
+    // meant to catch statically.
+    let mut set = export(0, move |ctx, env| {
+        ctx.allreduce_init(
+            env,
+            Datatype::F64,
+            ReduceOp::Sum,
+            64,
+            AllreduceMethod::Method1,
+            SyncScheme::Barrier,
+        )
+    });
+    let acc = set[1]
+        .stages
+        .iter_mut()
+        .find_map(|st| match st {
+            StageModel::Work { accesses, .. } if !accesses.is_empty() => Some(&mut accesses[0]),
+            _ => None,
+        })
+        .expect("allreduce step 1 reads every rank's input block");
+    acc.offset = 2 * 64; // node-0 l_off: shmem_size (2) * msize (64)
+    let m = ScheduleModel::from_handle(&set).with_conflict_check();
+    let rep = explore(&m, Reduction::Exhaustive, &Budget::smoke());
+    let cex = rep.counterexample.expect("the misranged read must conflict with the scratch write");
+    let Violation::Conflict { first, second } = &cex.violation else {
+        panic!("expected a conflict, got {}", cex.violation)
+    };
+    assert!(first.contains("Access") && second.contains("Access"), "{first} / {second}");
+    assert!(replay(&m, &cex.trace).is_some(), "the conflict trace must reproduce");
+}
+
+// ---- fault choice points ------------------------------------------------
+
+#[test]
+fn fault_choice_points_stay_deadlock_free() {
+    // Any of the three ranks may die before any of its remaining
+    // micro-ops, up to two deaths per execution. A stuck state behind a
+    // death is a *detected failure* terminal, not a deadlock — the
+    // explorer must come back clean.
+    for scheme in [SyncScheme::Barrier, SyncScheme::Spin] {
+        let set = allgather(scheme);
+        let m = ScheduleModel::from_handle(&set).with_kills(&[0, 1, 2], 2);
+        let r = explore(&m, Reduction::Exhaustive, &Budget::smoke());
+        assert!(r.complete, "{scheme:?} fault exploration must finish in budget");
+        assert!(r.counterexample.is_none(), "{scheme:?}: {}", r.counterexample.unwrap());
+    }
+}
+
+// ---- shrink protocol: convergence --------------------------------------
+
+#[test]
+fn shrink_agreement_converges_under_two_overlapping_deaths() {
+    // 3+2 members, rank 3 already registered dead; the coordinator (0)
+    // and the node-1 survivor (4) may additionally die at *any* point of
+    // the agreement. Every interleaving must converge to agreement on
+    // the true survivor set, with the re-elected root landing on the
+    // lowest survivor of dead root 3's node.
+    let m = ShrinkModel::new(&[0, 1, 2, 3, 4], &[0, 0, 0, 1, 1], &[3])
+        .with_root(3)
+        .with_kills(&[0, 4], 2);
+    let r = explore(&m, Reduction::Exhaustive, &Budget::smoke());
+    assert!(r.complete, "shrink exploration must finish in budget");
+    assert!(r.counterexample.is_none(), "{}", r.counterexample.unwrap());
+    assert!(r.terminals >= 1);
+}
+
+// ---- mutation: stale-epoch acceptance ----------------------------------
+
+#[test]
+fn stale_epoch_acceptance_yields_minimal_replayable_protocol_trace() {
+    // Round 1 completes for one child while the other's ack is still in
+    // flight; the coordinator then dies, the slow child restarts under
+    // the new scope — and, with the scope filter disabled, accepts the
+    // superseded ack. The unmutated model on the identical configuration
+    // is clean: the scope filter is exactly what prevents this.
+    let members = [0usize, 1, 2, 3];
+    let nodes = [0usize, 0, 1, 1];
+    let clean = ShrinkModel::new(&members, &nodes, &[3]).with_kills(&[0], 1);
+    let r = explore(&clean, Reduction::Exhaustive, &Budget::smoke());
+    assert!(r.complete && r.counterexample.is_none(), "scope filter keeps the protocol clean");
+
+    let mutant = ShrinkModel::new(&members, &nodes, &[3])
+        .with_kills(&[0], 1)
+        .with_mutation(ShrinkMutation::AcceptStale);
+    let rep = explore(&mutant, Reduction::Exhaustive, &Budget::smoke());
+    let cex = rep.counterexample.expect("stale acceptance must be caught");
+    let Violation::Protocol { detail } = &cex.violation else {
+        panic!("expected a protocol violation, got {}", cex.violation)
+    };
+    assert!(detail.contains("stale"), "the violation names the stale acceptance: {detail}");
+    assert!(!cex.steps.is_empty(), "the trace names the interleaving");
+    let replayed = replay(&mutant, &cex.trace).expect("the emitted trace must reproduce");
+    assert!(matches!(replayed, Violation::Protocol { .. }));
+}
+
+// ---- mutation: skipped restart-on-death --------------------------------
+
+#[test]
+fn skipped_restart_on_death_fails_convergence() {
+    // Kill the coordinator mid-round with the restart edge disabled: the
+    // children are stranded awaiting acks from a dead coordinator.
+    let mutant = ShrinkModel::new(&[0, 1, 2, 3], &[0, 0, 1, 1], &[3])
+        .with_kills(&[0], 1)
+        .with_mutation(ShrinkMutation::SkipRestart);
+    let rep = explore(&mutant, Reduction::Exhaustive, &Budget::smoke());
+    let cex = rep.counterexample.expect("skipping restarts must break convergence");
+    let Violation::Protocol { detail } = &cex.violation else {
+        panic!("expected a protocol violation, got {}", cex.violation)
+    };
+    assert!(detail.contains("converge"), "non-convergence is named: {detail}");
+    assert!(replay(&mutant, &cex.trace).is_some(), "the trace must reproduce");
+}
+
+// ---- mutation: wrong election rule -------------------------------------
+
+fn elect_last(e: &Reelection<'_>) -> usize {
+    e.survivors_world.len() - 1
+}
+
+#[test]
+fn wrong_election_rule_is_caught_at_a_terminal() {
+    // With survivors {0,1,2,4} the highest survivor (comm rank 3, world
+    // 4) coincides with the correct choice — the mutant is only wrong
+    // once rank 4 also dies and the fallback (lowest survivor) applies.
+    // The explorer must find that terminal.
+    let mutant = ShrinkModel::new(&[0, 1, 2, 3, 4], &[0, 0, 0, 1, 1], &[3])
+        .with_root(3)
+        .with_kills(&[4], 1)
+        .with_elect(elect_last);
+    let rep = explore(&mutant, Reduction::Exhaustive, &Budget::smoke());
+    let cex = rep.counterexample.expect("the wrong election rule must be caught");
+    let Violation::Protocol { detail } = &cex.violation else {
+        panic!("expected a protocol violation, got {}", cex.violation)
+    };
+    assert!(detail.contains("re-election"), "the election check fired: {detail}");
+    assert!(
+        cex.steps.iter().any(|s| s.contains("dies")),
+        "the trace shows the death that exposes the bug: {:?}",
+        cex.steps
+    );
+}
+
+// ---- live-session export -----------------------------------------------
+
+#[test]
+fn exported_shrink_model_from_a_live_session_explores_clean() {
+    // Kill node 1's leader on a [2, 2] cluster, let detection register
+    // the death, export the agreement the survivors are about to run as
+    // a protocol model, then actually run the shrink. The exported model
+    // must explore clean — the implementation and the model see the same
+    // members, nodes, and registered deaths (same scope keys).
+    const VICTIM: usize = 2;
+    let plan = FaultPlan::seeded(0xD1E).with_dead(VICTIM, 0.0).with_detect_bound_us(2_000);
+    let cluster = SimCluster::new(spec(&[2, 2]).with_faults(plan));
+    let report = cluster.run(move |env| {
+        let w = env.world();
+        let ctx = HybridCtx::create(env, &w, LeaderPolicy::Single);
+        let mut ar = ctx.allreduce_init(
+            env,
+            Datatype::F64,
+            ReduceOp::Sum,
+            64,
+            AllreduceMethod::Method1,
+            SyncScheme::Barrier,
+        );
+        if env.rank_dead() {
+            return None;
+        }
+        let operand = vec![w.rank() as u8; 64];
+        ar.start_allreduce(env, &operand);
+        let err = ar.try_wait(env).expect_err("a dead leader must surface, not hang");
+        assert_eq!(err.world_rank, VICTIM);
+        let model = ctx.export_shrink_model(env);
+        let ctx = ctx.shrink(env);
+        ar.rebuild(env, &ctx);
+        env.barrier(ctx.parent());
+        ar.free(env);
+        Some(model)
+    });
+    let model = report
+        .outputs
+        .into_iter()
+        .flatten()
+        .next()
+        .expect("a survivor exports the model");
+    let r = explore(&model, Reduction::Exhaustive, &Budget::smoke());
+    assert!(r.complete, "live-session shrink model must finish in budget");
+    assert!(r.counterexample.is_none(), "{}", r.counterexample.unwrap());
+    assert!(r.terminals >= 1);
+}

@@ -9,7 +9,7 @@
 
 use hympi::analysis::race;
 use hympi::analysis::schedule::{Diagnostic, RankSchedule, StageModel};
-use hympi::analysis::{verify_handle, RaceDetector};
+use hympi::analysis::{verify_handle, verify_survivors, RaceDetector};
 use hympi::coll::{Flavor, PlanCache};
 use hympi::coordinator::{ClusterSpec, Preset, SimCluster};
 use hympi::hybrid::{AllreduceMethod, HybridCtx, LeaderPolicy, RootPolicy, SyncScheme};
@@ -183,6 +183,106 @@ fn mutation_root_disagreement_is_flagged() {
             |d| matches!(d, Diagnostic::RootMismatch { roots } if roots.contains(&(2, 1)))
         ),
         "got: {diags:?}"
+    );
+}
+
+#[test]
+fn multiply_corrupted_schedule_reports_every_violation_deterministically() {
+    // Three *independent* corruptions in one schedule set — a dropped
+    // root-node arrive, a mis-tagged chunk send, a shrunk window — must
+    // every one be reported (no first-error bailout), in an order stable
+    // across invocations (the CI gate diffs verifier output).
+    let mut s = export(1, 7, |ctx, env| {
+        ctx.bcast_init_split(env, 96, SyncScheme::Spin, RootPolicy::Fixed(7), 2)
+    });
+    let i = s[6]
+        .stages
+        .iter()
+        .position(|st| matches!(st, StageModel::Arrive { .. }))
+        .expect("root-node ranks carry the red sync");
+    s[6].stages[i] = StageModel::Skip;
+    let sender = s
+        .iter_mut()
+        .find_map(|sched| {
+            let rank = sched.rank;
+            sched.stages.iter_mut().find_map(|st| match st {
+                StageModel::Work { msgs, .. } => msgs.iter_mut().find(|m| m.send).map(|m| {
+                    m.tag += 17;
+                    rank
+                }),
+                _ => None,
+            })
+        })
+        .expect("the root node's leader streams chunk sends");
+    s[0].win_len = 8;
+
+    let diags = verify_handle(&s);
+    assert!(
+        diags.iter().any(|d| matches!(d, Diagnostic::AwaitWithoutArrive { rank: 6, .. })),
+        "corruption 1 (dropped arrive): {diags:?}"
+    );
+    assert!(
+        diags.iter().any(|d| matches!(d, Diagnostic::BarrierArity { .. })),
+        "corruption 1 (short group): {diags:?}"
+    );
+    assert!(
+        diags.iter().any(|d| matches!(d, Diagnostic::UnmatchedSend { rank, .. } if *rank == sender)),
+        "corruption 2 (orphaned send): {diags:?}"
+    );
+    assert!(
+        diags.iter().any(|d| matches!(d, Diagnostic::UnmatchedRecv { .. })),
+        "corruption 2 (orphaned recv): {diags:?}"
+    );
+    assert!(
+        diags.iter().any(|d| matches!(d, Diagnostic::OutOfWindow { rank: 0, .. })),
+        "corruption 3 (shrunk window): {diags:?}"
+    );
+    assert!(diags.len() >= 5, "all three corruptions report: {diags:?}");
+    let again = verify_handle(&s);
+    assert_eq!(
+        format!("{diags:?}"),
+        format!("{again:?}"),
+        "diagnostic ordering must be deterministic across invocations"
+    );
+}
+
+#[test]
+fn verify_survivors_reports_every_violation_deterministically() {
+    // Pretend a shrink to survivors {0..5} happened but the schedules
+    // were never rebuilt: the set mismatch, *every* rank still naming
+    // dead root 7, and a handle-level corruption must all surface, in a
+    // stable order (mismatch first, root retentions in rank order).
+    let mut s = export(1, 7, |ctx, env| {
+        ctx.bcast_init_split(env, 96, SyncScheme::Spin, RootPolicy::Fixed(7), 2)
+    });
+    s[0].win_len = 8;
+    let expected: Vec<usize> = (0..6).collect();
+    let diags = verify_survivors(&s, &expected);
+    let again = verify_survivors(&s, &expected);
+    assert_eq!(
+        format!("{diags:?}"),
+        format!("{again:?}"),
+        "diagnostic ordering must be deterministic across invocations"
+    );
+    assert!(
+        matches!(&diags[0], Diagnostic::SurvivorSetMismatch { .. }),
+        "the set mismatch leads: {diags:?}"
+    );
+    let retained: Vec<usize> = diags
+        .iter()
+        .filter_map(|d| match d {
+            Diagnostic::DeadRootRetained { rank, root: 7 } => Some(*rank),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(
+        retained,
+        (0..8).collect::<Vec<_>>(),
+        "every rank retaining the dead root is named, in rank order: {diags:?}"
+    );
+    assert!(
+        diags.iter().any(|d| matches!(d, Diagnostic::OutOfWindow { rank: 0, .. })),
+        "handle-level checks ride along: {diags:?}"
     );
 }
 
